@@ -1,0 +1,50 @@
+//! Quickstart: the paper's Listing 1 — one producer, two consumers,
+//! coupled purely through a YAML description. No artifacts needed.
+//!
+//!     cargo run --release --example quickstart
+
+use wilkins::tasks::builtin_registry;
+use wilkins::Wilkins;
+
+const WORKFLOW: &str = "\
+tasks:
+  - func: producer
+    nprocs: 4
+    params: { steps: 3, grid_per_proc: 100000, particles_per_proc: 100000 }
+    outports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+          - name: /group1/particles
+            file: 0
+            memory: 1
+  - func: consumer1
+    nprocs: 5
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+  - func: consumer2
+    nprocs: 3
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/particles
+            file: 0
+            memory: 1
+";
+
+fn main() -> wilkins::Result<()> {
+    let w = Wilkins::from_yaml_str(WORKFLOW, builtin_registry())?;
+    println!("{}", w.graph().describe());
+    let report = w.run()?;
+    print!("{}", report.render());
+    // Consumers verify every element they read (params verify defaults
+    // to 1), so a clean run proves the data paths end-to-end.
+    println!("\nquickstart OK: 3 timesteps verified across 2 channels");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Computational steering: a *cyclic* workflow (paper Sec. 3.2 —
+//! "Wilkins supports any directed-graph topology of tasks, including
+//! ... cycles").
+//!
+//! The simulation publishes its state each step; a steering task
+//! analyzes it and publishes a control parameter; the simulation
+//! consumes the control before its next step. Both tasks are plain
+//! standalone codes coupled only through the data-centric YAML.
+//!
+//!     cargo run --release --example steering
+
+use wilkins::lowfive::{AttrValue, DType, Hyperslab};
+use wilkins::tasks::builtin_registry;
+use wilkins::{Wilkins, WilkinsError};
+
+const STEPS: i64 = 5;
+
+fn main() -> wilkins::Result<()> {
+    let mut reg = builtin_registry();
+
+    // The "simulation": state decays by a steered gain each step.
+    reg.register_fn("sim", |ctx| {
+        let mut state = 100.0f32;
+        for step in 0..STEPS {
+            // Publish current state.
+            let vol = &mut ctx.vol;
+            vol.file_create("state.h5")?;
+            vol.attr_write("state.h5", "step", AttrValue::Int(step))?;
+            vol.dataset_create("state.h5", "/state", DType::F32, &[1])?;
+            vol.dataset_write(
+                "state.h5",
+                "/state",
+                Hyperslab::whole(&[1]),
+                state.to_le_bytes().to_vec(),
+            )?;
+            vol.file_close("state.h5")?;
+            // Receive the steering decision for the next step.
+            let name = ctx.vol.file_open("control.h5")?;
+            let gain_bytes = ctx.vol.dataset_read(
+                &name,
+                "/gain",
+                &Hyperslab::whole(&[1]),
+            )?;
+            let gain = f32::from_le_bytes(gain_bytes[..4].try_into().unwrap());
+            ctx.vol.file_close(&name)?;
+            state *= gain;
+            println!("  sim step {step}: state -> {state:.2} (gain {gain:.2})");
+        }
+        assert!(state < 100.0, "steering must have reduced the state");
+        Ok(())
+    });
+
+    // The "steering" task: drive the state toward a setpoint of 10.
+    reg.register_fn("steer", |ctx| {
+        loop {
+            let name = match ctx.vol.file_open("state.h5") {
+                Ok(n) => n,
+                Err(WilkinsError::EndOfStream) => return Ok(()),
+                Err(e) => return Err(e),
+            };
+            let bytes = ctx
+                .vol
+                .dataset_read(&name, "/state", &Hyperslab::whole(&[1]))?;
+            let state = f32::from_le_bytes(bytes[..4].try_into().unwrap());
+            ctx.vol.file_close(&name)?;
+
+            let gain: f32 = if state > 10.0 { 0.5 } else { 1.0 };
+            let vol = &mut ctx.vol;
+            vol.file_create("control.h5")?;
+            vol.dataset_create("control.h5", "/gain", DType::F32, &[1])?;
+            vol.dataset_write(
+                "control.h5",
+                "/gain",
+                Hyperslab::whole(&[1]),
+                gain.to_le_bytes().to_vec(),
+            )?;
+            vol.file_close("control.h5")?;
+        }
+    });
+
+    let w = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: sim
+    nprocs: 1
+    inports:
+      - filename: control.h5
+        dsets: [ { name: /gain } ]
+    outports:
+      - filename: state.h5
+        dsets: [ { name: /state } ]
+  - func: steer
+    nprocs: 1
+    inports:
+      - filename: state.h5
+        dsets: [ { name: /state } ]
+    outports:
+      - filename: control.h5
+        dsets: [ { name: /gain } ]
+",
+        reg,
+    )?;
+    println!("topology: {:?}\n", w.graph().topology());
+    assert_eq!(w.graph().topology(), wilkins::graph::Topology::Cyclic);
+    w.run()?;
+    println!("\nsteering OK: cyclic workflow converged");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+# AOT lowering: JAX -> HLO *text* -> artifacts/.
+#
+# HLO text (not HloModuleProto.serialize()) is the interchange format:
+# jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+# crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the XLA
+# text parser reassigns ids, so text round-trips cleanly. See
+# /opt/xla-example/gen_hlo.py.
+#
+# Besides the per-entry-point *.hlo.txt, this writes
+# artifacts/manifest.tsv describing each executable's I/O signature so
+# the Rust runtime can validate shapes at load time:
+#
+#   name \t input shapes (semicolon-joined "f32[4096,3]") \t output shapes
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _fmt_aval(aval) -> str:
+    dtype = str(aval.dtype)
+    short = {"float32": "f32", "float64": "f64", "int32": "s32",
+             "uint64": "u64", "int64": "s64"}.get(dtype, dtype)
+    return f"{short}[{','.join(str(d) for d in aval.shape)}]"
+
+
+def signature(name):
+    """(input_sig, output_sig) strings for the manifest."""
+    fn, args = model.ENTRY_POINTS[name]
+    low = model.lowered(name)
+    in_sig = ";".join(_fmt_aval(a) for a in args)
+    out_avals = low.out_info
+    import jax
+    flat, _ = jax.tree_util.tree_flatten(out_avals)
+    out_sig = ";".join(_fmt_aval(a) for a in flat)
+    return in_sig, out_sig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entry points")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or sorted(model.ENTRY_POINTS)
+    rows = []
+    for name in names:
+        text = to_hlo_text(model.lowered(name))
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        in_sig, out_sig = signature(name)
+        rows.append(f"{name}\t{in_sig}\t{out_sig}")
+        print(f"wrote {path} ({len(text)} chars)  {in_sig} -> {out_sig}")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+from .halo import halo
+from .pairwise import pairwise
+from .ref import halo_ref, pairwise_ref
+
+__all__ = ["halo", "pairwise", "halo_ref", "pairwise_ref"]

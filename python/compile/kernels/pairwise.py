@@ -1,0 +1,121 @@
+# L1: tiled pairwise-interaction Pallas kernel.
+#
+# Computes, in one pass over (row-tile, col-tile) blocks of the N x N
+# interaction matrix:
+#   * Lennard-Jones forces      F_i = sum_j f(r_ij) * (x_i - x_j)
+#   * coordination numbers      c_i = |{ j != i : r_ij < cutoff }|
+#
+# This is the compute hot-spot of both the LAMMPS-proxy MD step and the
+# diamond-structure feature detector (materials-science use case of the
+# Wilkins paper, Sec. 4.2.1).
+#
+# TPU adaptation (DESIGN.md "Hardware adaptation"): squared distances are
+# expressed as |x|^2 + |y|^2 - 2 x.y^T so the inner product maps onto the
+# MXU; the force accumulation F = diag(rowsum(fmag)) @ x - fmag @ y is two
+# more MXU contractions. The (TM, TN) tile lives in VMEM
+# (TM*TN*4B + 2*TM*3*4B ~= 264 KiB for 256x256) and the j-axis of the grid
+# accumulates into the output block, i.e. the classic "revisit the output
+# block" Pallas reduction schedule. On CPU we run interpret=True only.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 128
+
+
+def _pairwise_kernel(x_ref, y_ref, frc_ref, coord_ref, *, tm, tn,
+                     cutoff2, sigma2, eps):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    x = x_ref[...]  # (TM, 3) row positions
+    y = y_ref[...]  # (TN, 3) column positions
+
+    # Squared distances via the MXU-friendly decomposition.
+    xx = jnp.sum(x * x, axis=1, keepdims=True)        # (TM, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T      # (1, TN)
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)  # (TM, TN) MXU
+    d2 = xx + yy - 2.0 * xy
+
+    # Mask self-interactions by global index; clamp to avoid 0-division.
+    rows = i * tm + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    offdiag = rows != cols
+    d2 = jnp.maximum(d2, 1e-12)
+    within = offdiag & (d2 < cutoff2)
+
+    # LJ force magnitude over r: f(r)/r = 24 eps (2 s6^2 - s6) / r^2,
+    # with s6 = (sigma^2 / r^2)^3. Zeroed outside the cutoff.
+    inv = sigma2 / d2
+    s6 = inv * inv * inv
+    fmag = jnp.where(within, 24.0 * eps * (2.0 * s6 * s6 - s6) / d2, 0.0)
+
+    # F_i += rowsum(fmag) * x_i - fmag @ y   (second term is MXU again)
+    rowsum = jnp.sum(fmag, axis=1, keepdims=True)             # (TM, 1)
+    fblk = rowsum * x - jnp.dot(fmag, y, preferred_element_type=jnp.float32)
+    cblk = jnp.sum(within.astype(jnp.float32), axis=1)        # (TM,)
+
+    @pl.when(j == 0)
+    def _init():
+        frc_ref[...] = jnp.zeros_like(frc_ref)
+        coord_ref[...] = jnp.zeros_like(coord_ref)
+
+    frc_ref[...] += fblk
+    coord_ref[...] += cblk
+
+
+def _pad_positions(pos, npad):
+    """Pad (n, 3) positions to (npad, 3) with mutually-distant sentinels.
+
+    Sentinels sit on a 1e3-spaced ray far from the physical box, so
+    sentinel-sentinel and sentinel-real distances always exceed any
+    physically meaningful cutoff: padded rows contribute nothing to
+    forces or coordination counts of real atoms.
+    """
+    n = pos.shape[0]
+    if npad == n:
+        return pos
+    k = npad - n
+    sx = 1e6 + jnp.arange(k, dtype=pos.dtype) * 1e3
+    sentinel = jnp.stack([sx, jnp.zeros_like(sx), jnp.zeros_like(sx)], axis=1)
+    return jnp.concatenate([pos, sentinel], axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cutoff", "sigma", "eps", "tile", "interpret"))
+def pairwise(pos, *, cutoff=2.5, sigma=1.0, eps=1.0, tile=DEFAULT_TILE,
+             interpret=True):
+    """Forces and coordination numbers for (n, 3) f32 positions.
+
+    Returns (forces (n,3) f32, coord (n,) f32). `n` need not be a tile
+    multiple; inputs are sentinel-padded and outputs sliced back.
+    """
+    n = pos.shape[0]
+    npad = -(-n // tile) * tile
+    x = _pad_positions(pos.astype(jnp.float32), npad)
+    grid = (npad // tile, npad // tile)
+    kern = functools.partial(
+        _pairwise_kernel, tm=tile, tn=tile,
+        cutoff2=float(cutoff) ** 2, sigma2=float(sigma) ** 2, eps=float(eps))
+    frc, coord = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, 3), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, 3), jnp.float32),
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, x)
+    return frc[:n], coord[:n]

@@ -1,0 +1,46 @@
+# Pure-jnp correctness oracles for the Pallas kernels.
+#
+# These are the ground truth the pytest/hypothesis suites compare the
+# tiled kernels against. They are written for clarity, not speed: full
+# O(N^2) matrices, no tiling, no padding tricks.
+
+import jax.numpy as jnp
+
+
+def pairwise_ref(pos, *, cutoff=2.5, sigma=1.0, eps=1.0):
+    """Reference LJ forces + coordination numbers for (n, 3) positions."""
+    pos = pos.astype(jnp.float32)
+    n = pos.shape[0]
+    diff = pos[:, None, :] - pos[None, :, :]          # (n, n, 3)
+    d2 = jnp.sum(diff * diff, axis=-1)                # (n, n)
+    offdiag = ~jnp.eye(n, dtype=bool)
+    d2c = jnp.maximum(d2, 1e-12)
+    within = offdiag & (d2c < cutoff ** 2)
+
+    inv = (sigma ** 2) / d2c
+    s6 = inv ** 3
+    fmag = jnp.where(within, 24.0 * eps * (2.0 * s6 * s6 - s6) / d2c, 0.0)
+    forces = jnp.sum(fmag[:, :, None] * diff, axis=1)  # (n, 3)
+    coord = jnp.sum(within.astype(jnp.float32), axis=1)
+    return forces, coord
+
+
+def halo_ref(density, threshold):
+    """Reference thresholded 6-neighbour local-maximum halo finder."""
+    d = density.astype(jnp.float32)
+    t = jnp.asarray(threshold, jnp.float32).reshape(())
+    neg = -3.0e38
+    p = jnp.pad(d, 1, constant_values=neg)
+    nmax = p[:-2, 1:-1, 1:-1]
+    for sl in (p[2:, 1:-1, 1:-1], p[1:-1, :-2, 1:-1], p[1:-1, 2:, 1:-1],
+               p[1:-1, 1:-1, :-2], p[1:-1, 1:-1, 2:]):
+        nmax = jnp.maximum(nmax, sl)
+    above = d > t
+    mask = (above & (d > nmax)).astype(jnp.float32)
+    stats = jnp.stack([
+        jnp.sum(mask),
+        jnp.sum(jnp.where(above, d, 0.0)),
+        jnp.max(d),
+        jnp.mean(above.astype(jnp.float32)),
+    ])
+    return mask, stats

@@ -1,0 +1,131 @@
+# L2: JAX compute graphs for the Wilkins task payloads.
+#
+# These are the science codes the Wilkins paper couples in its two use
+# cases, rebuilt as fixed-shape jitted JAX functions (calling the L1
+# Pallas kernels) and AOT-lowered once by aot.py. The Rust coordinator
+# loads the resulting HLO text via PJRT and runs it on the request path;
+# Python never runs at workflow time.
+#
+#   md_step          — LAMMPS proxy: leapfrog MD over N_ATOMS LJ atoms,
+#                      MD_UNROLL inner steps fused per execution.
+#   diamond_detector — feature detector: counts atoms whose coordination
+#                      number matches the diamond lattice (4 neighbours
+#                      within DIAMOND_CUTOFF).
+#   nyx_step         — Nyx proxy: mass-conserving gravity-like evolution
+#                      of a GRID^3 density field (diffusion + local
+#                      overdensity growth).
+#   halo_finder      — Reeber proxy: thresholded local-max halo finder
+#                      over the density field (L1 `halo` kernel).
+#
+# Shape constants below are the single source of truth; aot.py writes
+# them into artifacts/manifest.tsv for the Rust runtime.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import halo, pairwise
+
+# ---- materials-science use case (Sec. 4.2.1) -------------------------------
+N_ATOMS = 4096          # paper: 4,360-atom water model; 4096 for tile align
+BOX = 18.0              # LJ reduced units; density ~ 0.7
+MD_DT = 0.002
+MD_UNROLL = 10          # inner steps fused into one HLO execution
+LJ_CUTOFF = 2.5
+DIAMOND_CUTOFF = 1.3    # first-shell cutoff for coordination counting
+DIAMOND_COORD = 4.0     # diamond lattice coordination number
+
+# ---- cosmology use case (Sec. 4.2.2) ---------------------------------------
+GRID = 64               # paper: 256^3 Nyx grid; 64^3 keeps VMEM-resident
+NYX_KAPPA = 0.05        # diffusion strength (stability: < 1/6)
+NYX_ALPHA = 0.15        # overdensity growth rate
+NYX_DMAX = 8.0          # logistic carrying capacity (halts runaway spikes)
+
+
+def md_step(pos, vel):
+    """MD_UNROLL leapfrog (kick-drift) steps of LJ dynamics.
+
+    pos, vel: (N_ATOMS, 3) f32. Positions wrap into [0, BOX). Forces are
+    non-periodic (no minimum image) — a documented proxy simplification;
+    the workflow only needs a producer with LAMMPS-like output cadence.
+    """
+
+    def body(carry, _):
+        p, v = carry
+        f, _ = pairwise(p, cutoff=LJ_CUTOFF)
+        # Clip forces: the random initial condition can have close pairs.
+        f = jnp.clip(f, -1e3, 1e3)
+        v = v + MD_DT * f
+        p = jnp.mod(p + MD_DT * v, BOX)
+        return (p, v), None
+
+    (pos, vel), _ = jax.lax.scan(body, (pos, vel), None, length=MD_UNROLL)
+    return pos, vel
+
+
+def diamond_detector(pos):
+    """Diamond-structure statistics for one particle dump.
+
+    Returns a (4,) f32 vector: [n_crystal, mean_coord, max_coord, n_atoms]
+    where n_crystal counts atoms with exactly DIAMOND_COORD neighbours
+    within DIAMOND_CUTOFF (the nucleation signal of Sec. 4.2.1).
+    """
+    _, coord = pairwise(pos, cutoff=DIAMOND_CUTOFF)
+    ncry = jnp.sum((coord == DIAMOND_COORD).astype(jnp.float32))
+    return jnp.stack([
+        ncry,
+        jnp.mean(coord),
+        jnp.max(coord),
+        jnp.asarray(float(pos.shape[0]), jnp.float32),
+    ])
+
+
+def nyx_step(density):
+    """One mass-conserving evolution step of the (GRID,)*3 density field.
+
+    Periodic 6-neighbour diffusion plus a logistic local growth term
+    that amplifies overdensities (the gravity proxy) up to a carrying
+    capacity NYX_DMAX, renormalised so total mass is exactly conserved.
+    From white-noise initial conditions this develops hierarchical
+    clustering (many small halos merging into fewer large ones) whose
+    peaks the Reeber proxy finds.
+    """
+    d = density.astype(jnp.float32)
+    nb = (jnp.roll(d, 1, 0) + jnp.roll(d, -1, 0)
+          + jnp.roll(d, 1, 1) + jnp.roll(d, -1, 1)
+          + jnp.roll(d, 1, 2) + jnp.roll(d, -1, 2))
+    lap = nb - 6.0 * d
+    grow = NYX_ALPHA * d * (d - jnp.mean(d)) * (1.0 - d / NYX_DMAX)
+    grown = jnp.maximum(d + NYX_KAPPA * lap + grow, 0.0)
+    # Renormalise to conserve total mass.
+    total = jnp.sum(d)
+    grown = grown * (total / jnp.maximum(jnp.sum(grown), 1e-12))
+    return grown
+
+
+def halo_finder(density, threshold):
+    """Reeber proxy: halo mask + stats (see kernels.halo)."""
+    mask, stats = halo(density, threshold)
+    return mask, stats
+
+
+# ---- AOT entry points (name -> (fn, example args)) --------------------------
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+ENTRY_POINTS = {
+    "md_step": (md_step, (_f32(N_ATOMS, 3), _f32(N_ATOMS, 3))),
+    "diamond_detector": (diamond_detector, (_f32(N_ATOMS, 3),)),
+    "nyx_step": (nyx_step, (_f32(GRID, GRID, GRID),)),
+    "halo_finder": (halo_finder, (_f32(GRID, GRID, GRID), _f32(1))),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def lowered(name):
+    """Lower an entry point; returns the jax Lowered object."""
+    fn, args = ENTRY_POINTS[name]
+    return jax.jit(fn).lower(*args)

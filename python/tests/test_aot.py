@@ -1,0 +1,41 @@
+# AOT contract tests: every entry point lowers to parseable HLO text
+# with the manifest signature the Rust runtime expects.
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("name", sorted(model.ENTRY_POINTS))
+def test_lowering_produces_hlo_text(name):
+    text = aot.to_hlo_text(model.lowered(name))
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # return_tuple=True: root is a tuple instruction.
+    assert "tuple(" in text or "ROOT" in text
+
+
+def test_manifest_signatures():
+    in_sig, out_sig = aot.signature("md_step")
+    assert in_sig == "f32[4096,3];f32[4096,3]"
+    assert out_sig == "f32[4096,3];f32[4096,3]"
+
+    in_sig, out_sig = aot.signature("diamond_detector")
+    assert in_sig == "f32[4096,3]"
+    assert out_sig == "f32[4]"
+
+    in_sig, out_sig = aot.signature("nyx_step")
+    assert in_sig == "f32[64,64,64]"
+    assert out_sig == "f32[64,64,64]"
+
+    in_sig, out_sig = aot.signature("halo_finder")
+    assert in_sig == "f32[64,64,64];f32[1]"
+    assert out_sig == "f32[64,64,64];f32[4]"
+
+
+def test_no_custom_calls_in_hlo():
+    """interpret=True Pallas must lower to plain HLO (no Mosaic
+    custom-calls the CPU PJRT client cannot execute)."""
+    for name in model.ENTRY_POINTS:
+        text = aot.to_hlo_text(model.lowered(name))
+        assert "custom-call" not in text, name

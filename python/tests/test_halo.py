@@ -1,0 +1,82 @@
+# Pallas halo kernel vs pure-jnp oracle (Reeber proxy).
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import halo, halo_ref
+
+SET = dict(deadline=None, max_examples=25)
+
+
+def rand_density(seed, shape):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1),
+       d=st.integers(2, 12), h=st.integers(2, 12), w=st.integers(2, 12),
+       thr=st.floats(0.0, 1.0))
+def test_kernel_matches_ref(seed, d, h, w, thr):
+    den = rand_density(seed, (d, h, w))
+    mk, sk = halo(den, thr)
+    mr, sr = halo_ref(den, thr)
+    assert np.array_equal(np.asarray(mk), np.asarray(mr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+def test_single_peak():
+    den = np.zeros((8, 8, 8), np.float32)
+    den[4, 4, 4] = 5.0
+    mask, stats = halo(jnp.asarray(den), 1.0)
+    assert float(stats[0]) == 1.0          # one halo
+    assert float(stats[1]) == 5.0          # its mass
+    assert float(stats[2]) == 5.0          # peak density
+    assert np.asarray(mask)[4, 4, 4] == 1.0
+    assert float(jnp.sum(mask)) == 1.0
+
+
+def test_two_separated_peaks():
+    den = np.zeros((10, 10, 10), np.float32)
+    den[2, 2, 2] = 3.0
+    den[7, 7, 7] = 4.0
+    _, stats = halo(jnp.asarray(den), 2.0)
+    assert float(stats[0]) == 2.0
+    assert float(stats[1]) == 7.0
+
+
+def test_plateau_is_not_strict_max():
+    # Two adjacent equal cells: neither strictly exceeds the other.
+    den = np.zeros((6, 6, 6), np.float32)
+    den[3, 3, 3] = 2.0
+    den[3, 3, 4] = 2.0
+    _, stats = halo(jnp.asarray(den), 1.0)
+    assert float(stats[0]) == 0.0
+    assert float(stats[1]) == 4.0  # mass still counted
+
+
+def test_threshold_filters_peaks():
+    den = np.zeros((6, 6, 6), np.float32)
+    den[1, 1, 1] = 1.5
+    den[4, 4, 4] = 3.5
+    _, lo = halo(jnp.asarray(den), 1.0)
+    _, hi = halo(jnp.asarray(den), 2.0)
+    assert float(lo[0]) == 2.0
+    assert float(hi[0]) == 1.0
+
+
+def test_uniform_field_no_halos():
+    den = jnp.full((5, 5, 5), 1.0)
+    mask, stats = halo(den, 0.5)
+    assert float(stats[0]) == 0.0
+    assert float(jnp.sum(mask)) == 0.0
+    assert float(stats[3]) == 1.0  # all above threshold
+
+
+def test_corner_peak_counts():
+    """Boundary cells can be halos (padding is -inf, not wrap)."""
+    den = np.zeros((4, 4, 4), np.float32)
+    den[0, 0, 0] = 9.0
+    _, stats = halo(jnp.asarray(den), 1.0)
+    assert float(stats[0]) == 1.0

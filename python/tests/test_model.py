@@ -1,0 +1,109 @@
+# L2 model tests: physics sanity + fixed shapes for the AOT contract.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def init_md(seed=0):
+    """Jittered-lattice initial condition (no overlapping atoms)."""
+    n_side = 16  # 16^3 = 4096 = model.N_ATOMS
+    assert n_side ** 3 == model.N_ATOMS
+    spacing = model.BOX / n_side
+    ax = (np.arange(n_side) + 0.5) * spacing
+    g = np.stack(np.meshgrid(ax, ax, ax, indexing="ij"), -1).reshape(-1, 3)
+    jitter = jax.random.uniform(
+        jax.random.PRNGKey(seed), g.shape, minval=-0.05, maxval=0.05)
+    pos = jnp.asarray(g, jnp.float32) + jitter * spacing
+    vel = 0.05 * jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                   g.shape, jnp.float32)
+    return pos, vel
+
+
+def test_md_step_shapes_and_finite():
+    pos, vel = init_md()
+    p1, v1 = model.md_step(pos, vel)
+    assert p1.shape == (model.N_ATOMS, 3) and v1.shape == (model.N_ATOMS, 3)
+    assert bool(jnp.all(jnp.isfinite(p1))) and bool(jnp.all(jnp.isfinite(v1)))
+    assert float(jnp.min(p1)) >= 0.0 and float(jnp.max(p1)) < model.BOX
+
+
+def test_md_step_advances_state():
+    pos, vel = init_md()
+    p1, v1 = model.md_step(pos, vel)
+    assert float(jnp.max(jnp.abs(p1 - pos))) > 0.0
+
+
+def test_md_stable_over_many_steps():
+    pos, vel = init_md()
+    for _ in range(5):  # 5 * MD_UNROLL leapfrog steps
+        pos, vel = model.md_step(pos, vel)
+    assert bool(jnp.all(jnp.isfinite(pos)))
+    # Velocities should stay bounded (no explosion).
+    assert float(jnp.max(jnp.abs(vel))) < 50.0
+
+
+def test_detector_on_md_dump():
+    pos, _ = init_md()
+    stats = model.diamond_detector(pos)
+    assert stats.shape == (4,)
+    assert float(stats[3]) == model.N_ATOMS
+    assert 0.0 <= float(stats[0]) <= model.N_ATOMS
+
+
+def test_detector_counts_diamond_sites():
+    # Hand-built cluster: center with exactly 4 neighbours at distance 1.
+    pts = np.full((model.N_ATOMS, 3), 1e3, np.float32)
+    pts += np.arange(model.N_ATOMS, dtype=np.float32)[:, None] * 10.0
+    center = np.array([50.0, 50.0, 50.0], np.float32)
+    tet = np.array([[1, 1, 1], [1, -1, -1], [-1, 1, -1], [-1, -1, 1]],
+                   np.float32) / np.sqrt(3.0)
+    pts[0] = center
+    pts[1:5] = center + tet  # distance 1 < DIAMOND_CUTOFF
+    stats = model.diamond_detector(jnp.asarray(pts))
+    assert float(stats[0]) == 1.0  # only the center has coordination 4
+
+
+def test_nyx_step_conserves_mass():
+    den = jax.random.uniform(jax.random.PRNGKey(2),
+                             (model.GRID,) * 3) + 0.5
+    total0 = float(jnp.sum(den))
+    for _ in range(10):
+        den = model.nyx_step(den)
+    assert bool(jnp.all(jnp.isfinite(den)))
+    assert float(jnp.min(den)) >= 0.0
+    np.testing.assert_allclose(float(jnp.sum(den)), total0, rtol=1e-4)
+
+
+def test_nyx_step_grows_structure():
+    """Overdensity growth: the density contrast must increase."""
+    den = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(3),
+                                        (model.GRID,) * 3)
+    den = jnp.maximum(den, 0.1)
+    c0 = float(jnp.std(den) / jnp.mean(den))
+    for _ in range(20):
+        den = model.nyx_step(den)
+    c1 = float(jnp.std(den) / jnp.mean(den))
+    assert c1 > c0
+
+
+def test_halo_finder_shapes():
+    den = jax.random.uniform(jax.random.PRNGKey(4), (model.GRID,) * 3)
+    mask, stats = model.halo_finder(den, jnp.asarray([0.9], jnp.float32))
+    assert mask.shape == (model.GRID,) * 3
+    assert stats.shape == (4,)
+
+
+def test_halo_finder_on_evolved_field():
+    """End-to-end L2 physics: evolved field develops findable halos."""
+    den = 1.0 + 0.2 * jax.random.normal(jax.random.PRNGKey(5),
+                                        (model.GRID,) * 3)
+    den = jnp.maximum(den, 0.05)
+    for _ in range(15):
+        den = model.nyx_step(den)
+    thr = jnp.asarray([float(jnp.mean(den) + 2 * jnp.std(den))], jnp.float32)
+    _, stats = model.halo_finder(den, thr)
+    assert float(stats[0]) > 0.0  # clustering produced halos

@@ -1,0 +1,169 @@
+//! Ablation bench (§Perf, DESIGN.md): measures the effect of the two
+//! L3 transport design choices EXPERIMENTS.md credits:
+//!
+//! 1. **Pipelined data requests** — a consumer rank sends DataReqs to
+//!    every owning producer rank before collecting replies, so the
+//!    producers extract/serve in overlap. Ablated against lockstep
+//!    request/await per rank.
+//! 2. **Contiguous-run region copies** — `copy_region` moves the
+//!    innermost dimension as a single memcpy run. Ablated against an
+//!    element-at-a-time copy.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use wilkins::bench_util::{mean, time_trials, Table};
+use wilkins::comm::{InterComm, World};
+use wilkins::lowfive::hyperslab::copy_region;
+use wilkins::lowfive::{
+    split_rows, ChannelMode, DType, Hyperslab, InChannel, OutChannel, Vol,
+};
+
+/// M producers serve one dataset to N consumers; consumers read their
+/// row split with pipelined or lockstep requests.
+fn mxn_read(m: usize, n: usize, elems_per_proc: u64, lockstep: bool) -> f64 {
+    let world = World::new(m + n);
+    let pid = world.alloc_comm_id();
+    let cid = world.alloc_comm_id();
+    let ioid = world.alloc_comm_id();
+    let chid = world.alloc_comm_id();
+    let prod: Vec<usize> = (0..m).collect();
+    let cons: Vec<usize> = (m..m + n).collect();
+    let dims = Arc::new(vec![elems_per_proc * m as u64]);
+    let t0 = Instant::now();
+    let mut hs = Vec::new();
+    for g in 0..m + n {
+        let world = world.clone();
+        let prod = prod.clone();
+        let cons = cons.clone();
+        let dims = Arc::clone(&dims);
+        hs.push(thread::spawn(move || {
+            let workdir = std::env::temp_dir().join("wilkins-ablation");
+            if g < m {
+                let local = world.comm_from_ranks(pid, &prod, g);
+                let io = world.comm_from_ranks(ioid, &prod, g);
+                let mut vol = Vol::new(local.clone(), workdir);
+                vol.set_io_comm(Some(io));
+                let ic = InterComm::new(local, chid, cons.clone());
+                vol.add_out_channel(OutChannel::new(Some(ic), "f.h5", ChannelMode::Memory));
+                vol.file_create("f.h5").unwrap();
+                vol.dataset_create("f.h5", "/d", DType::U64, &dims).unwrap();
+                let slab = split_rows(&dims, m)[g].clone();
+                let vals: Vec<u8> = (0..slab.count[0])
+                    .flat_map(|i| (slab.offset[0] + i).to_le_bytes())
+                    .collect();
+                vol.dataset_write("f.h5", "/d", slab, vals).unwrap();
+                vol.file_close("f.h5").unwrap();
+                vol.finalize_producer().unwrap();
+            } else {
+                let local = world.comm_from_ranks(cid, &cons, g - m);
+                let mut vol = Vol::new(local.clone(), workdir);
+                let ic = InterComm::new(local, chid, prod.clone());
+                vol.add_in_channel(InChannel::new(Some(ic), "f.h5", ChannelMode::Memory));
+                vol.set_lockstep_reads(lockstep);
+                let name = vol.file_open("f.h5").unwrap();
+                let want = split_rows(&dims, n)[g - m].clone();
+                vol.dataset_read(&name, "/d", &want).unwrap();
+                vol.file_close(&name).unwrap();
+                vol.finalize_consumer().unwrap();
+            }
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Element-wise copy (the ablated arm of copy_region).
+fn copy_elementwise(
+    src_slab: &Hyperslab,
+    src: &[u8],
+    dst_slab: &Hyperslab,
+    dst: &mut [u8],
+    region: &Hyperslab,
+    esize: usize,
+) {
+    // Walk every coordinate of the region, one element per copy.
+    let total = region.element_count();
+    for idx in 0..total {
+        let mut rem = idx;
+        let mut coord = vec![0u64; region.dims()];
+        for d in (0..region.dims()).rev() {
+            coord[d] = region.offset[d] + rem % region.count[d];
+            rem /= region.count[d];
+        }
+        let lin = |slab: &Hyperslab, coord: &[u64]| -> usize {
+            let mut stride = 1u64;
+            let mut off = 0u64;
+            for d in (0..slab.dims()).rev() {
+                off += (coord[d] - slab.offset[d]) * stride;
+                stride *= slab.count[d];
+            }
+            off as usize
+        };
+        let si = lin(src_slab, &coord) * esize;
+        let di = lin(dst_slab, &coord) * esize;
+        dst[di..di + esize].copy_from_slice(&src[si..si + esize]);
+    }
+}
+
+fn main() {
+    println!("== Ablation: L3 transport design choices ==\n");
+
+    // --- 1. pipelined vs lockstep data requests -------------------------
+    let trials = 3;
+    let mut t = Table::new(&["M x N", "elems/proc", "lockstep (s)", "pipelined (s)", "speedup"]);
+    let mut speedups = Vec::new();
+    for (m, n, per) in [(8, 4, 200_000u64), (16, 4, 100_000), (16, 8, 100_000)] {
+        let lock = mean(&time_trials(trials, true, || {
+            mxn_read(m, n, per, true);
+        }));
+        let pipe = mean(&time_trials(trials, true, || {
+            mxn_read(m, n, per, false);
+        }));
+        speedups.push(lock / pipe);
+        t.row(&[
+            format!("{m}x{n}"),
+            per.to_string(),
+            format!("{lock:.4}"),
+            format!("{pipe:.4}"),
+            format!("{:.2}x", lock / pipe),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // --- 2. contiguous-run vs element-wise region copy -------------------
+    let dims = [512u64, 512, 8];
+    let src_slab = Hyperslab::whole(&dims);
+    let dst_slab = Hyperslab::new(&[128, 128, 0], &[256, 256, 8]);
+    let region = dst_slab.clone();
+    let src = vec![7u8; (dims.iter().product::<u64>() * 8) as usize];
+    let mut dst = vec![0u8; (dst_slab.element_count() * 8) as usize];
+    let reps = 50;
+    let run_t = mean(&time_trials(3, true, || {
+        for _ in 0..reps {
+            copy_region(&src_slab, &src, &dst_slab, &mut dst, &region, 8);
+        }
+    }));
+    let elem_t = mean(&time_trials(3, true, || {
+        for _ in 0..reps {
+            copy_elementwise(&src_slab, &src, &dst_slab, &mut dst, &region, 8);
+        }
+    }));
+    let mib = dst.len() as f64 / (1024.0 * 1024.0);
+    println!("\ncopy_region ({mib:.1} MiB x {reps}): contiguous {run_t:.4}s vs element-wise {elem_t:.4}s = {:.1}x", elem_t / run_t);
+
+    // Shape assertions: both optimizations must actually pay.
+    let avg_speedup = speedups.iter().sum::<f64>() / speedups.len() as f64;
+    assert!(
+        avg_speedup > 1.05,
+        "pipelining should help on M x N reads, got {speedups:?}"
+    );
+    assert!(
+        elem_t / run_t > 2.0,
+        "contiguous runs should be much faster than element-wise"
+    );
+    println!("\nOK: both transport design choices measurably pay off");
+}

@@ -1,0 +1,83 @@
+//! Table 3: completion time of the cosmology workflow (Nyx + Reeber)
+//! under different flow-control strategies.
+//!
+//! Paper setup: Nyx 1024 procs (256^3 grid, 20 snapshots) + Reeber 64
+//! procs, Reeber slowed 100x by recomputing halos. Results: all 5421 s;
+//! some n=2 2754 s; n=5 1084 s; n=10 702 s — up to 7.7x savings.
+//!
+//! Substitutions: Nyx proxy 8 procs on a 64^3 grid, 10 snapshots,
+//! Reeber proxy 4 procs slowed by `analysis_rounds` (default 12;
+//! paper's 100 under WILKINS_BENCH_FULL=1 with 20 snapshots). The Nyx
+//! double-open/close custom action (Listing 5) is active throughout.
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use wilkins::bench_util::{assert_speedup, full_scale, Table};
+use wilkins::runtime::Engine;
+use wilkins::tasks::builtin_registry;
+use wilkins::Wilkins;
+
+fn run(engine: &Engine, snapshots: u64, rounds: i64, io_freq: i64) -> f64 {
+    let yaml = format!(
+        "\
+tasks:
+  - func: nyx
+    nprocs: 8
+    actions: [\"actions\", \"nyx\"]
+    params: {{ snapshots: {snapshots}, steps_per_snapshot: 2 }}
+    outports:
+      - filename: plt*.h5
+        dsets: [ {{ name: /level_0/density }} ]
+  - func: reeber
+    nprocs: 4
+    params: {{ analysis_rounds: {rounds}, threshold: 1.5 }}
+    inports:
+      - filename: plt*.h5
+        io_freq: {io_freq}
+        dsets: [ {{ name: /level_0/density }} ]
+",
+    );
+    let w = Wilkins::from_yaml_str(&yaml, builtin_registry())
+        .unwrap()
+        .with_engine(engine.handle());
+    w.run().unwrap().elapsed.as_secs_f64()
+}
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        println!("SKIP: artifacts missing; run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::start(&dir).unwrap();
+    let (snapshots, rounds) = if full_scale() { (20, 100) } else { (10, 12) };
+
+    println!("== Table 3: cosmology workflow flow control ==");
+    println!("(nyx 8 procs + reeber 4 procs slowed {rounds}x, {snapshots} snapshots)\n");
+    let mut table = Table::new(&["strategy", "completion (s)", "savings vs all"]);
+    let t_all = run(&engine, snapshots, rounds, 1);
+    table.row(&["all".into(), format!("{t_all:.2}"), "1.0x".into()]);
+    let mut times = vec![("all", t_all)];
+    for n in [2i64, 5, 10] {
+        let t = run(&engine, snapshots, rounds, n);
+        table.row(&[
+            format!("some (n={n})"),
+            format!("{t:.2}"),
+            format!("{:.1}x", t_all / t),
+        ]);
+        times.push(("some", t));
+    }
+    print!("{}", table.render());
+    println!("\npaper: all 5421s; some n=2 2754s; n=5 1084s; n=10 702s (7.7x savings)");
+
+    // Shape checks: savings increase with n; some(10) is a large win.
+    let t2 = times[1].1;
+    let t5 = times[2].1;
+    let t10 = times[3].1;
+    assert!(t2 < t_all, "some(2) must beat all: {t2} vs {t_all}");
+    assert!(t5 < t2, "some(5) must beat some(2): {t5} vs {t2}");
+    assert!(t10 <= t5 * 1.05, "some(10) must not lose to some(5)");
+    assert_speedup("some(10) vs all", t_all, t10, 2.0);
+    println!("OK: cosmology flow-control shape holds (Table 3)");
+}

@@ -1,0 +1,137 @@
+//! Figures 7, 8, 9: scaling of ensembles in fan-out, fan-in and NxN
+//! topologies.
+//!
+//! Paper setup: 2 ranks per producer/consumer instance; instance
+//! counts 1, 4, 16, 64, 256. Results: fan-out and fan-in grow ~linearly
+//! with the instance count (the single peer serves/reads each instance
+//! sequentially: 0.6 s @16 -> 8.2 s @256 for fan-out); NxN stays
+//! nearly flat (1:1 pairs are independent).
+//!
+//! Default sweep stops at 64 instances (130 rank threads); set
+//! WILKINS_BENCH_FULL=1 for 256.
+//!
+//! Testbed caveat (DESIGN.md): this machine exposes a SINGLE core, so
+//! independent NxN pairs serialize and wall-clock necessarily grows
+//! with the instance count. The paper-equivalent observable here is
+//! the *per-instance* cost: flat per-instance cost means zero
+//! cross-pair coordination interference, which on Bebop's >=N nodes
+//! is exactly what produces Figure 9's flat wall-clock. Fan-out and
+//! fan-in are inherently serial at the shared endpoint, so their
+//! per-instance cost stays constant too — but their wall-clock
+//! linearity is intrinsic (it matches the paper's Figures 7/8 even on
+//! parallel hardware).
+
+use wilkins::bench_util::{
+    assert_monotonic_increase, assert_roughly_flat, full_scale, mean, time_trials, Table,
+};
+use wilkins::tasks::builtin_registry;
+use wilkins::Wilkins;
+
+const PER_PROC: u64 = 5_000;
+
+fn run(topology: &str, instances: usize) -> f64 {
+    let (pcount, ccount) = match topology {
+        "fanout" => (1, instances),
+        "fanin" => (instances, 1),
+        "nxn" => (instances, instances),
+        _ => unreachable!(),
+    };
+    let yaml = format!(
+        "\
+tasks:
+  - func: producer
+    taskCount: {pcount}
+    nprocs: 2
+    params: {{ steps: 1, grid_per_proc: {PER_PROC}, particles_per_proc: {PER_PROC}, verify: 0 }}
+    outports:
+      - filename: outfile.h5
+        dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+  - func: consumer
+    taskCount: {ccount}
+    nprocs: 2
+    params: {{ verify: 0 }}
+    inports:
+      - filename: outfile.h5
+        dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+",
+    );
+    let w = Wilkins::from_yaml_str(&yaml, builtin_registry()).unwrap();
+    w.run().unwrap().elapsed.as_secs_f64()
+}
+
+fn main() {
+    let counts: Vec<usize> = if full_scale() {
+        vec![1, 4, 16, 64, 256]
+    } else {
+        vec![1, 4, 16, 64]
+    };
+    let trials = 3;
+    println!("== Figures 7/8/9: ensemble topology scaling ==");
+    println!("(2 ranks per instance, {PER_PROC} elems/proc, avg of {trials} trials)\n");
+
+    let mut series: Vec<(&str, Vec<f64>)> = Vec::new();
+    for topo in ["fanout", "fanin", "nxn"] {
+        let mut times = Vec::new();
+        for &c in &counts {
+            let t = mean(&time_trials(trials, true, || {
+                run(topo, c);
+            }));
+            times.push(t);
+        }
+        series.push((topo, times));
+    }
+
+    let mut table = Table::new(&[
+        "instances",
+        "fan-out (s)",
+        "fan-in (s)",
+        "NxN (s)",
+        "NxN per-inst (s)",
+    ]);
+    for (i, &c) in counts.iter().enumerate() {
+        table.row(&[
+            c.to_string(),
+            format!("{:.4}", series[0].1[i]),
+            format!("{:.4}", series[1].1[i]),
+            format!("{:.4}", series[2].1[i]),
+            format!("{:.5}", series[2].1[i] / c as f64),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("\npaper: fan-out/fan-in grow ~linearly (producer serves each consumer");
+    println!("sequentially); NxN stays nearly flat (independent 1:1 pairs).");
+    println!("testbed: 1 core serializes independent pairs, so the NxN observable");
+    println!("here is flat *per-instance* cost (== flat wall-clock on >=N nodes).");
+
+    // Shape checks over the tail of the sweep (small counts are
+    // launch-cost dominated).
+    let fanout = &series[0].1;
+    let fanin = &series[1].1;
+    let nxn = &series[2].1;
+    assert_monotonic_increase("fan-out", &fanout[1..], 0.15);
+    assert_monotonic_increase("fan-in", &fanin[1..], 0.15);
+    let n = counts.len();
+    assert!(
+        fanout[n - 1] / fanout[1] > (counts[n - 1] / counts[1]) as f64 * 0.2,
+        "fan-out should grow roughly with instance count: {fanout:?}"
+    );
+    // NxN: per-instance cost flat across the sweep tail — no
+    // cross-pair interference from the workflow layer.
+    let nxn_per: Vec<f64> = nxn
+        .iter()
+        .zip(&counts)
+        .map(|(t, &c)| t / c as f64)
+        .collect();
+    assert_roughly_flat("NxN per-instance", &nxn_per[1..], 3.0);
+
+    // Paper-scale projection (sim::NetModel, reporting aid): what the
+    // measured per-instance cost implies on Bebop-like hardware where
+    // every NxN pair gets its own node.
+    let per_inst = nxn_per[counts.len() - 1];
+    println!("\nprojection (sim/): NxN completion with nodes >= instances:");
+    for &c in &counts {
+        let t = wilkins::sim::ensemble_completion(c as u64, per_inst, c as u64);
+        println!("  {c:>4} instances -> {t:.4}s (flat, Figure 9's shape)");
+    }
+    println!("OK: ensemble scaling shape holds (Figures 7/8/9)");
+}

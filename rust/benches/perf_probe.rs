@@ -1,0 +1,11 @@
+//! §Perf probe: fixed large transport workload for optimization A/B
+//! measurements (not a paper figure). 12 producer + 4 consumer ranks,
+//! 3 steps of 400k grid + 400k particles per producer rank.
+use wilkins::baseline::{run_standalone, SyntheticSize};
+use wilkins::bench_util::{mean, stddev, time_trials};
+
+fn main() {
+    let size = SyntheticSize { grid_per_proc: 400_000, particles_per_proc: 400_000, steps: 3 };
+    let xs = time_trials(5, true, || { run_standalone(12, 4, size).unwrap(); });
+    println!("perf_probe: {:.4}s +- {:.4}s  ({:?})", mean(&xs), stddev(&xs), xs.iter().map(|x| (x*1000.0).round()/1000.0).collect::<Vec<_>>());
+}

@@ -1,0 +1,105 @@
+//! User-defined custom actions (S8, paper Sec. 3.5.2 + Listing 5).
+//!
+//! In real Wilkins users drop a <25-line Python callback script next to
+//! the YAML (`actions: ["script", "func"]`) and the runtime wires it
+//! into LowFive's callback slots. Our equivalent keeps the declarative
+//! interface identical — the YAML field is unchanged — and resolves the
+//! (script, func) pair against an [`ActionRegistry`] of Rust callbacks
+//! of the same size and shape. Applications register their own actions
+//! exactly like task codes.
+//!
+//! Built-ins reproduce the paper's two examples:
+//! * `("actions", "nyx")` — Listing 5: the Nyx double-open/close I/O
+//!   pattern (rank 0 writes metadata solo, everyone re-opens for bulk
+//!   writes; serve only on the second close; broadcast in between).
+//! * `("actions", "every_second_write")` — Listing 3: delay the data
+//!   transfer until every second dataset write.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::error::{Result, WilkinsError};
+use crate::lowfive::Vol;
+
+/// An action: applied once per rank to its Vol before the task starts.
+/// Receives the Vol and the rank within the task.
+pub type ActionFn = Arc<dyn Fn(&mut Vol, usize) + Send + Sync>;
+
+#[derive(Default, Clone)]
+pub struct ActionRegistry {
+    map: HashMap<(String, String), ActionFn>,
+}
+
+impl ActionRegistry {
+    /// Registry preloaded with the paper's built-in actions.
+    pub fn with_builtins() -> ActionRegistry {
+        let mut r = ActionRegistry::default();
+        r.register("actions", "nyx", Arc::new(nyx_action));
+        r.register("actions", "every_second_write", Arc::new(every_second_write));
+        r
+    }
+
+    pub fn register(&mut self, script: &str, func: &str, f: ActionFn) {
+        self.map.insert((script.to_string(), func.to_string()), f);
+    }
+
+    pub fn get(&self, script: &str, func: &str) -> Result<ActionFn> {
+        self.map
+            .get(&(script.to_string(), func.to_string()))
+            .cloned()
+            .ok_or_else(|| {
+                WilkinsError::Config(format!(
+                    "action [{script:?}, {func:?}] not registered"
+                ))
+            })
+    }
+}
+
+/// Listing 5: the Nyx custom I/O pattern.
+///
+/// Nyx closes each plotfile twice: once from rank 0 alone (small
+/// metadata writes) and once collectively (bulk data). The default
+/// serve-on-every-close would fire at the wrong time, so:
+/// * default serve is suppressed;
+/// * rank != 0: serve + clear on (its only) close;
+/// * rank 0: broadcast file state to the other ranks on odd closes
+///   (the metadata close), serve + clear on even closes;
+/// * rank != 0: receive the broadcast before re-opening the file.
+pub fn nyx_action(vol: &mut Vol, rank: usize) {
+    vol.set_before_file_close(Box::new(|vol, _name| {
+        vol.skip_serve();
+    }));
+    vol.set_after_file_close(Box::new(move |vol, _name| {
+        if rank != 0 {
+            vol.serve_all().expect("nyx action: serve failed");
+            vol.clear_files();
+        } else if vol.file_close_counter % 2 == 0 {
+            vol.serve_all().expect("nyx action: serve failed");
+            vol.clear_files();
+        } else {
+            // First (metadata) close: share rank 0's file state.
+            vol.broadcast_files().expect("nyx action: broadcast failed");
+        }
+    }));
+    vol.set_before_file_open(Box::new(move |vol, _name| {
+        if rank != 0 {
+            vol.broadcast_files().expect("nyx action: broadcast failed");
+        }
+    }));
+}
+
+/// Listing 3: transfer only after every second dataset write (e.g. the
+/// consumer wants positions but the producer also writes times).
+pub fn every_second_write(vol: &mut Vol, _rank: usize) {
+    vol.set_before_file_close(Box::new(|vol, _name| {
+        vol.skip_serve();
+    }));
+    vol.set_after_dataset_write(Box::new(|vol, _dset| {
+        // Writes are counted per file via the close-independent
+        // dataset-write counter below.
+        vol.note_dataset_write();
+        if vol.dataset_writes() % 2 == 0 {
+            vol.serve_all().expect("every_second_write: serve failed");
+        }
+    }));
+}

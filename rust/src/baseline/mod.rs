@@ -1,0 +1,149 @@
+//! LowFive-standalone baseline (S14): the hand-written coupling of
+//! Peterka et al. [28] that the paper's overhead experiment (Sec.
+//! 4.1.1, Fig. 4) compares Wilkins against.
+//!
+//! No YAML, no graph, no coordinator, no driver: the producer and
+//! consumer groups, their communicators and the channel are wired by
+//! hand, exactly like the reference code the LowFive paper shipped.
+//! Both this and the Wilkins run move identical bytes through the same
+//! transport, so their difference is precisely the workflow-system
+//! overhead.
+
+use std::sync::Arc;
+use std::thread;
+
+use crate::comm::{InterComm, World};
+use crate::error::Result;
+use crate::lowfive::{
+    split_rows, AttrValue, ChannelMode, DType, InChannel, OutChannel, Vol,
+};
+
+
+/// Sizes of the synthetic weak-scaling benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct SyntheticSize {
+    pub grid_per_proc: u64,
+    pub particles_per_proc: u64,
+    pub steps: u64,
+}
+
+/// Run the hand-written 2-task coupling: `m` producer ranks write the
+/// grid + particles datasets, `n` consumer ranks read their row splits.
+/// Returns the wall time in seconds.
+pub fn run_standalone(m: usize, n: usize, size: SyntheticSize) -> Result<f64> {
+    let world = World::new(m + n);
+    let pid = world.alloc_comm_id();
+    let cid = world.alloc_comm_id();
+    let ioid = world.alloc_comm_id();
+    let chid = world.alloc_comm_id();
+    let prod_ranks: Vec<usize> = (0..m).collect();
+    let cons_ranks: Vec<usize> = (m..m + n).collect();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for g in 0..m + n {
+        let world = world.clone();
+        let prod_ranks = prod_ranks.clone();
+        let cons_ranks = cons_ranks.clone();
+        let workdir = std::env::temp_dir().join("wilkins-baseline");
+        handles.push(thread::spawn(move || -> Result<()> {
+            if g < m {
+                let local = world.comm_from_ranks(pid, &prod_ranks, g);
+                let io = world.comm_from_ranks(ioid, &prod_ranks, g);
+                let mut vol = Vol::new(local.clone(), workdir);
+                vol.set_io_comm(Some(io));
+                let ic = InterComm::new(local, chid, cons_ranks.clone());
+                vol.add_out_channel(OutChannel::new(
+                    Some(ic),
+                    "outfile.h5",
+                    ChannelMode::Memory,
+                ));
+                producer_body(&mut vol, g, m, size)?;
+                vol.finalize_producer()
+            } else {
+                let local = world.comm_from_ranks(cid, &cons_ranks, g - m);
+                let mut vol = Vol::new(local.clone(), workdir);
+                let ic = InterComm::new(local, chid, prod_ranks.clone());
+                vol.add_in_channel(InChannel::new(
+                    Some(ic),
+                    "outfile.h5",
+                    ChannelMode::Memory,
+                ));
+                consumer_body(&mut vol, g - m, n, size)?;
+                vol.finalize_consumer()
+            }
+        }));
+    }
+    let results: Vec<Result<()>> = handles
+        .into_iter()
+        .map(|h| h.join().expect("baseline rank panicked"))
+        .collect();
+    for r in results {
+        r?;
+    }
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+fn producer_body(vol: &mut Vol, rank: usize, m: usize, size: SyntheticSize) -> Result<()> {
+    let gdims = [size.grid_per_proc * m as u64];
+    let pdims = [size.particles_per_proc * m as u64, 3];
+    let gslab = split_rows(&gdims, m)[rank].clone();
+    let pslab = split_rows(&pdims, m)[rank].clone();
+    for step in 0..size.steps {
+        let goff = gslab.offset[0];
+        let grid = crate::tasks::gen_u64_bytes(gslab.count[0], |i| (goff + i) * 10 + step);
+        let parts =
+            crate::tasks::gen_f32_bytes(pslab.count[0] * 3, |k| (k % 1000) as f32);
+        vol.file_create("outfile.h5")?;
+        vol.attr_write("outfile.h5", "timestep", AttrValue::Int(step as i64))?;
+        vol.dataset_create("outfile.h5", "/group1/grid", DType::U64, &gdims)?;
+        vol.dataset_create("outfile.h5", "/group1/particles", DType::F32, &pdims)?;
+        vol.dataset_write("outfile.h5", "/group1/grid", gslab.clone(), grid)?;
+        vol.dataset_write("outfile.h5", "/group1/particles", pslab.clone(), parts)?;
+        vol.file_close("outfile.h5")?;
+    }
+    Ok(())
+}
+
+fn consumer_body(vol: &mut Vol, rank: usize, n: usize, size: SyntheticSize) -> Result<()> {
+    for _ in 0..size.steps {
+        let name = vol.file_open("outfile.h5")?;
+        for dset in vol.consumer_file(&name)?.dataset_names() {
+            let meta = vol.dataset_meta(&name, &dset)?;
+            let want = split_rows(&meta.dims, n)[rank].clone();
+            vol.dataset_read(&name, &dset, &want)?;
+        }
+        vol.file_close(&name)?;
+    }
+    Ok(())
+}
+
+/// The Arc is unused but keeps the signature parallel to coordinator
+/// internals for profiling comparisons.
+pub type SharedWorld = Arc<World>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standalone_coupling_completes() {
+        let secs = run_standalone(
+            3,
+            1,
+            SyntheticSize { grid_per_proc: 1000, particles_per_proc: 1000, steps: 2 },
+        )
+        .unwrap();
+        assert!(secs > 0.0);
+    }
+
+    #[test]
+    fn standalone_scales_to_more_ranks() {
+        let secs = run_standalone(
+            12,
+            4,
+            SyntheticSize { grid_per_proc: 500, particles_per_proc: 500, steps: 1 },
+        )
+        .unwrap();
+        assert!(secs > 0.0);
+    }
+}

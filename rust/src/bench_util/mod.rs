@@ -1,0 +1,153 @@
+//! Bench harness (S15): the offline toolchain has no criterion, so the
+//! `cargo bench` targets (harness = false) use this small substitute —
+//! repeated trials, simple statistics, and paper-style tables printed
+//! to stdout. Each bench also *asserts the shape* of the paper's
+//! result (who wins, monotonicity, flatness) so `cargo bench` fails if
+//! the reproduction regresses.
+
+use std::time::Instant;
+
+/// Run `f` for `trials` trials (after one warmup when `warmup`), return
+/// seconds per trial.
+pub fn time_trials<F: FnMut()>(trials: usize, warmup: bool, mut f: F) -> Vec<f64> {
+    if warmup {
+        f();
+    }
+    (0..trials)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Simple fixed-width table printer for the bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Bench scale from the environment: `WILKINS_BENCH_FULL=1` runs the
+/// larger sweeps (closer to paper scale), default keeps CI-friendly.
+pub fn full_scale() -> bool {
+    std::env::var("WILKINS_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Shape assertion helpers: loud failures when the reproduction loses
+/// the paper's qualitative result.
+pub fn assert_monotonic_increase(label: &str, xs: &[f64], tolerance: f64) {
+    for w in xs.windows(2) {
+        assert!(
+            w[1] >= w[0] * (1.0 - tolerance),
+            "{label}: expected non-decreasing series, got {xs:?}"
+        );
+    }
+}
+
+pub fn assert_roughly_flat(label: &str, xs: &[f64], max_ratio: f64) {
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(0.0_f64, f64::max);
+    assert!(
+        hi / lo.max(1e-12) <= max_ratio,
+        "{label}: expected flat series (ratio <= {max_ratio}), got {xs:?}"
+    );
+}
+
+pub fn assert_speedup(label: &str, baseline: f64, improved: f64, min_ratio: f64) {
+    assert!(
+        baseline / improved >= min_ratio,
+        "{label}: expected >= {min_ratio}x speedup, got {:.2}x ({baseline:.3}s -> {improved:.3}s)",
+        baseline / improved
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let xs = [1.0, 2.0, 3.0];
+        assert!((mean(&xs) - 2.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.0).abs() < 1e-12);
+        assert_eq!(stddev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "long_header"]);
+        t.row(&["1".into(), "2".into()]);
+        let out = t.render();
+        assert!(out.contains("long_header"));
+        assert_eq!(out.lines().count(), 3);
+    }
+
+    #[test]
+    fn shape_assertions() {
+        assert_monotonic_increase("x", &[1.0, 2.0, 3.0], 0.05);
+        assert_roughly_flat("y", &[1.0, 1.1, 0.95], 1.3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn monotonic_fails_on_decrease() {
+        assert_monotonic_increase("x", &[3.0, 1.0], 0.05);
+    }
+}

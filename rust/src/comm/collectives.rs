@@ -1,0 +1,167 @@
+//! Collectives over the p2p substrate: barrier, bcast, gather,
+//! allgather, reductions. All are built from send/recv with reserved
+//! high tags so they never collide with user traffic.
+
+use super::{Comm, Result};
+
+/// Tag space reserved for collectives (user tags must stay below).
+pub const COLL_TAG_BASE: u64 = u64::MAX - 16;
+const TAG_BARRIER: u64 = COLL_TAG_BASE;
+const TAG_BCAST: u64 = COLL_TAG_BASE + 1;
+const TAG_GATHER: u64 = COLL_TAG_BASE + 2;
+const TAG_REDUCE: u64 = COLL_TAG_BASE + 3;
+
+impl Comm {
+    /// Rendezvous barrier: fan-in to rank 0, fan-out release.
+    pub fn barrier(&self) -> Result<()> {
+        if self.size() == 1 {
+            return Ok(());
+        }
+        if self.rank() == 0 {
+            // Per-source receives: a fast rank's *next* barrier message
+            // must not release the current one early.
+            for r in 1..self.size() {
+                self.recv(r, TAG_BARRIER)?;
+            }
+            for r in 1..self.size() {
+                self.send(r, TAG_BARRIER, &[]);
+            }
+        } else {
+            self.send(0, TAG_BARRIER, &[]);
+            self.recv(0, TAG_BARRIER)?;
+        }
+        Ok(())
+    }
+
+    /// Broadcast `data` from `root`; returns the received bytes on all
+    /// ranks (the root gets its own copy back).
+    pub fn bcast(&self, root: usize, data: Option<&[u8]>) -> Result<Vec<u8>> {
+        if self.size() == 1 {
+            return Ok(data.unwrap_or(&[]).to_vec());
+        }
+        if self.rank() == root {
+            let payload = data.expect("bcast root must supply data");
+            for r in 0..self.size() {
+                if r != root {
+                    self.send(r, TAG_BCAST, payload);
+                }
+            }
+            Ok(payload.to_vec())
+        } else {
+            Ok(self.recv(root, TAG_BCAST)?.1)
+        }
+    }
+
+    /// Gather every rank's bytes at `root`; Some(vec indexed by rank)
+    /// at the root, None elsewhere.
+    pub fn gather(&self, root: usize, data: &[u8]) -> Result<Option<Vec<Vec<u8>>>> {
+        if self.rank() == root {
+            let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.size()];
+            out[root] = data.to_vec();
+            // Per-source receives keep consecutive gathers from mixing
+            // (recv_any could consume a racing rank's next-gather msg).
+            for r in 0..self.size() {
+                if r == root {
+                    continue;
+                }
+                let (_, bytes) = self.recv(r, TAG_GATHER)?;
+                out[r] = bytes;
+            }
+            Ok(Some(out))
+        } else {
+            self.send(root, TAG_GATHER, data);
+            Ok(None)
+        }
+    }
+
+    /// All ranks end up with every rank's contribution.
+    pub fn allgather(&self, data: &[u8]) -> Result<Vec<Vec<u8>>> {
+        let gathered = self.gather(0, data)?;
+        let packed = match gathered {
+            Some(parts) => {
+                let mut w = super::wire::Writer::new();
+                w.put_u64(parts.len() as u64);
+                for p in &parts {
+                    w.put_bytes(p);
+                }
+                Some(w.into_vec())
+            }
+            None => None,
+        };
+        let bytes = self.bcast(0, packed.as_deref())?;
+        let mut r = super::wire::Reader::new(&bytes);
+        let n = r.get_u64()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(r.get_bytes()?.to_vec());
+        }
+        Ok(out)
+    }
+
+    /// Sum-allreduce for u64.
+    pub fn allreduce_sum_u64(&self, value: u64) -> Result<u64> {
+        let parts = self.reduce_parts(value.to_le_bytes().to_vec())?;
+        let total: u64 = parts
+            .iter()
+            .map(|b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+            .sum();
+        Ok(total)
+    }
+
+    /// Sum-allreduce for f64.
+    pub fn allreduce_sum_f64(&self, value: f64) -> Result<f64> {
+        let parts = self.reduce_parts(value.to_le_bytes().to_vec())?;
+        let total: f64 = parts
+            .iter()
+            .map(|b| f64::from_le_bytes(b[..8].try_into().unwrap()))
+            .sum();
+        Ok(total)
+    }
+
+    /// Max-allreduce for u64 (used for "any rank saw X" style flags).
+    pub fn allreduce_max_u64(&self, value: u64) -> Result<u64> {
+        let parts = self.reduce_parts(value.to_le_bytes().to_vec())?;
+        Ok(parts
+            .iter()
+            .map(|b| u64::from_le_bytes(b[..8].try_into().unwrap()))
+            .max()
+            .unwrap_or(value))
+    }
+
+    fn reduce_parts(&self, mine: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+        if self.size() == 1 {
+            return Ok(vec![mine]);
+        }
+        // Gather to 0, bcast the raw parts back (tag distinct from
+        // gather/bcast so concurrent collectives of different kinds on
+        // the same comm cannot interleave).
+        if self.rank() == 0 {
+            let mut parts: Vec<Vec<u8>> = vec![Vec::new(); self.size()];
+            parts[0] = mine;
+            for r in 1..self.size() {
+                let (_, bytes) = self.recv(r, TAG_REDUCE)?;
+                parts[r] = bytes;
+            }
+            let mut w = super::wire::Writer::new();
+            w.put_u64(parts.len() as u64);
+            for p in &parts {
+                w.put_bytes(p);
+            }
+            let packed = w.into_vec();
+            for r in 1..self.size() {
+                self.send(r, TAG_REDUCE, &packed);
+            }
+            Ok(parts)
+        } else {
+            self.send(0, TAG_REDUCE, &mine);
+            let (_, bytes) = self.recv(0, TAG_REDUCE)?;
+            let mut r = super::wire::Reader::new(&bytes);
+            let n = r.get_u64()? as usize;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                out.push(r.get_bytes()?.to_vec());
+            }
+            Ok(out)
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Intercommunicators: a local group plus a remote group, used for the
+//! producer↔consumer channels Wilkins creates per matched data object
+//! (Sec. 3.2). Ranks address the *remote* group's local indices.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{Comm, Envelope, RECV_TIMEOUT};
+use crate::error::{Result, WilkinsError};
+
+/// An intercommunicator between a local and a remote rank group.
+#[derive(Clone)]
+pub struct InterComm {
+    /// Our side's communicator (restricted world of this task).
+    local: Comm,
+    /// Channel id (shared by both sides; allocated by the coordinator).
+    id: u64,
+    /// Global ranks of the remote group, in remote-local-rank order.
+    remote: Arc<Vec<usize>>,
+}
+
+impl InterComm {
+    /// Coordinator-side constructor: both sides must use the same `id`
+    /// and see each other's global rank lists in consistent order.
+    pub fn new(local: Comm, id: u64, remote_global_ranks: Vec<usize>) -> InterComm {
+        InterComm {
+            local,
+            id,
+            remote: Arc::new(remote_global_ranks),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Local rank within our side's group.
+    pub fn local_rank(&self) -> usize {
+        self.local.rank()
+    }
+
+    pub fn local_size(&self) -> usize {
+        self.local.size()
+    }
+
+    pub fn remote_size(&self) -> usize {
+        self.remote.len()
+    }
+
+    /// Send to remote local rank `dst`.
+    pub fn send(&self, dst: usize, tag: u64, data: &[u8]) {
+        let dst_global = self.remote[dst];
+        self.local.send_global(self.id, dst_global, tag, data);
+    }
+
+    /// Owned-buffer send (no payload copy); see [`Comm::send_owned`].
+    pub fn send_owned(&self, dst: usize, tag: u64, data: Vec<u8>) {
+        let dst_global = self.remote[dst];
+        self.local.send_global_owned(self.id, dst_global, tag, data);
+    }
+
+    /// Blocking receive from remote local rank `src` (or ANY_SOURCE).
+    /// Returns (remote local rank, payload).
+    pub fn recv(&self, src: usize, tag: u64) -> Result<(usize, Vec<u8>)> {
+        self.recv_timeout(src, tag, RECV_TIMEOUT)
+    }
+
+    pub fn recv_any(&self, tag: u64) -> Result<(usize, Vec<u8>)> {
+        self.recv_timeout(super::ANY_SOURCE, tag, RECV_TIMEOUT)
+    }
+
+    pub fn recv_timeout(
+        &self,
+        src: usize,
+        tag: u64,
+        timeout: Duration,
+    ) -> Result<(usize, Vec<u8>)> {
+        let remote = Arc::clone(&self.remote);
+        let id = self.id;
+        let matcher = move |e: &Envelope| {
+            e.comm_id == id
+                && e.tag == tag
+                && (src == super::ANY_SOURCE
+                    || remote.get(src) == Some(&e.src_global))
+        };
+        let env = self.local.recv_matching(matcher, timeout)?;
+        let src_local = self
+            .remote
+            .iter()
+            .position(|&g| g == env.src_global)
+            .ok_or_else(|| {
+                WilkinsError::Comm("intercomm message from unknown remote rank".into())
+            })?;
+        Ok((src_local, env.payload))
+    }
+
+    /// Non-blocking probe for a message from any remote rank.
+    pub fn iprobe(&self, tag: u64) -> bool {
+        let mb_rank = self.local.global_rank();
+        let state = self.local.world_state();
+        let queue = state.mailboxes[mb_rank].queue.lock().unwrap();
+        queue
+            .iter()
+            .any(|e| e.comm_id == self.id && e.tag == tag && self.remote.contains(&e.src_global))
+    }
+}

@@ -1,0 +1,298 @@
+//! Virtual MPI substrate (S4).
+//!
+//! The paper runs workflow tasks as MPI processes on the Bebop cluster;
+//! this testbed has neither MPI nor a cluster, so Wilkins ships a
+//! process substrate with MPI semantics: every *rank is an OS thread*,
+//! point-to-point messages move real bytes through per-rank mailboxes,
+//! and communicators can be split into the *restricted worlds* the
+//! paper's execution model (Sec. 3.5) presents to task codes.
+//!
+//! The semantics the experiments rely on are reproduced exactly:
+//! blocking sends/recvs serialize transfers (fan-out grows linearly,
+//! Fig. 7), barriers really rendezvous, and probes let a producer ask
+//! "is any consumer ready?" without blocking (the *latest* flow-control
+//! strategy, Sec. 3.6).
+//!
+//! Addressing: every rank has a *global* id in the SPMD world. A
+//! [`Comm`] is an ordered set of global ranks plus this thread's
+//! position in it; an intercommunicator ([`InterComm`]) adds a remote
+//! group. Message matching is on (communicator id, tag, source).
+
+mod collectives;
+mod intercomm;
+pub mod wire;
+
+pub use intercomm::InterComm;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Result, WilkinsError};
+
+/// Wildcard source for [`Comm::recv_any`] / probes.
+pub const ANY_SOURCE: usize = usize::MAX;
+
+/// Default receive timeout: generous enough for loaded CI machines,
+/// short enough that deadlocked tests fail rather than hang forever.
+pub const RECV_TIMEOUT: Duration = Duration::from_secs(120);
+
+#[derive(Debug)]
+pub(crate) struct Envelope {
+    src_global: usize,
+    comm_id: u64,
+    tag: u64,
+    payload: Vec<u8>,
+}
+
+#[derive(Default)]
+struct Mailbox {
+    queue: Mutex<VecDeque<Envelope>>,
+    cv: Condvar,
+}
+
+pub(crate) struct WorldState {
+    size: usize,
+    mailboxes: Vec<Mailbox>,
+    next_comm_id: AtomicU64,
+    /// Bytes pushed through send() — observability for the benches.
+    bytes_sent: AtomicU64,
+    msgs_sent: AtomicU64,
+}
+
+/// The SPMD world: create once, then [`World::comm_world`] per rank.
+#[derive(Clone)]
+pub struct World {
+    state: Arc<WorldState>,
+}
+
+impl World {
+    pub fn new(size: usize) -> World {
+        assert!(size > 0, "world size must be positive");
+        let mailboxes = (0..size).map(|_| Mailbox::default()).collect();
+        World {
+            state: Arc::new(WorldState {
+                size,
+                mailboxes,
+                next_comm_id: AtomicU64::new(1),
+                bytes_sent: AtomicU64::new(0),
+                msgs_sent: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.state.size
+    }
+
+    /// The full-world communicator handle for a given global rank
+    /// (comm id 0 == MPI_COMM_WORLD).
+    pub fn comm_world(&self, global_rank: usize) -> Comm {
+        assert!(global_rank < self.state.size);
+        Comm {
+            world: Arc::clone(&self.state),
+            id: 0,
+            ranks: Arc::new((0..self.state.size).collect()),
+            my_index: global_rank,
+        }
+    }
+
+    /// Allocate a fresh communicator id (coordinator-side; ids must be
+    /// allocated identically across ranks, so the coordinator does it
+    /// once before launch).
+    pub fn alloc_comm_id(&self) -> u64 {
+        self.state.next_comm_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Build a communicator over `ranks` (global ids) for the rank at
+    /// `my_index` with a pre-allocated id. Used by the coordinator to
+    /// carve restricted worlds deterministically.
+    pub fn comm_from_ranks(&self, id: u64, ranks: &[usize], my_index: usize) -> Comm {
+        assert!(my_index < ranks.len());
+        Comm {
+            world: Arc::clone(&self.state),
+            id,
+            ranks: Arc::new(ranks.to_vec()),
+            my_index,
+        }
+    }
+
+    /// Total payload bytes sent since creation.
+    pub fn bytes_sent(&self) -> u64 {
+        self.state.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn msgs_sent(&self) -> u64 {
+        self.state.msgs_sent.load(Ordering::Relaxed)
+    }
+}
+
+/// A communicator: ordered global ranks + our position. Clone is cheap.
+#[derive(Clone)]
+pub struct Comm {
+    world: Arc<WorldState>,
+    id: u64,
+    ranks: Arc<Vec<usize>>,
+    my_index: usize,
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.my_index
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn global_rank(&self) -> usize {
+        self.ranks[self.my_index]
+    }
+
+    pub fn global_of(&self, local: usize) -> usize {
+        self.ranks[local]
+    }
+
+    fn local_of_global(&self, global: usize) -> Option<usize> {
+        self.ranks.iter().position(|&g| g == global)
+    }
+
+    /// Blocking send of `data` to local rank `dst` with `tag`.
+    ///
+    /// Buffered-eager semantics (MPI_Send with an unbounded buffer):
+    /// the call never blocks, but the *bytes are copied now*, so large
+    /// fan-outs pay the full serial copy cost like the paper's runs.
+    pub fn send(&self, dst: usize, tag: u64, data: &[u8]) {
+        self.send_on(self.id, dst, tag, data)
+    }
+
+    /// Owned-buffer send: moves the payload into the mailbox without
+    /// copying. Preferred on reply paths that just built the buffer
+    /// (§Perf iteration 1: removes one full payload copy per serve).
+    pub fn send_owned(&self, dst: usize, tag: u64, data: Vec<u8>) {
+        let dst_global = self.ranks[dst];
+        self.send_global_owned(self.id, dst_global, tag, data);
+    }
+
+    fn send_on(&self, comm_id: u64, dst: usize, tag: u64, data: &[u8]) {
+        let dst_global = self.ranks[dst];
+        self.send_global(comm_id, dst_global, tag, data);
+    }
+
+    pub(crate) fn send_global(&self, comm_id: u64, dst_global: usize, tag: u64, data: &[u8]) {
+        self.send_global_owned(comm_id, dst_global, tag, data.to_vec());
+    }
+
+    pub(crate) fn send_global_owned(
+        &self,
+        comm_id: u64,
+        dst_global: usize,
+        tag: u64,
+        data: Vec<u8>,
+    ) {
+        let nbytes = data.len() as u64;
+        let env = Envelope {
+            src_global: self.global_rank(),
+            comm_id,
+            tag,
+            payload: data,
+        };
+        self.world.bytes_sent.fetch_add(nbytes, Ordering::Relaxed);
+        self.world.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        let mb = &self.world.mailboxes[dst_global];
+        mb.queue.lock().unwrap().push_back(env);
+        mb.cv.notify_all();
+    }
+
+    /// Blocking receive from local rank `src` (or [`ANY_SOURCE`]).
+    /// Returns (source local rank, payload).
+    pub fn recv(&self, src: usize, tag: u64) -> Result<(usize, Vec<u8>)> {
+        self.recv_timeout(src, tag, RECV_TIMEOUT)
+    }
+
+    pub fn recv_any(&self, tag: u64) -> Result<(usize, Vec<u8>)> {
+        self.recv_timeout(ANY_SOURCE, tag, RECV_TIMEOUT)
+    }
+
+    pub fn recv_timeout(
+        &self,
+        src: usize,
+        tag: u64,
+        timeout: Duration,
+    ) -> Result<(usize, Vec<u8>)> {
+        let matcher = |e: &Envelope| {
+            e.comm_id == self.id
+                && e.tag == tag
+                && (src == ANY_SOURCE
+                    || self.local_of_global(e.src_global) == Some(src))
+        };
+        let env = self.recv_matching(matcher, timeout)?;
+        let src_local = self
+            .local_of_global(env.src_global)
+            .ok_or_else(|| WilkinsError::Comm("message from rank outside comm".into()))?;
+        Ok((src_local, env.payload))
+    }
+
+    pub(crate) fn recv_matching<F>(&self, matcher: F, timeout: Duration) -> Result<Envelope>
+    where
+        F: Fn(&Envelope) -> bool,
+    {
+        let mb = &self.world.mailboxes[self.global_rank()];
+        let deadline = Instant::now() + timeout;
+        let mut queue = mb.queue.lock().unwrap();
+        loop {
+            if let Some(idx) = queue.iter().position(&matcher) {
+                return Ok(queue.remove(idx).unwrap());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(WilkinsError::Comm(format!(
+                    "recv timeout on comm {} at global rank {}",
+                    self.id,
+                    self.global_rank()
+                )));
+            }
+            let (q, res) = mb.cv.wait_timeout(queue, deadline - now).unwrap();
+            queue = q;
+            let _ = res;
+        }
+    }
+
+    /// Non-blocking probe: is a matching message waiting?
+    pub fn iprobe(&self, src: usize, tag: u64) -> bool {
+        let mb = &self.world.mailboxes[self.global_rank()];
+        let queue = mb.queue.lock().unwrap();
+        queue.iter().any(|e| {
+            e.comm_id == self.id
+                && e.tag == tag
+                && (src == ANY_SOURCE
+                    || self.local_of_global(e.src_global) == Some(src))
+        })
+    }
+
+    /// Derive a sub-communicator deterministically (coordinator-side):
+    /// `id` must be identical on all members; `members` are local ranks
+    /// of `self` in the new comm's order.
+    pub fn subset(&self, id: u64, members: &[usize]) -> Option<Comm> {
+        let my_pos = members.iter().position(|&m| m == self.my_index)?;
+        let ranks: Vec<usize> = members.iter().map(|&m| self.ranks[m]).collect();
+        Some(Comm {
+            world: Arc::clone(&self.world),
+            id,
+            ranks: Arc::new(ranks),
+            my_index: my_pos,
+        })
+    }
+
+    pub(crate) fn world_state(&self) -> &Arc<WorldState> {
+        &self.world
+    }
+}
+
+#[cfg(test)]
+mod tests;

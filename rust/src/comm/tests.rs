@@ -1,0 +1,297 @@
+//! Unit tests for the virtual-MPI substrate.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use super::wire::{Reader, Writer};
+use super::{InterComm, World, ANY_SOURCE};
+
+/// Run `f(rank, comm)` on `n` rank threads over a fresh world.
+fn spmd<F>(n: usize, f: F)
+where
+    F: Fn(usize, super::Comm) + Send + Sync + 'static,
+{
+    let world = World::new(n);
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..n)
+        .map(|r| {
+            let comm = world.comm_world(r);
+            let f = Arc::clone(&f);
+            thread::spawn(move || f(r, comm))
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn p2p_roundtrip() {
+    spmd(2, |rank, comm| {
+        if rank == 0 {
+            comm.send(1, 7, b"hello");
+            let (src, msg) = comm.recv(1, 8).unwrap();
+            assert_eq!((src, msg.as_slice()), (1, b"world".as_slice()));
+        } else {
+            let (src, msg) = comm.recv(0, 7).unwrap();
+            assert_eq!((src, msg.as_slice()), (0, b"hello".as_slice()));
+            comm.send(0, 8, b"world");
+        }
+    });
+}
+
+#[test]
+fn tag_matching_out_of_order() {
+    spmd(2, |rank, comm| {
+        if rank == 0 {
+            comm.send(1, 1, b"first");
+            comm.send(1, 2, b"second");
+        } else {
+            // Receive in reverse tag order: matching must dig past the
+            // queued tag-1 message.
+            let (_, b) = comm.recv(0, 2).unwrap();
+            assert_eq!(b, b"second");
+            let (_, a) = comm.recv(0, 1).unwrap();
+            assert_eq!(a, b"first");
+        }
+    });
+}
+
+#[test]
+fn any_source_receives_from_all() {
+    spmd(4, |rank, comm| {
+        if rank == 0 {
+            let mut seen = vec![false; 4];
+            for _ in 0..3 {
+                let (src, _) = comm.recv(ANY_SOURCE, 5).unwrap();
+                seen[src] = true;
+            }
+            assert_eq!(&seen[1..], &[true, true, true]);
+        } else {
+            comm.send(0, 5, &[rank as u8]);
+        }
+    });
+}
+
+#[test]
+fn recv_timeout_fires() {
+    spmd(2, |rank, comm| {
+        if rank == 0 {
+            let err = comm.recv_timeout(1, 99, Duration::from_millis(50));
+            assert!(err.is_err());
+        }
+        // rank 1 sends nothing
+    });
+}
+
+#[test]
+fn barrier_synchronizes() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static BEFORE: AtomicUsize = AtomicUsize::new(0);
+    BEFORE.store(0, Ordering::SeqCst);
+    spmd(8, |_, comm| {
+        BEFORE.fetch_add(1, Ordering::SeqCst);
+        comm.barrier().unwrap();
+        // After the barrier every rank must observe all 8 increments.
+        assert_eq!(BEFORE.load(Ordering::SeqCst), 8);
+    });
+}
+
+#[test]
+fn bcast_from_nonzero_root() {
+    spmd(5, |rank, comm| {
+        let data = if rank == 3 { Some(&b"payload"[..]) } else { None };
+        let got = comm.bcast(3, data).unwrap();
+        assert_eq!(got, b"payload");
+    });
+}
+
+#[test]
+fn gather_collects_in_rank_order() {
+    spmd(4, |rank, comm| {
+        let mine = vec![rank as u8; rank + 1];
+        let out = comm.gather(0, &mine).unwrap();
+        if rank == 0 {
+            let parts = out.unwrap();
+            for (r, p) in parts.iter().enumerate() {
+                assert_eq!(p, &vec![r as u8; r + 1]);
+            }
+        } else {
+            assert!(out.is_none());
+        }
+    });
+}
+
+#[test]
+fn allgather_everywhere() {
+    spmd(3, |rank, comm| {
+        let parts = comm.allgather(&[rank as u8 * 10]).unwrap();
+        assert_eq!(parts, vec![vec![0u8], vec![10u8], vec![20u8]]);
+    });
+}
+
+#[test]
+fn allreduce_sums() {
+    spmd(6, |rank, comm| {
+        assert_eq!(comm.allreduce_sum_u64(rank as u64).unwrap(), 15);
+        let f = comm.allreduce_sum_f64(0.5).unwrap();
+        assert!((f - 3.0).abs() < 1e-12);
+        assert_eq!(comm.allreduce_max_u64(rank as u64).unwrap(), 5);
+    });
+}
+
+#[test]
+fn subset_comm_is_isolated() {
+    spmd(4, |rank, comm| {
+        // Ranks {1, 3} form a sub-communicator with id 42.
+        if rank == 1 || rank == 3 {
+            let sub = comm.subset(42, &[1, 3]).unwrap();
+            assert_eq!(sub.size(), 2);
+            let me = sub.rank();
+            let peer = 1 - me;
+            sub.send(peer, 0, &[me as u8]);
+            let (_, got) = sub.recv(peer, 0).unwrap();
+            assert_eq!(got, vec![peer as u8]);
+            sub.barrier().unwrap();
+        } else {
+            assert!(comm.subset(42, &[1, 3]).is_none());
+        }
+    });
+}
+
+#[test]
+fn subset_messages_do_not_leak_to_world() {
+    spmd(2, |rank, comm| {
+        let sub = comm.subset(9, &[0, 1]).unwrap();
+        if rank == 0 {
+            sub.send(1, 3, b"subonly");
+        } else {
+            // Same tag on the world comm must NOT see it.
+            assert!(comm.recv_timeout(0, 3, Duration::from_millis(50)).is_err());
+            let (_, m) = sub.recv(0, 3).unwrap();
+            assert_eq!(m, b"subonly");
+        }
+    });
+}
+
+#[test]
+fn intercomm_crosses_groups() {
+    // World of 5: producers {0,1,2}, consumers {3,4}.
+    let world = World::new(5);
+    let wid = world.alloc_comm_id();
+    let pid = world.alloc_comm_id();
+    let cid = world.alloc_comm_id();
+    let _ = wid;
+    let mut handles = Vec::new();
+    for g in 0..5usize {
+        let world = world.clone();
+        handles.push(thread::spawn(move || {
+            let producers = [0usize, 1, 2];
+            let consumers = [3usize, 4];
+            if g < 3 {
+                let local = world.comm_from_ranks(pid, &producers, g);
+                let ic = InterComm::new(local, 77, consumers.to_vec());
+                // Producer rank g sends to consumer rank g % 2.
+                ic.send(g % 2, 4, &[g as u8]);
+            } else {
+                let local = world.comm_from_ranks(cid, &consumers, g - 3);
+                let ic = InterComm::new(local, 77, producers.to_vec());
+                let me = g - 3;
+                let expect: Vec<u8> =
+                    (0..3).filter(|p| p % 2 == me).map(|p| p as u8).collect();
+                let mut got = Vec::new();
+                for _ in 0..expect.len() {
+                    let (src, m) = ic.recv_any(4).unwrap();
+                    assert_eq!(m, vec![src as u8]);
+                    got.push(m[0]);
+                }
+                got.sort();
+                assert_eq!(got, expect);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn intercomm_iprobe() {
+    let world = World::new(2);
+    let a = world.comm_from_ranks(1, &[0], 0);
+    let b = world.comm_from_ranks(2, &[1], 0);
+    let ia = InterComm::new(a, 50, vec![1]);
+    let ib = InterComm::new(b, 50, vec![0]);
+    assert!(!ib.iprobe(6));
+    ia.send(0, 6, b"x");
+    assert!(ib.iprobe(6));
+    let (_, m) = ib.recv_any(6).unwrap();
+    assert_eq!(m, b"x");
+    assert!(!ib.iprobe(6));
+}
+
+#[test]
+fn byte_counters_track_traffic() {
+    let world = World::new(2);
+    let w2 = world.clone();
+    let t = thread::spawn(move || {
+        let c = w2.comm_world(0);
+        c.send(1, 0, &[0u8; 1000]);
+    });
+    let c = world.comm_world(1);
+    let (_, m) = c.recv(0, 0).unwrap();
+    assert_eq!(m.len(), 1000);
+    t.join().unwrap();
+    assert_eq!(world.bytes_sent(), 1000);
+    assert_eq!(world.msgs_sent(), 1);
+}
+
+#[test]
+fn wire_roundtrip() {
+    let mut w = Writer::new();
+    w.put_u8(9);
+    w.put_u32(70_000);
+    w.put_u64(1 << 40);
+    w.put_i64(-5);
+    w.put_f32(1.5);
+    w.put_f64(-2.25);
+    w.put_str("grid");
+    w.put_u64_slice(&[3, 1, 4]);
+    w.put_bytes(&[1, 2, 3]);
+    let buf = w.into_vec();
+    let mut r = Reader::new(&buf);
+    assert_eq!(r.get_u8().unwrap(), 9);
+    assert_eq!(r.get_u32().unwrap(), 70_000);
+    assert_eq!(r.get_u64().unwrap(), 1 << 40);
+    assert_eq!(r.get_i64().unwrap(), -5);
+    assert_eq!(r.get_f32().unwrap(), 1.5);
+    assert_eq!(r.get_f64().unwrap(), -2.25);
+    assert_eq!(r.get_str().unwrap(), "grid");
+    assert_eq!(r.get_u64_vec().unwrap(), vec![3, 1, 4]);
+    assert_eq!(r.get_bytes().unwrap(), &[1, 2, 3]);
+    assert_eq!(r.remaining(), 0);
+}
+
+#[test]
+fn wire_underrun_is_error() {
+    let mut r = Reader::new(&[1, 2]);
+    assert!(r.get_u64().is_err());
+}
+
+#[test]
+fn large_world_fan_in() {
+    // 64 ranks all send to 0; exercises mailbox contention.
+    spmd(64, |rank, comm| {
+        if rank == 0 {
+            let mut sum = 0u64;
+            for _ in 0..63 {
+                let (_, m) = comm.recv_any(1).unwrap();
+                sum += m[0] as u64;
+            }
+            assert_eq!(sum, (1..64).sum::<u64>());
+        } else {
+            comm.send(0, 1, &[rank as u8]);
+        }
+    });
+}

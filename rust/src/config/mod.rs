@@ -1,0 +1,234 @@
+//! Workflow configuration schema (S2): the typed form of the Wilkins
+//! YAML interface (paper Sec. 3.2, Listings 1/2/4/6).
+//!
+//! Users describe *data requirements*, not dependencies: each task
+//! lists inports/outports as filename + dataset names; Wilkins matches
+//! them into channels (see [`crate::graph`]). The only other fields are
+//! resources (`nprocs`), ensembles (`taskCount`), subset writers
+//! (`nwriters` / `io_proc`), flow control (`io_freq`) and custom
+//! actions (`actions`).
+
+mod validate;
+
+use std::collections::BTreeMap;
+
+use crate::configyaml::{self, Yaml};
+use crate::error::{Result, WilkinsError};
+use crate::flow::FlowControl;
+
+/// Transport selection per dataset (`memory: 1` / `file: 1`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DsetSpec {
+    /// Dataset path or glob, e.g. `/group1/grid`, `/particles/*`.
+    pub name: String,
+    pub file: bool,
+    pub memory: bool,
+}
+
+/// One inport/outport: a filename (or glob) plus its datasets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PortConfig {
+    /// Filename or glob, e.g. `outfile.h5`, `plt*.h5`.
+    pub filename: String,
+    /// Flow control for this port (consumer side), from `io_freq`.
+    pub flow: FlowControl,
+    pub dsets: Vec<DsetSpec>,
+}
+
+/// Whether a consumer task keeps state across timesteps (Sec. 3.5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ConsumerKind {
+    /// Launched once; loops over timesteps itself.
+    #[default]
+    Stateful,
+    /// Relaunched by the driver for every incoming file.
+    Stateless,
+}
+
+/// One task entry of the YAML `tasks:` list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskConfig {
+    /// Task code name (the "shared object" to load).
+    pub func: String,
+    /// Ensemble instance count (`taskCount`, default 1).
+    pub task_count: usize,
+    /// Ranks per instance (`nprocs`).
+    pub nprocs: usize,
+    /// Subset writers (`nwriters`/`io_proc`): how many of the first
+    /// ranks perform I/O. Defaults to all.
+    pub nwriters: Option<usize>,
+    /// Custom action: (script/registry name, function name).
+    pub actions: Option<(String, String)>,
+    pub consumer_kind: ConsumerKind,
+    pub inports: Vec<PortConfig>,
+    pub outports: Vec<PortConfig>,
+    /// Free-form task parameters forwarded to the task code
+    /// (`params:` mapping; this is how benches set sizes/steps).
+    pub params: BTreeMap<String, Yaml>,
+}
+
+impl TaskConfig {
+    pub fn writers(&self) -> usize {
+        self.nwriters.unwrap_or(self.nprocs).min(self.nprocs)
+    }
+}
+
+/// A parsed workflow configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WorkflowConfig {
+    pub tasks: Vec<TaskConfig>,
+    /// Directory for file-mode transports (default: a temp dir).
+    pub workdir: Option<String>,
+}
+
+impl WorkflowConfig {
+    pub fn from_yaml_str(src: &str) -> Result<WorkflowConfig> {
+        let doc = configyaml::parse(src)?;
+        let cfg = from_doc(&doc)?;
+        validate::validate(&cfg)?;
+        Ok(cfg)
+    }
+
+    pub fn from_yaml_file(path: &std::path::Path) -> Result<WorkflowConfig> {
+        let src = std::fs::read_to_string(path)?;
+        WorkflowConfig::from_yaml_str(&src)
+    }
+
+    /// Total ranks across all tasks and instances.
+    pub fn total_ranks(&self) -> usize {
+        self.tasks.iter().map(|t| t.nprocs * t.task_count).sum()
+    }
+}
+
+fn from_doc(doc: &Yaml) -> Result<WorkflowConfig> {
+    let tasks_y = doc
+        .get("tasks")
+        .and_then(Yaml::as_seq)
+        .ok_or_else(|| WilkinsError::Config("missing `tasks:` list".into()))?;
+    let mut tasks = Vec::with_capacity(tasks_y.len());
+    for (i, t) in tasks_y.iter().enumerate() {
+        tasks.push(parse_task(t).map_err(|e| {
+            WilkinsError::Config(format!("task #{i}: {e}"))
+        })?);
+    }
+    let workdir = doc
+        .get("workdir")
+        .and_then(Yaml::as_str)
+        .map(str::to_string);
+    Ok(WorkflowConfig { tasks, workdir })
+}
+
+fn parse_task(y: &Yaml) -> Result<TaskConfig> {
+    let func = y
+        .get("func")
+        .and_then(Yaml::as_str)
+        .ok_or_else(|| WilkinsError::Config("missing `func`".into()))?
+        .to_string();
+    let task_count = get_usize(y, "taskCount")?.unwrap_or(1);
+    let nprocs = get_usize(y, "nprocs")?.unwrap_or(1);
+    let nwriters = match get_usize(y, "nwriters")? {
+        Some(n) => Some(n),
+        None => get_usize(y, "io_proc")?,
+    };
+    let actions = match y.get("actions") {
+        None => None,
+        Some(a) => {
+            let seq = a.as_seq().ok_or_else(|| {
+                WilkinsError::Config("`actions` must be a [script, func] list".into())
+            })?;
+            if seq.len() != 2 {
+                return Err(WilkinsError::Config(
+                    "`actions` must have exactly two entries".into(),
+                ));
+            }
+            let s = seq[0].as_str().ok_or_else(|| {
+                WilkinsError::Config("`actions[0]` must be a string".into())
+            })?;
+            let f = seq[1].as_str().ok_or_else(|| {
+                WilkinsError::Config("`actions[1]` must be a string".into())
+            })?;
+            Some((s.to_string(), f.to_string()))
+        }
+    };
+    let consumer_kind = match y.get("stateless").and_then(Yaml::as_bool) {
+        Some(true) => ConsumerKind::Stateless,
+        _ => ConsumerKind::Stateful,
+    };
+    let inports = parse_ports(y.get("inports"))?;
+    let outports = parse_ports(y.get("outports"))?;
+    let mut params = BTreeMap::new();
+    if let Some(p) = y.get("params").and_then(Yaml::as_map) {
+        for (k, v) in p {
+            params.insert(k.clone(), v.clone());
+        }
+    }
+    Ok(TaskConfig {
+        func,
+        task_count,
+        nprocs,
+        nwriters,
+        actions,
+        consumer_kind,
+        inports,
+        outports,
+        params,
+    })
+}
+
+fn parse_ports(y: Option<&Yaml>) -> Result<Vec<PortConfig>> {
+    let Some(y) = y else { return Ok(Vec::new()) };
+    let seq = y
+        .as_seq()
+        .ok_or_else(|| WilkinsError::Config("ports must be a list".into()))?;
+    let mut out = Vec::with_capacity(seq.len());
+    for p in seq {
+        let filename = p
+            .get("filename")
+            .and_then(Yaml::as_str)
+            .ok_or_else(|| WilkinsError::Config("port missing `filename`".into()))?
+            .to_string();
+        let flow = match p.get("io_freq").and_then(Yaml::as_i64) {
+            Some(freq) => FlowControl::from_io_freq(freq)?,
+            None => FlowControl::All,
+        };
+        let dsets_y = p
+            .get("dsets")
+            .and_then(Yaml::as_seq)
+            .ok_or_else(|| WilkinsError::Config("port missing `dsets` list".into()))?;
+        let mut dsets = Vec::with_capacity(dsets_y.len());
+        for d in dsets_y {
+            let name = d
+                .get("name")
+                .and_then(Yaml::as_str)
+                .ok_or_else(|| WilkinsError::Config("dset missing `name`".into()))?
+                .to_string();
+            let file = d.get("file").and_then(Yaml::as_bool).unwrap_or(false);
+            // Memory is the default transport when neither is given.
+            let memory = d
+                .get("memory")
+                .and_then(Yaml::as_bool)
+                .unwrap_or(!file);
+            dsets.push(DsetSpec { name, file, memory });
+        }
+        out.push(PortConfig { filename, flow, dsets });
+    }
+    Ok(out)
+}
+
+fn get_usize(y: &Yaml, key: &str) -> Result<Option<usize>> {
+    match y.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let n = v.as_i64().ok_or_else(|| {
+                WilkinsError::Config(format!("`{key}` must be an integer, got {}", v.type_name()))
+            })?;
+            if n < 0 {
+                return Err(WilkinsError::Config(format!("`{key}` must be >= 0, got {n}")));
+            }
+            Ok(Some(n as usize))
+        }
+    }
+}
+
+#[cfg(test)]
+pub mod tests;

@@ -1,0 +1,252 @@
+//! Config schema tests, including the paper's listings end-to-end.
+
+use crate::flow::FlowControl;
+
+use super::*;
+
+/// Paper Listing 1 (3-task workflow: producer + 2 consumers).
+pub const LISTING1: &str = "\
+tasks:
+  - func: producer
+    nprocs: 4
+    outports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+          - name: /group1/particles
+            file: 0
+            memory: 1
+  - func: consumer1
+    nprocs: 5
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+  - func: consumer2
+    nprocs: 3
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/particles
+            file: 0
+            memory: 1
+";
+
+/// Paper Listing 2 (fan-in ensemble: 4 producers, 2 consumers).
+pub const LISTING2: &str = "\
+tasks:
+  - func: producer
+    taskCount: 4 #Only change needed to define ensembles
+    nprocs: 2
+    outports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+  - func: consumer
+    taskCount: 2 #Only change needed to define ensembles
+    nprocs: 5
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+";
+
+/// Paper Listing 4 (materials science: LAMMPS + diamond detector).
+pub const LISTING4: &str = "\
+tasks:
+  - func: freeze
+    taskCount: 64 #Only change needed to define ensembles
+    nprocs: 32
+    nwriters: 1 #Only rank 0 performs I/O
+    outports:
+      - filename: dump-h5md.h5
+        dsets:
+          - name: /particles/*
+            file: 0
+            memory: 1
+  - func: detector
+    taskCount: 64
+    nprocs: 8
+    inports:
+      - filename: dump-h5md.h5
+        dsets:
+          - name: /particles/*
+            file: 0
+            memory: 1
+";
+
+/// Paper Listing 6 (cosmology: Nyx + Reeber with actions + io_freq).
+pub const LISTING6: &str = "\
+tasks:
+  - func: nyx
+    nprocs: 1024
+    actions: [\"actions\", \"nyx\"]
+    outports:
+      - filename: plt*.h5
+        dsets:
+          - name: /level_0/density
+            file: 0
+            memory: 1
+  - func: reeber
+    nprocs: 64
+    inports:
+      - filename: plt*.h5
+        io_freq: 2 #Setting the some flow control strategy
+        dsets:
+          - name: /level_0/density
+            file: 0
+            memory: 1
+";
+
+#[test]
+fn listing1_parses() {
+    let cfg = WorkflowConfig::from_yaml_str(LISTING1).unwrap();
+    assert_eq!(cfg.tasks.len(), 3);
+    let p = &cfg.tasks[0];
+    assert_eq!(p.func, "producer");
+    assert_eq!(p.nprocs, 4);
+    assert_eq!(p.outports.len(), 1);
+    assert_eq!(p.outports[0].dsets.len(), 2);
+    assert!(p.outports[0].dsets[0].memory);
+    assert!(!p.outports[0].dsets[0].file);
+    assert_eq!(cfg.tasks[1].inports[0].dsets[0].name, "/group1/grid");
+    assert_eq!(cfg.total_ranks(), 12);
+}
+
+#[test]
+fn listing2_ensembles() {
+    let cfg = WorkflowConfig::from_yaml_str(LISTING2).unwrap();
+    assert_eq!(cfg.tasks[0].task_count, 4);
+    assert_eq!(cfg.tasks[1].task_count, 2);
+    assert_eq!(cfg.total_ranks(), 4 * 2 + 2 * 5);
+}
+
+#[test]
+fn listing4_subset_writers() {
+    let cfg = WorkflowConfig::from_yaml_str(LISTING4).unwrap();
+    let f = &cfg.tasks[0];
+    assert_eq!(f.task_count, 64);
+    assert_eq!(f.nprocs, 32);
+    assert_eq!(f.nwriters, Some(1));
+    assert_eq!(f.writers(), 1);
+    assert_eq!(f.outports[0].dsets[0].name, "/particles/*");
+}
+
+#[test]
+fn listing6_actions_and_flow() {
+    let cfg = WorkflowConfig::from_yaml_str(LISTING6).unwrap();
+    assert_eq!(
+        cfg.tasks[0].actions,
+        Some(("actions".to_string(), "nyx".to_string()))
+    );
+    assert_eq!(cfg.tasks[0].outports[0].filename, "plt*.h5");
+    assert_eq!(cfg.tasks[1].inports[0].flow, FlowControl::Some(2));
+}
+
+#[test]
+fn io_proc_alias_for_nwriters() {
+    let cfg = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 4\n    io_proc: 2\n    outports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.tasks[0].nwriters, Some(2));
+}
+
+#[test]
+fn memory_is_default_transport() {
+    let cfg = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n",
+    )
+    .unwrap();
+    let d = &cfg.tasks[0].outports[0].dsets[0];
+    assert!(d.memory && !d.file);
+}
+
+#[test]
+fn stateless_flag() {
+    let cfg = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: c\n    nprocs: 1\n    stateless: 1\n    inports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.tasks[0].consumer_kind, ConsumerKind::Stateless);
+}
+
+#[test]
+fn params_passthrough() {
+    let cfg = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    params:\n      steps: 10\n      size: 4096\n    outports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n",
+    )
+    .unwrap();
+    assert_eq!(
+        cfg.tasks[0].params.get("steps").and_then(|y| y.as_i64()),
+        Some(10)
+    );
+}
+
+// ---- validation failures ---------------------------------------------------
+
+#[test]
+fn rejects_empty_tasks() {
+    assert!(WorkflowConfig::from_yaml_str("tasks:\n").is_err());
+}
+
+#[test]
+fn rejects_zero_nprocs() {
+    let err = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 0\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n",
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn rejects_nwriters_above_nprocs() {
+    let err = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 2\n    nwriters: 3\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n",
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn rejects_portless_task() {
+    assert!(WorkflowConfig::from_yaml_str("tasks:\n  - func: p\n    nprocs: 1\n").is_err());
+}
+
+#[test]
+fn rejects_no_transport() {
+    let err = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n            file: 0\n            memory: 0\n",
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn rejects_duplicate_funcs() {
+    let err = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n  - func: p\n    nprocs: 1\n    inports:\n      - filename: f\n        dsets:\n          - name: /d\n",
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn rejects_bad_io_freq() {
+    let err = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: f\n        io_freq: -7\n        dsets:\n          - name: /d\n",
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn rejects_malformed_actions() {
+    let err = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    actions: [\"only-one\"]\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n",
+    );
+    assert!(err.is_err());
+}

@@ -1,0 +1,77 @@
+//! Schema validation: reject configurations that would deadlock or
+//! misbehave at launch with a readable message instead.
+
+use crate::error::{Result, WilkinsError};
+
+use super::{TaskConfig, WorkflowConfig};
+
+pub fn validate(cfg: &WorkflowConfig) -> Result<()> {
+    if cfg.tasks.is_empty() {
+        return Err(WilkinsError::Config("workflow has no tasks".into()));
+    }
+    for t in &cfg.tasks {
+        validate_task(t)?;
+    }
+    // Task names must be unique: instances are addressed as func[i].
+    let mut names: Vec<&str> = cfg.tasks.iter().map(|t| t.func.as_str()).collect();
+    names.sort();
+    names.dedup();
+    if names.len() != cfg.tasks.len() {
+        return Err(WilkinsError::Config(
+            "duplicate `func` names; use taskCount for ensembles".into(),
+        ));
+    }
+    Ok(())
+}
+
+fn validate_task(t: &TaskConfig) -> Result<()> {
+    let who = &t.func;
+    if t.func.is_empty() {
+        return Err(WilkinsError::Config("empty `func` name".into()));
+    }
+    if t.nprocs == 0 {
+        return Err(WilkinsError::Config(format!("{who}: `nprocs` must be >= 1")));
+    }
+    if t.task_count == 0 {
+        return Err(WilkinsError::Config(format!("{who}: `taskCount` must be >= 1")));
+    }
+    if let Some(w) = t.nwriters {
+        if w == 0 || w > t.nprocs {
+            return Err(WilkinsError::Config(format!(
+                "{who}: `nwriters` must be in 1..=nprocs ({})",
+                t.nprocs
+            )));
+        }
+    }
+    if t.inports.is_empty() && t.outports.is_empty() {
+        return Err(WilkinsError::Config(format!(
+            "{who}: task has neither inports nor outports"
+        )));
+    }
+    for p in t.inports.iter().chain(&t.outports) {
+        if p.filename.is_empty() {
+            return Err(WilkinsError::Config(format!("{who}: empty port filename")));
+        }
+        if p.dsets.is_empty() {
+            return Err(WilkinsError::Config(format!(
+                "{who}: port {} has no dsets",
+                p.filename
+            )));
+        }
+        for d in &p.dsets {
+            if d.name.is_empty() {
+                return Err(WilkinsError::Config(format!(
+                    "{who}: dset with empty name in port {}",
+                    p.filename
+                )));
+            }
+            if !d.file && !d.memory {
+                return Err(WilkinsError::Config(format!(
+                    "{who}: dset {} disables both file and memory transport",
+                    d.name
+                )));
+            }
+        }
+    }
+    Ok(())
+}

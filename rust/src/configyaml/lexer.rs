@@ -1,0 +1,145 @@
+//! Line lexer for the YAML subset: strips comments/blank lines, records
+//! indentation, and classifies each line as `key: value`, `key:`, or a
+//! sequence item.
+
+use crate::error::{Result, WilkinsError};
+
+#[derive(Debug, Clone)]
+pub struct Line {
+    pub number: usize,
+    pub indent: usize,
+    pub kind: LineKind,
+}
+
+#[derive(Debug, Clone)]
+pub enum LineKind {
+    KeyValue { key: String, value: String },
+    KeyOnly { key: String },
+    /// `- ...`; `rest` is the text after the dash (may be empty).
+    SeqItem { rest: String },
+}
+
+pub enum KeySplit {
+    KeyValue { key: String, value: String },
+    KeyOnly { key: String },
+}
+
+pub fn lex(src: &str) -> Result<Vec<Line>> {
+    let mut out = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let number = idx + 1;
+        if raw.trim_start().starts_with('#') {
+            continue;
+        }
+        let stripped = strip_comment(raw);
+        let trimmed_end = stripped.trim_end();
+        if trimmed_end.trim().is_empty() {
+            continue;
+        }
+        if trimmed_end.contains('\t') {
+            return Err(WilkinsError::Yaml {
+                line: number,
+                msg: "tabs are not allowed for indentation".into(),
+            });
+        }
+        let indent = trimmed_end.len() - trimmed_end.trim_start().len();
+        let body = trimmed_end.trim_start();
+
+        let kind = if body == "-" {
+            LineKind::SeqItem { rest: String::new() }
+        } else if let Some(rest) = body.strip_prefix("- ") {
+            LineKind::SeqItem { rest: rest.trim().to_string() }
+        } else {
+            match split_key(body, number)? {
+                Some(KeySplit::KeyValue { key, value }) => {
+                    LineKind::KeyValue { key, value }
+                }
+                Some(KeySplit::KeyOnly { key }) => LineKind::KeyOnly { key },
+                None => {
+                    return Err(WilkinsError::Yaml {
+                        line: number,
+                        msg: format!("expected `key:` or `- item`, got {body:?}"),
+                    })
+                }
+            }
+        };
+        out.push(Line { number, indent, kind });
+    }
+    Ok(out)
+}
+
+/// Split `key: value` / `key:` — returns None for plain scalars.
+/// Respects quotes (a `:` inside quotes is not a separator) and
+/// requires the colon to be followed by space/EOL, so that plain
+/// scalars such as `/group1/grid:x` or `12:30:00` are not mis-split.
+pub fn split_key(body: &str, line: usize) -> Result<Option<KeySplit>> {
+    let bytes = body.as_bytes();
+    let mut quote: Option<u8> = None;
+    for i in 0..bytes.len() {
+        let c = bytes[i];
+        match quote {
+            Some(q) => {
+                if c == q {
+                    quote = None;
+                }
+            }
+            None => {
+                if c == b'"' || c == b'\'' {
+                    quote = Some(c);
+                } else if c == b':' && (i + 1 == bytes.len() || bytes[i + 1] == b' ')
+                {
+                    let key = unquote(body[..i].trim());
+                    if key.is_empty() {
+                        return Err(WilkinsError::Yaml {
+                            line,
+                            msg: "empty mapping key".into(),
+                        });
+                    }
+                    let value = body[i + 1..].trim().to_string();
+                    return Ok(Some(if value.is_empty() {
+                        KeySplit::KeyOnly { key }
+                    } else {
+                        KeySplit::KeyValue { key, value }
+                    }));
+                }
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Remove a trailing `#comment` that is not inside quotes.
+fn strip_comment(raw: &str) -> &str {
+    let bytes = raw.as_bytes();
+    let mut quote: Option<u8> = None;
+    for i in 0..bytes.len() {
+        let c = bytes[i];
+        match quote {
+            Some(q) => {
+                if c == q {
+                    quote = None;
+                }
+            }
+            None => {
+                if c == b'"' || c == b'\'' {
+                    quote = Some(c);
+                } else if c == b'#' && (i == 0 || bytes[i - 1] == b' ') {
+                    return &raw[..i];
+                }
+            }
+        }
+    }
+    raw
+}
+
+pub fn unquote(s: &str) -> String {
+    let b = s.as_bytes();
+    if b.len() >= 2
+        && ((b[0] == b'"' && b[b.len() - 1] == b'"')
+            || (b[0] == b'\'' && b[b.len() - 1] == b'\''))
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}

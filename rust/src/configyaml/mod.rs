@@ -1,0 +1,171 @@
+//! In-repo YAML-subset parser (substrate S1).
+//!
+//! The offline toolchain has no `serde_yaml`, so Wilkins ships its own
+//! parser for the YAML subset its workflow configuration files use
+//! (paper Listings 1, 2, 4, 6):
+//!
+//! * block mappings nested by indentation,
+//! * block sequences (`- ` items, including mapping items),
+//! * flow (inline) sequences `["actions", "nyx"]`,
+//! * scalars: integers, floats, booleans, plain and quoted strings,
+//! * `#` comments (full-line and trailing) and blank lines.
+//!
+//! Anchors, aliases, multi-document streams, block scalars and flow
+//! mappings are intentionally out of scope — the Wilkins interface
+//! never needs them (ease-of-use is the paper's point: configs stay
+//! simple).
+
+mod lexer;
+mod value;
+
+pub use value::Yaml;
+
+use crate::error::{Result, WilkinsError};
+use lexer::{Line, LineKind};
+
+/// Parse a YAML document into a [`Yaml`] value tree.
+pub fn parse(src: &str) -> Result<Yaml> {
+    let lines = lexer::lex(src)?;
+    if lines.is_empty() {
+        return Ok(Yaml::Map(Vec::new()));
+    }
+    let mut pos = 0;
+    let doc = parse_block(&lines, &mut pos, 0)?;
+    if pos != lines.len() {
+        let line = lines[pos].number;
+        return Err(WilkinsError::Yaml {
+            line,
+            msg: format!("unexpected content at indent {}", lines[pos].indent),
+        });
+    }
+    Ok(doc)
+}
+
+/// Parse a block (mapping or sequence) whose items sit at `indent`.
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml> {
+    match lines[*pos].kind {
+        LineKind::SeqItem { .. } => parse_sequence(lines, pos, indent),
+        _ => parse_mapping(lines, pos, indent),
+    }
+}
+
+fn parse_mapping(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml> {
+    let mut entries: Vec<(String, Yaml)> = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(WilkinsError::Yaml {
+                line: line.number,
+                msg: format!(
+                    "bad indentation: expected {} spaces, found {}",
+                    indent, line.indent
+                ),
+            });
+        }
+        match &line.kind {
+            LineKind::KeyValue { key, value } => {
+                *pos += 1;
+                entries.push((key.clone(), value::parse_scalar(value)));
+            }
+            LineKind::KeyOnly { key } => {
+                let key = key.clone();
+                let key_line = line.number;
+                *pos += 1;
+                if *pos < lines.len() && lines[*pos].indent > indent {
+                    let child_indent = lines[*pos].indent;
+                    let child = parse_block(lines, pos, child_indent)?;
+                    entries.push((key, child));
+                } else if *pos < lines.len()
+                    && lines[*pos].indent == indent
+                    && matches!(lines[*pos].kind, LineKind::SeqItem { .. })
+                {
+                    // Sequences are commonly indented at the same level
+                    // as their key ("tasks:\n- func: ...").
+                    let child = parse_sequence(lines, pos, indent)?;
+                    entries.push((key, child));
+                } else {
+                    // Key with no value: YAML null; we use an empty map,
+                    // the only way Wilkins configs use this form.
+                    let _ = key_line;
+                    entries.push((key, Yaml::Null));
+                }
+            }
+            LineKind::SeqItem { .. } => break,
+        }
+    }
+    Ok(Yaml::Map(entries))
+}
+
+fn parse_sequence(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != indent || !matches!(line.kind, LineKind::SeqItem { .. }) {
+            if line.indent >= indent && !matches!(line.kind, LineKind::SeqItem { .. }) {
+                break;
+            }
+            if line.indent < indent {
+                break;
+            }
+            return Err(WilkinsError::Yaml {
+                line: line.number,
+                msg: "inconsistent sequence indentation".into(),
+            });
+        }
+        let LineKind::SeqItem { rest } = &line.kind else {
+            unreachable!()
+        };
+        let rest = rest.clone();
+        let item_line = line.number;
+        *pos += 1;
+        if rest.is_empty() {
+            // "-" alone: nested block on following, deeper lines.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Yaml::Null);
+            }
+            continue;
+        }
+        // "- key: value" or "- key:" starts an inline mapping whose
+        // continuation lines are indented past the dash.
+        if let Some(first) = lexer::split_key(&rest, item_line)? {
+            // Re-interpret as a mapping: the first entry comes from the
+            // dash line; continuation entries are the following lines
+            // indented deeper than the dash.
+            let mut entries: Vec<(String, Yaml)> = Vec::new();
+            match first {
+                lexer::KeySplit::KeyValue { key, value } => {
+                    entries.push((key, value::parse_scalar(&value)));
+                }
+                lexer::KeySplit::KeyOnly { key } => {
+                    if *pos < lines.len() && lines[*pos].indent > indent + 2 {
+                        let ci = lines[*pos].indent;
+                        let child = parse_block(lines, pos, ci)?;
+                        entries.push((key, child));
+                    } else {
+                        entries.push((key, Yaml::Null));
+                    }
+                }
+            }
+            // Continuation lines of this mapping item.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let cont_indent = lines[*pos].indent;
+                if let Yaml::Map(more) = parse_mapping(lines, pos, cont_indent)? {
+                    entries.extend(more);
+                }
+            }
+            items.push(Yaml::Map(entries));
+        } else {
+            items.push(value::parse_scalar(&rest));
+        }
+    }
+    Ok(Yaml::Seq(items))
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,188 @@
+//! Unit tests for the YAML-subset parser, including round-trips of the
+//! paper's Listings 1, 2, 4 and 6.
+
+use super::{parse, Yaml};
+
+fn s(v: &str) -> Yaml {
+    Yaml::Str(v.to_string())
+}
+
+#[test]
+fn scalars_typed() {
+    let doc = parse("a: 1\nb: 2.5\nc: hello\nd: true\ne: \"7\"\nf: /a/b\n").unwrap();
+    assert_eq!(doc.get("a"), Some(&Yaml::Int(1)));
+    assert_eq!(doc.get("b"), Some(&Yaml::Float(2.5)));
+    assert_eq!(doc.get("c"), Some(&s("hello")));
+    assert_eq!(doc.get("d"), Some(&Yaml::Bool(true)));
+    assert_eq!(doc.get("e"), Some(&s("7")));
+    assert_eq!(doc.get("f"), Some(&s("/a/b")));
+}
+
+#[test]
+fn comments_and_blanks_ignored() {
+    let doc = parse("# header\n\na: 1  # trailing\n\n# tail\n").unwrap();
+    assert_eq!(doc.get("a"), Some(&Yaml::Int(1)));
+}
+
+#[test]
+fn hash_inside_quotes_kept() {
+    let doc = parse("a: \"x # y\"\n").unwrap();
+    assert_eq!(doc.get("a"), Some(&s("x # y")));
+}
+
+#[test]
+fn nested_mapping() {
+    let doc = parse("outer:\n  inner:\n    k: 3\n").unwrap();
+    let v = doc.get("outer").unwrap().get("inner").unwrap().get("k");
+    assert_eq!(v, Some(&Yaml::Int(3)));
+}
+
+#[test]
+fn sequence_of_scalars() {
+    let doc = parse("xs:\n  - 1\n  - 2\n  - three\n").unwrap();
+    let xs = doc.get("xs").unwrap().as_seq().unwrap();
+    assert_eq!(xs, &[Yaml::Int(1), Yaml::Int(2), s("three")]);
+}
+
+#[test]
+fn sequence_at_key_indent() {
+    // Common YAML style: list items at the same indent as the key.
+    let doc = parse("tasks:\n- func: a\n- func: b\n").unwrap();
+    let tasks = doc.get("tasks").unwrap().as_seq().unwrap();
+    assert_eq!(tasks.len(), 2);
+    assert_eq!(tasks[0].get("func"), Some(&s("a")));
+    assert_eq!(tasks[1].get("func"), Some(&s("b")));
+}
+
+#[test]
+fn sequence_item_multiline_mapping() {
+    let doc = parse(
+        "tasks:\n  - func: producer\n    nprocs: 4\n  - func: consumer\n    nprocs: 2\n",
+    )
+    .unwrap();
+    let tasks = doc.get("tasks").unwrap().as_seq().unwrap();
+    assert_eq!(tasks[0].get("nprocs"), Some(&Yaml::Int(4)));
+    assert_eq!(tasks[1].get("func"), Some(&s("consumer")));
+}
+
+#[test]
+fn flow_sequence() {
+    let doc = parse("actions: [\"actions\", \"nyx\"]\n").unwrap();
+    let v = doc.get("actions").unwrap().as_seq().unwrap();
+    assert_eq!(v, &[s("actions"), s("nyx")]);
+}
+
+#[test]
+fn flow_sequence_unquoted_and_numbers() {
+    let doc = parse("xs: [1, 2.5, abc]\n").unwrap();
+    let v = doc.get("xs").unwrap().as_seq().unwrap();
+    assert_eq!(v, &[Yaml::Int(1), Yaml::Float(2.5), s("abc")]);
+}
+
+#[test]
+fn glob_values_stay_strings() {
+    let doc = parse("filename: plt*.h5\nname: /level_0/density\n").unwrap();
+    assert_eq!(doc.get("filename"), Some(&s("plt*.h5")));
+    assert_eq!(doc.get("name"), Some(&s("/level_0/density")));
+}
+
+#[test]
+fn key_only_is_null() {
+    let doc = parse("a:\nb: 1\n").unwrap();
+    assert_eq!(doc.get("a"), Some(&Yaml::Null));
+    assert_eq!(doc.get("b"), Some(&Yaml::Int(1)));
+}
+
+#[test]
+fn deep_ports_structure() {
+    let src = "\
+tasks:
+  - func: producer
+    nprocs: 4
+    outports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+          - name: /group1/particles
+            file: 0
+            memory: 1
+  - func: consumer1
+    nprocs: 5
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+";
+    let doc = parse(src).unwrap();
+    let tasks = doc.get("tasks").unwrap().as_seq().unwrap();
+    assert_eq!(tasks.len(), 2);
+    let out = tasks[0].get("outports").unwrap().as_seq().unwrap();
+    let dsets = out[0].get("dsets").unwrap().as_seq().unwrap();
+    assert_eq!(dsets.len(), 2);
+    assert_eq!(dsets[1].get("name"), Some(&s("/group1/particles")));
+    assert_eq!(dsets[1].get("memory"), Some(&Yaml::Int(1)));
+}
+
+#[test]
+fn listing2_ensembles() {
+    let src = "\
+tasks:
+  - func: producer
+    taskCount: 4 #Only change needed to define ensembles
+    nprocs: 2
+    outports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+  - func: consumer
+    taskCount: 2
+    nprocs: 5
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 0
+            memory: 1
+";
+    let doc = parse(src).unwrap();
+    let tasks = doc.get("tasks").unwrap().as_seq().unwrap();
+    assert_eq!(tasks[0].get("taskCount"), Some(&Yaml::Int(4)));
+    assert_eq!(tasks[1].get("taskCount"), Some(&Yaml::Int(2)));
+}
+
+#[test]
+fn errors_carry_line_numbers() {
+    let err = parse("a: 1\n\tb: 2\n").unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("line 2"), "{msg}");
+}
+
+#[test]
+fn bad_indent_rejected() {
+    assert!(parse("a:\n  b: 1\n c: 2\n").is_err());
+}
+
+#[test]
+fn empty_doc_is_empty_map() {
+    assert_eq!(parse("").unwrap(), Yaml::Map(vec![]));
+    assert_eq!(parse("# only comments\n").unwrap(), Yaml::Map(vec![]));
+}
+
+#[test]
+fn colon_in_plain_scalar_not_split() {
+    let doc = parse("when: 12:30:00\n").unwrap();
+    assert_eq!(doc.get("when"), Some(&s("12:30:00")));
+}
+
+#[test]
+fn order_preserved() {
+    let doc = parse("b: 1\na: 2\nc: 3\n").unwrap();
+    let keys: Vec<_> = doc.as_map().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+    assert_eq!(keys, ["b", "a", "c"]);
+}

@@ -1,0 +1,209 @@
+//! The parsed YAML value tree and scalar typing rules.
+
+use super::lexer::unquote;
+
+/// A parsed YAML value. Mappings preserve document order (Wilkins task
+/// order matters for rank assignment).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Seq(Vec<Yaml>),
+    Map(Vec<(String, Yaml)>),
+}
+
+impl Yaml {
+    pub fn get(&self, key: &str) -> Option<&Yaml> {
+        match self {
+            Yaml::Map(entries) => entries
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer view; also accepts exact floats like `4.0`.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Yaml::Int(v) => Some(*v),
+            Yaml::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Yaml::Float(f) => Some(*f),
+            Yaml::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Yaml::Bool(b) => Some(*b),
+            // Wilkins configs use 0/1 flags for file/memory.
+            Yaml::Int(0) => Some(false),
+            Yaml::Int(1) => Some(true),
+            _ => None,
+        }
+    }
+
+    pub fn as_seq(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::Seq(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Yaml)]> {
+        match self {
+            Yaml::Map(entries) => Some(entries),
+            _ => None,
+        }
+    }
+
+    /// Scalar rendered back to a string (for error messages).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Yaml::Null => "null",
+            Yaml::Bool(_) => "bool",
+            Yaml::Int(_) => "int",
+            Yaml::Float(_) => "float",
+            Yaml::Str(_) => "string",
+            Yaml::Seq(_) => "sequence",
+            Yaml::Map(_) => "mapping",
+        }
+    }
+}
+
+/// Type a scalar token: flow collection, bool, int, float, else string.
+pub fn parse_scalar(token: &str) -> Yaml {
+    let t = token.trim();
+    if t.is_empty() || t == "~" || t == "null" {
+        return Yaml::Null;
+    }
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        let items = split_flow_items(inner)
+            .into_iter()
+            .map(|s| parse_scalar(&s))
+            .collect();
+        return Yaml::Seq(items);
+    }
+    if t.starts_with('{') && t.ends_with('}') {
+        let inner = &t[1..t.len() - 1];
+        let mut entries = Vec::new();
+        for item in split_flow_items(inner) {
+            match split_flow_pair(&item) {
+                Some((k, v)) => entries.push((k, parse_scalar(&v))),
+                None => entries.push((item, Yaml::Null)),
+            }
+        }
+        return Yaml::Map(entries);
+    }
+    if t.starts_with('"') || t.starts_with('\'') {
+        return Yaml::Str(unquote(t));
+    }
+    match t {
+        "true" | "True" => return Yaml::Bool(true),
+        "false" | "False" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if let Ok(v) = t.parse::<i64>() {
+        return Yaml::Int(v);
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        // Reject things like `1e` that parse oddly; f64::parse is strict
+        // enough, but keep plain words such as `nan`/`inf` as strings to
+        // avoid surprising config typos becoming numbers.
+        let lower = t.to_ascii_lowercase();
+        if !lower.contains("nan") && !lower.contains("inf") {
+            return Yaml::Float(f);
+        }
+    }
+    Yaml::Str(t.to_string())
+}
+
+/// Split `a, b, "c,d", {x: 1, y: 2}, [p, q]` into top-level items,
+/// respecting quotes and nested brackets/braces.
+fn split_flow_items(inner: &str) -> Vec<String> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut quote: Option<char> = None;
+    let mut depth = 0usize;
+    for c in inner.chars() {
+        match quote {
+            Some(q) => {
+                cur.push(c);
+                if c == q {
+                    quote = None;
+                }
+            }
+            None => match c {
+                '"' | '\'' => {
+                    quote = Some(c);
+                    cur.push(c);
+                }
+                '[' | '{' => {
+                    depth += 1;
+                    cur.push(c);
+                }
+                ']' | '}' => {
+                    depth = depth.saturating_sub(1);
+                    cur.push(c);
+                }
+                ',' if depth == 0 => {
+                    items.push(cur.trim().to_string());
+                    cur.clear();
+                }
+                _ => cur.push(c),
+            },
+        }
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur.trim().to_string());
+    }
+    items.retain(|s| !s.is_empty());
+    items
+}
+
+/// Split one flow-mapping entry `key: value` at the top level.
+fn split_flow_pair(item: &str) -> Option<(String, String)> {
+    let bytes = item.as_bytes();
+    let mut quote: Option<u8> = None;
+    let mut depth = 0usize;
+    for i in 0..bytes.len() {
+        let c = bytes[i];
+        match quote {
+            Some(q) => {
+                if c == q {
+                    quote = None;
+                }
+            }
+            None => match c {
+                b'"' | b'\'' => quote = Some(c),
+                b'[' | b'{' => depth += 1,
+                b']' | b'}' => depth = depth.saturating_sub(1),
+                b':' if depth == 0 => {
+                    let key = unquote(item[..i].trim());
+                    let value = item[i + 1..].trim().to_string();
+                    return Some((key, value));
+                }
+                _ => {}
+            },
+        }
+    }
+    None
+}

@@ -1,0 +1,255 @@
+//! Wilkins-master (S9, paper Sec. 3.3): the workflow driver.
+//!
+//! Reads the configuration, builds the graph, partitions the SPMD
+//! world into restricted per-task worlds, creates the LowFive objects
+//! and the intercommunicators between coupled tasks, wires flow
+//! control and custom actions, launches every rank, and joins the
+//! whole workflow. Users never touch this code — everything is driven
+//! by the YAML file, exactly as in the paper.
+
+mod report;
+
+pub use report::{NodeReport, RunReport};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use crate::actions::ActionRegistry;
+use crate::comm::{InterComm, World};
+use crate::config::{ConsumerKind, WorkflowConfig};
+use crate::error::{Result, WilkinsError};
+use crate::graph::WorkflowGraph;
+use crate::henson::{drive_rank, Registry, Role, TaskContext};
+use crate::lowfive::{ChannelMode, InChannel, OutChannel, Vol};
+use crate::metrics::Recorder;
+use crate::runtime::EngineHandle;
+
+/// The coordinator. Build one per workflow run.
+pub struct Wilkins {
+    cfg: WorkflowConfig,
+    graph: WorkflowGraph,
+    registry: Arc<Registry>,
+    actions: ActionRegistry,
+    engine: Option<EngineHandle>,
+    workdir: PathBuf,
+    time_scale: f64,
+    recorder: Arc<Recorder>,
+}
+
+impl Wilkins {
+    pub fn new(cfg: WorkflowConfig, registry: Registry) -> Result<Wilkins> {
+        let graph = WorkflowGraph::build(&cfg)?;
+        let workdir = cfg
+            .workdir
+            .clone()
+            .map(PathBuf::from)
+            .unwrap_or_else(|| {
+                std::env::temp_dir().join(format!("wilkins-run-{}", std::process::id()))
+            });
+        Ok(Wilkins {
+            cfg,
+            graph,
+            registry: Arc::new(registry),
+            actions: ActionRegistry::with_builtins(),
+            engine: None,
+            workdir,
+            time_scale: 1.0,
+            recorder: Arc::new(Recorder::new()),
+        })
+    }
+
+    pub fn from_yaml_str(src: &str, registry: Registry) -> Result<Wilkins> {
+        Wilkins::new(WorkflowConfig::from_yaml_str(src)?, registry)
+    }
+
+    pub fn from_yaml_file(path: &std::path::Path, registry: Registry) -> Result<Wilkins> {
+        Wilkins::new(WorkflowConfig::from_yaml_file(path)?, registry)
+    }
+
+    /// Attach the AOT compute engine (science payloads need it).
+    pub fn with_engine(mut self, engine: EngineHandle) -> Wilkins {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Scale sleep-emulated compute: wall-seconds per paper-second.
+    pub fn with_time_scale(mut self, s: f64) -> Wilkins {
+        self.time_scale = s;
+        self
+    }
+
+    pub fn with_workdir(mut self, dir: PathBuf) -> Wilkins {
+        self.workdir = dir;
+        self
+    }
+
+    /// Register a custom action (the user's "Python script").
+    pub fn with_action(
+        mut self,
+        script: &str,
+        func: &str,
+        f: crate::actions::ActionFn,
+    ) -> Wilkins {
+        self.actions.register(script, func, f);
+        self
+    }
+
+    pub fn graph(&self) -> &WorkflowGraph {
+        &self.graph
+    }
+
+    pub fn recorder(&self) -> Arc<Recorder> {
+        Arc::clone(&self.recorder)
+    }
+
+    /// Launch the workflow and block until every rank finishes.
+    pub fn run(&self) -> Result<RunReport> {
+        let g = &self.graph;
+        let world = World::new(g.total_ranks);
+
+        // Pre-allocate communicator ids deterministically: one local +
+        // one I/O comm per node, one id per channel.
+        let local_ids: Vec<u64> = g.nodes.iter().map(|_| world.alloc_comm_id()).collect();
+        let io_ids: Vec<u64> = g.nodes.iter().map(|_| world.alloc_comm_id()).collect();
+        let chan_ids: Vec<u64> = g.channels.iter().map(|_| world.alloc_comm_id()).collect();
+
+        // Resolve task codes and actions up-front for fast failure.
+        let mut codes = Vec::with_capacity(g.nodes.len());
+        let mut node_actions = Vec::with_capacity(g.nodes.len());
+        for node in &g.nodes {
+            let t = &self.cfg.tasks[node.task_idx];
+            codes.push(self.registry.get(&t.func)?);
+            node_actions.push(match &t.actions {
+                Some((s, f)) => Some(self.actions.get(s, f)?),
+                None => None,
+            });
+        }
+        std::fs::create_dir_all(&self.workdir)?;
+
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(g.total_ranks);
+        for rank in 0..g.total_ranks {
+            let node_idx = g
+                .node_of_rank(rank)
+                .ok_or_else(|| WilkinsError::Graph(format!("rank {rank} unassigned")))?;
+            let node = g.nodes[node_idx].clone();
+            let task = self.cfg.tasks[node.task_idx].clone();
+            let code = Arc::clone(&codes[node_idx]);
+            let action = node_actions[node_idx].clone();
+            let world = world.clone();
+            let graph = g.clone();
+            let chan_ids = chan_ids.clone();
+            let local_id = local_ids[node_idx];
+            let io_id = io_ids[node_idx];
+            let engine = self.engine.clone();
+            let recorder = Arc::clone(&self.recorder);
+            let workdir = self.workdir.clone();
+            let time_scale = self.time_scale;
+            let builder = thread::Builder::new()
+                .name(format!("wk-{}-{}", node.name, rank - node.first_rank))
+                .stack_size(2 << 20);
+            let h = builder
+                .spawn(move || -> Result<report::RankOutcome> {
+                    let local_rank = rank - node.first_rank;
+                    let ranks: Vec<usize> = node.ranks().collect();
+                    let local = world.comm_from_ranks(local_id, &ranks, local_rank);
+                    let mut vol = Vol::new(local.clone(), workdir);
+                    vol.set_recorder(Arc::clone(&recorder), rank);
+                    if local_rank < node.nwriters {
+                        let io_ranks: Vec<usize> = node.io_ranks().collect();
+                        let io = world.comm_from_ranks(io_id, &io_ranks, local_rank);
+                        vol.set_io_comm(Some(io));
+                    }
+
+                    // Out-channels: this node as producer.
+                    for ci in graph.out_channels_of(node_idx) {
+                        let ch = &graph.channels[ci];
+                        let consumer = &graph.nodes[ch.consumer];
+                        let ic = if local_rank < node.nwriters
+                            && ch.mode == ChannelMode::Memory
+                        {
+                            Some(InterComm::new(
+                                local.clone(),
+                                chan_ids[ci],
+                                consumer.ranks().collect(),
+                            ))
+                        } else {
+                            None
+                        };
+                        vol.add_out_channel(
+                            OutChannel::new(ic, &ch.out_pattern, ch.mode)
+                                .with_flow(ch.flow),
+                        );
+                    }
+                    // In-channels: this node as consumer. Remote group
+                    // is the producer's I/O ranks only.
+                    for ci in graph.in_channels_of(node_idx) {
+                        let ch = &graph.channels[ci];
+                        let producer = &graph.nodes[ch.producer];
+                        let ic = if ch.mode == ChannelMode::Memory {
+                            Some(InterComm::new(
+                                local.clone(),
+                                chan_ids[ci],
+                                producer.io_ranks().collect(),
+                            ))
+                        } else {
+                            None
+                        };
+                        vol.add_in_channel(InChannel::new(ic, &ch.in_pattern, ch.mode));
+                    }
+
+                    if let Some(action) = action {
+                        action(&mut vol, local_rank);
+                    }
+
+                    let role = match (
+                        graph.out_channels_of(node_idx).is_empty(),
+                        graph.in_channels_of(node_idx).is_empty(),
+                    ) {
+                        (false, true) => Role::Producer,
+                        (true, false) => Role::Consumer,
+                        _ => Role::Intermediate,
+                    };
+                    let kind = match task.consumer_kind {
+                        ConsumerKind::Stateless => ConsumerKind::Stateless,
+                        ConsumerKind::Stateful => ConsumerKind::Stateful,
+                    };
+                    let mut ctx = TaskContext {
+                        comm: local,
+                        vol,
+                        instance: node.instance,
+                        nwriters: node.nwriters,
+                        name: node.name.clone(),
+                        params: task.params.clone(),
+                        engine,
+                        recorder: Some(recorder),
+                        global_rank: rank,
+                        time_scale,
+                    };
+                    let res = drive_rank(code, role, kind, &mut ctx);
+                    Ok(report::RankOutcome {
+                        node: node_idx,
+                        stats: ctx.vol.stats.clone(),
+                        error: res.err().map(|e| e.to_string()),
+                    })
+                })
+                .map_err(|e| WilkinsError::Task(format!("spawn rank {rank}: {e}")))?;
+            handles.push(h);
+        }
+
+        let mut outcomes = Vec::with_capacity(handles.len());
+        for h in handles {
+            match h.join() {
+                Ok(Ok(o)) => outcomes.push(o),
+                Ok(Err(e)) => return Err(e),
+                Err(_) => {
+                    return Err(WilkinsError::Task("rank thread panicked".into()))
+                }
+            }
+        }
+        let elapsed = t0.elapsed();
+        report::build(g, outcomes, elapsed, world.bytes_sent(), world.msgs_sent())
+    }
+}

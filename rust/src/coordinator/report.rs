@@ -1,0 +1,137 @@
+//! Run reports: per-node transport statistics + workflow totals, the
+//! raw material for every table/figure bench.
+
+use std::time::Duration;
+
+use crate::error::{Result, WilkinsError};
+use crate::graph::WorkflowGraph;
+use crate::lowfive::VolStats;
+
+pub(super) struct RankOutcome {
+    pub node: usize,
+    pub stats: VolStats,
+    pub error: Option<String>,
+}
+
+/// Aggregated statistics of one task instance.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub name: String,
+    pub nprocs: usize,
+    pub files_served: u64,
+    pub serves_skipped: u64,
+    pub serves_suppressed: u64,
+    pub bytes_served: u64,
+    pub files_opened: u64,
+    pub bytes_read: u64,
+    /// Max across ranks (the critical-path wait).
+    pub serve_wait: Duration,
+    pub open_wait: Duration,
+}
+
+/// The result of a workflow run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub elapsed: Duration,
+    pub total_ranks: usize,
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+    pub nodes: Vec<NodeReport>,
+}
+
+impl RunReport {
+    pub fn node(&self, name: &str) -> Option<&NodeReport> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Pretty table for the CLI.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "workflow completed in {:.3}s  ({} ranks, {} msgs, {:.1} MiB sent)\n",
+            self.elapsed.as_secs_f64(),
+            self.total_ranks,
+            self.msgs_sent,
+            self.bytes_sent as f64 / (1024.0 * 1024.0)
+        );
+        s.push_str(&format!(
+            "{:<24} {:>6} {:>8} {:>8} {:>12} {:>8} {:>12} {:>10} {:>10}\n",
+            "task", "procs", "served", "skipped", "bytes_out", "opened", "bytes_in",
+            "serve_wait", "open_wait"
+        ));
+        for n in &self.nodes {
+            s.push_str(&format!(
+                "{:<24} {:>6} {:>8} {:>8} {:>12} {:>8} {:>12} {:>9.3}s {:>9.3}s\n",
+                n.name,
+                n.nprocs,
+                n.files_served,
+                n.serves_skipped,
+                n.bytes_served,
+                n.files_opened,
+                n.bytes_read,
+                n.serve_wait.as_secs_f64(),
+                n.open_wait.as_secs_f64()
+            ));
+        }
+        s
+    }
+}
+
+pub(super) fn build(
+    graph: &WorkflowGraph,
+    outcomes: Vec<RankOutcome>,
+    elapsed: Duration,
+    bytes_sent: u64,
+    msgs_sent: u64,
+) -> Result<RunReport> {
+    let errors: Vec<String> = outcomes
+        .iter()
+        .filter_map(|o| {
+            o.error
+                .as_ref()
+                .map(|e| format!("{}: {e}", graph.nodes[o.node].name))
+        })
+        .collect();
+    if !errors.is_empty() {
+        return Err(WilkinsError::Task(format!(
+            "{} rank(s) failed: {}",
+            errors.len(),
+            errors.join("; ")
+        )));
+    }
+    let mut nodes: Vec<NodeReport> = graph
+        .nodes
+        .iter()
+        .map(|n| NodeReport {
+            name: n.name.clone(),
+            nprocs: n.nprocs,
+            files_served: 0,
+            serves_skipped: 0,
+            serves_suppressed: 0,
+            bytes_served: 0,
+            files_opened: 0,
+            bytes_read: 0,
+            serve_wait: Duration::ZERO,
+            open_wait: Duration::ZERO,
+        })
+        .collect();
+    for o in outcomes {
+        let n = &mut nodes[o.node];
+        // files_served/opened are per-rank counters of the same events;
+        // report the max (rank counts agree on I/O ranks).
+        n.files_served = n.files_served.max(o.stats.files_served);
+        n.serves_skipped = n.serves_skipped.max(o.stats.serves_skipped);
+        n.serves_suppressed = n.serves_suppressed.max(o.stats.serves_suppressed);
+        n.files_opened = n.files_opened.max(o.stats.files_opened);
+        n.bytes_served += o.stats.bytes_served;
+        n.bytes_read += o.stats.bytes_read;
+        n.serve_wait = n.serve_wait.max(o.stats.serve_wait);
+        n.open_wait = n.open_wait.max(o.stats.open_wait);
+    }
+    Ok(RunReport {
+        elapsed,
+        total_ranks: graph.total_ranks,
+        bytes_sent,
+        msgs_sent,
+        nodes,
+    })
+}

@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the Wilkins workflow system.
+#[derive(Error, Debug)]
+pub enum WilkinsError {
+    /// YAML syntax errors from the in-repo parser.
+    #[error("yaml parse error at line {line}: {msg}")]
+    Yaml { line: usize, msg: String },
+
+    /// Workflow configuration is syntactically valid YAML but violates
+    /// the Wilkins schema (missing fields, bad values, ...).
+    #[error("workflow config error: {0}")]
+    Config(String),
+
+    /// Port matching produced an unusable graph (dangling inport, ...).
+    #[error("workflow graph error: {0}")]
+    Graph(String),
+
+    /// Virtual-MPI communicator misuse or teardown races.
+    #[error("comm error: {0}")]
+    Comm(String),
+
+    /// LowFive data-transport errors (unknown dataset, bad hyperslab...).
+    #[error("lowfive error: {0}")]
+    LowFive(String),
+
+    /// The producer closed the stream: no more files will arrive on
+    /// this channel. Consumers use this to terminate cleanly.
+    #[error("end of stream")]
+    EndOfStream,
+
+    /// Task-code registry / execution errors.
+    #[error("task error: {0}")]
+    Task(String),
+
+    /// PJRT runtime errors (artifact missing, shape mismatch, ...).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error(transparent)]
+    Xla(#[from] xla::Error),
+}
+
+pub type Result<T> = std::result::Result<T, WilkinsError>;

@@ -1,0 +1,94 @@
+//! Flow control strategies (paper Sec. 3.6, substrate S7).
+//!
+//! Coupled in situ tasks run concurrently; a slow consumer stalls its
+//! producer. Wilkins offers three strategies, selected per channel with
+//! the YAML `io_freq` field on the consumer inport:
+//!
+//! * **All** (`io_freq: 0|1` or absent) — serve every timestep; the
+//!   producer blocks until the consumer is done (the default).
+//! * **Some(N)** (`io_freq: N>1`) — serve every Nth timestep.
+//! * **Latest** (`io_freq: -1`) — serve only when a consumer request is
+//!   already pending; otherwise drop this timestep and move on.
+//!
+//! The decision is evaluated *per serve attempt* (once per producer
+//! timestep), inside `Vol::serve_file`, so it composes with custom I/O
+//! actions such as the Nyx double-close pattern (Sec. 4.2.2). For
+//! *Latest*, producer I/O rank 0 probes for pending requests and
+//! broadcasts the verdict over the I/O communicator so all writer
+//! ranks skip or serve in lockstep (divergent decisions would tear a
+//! timestep apart).
+
+use crate::error::{Result, WilkinsError};
+
+/// A channel's flow-control strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FlowControl {
+    /// Serve every timestep (producer waits for the consumer).
+    #[default]
+    All,
+    /// Serve every Nth timestep (N >= 2).
+    Some(u64),
+    /// Serve only when a consumer is already waiting.
+    Latest,
+}
+
+impl FlowControl {
+    /// Decode the YAML `io_freq` convention: N>1 => Some(N), 1 or 0 =>
+    /// All, -1 => Latest.
+    pub fn from_io_freq(freq: i64) -> Result<FlowControl> {
+        match freq {
+            0 | 1 => Ok(FlowControl::All),
+            -1 => Ok(FlowControl::Latest),
+            n if n > 1 => Ok(FlowControl::Some(n as u64)),
+            n => Err(WilkinsError::Config(format!(
+                "io_freq must be -1, 0, 1 or N>1; got {n}"
+            ))),
+        }
+    }
+
+    /// Count-based part of the decision (All/Some). Latest needs the
+    /// pending-request probe and is resolved by the Vol.
+    pub fn serves_attempt(&self, attempt: u64) -> bool {
+        match self {
+            FlowControl::All => true,
+            FlowControl::Some(n) => attempt % n == 0,
+            FlowControl::Latest => true, // refined by the probe
+        }
+    }
+}
+
+impl std::fmt::Display for FlowControl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FlowControl::All => write!(f, "all"),
+            FlowControl::Some(n) => write!(f, "some({n})"),
+            FlowControl::Latest => write!(f, "latest"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_freq_decoding() {
+        assert_eq!(FlowControl::from_io_freq(0).unwrap(), FlowControl::All);
+        assert_eq!(FlowControl::from_io_freq(1).unwrap(), FlowControl::All);
+        assert_eq!(FlowControl::from_io_freq(-1).unwrap(), FlowControl::Latest);
+        assert_eq!(FlowControl::from_io_freq(5).unwrap(), FlowControl::Some(5));
+        assert!(FlowControl::from_io_freq(-3).is_err());
+    }
+
+    #[test]
+    fn some_serves_every_nth() {
+        let f = FlowControl::Some(3);
+        let served: Vec<u64> = (1..=9).filter(|&a| f.serves_attempt(a)).collect();
+        assert_eq!(served, vec![3, 6, 9]);
+    }
+
+    #[test]
+    fn all_serves_everything() {
+        assert!((1..=10).all(|a| FlowControl::All.serves_attempt(a)));
+    }
+}

@@ -1,0 +1,280 @@
+//! Data-centric workflow graph construction (S3, paper Sec. 3.2).
+//!
+//! Users never list dependencies: Wilkins matches producer outports to
+//! consumer inports by filename/dataset (glob-aware), expands
+//! `taskCount` ensembles, links instance pairs round-robin (Fig. 3),
+//! and classifies the resulting topology. Any directed graph is
+//! accepted, including cycles.
+
+mod topology;
+
+pub use topology::Topology;
+
+use crate::config::{PortConfig, TaskConfig, WorkflowConfig};
+use crate::error::{Result, WilkinsError};
+use crate::flow::FlowControl;
+use crate::lowfive::{pattern_matches, ChannelMode};
+
+/// One runnable task instance (ensemble member).
+#[derive(Debug, Clone)]
+pub struct TaskInstance {
+    /// Index into `WorkflowConfig::tasks`.
+    pub task_idx: usize,
+    /// Ensemble instance number (0-based).
+    pub instance: usize,
+    /// Display name: `func` or `func[i]` for ensembles.
+    pub name: String,
+    /// First global rank of this instance's contiguous rank range.
+    pub first_rank: usize,
+    pub nprocs: usize,
+    pub nwriters: usize,
+}
+
+impl TaskInstance {
+    pub fn ranks(&self) -> std::ops::Range<usize> {
+        self.first_rank..self.first_rank + self.nprocs
+    }
+
+    /// Global ranks of the I/O (writer) subset.
+    pub fn io_ranks(&self) -> std::ops::Range<usize> {
+        self.first_rank..self.first_rank + self.nwriters
+    }
+}
+
+/// A matched producer→consumer communication channel.
+#[derive(Debug, Clone)]
+pub struct ChannelSpec {
+    /// Node indices into `WorkflowGraph::nodes`.
+    pub producer: usize,
+    pub consumer: usize,
+    /// Producer-side filename pattern (what file closes serve on).
+    pub out_pattern: String,
+    /// Consumer-side filename pattern (what opens request).
+    pub in_pattern: String,
+    /// Matched dataset name patterns.
+    pub dsets: Vec<String>,
+    pub mode: ChannelMode,
+    pub flow: FlowControl,
+}
+
+/// The expanded workflow graph.
+#[derive(Debug, Clone)]
+pub struct WorkflowGraph {
+    pub nodes: Vec<TaskInstance>,
+    pub channels: Vec<ChannelSpec>,
+    pub total_ranks: usize,
+}
+
+impl WorkflowGraph {
+    /// Build the graph from a validated config.
+    pub fn build(cfg: &WorkflowConfig) -> Result<WorkflowGraph> {
+        // 1. Expand ensembles into instances with contiguous ranks.
+        let mut nodes = Vec::new();
+        let mut next_rank = 0;
+        for (task_idx, t) in cfg.tasks.iter().enumerate() {
+            for instance in 0..t.task_count {
+                let name = if t.task_count == 1 {
+                    t.func.clone()
+                } else {
+                    format!("{}[{}]", t.func, instance)
+                };
+                nodes.push(TaskInstance {
+                    task_idx,
+                    instance,
+                    name,
+                    first_rank: next_rank,
+                    nprocs: t.nprocs,
+                    nwriters: t.writers(),
+                });
+                next_rank += t.nprocs;
+            }
+        }
+
+        // 2. Task-level port matching.
+        let mut channels = Vec::new();
+        for (pi, pt) in cfg.tasks.iter().enumerate() {
+            for (ci, ct) in cfg.tasks.iter().enumerate() {
+                for op in &pt.outports {
+                    for ip in &ct.inports {
+                        if let Some(link) = match_ports(pt, pi, op, ct, ci, ip)? {
+                            // 3. Round-robin ensemble linking (Fig. 3).
+                            let pn = pt.task_count;
+                            let cn = ct.task_count;
+                            for k in 0..pn.max(cn) {
+                                let pnode = node_index(cfg, pi, k % pn);
+                                let cnode = node_index(cfg, ci, k % cn);
+                                channels.push(ChannelSpec {
+                                    producer: pnode,
+                                    consumer: cnode,
+                                    out_pattern: link.out_pattern.clone(),
+                                    in_pattern: link.in_pattern.clone(),
+                                    dsets: link.dsets.clone(),
+                                    mode: link.mode,
+                                    flow: link.flow,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // 4. Every inport must have at least one producer.
+        for (ci, ct) in cfg.tasks.iter().enumerate() {
+            for ip in &ct.inports {
+                let fed = channels.iter().any(|ch| {
+                    nodes[ch.consumer].task_idx == ci && ch.in_pattern == ip.filename
+                });
+                if !fed {
+                    return Err(WilkinsError::Graph(format!(
+                        "inport {} of task {} matches no producer outport",
+                        ip.filename, ct.func
+                    )));
+                }
+            }
+        }
+
+        Ok(WorkflowGraph { nodes, channels, total_ranks: next_rank })
+    }
+
+    /// Which node owns a global rank?
+    pub fn node_of_rank(&self, rank: usize) -> Option<usize> {
+        self.nodes.iter().position(|n| n.ranks().contains(&rank))
+    }
+
+    /// Channels where `node` is the producer.
+    pub fn out_channels_of(&self, node: usize) -> Vec<usize> {
+        (0..self.channels.len())
+            .filter(|&i| self.channels[i].producer == node)
+            .collect()
+    }
+
+    /// Channels where `node` is the consumer.
+    pub fn in_channels_of(&self, node: usize) -> Vec<usize> {
+        (0..self.channels.len())
+            .filter(|&i| self.channels[i].consumer == node)
+            .collect()
+    }
+
+    /// Classify the instance-level topology (reporting / tests).
+    pub fn topology(&self) -> Topology {
+        topology::classify(self)
+    }
+
+    /// Human-readable summary (CLI `graph` command).
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "workflow: {} task instances, {} channels, {} ranks, topology {:?}\n",
+            self.nodes.len(),
+            self.channels.len(),
+            self.total_ranks,
+            self.topology()
+        ));
+        for n in &self.nodes {
+            s.push_str(&format!(
+                "  node {:<24} ranks {}..{} (writers {})\n",
+                n.name,
+                n.first_rank,
+                n.first_rank + n.nprocs,
+                n.nwriters
+            ));
+        }
+        for c in &self.channels {
+            s.push_str(&format!(
+                "  channel {} -> {}  file {}  dsets {:?}  {:?}  flow {}\n",
+                self.nodes[c.producer].name,
+                self.nodes[c.consumer].name,
+                c.in_pattern,
+                c.dsets,
+                c.mode,
+                c.flow
+            ));
+        }
+        s
+    }
+}
+
+struct Link {
+    out_pattern: String,
+    in_pattern: String,
+    dsets: Vec<String>,
+    mode: ChannelMode,
+    flow: FlowControl,
+}
+
+/// Do an outport and an inport match? Filenames must be compatible and
+/// at least one dataset must match. All matched datasets must agree on
+/// the transport mode.
+fn match_ports(
+    pt: &TaskConfig,
+    _pi: usize,
+    op: &PortConfig,
+    ct: &TaskConfig,
+    _ci: usize,
+    ip: &PortConfig,
+) -> Result<Option<Link>> {
+    if !patterns_compatible(&op.filename, &ip.filename) {
+        return Ok(None);
+    }
+    let mut dsets = Vec::new();
+    let mut mode: Option<ChannelMode> = None;
+    for od in &op.dsets {
+        for id in &ip.dsets {
+            if !patterns_compatible(&od.name, &id.name) {
+                continue;
+            }
+            // Consumer side selects the transport; both sides must not
+            // contradict (paper sets the flags identically on both).
+            let m = if id.memory {
+                ChannelMode::Memory
+            } else {
+                ChannelMode::File
+            };
+            let pm = if od.memory { ChannelMode::Memory } else { ChannelMode::File };
+            if pm != m {
+                return Err(WilkinsError::Graph(format!(
+                    "transport mismatch for dset {} between {} and {}",
+                    id.name, pt.func, ct.func
+                )));
+            }
+            if let Some(prev) = mode {
+                if prev != m {
+                    return Err(WilkinsError::Graph(format!(
+                        "mixed transports within one channel ({} -> {})",
+                        pt.func, ct.func
+                    )));
+                }
+            }
+            mode = Some(m);
+            dsets.push(id.name.clone());
+        }
+    }
+    match mode {
+        None => Ok(None),
+        Some(mode) => Ok(Some(Link {
+            out_pattern: op.filename.clone(),
+            in_pattern: ip.filename.clone(),
+            dsets,
+            mode,
+            flow: ip.flow,
+        })),
+    }
+}
+
+/// Two filename/dataset patterns are compatible if either matches the
+/// other (both may be globs; identical globs are compatible).
+pub fn patterns_compatible(a: &str, b: &str) -> bool {
+    pattern_matches(a, b) || pattern_matches(b, a)
+}
+
+fn node_index(cfg: &WorkflowConfig, task_idx: usize, instance: usize) -> usize {
+    cfg.tasks[..task_idx]
+        .iter()
+        .map(|t| t.task_count)
+        .sum::<usize>()
+        + instance
+}
+
+#[cfg(test)]
+mod tests;

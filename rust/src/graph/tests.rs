@@ -1,0 +1,183 @@
+//! Graph construction tests over the paper's listings and the three
+//! ensemble topologies of the synthetic experiments (Figs. 6-9).
+
+use crate::config::tests::{LISTING1, LISTING2, LISTING4, LISTING6};
+use crate::config::WorkflowConfig;
+use crate::flow::FlowControl;
+use crate::lowfive::ChannelMode;
+
+use super::{patterns_compatible, Topology, WorkflowGraph};
+
+fn build(src: &str) -> WorkflowGraph {
+    WorkflowGraph::build(&WorkflowConfig::from_yaml_str(src).unwrap()).unwrap()
+}
+
+#[test]
+fn listing1_two_channels() {
+    let g = build(LISTING1);
+    assert_eq!(g.nodes.len(), 3);
+    assert_eq!(g.channels.len(), 2);
+    // producer -> consumer1 carries the grid, -> consumer2 particles.
+    let c1 = &g.channels[0];
+    assert_eq!(g.nodes[c1.producer].name, "producer");
+    assert_eq!(g.nodes[c1.consumer].name, "consumer1");
+    assert_eq!(c1.dsets, vec!["/group1/grid"]);
+    let c2 = &g.channels[1];
+    assert_eq!(g.nodes[c2.consumer].name, "consumer2");
+    assert_eq!(c2.dsets, vec!["/group1/particles"]);
+    assert_eq!(c1.mode, ChannelMode::Memory);
+    assert_eq!(g.topology(), Topology::FanOut);
+    assert_eq!(g.total_ranks, 12);
+}
+
+#[test]
+fn rank_assignment_contiguous() {
+    let g = build(LISTING1);
+    assert_eq!(g.nodes[0].ranks(), 0..4);
+    assert_eq!(g.nodes[1].ranks(), 4..9);
+    assert_eq!(g.nodes[2].ranks(), 9..12);
+    assert_eq!(g.node_of_rank(0), Some(0));
+    assert_eq!(g.node_of_rank(8), Some(1));
+    assert_eq!(g.node_of_rank(11), Some(2));
+    assert_eq!(g.node_of_rank(12), None);
+}
+
+#[test]
+fn listing2_round_robin_fan_in() {
+    let g = build(LISTING2);
+    assert_eq!(g.nodes.len(), 6); // 4 producers + 2 consumers
+    assert_eq!(g.channels.len(), 4);
+    // Figure 3 pairing: p0->c0, p1->c1, p2->c0, p3->c1.
+    let pairs: Vec<(usize, usize)> = g
+        .channels
+        .iter()
+        .map(|c| (g.nodes[c.producer].instance, g.nodes[c.consumer].instance))
+        .collect();
+    assert_eq!(pairs, vec![(0, 0), (1, 1), (2, 0), (3, 1)]);
+    assert_eq!(g.topology(), Topology::General);
+}
+
+#[test]
+fn listing4_nxn_ensembles() {
+    let g = build(LISTING4);
+    assert_eq!(g.nodes.len(), 128);
+    assert_eq!(g.channels.len(), 64);
+    // NxN: instance i -> instance i.
+    for c in &g.channels {
+        assert_eq!(g.nodes[c.producer].instance, g.nodes[c.consumer].instance);
+    }
+    assert_eq!(g.topology(), Topology::NxN);
+    // Subset writers recorded on the node.
+    assert_eq!(g.nodes[0].nwriters, 1);
+    assert_eq!(g.nodes[0].io_ranks(), 0..1);
+}
+
+#[test]
+fn listing6_globs_and_flow() {
+    let g = build(LISTING6);
+    assert_eq!(g.channels.len(), 1);
+    let c = &g.channels[0];
+    assert_eq!(c.in_pattern, "plt*.h5");
+    assert_eq!(c.flow, FlowControl::Some(2));
+    assert_eq!(c.dsets, vec!["/level_0/density"]);
+    assert_eq!(g.topology(), Topology::Pipeline);
+}
+
+#[test]
+fn fan_out_topology() {
+    let g = build(
+        "tasks:\n  - func: p\n    nprocs: 2\n    outports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n  - func: c\n    taskCount: 4\n    nprocs: 2\n    inports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n",
+    );
+    assert_eq!(g.channels.len(), 4);
+    assert_eq!(g.topology(), Topology::FanOut);
+    // All channels share the same producer node.
+    assert!(g.channels.iter().all(|c| c.producer == 0));
+}
+
+#[test]
+fn fan_in_topology() {
+    let g = build(
+        "tasks:\n  - func: p\n    taskCount: 4\n    nprocs: 2\n    outports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n  - func: c\n    nprocs: 2\n    inports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n",
+    );
+    assert_eq!(g.channels.len(), 4);
+    assert_eq!(g.topology(), Topology::FanIn);
+    assert!(g.channels.iter().all(|c| c.consumer == 4));
+    assert_eq!(g.in_channels_of(4).len(), 4);
+}
+
+#[test]
+fn pipeline_with_intermediate() {
+    let g = build(
+        "tasks:\n  - func: sim\n    nprocs: 2\n    outports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n  - func: filter\n    nprocs: 2\n    inports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n    outports:\n      - filename: b.h5\n        dsets:\n          - name: /d\n  - func: viz\n    nprocs: 1\n    inports:\n      - filename: b.h5\n        dsets:\n          - name: /d\n",
+    );
+    assert_eq!(g.channels.len(), 2);
+    assert_eq!(g.topology(), Topology::Pipeline);
+}
+
+#[test]
+fn cycle_detected() {
+    let g = build(
+        "tasks:\n  - func: sim\n    nprocs: 1\n    inports:\n      - filename: steer.h5\n        dsets:\n          - name: /d\n    outports:\n      - filename: out.h5\n        dsets:\n          - name: /d\n  - func: steer\n    nprocs: 1\n    inports:\n      - filename: out.h5\n        dsets:\n          - name: /d\n    outports:\n      - filename: steer.h5\n        dsets:\n          - name: /d\n",
+    );
+    assert_eq!(g.topology(), Topology::Cyclic);
+}
+
+#[test]
+fn dangling_inport_rejected() {
+    let res = WorkflowGraph::build(
+        &WorkflowConfig::from_yaml_str(
+            "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: MISSING.h5\n        dsets:\n          - name: /d\n",
+        )
+        .unwrap(),
+    );
+    assert!(res.is_err());
+}
+
+#[test]
+fn transport_mismatch_rejected() {
+    let res = WorkflowGraph::build(
+        &WorkflowConfig::from_yaml_str(
+            "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n            memory: 1\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n            file: 1\n            memory: 0\n",
+        )
+        .unwrap(),
+    );
+    assert!(res.is_err());
+}
+
+#[test]
+fn no_match_on_different_datasets() {
+    let res = WorkflowGraph::build(
+        &WorkflowConfig::from_yaml_str(
+            "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: a.h5\n        dsets:\n          - name: /x\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: a.h5\n        dsets:\n          - name: /y\n",
+        )
+        .unwrap(),
+    );
+    // Filenames match but no dataset does -> dangling inport.
+    assert!(res.is_err());
+}
+
+#[test]
+fn glob_dataset_matching() {
+    let g = build(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: dump.h5\n        dsets:\n          - name: /particles/position\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: dump.h5\n        dsets:\n          - name: /particles/*\n",
+    );
+    assert_eq!(g.channels.len(), 1);
+    assert_eq!(g.channels[0].dsets, vec!["/particles/*"]);
+}
+
+#[test]
+fn pattern_compat_is_symmetric() {
+    assert!(patterns_compatible("plt*.h5", "plt*.h5"));
+    assert!(patterns_compatible("outfile.h5", "*.h5"));
+    assert!(patterns_compatible("*.h5", "outfile.h5"));
+    assert!(!patterns_compatible("a.h5", "b.h5"));
+}
+
+#[test]
+fn describe_mentions_nodes_and_channels() {
+    let g = build(LISTING1);
+    let d = g.describe();
+    assert!(d.contains("producer"));
+    assert!(d.contains("consumer2"));
+    assert!(d.contains("channel"));
+}

@@ -1,0 +1,94 @@
+//! Instance-level topology classification: the shapes named by the
+//! paper (pipeline, fan-in, fan-out, NxN/ensembles, cycles).
+
+use std::collections::HashSet;
+
+use super::WorkflowGraph;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Single node, no channels.
+    Single,
+    /// A linear chain of nodes.
+    Pipeline,
+    /// One producer feeding many consumers.
+    FanOut,
+    /// Many producers feeding one consumer.
+    FanIn,
+    /// Matched producer/consumer instance pairs (1:1 links).
+    NxN,
+    /// Contains a directed cycle (steering workflows).
+    Cyclic,
+    /// Anything else (mixed/general DAG).
+    General,
+}
+
+pub fn classify(g: &WorkflowGraph) -> Topology {
+    let n = g.nodes.len();
+    // Unique node-level edges.
+    let edges: HashSet<(usize, usize)> = g
+        .channels
+        .iter()
+        .map(|c| (c.producer, c.consumer))
+        .collect();
+    if edges.is_empty() {
+        return if n <= 1 { Topology::Single } else { Topology::General };
+    }
+    if has_cycle(n, &edges) {
+        return Topology::Cyclic;
+    }
+    let mut outdeg = vec![0usize; n];
+    let mut indeg = vec![0usize; n];
+    for &(p, c) in &edges {
+        outdeg[p] += 1;
+        indeg[c] += 1;
+    }
+    let producers: Vec<usize> = (0..n).filter(|&i| outdeg[i] > 0 && indeg[i] == 0).collect();
+    let consumers: Vec<usize> = (0..n).filter(|&i| indeg[i] > 0 && outdeg[i] == 0).collect();
+
+    // NxN: every node has degree exactly 1 and edges form a matching.
+    if edges.len() * 2 == n
+        && (0..n).all(|i| outdeg[i] + indeg[i] == 1)
+    {
+        return if edges.len() == 1 { Topology::Pipeline } else { Topology::NxN };
+    }
+    // Pipeline: a single chain.
+    if edges.len() == n - 1
+        && producers.len() == 1
+        && consumers.len() == 1
+        && (0..n).all(|i| outdeg[i] <= 1 && indeg[i] <= 1)
+    {
+        return Topology::Pipeline;
+    }
+    // Fan-out: one source, many sinks, edges only source->sink.
+    if producers.len() == 1 && edges.iter().all(|&(p, _)| p == producers[0]) {
+        return Topology::FanOut;
+    }
+    // Fan-in: many sources, one sink.
+    if consumers.len() == 1 && edges.iter().all(|&(_, c)| c == consumers[0]) {
+        return Topology::FanIn;
+    }
+    Topology::General
+}
+
+fn has_cycle(n: usize, edges: &HashSet<(usize, usize)>) -> bool {
+    // Kahn's algorithm: cycle iff not all nodes can be peeled.
+    let mut indeg = vec![0usize; n];
+    for &(_, c) in edges {
+        indeg[c] += 1;
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut seen = 0;
+    while let Some(u) = queue.pop() {
+        seen += 1;
+        for &(p, c) in edges {
+            if p == u {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+    }
+    seen != n
+}

@@ -1,0 +1,62 @@
+//! The per-rank driver: launches a task code with the right lifecycle
+//! for its role and consumer kind (Sec. 3.5.1), then finalizes the
+//! transport so coupled tasks shut down cleanly.
+
+use std::sync::Arc;
+
+use crate::config::ConsumerKind;
+use crate::error::{Result, WilkinsError};
+
+use super::{TaskCode, TaskContext};
+
+/// A node's role, derived from its ports by the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Producer,
+    Consumer,
+    /// Both producer and consumer (pipeline middle stage).
+    Intermediate,
+}
+
+/// Run one rank of a task to completion.
+///
+/// * Producers / intermediates / stateful consumers run once; the code
+///   itself loops over timesteps.
+/// * Stateless consumers are relaunched per incoming file: the driver
+///   pre-opens the next served file (blocking on the producer query
+///   protocol) and launches the code only when data exists, exactly
+///   like Wilkins' "launched as many times as there are incoming data".
+///
+/// Finalization always runs, even on error paths that leave coupled
+/// tasks waiting — otherwise a failing consumer would deadlock its
+/// producer instead of surfacing the error.
+pub fn drive_rank(
+    code: Arc<dyn TaskCode>,
+    role: Role,
+    kind: ConsumerKind,
+    ctx: &mut TaskContext,
+) -> Result<()> {
+    let result = run_body(&code, role, kind, ctx);
+    let fin_p = ctx.vol.finalize_producer();
+    let fin_c = ctx.vol.finalize_consumer();
+    result.and(fin_p).and(fin_c)
+}
+
+fn run_body(
+    code: &Arc<dyn TaskCode>,
+    role: Role,
+    kind: ConsumerKind,
+    ctx: &mut TaskContext,
+) -> Result<()> {
+    let stateless_consumer = role == Role::Consumer && kind == ConsumerKind::Stateless;
+    if !stateless_consumer {
+        return code.run(ctx);
+    }
+    loop {
+        match ctx.vol.preopen_next() {
+            Ok(_) => code.run(ctx)?,
+            Err(WilkinsError::EndOfStream) => return Ok(()),
+            Err(e) => return Err(e),
+        }
+    }
+}

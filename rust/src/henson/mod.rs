@@ -1,0 +1,225 @@
+//! Henson-like execution model (S6, paper Sec. 3.5).
+//!
+//! In real Wilkins, task codes are compiled as shared objects and
+//! dlopen'd by Henson, which runs them as cooperative coroutines under
+//! a PMPI shim that swaps MPI_COMM_WORLD for a restricted world. Our
+//! equivalent: task codes are [`TaskCode`] trait objects resolved by
+//! name from a [`Registry`] (the dlopen analogue), each rank runs on
+//! its own thread with a restricted-world [`Comm`], and the only
+//! handles a task sees are its communicator and the HDF5-like Vol —
+//! nothing workflow-specific, preserving "standalone code runs
+//! unmodified" in spirit.
+
+mod execution;
+
+pub use execution::{drive_rank, Role};
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::Comm;
+use crate::configyaml::Yaml;
+use crate::error::{Result, WilkinsError};
+use crate::lowfive::Vol;
+use crate::metrics::Recorder;
+use crate::runtime::EngineHandle;
+
+/// Everything a task code rank gets to see.
+pub struct TaskContext {
+    /// Restricted-world communicator (the task's MPI_COMM_WORLD).
+    pub comm: Comm,
+    /// The LowFive plugin handle (HDF5 stand-in).
+    pub vol: Vol,
+    /// Ensemble instance index of this task.
+    pub instance: usize,
+    /// Number of writer ranks (subset writers, Sec. 3.2.2); equals
+    /// `size()` unless the YAML set `nwriters`/`io_proc`.
+    pub nwriters: usize,
+    /// Node name, e.g. `freeze[3]`.
+    pub name: String,
+    /// Free-form `params:` from the YAML.
+    pub params: BTreeMap<String, Yaml>,
+    /// AOT compute engine (None when the workflow has no artifacts).
+    pub engine: Option<EngineHandle>,
+    /// Gantt recorder.
+    pub recorder: Option<Arc<Recorder>>,
+    /// Global rank (for metrics labels).
+    pub global_rank: usize,
+    /// Wall-seconds per emulated paper-second (sleep scaling).
+    pub time_scale: f64,
+}
+
+impl TaskContext {
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    pub fn size(&self) -> usize {
+        self.comm.size()
+    }
+
+    pub fn param_i64(&self, key: &str, default: i64) -> i64 {
+        self.params.get(key).and_then(Yaml::as_i64).unwrap_or(default)
+    }
+
+    pub fn param_f64(&self, key: &str, default: f64) -> f64 {
+        self.params.get(key).and_then(Yaml::as_f64).unwrap_or(default)
+    }
+
+    pub fn param_str(&self, key: &str, default: &str) -> String {
+        self.params
+            .get(key)
+            .and_then(Yaml::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// The AOT engine, erroring if the workflow was built without one.
+    pub fn engine(&self) -> Result<&EngineHandle> {
+        self.engine
+            .as_ref()
+            .ok_or_else(|| WilkinsError::Task("no AOT engine configured".into()))
+    }
+
+    /// Record a closure as a compute span.
+    pub fn compute<T>(&self, label: &str, f: impl FnOnce() -> T) -> T {
+        match &self.recorder {
+            Some(rec) => rec.compute(self.global_rank, label, f),
+            None => f(),
+        }
+    }
+
+    /// Emulate `paper_secs` of computation by sleeping the scaled
+    /// duration (the synthetic flow-control experiments).
+    pub fn sleep_compute(&self, label: &str, paper_secs: f64) {
+        let dur = Duration::from_secs_f64(paper_secs * self.time_scale);
+        self.compute(label, || std::thread::sleep(dur));
+    }
+}
+
+/// A task code: the analogue of one shared-object user program. `run`
+/// is invoked SPMD on every rank of the task with that rank's context.
+pub trait TaskCode: Send + Sync {
+    fn run(&self, ctx: &mut TaskContext) -> Result<()>;
+}
+
+impl<F> TaskCode for F
+where
+    F: Fn(&mut TaskContext) -> Result<()> + Send + Sync,
+{
+    fn run(&self, ctx: &mut TaskContext) -> Result<()> {
+        self(ctx)
+    }
+}
+
+/// Task-code registry: name -> code (the dlopen/dlsym analogue).
+#[derive(Default, Clone)]
+pub struct Registry {
+    map: HashMap<String, Arc<dyn TaskCode>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn register(&mut self, name: &str, code: Arc<dyn TaskCode>) {
+        self.map.insert(name.to_string(), code);
+    }
+
+    pub fn register_fn<F>(&mut self, name: &str, f: F)
+    where
+        F: Fn(&mut TaskContext) -> Result<()> + Send + Sync + 'static,
+    {
+        self.register(name, Arc::new(f));
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<dyn TaskCode>> {
+        self.map.get(name).cloned().ok_or_else(|| {
+            WilkinsError::Task(format!(
+                "task code {name:?} not registered (known: {:?})",
+                self.names()
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.map.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::lowfive::Vol;
+
+    fn ctx_with_params(yaml_params: &str) -> TaskContext {
+        let doc = crate::configyaml::parse(yaml_params).unwrap();
+        let mut params = BTreeMap::new();
+        if let Some(m) = doc.as_map() {
+            for (k, v) in m {
+                params.insert(k.clone(), v.clone());
+            }
+        }
+        let world = World::new(1);
+        let comm = world.comm_world(0);
+        TaskContext {
+            vol: Vol::new(comm.clone(), std::env::temp_dir()),
+            comm,
+            instance: 2,
+            nwriters: 1,
+            name: "t".into(),
+            params,
+            engine: None,
+            recorder: None,
+            global_rank: 0,
+            time_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn params_typed_access_with_defaults() {
+        let ctx = ctx_with_params("steps: 7\nrate: 2.5\nmode: fast\n");
+        assert_eq!(ctx.param_i64("steps", 1), 7);
+        assert_eq!(ctx.param_i64("missing", 42), 42);
+        assert!((ctx.param_f64("rate", 0.0) - 2.5).abs() < 1e-12);
+        assert!((ctx.param_f64("steps", 0.0) - 7.0).abs() < 1e-12);
+        assert_eq!(ctx.param_str("mode", "slow"), "fast");
+        assert_eq!(ctx.param_str("missing", "slow"), "slow");
+    }
+
+    #[test]
+    fn engine_absent_is_a_clean_error() {
+        let ctx = ctx_with_params("");
+        assert!(ctx.engine().is_err());
+    }
+
+    #[test]
+    fn registry_resolution_and_errors() {
+        let mut r = Registry::new();
+        r.register_fn("alpha", |_ctx| Ok(()));
+        r.register_fn("beta", |_ctx| Ok(()));
+        assert!(r.get("alpha").is_ok());
+        assert_eq!(r.names(), vec!["alpha".to_string(), "beta".to_string()]);
+        let err = match r.get("gamma") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("gamma should not resolve"),
+        };
+        assert!(err.contains("gamma") && err.contains("alpha"), "{err}");
+    }
+
+    #[test]
+    fn compute_records_span_when_recorder_attached() {
+        let mut ctx = ctx_with_params("");
+        let rec = std::sync::Arc::new(crate::metrics::Recorder::new());
+        ctx.recorder = Some(std::sync::Arc::clone(&rec));
+        let out = ctx.compute("work", || 5);
+        assert_eq!(out, 5);
+        assert_eq!(rec.spans().len(), 1);
+        assert_eq!(rec.spans()[0].label, "work");
+    }
+}

@@ -1,0 +1,36 @@
+//! Wilkins: HPC In Situ Workflows Made Easy — a Rust + JAX + Pallas
+//! reproduction of the paper's workflow system.
+//!
+//! Layering (see DESIGN.md):
+//! * [`coordinator`] — Wilkins-master: the user-facing workflow driver.
+//! * [`config`] / [`configyaml`] / [`graph`] — the data-centric YAML
+//!   interface and its expansion into a task/channel graph.
+//! * [`lowfive`] / [`flow`] — the HDF5-like transport with M×N
+//!   redistribution, callbacks and flow control.
+//! * [`comm`] / [`henson`] — the virtual-MPI substrate and the
+//!   Henson-like execution model.
+//! * [`runtime`] — PJRT engine executing AOT-compiled JAX/Pallas
+//!   payloads (`artifacts/*.hlo.txt`).
+//! * [`tasks`] / [`actions`] — built-in task codes and custom actions.
+//! * [`metrics`] — Gantt tracing and per-run statistics.
+
+pub mod actions;
+pub mod baseline;
+pub mod bench_util;
+pub mod comm;
+pub mod config;
+pub mod configyaml;
+pub mod coordinator;
+pub mod error;
+pub mod flow;
+pub mod graph;
+pub mod henson;
+pub mod lowfive;
+pub mod metrics;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod sim;
+pub mod tasks;
+
+pub use coordinator::{RunReport, Wilkins};
+pub use error::{Result, WilkinsError};

@@ -1,0 +1,214 @@
+//! File-mode transport: the "traditional HDF5 files" path (YAML
+//! `file: 1`). Producer I/O rank 0 writes one self-describing binary
+//! file per close; consumers poll the workdir for a version they have
+//! not consumed yet. An `.eof` marker ends the stream.
+//!
+//! The same encoding doubles as the payload of `Vol::broadcast_files`.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::comm::wire::{Reader, Writer};
+use crate::error::{Result, WilkinsError};
+
+use super::hyperslab::Hyperslab;
+use super::model::{AttrValue, DatasetMeta, H5File, OwnedBlock};
+use super::pattern_matches;
+
+const MAGIC: &[u8; 4] = b"WLF5";
+
+/// Encode a set of files (used for disk files and broadcast_files).
+pub fn encode_files(files: &HashMap<String, H5File>) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u64(files.len() as u64);
+    let mut names: Vec<&String> = files.keys().collect();
+    names.sort();
+    for name in names {
+        let f = &files[name];
+        w.put_str(name);
+        w.put_u64(f.attrs.len() as u64);
+        for (k, v) in &f.attrs {
+            w.put_str(k);
+            v.encode(&mut w);
+        }
+        w.put_u64(f.datasets.len() as u64);
+        for d in f.datasets.values() {
+            d.meta.encode(&mut w);
+            w.put_u64(d.blocks.len() as u64);
+            for b in &d.blocks {
+                b.slab.encode(&mut w);
+                w.put_bytes(&b.data);
+            }
+        }
+    }
+    w.into_vec()
+}
+
+pub fn decode_files(bytes: &[u8]) -> Result<HashMap<String, H5File>> {
+    let mut r = Reader::new(bytes);
+    let nfiles = r.get_u64()? as usize;
+    let mut out = HashMap::with_capacity(nfiles);
+    for _ in 0..nfiles {
+        let name = r.get_str()?;
+        let mut f = H5File::new(&name);
+        let nattrs = r.get_u64()? as usize;
+        for _ in 0..nattrs {
+            let k = r.get_str()?;
+            f.attrs.insert(k, AttrValue::decode(&mut r)?);
+        }
+        let nds = r.get_u64()? as usize;
+        for _ in 0..nds {
+            let meta = DatasetMeta::decode(&mut r)?;
+            f.create_dataset(&meta.name.clone(), meta.dtype, &meta.dims)?;
+            let nblocks = r.get_u64()? as usize;
+            let d = f.dataset_mut(&meta.name)?;
+            for _ in 0..nblocks {
+                let slab = Hyperslab::decode(&mut r)?;
+                let data = r.get_bytes()?.to_vec();
+                d.blocks.push(OwnedBlock { slab, data });
+            }
+        }
+        out.insert(name, f);
+    }
+    Ok(out)
+}
+
+/// Merge `src` into `dst`: union of attrs, datasets and blocks.
+pub fn merge_file(dst: &mut H5File, src: H5File) {
+    for (k, v) in src.attrs {
+        dst.attrs.entry(k).or_insert(v);
+    }
+    for (name, d) in src.datasets {
+        match dst.datasets.get_mut(&name) {
+            Some(existing) => existing.blocks.extend(d.blocks),
+            None => {
+                dst.datasets.insert(name, d);
+            }
+        }
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
+        .collect()
+}
+
+fn disk_path(workdir: &Path, name: &str, version: u64) -> PathBuf {
+    workdir.join(format!("{}.v{version}.l5", sanitize(name)))
+}
+
+fn eof_path(workdir: &Path, pattern: &str) -> PathBuf {
+    workdir.join(format!("{}.eof", sanitize(pattern)))
+}
+
+/// Write one versioned disk file atomically (tmp + rename).
+pub fn write_file(workdir: &Path, file: &H5File, version: u64) -> Result<()> {
+    fs::create_dir_all(workdir)?;
+    let mut w = Writer::new();
+    w.put_u64(version);
+    w.put_str(&file.name);
+    let body = encode_files(&HashMap::from([(file.name.clone(), file.clone())]));
+    w.put_bytes(&body);
+    let final_path = disk_path(workdir, &file.name, version);
+    let tmp = final_path.with_extension("tmp");
+    let mut payload = MAGIC.to_vec();
+    payload.extend_from_slice(&w.into_vec());
+    fs::write(&tmp, &payload)?;
+    fs::rename(&tmp, &final_path)?;
+    Ok(())
+}
+
+/// Mark the stream for `pattern` finished.
+pub fn write_eof(workdir: &Path, pattern: &str) -> Result<()> {
+    fs::create_dir_all(workdir)?;
+    fs::write(eof_path(workdir, pattern), b"eof")?;
+    Ok(())
+}
+
+fn read_disk_file(path: &Path) -> Result<(String, u64, H5File)> {
+    let bytes = fs::read(path)?;
+    if bytes.len() < 4 || &bytes[..4] != MAGIC {
+        return Err(WilkinsError::LowFive(format!(
+            "bad magic in {}",
+            path.display()
+        )));
+    }
+    let mut r = Reader::new(&bytes[4..]);
+    let version = r.get_u64()?;
+    let name = r.get_str()?;
+    let body = r.get_bytes()?;
+    let files = decode_files(body)?;
+    let file = files
+        .into_iter()
+        .next()
+        .map(|(_, f)| f)
+        .ok_or_else(|| WilkinsError::LowFive("empty disk file".into()))?;
+    Ok((name, version, file))
+}
+
+/// Poll `workdir` for a file whose embedded name matches `pattern` and
+/// whose version is >= `min_version`. Returns the lowest such version
+/// (preserving timestep order), or None once the EOF marker exists and
+/// nothing newer is available.
+pub fn poll_file(
+    workdir: &Path,
+    pattern: &str,
+    min_version: u64,
+    deadline: Instant,
+) -> Result<Option<(H5File, u64)>> {
+    loop {
+        let mut best: Option<(u64, PathBuf)> = None;
+        if workdir.is_dir() {
+            for entry in fs::read_dir(workdir)? {
+                let path = entry?.path();
+                let fname = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+                if !fname.ends_with(".l5") {
+                    continue;
+                }
+                if let Ok((name, version, _)) = read_header(&path) {
+                    if version >= min_version && pattern_matches(pattern, &name) {
+                        if best.as_ref().map_or(true, |(v, _)| version < *v) {
+                            best = Some((version, path));
+                        }
+                    }
+                }
+            }
+        }
+        if let Some((_, path)) = best {
+            let (_, version, file) = read_disk_file(&path)?;
+            return Ok(Some((file, version)));
+        }
+        if eof_path(workdir, pattern).exists() {
+            return Ok(None);
+        }
+        if Instant::now() >= deadline {
+            return Err(WilkinsError::LowFive(format!(
+                "timed out polling for {pattern} (version >= {min_version})"
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Cheap header-only read (version + embedded name).
+fn read_header(path: &Path) -> Result<(String, u64, ())> {
+    use std::io::Read;
+    let mut f = fs::File::open(path)?;
+    let mut head = [0u8; 4 + 8];
+    f.read_exact(&mut head)?;
+    if &head[..4] != MAGIC {
+        return Err(WilkinsError::LowFive("bad magic".into()));
+    }
+    let version = u64::from_le_bytes(head[4..12].try_into().unwrap());
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb)?;
+    let nlen = u64::from_le_bytes(lenb) as usize;
+    let mut nameb = vec![0u8; nlen];
+    f.read_exact(&mut nameb)?;
+    let name = String::from_utf8(nameb)
+        .map_err(|e| WilkinsError::LowFive(format!("bad name: {e}")))?;
+    Ok((name, version, ()))
+}

@@ -1,0 +1,322 @@
+//! Hyperslab (block selection) algebra: the heart of LowFive's M-to-N
+//! data redistribution. A hyperslab is an axis-aligned box — `offset` +
+//! `count` per dimension — selecting a region of a dataset.
+//!
+//! Redistribution never materialises index lists: producer/consumer
+//! block pairs exchange only the *intersection boxes*, and
+//! [`copy_region`] moves bytes with contiguous innermost runs
+//! (memcpy-speed for the common row-major decompositions).
+
+use crate::comm::wire::{Reader, Writer};
+use crate::error::Result;
+
+/// An axis-aligned block selection of an n-dimensional dataset.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Hyperslab {
+    pub offset: Vec<u64>,
+    pub count: Vec<u64>,
+}
+
+impl Hyperslab {
+    pub fn new(offset: &[u64], count: &[u64]) -> Hyperslab {
+        assert_eq!(offset.len(), count.len(), "offset/count rank mismatch");
+        Hyperslab { offset: offset.to_vec(), count: count.to_vec() }
+    }
+
+    /// The whole of a dataset with the given dims.
+    pub fn whole(dims: &[u64]) -> Hyperslab {
+        Hyperslab { offset: vec![0; dims.len()], count: dims.to_vec() }
+    }
+
+    /// 1-D convenience.
+    pub fn range1d(offset: u64, count: u64) -> Hyperslab {
+        Hyperslab { offset: vec![offset], count: vec![count] }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.offset.len()
+    }
+
+    pub fn element_count(&self) -> u64 {
+        self.count.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count.iter().any(|&c| c == 0)
+    }
+
+    /// Does this slab fit inside a dataset of the given dims?
+    pub fn fits_within(&self, dims: &[u64]) -> bool {
+        self.dims() == dims.len()
+            && self
+                .offset
+                .iter()
+                .zip(&self.count)
+                .zip(dims)
+                .all(|((&o, &c), &d)| o + c <= d)
+    }
+
+    /// Box intersection; None when empty.
+    pub fn intersect(&self, other: &Hyperslab) -> Option<Hyperslab> {
+        if self.dims() != other.dims() {
+            return None;
+        }
+        let mut offset = Vec::with_capacity(self.dims());
+        let mut count = Vec::with_capacity(self.dims());
+        for d in 0..self.dims() {
+            let lo = self.offset[d].max(other.offset[d]);
+            let hi = (self.offset[d] + self.count[d]).min(other.offset[d] + other.count[d]);
+            if lo >= hi {
+                return None;
+            }
+            offset.push(lo);
+            count.push(hi - lo);
+        }
+        Some(Hyperslab { offset, count })
+    }
+
+    /// Does `other` overlap this slab?
+    pub fn overlaps(&self, other: &Hyperslab) -> bool {
+        self.intersect(other).is_some()
+    }
+
+    /// Row-major strides (in elements) for a buffer shaped like `self`.
+    fn strides(&self) -> Vec<u64> {
+        let mut s = vec![1u64; self.dims()];
+        for d in (0..self.dims().saturating_sub(1)).rev() {
+            s[d] = s[d + 1] * self.count[d + 1];
+        }
+        s
+    }
+
+    /// Element index within this slab's row-major buffer of the global
+    /// coordinate `coord` (must lie inside the slab).
+    fn element_index(&self, coord: &[u64], strides: &[u64]) -> u64 {
+        coord
+            .iter()
+            .zip(&self.offset)
+            .zip(strides)
+            .map(|((&c, &o), &s)| (c - o) * s)
+            .sum()
+    }
+
+    pub fn encode(&self, w: &mut Writer) {
+        w.put_u64_slice(&self.offset);
+        w.put_u64_slice(&self.count);
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<Hyperslab> {
+        let offset = r.get_u64_vec()?;
+        let count = r.get_u64_vec()?;
+        Ok(Hyperslab { offset, count })
+    }
+}
+
+/// Copy the elements of `region` from `src_slab`'s buffer into
+/// `dst_slab`'s buffer. `region` must be contained in both slabs.
+/// Buffers are row-major over their slab's `count`; `esize` is the
+/// element size in bytes. Rows of the innermost dimension are copied as
+/// contiguous runs.
+pub fn copy_region(
+    src_slab: &Hyperslab,
+    src: &[u8],
+    dst_slab: &Hyperslab,
+    dst: &mut [u8],
+    region: &Hyperslab,
+    esize: usize,
+) {
+    let nd = region.dims();
+    if region.is_empty() {
+        return;
+    }
+    let src_strides = src_slab.strides();
+    let dst_strides = dst_slab.strides();
+
+    if nd == 0 {
+        dst[..esize].copy_from_slice(&src[..esize]);
+        return;
+    }
+
+    // Iterate over all "rows": the outer nd-1 dims; copy the innermost
+    // dim as one contiguous run of region.count[nd-1] elements.
+    let run = region.count[nd - 1] as usize * esize;
+    let mut coord = region.offset.clone();
+    loop {
+        let si = src_slab.element_index(&coord, &src_strides) as usize * esize;
+        let di = dst_slab.element_index(&coord, &dst_strides) as usize * esize;
+        dst[di..di + run].copy_from_slice(&src[si..si + run]);
+
+        // Advance the outer dims odometer.
+        let mut d = nd.wrapping_sub(2);
+        loop {
+            if d == usize::MAX {
+                return; // odometer overflow => done
+            }
+            coord[d] += 1;
+            if coord[d] < region.offset[d] + region.count[d] {
+                break;
+            }
+            coord[d] = region.offset[d];
+            d = d.wrapping_sub(1);
+        }
+    }
+}
+
+/// Split `dims` into `n` near-equal row-major chunks along axis 0 — the
+/// canonical block decomposition the synthetic tasks and the paper's
+/// weak-scaling setup use. Returns one slab per rank (possibly empty).
+pub fn split_rows(dims: &[u64], n: usize) -> Vec<Hyperslab> {
+    let rows = dims[0];
+    let n64 = n as u64;
+    let base = rows / n64;
+    let extra = rows % n64;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for r in 0..n64 {
+        let cnt = base + u64::from(r < extra);
+        let mut offset = vec![0; dims.len()];
+        let mut count = dims.to_vec();
+        offset[0] = start;
+        count[0] = cnt;
+        out.push(Hyperslab { offset, count });
+        start += cnt;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intersect_basic() {
+        let a = Hyperslab::new(&[0, 0], &[4, 4]);
+        let b = Hyperslab::new(&[2, 2], &[4, 4]);
+        let i = a.intersect(&b).unwrap();
+        assert_eq!(i, Hyperslab::new(&[2, 2], &[2, 2]));
+    }
+
+    #[test]
+    fn intersect_disjoint() {
+        let a = Hyperslab::new(&[0], &[4]);
+        let b = Hyperslab::new(&[4], &[4]);
+        assert!(a.intersect(&b).is_none());
+    }
+
+    #[test]
+    fn intersect_contained() {
+        let a = Hyperslab::new(&[0, 0, 0], &[10, 10, 10]);
+        let b = Hyperslab::new(&[3, 4, 5], &[1, 2, 3]);
+        assert_eq!(a.intersect(&b).unwrap(), b);
+        assert_eq!(b.intersect(&a).unwrap(), b);
+    }
+
+    #[test]
+    fn fits_within_checks_bounds() {
+        let s = Hyperslab::new(&[2], &[3]);
+        assert!(s.fits_within(&[5]));
+        assert!(!s.fits_within(&[4]));
+        assert!(!s.fits_within(&[5, 5]));
+    }
+
+    #[test]
+    fn copy_1d() {
+        // src owns [2..6) of a 1-D dataset, dst wants [0..8).
+        let src_slab = Hyperslab::range1d(2, 4);
+        let dst_slab = Hyperslab::range1d(0, 8);
+        let src: Vec<u8> = vec![10, 11, 12, 13];
+        let mut dst = vec![0u8; 8];
+        let region = src_slab.intersect(&dst_slab).unwrap();
+        copy_region(&src_slab, &src, &dst_slab, &mut dst, &region, 1);
+        assert_eq!(dst, vec![0, 0, 10, 11, 12, 13, 0, 0]);
+    }
+
+    #[test]
+    fn copy_2d_subblock() {
+        // 4x4 dataset; src owns rows 0..2, dst wants the centre 2x2.
+        let src_slab = Hyperslab::new(&[0, 0], &[2, 4]);
+        let dst_slab = Hyperslab::new(&[1, 1], &[2, 2]);
+        let src: Vec<u8> = (0..8).collect(); // rows 0..2 of 4 cols
+        let mut dst = vec![255u8; 4];
+        let region = src_slab.intersect(&dst_slab).unwrap();
+        assert_eq!(region, Hyperslab::new(&[1, 1], &[1, 2]));
+        copy_region(&src_slab, &src, &dst_slab, &mut dst, &region, 1);
+        // Global (1,1) and (1,2) = src row 1, cols 1..3 = values 5, 6.
+        assert_eq!(dst, vec![5, 6, 255, 255]);
+    }
+
+    #[test]
+    fn copy_multibyte_elements() {
+        let src_slab = Hyperslab::range1d(0, 3);
+        let dst_slab = Hyperslab::range1d(1, 2);
+        let src: Vec<u8> = vec![1, 0, 0, 0, 2, 0, 0, 0, 3, 0, 0, 0]; // u32 LE
+        let mut dst = vec![0u8; 8];
+        let region = src_slab.intersect(&dst_slab).unwrap();
+        copy_region(&src_slab, &src, &dst_slab, &mut dst, &region, 4);
+        assert_eq!(dst, vec![2, 0, 0, 0, 3, 0, 0, 0]);
+    }
+
+    #[test]
+    fn copy_3d_region() {
+        // 2x2x2 src at origin of a 3x3x3 space; dst wants whole space.
+        let src_slab = Hyperslab::new(&[0, 0, 0], &[2, 2, 2]);
+        let dst_slab = Hyperslab::new(&[0, 0, 0], &[3, 3, 3]);
+        let src: Vec<u8> = (0..8).collect();
+        let mut dst = vec![99u8; 27];
+        let region = src_slab.clone();
+        copy_region(&src_slab, &src, &dst_slab, &mut dst, &region, 1);
+        // (z,y,x) -> dst index 9z+3y+x ; src index 4z+2y+x
+        for z in 0..2 {
+            for y in 0..2 {
+                for x in 0..2 {
+                    assert_eq!(dst[9 * z + 3 * y + x], (4 * z + 2 * y + x) as u8);
+                }
+            }
+        }
+        assert_eq!(dst[2], 99); // untouched
+    }
+
+    #[test]
+    fn split_rows_covers_exactly() {
+        let dims = [10u64, 3];
+        let parts = split_rows(&dims, 4);
+        assert_eq!(parts.len(), 4);
+        let total: u64 = parts.iter().map(|s| s.count[0]).sum();
+        assert_eq!(total, 10);
+        // Counts are 3,3,2,2 and offsets stack.
+        assert_eq!(parts[0].count[0], 3);
+        assert_eq!(parts[2].offset[0], 6);
+        for p in &parts {
+            assert_eq!(p.count[1], 3);
+            assert!(p.fits_within(&dims));
+        }
+    }
+
+    #[test]
+    fn split_rows_more_ranks_than_rows() {
+        let parts = split_rows(&[2], 4);
+        assert_eq!(parts.iter().filter(|p| p.is_empty()).count(), 2);
+        let total: u64 = parts.iter().map(Hyperslab::element_count).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn scalar_slab() {
+        let s = Hyperslab::new(&[], &[]);
+        assert_eq!(s.element_count(), 1);
+        let src = vec![7u8, 8, 9, 10];
+        let mut dst = vec![0u8; 4];
+        copy_region(&s, &src, &s, &mut dst, &s, 4);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let s = Hyperslab::new(&[1, 2, 3], &[4, 5, 6]);
+        let mut w = Writer::new();
+        s.encode(&mut w);
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf);
+        assert_eq!(Hyperslab::decode(&mut r).unwrap(), s);
+    }
+}

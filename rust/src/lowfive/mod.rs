@@ -1,0 +1,35 @@
+//! LowFive reimplementation (substrate S5): data model, hyperslab
+//! redistribution, memory/file transports, callbacks.
+//!
+//! The real LowFive is an HDF5 Virtual Object Layer plugin; task codes
+//! keep calling HDF5 and the plugin intercepts the I/O. Here the
+//! equivalent seam is the [`Vol`] object's HDF5-like API
+//! (`file_create` / `dataset_write` / `file_close` / `file_open` /
+//! `dataset_read`): task codes call only this generic API and never see
+//! workflow machinery, preserving the paper's "no task-code changes"
+//! property in spirit.
+
+pub mod filemode;
+pub mod hyperslab;
+pub mod model;
+pub mod protocol;
+mod vol;
+
+pub use hyperslab::{split_rows, Hyperslab};
+pub use model::{AttrValue, DType, DatasetMeta, H5File};
+pub use vol::{Callbacks, ChannelMode, ConsumerFile, InChannel, OutChannel, Vol, VolStats};
+
+/// Filename/dataset glob matching (`plt*.h5`, `/particles/*`, exact
+/// names). Invalid patterns fall back to string equality.
+pub fn pattern_matches(pattern: &str, name: &str) -> bool {
+    if pattern == name {
+        return true;
+    }
+    match glob::Pattern::new(pattern) {
+        Ok(p) => p.matches(name),
+        Err(_) => false,
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,257 @@
+//! HDF5-like in-memory data model (the LowFive "data model
+//! specification" half): files, path-named datasets, attributes, typed
+//! elements and block-distributed storage.
+//!
+//! Groups are implicit: dataset names are full HDF5 paths such as
+//! `/group1/grid`, exactly how the Wilkins YAML refers to them.
+
+use std::collections::BTreeMap;
+
+use crate::comm::wire::{Reader, Writer};
+use crate::error::{Result, WilkinsError};
+
+use super::hyperslab::Hyperslab;
+
+/// Element datatypes supported by the transport (the paper's synthetic
+/// benchmark uses u64 grids + f32 particles; the science payloads f32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    U8,
+    I32,
+    U64,
+    F32,
+    F64,
+}
+
+impl DType {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::U8 => 1,
+            DType::I32 | DType::F32 => 4,
+            DType::U64 | DType::F64 => 8,
+        }
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            DType::U8 => 0,
+            DType::I32 => 1,
+            DType::U64 => 2,
+            DType::F32 => 3,
+            DType::F64 => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<DType> {
+        Ok(match c {
+            0 => DType::U8,
+            1 => DType::I32,
+            2 => DType::U64,
+            3 => DType::F32,
+            4 => DType::F64,
+            _ => return Err(WilkinsError::LowFive(format!("bad dtype code {c}"))),
+        })
+    }
+}
+
+/// Attribute values (HDF5 scalar attributes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl AttrValue {
+    pub fn encode(&self, w: &mut Writer) {
+        match self {
+            AttrValue::Int(v) => {
+                w.put_u8(0);
+                w.put_i64(*v);
+            }
+            AttrValue::Float(v) => {
+                w.put_u8(1);
+                w.put_f64(*v);
+            }
+            AttrValue::Str(s) => {
+                w.put_u8(2);
+                w.put_str(s);
+            }
+        }
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<AttrValue> {
+        Ok(match r.get_u8()? {
+            0 => AttrValue::Int(r.get_i64()?),
+            1 => AttrValue::Float(r.get_f64()?),
+            2 => AttrValue::Str(r.get_str()?),
+            c => return Err(WilkinsError::LowFive(format!("bad attr code {c}"))),
+        })
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            AttrValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+/// Dataset metadata: global shape + dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetMeta {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<u64>,
+}
+
+impl DatasetMeta {
+    pub fn element_count(&self) -> u64 {
+        self.dims.iter().product()
+    }
+
+    pub fn encode(&self, w: &mut Writer) {
+        w.put_str(&self.name);
+        w.put_u8(self.dtype.code());
+        w.put_u64_slice(&self.dims);
+    }
+
+    pub fn decode(r: &mut Reader) -> Result<DatasetMeta> {
+        Ok(DatasetMeta {
+            name: r.get_str()?,
+            dtype: DType::from_code(r.get_u8()?)?,
+            dims: r.get_u64_vec()?,
+        })
+    }
+}
+
+/// A locally-owned block of a dataset: the hyperslab this rank wrote
+/// plus its bytes (row-major within the slab).
+#[derive(Debug, Clone)]
+pub struct OwnedBlock {
+    pub slab: Hyperslab,
+    pub data: Vec<u8>,
+}
+
+/// A dataset as seen by one rank: global metadata + its local blocks.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub meta: DatasetMeta,
+    pub blocks: Vec<OwnedBlock>,
+}
+
+impl Dataset {
+    pub fn new(meta: DatasetMeta) -> Dataset {
+        Dataset { meta, blocks: Vec::new() }
+    }
+
+    /// Write `data` covering `slab` (must match slab element count).
+    pub fn write_slab(&mut self, slab: Hyperslab, data: Vec<u8>) -> Result<()> {
+        let expect = slab.element_count() as usize * self.meta.dtype.size_bytes();
+        if data.len() != expect {
+            return Err(WilkinsError::LowFive(format!(
+                "dataset {}: slab {:?} needs {} bytes, got {}",
+                self.meta.name, slab, expect, data.len()
+            )));
+        }
+        if slab.dims() != self.meta.dims.len() {
+            return Err(WilkinsError::LowFive(format!(
+                "dataset {}: slab rank {} != dataset rank {}",
+                self.meta.name,
+                slab.dims(),
+                self.meta.dims.len()
+            )));
+        }
+        if !slab.fits_within(&self.meta.dims) {
+            return Err(WilkinsError::LowFive(format!(
+                "dataset {}: slab {:?} outside global dims {:?}",
+                self.meta.name, slab, self.meta.dims
+            )));
+        }
+        self.blocks.push(OwnedBlock { slab, data });
+        Ok(())
+    }
+
+    /// Read the subset of `want` covered by local blocks into `out`
+    /// (row-major for `want`). Returns number of elements filled.
+    pub fn read_into(&self, want: &Hyperslab, out: &mut [u8]) -> u64 {
+        let esize = self.meta.dtype.size_bytes();
+        let mut filled = 0;
+        for b in &self.blocks {
+            if let Some(inter) = b.slab.intersect(want) {
+                super::hyperslab::copy_region(
+                    &b.slab, &b.data, want, out, &inter, esize,
+                );
+                filled += inter.element_count();
+            }
+        }
+        filled
+    }
+}
+
+/// An in-memory "HDF5 file": datasets by path + file attributes.
+#[derive(Debug, Clone, Default)]
+pub struct H5File {
+    pub name: String,
+    pub datasets: BTreeMap<String, Dataset>,
+    pub attrs: BTreeMap<String, AttrValue>,
+}
+
+impl H5File {
+    pub fn new(name: &str) -> H5File {
+        H5File { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn create_dataset(&mut self, name: &str, dtype: DType, dims: &[u64]) -> Result<()> {
+        if self.datasets.contains_key(name) {
+            return Err(WilkinsError::LowFive(format!(
+                "dataset {name} already exists in {}",
+                self.name
+            )));
+        }
+        self.datasets.insert(
+            name.to_string(),
+            Dataset::new(DatasetMeta {
+                name: name.to_string(),
+                dtype,
+                dims: dims.to_vec(),
+            }),
+        );
+        Ok(())
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&Dataset> {
+        self.datasets.get(name).ok_or_else(|| {
+            WilkinsError::LowFive(format!("no dataset {name} in file {}", self.name))
+        })
+    }
+
+    pub fn dataset_mut(&mut self, name: &str) -> Result<&mut Dataset> {
+        let fname = self.name.clone();
+        self.datasets.get_mut(name).ok_or_else(|| {
+            WilkinsError::LowFive(format!("no dataset {name} in file {fname}"))
+        })
+    }
+
+    /// Names of the (implicit) groups, i.e. unique path prefixes.
+    pub fn groups(&self) -> Vec<String> {
+        let mut gs: Vec<String> = self
+            .datasets
+            .keys()
+            .filter_map(|k| k.rfind('/').map(|i| k[..i].to_string()))
+            .filter(|g| !g.is_empty())
+            .collect();
+        gs.sort();
+        gs.dedup();
+        gs
+    }
+
+    /// Total bytes of local block data (observability).
+    pub fn local_bytes(&self) -> usize {
+        self.datasets
+            .values()
+            .flat_map(|d| d.blocks.iter())
+            .map(|b| b.data.len())
+            .sum()
+    }
+}

@@ -1,0 +1,272 @@
+//! Wire protocol for the consumer-pull redistribution (memory mode).
+//!
+//! LowFive serves data from producer to consumer when the producer
+//! closes a file and the consumer opens it (paper Sec. 4.2.2). We
+//! reproduce that as a request/serve protocol over the channel
+//! intercommunicator:
+//!
+//! consumer rank j                      producer rank i
+//! ---------------                      ---------------
+//! MetaReq{pattern, min_version}  -->
+//!                                <--   MetaRep{file metadata} | Eof
+//! DataReq{file, dset, slab}      -->
+//!                                <--   DataRep{intersecting blocks}
+//! Done{version}                  -->
+//! EofAck                         -->   (finalize drain only)
+//!
+//! Versions are the producer's file-close serve counter; they keep
+//! serve rounds from mixing when a fast consumer re-opens while a slow
+//! consumer rank is still reading (the paper's flow-control scenarios).
+
+use crate::comm::wire::{Reader, Writer};
+use crate::error::{Result, WilkinsError};
+
+use super::hyperslab::Hyperslab;
+use super::model::{AttrValue, DatasetMeta};
+
+/// Tag used by consumer→producer requests on a channel intercomm.
+pub const TAG_REQ: u64 = 1;
+/// Tag used by producer→consumer replies.
+pub const TAG_REP: u64 = 2;
+/// Tag used by the consumer-side driver query "more data?" (Sec. 3.5.1).
+pub const TAG_QUERY: u64 = 3;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Open request: the consumer wants a file matching `pattern` with
+    /// version >= `min_version`.
+    MetaReq { pattern: String, min_version: u64 },
+    /// Read request for the blocks of `dset` intersecting `slab`.
+    DataReq { file: String, dset: String, slab: Hyperslab },
+    /// The consumer rank is finished with this serve round.
+    Done { version: u64 },
+    /// The consumer rank acknowledges end-of-stream and will not
+    /// contact this producer again.
+    EofAck,
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Request::MetaReq { pattern, min_version } => {
+                w.put_u8(0);
+                w.put_str(pattern);
+                w.put_u64(*min_version);
+            }
+            Request::DataReq { file, dset, slab } => {
+                w.put_u8(1);
+                w.put_str(file);
+                w.put_str(dset);
+                slab.encode(&mut w);
+            }
+            Request::Done { version } => {
+                w.put_u8(2);
+                w.put_u64(*version);
+            }
+            Request::EofAck => w.put_u8(3),
+        }
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Request> {
+        let mut r = Reader::new(buf);
+        Ok(match r.get_u8()? {
+            0 => Request::MetaReq {
+                pattern: r.get_str()?,
+                min_version: r.get_u64()?,
+            },
+            1 => Request::DataReq {
+                file: r.get_str()?,
+                dset: r.get_str()?,
+                slab: Hyperslab::decode(&mut r)?,
+            },
+            2 => Request::Done { version: r.get_u64()? },
+            3 => Request::EofAck,
+            c => return Err(WilkinsError::LowFive(format!("bad request code {c}"))),
+        })
+    }
+}
+
+/// One producer rank's view of a file: which slabs of which datasets it
+/// owns. The consumer merges M of these into a global table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileMeta {
+    pub filename: String,
+    pub version: u64,
+    pub attrs: Vec<(String, AttrValue)>,
+    /// (dataset meta, slabs owned by the replying rank)
+    pub datasets: Vec<(DatasetMeta, Vec<Hyperslab>)>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    Meta(FileMeta),
+    /// Blocks intersecting a DataReq: (region, bytes) pairs where the
+    /// region is in global coordinates and bytes are row-major in it.
+    Data(Vec<(Hyperslab, Vec<u8>)>),
+    /// No more files will be produced.
+    Eof,
+}
+
+impl Reply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Reply::Meta(m) => {
+                w.put_u8(0);
+                w.put_str(&m.filename);
+                w.put_u64(m.version);
+                w.put_u64(m.attrs.len() as u64);
+                for (k, v) in &m.attrs {
+                    w.put_str(k);
+                    v.encode(&mut w);
+                }
+                w.put_u64(m.datasets.len() as u64);
+                for (meta, slabs) in &m.datasets {
+                    meta.encode(&mut w);
+                    w.put_u64(slabs.len() as u64);
+                    for s in slabs {
+                        s.encode(&mut w);
+                    }
+                }
+            }
+            Reply::Data(blocks) => {
+                // Pre-size for the payload (§Perf: avoids realloc
+                // churn while appending multi-MiB blocks).
+                let payload: usize = blocks.iter().map(|(_, b)| b.len() + 64).sum();
+                w = Writer::with_capacity(payload + 16);
+                w.put_u8(1);
+                w.put_u64(blocks.len() as u64);
+                for (slab, bytes) in blocks {
+                    slab.encode(&mut w);
+                    w.put_bytes(bytes);
+                }
+            }
+            Reply::Eof => w.put_u8(2),
+        }
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Reply> {
+        let mut r = Reader::new(buf);
+        Ok(match r.get_u8()? {
+            0 => {
+                let filename = r.get_str()?;
+                let version = r.get_u64()?;
+                let nattr = r.get_u64()? as usize;
+                let mut attrs = Vec::with_capacity(nattr);
+                for _ in 0..nattr {
+                    let k = r.get_str()?;
+                    attrs.push((k, AttrValue::decode(&mut r)?));
+                }
+                let nds = r.get_u64()? as usize;
+                let mut datasets = Vec::with_capacity(nds);
+                for _ in 0..nds {
+                    let meta = DatasetMeta::decode(&mut r)?;
+                    let nslab = r.get_u64()? as usize;
+                    let mut slabs = Vec::with_capacity(nslab);
+                    for _ in 0..nslab {
+                        slabs.push(Hyperslab::decode(&mut r)?);
+                    }
+                    datasets.push((meta, slabs));
+                }
+                Reply::Meta(FileMeta { filename, version, attrs, datasets })
+            }
+            1 => {
+                let n = r.get_u64()? as usize;
+                let mut blocks = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let slab = Hyperslab::decode(&mut r)?;
+                    let bytes = r.get_bytes()?.to_vec();
+                    blocks.push((slab, bytes));
+                }
+                Reply::Data(blocks)
+            }
+            2 => Reply::Eof,
+            c => return Err(WilkinsError::LowFive(format!("bad reply code {c}"))),
+        })
+    }
+}
+
+/// "More data?" query replies (consumer driver → producer rank 0).
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryReply {
+    /// Producer will generate more files (consumer should re-open).
+    More,
+    /// All done.
+    Finished,
+}
+
+impl QueryReply {
+    pub fn encode(&self) -> Vec<u8> {
+        vec![match self {
+            QueryReply::More => 1,
+            QueryReply::Finished => 0,
+        }]
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<QueryReply> {
+        match buf.first() {
+            Some(1) => Ok(QueryReply::More),
+            Some(0) => Ok(QueryReply::Finished),
+            _ => Err(WilkinsError::LowFive("bad query reply".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowfive::model::DType;
+
+    #[test]
+    fn request_roundtrip() {
+        for req in [
+            Request::MetaReq { pattern: "*.h5".into(), min_version: 7 },
+            Request::DataReq {
+                file: "outfile.h5".into(),
+                dset: "/group1/grid".into(),
+                slab: Hyperslab::new(&[0, 2], &[3, 4]),
+            },
+            Request::Done { version: 9 },
+            Request::EofAck,
+        ] {
+            assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let meta = FileMeta {
+            filename: "outfile.h5".into(),
+            version: 3,
+            attrs: vec![
+                ("timestep".into(), AttrValue::Int(12)),
+                ("origin".into(), AttrValue::Str("lammps".into())),
+            ],
+            datasets: vec![(
+                DatasetMeta {
+                    name: "/group1/grid".into(),
+                    dtype: DType::U64,
+                    dims: vec![100, 3],
+                },
+                vec![Hyperslab::new(&[0, 0], &[50, 3])],
+            )],
+        };
+        for rep in [
+            Reply::Meta(meta),
+            Reply::Data(vec![(Hyperslab::range1d(4, 2), vec![1, 2, 3, 4])]),
+            Reply::Eof,
+        ] {
+            assert_eq!(Reply::decode(&rep.encode()).unwrap(), rep);
+        }
+    }
+
+    #[test]
+    fn query_roundtrip() {
+        for q in [QueryReply::More, QueryReply::Finished] {
+            assert_eq!(QueryReply::decode(&q.encode()).unwrap(), q);
+        }
+    }
+}

@@ -1,0 +1,559 @@
+//! Integration tests for the LowFive transport: producer/consumer
+//! groups on real threads with real intercommunicators, exercising the
+//! redistribution, versioning, EOF, file-mode and callback machinery.
+
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use crate::comm::{InterComm, World};
+use crate::error::WilkinsError;
+
+use super::*;
+
+/// Build a 2-task world: M producer ranks + N consumer ranks with a
+/// channel between them, then run the closures on every rank thread.
+fn couple<P, C>(m: usize, n: usize, mode: ChannelMode, producer: P, consumer: C)
+where
+    P: Fn(usize, &mut Vol) + Send + Sync + 'static,
+    C: Fn(usize, &mut Vol) + Send + Sync + 'static,
+{
+    couple_writers(m, n, m, mode, producer, consumer)
+}
+
+/// Same but with only the first `nwriters` producer ranks doing I/O.
+fn couple_writers<P, C>(
+    m: usize,
+    n: usize,
+    nwriters: usize,
+    mode: ChannelMode,
+    producer: P,
+    consumer: C,
+) where
+    P: Fn(usize, &mut Vol) + Send + Sync + 'static,
+    C: Fn(usize, &mut Vol) + Send + Sync + 'static,
+{
+    let world = World::new(m + n);
+    let producer = Arc::new(producer);
+    let consumer = Arc::new(consumer);
+    let workdir = std::env::temp_dir().join(format!(
+        "wilkins-test-{}-{}",
+        std::process::id(),
+        WORKDIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let prod_ranks: Vec<usize> = (0..m).collect();
+    let cons_ranks: Vec<usize> = (m..m + n).collect();
+    let io_ranks: Vec<usize> = (0..nwriters).collect();
+    let pid = world.alloc_comm_id();
+    let cid = world.alloc_comm_id();
+    let ioid = world.alloc_comm_id();
+    let chid = world.alloc_comm_id();
+    let mut handles = Vec::new();
+    for g in 0..m + n {
+        let world = world.clone();
+        let producer = Arc::clone(&producer);
+        let consumer = Arc::clone(&consumer);
+        let prod_ranks = prod_ranks.clone();
+        let cons_ranks = cons_ranks.clone();
+        let io_ranks = io_ranks.clone();
+        let workdir = workdir.clone();
+        handles.push(thread::spawn(move || {
+            if g < m {
+                let local = world.comm_from_ranks(pid, &prod_ranks, g);
+                let mut vol = Vol::new(local.clone(), workdir);
+                if g < nwriters {
+                    let io = world.comm_from_ranks(ioid, &io_ranks, g);
+                    vol.set_io_comm(Some(io));
+                    let ic = InterComm::new(local, chid, cons_ranks.clone());
+                    vol.add_out_channel(OutChannel::new(Some(ic), "outfile.h5", mode));
+                } else {
+                    vol.add_out_channel(OutChannel::new(None, "outfile.h5", mode));
+                }
+                producer(g, &mut vol);
+                vol.finalize_producer().unwrap();
+            } else {
+                let local = world.comm_from_ranks(cid, &cons_ranks, g - m);
+                let mut vol = Vol::new(local.clone(), workdir);
+                let ic = if mode == ChannelMode::Memory {
+                    Some(InterComm::new(local, chid, io_ranks.clone()))
+                } else {
+                    None
+                };
+                vol.add_in_channel(InChannel::new(ic, "outfile.h5", mode));
+                consumer(g - m, &mut vol);
+                vol.finalize_consumer().unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+static WORKDIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Producer helper: write a 1-D u64 grid of `total` elements split by
+/// rows over `m` ranks, values = global index * 10.
+fn write_grid(vol: &mut Vol, rank: usize, m: usize, total: u64) {
+    vol.file_create("outfile.h5").unwrap();
+    vol.attr_write("outfile.h5", "timestep", AttrValue::Int(1)).unwrap();
+    vol.dataset_create("outfile.h5", "/group1/grid", DType::U64, &[total])
+        .unwrap();
+    let slabs = split_rows(&[total], m);
+    let slab = slabs[rank].clone();
+    let vals: Vec<u8> = (slab.offset[0]..slab.offset[0] + slab.count[0])
+        .flat_map(|i| (i * 10).to_le_bytes())
+        .collect();
+    vol.dataset_write("outfile.h5", "/group1/grid", slab, vals).unwrap();
+    vol.file_close("outfile.h5").unwrap();
+}
+
+/// Consumer helper: open, read own row-split share, verify, close.
+fn read_grid(vol: &mut Vol, rank: usize, n: usize, total: u64) {
+    let name = vol.file_open("outfile.h5").unwrap();
+    assert_eq!(name, "outfile.h5");
+    let meta = vol.dataset_meta(&name, "/group1/grid").unwrap();
+    assert_eq!(meta.dims, vec![total]);
+    assert_eq!(meta.dtype, DType::U64);
+    let want = split_rows(&[total], n)[rank].clone();
+    let bytes = vol.dataset_read(&name, "/group1/grid", &want).unwrap();
+    for (k, chunk) in bytes.chunks_exact(8).enumerate() {
+        let v = u64::from_le_bytes(chunk.try_into().unwrap());
+        assert_eq!(v, (want.offset[0] + k as u64) * 10);
+    }
+    vol.file_close(&name).unwrap();
+}
+
+#[test]
+fn one_to_one_memory() {
+    couple(
+        1,
+        1,
+        ChannelMode::Memory,
+        |r, vol| write_grid(vol, r, 1, 100),
+        |r, vol| read_grid(vol, r, 1, 100),
+    );
+}
+
+#[test]
+fn m_to_n_redistribution() {
+    // 3 producers, 2 consumers: consumer slabs straddle producer
+    // boundaries, exercising multi-source assembly.
+    couple(
+        3,
+        2,
+        ChannelMode::Memory,
+        |r, vol| write_grid(vol, r, 3, 90),
+        |r, vol| read_grid(vol, r, 2, 90),
+    );
+}
+
+#[test]
+fn n_to_one_fan_in_ranks() {
+    couple(
+        4,
+        1,
+        ChannelMode::Memory,
+        |r, vol| write_grid(vol, r, 4, 64),
+        |r, vol| read_grid(vol, r, 1, 64),
+    );
+}
+
+#[test]
+fn multiple_timesteps_versioned() {
+    const STEPS: u64 = 5;
+    couple(
+        2,
+        2,
+        ChannelMode::Memory,
+        |r, vol| {
+            for t in 0..STEPS {
+                vol.file_create("outfile.h5").unwrap();
+                vol.attr_write("outfile.h5", "timestep", AttrValue::Int(t as i64))
+                    .unwrap();
+                vol.dataset_create("outfile.h5", "/d", DType::U64, &[10]).unwrap();
+                let slab = split_rows(&[10], 2)[r].clone();
+                let vals: Vec<u8> = (slab.offset[0]..slab.offset[0] + slab.count[0])
+                    .flat_map(|i| (i + t * 100).to_le_bytes())
+                    .collect();
+                vol.dataset_write("outfile.h5", "/d", slab, vals).unwrap();
+                vol.file_close("outfile.h5").unwrap();
+            }
+        },
+        |r, vol| {
+            for t in 0..STEPS {
+                let name = vol.file_open("outfile.h5").unwrap();
+                let ts = vol
+                    .consumer_file(&name)
+                    .unwrap()
+                    .attr("timestep")
+                    .unwrap()
+                    .as_i64()
+                    .unwrap();
+                assert_eq!(ts, t as i64, "consumer rank {r} saw wrong timestep");
+                let want = split_rows(&[10], 2)[r].clone();
+                let bytes = vol.dataset_read(&name, "/d", &want).unwrap();
+                let first = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+                assert_eq!(first, want.offset[0] + t * 100);
+                vol.file_close(&name).unwrap();
+            }
+        },
+    );
+}
+
+#[test]
+fn eof_after_last_step() {
+    couple(
+        1,
+        1,
+        ChannelMode::Memory,
+        |r, vol| write_grid(vol, r, 1, 8),
+        |r, vol| {
+            read_grid(vol, r, 1, 8);
+            match vol.file_open("outfile.h5") {
+                Err(WilkinsError::EndOfStream) => {}
+                other => panic!("expected EndOfStream, got {other:?}"),
+            }
+            assert!(!vol.has_live_inputs());
+        },
+    );
+}
+
+#[test]
+fn consumer_quits_early() {
+    // Producer writes 4 steps; consumer reads only 1 then finalizes.
+    // finalize_consumer's EofAck must unblock the producer's serves.
+    couple(
+        1,
+        1,
+        ChannelMode::Memory,
+        |r, vol| {
+            for _ in 0..4 {
+                write_grid(vol, r, 1, 8);
+            }
+        },
+        |r, vol| {
+            read_grid(vol, r, 1, 8);
+            vol.finalize_consumer().unwrap();
+        },
+    );
+}
+
+#[test]
+fn subset_writers_single_io_rank() {
+    // 4 producer ranks, only rank 0 writes (LAMMPS pattern).
+    couple_writers(
+        4,
+        2,
+        1,
+        ChannelMode::Memory,
+        |r, vol| {
+            if vol.is_io_rank() {
+                assert_eq!(r, 0);
+                write_grid(vol, 0, 1, 40);
+            }
+            // Non-I/O ranks do no I/O at all.
+        },
+        |r, vol| read_grid(vol, r, 2, 40),
+    );
+}
+
+#[test]
+fn file_mode_roundtrip() {
+    couple(
+        2,
+        2,
+        ChannelMode::File,
+        |r, vol| write_grid(vol, r, 2, 50),
+        |r, vol| read_grid(vol, r, 2, 50),
+    );
+}
+
+#[test]
+fn file_mode_eof() {
+    couple(
+        1,
+        1,
+        ChannelMode::File,
+        |r, vol| write_grid(vol, r, 1, 10),
+        |r, vol| {
+            read_grid(vol, r, 1, 10);
+            match vol.file_open("outfile.h5") {
+                Err(WilkinsError::EndOfStream) => {}
+                other => panic!("expected EndOfStream, got {other:?}"),
+            }
+        },
+    );
+}
+
+#[test]
+fn two_datasets_two_types() {
+    couple(
+        1,
+        1,
+        ChannelMode::Memory,
+        |_, vol| {
+            vol.file_create("outfile.h5").unwrap();
+            vol.dataset_create("outfile.h5", "/group1/grid", DType::U64, &[16])
+                .unwrap();
+            vol.dataset_create("outfile.h5", "/group1/particles", DType::F32, &[8, 3])
+                .unwrap();
+            vol.dataset_write(
+                "outfile.h5",
+                "/group1/grid",
+                Hyperslab::whole(&[16]),
+                (0u64..16).flat_map(|i| i.to_le_bytes()).collect(),
+            )
+            .unwrap();
+            vol.dataset_write(
+                "outfile.h5",
+                "/group1/particles",
+                Hyperslab::whole(&[8, 3]),
+                (0..24).flat_map(|i| (i as f32).to_le_bytes()).collect(),
+            )
+            .unwrap();
+            vol.file_close("outfile.h5").unwrap();
+        },
+        |_, vol| {
+            let name = vol.file_open("outfile.h5").unwrap();
+            let names = vol.consumer_file(&name).unwrap().dataset_names();
+            assert_eq!(names, vec!["/group1/grid", "/group1/particles"]);
+            let p = vol
+                .dataset_read(&name, "/group1/particles", &Hyperslab::new(&[2, 0], &[1, 3]))
+                .unwrap();
+            let vals: Vec<f32> = p
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            assert_eq!(vals, vec![6.0, 7.0, 8.0]);
+            vol.file_close(&name).unwrap();
+        },
+    );
+}
+
+#[test]
+fn callback_after_dataset_write_counts() {
+    let count = Arc::new(AtomicU64::new(0));
+    let c2 = Arc::clone(&count);
+    couple(
+        1,
+        1,
+        ChannelMode::Memory,
+        move |r, vol| {
+            let c = Arc::clone(&c2);
+            vol.set_after_dataset_write(Box::new(move |_vol, _dset| {
+                c.fetch_add(1, Ordering::Relaxed);
+            }));
+            write_grid(vol, r, 1, 8);
+        },
+        |r, vol| read_grid(vol, r, 1, 8),
+    );
+    assert_eq!(count.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn skip_serve_some_strategy() {
+    // Producer closes 4 times but serves only every 2nd close
+    // (the *some* flow-control strategy, N=2).
+    couple(
+        1,
+        1,
+        ChannelMode::Memory,
+        |r, vol| {
+            vol.set_before_file_close(Box::new(|vol, name| {
+                if (vol.closes_of(name) + 1) % 2 != 0 {
+                    vol.skip_serve();
+                }
+            }));
+            for _ in 0..4 {
+                write_grid(vol, r, 1, 8);
+            }
+            assert_eq!(vol.stats.files_served, 2);
+            assert_eq!(vol.stats.serves_suppressed, 2);
+        },
+        |r, vol| {
+            for _ in 0..2 {
+                read_grid(vol, r, 1, 8);
+            }
+            match vol.file_open("outfile.h5") {
+                Err(WilkinsError::EndOfStream) => {}
+                other => panic!("expected EndOfStream, got {other:?}"),
+            }
+        },
+    );
+}
+
+#[test]
+fn latest_strategy_skips_when_no_request() {
+    // Slow consumer: producer runs 6 steps under the *latest* strategy;
+    // consumer opens twice. The producer must skip serves with no
+    // pending request and never deadlock.
+    couple(
+        1,
+        1,
+        ChannelMode::Memory,
+        |r, vol| {
+            vol.set_before_file_close(Box::new(|vol, name| {
+                if !vol.any_pending_requests(name) {
+                    vol.skip_serve();
+                }
+            }));
+            for _ in 0..6 {
+                write_grid(vol, r, 1, 8);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            assert!(vol.stats.serves_suppressed > 0, "expected skipped serves");
+        },
+        |r, vol| {
+            read_grid(vol, r, 1, 8);
+            std::thread::sleep(std::time::Duration::from_millis(12));
+            read_grid(vol, r, 1, 8);
+            vol.finalize_consumer().unwrap();
+        },
+    );
+}
+
+#[test]
+fn broadcast_files_shares_rank0_state() {
+    // Producer group of 3: rank 0 creates the file + attr, broadcasts;
+    // all ranks then write their slab and close (Nyx-like).
+    couple(
+        3,
+        1,
+        ChannelMode::Memory,
+        |r, vol| {
+            if r == 0 {
+                vol.file_create("outfile.h5").unwrap();
+                vol.attr_write("outfile.h5", "origin", AttrValue::Str("nyx".into()))
+                    .unwrap();
+                vol.dataset_create("outfile.h5", "/d", DType::U64, &[30]).unwrap();
+            }
+            vol.broadcast_files().unwrap();
+            assert!(vol.producer_file_exists("outfile.h5"));
+            let slab = split_rows(&[30], 3)[r].clone();
+            let vals: Vec<u8> = (slab.offset[0]..slab.offset[0] + slab.count[0])
+                .flat_map(|i| (i * 10).to_le_bytes())
+                .collect();
+            vol.dataset_write("outfile.h5", "/d", slab, vals).unwrap();
+            vol.file_close("outfile.h5").unwrap();
+        },
+        |_, vol| {
+            let name = vol.file_open("outfile.h5").unwrap();
+            assert_eq!(
+                vol.consumer_file(&name).unwrap().attr("origin"),
+                Some(&AttrValue::Str("nyx".into()))
+            );
+            let bytes = vol
+                .dataset_read(&name, "/d", &Hyperslab::whole(&[30]))
+                .unwrap();
+            for (k, chunk) in bytes.chunks_exact(8).enumerate() {
+                assert_eq!(u64::from_le_bytes(chunk.try_into().unwrap()), k as u64 * 10);
+            }
+            vol.file_close(&name).unwrap();
+        },
+    );
+}
+
+#[test]
+fn pattern_matching_globs() {
+    assert!(pattern_matches("plt*.h5", "plt0001.h5"));
+    assert!(pattern_matches("*.h5", "outfile.h5"));
+    assert!(pattern_matches("/particles/*", "/particles/position"));
+    assert!(!pattern_matches("plt*.h5", "dump.bp"));
+    assert!(pattern_matches("outfile.h5", "outfile.h5"));
+}
+
+#[test]
+fn stats_track_bytes() {
+    couple(
+        1,
+        1,
+        ChannelMode::Memory,
+        |r, vol| {
+            write_grid(vol, r, 1, 100);
+            assert_eq!(vol.stats.files_served, 1);
+            assert_eq!(vol.stats.bytes_served, 800);
+        },
+        |r, vol| {
+            read_grid(vol, r, 1, 100);
+            assert_eq!(vol.stats.bytes_read, 800);
+            assert_eq!(vol.stats.files_opened, 1);
+        },
+    );
+}
+
+/// Fan-in across *channels*: one consumer task with two in-channels
+/// round-robins opens between the two producers.
+#[test]
+fn fan_in_round_robin_channels() {
+    let world = World::new(3); // producer A, producer B, consumer
+    let ida = world.alloc_comm_id();
+    let idb = world.alloc_comm_id();
+    let idc = world.alloc_comm_id();
+    let cha = world.alloc_comm_id();
+    let chb = world.alloc_comm_id();
+    let workdir = std::env::temp_dir().join("wilkins-test-rr");
+    let mk_producer = |world: &World, comm_id, g: usize, chan_id, tag: i64| {
+        let world = world.clone();
+        let workdir = workdir.clone();
+        thread::spawn(move || {
+            let local = world.comm_from_ranks(comm_id, &[g], 0);
+            let mut vol = Vol::new(local.clone(), workdir);
+            vol.set_io_comm(Some(local.clone()));
+            let ic = InterComm::new(local, chan_id, vec![2]);
+            vol.add_out_channel(OutChannel::new(Some(ic), "outfile.h5", ChannelMode::Memory));
+            vol.file_create("outfile.h5").unwrap();
+            vol.attr_write("outfile.h5", "who", AttrValue::Int(tag)).unwrap();
+            vol.dataset_create("outfile.h5", "/d", DType::U64, &[4]).unwrap();
+            vol.dataset_write(
+                "outfile.h5",
+                "/d",
+                Hyperslab::whole(&[4]),
+                (0u64..4).flat_map(|i| i.to_le_bytes()).collect(),
+            )
+            .unwrap();
+            vol.file_close("outfile.h5").unwrap();
+            vol.finalize_producer().unwrap();
+        })
+    };
+    let ha = mk_producer(&world, ida, 0, cha, 100);
+    let hb = mk_producer(&world, idb, 1, chb, 200);
+    let hc = {
+        let world = world.clone();
+        let workdir = workdir.clone();
+        thread::spawn(move || {
+            let local = world.comm_from_ranks(idc, &[2], 0);
+            let mut vol = Vol::new(local.clone(), workdir);
+            let ica = InterComm::new(local.clone(), cha, vec![0]);
+            let icb = InterComm::new(local, chb, vec![1]);
+            vol.add_in_channel(InChannel::new(Some(ica), "outfile.h5", ChannelMode::Memory));
+            vol.add_in_channel(InChannel::new(Some(icb), "outfile.h5", ChannelMode::Memory));
+            let mut whos = Vec::new();
+            loop {
+                match vol.file_open("outfile.h5") {
+                    Ok(name) => {
+                        whos.push(
+                            vol.consumer_file(&name)
+                                .unwrap()
+                                .attr("who")
+                                .unwrap()
+                                .as_i64()
+                                .unwrap(),
+                        );
+                        vol.file_close(&name).unwrap();
+                    }
+                    Err(WilkinsError::EndOfStream) => break,
+                    Err(e) => panic!("{e}"),
+                }
+            }
+            // Round-robin: both producers consumed exactly once.
+            whos.sort();
+            assert_eq!(whos, vec![100, 200]);
+            vol.finalize_consumer().unwrap();
+        })
+    };
+    ha.join().unwrap();
+    hb.join().unwrap();
+    hc.join().unwrap();
+}

@@ -1,0 +1,147 @@
+//! `wilkins` — the workflow launcher CLI (the `wilkins-master` entry
+//! point of the paper).
+//!
+//! Usage:
+//!   wilkins run <config.yaml> [--time-scale S] [--workdir DIR]
+//!                             [--artifacts DIR] [--gantt FILE.csv]
+//!   wilkins validate <config.yaml>
+//!   wilkins graph <config.yaml>
+//!   wilkins list-tasks
+//!   wilkins help
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use wilkins::config::WorkflowConfig;
+use wilkins::graph::WorkflowGraph;
+use wilkins::runtime::Engine;
+use wilkins::tasks::builtin_registry;
+use wilkins::Wilkins;
+
+const HELP: &str = "\
+wilkins — HPC in situ workflows made easy (paper reproduction)
+
+USAGE:
+    wilkins run <config.yaml> [OPTIONS]   launch a workflow
+    wilkins validate <config.yaml>        parse + validate only
+    wilkins graph <config.yaml>           print the expanded task graph
+    wilkins list-tasks                    list built-in task codes
+    wilkins help                          this text
+
+OPTIONS (run):
+    --time-scale S     wall-seconds per emulated paper-second (default 1)
+    --workdir DIR      directory for file-mode transports
+    --artifacts DIR    AOT artifacts dir (default ./artifacts or
+                       $WILKINS_ARTIFACTS); only workflows using the
+                       science payloads need it
+    --gantt FILE.csv   write the span trace as CSV after the run
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> wilkins::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("validate") => cmd_validate(&args[1..]),
+        Some("graph") => cmd_graph(&args[1..]),
+        Some("list-tasks") => {
+            for name in builtin_registry().names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(wilkins::WilkinsError::Config(format!(
+            "unknown command {other:?}; try `wilkins help`"
+        ))),
+    }
+}
+
+fn take_opt(args: &mut Vec<String>, name: &str) -> Option<String> {
+    let idx = args.iter().position(|a| a == name)?;
+    if idx + 1 >= args.len() {
+        return None;
+    }
+    let v = args.remove(idx + 1);
+    args.remove(idx);
+    Some(v)
+}
+
+fn config_path(args: &[String]) -> wilkins::Result<PathBuf> {
+    args.iter()
+        .find(|a| !a.starts_with("--"))
+        .map(PathBuf::from)
+        .ok_or_else(|| wilkins::WilkinsError::Config("missing <config.yaml>".into()))
+}
+
+fn cmd_validate(args: &[String]) -> wilkins::Result<()> {
+    let path = config_path(args)?;
+    let cfg = WorkflowConfig::from_yaml_str(&std::fs::read_to_string(&path)?)?;
+    let graph = WorkflowGraph::build(&cfg)?;
+    println!(
+        "OK: {} tasks, {} instances, {} channels, {} ranks",
+        cfg.tasks.len(),
+        graph.nodes.len(),
+        graph.channels.len(),
+        graph.total_ranks
+    );
+    Ok(())
+}
+
+fn cmd_graph(args: &[String]) -> wilkins::Result<()> {
+    let path = config_path(args)?;
+    let cfg = WorkflowConfig::from_yaml_str(&std::fs::read_to_string(&path)?)?;
+    print!("{}", WorkflowGraph::build(&cfg)?.describe());
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> wilkins::Result<()> {
+    let mut args = args.to_vec();
+    let time_scale = take_opt(&mut args, "--time-scale")
+        .map(|s| s.parse::<f64>())
+        .transpose()
+        .map_err(|e| wilkins::WilkinsError::Config(format!("bad --time-scale: {e}")))?
+        .unwrap_or(1.0);
+    let workdir = take_opt(&mut args, "--workdir").map(PathBuf::from);
+    let artifacts = take_opt(&mut args, "--artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Engine::default_dir);
+    let gantt = take_opt(&mut args, "--gantt").map(PathBuf::from);
+    let path = config_path(&args)?;
+
+    let mut w = Wilkins::from_yaml_file(&path, builtin_registry())?
+        .with_time_scale(time_scale);
+    if let Some(d) = workdir {
+        w = w.with_workdir(d);
+    }
+    // The engine is optional: synthetic workflows run without it.
+    let _engine;
+    if artifacts.join("manifest.tsv").exists() {
+        let engine = Engine::start(&artifacts)?;
+        w = w.with_engine(engine.handle());
+        _engine = Some(engine);
+    } else {
+        _engine = None;
+    }
+    println!("{}", w.graph().describe());
+    let recorder = w.recorder();
+    let report = w.run()?;
+    print!("{}", report.render());
+    if let Some(path) = gantt {
+        std::fs::write(&path, recorder.to_csv())?;
+        println!("gantt trace written to {}", path.display());
+    }
+    Ok(())
+}

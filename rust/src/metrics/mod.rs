@@ -1,0 +1,227 @@
+//! Metrics + Gantt tracing (substrate S11).
+//!
+//! Every rank records timestamped spans — compute, idle (blocked on a
+//! coupled task) and transfer — against a shared origin. The recorder
+//! renders the paper's Figure-5-style Gantt charts as ASCII and CSV,
+//! and aggregates idle/compute totals for the flow-control tables.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// What a rank was doing during a span (Fig. 5 legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Task computation (blue bars).
+    Compute,
+    /// Blocked waiting on a coupled task (red bars).
+    Idle,
+    /// Data transfer (orange bars).
+    Transfer,
+}
+
+impl SpanKind {
+    pub fn glyph(&self) -> char {
+        match self {
+            SpanKind::Compute => '#',
+            SpanKind::Idle => '.',
+            SpanKind::Transfer => '=',
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Compute => "compute",
+            SpanKind::Idle => "idle",
+            SpanKind::Transfer => "transfer",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub rank: usize,
+    pub kind: SpanKind,
+    pub label: String,
+    /// Seconds since recorder origin.
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Shared, thread-safe span recorder.
+pub struct Recorder {
+    origin: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder { origin: Instant::now(), spans: Mutex::new(Vec::new()) }
+    }
+
+    pub fn record(&self, rank: usize, kind: SpanKind, label: &str, t0: Instant, t1: Instant) {
+        let start = t0.duration_since(self.origin).as_secs_f64();
+        let end = t1.duration_since(self.origin).as_secs_f64();
+        self.spans.lock().unwrap().push(Span {
+            rank,
+            kind,
+            label: label.to_string(),
+            start,
+            end,
+        });
+    }
+
+    /// Convenience: time a closure as a Compute span.
+    pub fn compute<T>(&self, rank: usize, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(rank, SpanKind::Compute, label, t0, Instant::now());
+        out
+    }
+
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Total seconds per kind for one rank.
+    pub fn totals(&self, rank: usize) -> (f64, f64, f64) {
+        let spans = self.spans.lock().unwrap();
+        let mut c = 0.0;
+        let mut i = 0.0;
+        let mut t = 0.0;
+        for s in spans.iter().filter(|s| s.rank == rank) {
+            let d = s.end - s.start;
+            match s.kind {
+                SpanKind::Compute => c += d,
+                SpanKind::Idle => i += d,
+                SpanKind::Transfer => t += d,
+            }
+        }
+        (c, i, t)
+    }
+
+    /// CSV export: rank,kind,label,start,end.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("rank,kind,label,start_s,end_s\n");
+        let mut spans = self.spans();
+        spans.sort_by(|a, b| (a.rank, a.start).partial_cmp(&(b.rank, b.start)).unwrap());
+        for s in spans {
+            out.push_str(&format!(
+                "{},{},{},{:.6},{:.6}\n",
+                s.rank,
+                s.kind.name(),
+                s.label.replace(',', ";"),
+                s.start,
+                s.end
+            ));
+        }
+        out
+    }
+
+    /// ASCII Gantt chart over the given ranks (one row per rank),
+    /// `width` columns spanning [0, max end]. Later spans overwrite
+    /// earlier ones in a cell; transfer > idle > compute on ties.
+    pub fn gantt_ascii(&self, ranks: &[usize], width: usize) -> String {
+        let spans = self.spans();
+        let tmax = spans
+            .iter()
+            .filter(|s| ranks.contains(&s.rank))
+            .map(|s| s.end)
+            .fold(0.0_f64, f64::max);
+        if tmax <= 0.0 {
+            return String::from("(no spans)\n");
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "gantt: {width} cols = {tmax:.3}s  [{}=compute {}=idle {}=transfer]\n",
+            SpanKind::Compute.glyph(),
+            SpanKind::Idle.glyph(),
+            SpanKind::Transfer.glyph()
+        ));
+        for &rank in ranks {
+            let mut row: Vec<char> = vec![' '; width];
+            let mut prio: Vec<u8> = vec![0; width];
+            for s in spans.iter().filter(|s| s.rank == rank) {
+                let a = ((s.start / tmax) * width as f64).floor() as usize;
+                let b = (((s.end / tmax) * width as f64).ceil() as usize).min(width);
+                let p = match s.kind {
+                    SpanKind::Compute => 1,
+                    SpanKind::Idle => 2,
+                    SpanKind::Transfer => 3,
+                };
+                for x in a..b.max(a + 1).min(width) {
+                    if p >= prio[x] {
+                        row[x] = s.kind.glyph();
+                        prio[x] = p;
+                    }
+                }
+            }
+            out.push_str(&format!("rank {rank:>4} |{}|\n", row.iter().collect::<String>()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn totals_accumulate_per_kind() {
+        let rec = Recorder::new();
+        let t0 = Instant::now();
+        rec.record(0, SpanKind::Compute, "a", t0, t0 + Duration::from_millis(10));
+        rec.record(0, SpanKind::Idle, "b", t0, t0 + Duration::from_millis(20));
+        rec.record(1, SpanKind::Compute, "c", t0, t0 + Duration::from_millis(5));
+        let (c, i, t) = rec.totals(0);
+        assert!((c - 0.010).abs() < 1e-9);
+        assert!((i - 0.020).abs() < 1e-9);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn compute_helper_records() {
+        let rec = Recorder::new();
+        let v = rec.compute(3, "work", || 42);
+        assert_eq!(v, 42);
+        let spans = rec.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].rank, 3);
+        assert_eq!(spans[0].kind, SpanKind::Compute);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let rec = Recorder::new();
+        let t0 = Instant::now();
+        rec.record(0, SpanKind::Transfer, "x,y", t0, t0 + Duration::from_millis(1));
+        let csv = rec.to_csv();
+        assert!(csv.starts_with("rank,kind,label,start_s,end_s\n"));
+        assert!(csv.contains("transfer"));
+        assert!(csv.contains("x;y")); // comma escaped
+    }
+
+    #[test]
+    fn gantt_renders_rows() {
+        let rec = Recorder::new();
+        let t0 = Instant::now();
+        rec.record(0, SpanKind::Compute, "a", t0, t0 + Duration::from_millis(8));
+        rec.record(1, SpanKind::Idle, "b", t0 + Duration::from_millis(2), t0 + Duration::from_millis(10));
+        let g = rec.gantt_ascii(&[0, 1], 40);
+        assert!(g.contains("rank    0"));
+        assert!(g.contains('#'));
+        assert!(g.contains('.'));
+    }
+
+    #[test]
+    fn empty_gantt() {
+        let rec = Recorder::new();
+        assert_eq!(rec.gantt_ascii(&[0], 10), "(no spans)\n");
+    }
+}

@@ -1,0 +1,114 @@
+//! Property-testing mini-framework (S16): the offline toolchain has no
+//! proptest, so invariants are swept with a deterministic xorshift RNG
+//! over many seeded cases. On failure the panic message names the
+//! failing case index so it can be replayed exactly.
+
+/// Deterministic xorshift64* generator.
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        lo + self.next_u64() % (hi - lo)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len())]
+    }
+
+    /// Random dims: `nd` dimensions each in [1, max_extent].
+    pub fn dims(&mut self, nd: usize, max_extent: u64) -> Vec<u64> {
+        (0..nd).map(|_| self.range(1, max_extent + 1)).collect()
+    }
+
+    /// Random hyperslab inside `dims`.
+    pub fn slab_within(&mut self, dims: &[u64]) -> crate::lowfive::Hyperslab {
+        let mut offset = Vec::with_capacity(dims.len());
+        let mut count = Vec::with_capacity(dims.len());
+        for &d in dims {
+            let o = self.range(0, d);
+            let c = self.range(1, d - o + 1);
+            offset.push(o);
+            count.push(c);
+        }
+        crate::lowfive::Hyperslab::new(&offset, &count)
+    }
+}
+
+/// Run `f` over `cases` deterministic seeds; name the failing case.
+pub fn run_prop(name: &str, cases: u64, f: impl Fn(&mut Rng)) {
+    for case in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(case);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property {name:?} FAILED at case {case} (replay with Rng::new({case}))");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_stays_in_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.range(5, 10);
+            assert!((5..10).contains(&v));
+        }
+    }
+
+    #[test]
+    fn slab_fits() {
+        let mut r = Rng::new(3);
+        for _ in 0..200 {
+            let dims = r.dims(3, 20);
+            let s = r.slab_within(&dims);
+            assert!(s.fits_within(&dims));
+            assert!(!s.is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_prop_reports() {
+        run_prop("always-fails", 3, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,142 @@
+//! artifacts/manifest.tsv parsing: per-artifact I/O signatures written
+//! by python/compile/aot.py ("name \t ins \t outs", shapes like
+//! `f32[4096,3]` joined with `;`).
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+
+use crate::error::{Result, WilkinsError};
+
+/// One tensor's dtype + shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn parse(s: &str) -> Result<TensorSig> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .ok_or_else(|| WilkinsError::Runtime(format!("bad tensor sig {s:?}")))?;
+        let dims_s = rest
+            .strip_suffix(']')
+            .ok_or_else(|| WilkinsError::Runtime(format!("bad tensor sig {s:?}")))?;
+        let dims = if dims_s.is_empty() {
+            Vec::new()
+        } else {
+            dims_s
+                .split(',')
+                .map(|d| {
+                    d.trim().parse::<usize>().map_err(|e| {
+                        WilkinsError::Runtime(format!("bad dim {d:?} in {s:?}: {e}"))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSig { dtype: dtype.to_string(), dims })
+    }
+}
+
+impl fmt::Display for TensorSig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}]",
+            self.dtype,
+            self.dims
+                .iter()
+                .map(ToString::to_string)
+                .collect::<Vec<_>>()
+                .join(",")
+        )
+    }
+}
+
+/// Full I/O signature of one artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signature {
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+fn parse_list(s: &str) -> Result<Vec<TensorSig>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(';').map(TensorSig::parse).collect()
+}
+
+pub fn load(path: &Path) -> Result<HashMap<String, Signature>> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        WilkinsError::Runtime(format!(
+            "cannot read {} (run `make artifacts`): {e}",
+            path.display()
+        ))
+    })?;
+    let mut out = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let (Some(name), Some(ins), Some(outs)) =
+            (parts.next(), parts.next(), parts.next())
+        else {
+            return Err(WilkinsError::Runtime(format!(
+                "manifest line {} malformed: {line:?}",
+                lineno + 1
+            )));
+        };
+        out.insert(
+            name.to_string(),
+            Signature { inputs: parse_list(ins)?, outputs: parse_list(outs)? },
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_sig_parse_roundtrip() {
+        let t = TensorSig::parse("f32[4096,3]").unwrap();
+        assert_eq!(t.dtype, "f32");
+        assert_eq!(t.dims, vec![4096, 3]);
+        assert_eq!(t.element_count(), 12288);
+        assert_eq!(t.to_string(), "f32[4096,3]");
+    }
+
+    #[test]
+    fn scalar_sig() {
+        let t = TensorSig::parse("f32[]").unwrap();
+        assert_eq!(t.dims, Vec::<usize>::new());
+        assert_eq!(t.element_count(), 1);
+    }
+
+    #[test]
+    fn bad_sigs_rejected() {
+        assert!(TensorSig::parse("f32").is_err());
+        assert!(TensorSig::parse("f32[a]").is_err());
+        assert!(TensorSig::parse("f32[1,2").is_err());
+    }
+
+    #[test]
+    fn manifest_load() {
+        let dir = std::env::temp_dir().join("wilkins-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.tsv");
+        std::fs::write(&p, "md\tf32[8,3];f32[8,3]\tf32[8,3];f32[8,3]\nhalo\tf32[4,4,4];f32[1]\tf32[4,4,4];f32[4]\n").unwrap();
+        let m = load(&p).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["md"].inputs.len(), 2);
+        assert_eq!(m["halo"].outputs[1].dims, vec![4]);
+    }
+}

@@ -1,0 +1,220 @@
+//! PJRT runtime (S10): loads the AOT-compiled `artifacts/*.hlo.txt`
+//! payloads and executes them from the Rust request path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py).
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so the engine owns it on a
+//! dedicated thread; rank threads talk to it through a cloneable
+//! [`EngineHandle`]. Executables are compiled once and cached — the
+//! compile cost never lands on the workflow hot path. Requests execute
+//! in arrival order, which matches the one-accelerator-per-node model
+//! of the testbed.
+
+mod manifest;
+
+pub use manifest::{Signature, TensorSig};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+
+use crate::error::{Result, WilkinsError};
+
+enum EngineMsg {
+    Run {
+        name: String,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Signature {
+        name: String,
+        reply: mpsc::Sender<Result<Signature>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<EngineMsg>,
+}
+
+impl EngineHandle {
+    /// Execute artifact `name` with flat f32 inputs; returns the flat
+    /// f32 outputs (one Vec per tuple element).
+    pub fn run(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(EngineMsg::Run { name: name.to_string(), inputs, reply })
+            .map_err(|_| WilkinsError::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| WilkinsError::Runtime("engine thread dropped reply".into()))?
+    }
+
+    /// I/O signature of an artifact (from the manifest).
+    pub fn signature(&self, name: &str) -> Result<Signature> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(EngineMsg::Signature { name: name.to_string(), reply })
+            .map_err(|_| WilkinsError::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| WilkinsError::Runtime("engine thread dropped reply".into()))?
+    }
+}
+
+/// The engine: owns the PJRT client and compiled executables.
+pub struct Engine {
+    tx: mpsc::Sender<EngineMsg>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start the engine thread over an artifacts directory (must
+    /// contain manifest.tsv + *.hlo.txt from `make artifacts`).
+    pub fn start(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = manifest::load(&artifacts_dir.join("manifest.tsv"))?;
+        let dir = artifacts_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<EngineMsg>();
+        let join = thread::Builder::new()
+            .name("wilkins-pjrt".into())
+            .spawn(move || engine_main(dir, manifest, rx))
+            .map_err(|e| WilkinsError::Runtime(format!("spawn engine: {e}")))?;
+        Ok(Engine { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        EngineHandle { tx: self.tx.clone() }
+    }
+
+    /// Default artifacts directory: $WILKINS_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("WILKINS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(EngineMsg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_main(
+    dir: PathBuf,
+    manifest: HashMap<String, Signature>,
+    rx: mpsc::Receiver<EngineMsg>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the same error.
+            let msg = format!("PJRT CPU client failed: {e}");
+            for m in rx {
+                match m {
+                    EngineMsg::Run { reply, .. } => {
+                        let _ = reply.send(Err(WilkinsError::Runtime(msg.clone())));
+                    }
+                    EngineMsg::Signature { reply, .. } => {
+                        let _ = reply.send(Err(WilkinsError::Runtime(msg.clone())));
+                    }
+                    EngineMsg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    for m in rx {
+        match m {
+            EngineMsg::Shutdown => break,
+            EngineMsg::Signature { name, reply } => {
+                let sig = manifest
+                    .get(&name)
+                    .cloned()
+                    .ok_or_else(|| WilkinsError::Runtime(format!("unknown artifact {name}")));
+                let _ = reply.send(sig);
+            }
+            EngineMsg::Run { name, inputs, reply } => {
+                let res = run_one(&dir, &manifest, &client, &mut cache, &name, inputs);
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+fn run_one(
+    dir: &Path,
+    manifest: &HashMap<String, Signature>,
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    inputs: Vec<Vec<f32>>,
+) -> Result<Vec<Vec<f32>>> {
+    let sig = manifest
+        .get(name)
+        .ok_or_else(|| WilkinsError::Runtime(format!("unknown artifact {name}")))?;
+    if inputs.len() != sig.inputs.len() {
+        return Err(WilkinsError::Runtime(format!(
+            "{name}: expected {} inputs, got {}",
+            sig.inputs.len(),
+            inputs.len()
+        )));
+    }
+    for (i, (buf, ts)) in inputs.iter().zip(&sig.inputs).enumerate() {
+        if buf.len() != ts.element_count() {
+            return Err(WilkinsError::Runtime(format!(
+                "{name}: input {i} needs {} elements ({}), got {}",
+                ts.element_count(),
+                ts,
+                buf.len()
+            )));
+        }
+    }
+    if !cache.contains_key(name) {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(WilkinsError::Runtime(format!(
+                "artifact {} missing; run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| WilkinsError::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        cache.insert(name.to_string(), exe);
+    }
+    let exe = &cache[name];
+    let mut lits = Vec::with_capacity(inputs.len());
+    for (buf, ts) in inputs.iter().zip(&sig.inputs) {
+        let dims: Vec<i64> = ts.dims.iter().map(|&d| d as i64).collect();
+        lits.push(xla::Literal::vec1(buf).reshape(&dims)?);
+    }
+    let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: the root is always a tuple.
+    let parts = result.to_tuple()?;
+    if parts.len() != sig.outputs.len() {
+        return Err(WilkinsError::Runtime(format!(
+            "{name}: manifest says {} outputs, executable returned {}",
+            sig.outputs.len(),
+            parts.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(parts.len());
+    for p in parts {
+        out.push(p.to_vec::<f32>()?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,139 @@
+//! Runtime tests against the real AOT artifacts. These require
+//! `make artifacts` to have run; they are skipped (with a note) when
+//! the artifacts directory is absent so plain `cargo test` still works.
+
+use std::path::PathBuf;
+
+use super::Engine;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Engine::default_dir();
+    let dir = if dir.is_relative() {
+        // Tests run from the crate root.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(dir)
+    } else {
+        dir
+    };
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime test: {} missing (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn engine_reports_signatures() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::start(&dir).unwrap();
+    let h = engine.handle();
+    let sig = h.signature("md_step").unwrap();
+    assert_eq!(sig.inputs.len(), 2);
+    assert_eq!(sig.inputs[0].dims, vec![4096, 3]);
+    assert!(h.signature("nope").is_err());
+}
+
+#[test]
+fn nyx_step_executes_and_conserves_mass() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::start(&dir).unwrap();
+    let h = engine.handle();
+    let n = 64 * 64 * 64;
+    // Deterministic pseudo-random density around 1.0.
+    let den: Vec<f32> = (0..n)
+        .map(|i| 1.0 + 0.3 * (((i * 2654435761_usize) % 1000) as f32 / 1000.0 - 0.5))
+        .collect();
+    let total0: f64 = den.iter().map(|&x| x as f64).sum();
+    let out = h.run("nyx_step", vec![den]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), n);
+    let total1: f64 = out[0].iter().map(|&x| x as f64).sum();
+    assert!((total1 - total0).abs() / total0 < 1e-4, "{total0} vs {total1}");
+    assert!(out[0].iter().all(|x| x.is_finite() && *x >= 0.0));
+}
+
+#[test]
+fn halo_finder_counts_isolated_peak() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::start(&dir).unwrap();
+    let h = engine.handle();
+    let n = 64 * 64 * 64;
+    let mut den = vec![0.0f32; n];
+    den[(32 * 64 + 32) * 64 + 32] = 5.0;
+    let out = h.run("halo_finder", vec![den, vec![1.0]]).unwrap();
+    assert_eq!(out.len(), 2);
+    let stats = &out[1];
+    assert_eq!(stats[0], 1.0, "one halo");
+    assert_eq!(stats[1], 5.0, "its mass");
+    assert_eq!(stats[2], 5.0, "peak density");
+}
+
+#[test]
+fn md_step_and_detector_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::start(&dir).unwrap();
+    let h = engine.handle();
+    // 16^3 jittered lattice in an 18.0 box (mirrors python tests).
+    let nside = 16;
+    let box_ = 18.0f32;
+    let spacing = box_ / nside as f32;
+    let mut pos = Vec::with_capacity(4096 * 3);
+    for i in 0..nside {
+        for j in 0..nside {
+            for k in 0..nside {
+                let jit = |v: usize| ((v * 2654435761) % 97) as f32 / 97.0 * 0.1 - 0.05;
+                pos.push((i as f32 + 0.5) * spacing + jit(i * 256 + j) * spacing);
+                pos.push((j as f32 + 0.5) * spacing + jit(j * 256 + k) * spacing);
+                pos.push((k as f32 + 0.5) * spacing + jit(k * 256 + i) * spacing);
+            }
+        }
+    }
+    let vel = vec![0.0f32; 4096 * 3];
+    let out = h.run("md_step", vec![pos.clone(), vel]).unwrap();
+    assert_eq!(out.len(), 2);
+    let (p1, v1) = (&out[0], &out[1]);
+    assert!(p1.iter().all(|x| x.is_finite() && *x >= 0.0 && *x < box_));
+    assert!(v1.iter().all(|x| x.is_finite()));
+    // Atoms moved.
+    let moved = p1
+        .iter()
+        .zip(&pos)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(moved > 0.0);
+
+    let det = h.run("diamond_detector", vec![out[0].clone()]).unwrap();
+    let stats = &det[0];
+    assert_eq!(stats.len(), 4);
+    assert_eq!(stats[3], 4096.0);
+    assert!(stats[0] >= 0.0 && stats[0] <= 4096.0);
+}
+
+#[test]
+fn shape_validation_errors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::start(&dir).unwrap();
+    let h = engine.handle();
+    assert!(h.run("nyx_step", vec![vec![0.0; 7]]).is_err());
+    assert!(h.run("nyx_step", vec![]).is_err());
+    assert!(h.run("unknown", vec![]).is_err());
+}
+
+#[test]
+fn handle_is_cloneable_across_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::start(&dir).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let h = engine.handle();
+            std::thread::spawn(move || {
+                let den = vec![1.0f32; 64 * 64 * 64];
+                let out = h.run("nyx_step", vec![den]).unwrap();
+                assert_eq!(out[0].len(), 64 * 64 * 64);
+            })
+        })
+        .collect();
+    for t in handles {
+        t.join().unwrap();
+    }
+}

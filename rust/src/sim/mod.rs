@@ -1,0 +1,112 @@
+//! Interconnect/time model (S12): projects testbed measurements to
+//! paper-scale hardware for reporting.
+//!
+//! The paper's experiments ran on Bebop (36-core Broadwell nodes,
+//! Intel Omni-Path). This testbed is one core of one machine, so the
+//! benches measure scaled-down workloads; this module carries the cost
+//! model used in EXPERIMENTS.md to sanity-check that the measured
+//! *shapes* extrapolate: an alpha-beta (latency-bandwidth) transfer
+//! model plus a node-parallelism model for ensemble layouts.
+
+/// Alpha-beta interconnect model: time = alpha + bytes / beta.
+#[derive(Debug, Clone, Copy)]
+pub struct NetModel {
+    /// Per-message latency (seconds).
+    pub alpha: f64,
+    /// Bandwidth (bytes/second).
+    pub beta: f64,
+}
+
+/// Intel Omni-Path (Bebop): ~1 us MPI latency, ~100 Gbit/s.
+pub const OMNI_PATH: NetModel = NetModel { alpha: 1.0e-6, beta: 12.5e9 };
+
+/// This testbed's intra-process channel transport, fit from the
+/// overhead bench (memcpy-speed bandwidth, mailbox-lock latency).
+pub const TESTBED: NetModel = NetModel { alpha: 2.0e-6, beta: 6.0e9 };
+
+impl NetModel {
+    /// Time to move one message of `bytes`.
+    pub fn xfer(&self, bytes: u64) -> f64 {
+        self.alpha + bytes as f64 / self.beta
+    }
+
+    /// Time for `count` messages sent *sequentially* from one endpoint
+    /// (the fan-out/fan-in serialization of Figs. 7/8).
+    pub fn sequential(&self, count: u64, bytes_each: u64) -> f64 {
+        count as f64 * self.xfer(bytes_each)
+    }
+
+    /// Time for `count` transfers spread over `parallelism` independent
+    /// paths (the NxN regime of Fig. 9).
+    pub fn parallel(&self, count: u64, bytes_each: u64, parallelism: u64) -> f64 {
+        let waves = count.div_ceil(parallelism.max(1));
+        waves as f64 * self.xfer(bytes_each)
+    }
+}
+
+/// Project a measured testbed series onto paper-scale hardware: scale
+/// transfer terms by the bandwidth ratio and evaluate what fraction of
+/// the measured time survives. Used for the EXPERIMENTS.md projection
+/// tables — a reporting aid, not a claim of absolute accuracy.
+pub fn project(measured_s: f64, bytes_moved: u64, from: NetModel, to: NetModel) -> f64 {
+    let xfer_from = from.xfer(bytes_moved);
+    let non_transfer = (measured_s - xfer_from).max(0.0);
+    non_transfer + to.xfer(bytes_moved)
+}
+
+/// Ensemble-layout model: completion time of `instances` independent
+/// pairs each costing `per_instance_s`, on `nodes` nodes (Fig. 9/10
+/// shape: flat once nodes >= instances).
+pub fn ensemble_completion(instances: u64, per_instance_s: f64, nodes: u64) -> f64 {
+    let waves = instances.div_ceil(nodes.max(1));
+    waves as f64 * per_instance_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xfer_is_alpha_plus_size_over_beta() {
+        let m = NetModel { alpha: 1e-6, beta: 1e9 };
+        let t = m.xfer(1_000_000);
+        assert!((t - (1e-6 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sequential_scales_linearly() {
+        let m = OMNI_PATH;
+        let t1 = m.sequential(16, 19 << 20);
+        let t2 = m.sequential(256, 19 << 20);
+        let ratio = t2 / t1;
+        assert!((ratio - 16.0).abs() < 1e-9);
+        // Paper Fig. 7: 0.6s @16 -> 8.2s @256 is 13.7x, close to the
+        // 16x pure-serialization model (the gap is overlap/caching).
+        assert!(ratio > 13.0);
+    }
+
+    #[test]
+    fn parallel_is_flat_when_enough_nodes() {
+        let m = OMNI_PATH;
+        let t16 = m.parallel(16, 19 << 20, 256);
+        let t256 = m.parallel(256, 19 << 20, 256);
+        assert!((t16 - t256).abs() < 1e-12, "NxN flat when nodes >= instances");
+    }
+
+    #[test]
+    fn ensemble_completion_flat_then_waves() {
+        assert_eq!(ensemble_completion(64, 2.0, 64), 2.0);
+        assert_eq!(ensemble_completion(64, 2.0, 1), 128.0);
+        assert_eq!(ensemble_completion(65, 2.0, 64), 4.0);
+    }
+
+    #[test]
+    fn projection_reduces_transfer_term() {
+        let slow = NetModel { alpha: 1e-6, beta: 1e8 };
+        let fast = NetModel { alpha: 1e-6, beta: 1e10 };
+        // 1 GB at 100 MB/s = 10s measured, 1s compute on top.
+        let measured = 11.0;
+        let projected = project(measured, 1_000_000_000, slow, fast);
+        assert!(projected < 1.2 && projected > 1.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Diamond-structure feature detector (`detector`, paper Sec. 4.2.1):
+//! the stateless analysis task of the nucleation ensemble.
+//!
+//! Each invocation handles exactly one dump: the ranks read their row
+//! split of the particle positions in parallel (exercising the M-to-N
+//! redistribution), gather to rank 0, and rank 0 runs the AOT
+//! `diamond_detector` payload (L1 Pallas coordination-counting kernel)
+//! to count atoms in diamond-lattice coordination — the nucleation
+//! signal.
+
+use crate::error::{Result, WilkinsError};
+use crate::henson::TaskContext;
+use crate::lowfive::split_rows;
+
+use super::bytes_to_f32s;
+
+pub const FILE: &str = "dump-h5md.h5";
+pub const POSITIONS: &str = "/particles/position";
+
+pub fn detector(ctx: &mut TaskContext) -> Result<()> {
+    let name = match ctx.vol.file_open(FILE) {
+        Ok(n) => n,
+        // Stateful use (launched once): drain until EOF ourselves.
+        Err(WilkinsError::EndOfStream) => return Ok(()),
+        Err(e) => return Err(e),
+    };
+    let meta = ctx.vol.dataset_meta(&name, POSITIONS)?;
+    let want = split_rows(&meta.dims, ctx.size())[ctx.rank()].clone();
+    let bytes = ctx.vol.dataset_read(&name, POSITIONS, &want)?;
+    let timestep = ctx
+        .vol
+        .consumer_file(&name)?
+        .attr("timestep")
+        .and_then(|a| a.as_i64())
+        .unwrap_or(-1);
+    ctx.vol.file_close(&name)?;
+
+    // Gather the slabs to rank 0 (in rank order == row order).
+    let gathered = ctx.comm.gather(0, &bytes)?;
+    if let Some(parts) = gathered {
+        let mut pos: Vec<f32> = Vec::with_capacity(meta.element_count() as usize);
+        for p in parts {
+            pos.extend(bytes_to_f32s(&p));
+        }
+        let engine = ctx.engine()?.clone();
+        let out = ctx.compute("diamond_detector", || {
+            engine.run("diamond_detector", vec![pos])
+        })?;
+        let stats = &out[0];
+        log::info!(
+            "{}: dump t={} n_crystal={} mean_coord={:.3}",
+            ctx.name,
+            timestep,
+            stats[0],
+            stats[1]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! LAMMPS proxy (`freeze`, paper Sec. 4.2.1): molecular-dynamics
+//! producer for the nucleation ensemble.
+//!
+//! Mirrors LAMMPS's I/O scheme: all ranks advance the simulation, the
+//! data are gathered to rank 0, and rank 0 alone writes the dump
+//! (`nwriters: 1` in the YAML — Wilkins' subset-writers feature). The
+//! MD physics is the AOT-compiled `md_step` payload (L2 JAX leapfrog
+//! over the L1 Pallas pairwise-LJ kernel, N=4096 atoms; the paper uses
+//! a 4,360-atom water model).
+//!
+//! `params:`
+//!   dumps           analysis dumps to produce            (default 3)
+//!   execs_per_dump  md_step executions between dumps     (default 1;
+//!                   each fuses MD_UNROLL=10 leapfrog steps)
+//!   seed            per-instance initial-condition seed offset
+
+use crate::error::Result;
+use crate::henson::TaskContext;
+use crate::lowfive::{AttrValue, DType, Hyperslab};
+
+use super::f32s_to_bytes;
+
+pub const FILE: &str = "dump-h5md.h5";
+pub const POSITIONS: &str = "/particles/position";
+
+pub const N_ATOMS: usize = 4096;
+pub const BOX: f32 = 18.0;
+
+/// Deterministic jittered-lattice initial condition; the per-instance
+/// seed varies the jitter (the ensemble's "different initial
+/// configurations" hunting for a rare nucleation event).
+pub fn init_positions(seed: u64) -> Vec<f32> {
+    let nside = 16; // 16^3 == N_ATOMS
+    let spacing = BOX / nside as f32;
+    let mut pos = Vec::with_capacity(N_ATOMS * 3);
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+    let mut next = || {
+        // xorshift64*
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        let v = state.wrapping_mul(0x2545F4914F6CDD1D);
+        ((v >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+    };
+    for i in 0..nside {
+        for j in 0..nside {
+            for k in 0..nside {
+                pos.push((i as f32 + 0.5) * spacing + 0.1 * spacing * next());
+                pos.push((j as f32 + 0.5) * spacing + 0.1 * spacing * next());
+                pos.push((k as f32 + 0.5) * spacing + 0.1 * spacing * next());
+            }
+        }
+    }
+    pos
+}
+
+pub fn freeze(ctx: &mut TaskContext) -> Result<()> {
+    let dumps = ctx.param_i64("dumps", 3) as u64;
+    let execs = ctx.param_i64("execs_per_dump", 1).max(1) as u64;
+    let seed = ctx.param_i64("seed", 0) as u64 + ctx.instance as u64;
+
+    // Simulation state lives on rank 0 (LAMMPS gathers there anyway);
+    // the other ranks participate in the stepping barrier so the whole
+    // task advances in lockstep like a real domain-decomposed run.
+    let mut pos = init_positions(seed);
+    let mut vel = vec![0.0f32; N_ATOMS * 3];
+
+    for t in 0..dumps {
+        for _ in 0..execs {
+            if ctx.rank() == 0 {
+                let engine = ctx.engine()?.clone();
+                let out = ctx.compute("md_step", || {
+                    engine.run("md_step", vec![pos.clone(), vel.clone()])
+                })?;
+                pos = out[0].clone();
+                vel = out[1].clone();
+            }
+            ctx.comm.barrier()?;
+        }
+        // Dump: rank 0 writes serially (subset writers).
+        if ctx.vol.is_io_rank() {
+            let vol = &mut ctx.vol;
+            vol.file_create(FILE)?;
+            vol.attr_write(FILE, "timestep", AttrValue::Int(t as i64))?;
+            vol.attr_write(FILE, "instance", AttrValue::Int(ctx.instance as i64))?;
+            vol.dataset_create(FILE, POSITIONS, DType::F32, &[N_ATOMS as u64, 3])?;
+            vol.dataset_write(
+                FILE,
+                POSITIONS,
+                Hyperslab::whole(&[N_ATOMS as u64, 3]),
+                f32s_to_bytes(&pos),
+            )?;
+            vol.file_close(FILE)?;
+        }
+        ctx.comm.barrier()?;
+    }
+    Ok(())
+}

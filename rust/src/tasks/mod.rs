@@ -1,0 +1,145 @@
+//! Built-in task codes (S13): the user programs the paper couples.
+//!
+//! Each is written the way the paper demands — standalone SPMD code
+//! that only talks to its restricted-world communicator and the
+//! HDF5-like Vol API, with zero workflow awareness. The coordinator
+//! resolves them by their YAML `func` name from [`builtin_registry`].
+
+pub mod diamond;
+pub mod lammps_proxy;
+pub mod nyx_proxy;
+pub mod reeber_proxy;
+pub mod synthetic;
+
+use crate::comm::Comm;
+use crate::error::Result;
+use crate::henson::Registry;
+use crate::lowfive::Hyperslab;
+
+/// Redistribute per-rank slabs onto the writer subset (Sec. 3.2.2):
+/// every rank contributes its `(slab, bytes)`; the first `nwriters`
+/// ranks return the collected list to write, others return empty.
+/// This is the "LAMMPS gathers all data to rank 0" pattern, built on
+/// the task's restricted world only — no workflow API involved.
+pub fn gather_to_writers(
+    comm: &Comm,
+    nwriters: usize,
+    slab: Hyperslab,
+    bytes: Vec<u8>,
+) -> Result<Vec<(Hyperslab, Vec<u8>)>> {
+    let mut w = crate::comm::wire::Writer::with_capacity(bytes.len() + 64);
+    slab.encode(&mut w);
+    w.put_bytes(&bytes);
+    let gathered = comm.gather(0, &w.into_vec())?;
+    match gathered {
+        None => Ok(Vec::new()),
+        Some(parts) => {
+            // Rank 0 fans the contributions out round-robin over the
+            // writer subset (itself included).
+            let mut per_writer: Vec<Vec<(Hyperslab, Vec<u8>)>> =
+                vec![Vec::new(); nwriters.max(1)];
+            for (i, part) in parts.into_iter().enumerate() {
+                let mut r = crate::comm::wire::Reader::new(&part);
+                let s = Hyperslab::decode(&mut r)?;
+                let b = r.get_bytes()?.to_vec();
+                per_writer[i % nwriters.max(1)].push((s, b));
+            }
+            for (widx, blocks) in per_writer.iter().enumerate().skip(1) {
+                let mut w = crate::comm::wire::Writer::new();
+                w.put_u64(blocks.len() as u64);
+                for (s, b) in blocks {
+                    s.encode(&mut w);
+                    w.put_bytes(b);
+                }
+                comm.send_owned(widx, WRITER_TAG, w.into_vec());
+            }
+            Ok(per_writer.swap_remove(0))
+        }
+    }
+    .and_then(|mine| {
+        if comm.rank() == 0 || comm.rank() >= nwriters {
+            return Ok(mine);
+        }
+        // Non-zero writer ranks receive their share from rank 0.
+        let (_, buf) = comm.recv(0, WRITER_TAG)?;
+        let mut r = crate::comm::wire::Reader::new(&buf);
+        let n = r.get_u64()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = Hyperslab::decode(&mut r)?;
+            out.push((s, r.get_bytes()?.to_vec()));
+        }
+        Ok(out)
+    })
+}
+
+/// Reserved user tag for the writer-subset redistribution.
+const WRITER_TAG: u64 = 1_000_001;
+
+/// Registry with every built-in task code under its paper name.
+pub fn builtin_registry() -> Registry {
+    let mut r = Registry::new();
+    // Synthetic benchmark pair (Sec. 4.1). The listings use several
+    // consumer names; they all run the same code.
+    r.register_fn("producer", synthetic::producer);
+    r.register_fn("consumer", synthetic::consumer);
+    r.register_fn("consumer1", synthetic::consumer);
+    r.register_fn("consumer2", synthetic::consumer);
+    // Materials science (Sec. 4.2.1).
+    r.register_fn("freeze", lammps_proxy::freeze);
+    r.register_fn("detector", diamond::detector);
+    // Cosmology (Sec. 4.2.2).
+    r.register_fn("nyx", nyx_proxy::nyx);
+    r.register_fn("reeber", reeber_proxy::reeber);
+    r
+}
+
+// ---- byte conversion helpers (shared by the task codes) --------------------
+
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; xs.len() * 4];
+    for (dst, v) in out.chunks_exact_mut(4).zip(xs) {
+        dst.copy_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Fill a fresh buffer with little-endian u64s produced by `f(i)` for
+/// i in [0, n) — the fast path for synthetic data generation (§Perf
+/// iteration 4: chunked writes instead of per-byte iterators).
+pub fn gen_u64_bytes(n: u64, f: impl Fn(u64) -> u64) -> Vec<u8> {
+    let mut out = vec![0u8; n as usize * 8];
+    for (i, dst) in out.chunks_exact_mut(8).enumerate() {
+        dst.copy_from_slice(&f(i as u64).to_le_bytes());
+    }
+    out
+}
+
+/// Same for f32 values.
+pub fn gen_f32_bytes(n: u64, f: impl Fn(u64) -> f32) -> Vec<u8> {
+    let mut out = vec![0u8; n as usize * 4];
+    for (i, dst) in out.chunks_exact_mut(4).enumerate() {
+        dst.copy_from_slice(&f(i as u64).to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+pub fn u64s_to_bytes(xs: &[u64]) -> Vec<u8> {
+    let mut out = vec![0u8; xs.len() * 8];
+    for (dst, v) in out.chunks_exact_mut(8).zip(xs) {
+        dst.copy_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_u64s(b: &[u8]) -> Vec<u64> {
+    b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}

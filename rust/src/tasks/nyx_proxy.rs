@@ -1,0 +1,98 @@
+//! Nyx proxy (`nyx`, paper Sec. 4.2.2): cosmological-simulation
+//! producer with Nyx's pathological HDF5 I/O pattern.
+//!
+//! The physics is the AOT `nyx_step` payload (mass-conserving
+//! diffusion + logistic overdensity growth on a 64^3 grid; the paper
+//! runs 256^3). The I/O reproduces exactly what breaks LowFive's
+//! assumptions and motivates the custom-callback feature:
+//!
+//!   1. rank 0 alone creates the plotfile and writes small metadata,
+//!      then closes it               (file closed the 1st time);
+//!   2. every rank re-opens the file collectively and writes its
+//!      z-slab of the density, then closes (2nd close for rank 0).
+//!
+//! Without the `("actions", "nyx")` script (Listing 5) the default
+//! serve-on-close would fire at the metadata close and deadlock /
+//! serve torn data; with it, serving happens only after the bulk
+//! writes.
+//!
+//! `params:`
+//!   snapshots           plotfiles to produce              (default 5)
+//!   steps_per_snapshot  nyx_step executions between them  (default 1)
+
+use crate::error::Result;
+use crate::henson::TaskContext;
+use crate::lowfive::{split_rows, AttrValue, DType};
+
+use super::{bytes_to_f32s, f32s_to_bytes};
+
+pub const DENSITY: &str = "/level_0/density";
+pub const GRID: u64 = 64;
+
+/// Deterministic white-noise-around-1 initial density.
+pub fn init_density() -> Vec<f32> {
+    let n = (GRID * GRID * GRID) as usize;
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            1.0 + 0.3 * (((h >> 40) as f32 / (1u64 << 24) as f32) - 0.5)
+        })
+        .collect()
+}
+
+pub fn nyx(ctx: &mut TaskContext) -> Result<()> {
+    let snapshots = ctx.param_i64("snapshots", 5) as u64;
+    let steps = ctx.param_i64("steps_per_snapshot", 1).max(1) as u64;
+    let dims = [GRID, GRID, GRID];
+    let nprocs = ctx.size();
+    let rank = ctx.rank();
+    let my_slab = split_rows(&dims, nprocs)[rank].clone();
+
+    // Rank 0 holds the evolving field (the AMReX hierarchy proxy) and
+    // scatters z-slabs after each evolution phase, emulating the
+    // domain decomposition's owned data.
+    let mut density = if rank == 0 { init_density() } else { Vec::new() };
+
+    for t in 0..snapshots {
+        // --- compute phase -------------------------------------------------
+        if rank == 0 {
+            let engine = ctx.engine()?.clone();
+            for _ in 0..steps {
+                let out = ctx.compute("nyx_step", || {
+                    engine.run("nyx_step", vec![density.clone()])
+                })?;
+                density = out[0].clone();
+            }
+        }
+        // Distribute the field so each rank owns its slab.
+        let full = ctx.comm.bcast(
+            0,
+            if rank == 0 { Some(f32s_to_bytes(&density)) } else { None }
+                .as_deref(),
+        )?;
+        let full = bytes_to_f32s(&full);
+        let row = (GRID * GRID) as usize;
+        let z0 = my_slab.offset[0] as usize;
+        let zn = my_slab.count[0] as usize;
+        let mine = &full[z0 * row..(z0 + zn) * row];
+
+        // --- Nyx's custom I/O pattern ---------------------------------------
+        let name = format!("plt{t:05}.h5");
+        if rank == 0 {
+            // 1st open/close: metadata only, single rank.
+            ctx.vol.file_create(&name)?;
+            ctx.vol.attr_write(&name, "timestep", AttrValue::Int(t as i64))?;
+            ctx.vol
+                .attr_write(&name, "code", AttrValue::Str("nyx-proxy".into()))?;
+            ctx.vol.file_close(&name)?;
+        }
+        // 2nd open: collective; the nyx action moves rank 0's file
+        // state to everyone in before_file_open.
+        ctx.vol.producer_file_open(&name)?;
+        ctx.vol.dataset_create(&name, DENSITY, DType::F32, &dims)?;
+        ctx.vol
+            .dataset_write(&name, DENSITY, my_slab.clone(), f32s_to_bytes(mine))?;
+        ctx.vol.file_close(&name)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Reeber proxy (`reeber`, paper Sec. 4.2.2): the halo-finding
+//! consumer of the cosmology workflow.
+//!
+//! Each snapshot: ranks read their z-slab of the density in parallel,
+//! gather to rank 0, and rank 0 runs the AOT `halo_finder` payload
+//! (L1 Pallas thresholded local-max stencil). The paper intentionally
+//! slowed Reeber ~100x by recomputing the halos many times to make
+//! flow control visible — `analysis_rounds` reproduces that.
+//!
+//! `params:`
+//!   analysis_rounds   halo_finder executions per snapshot (default 1;
+//!                     the paper's slowed run uses 100)
+//!   threshold         density threshold (default 2.0)
+//!   sleep_s           extra emulated analysis seconds     (default 0)
+
+use crate::error::{Result, WilkinsError};
+use crate::henson::TaskContext;
+use crate::lowfive::split_rows;
+
+use super::bytes_to_f32s;
+
+pub const DENSITY: &str = "/level_0/density";
+pub const FILE_PATTERN: &str = "plt*.h5";
+
+pub fn reeber(ctx: &mut TaskContext) -> Result<()> {
+    let rounds = ctx.param_i64("analysis_rounds", 1).max(1);
+    let threshold = ctx.param_f64("threshold", 2.0) as f32;
+    let sleep_s = ctx.param_f64("sleep_s", 0.0);
+    loop {
+        let name = match ctx.vol.file_open(FILE_PATTERN) {
+            Ok(n) => n,
+            Err(WilkinsError::EndOfStream) => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        let meta = ctx.vol.dataset_meta(&name, DENSITY)?;
+        let want = split_rows(&meta.dims, ctx.size())[ctx.rank()].clone();
+        let bytes = ctx.vol.dataset_read(&name, DENSITY, &want)?;
+        let timestep = ctx
+            .vol
+            .consumer_file(&name)?
+            .attr("timestep")
+            .and_then(|a| a.as_i64())
+            .unwrap_or(-1);
+        ctx.vol.file_close(&name)?;
+
+        let gathered = ctx.comm.gather(0, &bytes)?;
+        if let Some(parts) = gathered {
+            let mut density: Vec<f32> = Vec::with_capacity(meta.element_count() as usize);
+            for p in parts {
+                density.extend(bytes_to_f32s(&p));
+            }
+            let engine = ctx.engine()?.clone();
+            let mut stats = vec![0.0f32; 4];
+            for _ in 0..rounds {
+                let out = ctx.compute("halo_finder", || {
+                    engine.run("halo_finder", vec![density.clone(), vec![threshold]])
+                })?;
+                stats = out[1].clone();
+            }
+            log::info!(
+                "{}: snapshot t={} halos={} mass={:.1} peak={:.3}",
+                ctx.name,
+                timestep,
+                stats[0],
+                stats[1],
+                stats[2]
+            );
+        }
+        if sleep_s > 0.0 {
+            ctx.sleep_compute("reeber_extra", sleep_s);
+        }
+        // Keep non-zero ranks in lockstep with rank 0's analysis.
+        ctx.comm.barrier()?;
+    }
+}

@@ -1,0 +1,145 @@
+//! Synthetic producer/consumer pair (paper Sec. 4.1).
+//!
+//! The producer generates the paper's two datasets per timestep — a
+//! regular grid of 64-bit unsigned integers and a list of particles,
+//! each a 3-vector of f32 (8 B and 12 B per element; 10^6 of each per
+//! producer rank = 19 MiB/rank at paper scale) — writes them with a
+//! row-split hyperslab decomposition and closes the file, which is
+//! where LowFive serves the data. The consumer opens, reads its own
+//! row split of both datasets and closes.
+//!
+//! `params:` knobs (all optional):
+//!   steps            timesteps to produce/consume        (default 1)
+//!   grid_per_proc    grid elements per producer rank     (default 10^4)
+//!   particles_per_proc particles per producer rank       (default 10^4)
+//!   sleep_s          emulated compute seconds per step   (default 0)
+//!   verify           consumer checks data values         (default 1)
+
+use crate::error::{Result, WilkinsError};
+use crate::henson::TaskContext;
+use crate::lowfive::{split_rows, DType, Hyperslab};
+
+use super::{bytes_to_f32s, bytes_to_u64s};
+
+pub const FILE: &str = "outfile.h5";
+pub const GRID: &str = "/group1/grid";
+pub const PARTICLES: &str = "/group1/particles";
+
+fn grid_value(global_idx: u64, step: u64) -> u64 {
+    global_idx * 10 + step
+}
+
+fn particle_value(flat_idx: u64, step: u64) -> f32 {
+    (flat_idx % 1000) as f32 + step as f32 * 0.5
+}
+
+pub fn producer(ctx: &mut TaskContext) -> Result<()> {
+    let steps = ctx.param_i64("steps", 1) as u64;
+    let gpp = ctx.param_i64("grid_per_proc", 10_000) as u64;
+    let ppp = ctx.param_i64("particles_per_proc", 10_000) as u64;
+    let sleep_s = ctx.param_f64("sleep_s", 0.0);
+    let nprocs = ctx.size() as u64;
+    let rank = ctx.rank();
+    let gdims = [gpp * nprocs];
+    let pdims = [ppp * nprocs, 3];
+    let gslab = split_rows(&gdims, nprocs as usize)[rank].clone();
+    let pslab = split_rows(&pdims, nprocs as usize)[rank].clone();
+
+    for step in 0..steps {
+        if sleep_s > 0.0 {
+            ctx.sleep_compute("produce", sleep_s);
+        }
+        let goff = gslab.offset[0];
+        let grid = super::gen_u64_bytes(gslab.count[0], |i| grid_value(goff + i, step));
+        let poff = pslab.offset[0] * 3;
+        let parts =
+            super::gen_f32_bytes(pslab.count[0] * 3, |k| particle_value(poff + k, step));
+        // Subset writers: redistribute every rank's slab onto the
+        // writer subset first (the LAMMPS gather pattern, Sec. 3.2.2).
+        let nwriters = ctx.nwriters;
+        let (gblocks, pblocks) = if nwriters < ctx.size() {
+            (
+                super::gather_to_writers(&ctx.comm, nwriters, gslab.clone(), grid)?,
+                super::gather_to_writers(&ctx.comm, nwriters, pslab.clone(), parts)?,
+            )
+        } else {
+            (vec![(gslab.clone(), grid)], vec![(pslab.clone(), parts)])
+        };
+        if ctx.vol.is_io_rank() {
+            let vol = &mut ctx.vol;
+            vol.file_create(FILE)?;
+            vol.attr_write(FILE, "timestep", crate::lowfive::AttrValue::Int(step as i64))?;
+            vol.dataset_create(FILE, GRID, DType::U64, &gdims)?;
+            vol.dataset_create(FILE, PARTICLES, DType::F32, &pdims)?;
+            for (s, b) in gblocks {
+                vol.dataset_write(FILE, GRID, s, b)?;
+            }
+            for (s, b) in pblocks {
+                vol.dataset_write(FILE, PARTICLES, s, b)?;
+            }
+            vol.file_close(FILE)?;
+        }
+    }
+    Ok(())
+}
+
+pub fn consumer(ctx: &mut TaskContext) -> Result<()> {
+    let sleep_s = ctx.param_f64("sleep_s", 0.0);
+    let verify = ctx.param_i64("verify", 1) != 0;
+    let nprocs = ctx.size();
+    let rank = ctx.rank();
+    loop {
+        let name = match ctx.vol.file_open(FILE) {
+            Ok(n) => n,
+            Err(WilkinsError::EndOfStream) => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        let step = ctx
+            .vol
+            .consumer_file(&name)?
+            .attr("timestep")
+            .and_then(|a| a.as_i64())
+            .unwrap_or(0) as u64;
+
+        for dset in ctx.vol.consumer_file(&name)?.dataset_names() {
+            let meta = ctx.vol.dataset_meta(&name, &dset)?;
+            let want = split_rows(&meta.dims, nprocs)[rank].clone();
+            let bytes = ctx.vol.dataset_read(&name, &dset, &want)?;
+            if verify {
+                verify_dset(&dset, &want, &bytes, step)?;
+            }
+        }
+        // Close first (releases the producer's serve round), then
+        // analyze: the paper's consumers compute after receiving data.
+        ctx.vol.file_close(&name)?;
+        if sleep_s > 0.0 {
+            ctx.sleep_compute("analyze", sleep_s);
+        }
+    }
+}
+
+fn verify_dset(dset: &str, want: &Hyperslab, bytes: &[u8], step: u64) -> Result<()> {
+    let bad = |msg: String| Err(WilkinsError::Task(format!("verify {dset}: {msg}")));
+    match dset {
+        GRID => {
+            let vals = bytes_to_u64s(bytes);
+            for (k, &v) in vals.iter().enumerate() {
+                let expect = grid_value(want.offset[0] + k as u64, step);
+                if v != expect {
+                    return bad(format!("at {k}: {v} != {expect}"));
+                }
+            }
+        }
+        PARTICLES => {
+            let vals = bytes_to_f32s(bytes);
+            for (k, &v) in vals.iter().enumerate() {
+                let expect = particle_value(want.offset[0] * 3 + k as u64, step);
+                if v != expect {
+                    return bad(format!("at {k}: {v} != {expect}"));
+                }
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! CLI smoke tests: the `wilkins` binary end-to-end on the shipped
+//! configs (validate / graph / run / gantt export).
+
+use std::process::Command;
+
+fn wilkins() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_wilkins"))
+}
+
+fn repo(p: &str) -> String {
+    format!("{}/{p}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = wilkins().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("run") && s.contains("validate") && s.contains("graph"));
+}
+
+#[test]
+fn list_tasks_shows_builtins() {
+    let out = wilkins().arg("list-tasks").output().unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    for name in ["producer", "consumer", "freeze", "detector", "nyx", "reeber"] {
+        assert!(s.contains(name), "missing {name} in: {s}");
+    }
+}
+
+#[test]
+fn validate_all_shipped_configs() {
+    for cfg in [
+        "configs/listing1_3task.yaml",
+        "configs/listing2_ensemble_fanin.yaml",
+        "configs/listing4_materials.yaml",
+        "configs/listing6_cosmology.yaml",
+        "configs/flow_control.yaml",
+    ] {
+        let out = wilkins().args(["validate", &repo(cfg)]).output().unwrap();
+        assert!(out.status.success(), "{cfg}: {}", String::from_utf8_lossy(&out.stderr));
+        assert!(String::from_utf8_lossy(&out.stdout).starts_with("OK:"));
+    }
+}
+
+#[test]
+fn graph_describes_listing2() {
+    let out = wilkins()
+        .args(["graph", &repo("configs/listing2_ensemble_fanin.yaml")])
+        .output()
+        .unwrap();
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("producer[3]"));
+    assert!(s.contains("consumer[1]"));
+    assert!(s.contains("channel"));
+}
+
+#[test]
+fn validate_rejects_bad_config() {
+    let dir = std::env::temp_dir().join("wilkins-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.yaml");
+    std::fs::write(&bad, "tasks:\n  - func: p\n    nprocs: 0\n").unwrap();
+    let out = wilkins().args(["validate", bad.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn run_listing1_with_gantt_export() {
+    let dir = std::env::temp_dir().join("wilkins-cli-run");
+    std::fs::create_dir_all(&dir).unwrap();
+    let gantt = dir.join("trace.csv");
+    let out = wilkins()
+        .args([
+            "run",
+            &repo("configs/listing1_3task.yaml"),
+            "--artifacts",
+            "/nonexistent", // synthetic workflow needs no engine
+            "--gantt",
+            gantt.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("workflow completed"));
+    let csv = std::fs::read_to_string(&gantt).unwrap();
+    assert!(csv.starts_with("rank,kind,label"));
+    assert!(csv.contains("idle") || csv.contains("transfer"));
+}

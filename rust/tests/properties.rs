@@ -1,0 +1,339 @@
+//! Property-based tests over the core invariants: hyperslab algebra,
+//! M-to-N redistribution, the YAML parser, graph construction and the
+//! wire protocol. Uses the in-repo proptest_lite framework (S16).
+
+use wilkins::comm::wire::{Reader, Writer};
+use wilkins::config::WorkflowConfig;
+use wilkins::graph::WorkflowGraph;
+use wilkins::lowfive::model::{Dataset, DatasetMeta};
+use wilkins::lowfive::protocol::{Reply, Request};
+use wilkins::lowfive::{split_rows, DType, Hyperslab};
+use wilkins::proptest_lite::run_prop;
+
+#[test]
+fn prop_intersection_commutative_and_contained() {
+    run_prop("intersect", 500, |rng| {
+        let nd = rng.usize(1, 4);
+        let dims = rng.dims(nd, 24);
+        let a = rng.slab_within(&dims);
+        let b = rng.slab_within(&dims);
+        let ab = a.intersect(&b);
+        let ba = b.intersect(&a);
+        assert_eq!(ab, ba, "commutativity");
+        if let Some(i) = ab {
+            assert!(i.fits_within(&dims));
+            assert_eq!(a.intersect(&i).as_ref(), Some(&i), "contained in a");
+            assert_eq!(b.intersect(&i).as_ref(), Some(&i), "contained in b");
+            assert!(i.element_count() <= a.element_count().min(b.element_count()));
+        }
+    });
+}
+
+#[test]
+fn prop_split_rows_partitions() {
+    run_prop("split_rows", 500, |rng| {
+        let nd = rng.usize(1, 4);
+        let dims = rng.dims(nd, 40);
+        let n = rng.usize(1, 12);
+        let parts = split_rows(&dims, n);
+        assert_eq!(parts.len(), n);
+        // Complete: counts sum to the whole; disjoint: no overlaps.
+        let total: u64 = parts.iter().map(Hyperslab::element_count).sum();
+        assert_eq!(total, dims.iter().product::<u64>());
+        for i in 0..n {
+            for j in i + 1..n {
+                assert!(
+                    parts[i].is_empty()
+                        || parts[j].is_empty()
+                        || !parts[i].overlaps(&parts[j]),
+                    "parts {i} and {j} overlap: {:?} {:?}",
+                    parts[i],
+                    parts[j]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_redistribution_preserves_data() {
+    // Write through an M-way row split, read back through an N-way
+    // split: every element must survive the redistribution exactly.
+    run_prop("redistribution", 200, |rng| {
+        let nd = rng.usize(1, 4);
+        let mut dims = rng.dims(nd, 12);
+        dims[0] = rng.range(1, 30); // rows worth splitting
+        let m = rng.usize(1, 8);
+        let n = rng.usize(1, 8);
+        let meta = DatasetMeta {
+            name: "/d".into(),
+            dtype: DType::U64,
+            dims: dims.clone(),
+        };
+        let mut ds = Dataset::new(meta);
+        // Writer side: M blocks with globally-indexed values.
+        let elems_per_row: u64 = dims[1..].iter().product();
+        for slab in split_rows(&dims, m) {
+            if slab.is_empty() {
+                continue;
+            }
+            let start = slab.offset[0] * elems_per_row;
+            let count = slab.element_count();
+            let bytes: Vec<u8> = (start..start + count)
+                .flat_map(|v| v.to_le_bytes())
+                .collect();
+            ds.write_slab(slab, bytes).unwrap();
+        }
+        // Reader side: N wanted slabs.
+        for want in split_rows(&dims, n) {
+            if want.is_empty() {
+                continue;
+            }
+            let mut out = vec![0u8; want.element_count() as usize * 8];
+            let filled = ds.read_into(&want, &mut out);
+            assert_eq!(filled, want.element_count());
+            let start = want.offset[0] * elems_per_row;
+            for (k, chunk) in out.chunks_exact(8).enumerate() {
+                assert_eq!(
+                    u64::from_le_bytes(chunk.try_into().unwrap()),
+                    start + k as u64
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_arbitrary_slab_reads_match() {
+    // Random (not row-aligned) consumer slabs over a 2-D dataset.
+    run_prop("arbitrary-slabs", 200, |rng| {
+        let dims = vec![rng.range(2, 20), rng.range(2, 20)];
+        let m = rng.usize(1, 5);
+        let meta = DatasetMeta { name: "/d".into(), dtype: DType::U64, dims: dims.clone() };
+        let mut ds = Dataset::new(meta);
+        for slab in split_rows(&dims, m) {
+            if slab.is_empty() {
+                continue;
+            }
+            let bytes: Vec<u8> = iter_coords(&slab)
+                .map(|c| c[0] * dims[1] + c[1])
+                .flat_map(|v| v.to_le_bytes())
+                .collect();
+            ds.write_slab(slab, bytes).unwrap();
+        }
+        for _ in 0..5 {
+            let want = rng.slab_within(&dims);
+            let mut out = vec![0u8; want.element_count() as usize * 8];
+            assert_eq!(ds.read_into(&want, &mut out), want.element_count());
+            for (k, c) in iter_coords(&want).enumerate() {
+                let v = u64::from_le_bytes(out[k * 8..k * 8 + 8].try_into().unwrap());
+                assert_eq!(v, c[0] * dims[1] + c[1], "coord {c:?}");
+            }
+        }
+    });
+}
+
+/// Row-major coordinate iterator over a slab (test helper).
+fn iter_coords(slab: &Hyperslab) -> impl Iterator<Item = Vec<u64>> + '_ {
+    let total = slab.element_count();
+    (0..total).map(move |idx| {
+        let mut rem = idx;
+        let mut coord = vec![0u64; slab.dims()];
+        for d in (0..slab.dims()).rev() {
+            coord[d] = slab.offset[d] + rem % slab.count[d];
+            rem /= slab.count[d];
+        }
+        coord
+    })
+}
+
+#[test]
+fn prop_wire_roundtrip_random_payloads() {
+    run_prop("wire", 300, |rng| {
+        let mut w = Writer::new();
+        let n = rng.usize(0, 20);
+        let mut expect = Vec::new();
+        for _ in 0..n {
+            let v = rng.next_u64();
+            w.put_u64(v);
+            expect.push(v);
+        }
+        let blob: Vec<u8> = (0..rng.usize(0, 64)).map(|_| rng.next_u64() as u8).collect();
+        w.put_bytes(&blob);
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf);
+        for v in expect {
+            assert_eq!(r.get_u64().unwrap(), v);
+        }
+        assert_eq!(r.get_bytes().unwrap(), blob.as_slice());
+        assert_eq!(r.remaining(), 0);
+    });
+}
+
+#[test]
+fn prop_protocol_roundtrip_random() {
+    run_prop("protocol", 300, |rng| {
+        let req = match rng.usize(0, 4) {
+            0 => Request::MetaReq {
+                pattern: format!("f{}.h5", rng.range(0, 1000)),
+                min_version: rng.next_u64(),
+            },
+            1 => {
+                let nd = rng.usize(1, 4);
+                let dims = rng.dims(nd, 30);
+                Request::DataReq {
+                    file: "x.h5".into(),
+                    dset: format!("/g/d{}", rng.range(0, 10)),
+                    slab: rng.slab_within(&dims),
+                }
+            }
+            2 => Request::Done { version: rng.next_u64() },
+            _ => Request::EofAck,
+        };
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+
+        let blocks: Vec<(Hyperslab, Vec<u8>)> = (0..rng.usize(0, 4))
+            .map(|_| {
+                let dims = rng.dims(2, 10);
+                let s = rng.slab_within(&dims);
+                let bytes = vec![rng.next_u64() as u8; rng.usize(0, 32)];
+                (s, bytes)
+            })
+            .collect();
+        let rep = Reply::Data(blocks);
+        assert_eq!(Reply::decode(&rep.encode()).unwrap(), rep);
+    });
+}
+
+#[test]
+fn prop_graph_round_robin_covers_all_instances() {
+    run_prop("round-robin", 200, |rng| {
+        let p = rng.usize(1, 12);
+        let c = rng.usize(1, 12);
+        let yaml = format!(
+            "\
+tasks:
+  - func: prod
+    taskCount: {p}
+    nprocs: {np}
+    outports:
+      - filename: f.h5
+        dsets: [ {{ name: /d }} ]
+  - func: cons
+    taskCount: {c}
+    nprocs: {nc}
+    inports:
+      - filename: f.h5
+        dsets: [ {{ name: /d }} ]
+",
+            np = rng.usize(1, 4),
+            nc = rng.usize(1, 4),
+        );
+        let cfg = WorkflowConfig::from_yaml_str(&yaml).unwrap();
+        let g = WorkflowGraph::build(&cfg).unwrap();
+        // Figure 3 invariants: max(p, c) channels; every producer and
+        // every consumer instance appears in at least one channel.
+        assert_eq!(g.channels.len(), p.max(c));
+        for node in 0..p {
+            assert!(
+                g.channels.iter().any(|ch| ch.producer == node),
+                "producer {node} unlinked (p={p}, c={c})"
+            );
+        }
+        for node in p..p + c {
+            assert!(
+                g.channels.iter().any(|ch| ch.consumer == node),
+                "consumer {} unlinked (p={p}, c={c})",
+                node - p
+            );
+        }
+        // Balance: instance loads differ by at most 1.
+        let mut ploads = vec![0usize; p];
+        let mut cloads = vec![0usize; c];
+        for ch in &g.channels {
+            ploads[ch.producer] += 1;
+            cloads[ch.consumer - p] += 1;
+        }
+        for loads in [&ploads, &cloads] {
+            let lo = loads.iter().min().unwrap();
+            let hi = loads.iter().max().unwrap();
+            assert!(hi - lo <= 1, "unbalanced round robin: {loads:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_rank_assignment_disjoint_complete() {
+    run_prop("ranks", 200, |rng| {
+        let ntasks = rng.usize(1, 5);
+        let mut yaml = String::from("tasks:\n");
+        for t in 0..ntasks {
+            yaml.push_str(&format!(
+                "  - func: t{t}\n    taskCount: {}\n    nprocs: {}\n    outports:\n      - filename: f{t}.h5\n        dsets: [ {{ name: /d }} ]\n",
+                rng.usize(1, 5),
+                rng.usize(1, 6),
+            ));
+        }
+        // Add one consumer reading every file so nothing dangles.
+        yaml.push_str("  - func: sink\n    nprocs: 1\n    inports:\n");
+        for t in 0..ntasks {
+            yaml.push_str(&format!(
+                "      - filename: f{t}.h5\n        dsets: [ {{ name: /d }} ]\n"
+            ));
+        }
+        let cfg = WorkflowConfig::from_yaml_str(&yaml).unwrap();
+        let g = WorkflowGraph::build(&cfg).unwrap();
+        let mut owner = vec![usize::MAX; g.total_ranks];
+        for (i, node) in g.nodes.iter().enumerate() {
+            for r in node.ranks() {
+                assert_eq!(owner[r], usize::MAX, "rank {r} double-assigned");
+                owner[r] = i;
+            }
+        }
+        assert!(owner.iter().all(|&o| o != usize::MAX), "unassigned ranks");
+        for r in 0..g.total_ranks {
+            assert_eq!(g.node_of_rank(r), Some(owner[r]));
+        }
+    });
+}
+
+#[test]
+fn prop_yaml_scalars_roundtrip() {
+    run_prop("yaml-scalars", 300, |rng| {
+        let i = rng.next_u64() as i64 / 2;
+        let doc = wilkins::configyaml::parse(&format!("v: {i}\n")).unwrap();
+        assert_eq!(doc.get("v").and_then(|y| y.as_i64()), Some(i));
+
+        let words = ["alpha", "beta-3", "/a/b/c", "plt*.h5", "x_y.z"];
+        let s = rng.choose(&words);
+        let doc = wilkins::configyaml::parse(&format!("v: {s}\n")).unwrap();
+        assert_eq!(doc.get("v").and_then(|y| y.as_str()), Some(*s));
+    });
+}
+
+#[test]
+fn prop_yaml_nested_structure() {
+    run_prop("yaml-nested", 100, |rng| {
+        // Generate a random 2-level mapping and verify field access.
+        let nkeys = rng.usize(1, 6);
+        let mut yaml = String::new();
+        let mut expect = Vec::new();
+        for k in 0..nkeys {
+            yaml.push_str(&format!("key{k}:\n"));
+            let nsub = rng.usize(1, 4);
+            for s in 0..nsub {
+                let v = rng.range(0, 1_000_000);
+                yaml.push_str(&format!("  sub{s}: {v}\n"));
+                expect.push((k, s, v));
+            }
+        }
+        let doc = wilkins::configyaml::parse(&yaml).unwrap();
+        for (k, s, v) in expect {
+            let got = doc
+                .get(&format!("key{k}"))
+                .and_then(|m| m.get(&format!("sub{s}")))
+                .and_then(|y| y.as_i64());
+            assert_eq!(got, Some(v as i64));
+        }
+    });
+}

@@ -1,0 +1,124 @@
+//! Science use-case integration tests (need `make artifacts`).
+//! Skipped with a note when artifacts are missing.
+
+use std::path::PathBuf;
+
+use wilkins::runtime::Engine;
+use wilkins::tasks::builtin_registry;
+use wilkins::Wilkins;
+
+fn engine() -> Option<Engine> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipping science test: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::start(&dir).unwrap())
+}
+
+#[test]
+fn materials_science_nxn_ensemble() {
+    let Some(engine) = engine() else { return };
+    // Scaled-down Listing 4: 2 ensemble instances, 4+2 procs, 2 dumps.
+    let report = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: freeze
+    taskCount: 2
+    nprocs: 4
+    nwriters: 1
+    params: { dumps: 2, execs_per_dump: 1 }
+    outports:
+      - filename: dump-h5md.h5
+        dsets: [ { name: /particles/* } ]
+  - func: detector
+    taskCount: 2
+    nprocs: 2
+    stateless: 1
+    inports:
+      - filename: dump-h5md.h5
+        dsets: [ { name: /particles/* } ]
+",
+        builtin_registry(),
+    )
+    .unwrap()
+    .with_engine(engine.handle())
+    .run()
+    .unwrap();
+    for i in 0..2 {
+        let f = report.node(&format!("freeze[{i}]")).unwrap();
+        assert_eq!(f.files_served, 2, "freeze[{i}]");
+        let d = report.node(&format!("detector[{i}]")).unwrap();
+        assert_eq!(d.files_opened, 2, "detector[{i}]");
+        // Each dump moves 4096*3*4 bytes of positions.
+        assert!(d.bytes_read >= 2 * 4096 * 3 * 4);
+    }
+}
+
+#[test]
+fn cosmology_nyx_reeber_with_flow_control() {
+    let Some(engine) = engine() else { return };
+    // Scaled-down Listing 6: nyx double-close pattern + some(2) flow.
+    let report = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: nyx
+    nprocs: 4
+    actions: [\"actions\", \"nyx\"]
+    params: { snapshots: 4, steps_per_snapshot: 1 }
+    outports:
+      - filename: plt*.h5
+        dsets: [ { name: /level_0/density } ]
+  - func: reeber
+    nprocs: 2
+    params: { analysis_rounds: 2, threshold: 1.5 }
+    inports:
+      - filename: plt*.h5
+        io_freq: 2
+        dsets: [ { name: /level_0/density } ]
+",
+        builtin_registry(),
+    )
+    .unwrap()
+    .with_engine(engine.handle())
+    .run()
+    .unwrap();
+    let nyx = report.node("nyx").unwrap();
+    // 4 snapshots, io_freq 2 -> 2 served, 2 skipped.
+    assert_eq!(nyx.files_served, 2);
+    assert_eq!(nyx.serves_skipped, 2);
+    let reeber = report.node("reeber").unwrap();
+    assert_eq!(reeber.files_opened, 2);
+    // Each snapshot moves a full 64^3 f32 grid.
+    assert!(reeber.bytes_read >= 2 * 64 * 64 * 64 * 4);
+}
+
+#[test]
+fn cosmology_all_strategy_serves_everything() {
+    let Some(engine) = engine() else { return };
+    let report = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: nyx
+    nprocs: 2
+    actions: [\"actions\", \"nyx\"]
+    params: { snapshots: 3 }
+    outports:
+      - filename: plt*.h5
+        dsets: [ { name: /level_0/density } ]
+  - func: reeber
+    nprocs: 2
+    params: { analysis_rounds: 1 }
+    inports:
+      - filename: plt*.h5
+        dsets: [ { name: /level_0/density } ]
+",
+        builtin_registry(),
+    )
+    .unwrap()
+    .with_engine(engine.handle())
+    .run()
+    .unwrap();
+    assert_eq!(report.node("nyx").unwrap().files_served, 3);
+    assert_eq!(report.node("reeber").unwrap().files_opened, 3);
+}

@@ -1,0 +1,595 @@
+//! End-to-end workflow integration tests: full YAML → coordinator →
+//! threads → transport → verification, using the synthetic tasks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use wilkins::config::WorkflowConfig;
+use wilkins::flow::FlowControl;
+use wilkins::graph::Topology;
+use wilkins::henson::Registry;
+use wilkins::tasks::builtin_registry;
+use wilkins::{Wilkins, WilkinsError};
+
+fn run_yaml(src: &str) -> wilkins::RunReport {
+    Wilkins::from_yaml_str(src, builtin_registry())
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn listing1_three_task_workflow() {
+    // Producer + two consumers, each consuming one dataset; with
+    // verification on, consumers check every element they read.
+    let report = run_yaml(
+        "\
+tasks:
+  - func: producer
+    nprocs: 4
+    params:
+      steps: 3
+      grid_per_proc: 2000
+      particles_per_proc: 2000
+    outports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+          - name: /group1/particles
+  - func: consumer1
+    nprocs: 5
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+  - func: consumer2
+    nprocs: 3
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/particles
+",
+    );
+    assert_eq!(report.total_ranks, 12);
+    let p = report.node("producer").unwrap();
+    assert_eq!(p.files_served, 3);
+    assert!(p.bytes_served > 0);
+    let c1 = report.node("consumer1").unwrap();
+    assert_eq!(c1.files_opened, 3);
+    // consumer1 reads the full grid per step: 4*2000*8 bytes * 3 steps.
+    // (It also reads particles: the channel carries only grid, but the
+    // consumer task reads all datasets present in the served file —
+    // both live in the same file here, matching the paper's Listing 1
+    // where channels are per-dataset but the file is shared.)
+    assert!(c1.bytes_read >= 4 * 2000 * 8 * 3);
+}
+
+#[test]
+fn weak_scaling_shape_holds() {
+    // Same per-proc size, more procs => more total bytes moved.
+    let mut bytes = Vec::new();
+    for nprocs in [1usize, 2, 4] {
+        let report = run_yaml(&format!(
+            "\
+tasks:
+  - func: producer
+    nprocs: {nprocs}
+    params: {{ steps: 1, grid_per_proc: 5000, particles_per_proc: 5000 }}
+    outports:
+      - filename: outfile.h5
+        dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+  - func: consumer
+    nprocs: {c}
+    inports:
+      - filename: outfile.h5
+        dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+",
+            c = (nprocs + 3) / 4 * 1
+        ));
+        bytes.push(report.node("producer").unwrap().bytes_served);
+    }
+    assert!(bytes[1] > bytes[0] && bytes[2] > bytes[1]);
+}
+
+#[test]
+fn ensemble_fan_in_round_robin() {
+    // Listing-2 shape: 4 producers, 2 consumers; each consumer reads
+    // from its 2 round-robin producers (2 steps each = 4 opens).
+    let report = run_yaml(
+        "\
+tasks:
+  - func: producer
+    taskCount: 4
+    nprocs: 2
+    params: { steps: 2, grid_per_proc: 500, particles_per_proc: 500 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    taskCount: 2
+    nprocs: 3
+    inports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+",
+    );
+    for i in 0..2 {
+        let c = report.node(&format!("consumer[{i}]")).unwrap();
+        assert_eq!(c.files_opened, 4, "consumer[{i}]");
+    }
+    for i in 0..4 {
+        let p = report.node(&format!("producer[{i}]")).unwrap();
+        assert_eq!(p.files_served, 2, "producer[{i}]");
+    }
+}
+
+#[test]
+fn nxn_ensemble_pairs() {
+    let report = run_yaml(
+        "\
+tasks:
+  - func: producer
+    taskCount: 3
+    nprocs: 2
+    params: { steps: 2, grid_per_proc: 300, particles_per_proc: 300 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    taskCount: 3
+    nprocs: 2
+    inports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+",
+    );
+    for i in 0..3 {
+        assert_eq!(
+            report.node(&format!("consumer[{i}]")).unwrap().files_opened,
+            2
+        );
+    }
+}
+
+#[test]
+fn flow_control_some_skips_serves() {
+    let report = run_yaml(
+        "\
+tasks:
+  - func: producer
+    nprocs: 2
+    params: { steps: 10, grid_per_proc: 100, particles_per_proc: 100 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    nprocs: 2
+    inports:
+      - filename: outfile.h5
+        io_freq: 5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+",
+    );
+    let p = report.node("producer").unwrap();
+    assert_eq!(p.files_served, 2); // steps 5 and 10
+    assert_eq!(p.serves_skipped, 8);
+    assert_eq!(report.node("consumer").unwrap().files_opened, 2);
+}
+
+#[test]
+fn flow_control_latest_drops_for_slow_consumer() {
+    // Producer 10 fast steps; consumer sleeps per file. With *latest*
+    // the producer must finish without serving all 10.
+    let cfg = WorkflowConfig::from_yaml_str(
+        "\
+tasks:
+  - func: producer
+    nprocs: 1
+    params: { steps: 10, grid_per_proc: 100, particles_per_proc: 100, sleep_s: 0.01 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    nprocs: 1
+    params: { sleep_s: 0.05 }
+    inports:
+      - filename: outfile.h5
+        io_freq: -1
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+",
+    )
+    .unwrap();
+    let report = Wilkins::new(cfg, builtin_registry()).unwrap().run().unwrap();
+    let p = report.node("producer").unwrap();
+    assert!(
+        p.serves_skipped >= 2,
+        "latest should skip several serves, skipped={}",
+        p.serves_skipped
+    );
+    let c = report.node("consumer").unwrap();
+    assert!(c.files_opened >= 1 && c.files_opened < 10);
+}
+
+#[test]
+fn subset_writers_workflow() {
+    let report = run_yaml(
+        "\
+tasks:
+  - func: producer
+    nprocs: 4
+    nwriters: 2
+    params: { steps: 2, grid_per_proc: 1000, particles_per_proc: 1000 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    nprocs: 2
+    inports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+",
+    );
+    // With nwriters=2, all four ranks' slabs are redistributed onto
+    // the two writer ranks (gather_to_writers) before serving, so the
+    // consumer verifies every element (verify defaults to on).
+    assert_eq!(report.node("producer").unwrap().files_served, 2);
+    let c = report.node("consumer").unwrap();
+    assert_eq!(c.files_opened, 2);
+    assert!(c.bytes_read >= 2 * 4 * 1000 * 8);
+}
+
+#[test]
+fn file_mode_workflow() {
+    let report = run_yaml(
+        "\
+tasks:
+  - func: producer
+    nprocs: 2
+    params: { steps: 2, grid_per_proc: 500, particles_per_proc: 500 }
+    outports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 1
+            memory: 0
+          - name: /group1/particles
+            file: 1
+            memory: 0
+  - func: consumer
+    nprocs: 2
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            file: 1
+            memory: 0
+          - name: /group1/particles
+            file: 1
+            memory: 0
+",
+    );
+    assert_eq!(report.node("consumer").unwrap().files_opened, 2);
+}
+
+#[test]
+fn stateless_consumer_relaunched_per_file() {
+    static LAUNCHES: AtomicUsize = AtomicUsize::new(0);
+    LAUNCHES.store(0, Ordering::SeqCst);
+    let mut reg = builtin_registry();
+    reg.register_fn("counting_consumer", |ctx| {
+        LAUNCHES.fetch_add(1, Ordering::SeqCst);
+        // Unmodified-style stateless code: open one file, read, close.
+        let name = ctx.vol.file_open("outfile.h5")?;
+        let meta = ctx.vol.dataset_meta(&name, "/group1/grid")?;
+        let want = wilkins::lowfive::split_rows(&meta.dims, ctx.size())[ctx.rank()].clone();
+        ctx.vol.dataset_read(&name, "/group1/grid", &want)?;
+        ctx.vol.file_close(&name)?;
+        Ok(())
+    });
+    let report = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: producer
+    nprocs: 1
+    params: { steps: 4, grid_per_proc: 100, particles_per_proc: 100 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: counting_consumer
+    nprocs: 1
+    stateless: 1
+    inports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid } ]
+",
+        reg,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(LAUNCHES.load(Ordering::SeqCst), 4);
+    assert_eq!(report.node("counting_consumer").unwrap().files_opened, 4);
+}
+
+#[test]
+fn pipeline_intermediate_task() {
+    // producer -> relay (intermediate) -> sink: data flows through.
+    let mut reg = builtin_registry();
+    reg.register_fn("relay", |ctx| {
+        loop {
+            let name = match ctx.vol.file_open("stage1.h5") {
+                Ok(n) => n,
+                Err(WilkinsError::EndOfStream) => return Ok(()),
+                Err(e) => return Err(e),
+            };
+            let meta = ctx.vol.dataset_meta(&name, "/d")?;
+            let want = wilkins::lowfive::split_rows(&meta.dims, ctx.size())[ctx.rank()].clone();
+            let bytes = ctx.vol.dataset_read(&name, "/d", &want)?;
+            ctx.vol.file_close(&name)?;
+            // Transform: double every u64 and republish.
+            let doubled: Vec<u8> = bytes
+                .chunks_exact(8)
+                .flat_map(|c| {
+                    (u64::from_le_bytes(c.try_into().unwrap()) * 2).to_le_bytes()
+                })
+                .collect();
+            ctx.vol.file_create("stage2.h5")?;
+            ctx.vol
+                .dataset_create("stage2.h5", "/d", wilkins::lowfive::DType::U64, &meta.dims)?;
+            ctx.vol.dataset_write("stage2.h5", "/d", want, doubled)?;
+            ctx.vol.file_close("stage2.h5")?;
+        }
+    });
+    reg.register_fn("source", |ctx| {
+        for step in 0..3u64 {
+            ctx.vol.file_create("stage1.h5")?;
+            ctx.vol
+                .dataset_create("stage1.h5", "/d", wilkins::lowfive::DType::U64, &[16])?;
+            let vals: Vec<u8> = (0u64..16).flat_map(|i| (i + step).to_le_bytes()).collect();
+            ctx.vol.dataset_write(
+                "stage1.h5",
+                "/d",
+                wilkins::lowfive::Hyperslab::whole(&[16]),
+                vals,
+            )?;
+            ctx.vol.file_close("stage1.h5")?;
+        }
+        Ok(())
+    });
+    reg.register_fn("sink", |ctx| {
+        let mut step = 0u64;
+        loop {
+            let name = match ctx.vol.file_open("stage2.h5") {
+                Ok(n) => n,
+                Err(WilkinsError::EndOfStream) => break,
+                Err(e) => return Err(e),
+            };
+            let bytes = ctx.vol.dataset_read(
+                &name,
+                "/d",
+                &wilkins::lowfive::Hyperslab::whole(&[16]),
+            )?;
+            for (i, c) in bytes.chunks_exact(8).enumerate() {
+                let v = u64::from_le_bytes(c.try_into().unwrap());
+                assert_eq!(v, (i as u64 + step) * 2);
+            }
+            ctx.vol.file_close(&name)?;
+            step += 1;
+        }
+        assert_eq!(step, 3);
+        Ok(())
+    });
+    let report = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: source
+    nprocs: 1
+    outports:
+      - filename: stage1.h5
+        dsets: [ { name: /d } ]
+  - func: relay
+    nprocs: 1
+    inports:
+      - filename: stage1.h5
+        dsets: [ { name: /d } ]
+    outports:
+      - filename: stage2.h5
+        dsets: [ { name: /d } ]
+  - func: sink
+    nprocs: 1
+    inports:
+      - filename: stage2.h5
+        dsets: [ { name: /d } ]
+",
+        reg,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(report.node("relay").unwrap().files_opened, 3);
+    assert_eq!(report.node("sink").unwrap().files_opened, 3);
+}
+
+#[test]
+fn failing_task_surfaces_error() {
+    let mut reg = builtin_registry();
+    reg.register_fn("bad_consumer", |ctx| {
+        let _ = ctx.vol.file_open("outfile.h5")?;
+        Err(WilkinsError::Task("injected failure".into()))
+    });
+    let res = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: producer
+    nprocs: 1
+    params: { steps: 2, grid_per_proc: 50, particles_per_proc: 50 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: bad_consumer
+    nprocs: 1
+    inports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid } ]
+",
+        reg,
+    )
+    .unwrap()
+    .run();
+    let err = res.unwrap_err().to_string();
+    assert!(err.contains("injected failure"), "{err}");
+}
+
+#[test]
+fn unknown_func_fails_before_launch() {
+    let res = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: does_not_exist
+    nprocs: 1
+    outports:
+      - filename: f.h5
+        dsets: [ { name: /d } ]
+  - func: consumer
+    nprocs: 1
+    inports:
+      - filename: f.h5
+        dsets: [ { name: /d } ]
+",
+        builtin_registry(),
+    )
+    .unwrap()
+    .run();
+    assert!(res.is_err());
+}
+
+#[test]
+fn graph_topologies_via_api() {
+    let w = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: producer
+    nprocs: 1
+    params: { steps: 1 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    taskCount: 3
+    nprocs: 1
+    inports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+",
+        builtin_registry(),
+    )
+    .unwrap();
+    assert_eq!(w.graph().topology(), Topology::FanOut);
+    let report = w.run().unwrap();
+    // Fan-out: the producer serves all three consumers each step.
+    assert_eq!(report.node("producer").unwrap().files_served, 1);
+    for i in 0..3 {
+        assert_eq!(report.node(&format!("consumer[{i}]")).unwrap().files_opened, 1);
+    }
+}
+
+#[test]
+fn custom_action_listing3_every_second_write() {
+    // Producer writes two datasets per step; the action serves only
+    // after the second write, so a single serve per step happens even
+    // though the default close-serve is suppressed.
+    let registry = builtin_registry();
+    let report = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: producer
+    nprocs: 1
+    actions: [\"actions\", \"every_second_write\"]
+    params: { steps: 2, grid_per_proc: 100, particles_per_proc: 100 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    nprocs: 1
+    inports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+",
+        registry,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(report.node("consumer").unwrap().files_opened, 2);
+    assert_eq!(report.node("producer").unwrap().files_served, 2);
+}
+
+#[test]
+fn flow_control_enum_exposed_in_graph() {
+    let w = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: producer
+    nprocs: 1
+    params: { steps: 1 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    nprocs: 1
+    inports:
+      - filename: outfile.h5
+        io_freq: 10
+        dsets: [ { name: /group1/grid } ]
+",
+        builtin_registry(),
+    )
+    .unwrap();
+    assert_eq!(w.graph().channels[0].flow, FlowControl::Some(10));
+}
+
+#[test]
+fn registry_is_extensible() {
+    let mut reg = Registry::new();
+    let touched = Arc::new(AtomicUsize::new(0));
+    let t2 = Arc::clone(&touched);
+    reg.register_fn("my_producer", move |ctx| {
+        t2.fetch_add(1, Ordering::SeqCst);
+        ctx.vol.file_create("x.h5")?;
+        ctx.vol
+            .dataset_create("x.h5", "/d", wilkins::lowfive::DType::F32, &[4])?;
+        ctx.vol.dataset_write(
+            "x.h5",
+            "/d",
+            wilkins::lowfive::Hyperslab::whole(&[4]),
+            vec![0; 16],
+        )?;
+        ctx.vol.file_close("x.h5")?;
+        Ok(())
+    });
+    reg.register_fn("my_consumer", |ctx| {
+        let name = ctx.vol.file_open("x.h5")?;
+        ctx.vol.file_close(&name)?;
+        Ok(())
+    });
+    Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: my_producer
+    nprocs: 2
+    outports:
+      - filename: x.h5
+        dsets: [ { name: /d } ]
+  - func: my_consumer
+    nprocs: 1
+    inports:
+      - filename: x.h5
+        dsets: [ { name: /d } ]
+",
+        reg,
+    )
+    .unwrap()
+    .run()
+    .unwrap();
+    assert_eq!(touched.load(Ordering::SeqCst), 2);
+}
