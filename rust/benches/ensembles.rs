@@ -1,11 +1,19 @@
 //! Figures 7, 8, 9: scaling of ensembles in fan-out, fan-in and NxN
-//! topologies.
+//! topologies — driven through the `ensemble` co-scheduling subsystem.
 //!
 //! Paper setup: 2 ranks per producer/consumer instance; instance
 //! counts 1, 4, 16, 64, 256. Results: fan-out and fan-in grow ~linearly
 //! with the instance count (the single peer serves/reads each instance
 //! sequentially: 0.6 s @16 -> 8.2 s @256 for fan-out); NxN stays
 //! nearly flat (1:1 pairs are independent).
+//!
+//! Topology mapping onto the ensemble layer: fan-out (1:N) and fan-in
+//! (N:1) share one endpoint, so each is ONE workflow instance whose
+//! `taskCount` spans the ensemble — exactly the paper's YAML. NxN is N
+//! independent 1:1 pipelines, so it becomes N co-scheduled instances
+//! (`count: N`) under an unbounded rank budget. A final section packs
+//! the same NxN instances onto HALF the ranks and compares the fifo
+//! and round-robin policies.
 //!
 //! Default sweep stops at 64 instances (130 rank threads); set
 //! WILKINS_BENCH_FULL=1 for 256.
@@ -24,39 +32,75 @@
 use wilkins::bench_util::{
     assert_monotonic_increase, assert_roughly_flat, full_scale, mean, time_trials, Table,
 };
+use wilkins::ensemble::Ensemble;
 use wilkins::tasks::builtin_registry;
-use wilkins::Wilkins;
 
 const PER_PROC: u64 = 5_000;
 
+/// Spec for a fan topology: one instance, `taskCount` inside.
+fn fan_spec(pcount: usize, ccount: usize) -> String {
+    format!(
+        "\
+ensemble:
+  tasks:
+    - func: producer
+      taskCount: {pcount}
+      nprocs: 2
+      params: {{ steps: 1, grid_per_proc: {PER_PROC}, particles_per_proc: {PER_PROC}, verify: 0 }}
+      outports:
+        - filename: outfile.h5
+          dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+    - func: consumer
+      taskCount: {ccount}
+      nprocs: 2
+      params: {{ verify: 0 }}
+      inports:
+        - filename: outfile.h5
+          dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+  instances:
+    - name: fan
+"
+    )
+}
+
+/// Spec for NxN: N co-scheduled instances of an independent 1:1
+/// pipeline, optionally on a bounded budget.
+fn nxn_spec(instances: usize, budget: usize, policy: &str) -> String {
+    format!(
+        "\
+ensemble:
+  max_ranks: {budget}
+  policy: {policy}
+  tasks:
+    - func: producer
+      nprocs: 2
+      params: {{ steps: 1, grid_per_proc: {PER_PROC}, particles_per_proc: {PER_PROC}, verify: 0 }}
+      outports:
+        - filename: outfile.h5
+          dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+    - func: consumer
+      nprocs: 2
+      params: {{ verify: 0 }}
+      inports:
+        - filename: outfile.h5
+          dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+  instances:
+    - name: pipe
+      count: {instances}
+"
+    )
+}
+
 fn run(topology: &str, instances: usize) -> f64 {
-    let (pcount, ccount) = match topology {
-        "fanout" => (1, instances),
-        "fanin" => (instances, 1),
-        "nxn" => (instances, instances),
+    let spec = match topology {
+        "fanout" => fan_spec(1, instances),
+        "fanin" => fan_spec(instances, 1),
+        // Budget 0 = fully concurrent (all N pairs at once).
+        "nxn" => nxn_spec(instances, 0, "fifo"),
         _ => unreachable!(),
     };
-    let yaml = format!(
-        "\
-tasks:
-  - func: producer
-    taskCount: {pcount}
-    nprocs: 2
-    params: {{ steps: 1, grid_per_proc: {PER_PROC}, particles_per_proc: {PER_PROC}, verify: 0 }}
-    outports:
-      - filename: outfile.h5
-        dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
-  - func: consumer
-    taskCount: {ccount}
-    nprocs: 2
-    params: {{ verify: 0 }}
-    inports:
-      - filename: outfile.h5
-        dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
-",
-    );
-    let w = Wilkins::from_yaml_str(&yaml, builtin_registry()).unwrap();
-    w.run().unwrap().elapsed.as_secs_f64()
+    let ens = Ensemble::from_yaml_str(&spec, builtin_registry()).unwrap();
+    ens.run().unwrap().elapsed.as_secs_f64()
 }
 
 fn main() {
@@ -66,7 +110,7 @@ fn main() {
         vec![1, 4, 16, 64]
     };
     let trials = 3;
-    println!("== Figures 7/8/9: ensemble topology scaling ==");
+    println!("== Figures 7/8/9: ensemble topology scaling (ensemble subsystem) ==");
     println!("(2 ranks per instance, {PER_PROC} elems/proc, avg of {trials} trials)\n");
 
     let mut series: Vec<(&str, Vec<f64>)> = Vec::new();
@@ -123,6 +167,33 @@ fn main() {
         .map(|(t, &c)| t / c as f64)
         .collect();
     assert_roughly_flat("NxN per-instance", &nxn_per[1..], 3.0);
+
+    // Co-scheduling on a bounded budget: the same NxN instances packed
+    // onto HALF the ranks, fifo vs round-robin. Both must drain the
+    // whole ensemble without ever exceeding the budget; the scheduler
+    // runs the pairs in two waves.
+    let pairs = 16;
+    let budget = pairs * 4 / 2;
+    println!("\n== co-scheduling {pairs} pipelines on {budget}/{} ranks ==", pairs * 4);
+    let mut ptable = Table::new(&["policy", "time (s)", "peak ranks", "rounds"]);
+    for policy in ["fifo", "round-robin"] {
+        let ens = Ensemble::from_yaml_str(&nxn_spec(pairs, budget, policy), builtin_registry())
+            .unwrap();
+        let report = ens.run().unwrap();
+        assert!(
+            report.peak_ranks <= budget,
+            "{policy}: peak {} exceeded budget {budget}",
+            report.peak_ranks
+        );
+        assert_eq!(report.instances.len(), pairs, "{policy}: all instances ran");
+        ptable.row(&[
+            policy.to_string(),
+            format!("{:.4}", report.elapsed.as_secs_f64()),
+            report.peak_ranks.to_string(),
+            report.rounds.to_string(),
+        ]);
+    }
+    print!("{}", ptable.render());
 
     // Paper-scale projection (sim::NetModel, reporting aid): what the
     // measured per-instance cost implies on Bebop-like hardware where

@@ -94,6 +94,18 @@ impl WorkflowConfig {
         WorkflowConfig::from_yaml_str(&src)
     }
 
+    /// Build from an already-parsed YAML value whose mapping carries
+    /// the `tasks:` (and optionally `workdir:`) keys. This is how the
+    /// ensemble spec (see [`crate::ensemble`]) embeds whole workflows
+    /// inline under an instance entry; unrelated sibling keys are
+    /// ignored, exactly as unknown top-level keys are in a workflow
+    /// file.
+    pub fn from_yaml_doc(doc: &Yaml) -> Result<WorkflowConfig> {
+        let cfg = from_doc(doc)?;
+        validate::validate(&cfg)?;
+        Ok(cfg)
+    }
+
     /// Total ranks across all tasks and instances.
     pub fn total_ranks(&self) -> usize {
         self.tasks.iter().map(|t| t.nprocs * t.task_count).sum()
@@ -215,7 +227,9 @@ fn parse_ports(y: Option<&Yaml>) -> Result<Vec<PortConfig>> {
     Ok(out)
 }
 
-fn get_usize(y: &Yaml, key: &str) -> Result<Option<usize>> {
+/// Optional non-negative integer field (shared with the ensemble
+/// spec parser).
+pub(crate) fn get_usize(y: &Yaml, key: &str) -> Result<Option<usize>> {
     match y.get(key) {
         None => Ok(None),
         Some(v) => {

@@ -6,10 +6,18 @@
 //! control and custom actions, launches every rank, and joins the
 //! whole workflow. Users never touch this code — everything is driven
 //! by the YAML file, exactly as in the paper.
+//!
+//! One [`Wilkins`] drives one workflow instance. To co-schedule many
+//! instances against a shared rank budget, use the parallel entry
+//! point [`Ensemble::run`](crate::ensemble::Ensemble::run).
 
 mod report;
 
 pub use report::{NodeReport, RunReport};
+
+// The campaign layer above single runs; re-exported here so the two
+// drivers (one instance / many instances) are found side by side.
+pub use crate::ensemble::{Ensemble, EnsembleReport};
 
 use std::path::PathBuf;
 use std::sync::Arc;

@@ -1,0 +1,330 @@
+//! Ensemble co-scheduling (paper Sec. 4.1 scale-up, Figures 7–10):
+//! run N workflow instances concurrently against one shared scheduler.
+//!
+//! A single [`Wilkins`](crate::coordinator::Wilkins) run executes one
+//! workflow; campaigns run *ensembles* — many instances of the same
+//! (or similar) workflows, racing for the same machine. This module
+//! adds the missing layer:
+//!
+//! * [`EnsembleSpec`] — a YAML list of instances with per-instance
+//!   overrides (`params`, `io_freq`, `time_scale`), reusing the
+//!   workflow YAML unchanged ([`spec`]).
+//! * [`CoScheduler`] — packs instances onto a bounded global rank
+//!   budget, FIFO or round-robin, with instance-level admission
+//!   backpressure reusing [`FlowControl`](crate::flow::FlowControl)
+//!   semantics ([`scheduler`]).
+//! * [`Ensemble`] — the driver: admits instances as the budget allows,
+//!   runs each as a full Wilkins workflow in its own workdir, shares
+//!   one AOT engine across instances
+//!   ([`runtime::shared_engine`](crate::runtime::shared_engine)), and
+//!   aggregates per-instance [`RunReport`]s plus a merged Gantt trace
+//!   ([`report`], [`MergedTrace`](crate::metrics::MergedTrace)).
+//!
+//! ```no_run
+//! use wilkins::ensemble::Ensemble;
+//! use wilkins::tasks::builtin_registry;
+//!
+//! let ens = Ensemble::from_yaml_file(
+//!     std::path::Path::new("configs/ensemble_pipeline.yaml"),
+//!     builtin_registry(),
+//! )?;
+//! let report = ens.run()?;
+//! print!("{}", report.render());
+//! # Ok::<(), wilkins::WilkinsError>(())
+//! ```
+
+pub mod report;
+pub mod scheduler;
+pub mod spec;
+
+pub use report::{EnsembleReport, InstanceReport};
+pub use scheduler::{CoScheduler, Policy};
+pub use spec::{EnsembleSpec, InstanceSpec};
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use crate::coordinator::{RunReport, Wilkins};
+use crate::error::{Result, WilkinsError};
+use crate::graph::WorkflowGraph;
+use crate::henson::Registry;
+use crate::metrics::{MergedTrace, Span};
+use crate::runtime::EngineHandle;
+
+/// What an instance thread sends back when its workflow completes.
+struct Completion {
+    idx: usize,
+    finished_s: f64,
+    result: Result<RunReport>,
+    spans: Vec<Span>,
+}
+
+/// The ensemble driver. Build one per ensemble run; the entry point
+/// parallel to [`Wilkins::run`].
+pub struct Ensemble {
+    spec: EnsembleSpec,
+    registry: Registry,
+    engine: Option<EngineHandle>,
+    time_scale: f64,
+    workdir: PathBuf,
+    /// True when the workdir was chosen by the spec or the caller (as
+    /// opposed to the temp-dir default). An explicitly chosen ensemble
+    /// workdir overrides per-workflow `workdir:` fields; the default
+    /// yields to them.
+    workdir_explicit: bool,
+}
+
+impl Ensemble {
+    /// Fast-fails like the coordinator does: every instance's graph
+    /// must build and every task code must resolve before anything
+    /// launches.
+    pub fn new(spec: EnsembleSpec, registry: Registry) -> Result<Ensemble> {
+        for inst in &spec.instances {
+            WorkflowGraph::build(&inst.cfg).map_err(|e| {
+                WilkinsError::Config(format!("instance {}: {e}", inst.name))
+            })?;
+            for t in &inst.cfg.tasks {
+                registry.get(&t.func).map_err(|e| {
+                    WilkinsError::Config(format!("instance {}: {e}", inst.name))
+                })?;
+            }
+        }
+        let workdir_explicit = spec.workdir.is_some();
+        let workdir = spec
+            .workdir
+            .clone()
+            .map(PathBuf::from)
+            .unwrap_or_else(|| {
+                std::env::temp_dir().join(format!("wilkins-ens-{}", std::process::id()))
+            });
+        Ok(Ensemble {
+            spec,
+            registry,
+            engine: None,
+            time_scale: 1.0,
+            workdir,
+            workdir_explicit,
+        })
+    }
+
+    pub fn from_yaml_str(src: &str, registry: Registry) -> Result<Ensemble> {
+        Ensemble::new(EnsembleSpec::from_yaml_str(src, Path::new("."))?, registry)
+    }
+
+    pub fn from_yaml_file(path: &Path, registry: Registry) -> Result<Ensemble> {
+        Ensemble::new(EnsembleSpec::from_yaml_file(path)?, registry)
+    }
+
+    /// Attach an AOT engine handle shared by every instance. Use
+    /// [`crate::runtime::shared_engine`] so identical artifacts
+    /// compile/load once across instances (and across ensembles in the
+    /// same process).
+    pub fn with_engine(mut self, engine: EngineHandle) -> Ensemble {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Convenience: attach the process-shared engine for an artifacts
+    /// directory (see [`crate::runtime::shared_engine`]).
+    pub fn with_shared_artifacts(self, artifacts_dir: &Path) -> Result<Ensemble> {
+        let handle = crate::runtime::shared_engine(artifacts_dir)?;
+        Ok(self.with_engine(handle))
+    }
+
+    /// Default time scale for instances that do not override it.
+    pub fn with_time_scale(mut self, s: f64) -> Ensemble {
+        self.time_scale = s;
+        self
+    }
+
+    pub fn with_workdir(mut self, dir: PathBuf) -> Ensemble {
+        self.workdir = dir;
+        self.workdir_explicit = true;
+        self
+    }
+
+    /// Override the spec's rank budget.
+    pub fn with_budget(mut self, max_ranks: usize) -> Ensemble {
+        self.spec.max_ranks = max_ranks;
+        self
+    }
+
+    /// Override the spec's scheduling policy.
+    pub fn with_policy(mut self, policy: Policy) -> Ensemble {
+        self.spec.policy = policy;
+        self
+    }
+
+    pub fn spec(&self) -> &EnsembleSpec {
+        &self.spec
+    }
+
+    /// Launch the ensemble and block until every instance finishes.
+    ///
+    /// Instances are admitted by the [`CoScheduler`]; each admitted
+    /// instance runs as a complete Wilkins workflow on its own threads
+    /// in `<workdir>/<instance-name>` (instances must not share
+    /// file-mode transport directories). A failing instance does not
+    /// abort the others — the error is reported after the ensemble
+    /// drains.
+    pub fn run(&self) -> Result<EnsembleReport> {
+        let n = self.spec.instances.len();
+        let sched_insts: Vec<(usize, crate::flow::FlowControl)> = self
+            .spec
+            .instances
+            .iter()
+            .map(|i| (i.ranks(), i.admission))
+            .collect();
+        let mut sched =
+            CoScheduler::new(self.spec.max_ranks, self.spec.policy, &sched_insts)?;
+        std::fs::create_dir_all(&self.workdir)?;
+
+        let origin = Instant::now();
+        let (tx, rx) = mpsc::channel::<Completion>();
+        let mut joins: Vec<Option<thread::JoinHandle<()>>> = (0..n).map(|_| None).collect();
+        let mut started = vec![0.0_f64; n];
+        let mut finished = vec![0.0_f64; n];
+        let mut reports: Vec<Option<RunReport>> = (0..n).map(|_| None).collect();
+        let mut spans: Vec<Vec<Span>> = vec![Vec::new(); n];
+        let mut errors: Vec<String> = Vec::new();
+        let mut peak = 0usize;
+        let mut completed = 0usize;
+        let mut idle_rounds = 0u32;
+
+        while completed < n {
+            let admitted = sched.next_round();
+            if admitted.is_empty() && sched.running() == 0 {
+                // Nothing running and nothing admitted: only admission
+                // throttles can be holding instances back; they clear
+                // within their own period. Back off instead of
+                // hot-spinning (idle rounds would otherwise advance at
+                // CPU speed, which both burns a core and makes
+                // `Some(n)` throttles trivially satisfiable), and
+                // guard against scheduler bugs: ~100 s of continuous
+                // idling with pending instances is a stall.
+                idle_rounds += 1;
+                if idle_rounds > 100_000 {
+                    return Err(WilkinsError::Task(
+                        "ensemble co-scheduler stalled with pending instances".into(),
+                    ));
+                }
+                thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            idle_rounds = 0;
+            for idx in admitted {
+                peak = peak.max(sched.in_use());
+                let inst = &self.spec.instances[idx];
+                started[idx] = origin.elapsed().as_secs_f64();
+                match self.launch(idx, origin, tx.clone()) {
+                    Ok(handle) => joins[idx] = Some(handle),
+                    Err(e) => {
+                        // Could not even start: record and release.
+                        errors.push(format!("{}: {e}", inst.name));
+                        finished[idx] = origin.elapsed().as_secs_f64();
+                        sched.finish(idx);
+                        completed += 1;
+                    }
+                }
+            }
+            if sched.running() > 0 {
+                let done = rx.recv().map_err(|_| {
+                    WilkinsError::Task("ensemble instance channel closed".into())
+                })?;
+                let idx = done.idx;
+                finished[idx] = done.finished_s;
+                spans[idx] = done.spans;
+                match done.result {
+                    Ok(r) => reports[idx] = Some(r),
+                    Err(e) => errors.push(format!("{}: {e}", self.spec.instances[idx].name)),
+                }
+                if let Some(h) = joins[idx].take() {
+                    let _ = h.join();
+                }
+                sched.finish(idx);
+                completed += 1;
+            }
+        }
+
+        if !errors.is_empty() {
+            return Err(WilkinsError::Task(format!(
+                "{} ensemble instance(s) failed: {}",
+                errors.len(),
+                errors.join("; ")
+            )));
+        }
+
+        let mut trace = MergedTrace::new();
+        let mut instances = Vec::with_capacity(n);
+        for (idx, inst) in self.spec.instances.iter().enumerate() {
+            trace.add_instance(&inst.name, started[idx], &spans[idx]);
+            instances.push(InstanceReport {
+                name: inst.name.clone(),
+                ranks: inst.ranks(),
+                started_s: started[idx],
+                finished_s: finished[idx],
+                report: reports[idx]
+                    .take()
+                    .expect("no failures, so every instance has a report"),
+            });
+        }
+        Ok(EnsembleReport {
+            elapsed: origin.elapsed(),
+            budget: self.spec.max_ranks,
+            policy: self.spec.policy,
+            peak_ranks: peak,
+            rounds: sched.rounds(),
+            instances,
+            trace,
+        })
+    }
+
+    /// Build and launch one instance on its own driver thread.
+    fn launch(
+        &self,
+        idx: usize,
+        origin: Instant,
+        tx: mpsc::Sender<Completion>,
+    ) -> Result<thread::JoinHandle<()>> {
+        let inst = &self.spec.instances[idx];
+        // Instances always get a per-name subdirectory (they share
+        // filenames, so file-mode transports must not collide), but a
+        // workflow-level `workdir:` is honored as the parent unless
+        // the spec/caller chose an ensemble workdir explicitly.
+        let parent = match (&inst.cfg.workdir, self.workdir_explicit) {
+            (Some(dir), false) => PathBuf::from(dir),
+            _ => self.workdir.clone(),
+        };
+        let mut w = Wilkins::new(inst.cfg.clone(), self.registry.clone())?
+            .with_workdir(parent.join(&inst.name))
+            .with_time_scale(inst.time_scale.unwrap_or(self.time_scale));
+        if let Some(engine) = &self.engine {
+            w = w.with_engine(engine.clone());
+        }
+        let recorder = w.recorder();
+        thread::Builder::new()
+            .name(format!("wk-ens-{}", inst.name))
+            .spawn(move || {
+                // A Completion must reach the driver even if the
+                // instance panics — a lost send would deadlock the
+                // recv loop with the instance still counted Running.
+                let result = match std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| w.run()),
+                ) {
+                    Ok(res) => res,
+                    Err(_) => Err(WilkinsError::Task("instance driver panicked".into())),
+                };
+                let finished_s = origin.elapsed().as_secs_f64();
+                // spans() locks the recorder mutex, which a panicking
+                // rank may have poisoned; never lose the Completion.
+                let spans = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    recorder.spans()
+                }))
+                .unwrap_or_default();
+                let _ = tx.send(Completion { idx, finished_s, result, spans });
+            })
+            .map_err(|e| WilkinsError::Task(format!("spawn instance driver: {e}")))
+    }
+}

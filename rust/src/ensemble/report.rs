@@ -1,0 +1,87 @@
+//! Ensemble run reports: per-instance [`RunReport`]s plus scheduling
+//! facts (admission times, packing peak) and the merged Gantt trace.
+
+use std::time::Duration;
+
+use crate::coordinator::RunReport;
+use crate::metrics::MergedTrace;
+
+use super::scheduler::Policy;
+
+/// One instance's outcome inside an ensemble run.
+#[derive(Debug, Clone)]
+pub struct InstanceReport {
+    pub name: String,
+    /// Ranks the instance held while running.
+    pub ranks: usize,
+    /// Seconds after ensemble start when the co-scheduler admitted it.
+    pub started_s: f64,
+    /// Seconds after ensemble start when it completed.
+    pub finished_s: f64,
+    /// The instance's own workflow report.
+    pub report: RunReport,
+}
+
+impl InstanceReport {
+    /// Wall seconds the instance spent running.
+    pub fn elapsed_s(&self) -> f64 {
+        self.finished_s - self.started_s
+    }
+}
+
+/// The result of an ensemble run.
+#[derive(Debug, Clone)]
+pub struct EnsembleReport {
+    pub elapsed: Duration,
+    /// The rank budget instances were packed onto.
+    pub budget: usize,
+    pub policy: Policy,
+    /// Peak ranks simultaneously in use (packing efficiency: compare
+    /// against `budget`).
+    pub peak_ranks: usize,
+    /// Scheduling rounds the co-scheduler took.
+    pub rounds: u64,
+    /// Per-instance reports, in spec order.
+    pub instances: Vec<InstanceReport>,
+    /// Merged Gantt trace across all instances, on the ensemble clock.
+    pub trace: MergedTrace,
+}
+
+impl EnsembleReport {
+    pub fn instance(&self, name: &str) -> Option<&InstanceReport> {
+        self.instances.iter().find(|i| i.name == name)
+    }
+
+    /// Pretty per-instance table for the CLI.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "ensemble completed in {:.3}s  ({} instances, budget {} ranks, peak {} in use, {} policy, {} rounds)\n",
+            self.elapsed.as_secs_f64(),
+            self.instances.len(),
+            self.budget,
+            self.peak_ranks,
+            self.policy,
+            self.rounds
+        );
+        s.push_str(&format!(
+            "{:<20} {:>6} {:>9} {:>9} {:>9} {:>8} {:>8} {:>12}\n",
+            "instance", "ranks", "start", "finish", "elapsed", "served", "opened", "bytes_moved"
+        ));
+        for i in &self.instances {
+            let served: u64 = i.report.nodes.iter().map(|n| n.files_served).sum();
+            let opened: u64 = i.report.nodes.iter().map(|n| n.files_opened).sum();
+            s.push_str(&format!(
+                "{:<20} {:>6} {:>8.3}s {:>8.3}s {:>8.3}s {:>8} {:>8} {:>12}\n",
+                i.name,
+                i.ranks,
+                i.started_s,
+                i.finished_s,
+                i.elapsed_s(),
+                served,
+                opened,
+                i.report.bytes_sent
+            ));
+        }
+        s
+    }
+}

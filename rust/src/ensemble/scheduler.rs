@@ -1,0 +1,383 @@
+//! The co-scheduler: packs workflow instances onto a bounded global
+//! rank budget.
+//!
+//! This is deliberately a pure state machine — no threads, no clocks —
+//! so packing and ordering are unit-testable. The [`Ensemble`]
+//! runner drives it: one [`CoScheduler::next_round`] call per
+//! scheduling opportunity (startup, and every instance completion),
+//! spawning whatever the round admits.
+//!
+//! Two policies, mirroring the co-scheduling literature on ensembles
+//! of in situ workflows:
+//!
+//! * **FIFO** — strict submission order. Instances are admitted in
+//!   spec order while they fit in the remaining budget; the first
+//!   instance that does not fit (or is not yet eligible) blocks
+//!   everything behind it. Predictable, and preserves priority
+//!   encoded as ordering.
+//! * **Round-robin** — a rotating first-fit. The scan starts after the
+//!   last admitted instance and skips entries that do not fit, so
+//!   small instances backfill around large ones and no single wide
+//!   instance starves the tail. Better packing, weaker ordering.
+//!
+//! Instance-level backpressure reuses [`FlowControl`] semantics
+//! (the YAML `io_freq` convention, decoded with
+//! [`FlowControl::from_io_freq`]):
+//!
+//! * [`FlowControl::All`] — always eligible (the default).
+//! * [`FlowControl::Some`]\(n\) — eligible every nth scheduling round
+//!   only: a submission throttle for low-priority instances.
+//! * [`FlowControl::Latest`] — eligible only when the budget is
+//!   completely idle: the instance only *starts* on a quiet machine
+//!   (it does not keep the budget to itself once running).
+//!
+//! [`Ensemble`]: crate::ensemble::Ensemble
+
+use crate::error::{Result, WilkinsError};
+use crate::flow::FlowControl;
+
+/// Instance admission policy of the co-scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Policy {
+    /// Strict submission order with head-of-line blocking.
+    #[default]
+    Fifo,
+    /// Rotating first-fit: skip what does not fit, resume the scan
+    /// after the last admission.
+    RoundRobin,
+}
+
+impl Policy {
+    /// Parse the YAML `policy:` field.
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s {
+            "fifo" | "FIFO" => Ok(Policy::Fifo),
+            "round-robin" | "round_robin" | "rr" => Ok(Policy::RoundRobin),
+            other => Err(WilkinsError::Config(format!(
+                "unknown scheduling policy {other:?}; use fifo or round-robin"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Policy::Fifo => write!(f, "fifo"),
+            Policy::RoundRobin => write!(f, "round-robin"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum InstState {
+    Pending,
+    Running,
+    Finished,
+}
+
+/// Packs instances (each a rank count + admission throttle) onto a
+/// bounded rank budget. See the module docs for the policies.
+#[derive(Debug)]
+pub struct CoScheduler {
+    budget: usize,
+    policy: Policy,
+    ranks: Vec<usize>,
+    admission: Vec<FlowControl>,
+    state: Vec<InstState>,
+    /// Round-robin scan start.
+    cursor: usize,
+    /// Scheduling round counter (drives `Some(n)` throttles).
+    round: u64,
+    in_use: usize,
+}
+
+impl CoScheduler {
+    /// `insts` is one `(ranks, admission)` pair per instance, in spec
+    /// order. Errors if any single instance is wider than the budget
+    /// (it could never run).
+    pub fn new(
+        budget: usize,
+        policy: Policy,
+        insts: &[(usize, FlowControl)],
+    ) -> Result<CoScheduler> {
+        if budget == 0 {
+            return Err(WilkinsError::Config(
+                "ensemble rank budget must be >= 1".into(),
+            ));
+        }
+        for (i, (ranks, _)) in insts.iter().enumerate() {
+            if *ranks == 0 {
+                return Err(WilkinsError::Config(format!(
+                    "ensemble instance #{i} has zero ranks"
+                )));
+            }
+            if *ranks > budget {
+                return Err(WilkinsError::Config(format!(
+                    "ensemble instance #{i} needs {ranks} ranks but the budget is {budget}"
+                )));
+            }
+        }
+        Ok(CoScheduler {
+            budget,
+            policy,
+            ranks: insts.iter().map(|(r, _)| *r).collect(),
+            admission: insts.iter().map(|(_, a)| *a).collect(),
+            state: vec![InstState::Pending; insts.len()],
+            cursor: 0,
+            round: 0,
+            in_use: 0,
+        })
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Ranks currently held by running instances.
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Number of running instances.
+    pub fn running(&self) -> usize {
+        self.state
+            .iter()
+            .filter(|s| **s == InstState::Running)
+            .count()
+    }
+
+    /// Scheduling rounds taken so far.
+    pub fn rounds(&self) -> u64 {
+        self.round
+    }
+
+    /// All instances finished?
+    pub fn is_done(&self) -> bool {
+        self.state.iter().all(|s| *s == InstState::Finished)
+    }
+
+    fn eligible(&self, i: usize) -> bool {
+        match self.admission[i] {
+            FlowControl::All => true,
+            FlowControl::Some(n) => self.round % n == 0,
+            FlowControl::Latest => self.in_use == 0,
+        }
+    }
+
+    fn admit(&mut self, i: usize, admitted: &mut Vec<usize>) {
+        self.state[i] = InstState::Running;
+        self.in_use += self.ranks[i];
+        admitted.push(i);
+    }
+
+    /// One scheduling round: admit pending instances under the policy
+    /// and return their indices (possibly empty — e.g. nothing fits
+    /// until a running instance releases ranks).
+    pub fn next_round(&mut self) -> Vec<usize> {
+        self.round += 1;
+        let n = self.ranks.len();
+        let mut admitted = Vec::new();
+        match self.policy {
+            Policy::Fifo => {
+                for i in 0..n {
+                    match self.state[i] {
+                        InstState::Pending => {
+                            if !self.eligible(i) || self.in_use + self.ranks[i] > self.budget {
+                                break; // head-of-line blocks the rest
+                            }
+                            self.admit(i, &mut admitted);
+                        }
+                        InstState::Running | InstState::Finished => continue,
+                    }
+                }
+            }
+            Policy::RoundRobin => {
+                let mut i = self.cursor % n.max(1);
+                for _ in 0..n {
+                    if self.state[i] == InstState::Pending
+                        && self.eligible(i)
+                        && self.in_use + self.ranks[i] <= self.budget
+                    {
+                        self.admit(i, &mut admitted);
+                        self.cursor = (i + 1) % n;
+                    }
+                    i = (i + 1) % n;
+                }
+            }
+        }
+        admitted
+    }
+
+    /// A running instance completed; its ranks return to the budget.
+    pub fn finish(&mut self, i: usize) {
+        debug_assert_eq!(self.state[i], InstState::Running, "finish of non-running instance");
+        if self.state[i] == InstState::Running {
+            self.state[i] = InstState::Finished;
+            self.in_use -= self.ranks[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all(n: usize, ranks: usize) -> Vec<(usize, FlowControl)> {
+        vec![(ranks, FlowControl::All); n]
+    }
+
+    /// Drive the scheduler to completion, finishing running instances
+    /// in admission order; returns the admission order as waves.
+    fn run_to_completion(sched: &mut CoScheduler) -> Vec<Vec<usize>> {
+        let mut waves = Vec::new();
+        let mut running: Vec<usize> = Vec::new();
+        let mut guard = 0;
+        while !sched.is_done() {
+            guard += 1;
+            assert!(guard < 10_000, "scheduler stalled");
+            let admitted = sched.next_round();
+            if !admitted.is_empty() {
+                running.extend(&admitted);
+                waves.push(admitted);
+            } else if let Some(idx) = running.first().copied() {
+                running.remove(0);
+                sched.finish(idx);
+            }
+        }
+        waves
+    }
+
+    #[test]
+    fn fifo_packs_in_order_within_budget() {
+        let mut s = CoScheduler::new(6, Policy::Fifo, &all(5, 2)).unwrap();
+        let w1 = s.next_round();
+        assert_eq!(w1, vec![0, 1, 2], "three 2-rank instances fill a 6-rank budget");
+        assert_eq!(s.in_use(), 6);
+        assert!(s.next_round().is_empty(), "budget exhausted");
+        s.finish(1);
+        assert_eq!(s.next_round(), vec![3]);
+        s.finish(0);
+        s.finish(2);
+        assert_eq!(s.next_round(), vec![4]);
+        s.finish(3);
+        s.finish(4);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn fifo_head_of_line_blocks() {
+        // 4-rank head does not fit after the first 2-rank admission
+        // with budget 5; FIFO must NOT let the later 1-rank instance
+        // jump the queue.
+        let insts = vec![
+            (2, FlowControl::All),
+            (4, FlowControl::All),
+            (1, FlowControl::All),
+        ];
+        let mut s = CoScheduler::new(5, Policy::Fifo, &insts).unwrap();
+        assert_eq!(s.next_round(), vec![0]);
+        assert!(s.next_round().is_empty(), "instance 2 must wait behind 1");
+        s.finish(0);
+        assert_eq!(s.next_round(), vec![1, 2]);
+    }
+
+    #[test]
+    fn round_robin_backfills_around_wide_instances() {
+        // Same shape as the FIFO head-of-line test: round-robin skips
+        // the 4-rank instance and backfills the 1-rank one.
+        let insts = vec![
+            (2, FlowControl::All),
+            (4, FlowControl::All),
+            (1, FlowControl::All),
+        ];
+        let mut s = CoScheduler::new(5, Policy::RoundRobin, &insts).unwrap();
+        let w1 = s.next_round();
+        assert_eq!(w1, vec![0, 2], "1-rank instance backfills past the 4-rank one");
+        s.finish(0);
+        s.finish(2);
+        assert_eq!(s.next_round(), vec![1]);
+    }
+
+    #[test]
+    fn round_robin_cursor_rotates() {
+        // Budget fits exactly one instance at a time; admissions must
+        // rotate 0, 1, 2, 3 even though 0 frees up first every time.
+        let mut s = CoScheduler::new(2, Policy::RoundRobin, &all(4, 2)).unwrap();
+        let order: Vec<usize> = run_to_completion(&mut s)
+            .into_iter()
+            .flatten()
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn some_n_throttles_admission_rounds() {
+        // Instance 1 is only eligible every 3rd round; FIFO blocks
+        // instance 2 behind it until then.
+        let insts = vec![
+            (1, FlowControl::All),
+            (1, FlowControl::Some(3)),
+            (1, FlowControl::All),
+        ];
+        let mut s = CoScheduler::new(4, Policy::Fifo, &insts).unwrap();
+        assert_eq!(s.next_round(), vec![0], "round 1: throttled head blocks");
+        assert_eq!(s.next_round(), Vec::<usize>::new(), "round 2: still throttled");
+        assert_eq!(s.next_round(), vec![1, 2], "round 3: 3 % 3 == 0, all admitted");
+    }
+
+    #[test]
+    fn latest_only_starts_on_idle_budget() {
+        let insts = vec![
+            (2, FlowControl::All),
+            (1, FlowControl::Latest),
+            (1, FlowControl::All),
+        ];
+        let mut s = CoScheduler::new(4, Policy::RoundRobin, &insts).unwrap();
+        let w1 = s.next_round();
+        // Instance 1 must not start while 0 (admitted earlier in the
+        // same round) holds ranks; 2 backfills normally.
+        assert_eq!(w1, vec![0, 2]);
+        s.finish(0);
+        assert!(s.next_round().is_empty(), "still busy: instance 2 running");
+        s.finish(2);
+        assert_eq!(s.next_round(), vec![1], "idle budget at last");
+        s.finish(1);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn rejects_unrunnable_shapes() {
+        assert!(CoScheduler::new(0, Policy::Fifo, &all(1, 1)).is_err());
+        assert!(CoScheduler::new(4, Policy::Fifo, &all(1, 5)).is_err());
+        assert!(CoScheduler::new(4, Policy::Fifo, &[(0, FlowControl::All)]).is_err());
+    }
+
+    #[test]
+    fn all_instances_complete_under_both_policies() {
+        for policy in [Policy::Fifo, Policy::RoundRobin] {
+            let insts: Vec<(usize, FlowControl)> = vec![
+                (3, FlowControl::All),
+                (2, FlowControl::Some(2)),
+                (4, FlowControl::All),
+                (1, FlowControl::Latest),
+                (2, FlowControl::All),
+            ];
+            let mut s = CoScheduler::new(4, policy, &insts).unwrap();
+            let waves = run_to_completion(&mut s);
+            let mut seen: Vec<usize> = waves.into_iter().flatten().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2, 3, 4], "{policy}: every instance ran");
+            assert_eq!(s.in_use(), 0);
+        }
+    }
+
+    #[test]
+    fn policy_parse_and_display() {
+        assert_eq!(Policy::parse("fifo").unwrap(), Policy::Fifo);
+        assert_eq!(Policy::parse("round-robin").unwrap(), Policy::RoundRobin);
+        assert_eq!(Policy::parse("rr").unwrap(), Policy::RoundRobin);
+        assert!(Policy::parse("lifo").is_err());
+        assert_eq!(Policy::RoundRobin.to_string(), "round-robin");
+    }
+}

@@ -1,0 +1,404 @@
+//! The ensemble specification: a YAML list of workflow instances with
+//! per-instance overrides, sharing one rank budget.
+//!
+//! The spec keeps the Wilkins ease-of-use contract: it is pure data,
+//! reusing the workflow YAML unchanged. A minimal spec:
+//!
+//! ```yaml
+//! ensemble:
+//!   max_ranks: 8
+//!   policy: round-robin
+//!   workflow: pipeline.yaml     # shared base workflow (or inline tasks:)
+//!   instances:
+//!     - name: lo
+//!       params: { producer: { steps: 2 } }
+//!     - name: hi
+//!       count: 3                # expands to hi[0], hi[1], hi[2]
+//!       io_freq: -1             # override every inport of this instance
+//!       admission: 2            # co-scheduler throttle (io_freq convention)
+//! ```
+//!
+//! Each instance names a base workflow — the shared `workflow:` /
+//! `tasks:` of the spec, or its own — and optionally overrides task
+//! `params:` (per `func`), every inport's `io_freq`, and the emulated
+//! `time_scale`. `admission:` throttles *scheduling* with the same
+//! `io_freq` conventions (see [`crate::ensemble::scheduler`]).
+
+use std::path::Path;
+
+use crate::config::{get_usize, WorkflowConfig};
+use crate::configyaml::{self, Yaml};
+use crate::error::{Result, WilkinsError};
+use crate::flow::FlowControl;
+
+use super::scheduler::Policy;
+
+/// Upper bound on `admission: N` throttle periods. Scheduling rounds
+/// happen at startup, on every instance completion, and at ~1 kHz
+/// while the budget idles, so this keeps every throttle well inside
+/// the runner's stall guard (which trips after ~100k idle rounds).
+pub const MAX_ADMISSION_PERIOD: i64 = 10_000;
+
+/// One co-scheduled workflow instance.
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    /// Unique instance name; also the instance's workdir subdirectory
+    /// and its lane group in the merged Gantt trace.
+    pub name: String,
+    /// The instance's fully-resolved workflow configuration (base plus
+    /// overrides).
+    pub cfg: WorkflowConfig,
+    /// Per-instance `time_scale` override (else the ensemble's).
+    pub time_scale: Option<f64>,
+    /// Admission throttle for the co-scheduler.
+    pub admission: FlowControl,
+}
+
+impl InstanceSpec {
+    /// Ranks this instance occupies while running.
+    pub fn ranks(&self) -> usize {
+        self.cfg.total_ranks()
+    }
+}
+
+/// A parsed ensemble specification.
+#[derive(Debug, Clone)]
+pub struct EnsembleSpec {
+    /// Global rank budget instances are packed onto.
+    pub max_ranks: usize,
+    pub policy: Policy,
+    /// Ensemble workdir; every instance runs in `<workdir>/<name>`.
+    pub workdir: Option<String>,
+    pub instances: Vec<InstanceSpec>,
+}
+
+impl EnsembleSpec {
+    /// Parse a spec from YAML text. `base_dir` resolves relative
+    /// `workflow:` paths (use the spec file's directory, or `.`).
+    pub fn from_yaml_str(src: &str, base_dir: &Path) -> Result<EnsembleSpec> {
+        let doc = configyaml::parse(src)?;
+        from_doc(&doc, base_dir)
+    }
+
+    pub fn from_yaml_file(path: &Path) -> Result<EnsembleSpec> {
+        let src = std::fs::read_to_string(path)?;
+        let base_dir = path.parent().unwrap_or_else(|| Path::new("."));
+        EnsembleSpec::from_yaml_str(&src, base_dir)
+    }
+
+    /// Sum of all instance rank counts (the footprint of running
+    /// everything at once).
+    pub fn total_ranks(&self) -> usize {
+        self.instances.iter().map(InstanceSpec::ranks).sum()
+    }
+}
+
+fn from_doc(doc: &Yaml, base_dir: &Path) -> Result<EnsembleSpec> {
+    let ens = doc
+        .get("ensemble")
+        .ok_or_else(|| WilkinsError::Config("missing `ensemble:` mapping".into()))?;
+    if ens.as_map().is_none() {
+        return Err(WilkinsError::Config(format!(
+            "`ensemble:` must be a mapping, got {}",
+            ens.type_name()
+        )));
+    }
+
+    let base = base_workflow(ens, base_dir, "ensemble")?;
+    let policy = match ens.get("policy").and_then(Yaml::as_str) {
+        Some(s) => Policy::parse(s)?,
+        None => Policy::Fifo,
+    };
+    let workdir = ens
+        .get("workdir")
+        .and_then(Yaml::as_str)
+        .map(str::to_string);
+
+    let insts_y = ens
+        .get("instances")
+        .and_then(Yaml::as_seq)
+        .ok_or_else(|| WilkinsError::Config("ensemble missing `instances:` list".into()))?;
+    if insts_y.is_empty() {
+        return Err(WilkinsError::Config("ensemble has no instances".into()));
+    }
+
+    let mut instances = Vec::new();
+    for (i, inst_y) in insts_y.iter().enumerate() {
+        let parsed = parse_instance(inst_y, i, base.as_ref(), base_dir)
+            .map_err(|e| WilkinsError::Config(format!("instance #{i}: {e}")))?;
+        instances.extend(parsed);
+    }
+
+    // Names must be unique: they key workdirs and trace lanes.
+    let mut names: Vec<&str> = instances.iter().map(|x| x.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    if names.len() != instances.len() {
+        return Err(WilkinsError::Config(
+            "duplicate ensemble instance names; use `count:` or distinct `name:` fields".into(),
+        ));
+    }
+
+    let total: usize = instances.iter().map(InstanceSpec::ranks).sum();
+    let max_ranks = match get_usize(ens, "max_ranks")? {
+        Some(0) | None => total, // absent or 0: fully concurrent
+        Some(n) => n,
+    };
+    for inst in &instances {
+        if inst.ranks() > max_ranks {
+            return Err(WilkinsError::Config(format!(
+                "instance {} needs {} ranks but max_ranks is {max_ranks}",
+                inst.name,
+                inst.ranks()
+            )));
+        }
+    }
+
+    Ok(EnsembleSpec { max_ranks, policy, workdir, instances })
+}
+
+/// The base workflow named by a spec level (`tasks:` inline wins over
+/// a `workflow:` path); `None` when the level names neither.
+fn base_workflow(y: &Yaml, base_dir: &Path, who: &str) -> Result<Option<WorkflowConfig>> {
+    if y.get("tasks").is_some() {
+        return Ok(Some(WorkflowConfig::from_yaml_doc(y)?));
+    }
+    match y.get("workflow") {
+        None => Ok(None),
+        Some(w) => {
+            let rel = w.as_str().ok_or_else(|| {
+                WilkinsError::Config(format!("{who}: `workflow` must be a path string"))
+            })?;
+            let path = if Path::new(rel).is_absolute() {
+                Path::new(rel).to_path_buf()
+            } else {
+                base_dir.join(rel)
+            };
+            Ok(Some(WorkflowConfig::from_yaml_file(&path)?))
+        }
+    }
+}
+
+fn parse_instance(
+    y: &Yaml,
+    idx: usize,
+    shared: Option<&WorkflowConfig>,
+    base_dir: &Path,
+) -> Result<Vec<InstanceSpec>> {
+    if y.as_map().is_none() {
+        return Err(WilkinsError::Config(format!(
+            "instance entries must be mappings, got {}",
+            y.type_name()
+        )));
+    }
+    let mut cfg = match base_workflow(y, base_dir, "instance")? {
+        Some(own) => own,
+        None => shared.cloned().ok_or_else(|| {
+            WilkinsError::Config(
+                "no workflow: set `tasks:`/`workflow:` on the instance or the ensemble".into(),
+            )
+        })?,
+    };
+
+    // Per-instance inport io_freq override.
+    if let Some(freq) = y.get("io_freq") {
+        let freq = freq.as_i64().ok_or_else(|| {
+            WilkinsError::Config("`io_freq` must be an integer".into())
+        })?;
+        let flow = FlowControl::from_io_freq(freq)?;
+        for t in &mut cfg.tasks {
+            for p in &mut t.inports {
+                p.flow = flow;
+            }
+        }
+    }
+
+    // Per-task params overrides: `params: { func: { key: value } }`.
+    if let Some(over) = y.get("params") {
+        let over = over.as_map().ok_or_else(|| {
+            WilkinsError::Config("instance `params` must map task func -> overrides".into())
+        })?;
+        for (func, kv) in over {
+            let kv = kv.as_map().ok_or_else(|| {
+                WilkinsError::Config(format!("params override for {func:?} must be a mapping"))
+            })?;
+            let task = cfg
+                .tasks
+                .iter_mut()
+                .find(|t| &t.func == func)
+                .ok_or_else(|| {
+                    WilkinsError::Config(format!(
+                        "params override names unknown task {func:?}"
+                    ))
+                })?;
+            for (k, v) in kv {
+                task.params.insert(k.clone(), v.clone());
+            }
+        }
+    }
+
+    let time_scale = match y.get("time_scale") {
+        None => None,
+        Some(v) => Some(v.as_f64().ok_or_else(|| {
+            WilkinsError::Config("`time_scale` must be a number".into())
+        })?),
+    };
+    let admission = match y.get("admission") {
+        None => FlowControl::All,
+        Some(v) => {
+            let n = v.as_i64().ok_or_else(|| {
+                WilkinsError::Config("`admission` must be an integer (io_freq convention)".into())
+            })?;
+            // Bound the throttle period: the runner's stall guard
+            // (Ensemble::run) tolerates ~100k consecutive idle rounds,
+            // so an unbounded `Some(n)` could look like a stall.
+            if n > MAX_ADMISSION_PERIOD {
+                return Err(WilkinsError::Config(format!(
+                    "`admission` period must be <= {MAX_ADMISSION_PERIOD} scheduling rounds, got {n}"
+                )));
+            }
+            FlowControl::from_io_freq(n)?
+        }
+    };
+
+    let name = y
+        .get("name")
+        .and_then(Yaml::as_str)
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("instance{idx}"));
+    let count = get_usize(y, "count")?.unwrap_or(1);
+    if count == 0 {
+        return Err(WilkinsError::Config("`count` must be >= 1".into()));
+    }
+
+    let mut out = Vec::with_capacity(count);
+    for j in 0..count {
+        let name = if count == 1 { name.clone() } else { format!("{name}[{j}]") };
+        out.push(InstanceSpec {
+            name,
+            cfg: cfg.clone(),
+            time_scale,
+            admission,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PIPELINE: &str = "\
+tasks:
+  - func: producer
+    nprocs: 2
+    params: { steps: 2, grid_per_proc: 100, particles_per_proc: 100 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    nprocs: 2
+    inports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+";
+
+    fn inline_spec() -> String {
+        let indented: String = PIPELINE
+            .lines()
+            .map(|l| format!("  {l}\n"))
+            .collect();
+        format!(
+            "\
+ensemble:
+  max_ranks: 8
+  policy: round-robin
+{indented}  instances:
+    - name: a
+      params:
+        producer: {{ steps: 5 }}
+    - name: b
+      count: 2
+      io_freq: -1
+      admission: 2
+      time_scale: 0.5
+"
+        )
+    }
+
+    #[test]
+    fn parses_inline_spec_with_overrides() {
+        let spec = EnsembleSpec::from_yaml_str(&inline_spec(), Path::new(".")).unwrap();
+        assert_eq!(spec.max_ranks, 8);
+        assert_eq!(spec.policy, Policy::RoundRobin);
+        assert_eq!(spec.instances.len(), 3, "count: 2 expands");
+        let names: Vec<&str> = spec.instances.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b[0]", "b[1]"]);
+        assert_eq!(spec.total_ranks(), 12);
+
+        // a: params override reaches the producer task only.
+        let a = &spec.instances[0];
+        assert_eq!(a.cfg.tasks[0].params.get("steps").unwrap().as_i64(), Some(5));
+        assert_eq!(a.admission, FlowControl::All);
+        assert_eq!(a.time_scale, None);
+
+        // b: io_freq -1 lands on every inport; admission/time_scale set.
+        let b = &spec.instances[1];
+        assert_eq!(b.cfg.tasks[0].params.get("steps").unwrap().as_i64(), Some(2));
+        assert_eq!(b.cfg.tasks[1].inports[0].flow, FlowControl::Latest);
+        assert_eq!(b.admission, FlowControl::Some(2));
+        assert_eq!(b.time_scale, Some(0.5));
+    }
+
+    #[test]
+    fn shared_workflow_file_resolves_relative_to_base_dir() {
+        let dir = std::env::temp_dir().join("wilkins-spec-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("pipe.yaml"), PIPELINE).unwrap();
+        let spec = EnsembleSpec::from_yaml_str(
+            "\
+ensemble:
+  workflow: pipe.yaml
+  instances:
+    - name: only
+",
+            &dir,
+        )
+        .unwrap();
+        assert_eq!(spec.instances.len(), 1);
+        assert_eq!(spec.instances[0].ranks(), 4);
+        // max_ranks defaults to the fully-concurrent footprint.
+        assert_eq!(spec.max_ranks, 4);
+        assert_eq!(spec.policy, Policy::Fifo);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let base = Path::new(".");
+        // No ensemble key.
+        assert!(EnsembleSpec::from_yaml_str("tasks: []\n", base).is_err());
+        // No instances.
+        assert!(EnsembleSpec::from_yaml_str("ensemble:\n  instances: []\n", base).is_err());
+        // Instance without any workflow.
+        assert!(EnsembleSpec::from_yaml_str(
+            "ensemble:\n  instances:\n    - name: x\n",
+            base
+        )
+        .is_err());
+        // Unknown task in params override.
+        let mut bad = inline_spec();
+        bad = bad.replace("        producer: { steps: 5 }", "        nope: { steps: 5 }");
+        assert!(EnsembleSpec::from_yaml_str(&bad, base).is_err());
+        // Duplicate names (drop the count so both entries collide on `a`).
+        let dup = inline_spec()
+            .replace("      count: 2\n", "")
+            .replace("- name: b", "- name: a");
+        assert!(EnsembleSpec::from_yaml_str(&dup, base).is_err());
+        // Budget narrower than one instance.
+        let narrow = inline_spec().replace("max_ranks: 8", "max_ranks: 2");
+        assert!(EnsembleSpec::from_yaml_str(&narrow, base).is_err());
+        // Admission period beyond the stall-guard bound.
+        let huge = inline_spec().replace("admission: 2", "admission: 150000");
+        assert!(EnsembleSpec::from_yaml_str(&huge, base).is_err());
+    }
+}

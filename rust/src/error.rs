@@ -1,49 +1,125 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the offline
+//! toolchain ships no proc-macro crates, and the error surface is
+//! small enough that the derive would only save a few lines.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the Wilkins workflow system.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum WilkinsError {
     /// YAML syntax errors from the in-repo parser.
-    #[error("yaml parse error at line {line}: {msg}")]
     Yaml { line: usize, msg: String },
 
     /// Workflow configuration is syntactically valid YAML but violates
     /// the Wilkins schema (missing fields, bad values, ...).
-    #[error("workflow config error: {0}")]
     Config(String),
 
     /// Port matching produced an unusable graph (dangling inport, ...).
-    #[error("workflow graph error: {0}")]
     Graph(String),
 
     /// Virtual-MPI communicator misuse or teardown races.
-    #[error("comm error: {0}")]
     Comm(String),
 
     /// LowFive data-transport errors (unknown dataset, bad hyperslab...).
-    #[error("lowfive error: {0}")]
     LowFive(String),
 
     /// The producer closed the stream: no more files will arrive on
     /// this channel. Consumers use this to terminate cleanly.
-    #[error("end of stream")]
     EndOfStream,
 
     /// Task-code registry / execution errors.
-    #[error("task error: {0}")]
     Task(String),
 
     /// PJRT runtime errors (artifact missing, shape mismatch, ...).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Filesystem errors (transparent wrapper).
+    Io(std::io::Error),
 
-    #[error(transparent)]
-    Xla(#[from] xla::Error),
+    /// XLA/PJRT binding errors (transparent wrapper).
+    Xla(xla::Error),
+}
+
+impl fmt::Display for WilkinsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WilkinsError::Yaml { line, msg } => {
+                write!(f, "yaml parse error at line {line}: {msg}")
+            }
+            WilkinsError::Config(m) => write!(f, "workflow config error: {m}"),
+            WilkinsError::Graph(m) => write!(f, "workflow graph error: {m}"),
+            WilkinsError::Comm(m) => write!(f, "comm error: {m}"),
+            WilkinsError::LowFive(m) => write!(f, "lowfive error: {m}"),
+            WilkinsError::EndOfStream => write!(f, "end of stream"),
+            WilkinsError::Task(m) => write!(f, "task error: {m}"),
+            WilkinsError::Runtime(m) => write!(f, "runtime error: {m}"),
+            // Transparent, like thiserror's #[error(transparent)].
+            WilkinsError::Io(e) => e.fmt(f),
+            WilkinsError::Xla(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for WilkinsError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            // Transparent wrappers forward source() to the *inner*
+            // error's source (thiserror `#[error(transparent)]`
+            // semantics) — returning the inner error itself would
+            // print its message twice in "caused by" chains, since
+            // Display is already forwarded to it.
+            WilkinsError::Io(e) => e.source(),
+            WilkinsError::Xla(e) => e.source(),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WilkinsError {
+    fn from(e: std::io::Error) -> WilkinsError {
+        WilkinsError::Io(e)
+    }
+}
+
+impl From<xla::Error> for WilkinsError {
+    fn from(e: xla::Error) -> WilkinsError {
+        WilkinsError::Xla(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, WilkinsError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_paper_repo_conventions() {
+        assert_eq!(
+            WilkinsError::Yaml { line: 3, msg: "bad indent".into() }.to_string(),
+            "yaml parse error at line 3: bad indent"
+        );
+        assert_eq!(
+            WilkinsError::Config("missing `tasks:`".into()).to_string(),
+            "workflow config error: missing `tasks:`"
+        );
+        assert_eq!(WilkinsError::EndOfStream.to_string(), "end of stream");
+    }
+
+    #[test]
+    fn io_errors_are_transparent() {
+        // Display forwards to the wrapped error; source() skips to
+        // the wrapped error's own cause so "caused by" chains never
+        // repeat the message.
+        let e = WilkinsError::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert_eq!(e.to_string(), "gone");
+        let kind_only =
+            WilkinsError::from(std::io::Error::from(std::io::ErrorKind::NotFound));
+        assert!(
+            std::error::Error::source(&kind_only).is_none(),
+            "kind-only io errors have no source to forward"
+        );
+    }
+}

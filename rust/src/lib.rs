@@ -1,7 +1,9 @@
 //! Wilkins: HPC In Situ Workflows Made Easy — a Rust + JAX + Pallas
 //! reproduction of the paper's workflow system.
 //!
-//! Layering (see DESIGN.md):
+//! Layering (see DESIGN.md at the repository root):
+//! * [`ensemble`] — co-scheduling of N workflow instances against a
+//!   shared rank budget (the campaign layer above single runs).
 //! * [`coordinator`] — Wilkins-master: the user-facing workflow driver.
 //! * [`config`] / [`configyaml`] / [`graph`] — the data-centric YAML
 //!   interface and its expansion into a task/channel graph.
@@ -10,9 +12,11 @@
 //! * [`comm`] / [`henson`] — the virtual-MPI substrate and the
 //!   Henson-like execution model.
 //! * [`runtime`] — PJRT engine executing AOT-compiled JAX/Pallas
-//!   payloads (`artifacts/*.hlo.txt`).
+//!   payloads (`artifacts/*.hlo.txt`), shared across ensemble
+//!   instances.
 //! * [`tasks`] / [`actions`] — built-in task codes and custom actions.
-//! * [`metrics`] — Gantt tracing and per-run statistics.
+//! * [`metrics`] — Gantt tracing and per-run statistics, including
+//!   merged ensemble traces.
 
 pub mod actions;
 pub mod baseline;
@@ -21,6 +25,7 @@ pub mod comm;
 pub mod config;
 pub mod configyaml;
 pub mod coordinator;
+pub mod ensemble;
 pub mod error;
 pub mod flow;
 pub mod graph;
@@ -33,4 +38,5 @@ pub mod sim;
 pub mod tasks;
 
 pub use coordinator::{RunReport, Wilkins};
+pub use ensemble::{Ensemble, EnsembleReport, EnsembleSpec};
 pub use error::{Result, WilkinsError};

@@ -4,6 +4,7 @@
 //! Usage:
 //!   wilkins run <config.yaml> [--time-scale S] [--workdir DIR]
 //!                             [--artifacts DIR] [--gantt FILE.csv]
+//!   wilkins ensemble <spec.yaml> [--budget N] [--policy P] [...]
 //!   wilkins validate <config.yaml>
 //!   wilkins graph <config.yaml>
 //!   wilkins list-tasks
@@ -13,6 +14,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use wilkins::config::WorkflowConfig;
+use wilkins::ensemble::{Ensemble, Policy};
 use wilkins::graph::WorkflowGraph;
 use wilkins::runtime::Engine;
 use wilkins::tasks::builtin_registry;
@@ -23,6 +25,8 @@ wilkins — HPC in situ workflows made easy (paper reproduction)
 
 USAGE:
     wilkins run <config.yaml> [OPTIONS]   launch a workflow
+    wilkins ensemble <spec.yaml> [OPTIONS]
+                                          co-schedule N workflow instances
     wilkins validate <config.yaml>        parse + validate only
     wilkins graph <config.yaml>           print the expanded task graph
     wilkins list-tasks                    list built-in task codes
@@ -35,6 +39,12 @@ OPTIONS (run):
                        $WILKINS_ARTIFACTS); only workflows using the
                        science payloads need it
     --gantt FILE.csv   write the span trace as CSV after the run
+
+OPTIONS (ensemble, in addition to the run options):
+    --budget N         override the spec's max_ranks rank budget
+    --policy P         override the spec's policy: fifo | round-robin
+    (--gantt writes the merged per-instance trace; one shared AOT
+     engine serves every instance)
 ";
 
 fn main() -> ExitCode {
@@ -51,6 +61,7 @@ fn run() -> wilkins::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("ensemble") => cmd_ensemble(&args[1..]),
         Some("validate") => cmd_validate(&args[1..]),
         Some("graph") => cmd_graph(&args[1..]),
         Some("list-tasks") => {
@@ -107,18 +118,32 @@ fn cmd_graph(args: &[String]) -> wilkins::Result<()> {
     Ok(())
 }
 
+/// The options `run` and `ensemble` share.
+struct RunOpts {
+    time_scale: f64,
+    workdir: Option<PathBuf>,
+    artifacts: PathBuf,
+    gantt: Option<PathBuf>,
+}
+
+fn take_run_opts(args: &mut Vec<String>) -> wilkins::Result<RunOpts> {
+    Ok(RunOpts {
+        time_scale: take_opt(args, "--time-scale")
+            .map(|s| s.parse::<f64>())
+            .transpose()
+            .map_err(|e| wilkins::WilkinsError::Config(format!("bad --time-scale: {e}")))?
+            .unwrap_or(1.0),
+        workdir: take_opt(args, "--workdir").map(PathBuf::from),
+        artifacts: take_opt(args, "--artifacts")
+            .map(PathBuf::from)
+            .unwrap_or_else(Engine::default_dir),
+        gantt: take_opt(args, "--gantt").map(PathBuf::from),
+    })
+}
+
 fn cmd_run(args: &[String]) -> wilkins::Result<()> {
     let mut args = args.to_vec();
-    let time_scale = take_opt(&mut args, "--time-scale")
-        .map(|s| s.parse::<f64>())
-        .transpose()
-        .map_err(|e| wilkins::WilkinsError::Config(format!("bad --time-scale: {e}")))?
-        .unwrap_or(1.0);
-    let workdir = take_opt(&mut args, "--workdir").map(PathBuf::from);
-    let artifacts = take_opt(&mut args, "--artifacts")
-        .map(PathBuf::from)
-        .unwrap_or_else(Engine::default_dir);
-    let gantt = take_opt(&mut args, "--gantt").map(PathBuf::from);
+    let RunOpts { time_scale, workdir, artifacts, gantt } = take_run_opts(&mut args)?;
     let path = config_path(&args)?;
 
     let mut w = Wilkins::from_yaml_file(&path, builtin_registry())?
@@ -142,6 +167,62 @@ fn cmd_run(args: &[String]) -> wilkins::Result<()> {
     if let Some(path) = gantt {
         std::fs::write(&path, recorder.to_csv())?;
         println!("gantt trace written to {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_ensemble(args: &[String]) -> wilkins::Result<()> {
+    let mut args = args.to_vec();
+    let RunOpts { time_scale, workdir, artifacts, gantt } = take_run_opts(&mut args)?;
+    let budget = take_opt(&mut args, "--budget")
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .map_err(|e| wilkins::WilkinsError::Config(format!("bad --budget: {e}")))?;
+    let policy = take_opt(&mut args, "--policy")
+        .map(|s| Policy::parse(&s))
+        .transpose()?;
+    let path = config_path(&args)?;
+
+    let mut ens =
+        Ensemble::from_yaml_file(&path, builtin_registry())?.with_time_scale(time_scale);
+    if let Some(d) = workdir {
+        ens = ens.with_workdir(d);
+    }
+    if let Some(b) = budget {
+        // Same convention as the spec's `max_ranks`: 0 = no cap (run
+        // everything concurrently).
+        let b = if b == 0 { ens.spec().total_ranks() } else { b };
+        ens = ens.with_budget(b);
+    }
+    if let Some(p) = policy {
+        ens = ens.with_policy(p);
+    }
+    // One shared engine for the whole ensemble: identical artifacts
+    // compile and load once across instances.
+    if artifacts.join("manifest.tsv").exists() {
+        ens = ens.with_shared_artifacts(&artifacts)?;
+    }
+    let spec = ens.spec();
+    println!(
+        "ensemble: {} instances, {} total ranks, budget {}, policy {}",
+        spec.instances.len(),
+        spec.total_ranks(),
+        spec.max_ranks,
+        spec.policy
+    );
+    for inst in &spec.instances {
+        println!(
+            "  instance {:<20} {} ranks, admission {}",
+            inst.name,
+            inst.ranks(),
+            inst.admission
+        );
+    }
+    let report = ens.run()?;
+    print!("{}", report.render());
+    if let Some(path) = gantt {
+        std::fs::write(&path, report.trace.to_csv())?;
+        println!("merged gantt trace written to {}", path.display());
     }
     Ok(())
 }

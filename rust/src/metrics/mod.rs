@@ -4,6 +4,11 @@
 //! coupled task) and transfer — against a shared origin. The recorder
 //! renders the paper's Figure-5-style Gantt charts as ASCII and CSV,
 //! and aggregates idle/compute totals for the flow-control tables.
+//!
+//! For ensembles (see [`crate::ensemble`]) every workflow instance has
+//! its own [`Recorder`]; a [`MergedTrace`] stitches the per-instance
+//! traces back onto the shared ensemble clock so co-scheduling can be
+//! inspected in one Gantt chart.
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -137,31 +142,176 @@ impl Recorder {
             return String::from("(no spans)\n");
         }
         let mut out = String::new();
-        out.push_str(&format!(
-            "gantt: {width} cols = {tmax:.3}s  [{}=compute {}=idle {}=transfer]\n",
-            SpanKind::Compute.glyph(),
-            SpanKind::Idle.glyph(),
-            SpanKind::Transfer.glyph()
-        ));
+        out.push_str(&gantt_header("gantt", width, tmax));
         for &rank in ranks {
-            let mut row: Vec<char> = vec![' '; width];
-            let mut prio: Vec<u8> = vec![0; width];
-            for s in spans.iter().filter(|s| s.rank == rank) {
-                let a = ((s.start / tmax) * width as f64).floor() as usize;
-                let b = (((s.end / tmax) * width as f64).ceil() as usize).min(width);
-                let p = match s.kind {
-                    SpanKind::Compute => 1,
-                    SpanKind::Idle => 2,
-                    SpanKind::Transfer => 3,
-                };
-                for x in a..b.max(a + 1).min(width) {
-                    if p >= prio[x] {
-                        row[x] = s.kind.glyph();
-                        prio[x] = p;
-                    }
-                }
+            let row = paint_gantt_row(
+                spans.iter().filter(|s| s.rank == rank).map(|s| (s.kind, s.start, s.end)),
+                width,
+                tmax,
+            );
+            out.push_str(&format!("rank {rank:>4} |{row}|\n"));
+        }
+        out
+    }
+}
+
+/// The shared Gantt header line (legend + scale).
+fn gantt_header(label: &str, width: usize, tmax: f64) -> String {
+    format!(
+        "{label}: {width} cols = {tmax:.3}s  [{}=compute {}=idle {}=transfer]\n",
+        SpanKind::Compute.glyph(),
+        SpanKind::Idle.glyph(),
+        SpanKind::Transfer.glyph()
+    )
+}
+
+/// Paint one Gantt lane: floor/ceil bucket mapping over [0, tmax],
+/// every span at least one cell wide, transfer > idle > compute when
+/// spans share a cell. Both [`Recorder::gantt_ascii`] and
+/// [`MergedTrace::gantt_ascii`] render through this, so the two
+/// charts can never diverge on cell rules.
+fn paint_gantt_row(
+    spans: impl Iterator<Item = (SpanKind, f64, f64)>,
+    width: usize,
+    tmax: f64,
+) -> String {
+    let mut row: Vec<char> = vec![' '; width];
+    let mut prio: Vec<u8> = vec![0; width];
+    for (kind, start, end) in spans {
+        let a = ((start / tmax) * width as f64).floor() as usize;
+        let b = (((end / tmax) * width as f64).ceil() as usize).min(width);
+        let p = match kind {
+            SpanKind::Compute => 1,
+            SpanKind::Idle => 2,
+            SpanKind::Transfer => 3,
+        };
+        for x in a..b.max(a + 1).min(width) {
+            if p >= prio[x] {
+                row[x] = kind.glyph();
+                prio[x] = p;
             }
-            out.push_str(&format!("rank {rank:>4} |{}|\n", row.iter().collect::<String>()));
+        }
+    }
+    row.into_iter().collect()
+}
+
+/// One span of a merged ensemble trace: a [`Span`] tagged with the
+/// workflow instance it came from, on the shared ensemble clock.
+#[derive(Debug, Clone)]
+pub struct MergedSpan {
+    /// Instance name (lane group), e.g. `pipe[2]`.
+    pub instance: String,
+    /// Rank *within* the instance's restricted world.
+    pub rank: usize,
+    pub kind: SpanKind,
+    pub label: String,
+    /// Seconds since ensemble start.
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A Gantt trace merged from several per-instance recorders.
+///
+/// Each instance's spans are shifted by the instance's admission
+/// offset (its [`Recorder`] origin relative to the ensemble origin),
+/// so one chart shows when the co-scheduler packed each instance onto
+/// the rank budget and what every rank did once admitted.
+#[derive(Debug, Clone, Default)]
+pub struct MergedTrace {
+    spans: Vec<MergedSpan>,
+    /// Lane order: (instance, rank) pairs in insertion order.
+    lanes: Vec<(String, usize)>,
+}
+
+impl MergedTrace {
+    pub fn new() -> MergedTrace {
+        MergedTrace::default()
+    }
+
+    /// Fold one instance's spans in, shifting them by `offset_s` (the
+    /// instance's start time on the ensemble clock).
+    pub fn add_instance(&mut self, instance: &str, offset_s: f64, spans: &[Span]) {
+        let mut ranks: Vec<usize> = spans.iter().map(|s| s.rank).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        for r in ranks {
+            self.lanes.push((instance.to_string(), r));
+        }
+        for s in spans {
+            self.spans.push(MergedSpan {
+                instance: instance.to_string(),
+                rank: s.rank,
+                kind: s.kind,
+                label: s.label.clone(),
+                start: s.start + offset_s,
+                end: s.end + offset_s,
+            });
+        }
+    }
+
+    pub fn spans(&self) -> &[MergedSpan] {
+        &self.spans
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Last span end on the ensemble clock (0 when empty).
+    pub fn end_s(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0_f64, f64::max)
+    }
+
+    /// CSV export: instance,rank,kind,label,start_s,end_s.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("instance,rank,kind,label,start_s,end_s\n");
+        let mut spans = self.spans.clone();
+        spans.sort_by(|a, b| {
+            (&a.instance, a.rank, a.start)
+                .partial_cmp(&(&b.instance, b.rank, b.start))
+                .unwrap()
+        });
+        for s in spans {
+            out.push_str(&format!(
+                "{},{},{},{},{:.6},{:.6}\n",
+                s.instance.replace(',', ";"),
+                s.rank,
+                s.kind.name(),
+                s.label.replace(',', ";"),
+                s.start,
+                s.end
+            ));
+        }
+        out
+    }
+
+    /// ASCII Gantt over all lanes (one row per instance rank), `width`
+    /// columns spanning [0, last end]. Same cell-priority rules as
+    /// [`Recorder::gantt_ascii`].
+    pub fn gantt_ascii(&self, width: usize) -> String {
+        let tmax = self.end_s();
+        if tmax <= 0.0 || width == 0 {
+            return String::from("(no spans)\n");
+        }
+        let name_w = self
+            .lanes
+            .iter()
+            .map(|(i, _)| i.len())
+            .max()
+            .unwrap_or(0)
+            .max(8);
+        let mut out = String::new();
+        out.push_str(&gantt_header("ensemble gantt", width, tmax));
+        for (inst, rank) in &self.lanes {
+            let row = paint_gantt_row(
+                self.spans
+                    .iter()
+                    .filter(|s| &s.instance == inst && s.rank == *rank)
+                    .map(|s| (s.kind, s.start, s.end)),
+                width,
+                tmax,
+            );
+            out.push_str(&format!("{inst:>name_w$} r{rank:<3} |{row}|\n"));
         }
         out
     }
@@ -223,5 +373,46 @@ mod tests {
     fn empty_gantt() {
         let rec = Recorder::new();
         assert_eq!(rec.gantt_ascii(&[0], 10), "(no spans)\n");
+    }
+
+    #[test]
+    fn merged_trace_shifts_by_instance_offset() {
+        let rec = Recorder::new();
+        let t0 = Instant::now();
+        rec.record(0, SpanKind::Compute, "a", t0, t0 + Duration::from_millis(10));
+        let spans = rec.spans();
+        let mut m = MergedTrace::new();
+        m.add_instance("one", 0.0, &spans);
+        m.add_instance("two", 1.5, &spans);
+        assert_eq!(m.spans().len(), 2);
+        let two = m.spans().iter().find(|s| s.instance == "two").unwrap();
+        assert!(two.start >= 1.5 && two.end > two.start);
+        assert!((m.end_s() - two.end).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_csv_and_gantt_render() {
+        let rec = Recorder::new();
+        let t0 = Instant::now();
+        rec.record(0, SpanKind::Compute, "c", t0, t0 + Duration::from_millis(4));
+        rec.record(1, SpanKind::Idle, "i", t0, t0 + Duration::from_millis(8));
+        let mut m = MergedTrace::new();
+        m.add_instance("pipe[0]", 0.0, &rec.spans());
+        m.add_instance("pipe[1]", 0.01, &rec.spans());
+        let csv = m.to_csv();
+        assert!(csv.starts_with("instance,rank,kind,label,start_s,end_s\n"));
+        assert_eq!(csv.lines().count(), 1 + 4);
+        assert!(csv.contains("pipe[1]"));
+        let g = m.gantt_ascii(60);
+        // One row per (instance, rank) lane.
+        assert_eq!(g.lines().count(), 1 + 4);
+        assert!(g.contains("pipe[0]") && g.contains('#') && g.contains('.'));
+    }
+
+    #[test]
+    fn merged_trace_empty() {
+        let m = MergedTrace::new();
+        assert!(m.is_empty());
+        assert_eq!(m.gantt_ascii(20), "(no spans)\n");
     }
 }

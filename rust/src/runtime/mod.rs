@@ -18,10 +18,40 @@ pub use manifest::{Signature, TensorSig};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex, OnceLock};
 use std::thread;
 
 use crate::error::{Result, WilkinsError};
+
+/// Process-wide AOT engine cache, keyed by artifacts directory.
+///
+/// Ensembles run many workflow instances in one process; without
+/// sharing, every instance would start its own engine thread and
+/// recompile identical `*.hlo.txt` payloads. [`shared_engine`] hands
+/// all of them handles to one [`Engine`] per artifacts directory, so
+/// each artifact compiles and loads once for the whole ensemble.
+static SHARED_ENGINES: OnceLock<Mutex<HashMap<PathBuf, Engine>>> = OnceLock::new();
+
+/// Get (or lazily start) the process-shared engine for an artifacts
+/// directory. The engine — and its compiled-executable cache — stays
+/// alive for the rest of the process, which is exactly what a workflow
+/// launcher wants: the compile cost is paid once, never per instance.
+pub fn shared_engine(artifacts_dir: &Path) -> Result<EngineHandle> {
+    let map = SHARED_ENGINES.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = artifacts_dir
+        .canonicalize()
+        .unwrap_or_else(|_| artifacts_dir.to_path_buf());
+    let mut engines = map
+        .lock()
+        .map_err(|_| WilkinsError::Runtime("shared engine cache poisoned".into()))?;
+    if let Some(e) = engines.get(&key) {
+        return Ok(e.handle());
+    }
+    let engine = Engine::start(artifacts_dir)?;
+    let handle = engine.handle();
+    engines.insert(key, engine);
+    Ok(handle)
+}
 
 enum EngineMsg {
     Run {

@@ -17,6 +17,7 @@ fn help_lists_commands() {
     assert!(out.status.success());
     let s = String::from_utf8_lossy(&out.stdout);
     assert!(s.contains("run") && s.contains("validate") && s.contains("graph"));
+    assert!(s.contains("ensemble") && s.contains("--budget") && s.contains("--policy"));
 }
 
 #[test]
@@ -63,6 +64,49 @@ fn validate_rejects_bad_config() {
     std::fs::write(&bad, "tasks:\n  - func: p\n    nprocs: 0\n").unwrap();
     let out = wilkins().args(["validate", bad.to_str().unwrap()]).output().unwrap();
     assert!(!out.status.success());
+}
+
+#[test]
+fn ensemble_runs_shipped_spec_with_merged_gantt() {
+    let dir = std::env::temp_dir().join("wilkins-cli-ensemble");
+    std::fs::create_dir_all(&dir).unwrap();
+    let gantt = dir.join("merged.csv");
+    let out = wilkins()
+        .args([
+            "ensemble",
+            &repo("configs/ensemble_pipeline.yaml"),
+            "--artifacts",
+            "/nonexistent", // synthetic instances need no engine
+            "--workdir",
+            dir.join("work").to_str().unwrap(),
+            "--gantt",
+            gantt.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("ensemble completed"), "{s}");
+    assert!(s.contains("pipe[0]") && s.contains("pipe[1]") && s.contains("pipe[2]"), "{s}");
+    let csv = std::fs::read_to_string(&gantt).unwrap();
+    assert!(csv.starts_with("instance,rank,kind,label"));
+    assert!(csv.contains("pipe[1]"));
+}
+
+#[test]
+fn ensemble_rejects_budget_narrower_than_an_instance() {
+    let out = wilkins()
+        .args([
+            "ensemble",
+            &repo("configs/ensemble_pipeline.yaml"),
+            "--budget",
+            "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("budget") || err.contains("ranks"), "{err}");
 }
 
 #[test]

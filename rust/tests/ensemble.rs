@@ -1,0 +1,231 @@
+//! End-to-end ensemble co-scheduling tests: spec YAML → co-scheduler →
+//! N concurrent Wilkins instances on a bounded rank budget → merged
+//! reports and Gantt trace.
+
+use wilkins::ensemble::{Ensemble, Policy};
+use wilkins::tasks::builtin_registry;
+
+/// Three instances of the same pipeline with DISTINCT io_freq
+/// settings, co-scheduled on a budget that forces waves (3 x 4 ranks
+/// onto 8).
+const THREE_WAY_SPEC: &str = "\
+ensemble:
+  max_ranks: 8
+  policy: fifo
+  tasks:
+    - func: producer
+      nprocs: 2
+      params: { steps: 4, grid_per_proc: 500, particles_per_proc: 500 }
+      outports:
+        - filename: outfile.h5
+          dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+    - func: consumer
+      nprocs: 2
+      inports:
+        - filename: outfile.h5
+          dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  instances:
+    - name: all
+      io_freq: 1
+    - name: half
+      io_freq: 2
+    - name: latest
+      io_freq: -1
+      params:
+        producer: { sleep_s: 0.005, verify: 0 }
+        consumer: { sleep_s: 0.02, verify: 0 }
+";
+
+#[test]
+fn three_instances_with_distinct_io_freq() {
+    let ens = Ensemble::from_yaml_str(THREE_WAY_SPEC, builtin_registry()).unwrap();
+    let report = ens.run().unwrap();
+
+    assert_eq!(report.instances.len(), 3);
+    assert_eq!(report.budget, 8);
+    assert!(report.peak_ranks <= 8, "peak {} broke the budget", report.peak_ranks);
+    assert!(report.peak_ranks >= 8, "two 4-rank instances should overlap");
+
+    // io_freq: 1 — every timestep served and read.
+    let all = report.instance("all").unwrap();
+    assert_eq!(all.report.node("producer").unwrap().files_served, 4);
+    assert_eq!(all.report.node("consumer").unwrap().files_opened, 4);
+
+    // io_freq: 2 — every second timestep (attempts 2 and 4).
+    let half = report.instance("half").unwrap();
+    let p = half.report.node("producer").unwrap();
+    assert_eq!(p.files_served, 2);
+    assert_eq!(p.serves_skipped, 2);
+    assert_eq!(half.report.node("consumer").unwrap().files_opened, 2);
+
+    // io_freq: -1 — serve only when the slow consumer already waits;
+    // the exact count is timing-dependent but bounded.
+    let latest = report.instance("latest").unwrap();
+    let opened = latest.report.node("consumer").unwrap().files_opened;
+    assert!((1..=4).contains(&opened), "latest opened {opened}");
+
+    // Scheduling facts: FIFO admits `all` and `half` first (8 ranks),
+    // `latest` must wait for a completion.
+    let t_latest = report.instance("latest").unwrap().started_s;
+    assert!(
+        t_latest >= all.started_s && t_latest >= half.started_s,
+        "latest must be admitted last under fifo"
+    );
+    for inst in &report.instances {
+        assert!(inst.finished_s >= inst.started_s);
+    }
+
+    // Merged trace: spans from every instance on the ensemble clock.
+    assert!(!report.trace.is_empty());
+    let csv = report.trace.to_csv();
+    assert!(csv.starts_with("instance,rank,kind,label,start_s,end_s\n"));
+    for name in ["all", "half", "latest"] {
+        assert!(
+            report.trace.spans().iter().any(|s| s.instance == name),
+            "no spans for {name}"
+        );
+    }
+    assert!(report.trace.gantt_ascii(60).contains("latest"));
+}
+
+#[test]
+fn round_robin_policy_drains_the_same_spec() {
+    let ens = Ensemble::from_yaml_str(THREE_WAY_SPEC, builtin_registry())
+        .unwrap()
+        .with_policy(Policy::RoundRobin);
+    let report = ens.run().unwrap();
+    assert_eq!(report.instances.len(), 3);
+    assert_eq!(report.policy, Policy::RoundRobin);
+    assert!(report.peak_ranks <= 8);
+    // Flow-control outcomes are policy-independent.
+    let half = report.instance("half").unwrap();
+    assert_eq!(half.report.node("consumer").unwrap().files_opened, 2);
+}
+
+#[test]
+fn sequential_budget_serializes_instances() {
+    // Budget == one instance: strictly one at a time, so every
+    // admission must wait for the previous finish.
+    let spec = THREE_WAY_SPEC.replace("max_ranks: 8", "max_ranks: 4");
+    let ens = Ensemble::from_yaml_str(&spec, builtin_registry()).unwrap();
+    let report = ens.run().unwrap();
+    assert_eq!(report.peak_ranks, 4);
+    let mut insts: Vec<_> = report.instances.iter().collect();
+    insts.sort_by(|a, b| a.started_s.partial_cmp(&b.started_s).unwrap());
+    for w in insts.windows(2) {
+        assert!(
+            w[1].started_s >= w[0].finished_s - 0.05,
+            "{} (start {:.3}) overlapped {} (finish {:.3}) despite budget 4",
+            w[1].name,
+            w[1].started_s,
+            w[0].name,
+            w[0].finished_s
+        );
+    }
+}
+
+#[test]
+fn file_mode_instances_get_isolated_workdirs() {
+    // Two instances move data through file-mode transports using THE
+    // SAME filenames; per-instance workdirs must keep them apart.
+    let spec = "\
+ensemble:
+  tasks:
+    - func: producer
+      nprocs: 2
+      params: { steps: 2, grid_per_proc: 400, particles_per_proc: 400 }
+      outports:
+        - filename: outfile.h5
+          dsets:
+            - name: /group1/grid
+              file: 1
+              memory: 0
+            - name: /group1/particles
+              file: 1
+              memory: 0
+    - func: consumer
+      nprocs: 2
+      inports:
+        - filename: outfile.h5
+          dsets:
+            - name: /group1/grid
+              file: 1
+              memory: 0
+            - name: /group1/particles
+              file: 1
+              memory: 0
+  instances:
+    - name: fm
+      count: 2
+";
+    let dir = std::env::temp_dir().join(format!("wilkins-ens-filemode-{}", std::process::id()));
+    let ens = Ensemble::from_yaml_str(spec, builtin_registry())
+        .unwrap()
+        .with_workdir(dir.clone());
+    let report = ens.run().unwrap();
+    for i in 0..2 {
+        let inst = report.instance(&format!("fm[{i}]")).unwrap();
+        assert_eq!(inst.report.node("consumer").unwrap().files_opened, 2);
+        assert!(dir.join(format!("fm[{i}]")).is_dir(), "missing per-instance workdir");
+    }
+}
+
+#[test]
+fn unknown_task_code_fails_fast_at_construction() {
+    let spec = "\
+ensemble:
+  tasks:
+    - func: nonexistent_code
+      nprocs: 1
+      outports:
+        - filename: x.h5
+          dsets: [ { name: /d } ]
+  instances:
+    - name: solo
+";
+    let err = match Ensemble::from_yaml_str(spec, builtin_registry()) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("unknown task code must fail before launch"),
+    };
+    assert!(err.contains("nonexistent_code"), "{err}");
+}
+
+#[test]
+fn admission_throttles_hold_instances_back() {
+    // `admission: -1` (latest): the throttled instance only starts on
+    // an idle budget, i.e. after both pairs finish.
+    let spec = "\
+ensemble:
+  max_ranks: 8
+  policy: round-robin
+  tasks:
+    - func: producer
+      nprocs: 2
+      params: { steps: 2, grid_per_proc: 300, particles_per_proc: 300 }
+      outports:
+        - filename: outfile.h5
+          dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+    - func: consumer
+      nprocs: 2
+      inports:
+        - filename: outfile.h5
+          dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  instances:
+    - name: pair
+      count: 2
+    - name: quiet
+      admission: -1
+";
+    let ens = Ensemble::from_yaml_str(spec, builtin_registry()).unwrap();
+    let report = ens.run().unwrap();
+    let quiet = report.instance("quiet").unwrap();
+    for i in 0..2 {
+        let pair = report.instance(&format!("pair[{i}]")).unwrap();
+        assert!(
+            quiet.started_s >= pair.finished_s - 0.05,
+            "quiet (start {:.3}) must wait for pair[{i}] (finish {:.3})",
+            quiet.started_s,
+            pair.finished_s
+        );
+    }
+}

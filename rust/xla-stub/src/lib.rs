@@ -1,0 +1,133 @@
+//! Offline stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The Wilkins runtime codes against the xla-rs API surface:
+//! [`PjRtClient::cpu`], [`HloModuleProto::from_text_file`],
+//! [`PjRtClient::compile`], [`PjRtLoadedExecutable::execute`] and the
+//! [`Literal`] conversions. The offline toolchain has no
+//! `xla_extension` shared library, so this shim provides the same
+//! types with [`PjRtClient::cpu`] failing cleanly — the engine thread
+//! (`wilkins::runtime`) already degrades every request into a readable
+//! runtime error when the client is unavailable, and synthetic
+//! workflows never touch it.
+//!
+//! To run the real AOT payloads, replace the `xla` path dependency in
+//! the root `Cargo.toml` with the actual xla-rs crate; no Wilkins code
+//! changes.
+
+use std::fmt;
+
+/// Error type matching `xla::Error`'s role in the real bindings.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub() -> Error {
+        Error(
+            "xla stub: PJRT unavailable in this build (link the real xla-rs crate \
+             to execute AOT artifacts)"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle. The stub has no backing runtime, so [`cpu`]
+/// always fails; callers are expected to degrade gracefully.
+///
+/// [`cpu`]: PjRtClient::cpu
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+/// Parsed HLO module (text form in the real crate).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Mirrors xla-rs: one buffer list per device; callers index
+    /// `[0][0]` on a single-device client.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::stub())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_cleanly() {
+        let err = match PjRtClient::cpu() {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("stub must not produce a client"),
+        };
+        assert!(err.contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1.0]).reshape(&[1]).is_err());
+        assert!(Literal::vec1(&[1.0]).to_vec::<f32>().is_err());
+    }
+}
