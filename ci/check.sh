@@ -28,10 +28,21 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo clippy --all-targets (-D warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy not installed in this toolchain; skipping"
+fi
+
 docs_check
 
 echo "== ensemble smoke run =="
 cargo run --release -- ensemble configs/ensemble_pipeline.yaml \
+    --artifacts /nonexistent >/dev/null
+
+echo "== multi-process smoke run (2 workers) =="
+cargo run --release -- up --workers 2 configs/listing1_3task.yaml \
     --artifacts /nonexistent >/dev/null
 
 echo "OK: all checks passed"

@@ -29,10 +29,13 @@
 //! linearity is intrinsic (it matches the paper's Figures 7/8 even on
 //! parallel hardware).
 
+use std::sync::Arc;
+
 use wilkins::bench_util::{
     assert_monotonic_increase, assert_roughly_flat, full_scale, mean, time_trials, Table,
 };
 use wilkins::ensemble::Ensemble;
+use wilkins::net::WorkerPool;
 use wilkins::tasks::builtin_registry;
 
 const PER_PROC: u64 = 5_000;
@@ -104,6 +107,25 @@ fn run(topology: &str, instances: usize) -> f64 {
 }
 
 fn main() {
+    // `WorkerPool::spawn` re-executes the *current binary* with a
+    // leading `worker` argument; route that to the worker serve loop
+    // so this bench hosts its own process pool.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.first().map(String::as_str) == Some("worker") {
+        let opt = |name: &str| -> Option<String> {
+            argv.iter()
+                .position(|a| a == name)
+                .and_then(|i| argv.get(i + 1).cloned())
+        };
+        let connect = opt("--connect").expect("worker mode needs --connect");
+        let id: usize = opt("--id")
+            .expect("worker mode needs --id")
+            .parse()
+            .expect("bad --id");
+        wilkins::net::worker_main(&connect, id).expect("worker serve loop");
+        return;
+    }
+
     let counts: Vec<usize> = if full_scale() {
         vec![1, 4, 16, 64, 256]
     } else {
@@ -195,6 +217,43 @@ fn main() {
     }
     print!("{}", ptable.render());
 
+    // == worker-pool trajectory: process-per-instance placement ==
+    //
+    // The net:: substrate exists to break the one-core serialization
+    // caveat: N independent instances on a pool of N worker PROCESSES
+    // should approach flat wall-clock on a multi-core host. Record a
+    // 1-worker vs N-worker comparison of the same ensemble so
+    // BENCH_ensembles.json accumulates the trajectory across PRs
+    // (speedup ~1.0 on a single-core box is expected and recorded,
+    // not asserted away).
+    let pool_pairs = 4usize;
+    let pool_spec = nxn_spec(pool_pairs, 0, "fifo");
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let wide = host.clamp(1, pool_pairs);
+    println!("\n== process placement: {pool_pairs} pipelines, 1 vs {wide} worker processes ==");
+    let mut pool_times: Vec<(usize, f64)> = Vec::new();
+    for &w in &[1usize, wide] {
+        let pool = Arc::new(WorkerPool::spawn(w).expect("spawn worker pool"));
+        let spec_src = pool_spec.clone();
+        let t = mean(&time_trials(trials, true, || {
+            let ens = Ensemble::from_yaml_str(&spec_src, builtin_registry()).unwrap();
+            let report = ens
+                .run_on_pool(Arc::clone(&pool), &spec_src, std::path::Path::new("."), None)
+                .unwrap();
+            assert_eq!(report.instances.len(), pool_pairs);
+        }));
+        pool.shutdown();
+        pool_times.push((w, t));
+        println!("  {w} worker(s): {t:.4}s");
+    }
+    let (one_w, one_t) = pool_times[0];
+    let (n_w, n_t) = pool_times[pool_times.len() - 1];
+    assert_eq!(one_w, 1);
+    let speedup = one_t / n_t;
+    println!(
+        "  speedup {speedup:.2}x on {host}-core host ({n_w} workers; 1.0x expected on 1 core)"
+    );
+
     // Paper-scale projection (sim::NetModel, reporting aid): what the
     // measured per-instance cost implies on Bebop-like hardware where
     // every NxN pair gets its own node.
@@ -204,5 +263,24 @@ fn main() {
         let t = wilkins::sim::ensemble_completion(c as u64, per_inst, c as u64);
         println!("  {c:>4} instances -> {t:.4}s (flat, Figure 9's shape)");
     }
+
+    // == BENCH_ensembles.json: the accumulating trajectory record ==
+    let json_arr = |xs: &[f64]| -> String {
+        let items: Vec<String> = xs.iter().map(|x| format!("{x:.6}")).collect();
+        format!("[{}]", items.join(", "))
+    };
+    let counts_arr: Vec<String> = counts.iter().map(usize::to_string).collect();
+    let json = format!(
+        "{{\n  \"bench\": \"ensembles\",\n  \"instance_counts\": [{}],\n  \"fanout_s\": {},\n  \"fanin_s\": {},\n  \"nxn_s\": {},\n  \"nxn_per_instance_s\": {},\n  \"placement\": {{\n    \"instances\": {pool_pairs},\n    \"ranks_per_instance\": 4,\n    \"host_cores\": {host},\n    \"one_worker_s\": {one_t:.6},\n    \"n_workers\": {n_w},\n    \"n_workers_s\": {n_t:.6},\n    \"speedup\": {speedup:.4}\n  }}\n}}\n",
+        counts_arr.join(", "),
+        json_arr(&series[0].1),
+        json_arr(&series[1].1),
+        json_arr(nxn),
+        json_arr(&nxn_per),
+    );
+    let out_dir = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    let out_path = std::path::Path::new(&out_dir).join("BENCH_ensembles.json");
+    std::fs::write(&out_path, json).expect("write BENCH_ensembles.json");
+    println!("\nbench record written to {}", out_path.display());
     println!("OK: ensemble scaling shape holds (Figures 7/8/9)");
 }

@@ -98,7 +98,7 @@ impl InterComm {
     pub fn iprobe(&self, tag: u64) -> bool {
         let mb_rank = self.local.global_rank();
         let state = self.local.world_state();
-        let queue = state.mailboxes[mb_rank].queue.lock().unwrap();
+        let queue = state.mailboxes.at(mb_rank).queue.lock().unwrap();
         queue
             .iter()
             .any(|e| e.comm_id == self.id && e.tag == tag && self.remote.contains(&e.src_global))

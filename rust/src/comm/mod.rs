@@ -40,21 +40,96 @@ pub const RECV_TIMEOUT: Duration = Duration::from_secs(120);
 
 #[derive(Debug)]
 pub(crate) struct Envelope {
-    src_global: usize,
-    comm_id: u64,
-    tag: u64,
-    payload: Vec<u8>,
+    pub(crate) src_global: usize,
+    pub(crate) comm_id: u64,
+    pub(crate) tag: u64,
+    pub(crate) payload: Vec<u8>,
 }
 
 #[derive(Default)]
-struct Mailbox {
-    queue: Mutex<VecDeque<Envelope>>,
-    cv: Condvar,
+pub(crate) struct Mailbox {
+    pub(crate) queue: Mutex<VecDeque<Envelope>>,
+    pub(crate) cv: Condvar,
+}
+
+/// The per-rank inbox array, shared between the receive path (ranks
+/// block on their mailbox condvar) and whatever [`Transport`] delivers
+/// into it. In distributed worlds only the locally-hosted ranks' boxes
+/// are ever touched; the rest exist so global-rank indexing stays
+/// uniform.
+pub(crate) struct Mailboxes {
+    boxes: Vec<Mailbox>,
+}
+
+impl Mailboxes {
+    pub(crate) fn new(size: usize) -> Mailboxes {
+        Mailboxes { boxes: (0..size).map(|_| Mailbox::default()).collect() }
+    }
+
+    pub(crate) fn at(&self, rank: usize) -> &Mailbox {
+        &self.boxes[rank]
+    }
+
+    /// Deliver an envelope into `dst`'s inbox and wake its waiters.
+    pub(crate) fn push(&self, dst: usize, env: Envelope) {
+        let mb = &self.boxes[dst];
+        mb.queue.lock().unwrap().push_back(env);
+        mb.cv.notify_all();
+    }
+}
+
+/// Where a sent message goes: the seam between the communicator API
+/// and the execution substrate. The in-process backend
+/// ([`MemoryTransport`]) pushes straight into the destination mailbox
+/// — today's single-process behavior, bit for bit. The socket backend
+/// (`net::SocketTransport`) does the same for locally-hosted ranks and
+/// frames everything else onto the peer process that hosts the
+/// destination.
+pub trait Transport: Send + Sync {
+    /// Deliver `payload` to global rank `dst_global`'s inbox, wherever
+    /// that inbox lives.
+    fn deliver(
+        &self,
+        dst_global: usize,
+        src_global: usize,
+        comm_id: u64,
+        tag: u64,
+        payload: Vec<u8>,
+    );
+
+    /// Orderly teardown (flush and close sockets); a no-op in-process.
+    fn shutdown(&self) {}
+}
+
+/// The in-process backend: every rank is a local thread, delivery is a
+/// mailbox push under the destination's lock.
+pub struct MemoryTransport {
+    mailboxes: Arc<Mailboxes>,
+}
+
+impl MemoryTransport {
+    pub(crate) fn new(mailboxes: Arc<Mailboxes>) -> MemoryTransport {
+        MemoryTransport { mailboxes }
+    }
+}
+
+impl Transport for MemoryTransport {
+    fn deliver(
+        &self,
+        dst_global: usize,
+        src_global: usize,
+        comm_id: u64,
+        tag: u64,
+        payload: Vec<u8>,
+    ) {
+        self.mailboxes.push(dst_global, Envelope { src_global, comm_id, tag, payload });
+    }
 }
 
 pub(crate) struct WorldState {
     size: usize,
-    mailboxes: Vec<Mailbox>,
+    mailboxes: Arc<Mailboxes>,
+    transport: Arc<dyn Transport>,
     next_comm_id: AtomicU64,
     /// Bytes pushed through send() — observability for the benches.
     bytes_sent: AtomicU64,
@@ -69,17 +144,36 @@ pub struct World {
 
 impl World {
     pub fn new(size: usize) -> World {
+        let mailboxes = Arc::new(Mailboxes::new(size));
+        let transport = Arc::new(MemoryTransport::new(Arc::clone(&mailboxes)));
+        World::with_transport(size, mailboxes, transport)
+    }
+
+    /// Build a world over an explicit transport (the multi-process
+    /// substrate in `net::` wires a [`Mailboxes`] it also hands to its
+    /// socket pump threads). `World::new` is this with the in-memory
+    /// backend.
+    pub(crate) fn with_transport(
+        size: usize,
+        mailboxes: Arc<Mailboxes>,
+        transport: Arc<dyn Transport>,
+    ) -> World {
         assert!(size > 0, "world size must be positive");
-        let mailboxes = (0..size).map(|_| Mailbox::default()).collect();
         World {
             state: Arc::new(WorldState {
                 size,
                 mailboxes,
+                transport,
                 next_comm_id: AtomicU64::new(1),
                 bytes_sent: AtomicU64::new(0),
                 msgs_sent: AtomicU64::new(0),
             }),
         }
+    }
+
+    /// Orderly transport teardown (no-op for in-memory worlds).
+    pub fn shutdown_transport(&self) {
+        self.state.transport.shutdown();
     }
 
     pub fn size(&self) -> usize {
@@ -195,18 +289,11 @@ impl Comm {
         tag: u64,
         data: Vec<u8>,
     ) {
-        let nbytes = data.len() as u64;
-        let env = Envelope {
-            src_global: self.global_rank(),
-            comm_id,
-            tag,
-            payload: data,
-        };
-        self.world.bytes_sent.fetch_add(nbytes, Ordering::Relaxed);
+        self.world.bytes_sent.fetch_add(data.len() as u64, Ordering::Relaxed);
         self.world.msgs_sent.fetch_add(1, Ordering::Relaxed);
-        let mb = &self.world.mailboxes[dst_global];
-        mb.queue.lock().unwrap().push_back(env);
-        mb.cv.notify_all();
+        self.world
+            .transport
+            .deliver(dst_global, self.global_rank(), comm_id, tag, data);
     }
 
     /// Blocking receive from local rank `src` (or [`ANY_SOURCE`]).
@@ -242,7 +329,7 @@ impl Comm {
     where
         F: Fn(&Envelope) -> bool,
     {
-        let mb = &self.world.mailboxes[self.global_rank()];
+        let mb = self.world.mailboxes.at(self.global_rank());
         let deadline = Instant::now() + timeout;
         let mut queue = mb.queue.lock().unwrap();
         loop {
@@ -265,7 +352,7 @@ impl Comm {
 
     /// Non-blocking probe: is a matching message waiting?
     pub fn iprobe(&self, src: usize, tag: u64) -> bool {
-        let mb = &self.world.mailboxes[self.global_rank()];
+        let mb = self.world.mailboxes.at(self.global_rank());
         let queue = mb.queue.lock().unwrap();
         queue.iter().any(|e| {
             e.comm_id == self.id

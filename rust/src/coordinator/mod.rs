@@ -11,7 +11,7 @@
 //! instances against a shared rank budget, use the parallel entry
 //! point [`Ensemble::run`](crate::ensemble::Ensemble::run).
 
-mod report;
+pub(crate) mod report;
 
 pub use report::{NodeReport, RunReport};
 
@@ -116,6 +116,28 @@ impl Wilkins {
     pub fn run(&self) -> Result<RunReport> {
         let g = &self.graph;
         let world = World::new(g.total_ranks);
+        let hosted: Vec<usize> = (0..g.total_ranks).collect();
+        let t0 = Instant::now();
+        let outcomes = self.run_hosted(&world, &hosted)?;
+        report::build(g, outcomes, t0.elapsed(), world.bytes_sent(), world.msgs_sent())
+    }
+
+    /// Run only the `hosted` subset of global ranks on this process,
+    /// against a caller-supplied `world` (the multi-process substrate
+    /// in [`crate::net`] passes a socket-backed world; [`Wilkins::run`]
+    /// passes a fresh in-memory world hosting every rank).
+    ///
+    /// Communicator ids are allocated from `world` in a deterministic
+    /// order (per-node local + I/O comms, then per-channel ids), so
+    /// every process that builds the same graph against a fresh world
+    /// assigns identical ids — the cross-process analogue of the
+    /// coordinator allocating ids once before launch.
+    pub(crate) fn run_hosted(
+        &self,
+        world: &World,
+        hosted: &[usize],
+    ) -> Result<Vec<report::RankOutcome>> {
+        let g = &self.graph;
 
         // Pre-allocate communicator ids deterministically: one local +
         // one I/O comm per node, one id per channel.
@@ -136,9 +158,8 @@ impl Wilkins {
         }
         std::fs::create_dir_all(&self.workdir)?;
 
-        let t0 = Instant::now();
-        let mut handles = Vec::with_capacity(g.total_ranks);
-        for rank in 0..g.total_ranks {
+        let mut handles = Vec::with_capacity(hosted.len());
+        for &rank in hosted {
             let node_idx = g
                 .node_of_rank(rank)
                 .ok_or_else(|| WilkinsError::Graph(format!("rank {rank} unassigned")))?;
@@ -257,7 +278,6 @@ impl Wilkins {
                 }
             }
         }
-        let elapsed = t0.elapsed();
-        report::build(g, outcomes, elapsed, world.bytes_sent(), world.msgs_sent())
+        Ok(outcomes)
     }
 }

@@ -7,7 +7,10 @@ use crate::error::{Result, WilkinsError};
 use crate::graph::WorkflowGraph;
 use crate::lowfive::VolStats;
 
-pub(super) struct RankOutcome {
+/// One rank's raw result: crate-visible so the multi-process substrate
+/// (`net::`) can ship outcomes across the wire and merge them with
+/// [`build`] exactly like the single-process path.
+pub(crate) struct RankOutcome {
     pub node: usize,
     pub stats: VolStats,
     pub error: Option<String>,
@@ -76,7 +79,7 @@ impl RunReport {
     }
 }
 
-pub(super) fn build(
+pub(crate) fn build(
     graph: &WorkflowGraph,
     outcomes: Vec<RankOutcome>,
     elapsed: Duration,

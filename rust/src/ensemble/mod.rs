@@ -20,6 +20,14 @@
 //!   aggregates per-instance [`RunReport`]s plus a merged Gantt trace
 //!   ([`report`], [`MergedTrace`](crate::metrics::MergedTrace)).
 //!
+//! Admitted instances execute under a [`Placement`]: in-process rank
+//! threads ([`Ensemble::run`], the default) or one worker *process*
+//! per instance drawn from a [`net::WorkerPool`](crate::net::WorkerPool)
+//! ([`Ensemble::run_on_pool`], the `wilkins up` path), which turns the
+//! one-core serialization of independent instances into real
+//! multi-core parallelism. [`packing_plan`] renders the scheduler's
+//! plan without launching anything (`wilkins ensemble --dry-run`).
+//!
 //! ```no_run
 //! use wilkins::ensemble::Ensemble;
 //! use wilkins::tasks::builtin_registry;
@@ -38,11 +46,11 @@ pub mod scheduler;
 pub mod spec;
 
 pub use report::{EnsembleReport, InstanceReport};
-pub use scheduler::{CoScheduler, Policy};
+pub use scheduler::{CoScheduler, Placement, Policy};
 pub use spec::{EnsembleSpec, InstanceSpec};
 
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::Instant;
 
@@ -51,6 +59,8 @@ use crate::error::{Result, WilkinsError};
 use crate::graph::WorkflowGraph;
 use crate::henson::Registry;
 use crate::metrics::{MergedTrace, Span};
+use crate::net::proto::RunInstance;
+use crate::net::WorkerPool;
 use crate::runtime::EngineHandle;
 
 /// What an instance thread sends back when its workflow completes.
@@ -274,11 +284,220 @@ impl Ensemble {
             elapsed: origin.elapsed(),
             budget: self.spec.max_ranks,
             policy: self.spec.policy,
+            placement: Placement::Threads,
+            workers: None,
             peak_ranks: peak,
             rounds: sched.rounds(),
             instances,
             trace,
         })
+    }
+
+    /// Launch the ensemble across a worker-process pool — the
+    /// `process-per-instance` placement. Each admitted instance is
+    /// dispatched to an exclusive worker process, so independent
+    /// instances run on separate cores instead of serializing inside
+    /// one process (the DESIGN.md "one core" caveat, made measurable).
+    ///
+    /// `spec_src`/`base_dir` must be the YAML this ensemble was parsed
+    /// from: workers re-parse it (parsing is deterministic) and run
+    /// instances by index, while workdirs and time scales are resolved
+    /// *here*, exactly as the in-process path resolves them, and
+    /// shipped pre-resolved.
+    pub fn run_on_pool(
+        &self,
+        pool: Arc<WorkerPool>,
+        spec_src: &str,
+        base_dir: &Path,
+        artifacts: Option<&Path>,
+    ) -> Result<EnsembleReport> {
+        let n = self.spec.instances.len();
+        let sched_insts: Vec<(usize, crate::flow::FlowControl)> = self
+            .spec
+            .instances
+            .iter()
+            .map(|i| (i.ranks(), i.admission))
+            .collect();
+        let mut sched = CoScheduler::new(self.spec.max_ranks, self.spec.policy, &sched_insts)?
+            .with_worker_slots(pool.size())?;
+        std::fs::create_dir_all(&self.workdir)?;
+
+        let origin = Instant::now();
+        let (tx, rx) = mpsc::channel::<Completion>();
+        let mut joins: Vec<Option<thread::JoinHandle<()>>> = (0..n).map(|_| None).collect();
+        let mut assigned: Vec<Option<usize>> = vec![None; n];
+        let mut started = vec![0.0_f64; n];
+        let mut finished = vec![0.0_f64; n];
+        let mut reports: Vec<Option<RunReport>> = (0..n).map(|_| None).collect();
+        let mut spans: Vec<Vec<Span>> = vec![Vec::new(); n];
+        let mut errors: Vec<String> = Vec::new();
+        let mut peak = 0usize;
+        let mut completed = 0usize;
+        let mut idle_rounds = 0u32;
+
+        while completed < n {
+            let admitted = sched.next_round();
+            if admitted.is_empty() && sched.running() == 0 {
+                // Same admission-throttle backoff + stall guard as the
+                // in-process runner.
+                idle_rounds += 1;
+                if idle_rounds > 100_000 {
+                    return Err(WilkinsError::Task(
+                        "ensemble co-scheduler stalled with pending instances".into(),
+                    ));
+                }
+                thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            idle_rounds = 0;
+            for idx in admitted {
+                peak = peak.max(sched.in_use());
+                let wid = pool.acquire().ok_or_else(|| {
+                    WilkinsError::Task(
+                        "scheduler admitted an instance with no free worker".into(),
+                    )
+                })?;
+                assigned[idx] = Some(wid);
+                started[idx] = origin.elapsed().as_secs_f64();
+                let inst = &self.spec.instances[idx];
+                match self.launch_remote(
+                    Arc::clone(&pool),
+                    idx,
+                    wid,
+                    spec_src,
+                    base_dir,
+                    artifacts,
+                    origin,
+                    tx.clone(),
+                ) {
+                    Ok(handle) => joins[idx] = Some(handle),
+                    Err(e) => {
+                        errors.push(format!("{}: {e}", inst.name));
+                        finished[idx] = origin.elapsed().as_secs_f64();
+                        pool.release(wid);
+                        assigned[idx] = None;
+                        sched.finish(idx);
+                        completed += 1;
+                    }
+                }
+            }
+            if sched.running() > 0 {
+                let done = rx.recv().map_err(|_| {
+                    WilkinsError::Task("ensemble instance channel closed".into())
+                })?;
+                let idx = done.idx;
+                finished[idx] = done.finished_s;
+                spans[idx] = done.spans;
+                match done.result {
+                    Ok(r) => reports[idx] = Some(r),
+                    Err(e) => errors.push(format!("{}: {e}", self.spec.instances[idx].name)),
+                }
+                if let Some(h) = joins[idx].take() {
+                    let _ = h.join();
+                }
+                if let Some(wid) = assigned[idx].take() {
+                    pool.release(wid);
+                }
+                sched.finish(idx);
+                completed += 1;
+            }
+        }
+
+        if !errors.is_empty() {
+            return Err(WilkinsError::Task(format!(
+                "{} ensemble instance(s) failed: {}",
+                errors.len(),
+                errors.join("; ")
+            )));
+        }
+
+        let mut trace = MergedTrace::new();
+        let mut instances = Vec::with_capacity(n);
+        for (idx, inst) in self.spec.instances.iter().enumerate() {
+            trace.add_instance(&inst.name, started[idx], &spans[idx]);
+            instances.push(InstanceReport {
+                name: inst.name.clone(),
+                ranks: inst.ranks(),
+                started_s: started[idx],
+                finished_s: finished[idx],
+                report: reports[idx]
+                    .take()
+                    .expect("no failures, so every instance has a report"),
+            });
+        }
+        Ok(EnsembleReport {
+            elapsed: origin.elapsed(),
+            budget: self.spec.max_ranks,
+            policy: self.spec.policy,
+            placement: Placement::ProcessPerInstance,
+            workers: Some(pool.size()),
+            peak_ranks: peak,
+            rounds: sched.rounds(),
+            instances,
+            trace,
+        })
+    }
+
+    /// Dispatch one instance to worker `wid` on its own thread (the
+    /// blocking socket round-trip must not stall the scheduler loop).
+    #[allow(clippy::too_many_arguments)]
+    fn launch_remote(
+        &self,
+        pool: Arc<WorkerPool>,
+        idx: usize,
+        wid: usize,
+        spec_src: &str,
+        base_dir: &Path,
+        artifacts: Option<&Path>,
+        origin: Instant,
+        tx: mpsc::Sender<Completion>,
+    ) -> Result<thread::JoinHandle<()>> {
+        let inst = &self.spec.instances[idx];
+        // Same workdir precedence as the in-process `launch`.
+        let parent = match (&inst.cfg.workdir, self.workdir_explicit) {
+            (Some(dir), false) => PathBuf::from(dir),
+            _ => self.workdir.clone(),
+        };
+        let req = RunInstance {
+            spec_src: spec_src.to_string(),
+            base_dir: base_dir.display().to_string(),
+            instance_idx: idx as u64,
+            workdir: parent.join(&inst.name).display().to_string(),
+            artifacts: artifacts.map(|p| p.display().to_string()).unwrap_or_default(),
+            time_scale: inst.time_scale.unwrap_or(self.time_scale),
+        };
+        thread::Builder::new()
+            .name(format!("wk-ens-remote-{}", inst.name))
+            .spawn(move || {
+                let outcome = pool.run_instance(wid, &req);
+                let finished_s = origin.elapsed().as_secs_f64();
+                let (result, spans) = match outcome {
+                    Ok(done) => {
+                        let spans = done.spans;
+                        if !done.error.is_empty() {
+                            (Err(WilkinsError::Task(done.error)), spans)
+                        } else if let Some(report) = done.report {
+                            (Ok(report), spans)
+                        } else {
+                            (
+                                Err(WilkinsError::Task(
+                                    "worker returned no report".into(),
+                                )),
+                                spans,
+                            )
+                        }
+                    }
+                    Err(e) => (Err(e), Vec::new()),
+                };
+                let _ = tx.send(Completion { idx, finished_s, result, spans });
+            })
+            .map_err(|e| WilkinsError::Task(format!("spawn remote dispatcher: {e}")))
+    }
+
+    /// The packing plan the co-scheduler would follow for this
+    /// ensemble, without launching anything. See [`packing_plan`].
+    pub fn plan(&self, workers: Option<usize>) -> Result<String> {
+        packing_plan(&self.spec, workers)
     }
 
     /// Build and launch one instance on its own driver thread.
@@ -327,4 +546,92 @@ impl Ensemble {
             })
             .map_err(|e| WilkinsError::Task(format!("spawn instance driver: {e}")))
     }
+}
+
+/// Render the co-scheduler's packing plan for `spec` without
+/// launching anything — the `wilkins ensemble --dry-run` surface.
+///
+/// `workers` adds the worker-slot constraint of process placement.
+/// The simulation assumes instances complete in admission order (the
+/// scheduler is a pure state machine, so the *shape* — waves, who
+/// blocks whom, budget utilization — is exact; only completion order
+/// is an assumption).
+pub fn packing_plan(spec: &EnsembleSpec, workers: Option<usize>) -> Result<String> {
+    use std::fmt::Write as _;
+
+    let insts: Vec<(usize, crate::flow::FlowControl)> = spec
+        .instances
+        .iter()
+        .map(|i| (i.ranks(), i.admission))
+        .collect();
+    let mut sched = CoScheduler::new(spec.max_ranks, spec.policy, &insts)?;
+    if let Some(w) = workers {
+        sched = sched.with_worker_slots(w)?;
+    }
+    let placement = match workers {
+        Some(w) => format!("{} on {w} workers", Placement::ProcessPerInstance),
+        None => spec.placement.to_string(),
+    };
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "packing plan: {} instances, budget {} ranks, {} policy, {} placement",
+        spec.instances.len(),
+        spec.max_ranks,
+        spec.policy,
+        placement
+    );
+    let mut running: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    let mut wave = 0usize;
+    let mut idle = 0u64;
+    while !sched.is_done() {
+        let admitted = sched.next_round();
+        if admitted.is_empty() {
+            if let Some(idx) = running.pop_front() {
+                sched.finish(idx);
+                let _ = writeln!(
+                    out,
+                    "  round {:>3}: finish {} (frees {} ranks; {}/{} in use)",
+                    sched.rounds(),
+                    spec.instances[idx].name,
+                    spec.instances[idx].ranks(),
+                    sched.in_use(),
+                    spec.max_ranks
+                );
+            } else {
+                // Only admission throttles can hold everything back;
+                // they clear within their period (capped by the spec).
+                idle += 1;
+                if idle > 1_000_000 {
+                    return Err(WilkinsError::Task(
+                        "packing plan did not converge".into(),
+                    ));
+                }
+            }
+            continue;
+        }
+        idle = 0;
+        wave += 1;
+        let names: Vec<String> = admitted
+            .iter()
+            .map(|&i| format!("{}({} ranks)", spec.instances[i].name, spec.instances[i].ranks()))
+            .collect();
+        running.extend(admitted.iter().copied());
+        let _ = writeln!(
+            out,
+            "  wave {wave} (round {:>3}): admit {}   [{}/{} ranks in use]",
+            sched.rounds(),
+            names.join(", "),
+            sched.in_use(),
+            spec.max_ranks
+        );
+    }
+    let _ = writeln!(
+        out,
+        "  {} scheduling rounds, {} waves, all {} instances placed",
+        sched.rounds(),
+        wave,
+        spec.instances.len()
+    );
+    Ok(out)
 }

@@ -6,7 +6,7 @@ use std::time::Duration;
 use crate::coordinator::RunReport;
 use crate::metrics::MergedTrace;
 
-use super::scheduler::Policy;
+use super::scheduler::{Placement, Policy};
 
 /// One instance's outcome inside an ensemble run.
 #[derive(Debug, Clone)]
@@ -36,6 +36,11 @@ pub struct EnsembleReport {
     /// The rank budget instances were packed onto.
     pub budget: usize,
     pub policy: Policy,
+    /// Where the instances executed: in-process rank threads or a
+    /// worker-process pool.
+    pub placement: Placement,
+    /// Pool width for process placement (`None` under threads).
+    pub workers: Option<usize>,
     /// Peak ranks simultaneously in use (packing efficiency: compare
     /// against `budget`).
     pub peak_ranks: usize,
@@ -54,14 +59,19 @@ impl EnsembleReport {
 
     /// Pretty per-instance table for the CLI.
     pub fn render(&self) -> String {
+        let where_run = match self.workers {
+            Some(w) => format!("{} on {w} workers", self.placement),
+            None => self.placement.to_string(),
+        };
         let mut s = format!(
-            "ensemble completed in {:.3}s  ({} instances, budget {} ranks, peak {} in use, {} policy, {} rounds)\n",
+            "ensemble completed in {:.3}s  ({} instances, budget {} ranks, peak {} in use, {} policy, {} rounds, {} placement)\n",
             self.elapsed.as_secs_f64(),
             self.instances.len(),
             self.budget,
             self.peak_ranks,
             self.policy,
-            self.rounds
+            self.rounds,
+            where_run
         );
         s.push_str(&format!(
             "{:<20} {:>6} {:>9} {:>9} {:>9} {:>8} {:>8} {:>12}\n",

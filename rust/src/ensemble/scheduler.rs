@@ -69,6 +69,47 @@ impl std::fmt::Display for Policy {
     }
 }
 
+/// Where admitted instances execute — the second scheduling dimension
+/// next to the rank budget. Threads is the in-process substrate
+/// (instances share one process, ranks are threads); process
+/// placement fans instances out across a `net::WorkerPool`, each
+/// instance exclusively owning one worker process while it runs, so
+/// independent instances land on separate cores instead of
+/// serializing in one process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Rank threads inside the driver process (the default, today's
+    /// single-process behavior).
+    #[default]
+    Threads,
+    /// One worker process per running instance, drawn from the pool.
+    ProcessPerInstance,
+}
+
+impl Placement {
+    /// Parse the YAML `placement:` field.
+    pub fn parse(s: &str) -> Result<Placement> {
+        match s {
+            "threads" | "thread" => Ok(Placement::Threads),
+            "process" | "process-per-instance" | "process_per_instance" => {
+                Ok(Placement::ProcessPerInstance)
+            }
+            other => Err(WilkinsError::Config(format!(
+                "unknown placement {other:?}; use threads or process-per-instance"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Placement::Threads => write!(f, "threads"),
+            Placement::ProcessPerInstance => write!(f, "process-per-instance"),
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum InstState {
     Pending,
@@ -90,6 +131,10 @@ pub struct CoScheduler {
     /// Scheduling round counter (drives `Some(n)` throttles).
     round: u64,
     in_use: usize,
+    /// Process placement: size of the worker pool (`None` = thread
+    /// placement, instances are not slot-limited).
+    worker_slots: Option<usize>,
+    workers_in_use: usize,
 }
 
 impl CoScheduler {
@@ -127,7 +172,35 @@ impl CoScheduler {
             cursor: 0,
             round: 0,
             in_use: 0,
+            worker_slots: None,
+            workers_in_use: 0,
         })
+    }
+
+    /// Constrain admissions to a pool of `n` worker processes
+    /// (process-per-instance placement): a pending instance also needs
+    /// a free worker slot, and finishing releases it. Errors on an
+    /// empty pool.
+    pub fn with_worker_slots(mut self, n: usize) -> Result<CoScheduler> {
+        if n == 0 {
+            return Err(WilkinsError::Config(
+                "process placement needs a pool of >= 1 worker".into(),
+            ));
+        }
+        self.worker_slots = Some(n);
+        Ok(self)
+    }
+
+    /// Worker processes currently held by running instances.
+    pub fn workers_in_use(&self) -> usize {
+        self.workers_in_use
+    }
+
+    fn slot_free(&self) -> bool {
+        match self.worker_slots {
+            None => true,
+            Some(n) => self.workers_in_use < n,
+        }
     }
 
     pub fn budget(&self) -> usize {
@@ -168,6 +241,9 @@ impl CoScheduler {
     fn admit(&mut self, i: usize, admitted: &mut Vec<usize>) {
         self.state[i] = InstState::Running;
         self.in_use += self.ranks[i];
+        if self.worker_slots.is_some() {
+            self.workers_in_use += 1;
+        }
         admitted.push(i);
     }
 
@@ -183,7 +259,10 @@ impl CoScheduler {
                 for i in 0..n {
                     match self.state[i] {
                         InstState::Pending => {
-                            if !self.eligible(i) || self.in_use + self.ranks[i] > self.budget {
+                            if !self.eligible(i)
+                                || !self.slot_free()
+                                || self.in_use + self.ranks[i] > self.budget
+                            {
                                 break; // head-of-line blocks the rest
                             }
                             self.admit(i, &mut admitted);
@@ -197,6 +276,7 @@ impl CoScheduler {
                 for _ in 0..n {
                     if self.state[i] == InstState::Pending
                         && self.eligible(i)
+                        && self.slot_free()
                         && self.in_use + self.ranks[i] <= self.budget
                     {
                         self.admit(i, &mut admitted);
@@ -215,6 +295,9 @@ impl CoScheduler {
         if self.state[i] == InstState::Running {
             self.state[i] = InstState::Finished;
             self.in_use -= self.ranks[i];
+            if self.worker_slots.is_some() {
+                self.workers_in_use -= 1;
+            }
         }
     }
 }
@@ -370,6 +453,61 @@ mod tests {
             assert_eq!(seen, vec![0, 1, 2, 3, 4], "{policy}: every instance ran");
             assert_eq!(s.in_use(), 0);
         }
+    }
+
+    #[test]
+    fn worker_slots_cap_concurrency() {
+        // The rank budget fits all four at once, but the pool only has
+        // two worker processes: admissions must respect both.
+        let mut s = CoScheduler::new(8, Policy::RoundRobin, &all(4, 2))
+            .unwrap()
+            .with_worker_slots(2)
+            .unwrap();
+        assert_eq!(s.next_round(), vec![0, 1]);
+        assert_eq!(s.workers_in_use(), 2);
+        assert!(s.next_round().is_empty(), "no free worker slot");
+        s.finish(0);
+        assert_eq!(s.workers_in_use(), 1);
+        assert_eq!(s.next_round(), vec![2]);
+        s.finish(1);
+        s.finish(2);
+        assert_eq!(s.next_round(), vec![3]);
+        s.finish(3);
+        assert!(s.is_done());
+        assert_eq!(s.workers_in_use(), 0);
+    }
+
+    #[test]
+    fn worker_slots_block_fifo_head() {
+        // FIFO with one slot: strictly one instance at a time, in
+        // order, even though the budget never binds.
+        let mut s = CoScheduler::new(100, Policy::Fifo, &all(3, 1))
+            .unwrap()
+            .with_worker_slots(1)
+            .unwrap();
+        let order: Vec<usize> = run_to_completion(&mut s).into_iter().flatten().collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_empty_worker_pool() {
+        assert!(CoScheduler::new(4, Policy::Fifo, &all(2, 1))
+            .unwrap()
+            .with_worker_slots(0)
+            .is_err());
+    }
+
+    #[test]
+    fn placement_parse_and_display() {
+        assert_eq!(Placement::parse("threads").unwrap(), Placement::Threads);
+        assert_eq!(
+            Placement::parse("process-per-instance").unwrap(),
+            Placement::ProcessPerInstance
+        );
+        assert_eq!(Placement::parse("process").unwrap(), Placement::ProcessPerInstance);
+        assert!(Placement::parse("gpu").is_err());
+        assert_eq!(Placement::ProcessPerInstance.to_string(), "process-per-instance");
+        assert_eq!(Placement::default(), Placement::Threads);
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::configyaml::{self, Yaml};
 use crate::error::{Result, WilkinsError};
 use crate::flow::FlowControl;
 
-use super::scheduler::Policy;
+use super::scheduler::{Placement, Policy};
 
 /// Upper bound on `admission: N` throttle periods. Scheduling rounds
 /// happen at startup, on every instance completion, and at ~1 kHz
@@ -67,6 +67,12 @@ pub struct EnsembleSpec {
     /// Global rank budget instances are packed onto.
     pub max_ranks: usize,
     pub policy: Policy,
+    /// Where admitted instances execute: in-process rank threads
+    /// (default) or one worker process per instance.
+    pub placement: Placement,
+    /// Worker-pool width for process placement (`None`: the driver
+    /// picks — CLI `--workers`, else the host's parallelism).
+    pub workers: Option<usize>,
     /// Ensemble workdir; every instance runs in `<workdir>/<name>`.
     pub workdir: Option<String>,
     pub instances: Vec<InstanceSpec>,
@@ -108,6 +114,22 @@ fn from_doc(doc: &Yaml, base_dir: &Path) -> Result<EnsembleSpec> {
     let policy = match ens.get("policy").and_then(Yaml::as_str) {
         Some(s) => Policy::parse(s)?,
         None => Policy::Fifo,
+    };
+    let placement = match ens.get("placement") {
+        None => Placement::Threads,
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| {
+                WilkinsError::Config("`placement` must be a string".into())
+            })?;
+            Placement::parse(s)?
+        }
+    };
+    let workers = match get_usize(ens, "workers")? {
+        None => None,
+        Some(0) => {
+            return Err(WilkinsError::Config("`workers` must be >= 1".into()));
+        }
+        Some(n) => Some(n),
     };
     let workdir = ens
         .get("workdir")
@@ -154,7 +176,7 @@ fn from_doc(doc: &Yaml, base_dir: &Path) -> Result<EnsembleSpec> {
         }
     }
 
-    Ok(EnsembleSpec { max_ranks, policy, workdir, instances })
+    Ok(EnsembleSpec { max_ranks, policy, placement, workers, workdir, instances })
 }
 
 /// The base workflow named by a spec level (`tasks:` inline wins over
@@ -370,6 +392,32 @@ ensemble:
         // max_ranks defaults to the fully-concurrent footprint.
         assert_eq!(spec.max_ranks, 4);
         assert_eq!(spec.policy, Policy::Fifo);
+    }
+
+    #[test]
+    fn parses_placement_and_workers() {
+        let spec = EnsembleSpec::from_yaml_str(&inline_spec(), Path::new(".")).unwrap();
+        assert_eq!(spec.placement, Placement::Threads, "threads is the default");
+        assert_eq!(spec.workers, None);
+
+        let with_placement = inline_spec().replace(
+            "  policy: round-robin\n",
+            "  policy: round-robin\n  placement: process-per-instance\n  workers: 2\n",
+        );
+        let spec = EnsembleSpec::from_yaml_str(&with_placement, Path::new(".")).unwrap();
+        assert_eq!(spec.placement, Placement::ProcessPerInstance);
+        assert_eq!(spec.workers, Some(2));
+
+        let bad_placement = inline_spec().replace(
+            "  policy: round-robin\n",
+            "  policy: round-robin\n  placement: gpu\n",
+        );
+        assert!(EnsembleSpec::from_yaml_str(&bad_placement, Path::new(".")).is_err());
+        let zero_workers = inline_spec().replace(
+            "  policy: round-robin\n",
+            "  policy: round-robin\n  workers: 0\n",
+        );
+        assert!(EnsembleSpec::from_yaml_str(&zero_workers, Path::new(".")).is_err());
     }
 
     #[test]

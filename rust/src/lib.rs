@@ -11,6 +11,9 @@
 //!   redistribution, callbacks and flow control.
 //! * [`comm`] / [`henson`] — the virtual-MPI substrate and the
 //!   Henson-like execution model.
+//! * [`net`] — the multi-process execution substrate: socket-backed
+//!   [`comm::Transport`], worker processes, rendezvous, and the
+//!   worker pool behind `wilkins up`.
 //! * [`runtime`] — PJRT engine executing AOT-compiled JAX/Pallas
 //!   payloads (`artifacts/*.hlo.txt`), shared across ensemble
 //!   instances.
@@ -32,6 +35,7 @@ pub mod graph;
 pub mod henson;
 pub mod lowfive;
 pub mod metrics;
+pub mod net;
 pub mod proptest_lite;
 pub mod runtime;
 pub mod sim;

@@ -557,3 +557,108 @@ fn fan_in_round_robin_channels() {
     hb.join().unwrap();
     hc.join().unwrap();
 }
+
+// ---- Hyperslab edge cases: the M×N redistribution math the socket
+// ---- substrate re-exercises across process boundaries.
+
+#[test]
+fn hyperslab_edge_touching_boxes_do_not_intersect() {
+    // Boxes that share a face (producer block boundary) must produce
+    // an EMPTY intersection — a serve must never duplicate the
+    // boundary row.
+    let a = Hyperslab::new(&[0, 0], &[2, 4]);
+    let b = Hyperslab::new(&[2, 0], &[2, 4]);
+    assert!(a.intersect(&b).is_none());
+    assert!(!a.overlaps(&b));
+    // Touching along the second axis too.
+    let c = Hyperslab::new(&[0, 4], &[2, 4]);
+    assert!(a.intersect(&c).is_none());
+}
+
+#[test]
+fn hyperslab_zero_count_slab_is_empty_everywhere() {
+    // split_rows hands empty slabs to surplus ranks; they must behave
+    // as proper empties: no intersection with anything, element count
+    // zero, and copy_region over them is a no-op.
+    let empty = Hyperslab::new(&[3, 0], &[0, 4]);
+    assert!(empty.is_empty());
+    assert_eq!(empty.element_count(), 0);
+    let whole = Hyperslab::new(&[0, 0], &[8, 4]);
+    assert!(empty.intersect(&whole).is_none());
+    assert!(whole.intersect(&empty).is_none());
+
+    let src = vec![1u8; 32];
+    let mut dst = vec![7u8; 32];
+    hyperslab::copy_region(&whole, &src, &whole, &mut dst, &empty, 1);
+    assert_eq!(dst, vec![7u8; 32], "empty region copies nothing");
+}
+
+#[test]
+fn hyperslab_full_overlap_is_identity() {
+    // Identical slabs: intersection is the slab itself and the copy
+    // is byte-for-byte.
+    let s = Hyperslab::new(&[2, 1], &[3, 5]);
+    assert_eq!(s.intersect(&s).unwrap(), s);
+    let src: Vec<u8> = (0..15).collect();
+    let mut dst = vec![0u8; 15];
+    let region = s.intersect(&s).unwrap();
+    hyperslab::copy_region(&s, &src, &s, &mut dst, &region, 1);
+    assert_eq!(dst, src);
+}
+
+#[test]
+fn hyperslab_consumer_spanning_producer_stride_boundaries() {
+    // 3 producers own row blocks of an 8x4 dataset (split_rows gives
+    // rows 0..3, 3..6, 6..8); one consumer wants rows 2..6 — a slab
+    // crossing BOTH producer boundaries. Assembling the consumer
+    // buffer from per-producer intersections must cover every element
+    // exactly once with the right values.
+    let dims = [8u64, 4];
+    let producers = split_rows(&dims, 3);
+    assert_eq!(producers[0].count[0], 3);
+    assert_eq!(producers[1].offset[0], 3);
+    assert_eq!(producers[2].offset[0], 6);
+
+    let consumer = Hyperslab::new(&[2, 0], &[4, 4]);
+    // Producer buffers hold the global linear index of each element.
+    let fill = |slab: &Hyperslab| -> Vec<u8> {
+        let mut buf = Vec::new();
+        for r in slab.offset[0]..slab.offset[0] + slab.count[0] {
+            for c in slab.offset[1]..slab.offset[1] + slab.count[1] {
+                buf.push((r * dims[1] + c) as u8);
+            }
+        }
+        buf
+    };
+    let mut dst = vec![255u8; consumer.element_count() as usize];
+    let mut covered = 0u64;
+    for p in &producers {
+        if let Some(region) = p.intersect(&consumer) {
+            covered += region.element_count();
+            let src = fill(p);
+            hyperslab::copy_region(p, &src, &consumer, &mut dst, &region, 1);
+        }
+    }
+    assert_eq!(covered, consumer.element_count(), "boundary rows covered once");
+    for (i, &v) in dst.iter().enumerate() {
+        let row = 2 + (i as u64) / 4;
+        let col = (i as u64) % 4;
+        assert_eq!(v as u64, row * dims[1] + col, "element ({row},{col})");
+    }
+}
+
+#[test]
+fn hyperslab_single_element_overlap_at_corner() {
+    // Diagonal neighbours overlapping in exactly one element: the
+    // minimal non-empty intersection.
+    let a = Hyperslab::new(&[0, 0], &[3, 3]);
+    let b = Hyperslab::new(&[2, 2], &[3, 3]);
+    let i = a.intersect(&b).unwrap();
+    assert_eq!(i, Hyperslab::new(&[2, 2], &[1, 1]));
+    assert_eq!(i.element_count(), 1);
+    let src: Vec<u8> = (0..9).collect(); // a's buffer
+    let mut dst = vec![0u8; 9]; // b's buffer
+    hyperslab::copy_region(&a, &src, &b, &mut dst, &i, 1);
+    assert_eq!(dst[0], 8, "global (2,2) is a's last element, b's first");
+    assert!(dst[1..].iter().all(|&v| v == 0));
+}

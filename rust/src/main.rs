@@ -4,18 +4,22 @@
 //! Usage:
 //!   wilkins run <config.yaml> [--time-scale S] [--workdir DIR]
 //!                             [--artifacts DIR] [--gantt FILE.csv]
-//!   wilkins ensemble <spec.yaml> [--budget N] [--policy P] [...]
+//!   wilkins up <config-or-spec.yaml> [--workers N] [...]
+//!   wilkins ensemble <spec.yaml> [--budget N] [--policy P] [--dry-run] [...]
+//!   wilkins worker --connect ADDR --id K
 //!   wilkins validate <config.yaml>
 //!   wilkins graph <config.yaml>
 //!   wilkins list-tasks
 //!   wilkins help
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use wilkins::config::WorkflowConfig;
-use wilkins::ensemble::{Ensemble, Policy};
+use wilkins::ensemble::{Ensemble, Placement, Policy};
 use wilkins::graph::WorkflowGraph;
+use wilkins::net::{self, WorkerPool};
 use wilkins::runtime::Engine;
 use wilkins::tasks::builtin_registry;
 use wilkins::Wilkins;
@@ -24,9 +28,16 @@ const HELP: &str = "\
 wilkins — HPC in situ workflows made easy (paper reproduction)
 
 USAGE:
-    wilkins run <config.yaml> [OPTIONS]   launch a workflow
+    wilkins run <config.yaml> [OPTIONS]   launch a workflow (one process)
+    wilkins up <config-or-spec.yaml> [OPTIONS]
+                                          launch across worker PROCESSES:
+                                          a workflow runs one distributed
+                                          world (process-per-node); an
+                                          ensemble spec fans instances out
+                                          process-per-instance
     wilkins ensemble <spec.yaml> [OPTIONS]
                                           co-schedule N workflow instances
+    wilkins worker --connect ADDR --id K  join a pool (spawned by `up`)
     wilkins validate <config.yaml>        parse + validate only
     wilkins graph <config.yaml>           print the expanded task graph
     wilkins list-tasks                    list built-in task codes
@@ -40,9 +51,17 @@ OPTIONS (run):
                        science payloads need it
     --gantt FILE.csv   write the span trace as CSV after the run
 
+OPTIONS (up, in addition to the run options):
+    --workers N        worker processes in the pool (default: host
+                       parallelism, capped at the node/instance count)
+    --budget N, --policy P     honored for ensemble specs
+
 OPTIONS (ensemble, in addition to the run options):
     --budget N         override the spec's max_ranks rank budget
     --policy P         override the spec's policy: fifo | round-robin
+    --workers N        pool width when the spec asks for
+                       placement: process-per-instance
+    --dry-run          print the co-scheduler's packing plan and exit
     (--gantt writes the merged per-instance trace; one shared AOT
      engine serves every instance)
 ";
@@ -61,6 +80,8 @@ fn run() -> wilkins::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("up") => cmd_up(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
         Some("ensemble") => cmd_ensemble(&args[1..]),
         Some("validate") => cmd_validate(&args[1..]),
         Some("graph") => cmd_graph(&args[1..]),
@@ -88,6 +109,31 @@ fn take_opt(args: &mut Vec<String>, name: &str) -> Option<String> {
     let v = args.remove(idx + 1);
     args.remove(idx);
     Some(v)
+}
+
+fn take_flag(args: &mut Vec<String>, name: &str) -> bool {
+    match args.iter().position(|a| a == name) {
+        Some(idx) => {
+            args.remove(idx);
+            true
+        }
+        None => false,
+    }
+}
+
+fn take_usize_opt(args: &mut Vec<String>, name: &str) -> wilkins::Result<Option<usize>> {
+    take_opt(args, name)
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .map_err(|e| wilkins::WilkinsError::Config(format!("bad {name}: {e}")))
+}
+
+/// Pool-width default: the host's parallelism (this substrate exists
+/// to use those cores).
+fn host_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
 }
 
 fn config_path(args: &[String]) -> wilkins::Result<PathBuf> {
@@ -174,13 +220,12 @@ fn cmd_run(args: &[String]) -> wilkins::Result<()> {
 fn cmd_ensemble(args: &[String]) -> wilkins::Result<()> {
     let mut args = args.to_vec();
     let RunOpts { time_scale, workdir, artifacts, gantt } = take_run_opts(&mut args)?;
-    let budget = take_opt(&mut args, "--budget")
-        .map(|s| s.parse::<usize>())
-        .transpose()
-        .map_err(|e| wilkins::WilkinsError::Config(format!("bad --budget: {e}")))?;
+    let budget = take_usize_opt(&mut args, "--budget")?;
     let policy = take_opt(&mut args, "--policy")
         .map(|s| Policy::parse(&s))
         .transpose()?;
+    let workers_opt = take_usize_opt(&mut args, "--workers")?;
+    let dry_run = take_flag(&mut args, "--dry-run");
     let path = config_path(&args)?;
 
     let mut ens =
@@ -197,18 +242,32 @@ fn cmd_ensemble(args: &[String]) -> wilkins::Result<()> {
     if let Some(p) = policy {
         ens = ens.with_policy(p);
     }
-    // One shared engine for the whole ensemble: identical artifacts
-    // compile and load once across instances.
-    if artifacts.join("manifest.tsv").exists() {
-        ens = ens.with_shared_artifacts(&artifacts)?;
+
+    // Pool width, if process placement is in play: CLI flag > spec
+    // `workers:` > host parallelism, never wider than the ensemble.
+    let n_inst = ens.spec().instances.len();
+    let pool_width = workers_opt
+        .or(ens.spec().workers)
+        .unwrap_or_else(host_parallelism)
+        .clamp(1, n_inst);
+
+    if dry_run {
+        let workers = match ens.spec().placement {
+            Placement::ProcessPerInstance => Some(pool_width),
+            Placement::Threads => workers_opt.map(|w| w.clamp(1, n_inst)),
+        };
+        print!("{}", ens.plan(workers)?);
+        return Ok(());
     }
+
     let spec = ens.spec();
     println!(
-        "ensemble: {} instances, {} total ranks, budget {}, policy {}",
+        "ensemble: {} instances, {} total ranks, budget {}, policy {}, placement {}",
         spec.instances.len(),
         spec.total_ranks(),
         spec.max_ranks,
-        spec.policy
+        spec.policy,
+        spec.placement
     );
     for inst in &spec.instances {
         println!(
@@ -218,11 +277,121 @@ fn cmd_ensemble(args: &[String]) -> wilkins::Result<()> {
             inst.admission
         );
     }
-    let report = ens.run()?;
+
+    let report = if ens.spec().placement == Placement::ProcessPerInstance {
+        // Fan instances out across worker processes; each worker
+        // attaches its own engine when the artifacts exist.
+        let spec_src = std::fs::read_to_string(&path)?;
+        let base_dir = path
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let pool = Arc::new(WorkerPool::spawn(pool_width)?);
+        let art = artifacts.join("manifest.tsv").exists().then_some(artifacts.as_path());
+        ens.run_on_pool(pool, &spec_src, &base_dir, art)?
+    } else {
+        // One shared engine for the whole ensemble: identical
+        // artifacts compile and load once across instances.
+        if artifacts.join("manifest.tsv").exists() {
+            ens = ens.with_shared_artifacts(&artifacts)?;
+        }
+        ens.run()?
+    };
     print!("{}", report.render());
     if let Some(path) = gantt {
         std::fs::write(&path, report.trace.to_csv())?;
         println!("merged gantt trace written to {}", path.display());
     }
     Ok(())
+}
+
+/// `wilkins up`: run across worker processes. A workflow file becomes
+/// one distributed world (process-per-node); an ensemble spec fans
+/// instances out process-per-instance.
+fn cmd_up(args: &[String]) -> wilkins::Result<()> {
+    let mut args = args.to_vec();
+    let RunOpts { time_scale, workdir, artifacts, gantt } = take_run_opts(&mut args)?;
+    let workers_opt = take_usize_opt(&mut args, "--workers")?;
+    let budget = take_usize_opt(&mut args, "--budget")?;
+    let policy = take_opt(&mut args, "--policy")
+        .map(|s| Policy::parse(&s))
+        .transpose()?;
+    let path = config_path(&args)?;
+    let src = std::fs::read_to_string(&path)?;
+    let doc = wilkins::configyaml::parse(&src)?;
+
+    if doc.get("ensemble").is_some() {
+        let mut ens =
+            Ensemble::from_yaml_file(&path, builtin_registry())?.with_time_scale(time_scale);
+        if let Some(d) = workdir {
+            ens = ens.with_workdir(d);
+        }
+        if let Some(b) = budget {
+            let b = if b == 0 { ens.spec().total_ranks() } else { b };
+            ens = ens.with_budget(b);
+        }
+        if let Some(p) = policy {
+            ens = ens.with_policy(p);
+        }
+        let n_inst = ens.spec().instances.len();
+        let workers = workers_opt
+            .or(ens.spec().workers)
+            .unwrap_or_else(host_parallelism)
+            .clamp(1, n_inst);
+        println!(
+            "up: {} instances across {} worker processes (process-per-instance)",
+            n_inst, workers
+        );
+        let base_dir = path
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let pool = Arc::new(WorkerPool::spawn(workers)?);
+        let art = artifacts.join("manifest.tsv").exists().then_some(artifacts.as_path());
+        let report = ens.run_on_pool(pool, &src, &base_dir, art)?;
+        print!("{}", report.render());
+        if let Some(p) = gantt {
+            std::fs::write(&p, report.trace.to_csv())?;
+            println!("merged gantt trace written to {}", p.display());
+        }
+        return Ok(());
+    }
+
+    let cfg = WorkflowConfig::from_yaml_str(&src)?;
+    let graph = WorkflowGraph::build(&cfg)?;
+    let workers = workers_opt
+        .unwrap_or_else(host_parallelism)
+        .clamp(1, graph.nodes.len());
+    println!("{}", graph.describe());
+    println!(
+        "up: {} ranks across {} worker processes (process-per-node)",
+        graph.total_ranks, workers
+    );
+    let opts = wilkins::net::UpOpts {
+        workers,
+        time_scale,
+        workdir,
+        artifacts: Some(artifacts),
+    };
+    let report = net::run_workflow_distributed(&src, &opts)?;
+    print!("{}", report.render());
+    if gantt.is_some() {
+        println!("note: --gantt is unavailable for distributed workflow runs (spans stay in the workers)");
+    }
+    Ok(())
+}
+
+/// `wilkins worker`: one member of an `up` pool (never invoked by
+/// hand — the coordinator spawns these).
+fn cmd_worker(args: &[String]) -> wilkins::Result<()> {
+    let mut args = args.to_vec();
+    let connect = take_opt(&mut args, "--connect").ok_or_else(|| {
+        wilkins::WilkinsError::Config("worker needs --connect ADDR".into())
+    })?;
+    let id = take_usize_opt(&mut args, "--id")?.ok_or_else(|| {
+        wilkins::WilkinsError::Config("worker needs --id K".into())
+    })?;
+    net::worker_main(&connect, id)
 }

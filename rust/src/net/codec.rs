@@ -1,0 +1,137 @@
+//! Length-prefixed frame codec for the socket substrate.
+//!
+//! Every message on a socket — handshake, control, data envelope — is
+//! one *frame*: a little-endian `u32` body length, a `u8` frame kind,
+//! then the body (encoded with [`crate::comm::wire`], the same
+//! writer/reader pair the in-process protocol messages use). The codec
+//! is deliberately dumb: framing only, no compression, no checksums —
+//! TCP/UDS already give us ordered reliable bytes, and the length
+//! bound catches stream desync early.
+//!
+//! Two decode paths share the same header rules:
+//! * [`read_frame`] — blocking, for the pump and control threads
+//!   (`read_exact` under the hood, clean-EOF aware).
+//! * [`FrameDecoder`] — incremental, fed arbitrary byte slices; this
+//!   is what the property tests drive with random split points to
+//!   prove partial reads can never tear or reorder a frame.
+
+use std::io::{Read, Write};
+
+use crate::error::{Result, WilkinsError};
+
+/// Upper bound on one frame body. Large enough for any dataset slab
+/// the benches move (hundreds of MiB), small enough that a desynced
+/// stream (reading payload bytes as a header) fails immediately
+/// instead of attempting a multi-GiB allocation.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Bytes of frame header: u32 body length + u8 kind.
+pub const HEADER_LEN: usize = 5;
+
+/// One decoded frame: kind byte + body bytes.
+pub type Frame = (u8, Vec<u8>);
+
+/// Assemble a frame as contiguous bytes (header + body). Kept separate
+/// from [`write_frame`] so senders can build once and write under a
+/// lock without re-encoding.
+pub fn encode_frame(kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(body);
+    out
+}
+
+/// Write one frame as a single `write_all` (atomic under the caller's
+/// per-peer lock, so concurrent senders can never interleave frames).
+pub fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> Result<()> {
+    if body.len() > MAX_FRAME {
+        return Err(WilkinsError::Comm(format!(
+            "frame body of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+            body.len()
+        )));
+    }
+    w.write_all(&encode_frame(kind, body))?;
+    Ok(())
+}
+
+/// Blocking read of one frame. `Ok(None)` on clean EOF at a frame
+/// boundary (the peer closed after a complete frame); an EOF inside a
+/// frame is an error (the stream died mid-message).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    // Hand-rolled first-byte read so boundary-EOF and mid-frame EOF
+    // are distinguishable.
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(WilkinsError::Comm(format!(
+                    "socket closed inside a frame header ({got}/{HEADER_LEN} bytes)"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WilkinsError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+    let kind = header[4];
+    if len > MAX_FRAME {
+        return Err(WilkinsError::Comm(format!(
+            "frame header claims {len} bytes (> MAX_FRAME): stream desync?"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| {
+        WilkinsError::Comm(format!("socket closed inside a {len}-byte frame body: {e}"))
+    })?;
+    Ok(Some((kind, body)))
+}
+
+/// Incremental frame decoder: feed byte chunks of any size (including
+/// chunks that split headers or bodies anywhere), pop complete frames.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Append raw stream bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Pop the next complete frame, `Ok(None)` if more bytes are
+    /// needed. Errors on a header that violates [`MAX_FRAME`].
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        if len > MAX_FRAME {
+            return Err(WilkinsError::Comm(format!(
+                "frame header claims {len} bytes (> MAX_FRAME): stream desync?"
+            )));
+        }
+        if self.buf.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let kind = self.buf[4];
+        let body = self.buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        self.buf.drain(..HEADER_LEN + len);
+        Ok(Some((kind, body)))
+    }
+}

@@ -1,0 +1,60 @@
+//! Multi-process execution substrate (the layer under `comm/`).
+//!
+//! The paper's Wilkins runs MPI processes across cluster nodes; the
+//! in-memory substrate collapses everything into rank threads of one
+//! process, which serializes independent ensemble instances on one
+//! core (DESIGN.md's testbed caveat). This module restores the
+//! distributed shape on one host: workflow nodes and ensemble
+//! instances run in separate OS processes connected over loopback
+//! sockets, so multi-core machines deliver real parallelism and the
+//! flat wall-clock regimes of the paper's Figures 7–10 become
+//! measurable instead of simulated.
+//!
+//! Pieces, bottom-up:
+//!
+//! * [`codec`] — length-prefixed frame codec (blocking and
+//!   incremental decode paths over the same header rules).
+//! * [`proto`] — rendezvous/command/data messages, encoded with the
+//!   same [`wire`](crate::comm::wire) pair as the in-process
+//!   protocol.
+//! * [`transport`] — [`SocketTransport`], the socket backend of
+//!   [`comm::Transport`](crate::comm::Transport): mailbox pushes for
+//!   locally-hosted ranks, framed envelopes on mesh links otherwise,
+//!   with pump threads feeding remote envelopes back into the
+//!   ordinary mailbox/condvar receive path.
+//! * [`rendezvous`] — bootstrap: coordinator listener, worker join,
+//!   endpoint-map exchange, deterministic peer-mesh construction, and
+//!   the node → worker rank assignment.
+//! * [`worker`] — the `wilkins worker` serve loop (join worlds, run
+//!   ensemble instances, shut down on command).
+//! * [`pool`] — [`WorkerPool`]: spawn N worker processes of the
+//!   current executable and drive them.
+//! * [`up`] — `wilkins up` on a workflow: one distributed world
+//!   across the pool, merged into the same
+//!   [`RunReport`](crate::coordinator::RunReport)
+//!   (`process-per-node` placement).
+//!
+//! Ensemble `process-per-instance` placement builds on the same pool
+//! from [`Ensemble::run_on_pool`](crate::ensemble::Ensemble::run_on_pool).
+//!
+//! Everything above `comm/` — `henson::drive_rank`, `lowfive::Vol`,
+//! `flow::`, collectives — runs unmodified on remote ranks: the only
+//! thing that changes is where
+//! [`Transport::deliver`](crate::comm::Transport::deliver) puts the
+//! bytes.
+
+pub mod codec;
+pub mod pool;
+pub mod proto;
+pub mod rendezvous;
+pub mod transport;
+pub mod up;
+pub mod worker;
+
+pub use pool::WorkerPool;
+pub use transport::SocketTransport;
+pub use up::{run_workflow_distributed, UpOpts};
+pub use worker::worker_main;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,144 @@
+//! The worker pool: N `wilkins worker` OS processes, spawned by the
+//! coordinator, addressed over framed control sockets.
+//!
+//! The pool is placement-agnostic: `wilkins up` on a workflow uses it
+//! as the host set of one distributed world
+//! ([`WorkerPool::launch_world`]), while ensemble
+//! `process-per-instance` placement treats it as a bank of
+//! single-instance executors ([`WorkerPool::run_instance`] behind
+//! [`WorkerPool::acquire`]/[`WorkerPool::release`]).
+
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+
+use crate::error::{Result, WilkinsError};
+
+use super::proto::{self, InstanceDone, LaunchWorld, RunInstance, WorldDone};
+use super::rendezvous::{Rendezvous, WorkerLink};
+
+pub struct WorkerPool {
+    links: Vec<Mutex<WorkerLink>>,
+    peer_addrs: Vec<String>,
+    free: Mutex<Vec<usize>>,
+    children: Mutex<Vec<Child>>,
+    down: Mutex<bool>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers running this very executable (`current_exe`)
+    /// in `worker` mode and rendezvous with all of them. Any binary
+    /// built on this crate can be a pool host as long as it routes a
+    /// leading `worker` argument to [`super::worker_main`] — the
+    /// `wilkins` CLI and the ensemble bench both do.
+    pub fn spawn(n: usize) -> Result<WorkerPool> {
+        if n == 0 {
+            return Err(WilkinsError::Config("worker pool needs >= 1 worker".into()));
+        }
+        let rdv = Rendezvous::bind()?;
+        let exe = std::env::current_exe()
+            .map_err(|e| WilkinsError::Task(format!("current_exe: {e}")))?;
+        let mut children = Vec::with_capacity(n);
+        for id in 0..n {
+            let child = Command::new(&exe)
+                .arg("worker")
+                .arg("--connect")
+                .arg(rdv.addr())
+                .arg("--id")
+                .arg(id.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .spawn()
+                .map_err(|e| WilkinsError::Task(format!("spawn worker {id}: {e}")))?;
+            children.push(child);
+        }
+        let links = rdv.accept_workers(n)?;
+        let peer_addrs = links.iter().map(|l| l.peer_addr.clone()).collect();
+        Ok(WorkerPool {
+            links: links.into_iter().map(Mutex::new).collect(),
+            peer_addrs,
+            free: Mutex::new((0..n).rev().collect()),
+            children: Mutex::new(children),
+            down: Mutex::new(false),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Peer-mesh endpoint per worker id (the `LaunchWorld` endpoint
+    /// map).
+    pub fn peer_addrs(&self) -> &[String] {
+        &self.peer_addrs
+    }
+
+    /// Take an idle worker id, if any.
+    pub fn acquire(&self) -> Option<usize> {
+        self.free.lock().unwrap().pop()
+    }
+
+    /// Return a worker id to the idle set.
+    pub fn release(&self, id: usize) {
+        self.free.lock().unwrap().push(id);
+    }
+
+    /// Run one ensemble instance on worker `id` (blocking round-trip;
+    /// the per-link mutex keeps a worker single-tenant).
+    pub fn run_instance(&self, id: usize, req: &RunInstance) -> Result<InstanceDone> {
+        let mut link = self.links[id].lock().unwrap();
+        link.send(proto::K_RUN_INSTANCE, &req.encode())?;
+        let (kind, body) = link.recv()?;
+        if kind != proto::K_INSTANCE_DONE {
+            return Err(WilkinsError::Comm(format!(
+                "worker {id}: expected InstanceDone, got frame kind {kind}"
+            )));
+        }
+        InstanceDone::decode(&body)
+    }
+
+    /// Broadcast one `LaunchWorld` to every worker and collect every
+    /// `WorldDone` (in worker-id order). The whole pool is one
+    /// distributed world for the duration.
+    pub fn launch_world(&self, msg: &LaunchWorld) -> Result<Vec<WorldDone>> {
+        let body = msg.encode();
+        for link in &self.links {
+            link.lock().unwrap().send(proto::K_LAUNCH_WORLD, &body)?;
+        }
+        let mut replies = Vec::with_capacity(self.links.len());
+        for link in &self.links {
+            let mut link = link.lock().unwrap();
+            let (kind, body) = link.recv()?;
+            if kind != proto::K_WORLD_DONE {
+                return Err(WilkinsError::Comm(format!(
+                    "worker {}: expected WorldDone, got frame kind {kind}",
+                    link.id
+                )));
+            }
+            replies.push(WorldDone::decode(&body)?);
+        }
+        Ok(replies)
+    }
+
+    /// Orderly teardown: tell every worker to exit, then reap the
+    /// children. Idempotent; also invoked on drop.
+    pub fn shutdown(&self) {
+        let mut down = self.down.lock().unwrap();
+        if *down {
+            return;
+        }
+        *down = true;
+        for link in &self.links {
+            let _ = link.lock().unwrap().send(proto::K_SHUTDOWN, &[]);
+        }
+        let mut children = self.children.lock().unwrap();
+        for child in children.iter_mut() {
+            let _ = child.wait();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,446 @@
+//! Control-plane protocol of the multi-process substrate.
+//!
+//! Every message is the body of one [`codec`](super::codec) frame,
+//! encoded with the same [`wire`](crate::comm::wire) writer/reader the
+//! in-process LowFive protocol uses. Three conversations share the
+//! frame space:
+//!
+//! * **rendezvous** (worker ⇄ coordinator): `Hello` (magic + version +
+//!   worker id + peer endpoint) answered implicitly by the first
+//!   command frame; `Shutdown` ends the session.
+//! * **commands** (coordinator → worker): `LaunchWorld` joins this
+//!   worker's ranks to a distributed workflow run (answered by
+//!   `WorldDone`); `RunInstance` runs one whole ensemble instance in
+//!   this worker process (answered by `InstanceDone`).
+//! * **data plane** (worker ⇄ worker): `PeerHello` identifies a mesh
+//!   link; `Data` carries one comm envelope (dst, src, comm id, tag,
+//!   payload) — the socket serialization of
+//!   [`Transport::deliver`](crate::comm::Transport::deliver).
+
+use std::time::Duration;
+
+use crate::comm::wire::{Reader, Writer};
+use crate::coordinator::{NodeReport, RunReport};
+use crate::error::{Result, WilkinsError};
+use crate::lowfive::VolStats;
+use crate::metrics::{Span, SpanKind};
+
+/// Frame magic ("WLKN") — the first field of every `Hello`, so a
+/// stray connection (wrong port, wrong program) fails the handshake
+/// instead of desyncing the stream.
+pub const MAGIC: u32 = 0x574C_4B4E;
+/// Protocol version; bumped on any wire-visible change.
+pub const VERSION: u32 = 1;
+
+// Frame kinds.
+pub const K_HELLO: u8 = 1;
+pub const K_LAUNCH_WORLD: u8 = 2;
+pub const K_WORLD_DONE: u8 = 3;
+pub const K_RUN_INSTANCE: u8 = 4;
+pub const K_INSTANCE_DONE: u8 = 5;
+pub const K_SHUTDOWN: u8 = 6;
+pub const K_PEER_HELLO: u8 = 7;
+pub const K_DATA: u8 = 8;
+
+/// Worker → coordinator handshake.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    pub worker_id: u64,
+    /// Endpoint of this worker's peer-mesh listener.
+    pub peer_addr: String,
+}
+
+impl Hello {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u32(MAGIC);
+        w.put_u32(VERSION);
+        w.put_u64(self.worker_id);
+        w.put_str(&self.peer_addr);
+        w.into_vec()
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Hello> {
+        let mut r = Reader::new(body);
+        let magic = r.get_u32()?;
+        if magic != MAGIC {
+            return Err(WilkinsError::Comm(format!(
+                "bad handshake magic {magic:#x} (expected {MAGIC:#x})"
+            )));
+        }
+        let version = r.get_u32()?;
+        if version != VERSION {
+            return Err(WilkinsError::Comm(format!(
+                "protocol version mismatch: peer speaks {version}, we speak {VERSION}"
+            )));
+        }
+        Ok(Hello { worker_id: r.get_u64()?, peer_addr: r.get_str()? })
+    }
+}
+
+/// Coordinator → worker: join a distributed workflow run.
+///
+/// The worker rebuilds the graph from `config_src` (graph construction
+/// and communicator-id allocation are deterministic, so every process
+/// independently derives identical restricted worlds), connects the
+/// peer mesh from `endpoints`, and runs the ranks `owner_of` assigns
+/// to it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunchWorld {
+    pub config_src: String,
+    /// Shared workdir (all processes are on one host/filesystem, so
+    /// file-mode transports keep working across process boundaries).
+    pub workdir: String,
+    /// AOT artifacts dir; empty when the workflow needs no engine.
+    pub artifacts: String,
+    pub time_scale: f64,
+    pub total_ranks: u64,
+    /// Peer-mesh endpoint per worker id.
+    pub endpoints: Vec<String>,
+    /// Owning worker id per global rank.
+    pub owner_of: Vec<u64>,
+}
+
+impl LaunchWorld {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_str(&self.config_src);
+        w.put_str(&self.workdir);
+        w.put_str(&self.artifacts);
+        w.put_f64(self.time_scale);
+        w.put_u64(self.total_ranks);
+        w.put_u64(self.endpoints.len() as u64);
+        for e in &self.endpoints {
+            w.put_str(e);
+        }
+        w.put_u64_slice(&self.owner_of);
+        w.into_vec()
+    }
+
+    pub fn decode(body: &[u8]) -> Result<LaunchWorld> {
+        let mut r = Reader::new(body);
+        let config_src = r.get_str()?;
+        let workdir = r.get_str()?;
+        let artifacts = r.get_str()?;
+        let time_scale = r.get_f64()?;
+        let total_ranks = r.get_u64()?;
+        let n = r.get_u64()? as usize;
+        let mut endpoints = Vec::with_capacity(n);
+        for _ in 0..n {
+            endpoints.push(r.get_str()?);
+        }
+        let owner_of = r.get_u64_vec()?;
+        Ok(LaunchWorld {
+            config_src,
+            workdir,
+            artifacts,
+            time_scale,
+            total_ranks,
+            endpoints,
+            owner_of,
+        })
+    }
+}
+
+/// One rank's outcome shipped back from a worker.
+#[derive(Debug, Clone)]
+pub struct RankOutcomeWire {
+    pub node: u64,
+    pub stats: VolStats,
+    /// Empty string = the rank succeeded.
+    pub error: String,
+}
+
+/// Worker → coordinator: the hosted ranks finished (or the worker
+/// failed to set up, in which case `error` is non-empty and
+/// `outcomes` is empty).
+#[derive(Debug, Clone, Default)]
+pub struct WorldDone {
+    pub bytes_sent: u64,
+    pub msgs_sent: u64,
+    pub outcomes: Vec<RankOutcomeWire>,
+    pub error: String,
+}
+
+impl WorldDone {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u64(self.bytes_sent);
+        w.put_u64(self.msgs_sent);
+        w.put_str(&self.error);
+        w.put_u64(self.outcomes.len() as u64);
+        for o in &self.outcomes {
+            w.put_u64(o.node);
+            put_vol_stats(&mut w, &o.stats);
+            w.put_str(&o.error);
+        }
+        w.into_vec()
+    }
+
+    pub fn decode(body: &[u8]) -> Result<WorldDone> {
+        let mut r = Reader::new(body);
+        let bytes_sent = r.get_u64()?;
+        let msgs_sent = r.get_u64()?;
+        let error = r.get_str()?;
+        let n = r.get_u64()? as usize;
+        let mut outcomes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let node = r.get_u64()?;
+            let stats = get_vol_stats(&mut r)?;
+            let error = r.get_str()?;
+            outcomes.push(RankOutcomeWire { node, stats, error });
+        }
+        Ok(WorldDone { bytes_sent, msgs_sent, outcomes, error })
+    }
+}
+
+/// Coordinator → worker: run one whole ensemble instance in-process
+/// (the `process-per-instance` placement). The worker re-parses the
+/// spec (deterministic) and picks `instance_idx`; workdir/time-scale
+/// arrive pre-resolved so instance overrides and CLI flags behave
+/// exactly as in the single-process path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunInstance {
+    pub spec_src: String,
+    /// Directory `workflow:` paths in the spec resolve against.
+    pub base_dir: String,
+    pub instance_idx: u64,
+    pub workdir: String,
+    pub artifacts: String,
+    pub time_scale: f64,
+}
+
+impl RunInstance {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_str(&self.spec_src);
+        w.put_str(&self.base_dir);
+        w.put_u64(self.instance_idx);
+        w.put_str(&self.workdir);
+        w.put_str(&self.artifacts);
+        w.put_f64(self.time_scale);
+        w.into_vec()
+    }
+
+    pub fn decode(body: &[u8]) -> Result<RunInstance> {
+        let mut r = Reader::new(body);
+        Ok(RunInstance {
+            spec_src: r.get_str()?,
+            base_dir: r.get_str()?,
+            instance_idx: r.get_u64()?,
+            workdir: r.get_str()?,
+            artifacts: r.get_str()?,
+            time_scale: r.get_f64()?,
+        })
+    }
+}
+
+/// Worker → coordinator: one ensemble instance finished.
+#[derive(Debug, Clone)]
+pub struct InstanceDone {
+    /// Empty string = success (then `report` is present).
+    pub error: String,
+    pub report: Option<RunReport>,
+    /// The instance's spans on its own recorder clock (the driver
+    /// shifts them onto the ensemble clock, as in-process runs do).
+    pub spans: Vec<Span>,
+}
+
+impl InstanceDone {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_str(&self.error);
+        match &self.report {
+            None => w.put_u8(0),
+            Some(rep) => {
+                w.put_u8(1);
+                put_run_report(&mut w, rep);
+            }
+        }
+        w.put_u64(self.spans.len() as u64);
+        for s in &self.spans {
+            put_span(&mut w, s);
+        }
+        w.into_vec()
+    }
+
+    pub fn decode(body: &[u8]) -> Result<InstanceDone> {
+        let mut r = Reader::new(body);
+        let error = r.get_str()?;
+        let report = match r.get_u8()? {
+            0 => None,
+            _ => Some(get_run_report(&mut r)?),
+        };
+        let n = r.get_u64()? as usize;
+        let mut spans = Vec::with_capacity(n);
+        for _ in 0..n {
+            spans.push(get_span(&mut r)?);
+        }
+        Ok(InstanceDone { error, report, spans })
+    }
+}
+
+/// Worker ⇄ worker mesh-link handshake.
+pub fn encode_peer_hello(worker_id: u64) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u32(MAGIC);
+    w.put_u64(worker_id);
+    w.into_vec()
+}
+
+pub fn decode_peer_hello(body: &[u8]) -> Result<u64> {
+    let mut r = Reader::new(body);
+    let magic = r.get_u32()?;
+    if magic != MAGIC {
+        return Err(WilkinsError::Comm(format!(
+            "bad peer-mesh magic {magic:#x} (expected {MAGIC:#x})"
+        )));
+    }
+    r.get_u64()
+}
+
+/// Data-plane envelope: the socket form of one comm message.
+pub fn encode_data(
+    dst_global: u64,
+    src_global: u64,
+    comm_id: u64,
+    tag: u64,
+    payload: &[u8],
+) -> Vec<u8> {
+    let mut w = Writer::with_capacity(40 + payload.len());
+    w.put_u64(dst_global);
+    w.put_u64(src_global);
+    w.put_u64(comm_id);
+    w.put_u64(tag);
+    w.put_bytes(payload);
+    w.into_vec()
+}
+
+/// Decoded data envelope fields (payload copied out of the frame).
+pub struct DataMsg {
+    pub dst_global: u64,
+    pub src_global: u64,
+    pub comm_id: u64,
+    pub tag: u64,
+    pub payload: Vec<u8>,
+}
+
+pub fn decode_data(body: &[u8]) -> Result<DataMsg> {
+    let mut r = Reader::new(body);
+    Ok(DataMsg {
+        dst_global: r.get_u64()?,
+        src_global: r.get_u64()?,
+        comm_id: r.get_u64()?,
+        tag: r.get_u64()?,
+        payload: r.get_bytes()?.to_vec(),
+    })
+}
+
+fn put_duration(w: &mut Writer, d: Duration) {
+    w.put_f64(d.as_secs_f64());
+}
+
+fn get_duration(r: &mut Reader) -> Result<Duration> {
+    let s = r.get_f64()?;
+    if !s.is_finite() || s < 0.0 {
+        return Err(WilkinsError::Comm(format!("bad wire duration {s}")));
+    }
+    Ok(Duration::from_secs_f64(s))
+}
+
+fn put_vol_stats(w: &mut Writer, s: &VolStats) {
+    w.put_u64(s.files_served);
+    w.put_u64(s.serves_skipped);
+    w.put_u64(s.serves_suppressed);
+    w.put_u64(s.bytes_served);
+    w.put_u64(s.files_opened);
+    w.put_u64(s.bytes_read);
+    put_duration(w, s.serve_wait);
+    put_duration(w, s.open_wait);
+}
+
+fn get_vol_stats(r: &mut Reader) -> Result<VolStats> {
+    Ok(VolStats {
+        files_served: r.get_u64()?,
+        serves_skipped: r.get_u64()?,
+        serves_suppressed: r.get_u64()?,
+        bytes_served: r.get_u64()?,
+        files_opened: r.get_u64()?,
+        bytes_read: r.get_u64()?,
+        serve_wait: get_duration(r)?,
+        open_wait: get_duration(r)?,
+    })
+}
+
+fn put_run_report(w: &mut Writer, rep: &RunReport) {
+    put_duration(w, rep.elapsed);
+    w.put_u64(rep.total_ranks as u64);
+    w.put_u64(rep.bytes_sent);
+    w.put_u64(rep.msgs_sent);
+    w.put_u64(rep.nodes.len() as u64);
+    for n in &rep.nodes {
+        w.put_str(&n.name);
+        w.put_u64(n.nprocs as u64);
+        w.put_u64(n.files_served);
+        w.put_u64(n.serves_skipped);
+        w.put_u64(n.serves_suppressed);
+        w.put_u64(n.bytes_served);
+        w.put_u64(n.files_opened);
+        w.put_u64(n.bytes_read);
+        put_duration(w, n.serve_wait);
+        put_duration(w, n.open_wait);
+    }
+}
+
+fn get_run_report(r: &mut Reader) -> Result<RunReport> {
+    let elapsed = get_duration(r)?;
+    let total_ranks = r.get_u64()? as usize;
+    let bytes_sent = r.get_u64()?;
+    let msgs_sent = r.get_u64()?;
+    let n = r.get_u64()? as usize;
+    let mut nodes = Vec::with_capacity(n);
+    for _ in 0..n {
+        nodes.push(NodeReport {
+            name: r.get_str()?,
+            nprocs: r.get_u64()? as usize,
+            files_served: r.get_u64()?,
+            serves_skipped: r.get_u64()?,
+            serves_suppressed: r.get_u64()?,
+            bytes_served: r.get_u64()?,
+            files_opened: r.get_u64()?,
+            bytes_read: r.get_u64()?,
+            serve_wait: get_duration(r)?,
+            open_wait: get_duration(r)?,
+        });
+    }
+    Ok(RunReport { elapsed, total_ranks, bytes_sent, msgs_sent, nodes })
+}
+
+fn put_span(w: &mut Writer, s: &Span) {
+    w.put_u64(s.rank as u64);
+    w.put_u8(match s.kind {
+        SpanKind::Compute => 0,
+        SpanKind::Idle => 1,
+        SpanKind::Transfer => 2,
+    });
+    w.put_str(&s.label);
+    w.put_f64(s.start);
+    w.put_f64(s.end);
+}
+
+fn get_span(r: &mut Reader) -> Result<Span> {
+    let rank = r.get_u64()? as usize;
+    let kind = match r.get_u8()? {
+        0 => SpanKind::Compute,
+        1 => SpanKind::Idle,
+        2 => SpanKind::Transfer,
+        k => return Err(WilkinsError::Comm(format!("bad wire span kind {k}"))),
+    };
+    Ok(Span {
+        rank,
+        kind,
+        label: r.get_str()?,
+        start: r.get_f64()?,
+        end: r.get_f64()?,
+    })
+}

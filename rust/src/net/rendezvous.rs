@@ -1,0 +1,282 @@
+//! Bootstrap and rendezvous for the multi-process substrate.
+//!
+//! The coordinator process binds a loopback listener, spawns workers
+//! (`wilkins worker --connect <addr> --id <k>`), and collects one
+//! `Hello` per worker carrying that worker's peer-mesh endpoint. The
+//! resulting endpoint map plus a global-rank → worker assignment is
+//! what `LaunchWorld` broadcasts; every worker then independently
+//! builds the same mesh ([`build_mesh_world`]): connect to every
+//! lower-id peer, accept from every higher-id peer, one duplex link
+//! per unordered pair, one pump thread per link.
+//!
+//! Rank assignment itself lives here too ([`assign_nodes`]): whole
+//! task instances (graph nodes) are dealt round-robin onto workers,
+//! the `process-per-node` placement — a node's ranks share a process
+//! (and its restricted-world traffic stays on mailboxes) while
+//! channel traffic between nodes crosses sockets, which is exactly
+//! the paper's node-per-task deployment shape.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::comm::{Mailboxes, World};
+use crate::error::{Result, WilkinsError};
+use crate::graph::WorkflowGraph;
+
+use super::codec;
+use super::proto::{self, Hello, LaunchWorld};
+use super::transport::{connect, spawn_pump, PeerLink, SocketTransport};
+
+/// How long rendezvous/mesh accepts wait for a counterpart to show
+/// up. A worker or peer process that died before connecting must
+/// surface as a readable error, not an infinite `accept()` hang.
+const JOIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// `accept()` with a deadline (nonblocking poll; the accepted stream
+/// is switched back to blocking before use).
+fn accept_deadline(listener: &TcpListener, who: &str) -> Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| WilkinsError::Comm(format!("set_nonblocking: {e}")))?;
+    let deadline = Instant::now() + JOIN_TIMEOUT;
+    let stream = loop {
+        match listener.accept() {
+            Ok((s, _)) => break s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    let _ = listener.set_nonblocking(false);
+                    return Err(WilkinsError::Comm(format!(
+                        "timed out after {}s waiting for {who} to connect \
+                         (did a worker process die before rendezvous?)",
+                        JOIN_TIMEOUT.as_secs()
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                let _ = listener.set_nonblocking(false);
+                return Err(WilkinsError::Comm(format!("accept {who}: {e}")));
+            }
+        }
+    };
+    listener
+        .set_nonblocking(false)
+        .map_err(|e| WilkinsError::Comm(format!("set_nonblocking: {e}")))?;
+    stream
+        .set_nonblocking(false)
+        .map_err(|e| WilkinsError::Comm(format!("set_nonblocking: {e}")))?;
+    Ok(stream)
+}
+
+/// Coordinator-side listener for worker control connections.
+pub struct Rendezvous {
+    listener: TcpListener,
+    addr: String,
+}
+
+/// One worker's control connection, post-handshake.
+pub struct WorkerLink {
+    pub id: usize,
+    /// The worker's peer-mesh endpoint (from its `Hello`).
+    pub peer_addr: String,
+    pub conn: TcpStream,
+}
+
+impl WorkerLink {
+    /// Send one framed control message (bounds-checked, single
+    /// `write_all`).
+    pub fn send(&mut self, kind: u8, body: &[u8]) -> Result<()> {
+        codec::write_frame(&mut self.conn, kind, body)
+    }
+
+    /// Blocking read of the next control frame; EOF is an error here
+    /// (a worker must not vanish while the coordinator waits on it).
+    pub fn recv(&mut self) -> Result<(u8, Vec<u8>)> {
+        codec::read_frame(&mut self.conn)?.ok_or_else(|| {
+            WilkinsError::Comm(format!("worker {} closed its control connection", self.id))
+        })
+    }
+}
+
+impl Rendezvous {
+    /// Bind on an ephemeral loopback port.
+    pub fn bind() -> Result<Rendezvous> {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| WilkinsError::Comm(format!("bind rendezvous listener: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| WilkinsError::Comm(format!("rendezvous local_addr: {e}")))?
+            .to_string();
+        Ok(Rendezvous { listener, addr })
+    }
+
+    /// The address workers connect back to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Accept `n` workers and validate their handshakes. Returned
+    /// links are ordered by worker id; duplicate or out-of-range ids
+    /// fail the whole rendezvous.
+    pub fn accept_workers(&self, n: usize) -> Result<Vec<WorkerLink>> {
+        let mut links: Vec<Option<WorkerLink>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let mut conn = accept_deadline(&self.listener, "a worker")?;
+            conn.set_nodelay(true)
+                .map_err(|e| WilkinsError::Comm(format!("set_nodelay: {e}")))?;
+            let (kind, body) = codec::read_frame(&mut conn)?.ok_or_else(|| {
+                WilkinsError::Comm("worker closed before handshake".into())
+            })?;
+            if kind != proto::K_HELLO {
+                return Err(WilkinsError::Comm(format!(
+                    "expected Hello frame, got kind {kind}"
+                )));
+            }
+            let hello = Hello::decode(&body)?;
+            let id = hello.worker_id as usize;
+            if id >= n {
+                return Err(WilkinsError::Comm(format!(
+                    "worker id {id} out of range (pool of {n})"
+                )));
+            }
+            if links[id].is_some() {
+                return Err(WilkinsError::Comm(format!("duplicate worker id {id}")));
+            }
+            links[id] = Some(WorkerLink { id, peer_addr: hello.peer_addr, conn });
+        }
+        Ok(links.into_iter().map(|l| l.expect("all slots filled")).collect())
+    }
+}
+
+/// Worker-side join: connect to the coordinator and introduce
+/// ourselves (id + our peer-mesh endpoint).
+pub fn join(coordinator_addr: &str, worker_id: usize, peer_addr: &str) -> Result<TcpStream> {
+    let mut conn = connect(coordinator_addr)?;
+    let hello = Hello { worker_id: worker_id as u64, peer_addr: peer_addr.to_string() };
+    codec::write_frame(&mut conn, proto::K_HELLO, &hello.encode())?;
+    Ok(conn)
+}
+
+/// Deal graph nodes (task instances) round-robin onto `nworkers`
+/// processes; returns the owning worker id per global rank. Never
+/// splits one node's ranks across processes.
+pub fn assign_nodes(graph: &WorkflowGraph, nworkers: usize) -> Vec<u64> {
+    let mut owner_of = vec![0u64; graph.total_ranks];
+    for (ni, node) in graph.nodes.iter().enumerate() {
+        let w = (ni % nworkers.max(1)) as u64;
+        for r in node.ranks() {
+            owner_of[r] = w;
+        }
+    }
+    owner_of
+}
+
+/// Everything a worker holds while participating in a distributed
+/// world: the world itself plus the pump threads feeding it. Keep it
+/// alive until the coordinator's final `Shutdown` — peers may still be
+/// draining even after our own ranks finish.
+pub struct MeshWorld {
+    pub world: World,
+    pumps: Vec<JoinHandle<()>>,
+}
+
+impl MeshWorld {
+    /// Orderly teardown: signal every peer (`Shutdown` frame) and
+    /// close our write halves. Pumps are *not* joined — a pump only
+    /// exits once the peer closes its side, and peers tear down
+    /// concurrently, so joining here could deadlock two workers on
+    /// each other. Dropping the handles detaches the pumps; they
+    /// drain the peer's close and exit on their own (or die with the
+    /// process).
+    pub fn shutdown(self) {
+        self.world.shutdown_transport();
+        drop(self.pumps);
+    }
+}
+
+/// Build this worker's side of the mesh + the socket-backed world.
+///
+/// Deterministic pairing: for each unordered worker pair (i, j) with
+/// i < j, worker j connects to worker i's peer listener and announces
+/// itself with a `PeerHello`; worker i accepts. Either way both sides
+/// end up with one duplex link per peer, a pump thread reading it,
+/// and a write half registered with the [`SocketTransport`].
+pub fn build_mesh_world(
+    my_id: usize,
+    peer_listener: &TcpListener,
+    msg: &LaunchWorld,
+) -> Result<MeshWorld> {
+    let n = msg.endpoints.len();
+    if my_id >= n {
+        return Err(WilkinsError::Comm(format!(
+            "worker id {my_id} out of range (endpoint map of {n})"
+        )));
+    }
+    let total_ranks = msg.total_ranks as usize;
+    let mailboxes = Arc::new(Mailboxes::new(total_ranks));
+    let mut peers: Vec<Option<PeerLink>> = (0..n).map(|_| None).collect();
+    let mut pumps = Vec::with_capacity(n.saturating_sub(1));
+
+    // Connect to every lower id.
+    for (j, endpoint) in msg.endpoints.iter().enumerate().take(my_id) {
+        let mut stream = connect(endpoint)?;
+        codec::write_frame(
+            &mut stream,
+            proto::K_PEER_HELLO,
+            &proto::encode_peer_hello(my_id as u64),
+        )?;
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| WilkinsError::Comm(format!("clone mesh stream: {e}")))?;
+        pumps.push(spawn_pump(read_half, Arc::clone(&mailboxes), j));
+        peers[j] = Some(PeerLink::new(stream));
+    }
+
+    // Accept from every higher id (they arrive in any order).
+    for _ in my_id + 1..n {
+        let mut stream = accept_deadline(peer_listener, "a mesh peer")?;
+        stream
+            .set_nodelay(true)
+            .map_err(|e| WilkinsError::Comm(format!("set_nodelay: {e}")))?;
+        let (kind, body) = codec::read_frame(&mut stream)?.ok_or_else(|| {
+            WilkinsError::Comm("mesh peer closed before PeerHello".into())
+        })?;
+        if kind != proto::K_PEER_HELLO {
+            return Err(WilkinsError::Comm(format!(
+                "expected PeerHello on mesh link, got kind {kind}"
+            )));
+        }
+        let peer = proto::decode_peer_hello(&body)? as usize;
+        if peer <= my_id || peer >= n {
+            return Err(WilkinsError::Comm(format!(
+                "unexpected mesh peer id {peer} (we are {my_id} of {n})"
+            )));
+        }
+        if peers[peer].is_some() {
+            return Err(WilkinsError::Comm(format!("duplicate mesh link from {peer}")));
+        }
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| WilkinsError::Comm(format!("clone mesh stream: {e}")))?;
+        pumps.push(spawn_pump(read_half, Arc::clone(&mailboxes), peer));
+        peers[peer] = Some(PeerLink::new(stream));
+    }
+
+    let owner_of: Vec<usize> = msg.owner_of.iter().map(|&w| w as usize).collect();
+    if owner_of.len() != total_ranks {
+        return Err(WilkinsError::Comm(format!(
+            "owner map covers {} ranks, world has {total_ranks}",
+            owner_of.len()
+        )));
+    }
+    let transport = Arc::new(SocketTransport::new(
+        my_id,
+        owner_of,
+        peers,
+        Arc::clone(&mailboxes),
+    ));
+    let world = World::with_transport(total_ranks, mailboxes, transport);
+    Ok(MeshWorld { world, pumps })
+}

@@ -1,0 +1,251 @@
+//! Unit tests for the multi-process substrate: frame codec, protocol
+//! roundtrips, and a real socket-backed world — two mesh sides with
+//! independent `Mailboxes`/`World`s (exactly what two worker processes
+//! hold), joined over loopback TCP inside one test process so p2p,
+//! collectives and intercommunicators can be asserted end to end.
+
+use std::io::Cursor;
+use std::net::TcpListener;
+use std::thread;
+use std::time::Duration;
+
+use crate::comm::InterComm;
+
+use super::codec::{self, FrameDecoder, HEADER_LEN, MAX_FRAME};
+use super::proto::{
+    self, Hello, InstanceDone, LaunchWorld, RankOutcomeWire, RunInstance, WorldDone,
+};
+use super::rendezvous::{build_mesh_world, MeshWorld};
+
+#[test]
+fn frame_roundtrip_blocking() {
+    let mut buf: Vec<u8> = Vec::new();
+    codec::write_frame(&mut buf, 7, b"hello").unwrap();
+    codec::write_frame(&mut buf, 9, &[]).unwrap();
+    let mut cur = Cursor::new(buf);
+    assert_eq!(codec::read_frame(&mut cur).unwrap(), Some((7, b"hello".to_vec())));
+    assert_eq!(codec::read_frame(&mut cur).unwrap(), Some((9, Vec::new())));
+    assert_eq!(codec::read_frame(&mut cur).unwrap(), None, "clean EOF at boundary");
+}
+
+#[test]
+fn eof_inside_frame_is_error() {
+    let mut buf: Vec<u8> = Vec::new();
+    codec::write_frame(&mut buf, 1, b"truncated body").unwrap();
+    buf.truncate(HEADER_LEN + 3);
+    let mut cur = Cursor::new(buf);
+    assert!(codec::read_frame(&mut cur).is_err());
+
+    // EOF inside the header is also an error (only boundary EOF is
+    // a clean close).
+    let mut cur = Cursor::new(vec![1u8, 2]);
+    assert!(codec::read_frame(&mut cur).is_err());
+}
+
+#[test]
+fn oversize_header_is_rejected() {
+    let mut buf = ((MAX_FRAME as u32) + 1).to_le_bytes().to_vec();
+    buf.push(0); // kind
+    let mut cur = Cursor::new(buf.clone());
+    assert!(codec::read_frame(&mut cur).is_err());
+    let mut dec = FrameDecoder::new();
+    dec.feed(&buf);
+    assert!(dec.next_frame().is_err());
+}
+
+#[test]
+fn decoder_handles_split_feeds() {
+    let mut stream: Vec<u8> = Vec::new();
+    codec::write_frame(&mut stream, 3, b"abc").unwrap();
+    codec::write_frame(&mut stream, 4, b"defgh").unwrap();
+    // Feed one byte at a time: frames must come out whole, in order.
+    let mut dec = FrameDecoder::new();
+    let mut out = Vec::new();
+    for b in &stream {
+        dec.feed(std::slice::from_ref(b));
+        while let Some(f) = dec.next_frame().unwrap() {
+            out.push(f);
+        }
+    }
+    assert_eq!(out, vec![(3, b"abc".to_vec()), (4, b"defgh".to_vec())]);
+    assert_eq!(dec.pending(), 0);
+}
+
+#[test]
+fn hello_roundtrip_and_magic_check() {
+    let h = Hello { worker_id: 3, peer_addr: "127.0.0.1:4042".into() };
+    assert_eq!(Hello::decode(&h.encode()).unwrap(), h);
+    let mut bad = h.encode();
+    bad[0] ^= 0xFF;
+    assert!(Hello::decode(&bad).is_err());
+}
+
+#[test]
+fn control_messages_roundtrip() {
+    let lw = LaunchWorld {
+        config_src: "tasks: []\n".into(),
+        workdir: "/tmp/w".into(),
+        artifacts: String::new(),
+        time_scale: 0.25,
+        total_ranks: 12,
+        endpoints: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+        owner_of: vec![0, 0, 0, 0, 1, 1, 1, 1, 1, 0, 0, 0],
+    };
+    assert_eq!(LaunchWorld::decode(&lw.encode()).unwrap(), lw);
+
+    let wd = WorldDone {
+        bytes_sent: 1024,
+        msgs_sent: 7,
+        outcomes: vec![RankOutcomeWire {
+            node: 2,
+            stats: crate::lowfive::VolStats {
+                files_served: 3,
+                bytes_served: 999,
+                serve_wait: Duration::from_millis(12),
+                ..Default::default()
+            },
+            error: String::new(),
+        }],
+        error: String::new(),
+    };
+    let back = WorldDone::decode(&wd.encode()).unwrap();
+    assert_eq!(back.bytes_sent, 1024);
+    assert_eq!(back.outcomes.len(), 1);
+    assert_eq!(back.outcomes[0].node, 2);
+    assert_eq!(back.outcomes[0].stats.bytes_served, 999);
+    assert!((back.outcomes[0].stats.serve_wait.as_secs_f64() - 0.012).abs() < 1e-9);
+
+    let ri = RunInstance {
+        spec_src: "ensemble: {}\n".into(),
+        base_dir: ".".into(),
+        instance_idx: 4,
+        workdir: "/tmp/x/pipe[4]".into(),
+        artifacts: "artifacts".into(),
+        time_scale: 1.0,
+    };
+    assert_eq!(RunInstance::decode(&ri.encode()).unwrap(), ri);
+
+    let id = InstanceDone {
+        error: String::new(),
+        report: Some(crate::coordinator::RunReport {
+            elapsed: Duration::from_millis(250),
+            total_ranks: 4,
+            bytes_sent: 10,
+            msgs_sent: 2,
+            nodes: vec![],
+        }),
+        spans: vec![crate::metrics::Span {
+            rank: 1,
+            kind: crate::metrics::SpanKind::Transfer,
+            label: "serve".into(),
+            start: 0.5,
+            end: 0.75,
+        }],
+    };
+    let back = InstanceDone::decode(&id.encode()).unwrap();
+    assert!(back.error.is_empty());
+    assert_eq!(back.report.as_ref().unwrap().total_ranks, 4);
+    assert_eq!(back.spans.len(), 1);
+    assert_eq!(back.spans[0].kind, crate::metrics::SpanKind::Transfer);
+
+    assert_eq!(proto::decode_peer_hello(&proto::encode_peer_hello(5)).unwrap(), 5);
+}
+
+#[test]
+fn data_envelope_roundtrip() {
+    let body = proto::encode_data(3, 1, 42, 7, b"payload bytes");
+    let msg = proto::decode_data(&body).unwrap();
+    assert_eq!(
+        (msg.dst_global, msg.src_global, msg.comm_id, msg.tag, msg.payload.as_slice()),
+        (3, 1, 42, 7, b"payload bytes".as_slice())
+    );
+}
+
+/// Two mesh sides — two independent worlds, as two worker processes
+/// would hold — joined over loopback. Ranks 0..2 live on side 0,
+/// ranks 2..4 on side 1.
+fn mesh_pair() -> (MeshWorld, MeshWorld) {
+    let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let endpoints = vec![
+        l0.local_addr().unwrap().to_string(),
+        l1.local_addr().unwrap().to_string(),
+    ];
+    let msg = LaunchWorld {
+        config_src: String::new(),
+        workdir: String::new(),
+        artifacts: String::new(),
+        time_scale: 1.0,
+        total_ranks: 4,
+        endpoints,
+        owner_of: vec![0, 0, 1, 1],
+    };
+    let m0 = msg.clone();
+    let h = thread::spawn(move || build_mesh_world(0, &l0, &m0).unwrap());
+    let side1 = build_mesh_world(1, &l1, &msg).unwrap();
+    let side0 = h.join().unwrap();
+    (side0, side1)
+}
+
+#[test]
+fn socket_world_p2p_across_the_mesh() {
+    let (side0, side1) = mesh_pair();
+    let w0 = side0.world.clone();
+    let w1 = side1.world.clone();
+    let t = thread::spawn(move || {
+        let c = w0.comm_world(0);
+        c.send(2, 5, b"over the wire");
+        let (src, m) = c.recv(2, 6).unwrap();
+        assert_eq!((src, m.as_slice()), (2, b"back".as_slice()));
+    });
+    let c = w1.comm_world(2);
+    let (src, m) = c.recv(0, 5).unwrap();
+    assert_eq!((src, m.as_slice()), (0, b"over the wire".as_slice()));
+    c.send(0, 6, b"back");
+    t.join().unwrap();
+    // Each side counted exactly its own sends.
+    assert_eq!(side0.world.msgs_sent(), 1);
+    assert_eq!(side1.world.msgs_sent(), 1);
+    side0.shutdown();
+    side1.shutdown();
+}
+
+#[test]
+fn socket_world_collectives_and_intercomm() {
+    let (side0, side1) = mesh_pair();
+    let mut handles = Vec::new();
+    for rank in 0..4usize {
+        let world = if rank < 2 { side0.world.clone() } else { side1.world.clone() };
+        handles.push(thread::spawn(move || {
+            let c = world.comm_world(rank);
+            // Collectives cross the mesh unmodified.
+            c.barrier().unwrap();
+            assert_eq!(c.allreduce_sum_u64(rank as u64).unwrap(), 6);
+            let parts = c.allgather(&[rank as u8]).unwrap();
+            assert_eq!(parts, vec![vec![0u8], vec![1], vec![2], vec![3]]);
+
+            // Intercomm between the two process-local groups: ranks
+            // {0,1} produce, {2,3} consume (1:1 pairing).
+            let (group, peer): (&[usize], usize) = if rank < 2 {
+                (&[0, 1], rank + 2)
+            } else {
+                (&[2, 3], rank - 2)
+            };
+            let local = world.comm_from_ranks(90, group, rank % 2);
+            let remote: Vec<usize> = if rank < 2 { vec![2, 3] } else { vec![0, 1] };
+            let ic = InterComm::new(local, 91, remote);
+            if rank < 2 {
+                ic.send(rank % 2, 3, &[rank as u8; 4]);
+            } else {
+                let (src, m) = ic.recv(rank % 2, 3).unwrap();
+                assert_eq!(src, rank % 2);
+                assert_eq!(m, vec![peer as u8; 4]);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    side0.shutdown();
+    side1.shutdown();
+}

@@ -1,0 +1,197 @@
+//! The socket backend of [`Transport`]: local ranks get mailbox
+//! pushes, remote ranks get framed envelopes on the mesh link to the
+//! process that hosts them.
+//!
+//! Send side: `SocketTransport::deliver` routes on the global
+//! `owner_of` map. Remote sends assemble one frame and `write_all` it
+//! under the per-peer lock, preserving the in-memory backend's
+//! "buffered eager" semantics — the call returns once the bytes are
+//! handed to the kernel, and frames from concurrent rank threads can
+//! never interleave.
+//!
+//! Receive side: one pump thread per mesh link ([`spawn_pump`]) reads
+//! frames and pushes envelopes into the shared [`Mailboxes`]; blocked
+//! `recv`s wake through the ordinary mailbox condvar, so `Comm`,
+//! `InterComm`, collectives and probes run unmodified on remote ranks.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+
+use crate::comm::{Envelope, Mailboxes, Transport};
+use crate::error::{Result, WilkinsError};
+
+use super::codec;
+use super::proto;
+
+/// A per-peer write half. The stream is a `try_clone` of the pump's
+/// read half, so dropping the transport closes the link for both.
+pub(crate) struct PeerLink {
+    stream: Mutex<TcpStream>,
+}
+
+impl PeerLink {
+    pub(crate) fn new(stream: TcpStream) -> PeerLink {
+        PeerLink { stream: Mutex::new(stream) }
+    }
+
+    fn send_frame(&self, kind: u8, body: &[u8]) -> Result<()> {
+        if body.len() > codec::MAX_FRAME {
+            // Writing an over-bound header would make the receiving
+            // pump treat the stream as desynced and kill the link for
+            // every rank sharing it; fail just this send instead.
+            return Err(WilkinsError::Comm(format!(
+                "frame body of {} bytes exceeds MAX_FRAME ({})",
+                body.len(),
+                codec::MAX_FRAME
+            )));
+        }
+        let frame = codec::encode_frame(kind, body);
+        let mut s = self.stream.lock().unwrap();
+        s.write_all(&frame)?;
+        Ok(())
+    }
+}
+
+/// Socket-backed [`Transport`]: see the module docs.
+pub struct SocketTransport {
+    my_worker: usize,
+    /// Owning worker id per global rank.
+    owner_of: Vec<usize>,
+    /// Mesh link per worker id (`None` at `my_worker`).
+    peers: Vec<Option<PeerLink>>,
+    /// Local inboxes, shared with the pump threads.
+    mailboxes: Arc<Mailboxes>,
+}
+
+impl SocketTransport {
+    pub(crate) fn new(
+        my_worker: usize,
+        owner_of: Vec<usize>,
+        peers: Vec<Option<PeerLink>>,
+        mailboxes: Arc<Mailboxes>,
+    ) -> SocketTransport {
+        SocketTransport { my_worker, owner_of, peers, mailboxes }
+    }
+
+    /// Is this global rank hosted by this process?
+    pub fn hosts(&self, global_rank: usize) -> bool {
+        self.owner_of[global_rank] == self.my_worker
+    }
+}
+
+impl Transport for SocketTransport {
+    fn deliver(
+        &self,
+        dst_global: usize,
+        src_global: usize,
+        comm_id: u64,
+        tag: u64,
+        payload: Vec<u8>,
+    ) {
+        let owner = self.owner_of[dst_global];
+        if owner == self.my_worker {
+            self.mailboxes.push(
+                dst_global,
+                Envelope { src_global, comm_id, tag, payload },
+            );
+            return;
+        }
+        let link = self.peers[owner]
+            .as_ref()
+            .unwrap_or_else(|| panic!("no mesh link to worker {owner}"));
+        let body = proto::encode_data(
+            dst_global as u64,
+            src_global as u64,
+            comm_id,
+            tag,
+            &payload,
+        );
+        // A dead link mid-run means the peer process crashed; the
+        // send contract has no error path (MPI_Send aborts too), so
+        // panic this rank thread — the driver reports it as a failed
+        // rank rather than hanging the whole workflow on a recv that
+        // can never complete.
+        if let Err(e) = link.send_frame(proto::K_DATA, &body) {
+            panic!("mesh link to worker {owner} failed: {e}");
+        }
+    }
+
+    fn shutdown(&self) {
+        for link in self.peers.iter().flatten() {
+            let _ = link.send_frame(proto::K_SHUTDOWN, &[]);
+            if let Ok(s) = link.stream.lock() {
+                let _ = s.shutdown(Shutdown::Write);
+            }
+        }
+    }
+}
+
+/// Spawn the inbound pump for one mesh link: frames in, mailbox
+/// pushes out. Exits on a `Shutdown` frame, clean EOF, or any stream
+/// error (a worker that died mid-run; the sender side panics with the
+/// real diagnosis).
+pub(crate) fn spawn_pump(
+    stream: TcpStream,
+    mailboxes: Arc<Mailboxes>,
+    peer_id: usize,
+) -> JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("wk-net-pump-{peer_id}"))
+        .spawn(move || {
+            let mut stream = stream;
+            loop {
+                match codec::read_frame(&mut stream) {
+                    Ok(Some((proto::K_DATA, body))) => match proto::decode_data(&body) {
+                        Ok(msg) => mailboxes.push(
+                            msg.dst_global as usize,
+                            Envelope {
+                                src_global: msg.src_global as usize,
+                                comm_id: msg.comm_id,
+                                tag: msg.tag,
+                                payload: msg.payload,
+                            },
+                        ),
+                        Err(e) => {
+                            eprintln!(
+                                "wilkins net: mesh link from worker {peer_id} died \
+                                 (bad data frame: {e}); ranks waiting on it will time out"
+                            );
+                            break;
+                        }
+                    },
+                    // Orderly teardown: peer signalled shutdown or
+                    // closed cleanly at a frame boundary.
+                    Ok(Some((proto::K_SHUTDOWN, _))) | Ok(None) => break,
+                    Ok(Some((kind, _))) => {
+                        eprintln!(
+                            "wilkins net: mesh link from worker {peer_id} died \
+                             (unexpected frame kind {kind}); ranks waiting on it will time out"
+                        );
+                        break;
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "wilkins net: mesh link from worker {peer_id} died ({e}); \
+                             ranks waiting on it will time out"
+                        );
+                        break;
+                    }
+                }
+            }
+        })
+        .expect("spawn net pump thread")
+}
+
+/// Connect + handshake helper shared by mesh building and rendezvous:
+/// TCP with Nagle off (the substrate moves many small protocol
+/// messages whose latency is the whole point).
+pub(crate) fn connect(addr: &str) -> Result<TcpStream> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| WilkinsError::Comm(format!("connect {addr}: {e}")))?;
+    stream
+        .set_nodelay(true)
+        .map_err(|e| WilkinsError::Comm(format!("set_nodelay: {e}")))?;
+    Ok(stream)
+}

@@ -1,0 +1,107 @@
+//! `wilkins up` on a plain workflow: run one workflow as a distributed
+//! world across a freshly spawned worker pool, then aggregate exactly
+//! what the single-process path aggregates.
+//!
+//! Placement is process-per-node ([`rendezvous::assign_nodes`]): whole
+//! task instances are dealt round-robin onto workers, so a node's
+//! restricted-world traffic stays on in-process mailboxes while
+//! channel traffic between coupled tasks crosses the socket mesh —
+//! the paper's task-per-node deployment shape. Per-task step counts
+//! and transfer totals are invariant under placement: each message is
+//! sent by exactly one process, so summing the per-worker counters
+//! reproduces the single-process totals.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::config::WorkflowConfig;
+use crate::coordinator::report::{self, RankOutcome};
+use crate::coordinator::RunReport;
+use crate::error::{Result, WilkinsError};
+use crate::graph::WorkflowGraph;
+
+use super::pool::WorkerPool;
+use super::proto::LaunchWorld;
+use super::rendezvous;
+
+/// Options shared by the distributed run paths.
+pub struct UpOpts {
+    /// Requested pool width; clamped to the node count (a worker with
+    /// no ranks would only idle in the mesh).
+    pub workers: usize,
+    pub time_scale: f64,
+    pub workdir: Option<PathBuf>,
+    /// AOT artifacts dir; workers attach an engine only when it holds
+    /// a manifest.
+    pub artifacts: Option<PathBuf>,
+}
+
+/// Run `config_src` as one distributed world over `opts.workers`
+/// processes and return the merged [`RunReport`].
+pub fn run_workflow_distributed(config_src: &str, opts: &UpOpts) -> Result<RunReport> {
+    let cfg = WorkflowConfig::from_yaml_str(config_src)?;
+    let graph = WorkflowGraph::build(&cfg)?;
+    let nworkers = opts.workers.clamp(1, graph.nodes.len());
+    let owner_of = rendezvous::assign_nodes(&graph, nworkers);
+
+    // One shared workdir for every process: same precedence as the
+    // single-process driver (explicit > workflow `workdir:` > temp),
+    // resolved once here so no worker falls back to a per-pid default.
+    let workdir = opts
+        .workdir
+        .clone()
+        .or_else(|| cfg.workdir.clone().map(PathBuf::from))
+        .unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("wilkins-up-{}", std::process::id()))
+        });
+
+    let pool = WorkerPool::spawn(nworkers)?;
+    let msg = LaunchWorld {
+        config_src: config_src.to_string(),
+        workdir: workdir.display().to_string(),
+        artifacts: opts
+            .artifacts
+            .as_ref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_default(),
+        time_scale: opts.time_scale,
+        total_ranks: graph.total_ranks as u64,
+        endpoints: pool.peer_addrs().to_vec(),
+        owner_of,
+    };
+
+    let t0 = Instant::now();
+    let replies = pool.launch_world(&msg)?;
+    let elapsed = t0.elapsed();
+
+    let mut outcomes: Vec<RankOutcome> = Vec::with_capacity(graph.total_ranks);
+    let mut bytes_sent = 0u64;
+    let mut msgs_sent = 0u64;
+    for (wid, reply) in replies.iter().enumerate() {
+        if !reply.error.is_empty() {
+            return Err(WilkinsError::Task(format!(
+                "worker {wid} failed: {}",
+                reply.error
+            )));
+        }
+        bytes_sent += reply.bytes_sent;
+        msgs_sent += reply.msgs_sent;
+        for o in &reply.outcomes {
+            outcomes.push(RankOutcome {
+                node: o.node as usize,
+                stats: o.stats.clone(),
+                error: if o.error.is_empty() { None } else { Some(o.error.clone()) },
+            });
+        }
+    }
+    if outcomes.len() != graph.total_ranks {
+        return Err(WilkinsError::Task(format!(
+            "workers reported {} rank outcomes, world has {}",
+            outcomes.len(),
+            graph.total_ranks
+        )));
+    }
+    let report = report::build(&graph, outcomes, elapsed, bytes_sent, msgs_sent)?;
+    pool.shutdown();
+    Ok(report)
+}

@@ -1,0 +1,169 @@
+//! The `wilkins worker` process mode: one member of a worker pool.
+//!
+//! A worker connects back to the coordinator that spawned it, binds a
+//! peer-mesh listener, introduces itself, and then serves commands
+//! until `Shutdown`:
+//!
+//! * `LaunchWorld` — join a distributed workflow: rebuild the graph
+//!   from the shipped YAML, build the socket mesh, and run exactly the
+//!   global ranks the owner map assigns here via
+//!   `Wilkins::run_hosted`. Task codes, `lowfive::Vol`, flow control
+//!   and collectives run unmodified — they only ever see `Comm`s.
+//! * `RunInstance` — run one whole ensemble instance single-process
+//!   inside this worker (the `process-per-instance` placement) and
+//!   ship back the `RunReport` plus spans.
+//!
+//! Workers deliberately hold their distributed world open until the
+//! coordinator's `Shutdown`: our ranks finishing does not mean our
+//! peers are done reading from us.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::Wilkins;
+use crate::ensemble::EnsembleSpec;
+use crate::error::{Result, WilkinsError};
+use crate::tasks::builtin_registry;
+
+use super::codec;
+use super::proto::{
+    self, InstanceDone, LaunchWorld, RankOutcomeWire, RunInstance, WorldDone,
+};
+use super::rendezvous;
+
+/// Entry point behind `wilkins worker --connect ADDR --id K`. Also
+/// callable from any other binary built on this crate (the benches
+/// re-enter here so a bench executable can serve as its own pool).
+pub fn worker_main(coordinator_addr: &str, worker_id: usize) -> Result<()> {
+    let peer_listener = TcpListener::bind("127.0.0.1:0")
+        .map_err(|e| WilkinsError::Comm(format!("bind peer listener: {e}")))?;
+    let peer_addr = peer_listener
+        .local_addr()
+        .map_err(|e| WilkinsError::Comm(format!("peer local_addr: {e}")))?
+        .to_string();
+    let mut control = rendezvous::join(coordinator_addr, worker_id, &peer_addr)?;
+
+    // A worker that served a LaunchWorld keeps the mesh world alive
+    // until shutdown (peers may still drain our streams).
+    let mut held: Option<rendezvous::MeshWorld> = None;
+
+    loop {
+        let frame = codec::read_frame(&mut control)?;
+        match frame {
+            None | Some((proto::K_SHUTDOWN, _)) => break,
+            Some((proto::K_LAUNCH_WORLD, body)) => {
+                let msg = LaunchWorld::decode(&body)?;
+                let reply = match serve_world(worker_id, &peer_listener, &msg) {
+                    Ok((done, mesh)) => {
+                        held = Some(mesh);
+                        done
+                    }
+                    Err(e) => WorldDone { error: e.to_string(), ..WorldDone::default() },
+                };
+                send_reply(&mut control, proto::K_WORLD_DONE, &reply.encode())?;
+            }
+            Some((proto::K_RUN_INSTANCE, body)) => {
+                let msg = RunInstance::decode(&body)?;
+                let reply = match serve_instance(&msg) {
+                    Ok(done) => done,
+                    Err(e) => InstanceDone {
+                        error: e.to_string(),
+                        report: None,
+                        spans: Vec::new(),
+                    },
+                };
+                send_reply(&mut control, proto::K_INSTANCE_DONE, &reply.encode())?;
+            }
+            Some((kind, _)) => {
+                return Err(WilkinsError::Comm(format!(
+                    "worker {worker_id}: unexpected control frame kind {kind}"
+                )));
+            }
+        }
+    }
+    if let Some(mesh) = held.take() {
+        mesh.shutdown();
+    }
+    Ok(())
+}
+
+fn send_reply(control: &mut TcpStream, kind: u8, body: &[u8]) -> Result<()> {
+    codec::write_frame(control, kind, body)
+}
+
+/// Attach the AOT engine when the run names an artifacts dir that
+/// actually holds a manifest (same sniff as the CLI's run path).
+fn with_engine_if_present(w: Wilkins, artifacts: &str) -> Result<Wilkins> {
+    if artifacts.is_empty() {
+        return Ok(w);
+    }
+    let dir = PathBuf::from(artifacts);
+    if !dir.join("manifest.tsv").exists() {
+        return Ok(w);
+    }
+    let handle = crate::runtime::shared_engine(&dir)?;
+    Ok(w.with_engine(handle))
+}
+
+fn serve_world(
+    my_id: usize,
+    peer_listener: &TcpListener,
+    msg: &LaunchWorld,
+) -> Result<(WorldDone, rendezvous::MeshWorld)> {
+    let mut w = Wilkins::from_yaml_str(&msg.config_src, builtin_registry())?
+        .with_workdir(PathBuf::from(&msg.workdir))
+        .with_time_scale(msg.time_scale);
+    w = with_engine_if_present(w, &msg.artifacts)?;
+
+    let mesh = rendezvous::build_mesh_world(my_id, peer_listener, msg)?;
+    let hosted: Vec<usize> = msg
+        .owner_of
+        .iter()
+        .enumerate()
+        .filter(|(_, &owner)| owner as usize == my_id)
+        .map(|(r, _)| r)
+        .collect();
+    let outcomes = w.run_hosted(&mesh.world, &hosted)?;
+    let done = WorldDone {
+        bytes_sent: mesh.world.bytes_sent(),
+        msgs_sent: mesh.world.msgs_sent(),
+        outcomes: outcomes
+            .into_iter()
+            .map(|o| RankOutcomeWire {
+                node: o.node as u64,
+                stats: o.stats,
+                error: o.error.unwrap_or_default(),
+            })
+            .collect(),
+        error: String::new(),
+    };
+    Ok((done, mesh))
+}
+
+fn serve_instance(msg: &RunInstance) -> Result<InstanceDone> {
+    let spec = EnsembleSpec::from_yaml_str(&msg.spec_src, Path::new(&msg.base_dir))?;
+    let idx = msg.instance_idx as usize;
+    let inst = spec.instances.get(idx).ok_or_else(|| {
+        WilkinsError::Config(format!(
+            "RunInstance names instance #{idx} but the spec has {}",
+            spec.instances.len()
+        ))
+    })?;
+    let mut w = Wilkins::new(inst.cfg.clone(), builtin_registry())?
+        .with_workdir(PathBuf::from(&msg.workdir))
+        .with_time_scale(msg.time_scale);
+    w = with_engine_if_present(w, &msg.artifacts)?;
+    let recorder = w.recorder();
+    match w.run() {
+        Ok(report) => Ok(InstanceDone {
+            error: String::new(),
+            report: Some(report),
+            spans: recorder.spans(),
+        }),
+        Err(e) => Ok(InstanceDone {
+            error: e.to_string(),
+            report: None,
+            spans: recorder.spans(),
+        }),
+    }
+}

@@ -18,6 +18,8 @@ fn help_lists_commands() {
     let s = String::from_utf8_lossy(&out.stdout);
     assert!(s.contains("run") && s.contains("validate") && s.contains("graph"));
     assert!(s.contains("ensemble") && s.contains("--budget") && s.contains("--policy"));
+    assert!(s.contains("up") && s.contains("--workers") && s.contains("--dry-run"));
+    assert!(s.contains("worker") && s.contains("--connect"));
 }
 
 #[test]
@@ -131,4 +133,167 @@ fn run_listing1_with_gantt_export() {
     let csv = std::fs::read_to_string(&gantt).unwrap();
     assert!(csv.starts_with("rank,kind,label"));
     assert!(csv.contains("idle") || csv.contains("transfer"));
+}
+
+/// Task stat rows (first 7 columns: name, procs, served, skipped,
+/// bytes_out, opened, bytes_in) from a CLI workflow report. The two
+/// timing columns are dropped — wall-clock legitimately differs
+/// between substrates; the counters must not.
+fn report_rows(stdout: &str) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut in_report = false;
+    for line in stdout.lines() {
+        if line.starts_with("workflow completed") {
+            in_report = true;
+            continue;
+        }
+        if !in_report || line.starts_with("task ") {
+            continue;
+        }
+        let cols: Vec<String> = line.split_whitespace().take(7).map(str::to_string).collect();
+        if cols.len() == 7 {
+            rows.push(cols);
+        }
+    }
+    rows
+}
+
+/// The placement-invariant part of the report header:
+/// "N ranks, M msgs, X.X MiB sent)".
+fn transfer_totals(stdout: &str) -> String {
+    stdout
+        .lines()
+        .find(|l| l.starts_with("workflow completed"))
+        .and_then(|l| l.split('(').nth(1))
+        .unwrap_or_default()
+        .to_string()
+}
+
+#[test]
+fn up_two_workers_matches_single_process_run() {
+    let dir = std::env::temp_dir().join("wilkins-cli-up");
+    std::fs::create_dir_all(&dir).unwrap();
+    let single = wilkins()
+        .args([
+            "run",
+            &repo("configs/listing1_3task.yaml"),
+            "--artifacts",
+            "/nonexistent",
+            "--workdir",
+            dir.join("single").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(single.status.success(), "{}", String::from_utf8_lossy(&single.stderr));
+    let multi = wilkins()
+        .args([
+            "up",
+            "--workers",
+            "2",
+            &repo("configs/listing1_3task.yaml"),
+            "--artifacts",
+            "/nonexistent",
+            "--workdir",
+            dir.join("multi").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(multi.status.success(), "{}", String::from_utf8_lossy(&multi.stderr));
+
+    let s1 = String::from_utf8_lossy(&single.stdout);
+    let s2 = String::from_utf8_lossy(&multi.stdout);
+    assert!(s2.contains("process-per-node"), "{s2}");
+    assert!(s2.contains("workflow completed"), "{s2}");
+
+    // Per-task step counts (files served/opened) and byte totals must
+    // be identical across the two substrates.
+    let rows1 = report_rows(&s1);
+    let rows2 = report_rows(&s2);
+    assert_eq!(rows1.len(), 3, "three tasks in listing 1: {s1}");
+    assert_eq!(rows1, rows2, "per-task stats must not depend on placement");
+    assert_eq!(
+        transfer_totals(&s1),
+        transfer_totals(&s2),
+        "aggregate transfer totals must not depend on placement"
+    );
+}
+
+#[test]
+fn up_fans_ensemble_instances_across_worker_pool() {
+    let dir = std::env::temp_dir().join("wilkins-cli-up-ens");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = wilkins()
+        .args([
+            "up",
+            "--workers",
+            "2",
+            &repo("configs/ensemble_pipeline.yaml"),
+            "--artifacts",
+            "/nonexistent",
+            "--workdir",
+            dir.join("work").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("process-per-instance"), "{s}");
+    assert!(s.contains("ensemble completed"), "{s}");
+    assert!(s.contains("on 2 workers"), "{s}");
+    for inst in ["pipe[0]", "pipe[1]", "pipe[2]", "slow"] {
+        assert!(s.contains(inst), "missing {inst} in: {s}");
+    }
+}
+
+#[test]
+fn ensemble_dry_run_prints_packing_plan_without_running() {
+    let out = wilkins()
+        .args(["ensemble", &repo("configs/ensemble_pipeline.yaml"), "--dry-run"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("packing plan: 4 instances"), "{s}");
+    assert!(s.contains("wave 1"), "{s}");
+    assert!(s.contains("pipe[0]"), "{s}");
+    assert!(s.contains("all 4 instances placed"), "{s}");
+    assert!(!s.contains("ensemble completed"), "dry run must not launch: {s}");
+
+    // Worker slots reshape the plan: with one slot, waves are single
+    // admissions and the placement line says so.
+    let out = wilkins()
+        .args([
+            "ensemble",
+            &repo("configs/ensemble_pipeline.yaml"),
+            "--dry-run",
+            "--workers",
+            "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("on 1 workers"), "{s}");
+}
+
+#[test]
+fn shipped_placement_spec_parses_and_plans() {
+    // configs/ensemble_placement.yaml carries the process-placement
+    // keys; a dry run must honor its `workers: 2` without any flags.
+    let out = wilkins()
+        .args(["ensemble", &repo("configs/ensemble_placement.yaml"), "--dry-run"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("packing plan: 4 instances"), "{s}");
+    assert!(s.contains("process-per-instance on 2 workers"), "{s}");
+}
+
+#[test]
+fn worker_requires_connect_and_id() {
+    let out = wilkins().arg("worker").output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--connect"), "{err}");
 }
