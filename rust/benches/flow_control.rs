@@ -56,12 +56,13 @@ tasks:
         // Rank 0 of producer and rank 0 of consumer (global nprocs).
         let ranks = [0usize, report.nodes[0].nprocs];
         let mut s = recorder.gantt_ascii(&ranks, 100);
-        let (c, i, t) = recorder.totals(0);
+        let (c, i, t, st) = recorder.totals(0);
         s.push_str(&format!(
-            "producer rank 0 totals: compute {:.2}s idle {:.2}s transfer {:.2}s (paper-s: x{})\n",
+            "producer rank 0 totals: compute {:.2}s idle {:.2}s transfer {:.2}s stall {:.2}s (paper-s: x{})\n",
             c,
             i,
             t,
+            st,
             1.0 / TIME_SCALE
         ));
         let _ = SpanKind::Compute;

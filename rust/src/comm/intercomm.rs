@@ -94,6 +94,35 @@ impl InterComm {
         Ok((src_local, env.payload))
     }
 
+    /// Non-blocking receive from any remote rank: `None` when nothing
+    /// is queued right now. Returns (remote local rank, payload).
+    pub fn try_recv_any(&self, tag: u64) -> Option<(usize, Vec<u8>)> {
+        self.try_recv_where(tag, |_| true)
+    }
+
+    /// Non-blocking *selective* receive: pop the first queued message
+    /// on `tag` whose payload satisfies `pred`, leaving everything
+    /// else queued. The flow pump uses a payload peek (the request
+    /// discriminant byte) to answer data reads without absorbing
+    /// protocol events that a coordinated section plan owns.
+    pub fn try_recv_where(
+        &self,
+        tag: u64,
+        pred: impl Fn(&[u8]) -> bool,
+    ) -> Option<(usize, Vec<u8>)> {
+        let remote = Arc::clone(&self.remote);
+        let id = self.id;
+        let matcher = move |e: &Envelope| {
+            e.comm_id == id
+                && e.tag == tag
+                && remote.contains(&e.src_global)
+                && pred(&e.payload)
+        };
+        let env = self.local.try_recv_matching(matcher)?;
+        let src_local = self.remote.iter().position(|&g| g == env.src_global)?;
+        Some((src_local, env.payload))
+    }
+
     /// Non-blocking probe for a message from any remote rank.
     pub fn iprobe(&self, tag: u64) -> bool {
         let mb_rank = self.local.global_rank();

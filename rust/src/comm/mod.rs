@@ -325,6 +325,20 @@ impl Comm {
         Ok((src_local, env.payload))
     }
 
+    /// Non-blocking receive: pop the first queued envelope the matcher
+    /// accepts, `None` when nothing matches right now. The flow-control
+    /// pump uses this to drain available requests without committing
+    /// to a blocking wait.
+    pub(crate) fn try_recv_matching<F>(&self, matcher: F) -> Option<Envelope>
+    where
+        F: Fn(&Envelope) -> bool,
+    {
+        let mb = self.world.mailboxes.at(self.global_rank());
+        let mut queue = mb.queue.lock().unwrap();
+        let idx = queue.iter().position(matcher)?;
+        queue.remove(idx)
+    }
+
     pub(crate) fn recv_matching<F>(&self, matcher: F, timeout: Duration) -> Result<Envelope>
     where
         F: Fn(&Envelope) -> bool,

@@ -5,8 +5,8 @@
 //! lists inports/outports as filename + dataset names; Wilkins matches
 //! them into channels (see [`crate::graph`]). The only other fields are
 //! resources (`nprocs`), ensembles (`taskCount`), subset writers
-//! (`nwriters` / `io_proc`), flow control (`io_freq`) and custom
-//! actions (`actions`).
+//! (`nwriters` / `io_proc`), flow control (`flow:` / its `io_freq`
+//! sugar) and custom actions (`actions`).
 
 mod validate;
 
@@ -14,7 +14,7 @@ use std::collections::BTreeMap;
 
 use crate::configyaml::{self, Yaml};
 use crate::error::{Result, WilkinsError};
-use crate::flow::FlowControl;
+use crate::flow::{ChannelPolicy, FlowControl, PolicyMode};
 
 /// Transport selection per dataset (`memory: 1` / `file: 1`).
 #[derive(Debug, Clone, PartialEq)]
@@ -30,8 +30,9 @@ pub struct DsetSpec {
 pub struct PortConfig {
     /// Filename or glob, e.g. `outfile.h5`, `plt*.h5`.
     pub filename: String,
-    /// Flow control for this port (consumer side), from `io_freq`.
-    pub flow: FlowControl,
+    /// Flow control for this port (consumer side): the lowered form of
+    /// the `flow:` key or its `io_freq` sugar.
+    pub flow: ChannelPolicy,
     pub dsets: Vec<DsetSpec>,
 }
 
@@ -199,10 +200,7 @@ fn parse_ports(y: Option<&Yaml>) -> Result<Vec<PortConfig>> {
             .and_then(Yaml::as_str)
             .ok_or_else(|| WilkinsError::Config("port missing `filename`".into()))?
             .to_string();
-        let flow = match p.get("io_freq").and_then(Yaml::as_i64) {
-            Some(freq) => FlowControl::from_io_freq(freq)?,
-            None => FlowControl::All,
-        };
+        let flow = parse_flow(p)?;
         let dsets_y = p
             .get("dsets")
             .and_then(Yaml::as_seq)
@@ -225,6 +223,58 @@ fn parse_ports(y: Option<&Yaml>) -> Result<Vec<PortConfig>> {
         out.push(PortConfig { filename, flow, dsets });
     }
     Ok(out)
+}
+
+/// Flow control of one port: the `flow:` key (mapping or shorthand
+/// string) or the legacy `io_freq` sugar, never both.
+///
+/// ```yaml
+/// io_freq: 5                      # sugar: block, every 5th close
+/// flow: latest                    # shorthand: policy only
+/// flow: { policy: block, depth: 3 }
+/// flow: { policy: drop-oldest, depth: 2, every: 2 }
+/// ```
+fn parse_flow(p: &Yaml) -> Result<ChannelPolicy> {
+    let io_freq = p.get("io_freq");
+    let flow = p.get("flow");
+    if io_freq.is_some() && flow.is_some() {
+        return Err(WilkinsError::Config(
+            "port sets both `io_freq` and `flow`; `io_freq` is sugar for `flow`, use one".into(),
+        ));
+    }
+    if let Some(freq) = io_freq {
+        let freq = freq.as_i64().ok_or_else(|| {
+            WilkinsError::Config("`io_freq` must be an integer".into())
+        })?;
+        return Ok(FlowControl::from_io_freq(freq)?.lower());
+    }
+    let Some(flow) = flow else {
+        return Ok(ChannelPolicy::block());
+    };
+    if let Some(s) = flow.as_str() {
+        // Shorthand: `flow: latest`.
+        return Ok(ChannelPolicy::block().with_mode(PolicyMode::parse(s)?));
+    }
+    if flow.as_map().is_none() {
+        return Err(WilkinsError::Config(
+            "`flow` must be a policy name or a mapping with policy/depth/every".into(),
+        ));
+    }
+    let mut policy = ChannelPolicy::block();
+    if let Some(m) = flow.get("policy") {
+        let s = m.as_str().ok_or_else(|| {
+            WilkinsError::Config("`flow.policy` must be a string".into())
+        })?;
+        policy = policy.with_mode(PolicyMode::parse(s)?);
+    }
+    if let Some(d) = get_usize(flow, "depth")? {
+        policy = policy.with_depth(d);
+    }
+    if let Some(e) = get_usize(flow, "every")? {
+        policy = policy.with_every(e as u64);
+    }
+    policy.validate()?;
+    Ok(policy)
 }
 
 /// Optional non-negative integer field (shared with the ensemble

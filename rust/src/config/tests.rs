@@ -1,6 +1,6 @@
 //! Config schema tests, including the paper's listings end-to-end.
 
-use crate::flow::FlowControl;
+use crate::flow::{ChannelPolicy, FlowControl, PolicyMode};
 
 use super::*;
 
@@ -148,7 +148,7 @@ fn listing6_actions_and_flow() {
         Some(("actions".to_string(), "nyx".to_string()))
     );
     assert_eq!(cfg.tasks[0].outports[0].filename, "plt*.h5");
-    assert_eq!(cfg.tasks[1].inports[0].flow, FlowControl::Some(2));
+    assert_eq!(cfg.tasks[1].inports[0].flow, FlowControl::Some(2).lower());
 }
 
 #[test]
@@ -233,6 +233,58 @@ fn rejects_duplicate_funcs() {
         "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n  - func: p\n    nprocs: 1\n    inports:\n      - filename: f\n        dsets:\n          - name: /d\n",
     );
     assert!(err.is_err());
+}
+
+#[test]
+fn flow_key_mapping_and_shorthand() {
+    let cfg = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: f\n        flow: { policy: drop-oldest, depth: 2, every: 3 }\n        dsets:\n          - name: /d\n",
+    )
+    .unwrap();
+    assert_eq!(
+        cfg.tasks[1].inports[0].flow,
+        ChannelPolicy::block()
+            .with_mode(PolicyMode::DropOldest)
+            .with_depth(2)
+            .with_every(3)
+    );
+    let cfg = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: f\n        flow: latest\n        dsets:\n          - name: /d\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.tasks[1].inports[0].flow, ChannelPolicy::latest());
+}
+
+#[test]
+fn flow_defaults_to_block() {
+    let cfg = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: f\n        dsets:\n          - name: /d\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.tasks[1].inports[0].flow, ChannelPolicy::block());
+}
+
+#[test]
+fn rejects_flow_and_io_freq_together() {
+    let err = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: f\n        io_freq: 2\n        flow: latest\n        dsets:\n          - name: /d\n",
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn rejects_bad_flow_values() {
+    for port in [
+        "flow: { policy: yolo }",
+        "flow: { policy: block, depth: 0 }",
+        "flow: { policy: block, every: 0 }",
+        "flow: 7",
+    ] {
+        let yaml = format!(
+            "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f\n        dsets:\n          - name: /d\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: f\n        {port}\n        dsets:\n          - name: /d\n"
+        );
+        assert!(WorkflowConfig::from_yaml_str(&yaml).is_err(), "{port} must be rejected");
+    }
 }
 
 #[test]

@@ -52,6 +52,14 @@ fn validate_task(t: &TaskConfig) -> Result<()> {
         if p.filename.is_empty() {
             return Err(WilkinsError::Config(format!("{who}: empty port filename")));
         }
+        // Flow windows are parsed leniently (builders accept anything);
+        // reject degenerate credit windows / cadences here so every
+        // construction path — YAML, ensemble overrides, programmatic
+        // configs — hits the same gate. Documented in
+        // docs/yaml-schema.md (`flow:` key).
+        p.flow.validate().map_err(|e| {
+            WilkinsError::Config(format!("{who}: port {}: {e}", p.filename))
+        })?;
         if p.dsets.is_empty() {
             return Err(WilkinsError::Config(format!(
                 "{who}: port {} has no dsets",

@@ -209,7 +209,7 @@ impl Wilkins {
                         };
                         vol.add_out_channel(
                             OutChannel::new(ic, &ch.out_pattern, ch.mode)
-                                .with_flow(ch.flow),
+                                .with_policy(ch.flow),
                         );
                     }
                     // In-channels: this node as consumer. Remote group

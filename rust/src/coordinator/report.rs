@@ -23,6 +23,8 @@ pub struct NodeReport {
     pub nprocs: usize,
     pub files_served: u64,
     pub serves_skipped: u64,
+    /// Rounds discarded by a dropping flow policy (Sec. 3.6).
+    pub serves_dropped: u64,
     pub serves_suppressed: u64,
     pub bytes_served: u64,
     pub files_opened: u64,
@@ -30,6 +32,10 @@ pub struct NodeReport {
     /// Max across ranks (the critical-path wait).
     pub serve_wait: Duration,
     pub open_wait: Duration,
+    /// Time the producer stalled on flow credits (max across ranks).
+    pub stall_wait: Duration,
+    /// High-water mark of any flow round buffer (max across ranks).
+    pub max_queue_depth: u64,
 }
 
 /// The result of a workflow run.
@@ -57,13 +63,13 @@ impl RunReport {
             self.bytes_sent as f64 / (1024.0 * 1024.0)
         );
         s.push_str(&format!(
-            "{:<24} {:>6} {:>8} {:>8} {:>12} {:>8} {:>12} {:>10} {:>10}\n",
+            "{:<24} {:>6} {:>8} {:>8} {:>12} {:>8} {:>12} {:>10} {:>10} {:>8} {:>10}\n",
             "task", "procs", "served", "skipped", "bytes_out", "opened", "bytes_in",
-            "serve_wait", "open_wait"
+            "serve_wait", "open_wait", "dropped", "stalled"
         ));
         for n in &self.nodes {
             s.push_str(&format!(
-                "{:<24} {:>6} {:>8} {:>8} {:>12} {:>8} {:>12} {:>9.3}s {:>9.3}s\n",
+                "{:<24} {:>6} {:>8} {:>8} {:>12} {:>8} {:>12} {:>9.3}s {:>9.3}s {:>8} {:>9.3}s\n",
                 n.name,
                 n.nprocs,
                 n.files_served,
@@ -72,7 +78,21 @@ impl RunReport {
                 n.files_opened,
                 n.bytes_read,
                 n.serve_wait.as_secs_f64(),
-                n.open_wait.as_secs_f64()
+                n.open_wait.as_secs_f64(),
+                n.serves_dropped,
+                n.stall_wait.as_secs_f64()
+            ));
+        }
+        // One greppable flow-control summary (ci/check.sh asserts on
+        // it) whenever backpressure actually engaged.
+        let dropped: u64 = self.nodes.iter().map(|n| n.serves_dropped).sum();
+        let stalled: f64 = self.nodes.iter().map(|n| n.stall_wait.as_secs_f64()).sum();
+        let maxq = self.nodes.iter().map(|n| n.max_queue_depth).max().unwrap_or(0);
+        // Only when flow control did something beyond the synchronous
+        // default (depth-1 block stalls on every serve by definition).
+        if dropped > 0 || maxq > 1 {
+            s.push_str(&format!(
+                "flow: dropped={dropped} stalled={stalled:.3}s max_queue_depth={maxq}\n"
             ));
         }
         s
@@ -109,12 +129,15 @@ pub(crate) fn build(
             nprocs: n.nprocs,
             files_served: 0,
             serves_skipped: 0,
+            serves_dropped: 0,
             serves_suppressed: 0,
             bytes_served: 0,
             files_opened: 0,
             bytes_read: 0,
             serve_wait: Duration::ZERO,
             open_wait: Duration::ZERO,
+            stall_wait: Duration::ZERO,
+            max_queue_depth: 0,
         })
         .collect();
     for o in outcomes {
@@ -123,12 +146,15 @@ pub(crate) fn build(
         // report the max (rank counts agree on I/O ranks).
         n.files_served = n.files_served.max(o.stats.files_served);
         n.serves_skipped = n.serves_skipped.max(o.stats.serves_skipped);
+        n.serves_dropped = n.serves_dropped.max(o.stats.serves_dropped);
         n.serves_suppressed = n.serves_suppressed.max(o.stats.serves_suppressed);
         n.files_opened = n.files_opened.max(o.stats.files_opened);
         n.bytes_served += o.stats.bytes_served;
         n.bytes_read += o.stats.bytes_read;
         n.serve_wait = n.serve_wait.max(o.stats.serve_wait);
         n.open_wait = n.open_wait.max(o.stats.open_wait);
+        n.stall_wait = n.stall_wait.max(o.stats.stall_wait);
+        n.max_queue_depth = n.max_queue_depth.max(o.stats.max_queue_depth);
     }
     Ok(RunReport {
         elapsed,

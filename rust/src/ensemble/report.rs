@@ -74,20 +74,23 @@ impl EnsembleReport {
             where_run
         );
         s.push_str(&format!(
-            "{:<20} {:>6} {:>9} {:>9} {:>9} {:>8} {:>8} {:>12}\n",
-            "instance", "ranks", "start", "finish", "elapsed", "served", "opened", "bytes_moved"
+            "{:<20} {:>6} {:>9} {:>9} {:>9} {:>8} {:>8} {:>8} {:>12}\n",
+            "instance", "ranks", "start", "finish", "elapsed", "served", "dropped", "opened",
+            "bytes_moved"
         ));
         for i in &self.instances {
             let served: u64 = i.report.nodes.iter().map(|n| n.files_served).sum();
+            let dropped: u64 = i.report.nodes.iter().map(|n| n.serves_dropped).sum();
             let opened: u64 = i.report.nodes.iter().map(|n| n.files_opened).sum();
             s.push_str(&format!(
-                "{:<20} {:>6} {:>8.3}s {:>8.3}s {:>8.3}s {:>8} {:>8} {:>12}\n",
+                "{:<20} {:>6} {:>8.3}s {:>8.3}s {:>8.3}s {:>8} {:>8} {:>8} {:>12}\n",
                 i.name,
                 i.ranks,
                 i.started_s,
                 i.finished_s,
                 i.elapsed_s(),
                 served,
+                dropped,
                 opened,
                 i.report.bytes_sent
             ));

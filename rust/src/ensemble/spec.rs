@@ -227,7 +227,7 @@ fn parse_instance(
         let freq = freq.as_i64().ok_or_else(|| {
             WilkinsError::Config("`io_freq` must be an integer".into())
         })?;
-        let flow = FlowControl::from_io_freq(freq)?;
+        let flow = FlowControl::from_io_freq(freq)?.lower();
         for t in &mut cfg.tasks {
             for p in &mut t.inports {
                 p.flow = flow;

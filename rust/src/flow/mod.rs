@@ -1,26 +1,75 @@
-//! Flow control strategies (paper Sec. 3.6, substrate S7).
+//! Flow control (paper Sec. 3.6): the credit-based streaming layer
+//! between producers and consumers with disparate data rates.
 //!
 //! Coupled in situ tasks run concurrently; a slow consumer stalls its
-//! producer. Wilkins offers three strategies, selected per channel with
-//! the YAML `io_freq` field on the consumer inport:
+//! producer. The seed reproduced the paper's three `io_freq` modes as
+//! a per-serve-attempt predicate evaluated inside `Vol::serve_file`;
+//! this module is the grown-up version of that decision point: a
+//! per-link **policy** ([`ChannelPolicy`]), a bounded **round buffer**
+//! with **credit accounting** ([`LinkState`], [`Credits`]), and a
+//! deterministic **section plan** ([`Plan`]) that keeps every SPMD
+//! writer rank of a producer making bit-identical buffering decisions.
 //!
-//! * **All** (`io_freq: 0|1` or absent) — serve every timestep; the
-//!   producer blocks until the consumer is done (the default).
-//! * **Some(N)** (`io_freq: N>1`) — serve every Nth timestep.
-//! * **Latest** (`io_freq: -1`) — serve only when a consumer request is
-//!   already pending; otherwise drop this timestep and move on.
+//! # Policies
 //!
-//! The decision is evaluated *per serve attempt* (once per producer
-//! timestep), inside `Vol::serve_file`, so it composes with custom I/O
-//! actions such as the Nyx double-close pattern (Sec. 4.2.2). For
-//! *Latest*, producer I/O rank 0 probes for pending requests and
-//! broadcasts the verdict over the I/O communicator so all writer
-//! ranks skip or serve in lockstep (divergent decisions would tear a
-//! timestep apart).
+//! A channel policy is a mode plus a credit window (`depth`) plus a
+//! cadence (`every`), configured per consumer inport with the YAML
+//! `flow:` key (the legacy `io_freq` field is sugar that lowers onto
+//! it, see [`FlowControl::lower`]):
+//!
+//! * [`PolicyMode::Block`] — every admitted round is delivered; the
+//!   producer stalls when its credits run out. `depth: 1` is the
+//!   paper's *all* strategy (serve synchronously at every close);
+//!   `depth: N` lets the producer run up to `N` rounds ahead of the
+//!   consumer before stalling (bounded-buffer pipelining).
+//! * [`PolicyMode::DropOldest`] — at zero credits the oldest queued
+//!   (undelivered) round is discarded to admit the new one.
+//! * [`PolicyMode::DropNewest`] — at zero credits the *incoming*
+//!   round is discarded; queued rounds keep their slots.
+//! * [`PolicyMode::Latest`] — only the newest undelivered round is
+//!   kept: admitting a round discards everything queued before it.
+//!   This is the paper's *latest* strategy; the consumer always
+//!   receives the freshest available timestep.
+//!
+//! `every: N` serves every Nth eligible close (the paper's *some(N)*,
+//! legacy `io_freq: N`); skipped closes never reach the buffer.
+//!
+//! # Credit accounting
+//!
+//! The consumer grants `depth` dataset credits per link (the grant is
+//! declared in the shared workflow config, so both sides know it
+//! without a startup handshake). Admitting a round to the buffer
+//! consumes one credit; the round's completion — a `Done` from every
+//! consumer rank — returns it. At zero credits a blocking policy
+//! stalls the producer (time accounted as [`LinkStats::stalled`]) and
+//! a dropping policy discards per its mode. Because credits ride on
+//! the ordinary channel request/reply traffic, the accounting is
+//! transport-agnostic: the in-memory backend and the socket substrate
+//! (`wilkins up`) drive the exact same [`LinkState`] and behave
+//! identically.
+//!
+//! # SPMD consistency
+//!
+//! Every writer rank of a producer holds its own slab of a round, so
+//! all writer ranks must agree on which rounds are admitted, dropped
+//! and delivered — a torn decision would hand a consumer a timestep
+//! assembled from different versions. Blocking policies are
+//! deterministic without coordination (no drops; deliveries are a
+//! pure function of the buffer). Dropping policies are coordinated by
+//! I/O rank 0: it processes its request stream, decides, and
+//! broadcasts a [`Plan`] of [`PlanOp`]s over the I/O communicator;
+//! the other writer ranks replay the plan against their own mailboxes
+//! (the generalization of the seed's *latest* probe broadcast).
 
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::comm::wire::{Reader, Writer};
 use crate::error::{Result, WilkinsError};
 
-/// A channel's flow-control strategy.
+/// The paper's legacy three-mode strategy, decoded from `io_freq`.
+/// Kept as the sugar surface: it lowers onto [`ChannelPolicy`] via
+/// [`FlowControl::lower`] and appears nowhere below the config layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum FlowControl {
     /// Serve every timestep (producer waits for the consumer).
@@ -28,7 +77,7 @@ pub enum FlowControl {
     All,
     /// Serve every Nth timestep (N >= 2).
     Some(u64),
-    /// Serve only when a consumer is already waiting.
+    /// Serve only the newest available timestep.
     Latest,
 }
 
@@ -46,13 +95,24 @@ impl FlowControl {
         }
     }
 
-    /// Count-based part of the decision (All/Some). Latest needs the
-    /// pending-request probe and is resolved by the Vol.
+    /// Lower the legacy mode onto the policy it is sugar for:
+    /// `All` => synchronous block, `Some(N)` => block every Nth,
+    /// `Latest` => keep-newest.
+    pub fn lower(self) -> ChannelPolicy {
+        match self {
+            FlowControl::All => ChannelPolicy::block(),
+            FlowControl::Some(n) => ChannelPolicy::block().with_every(n),
+            FlowControl::Latest => ChannelPolicy::latest(),
+        }
+    }
+
+    /// Count-based part of the legacy decision (kept for callers that
+    /// still reason in attempts, e.g. the ensemble admission throttle).
     pub fn serves_attempt(&self, attempt: u64) -> bool {
         match self {
             FlowControl::All => true,
             FlowControl::Some(n) => attempt % n == 0,
-            FlowControl::Latest => true, // refined by the probe
+            FlowControl::Latest => true,
         }
     }
 }
@@ -64,6 +124,541 @@ impl std::fmt::Display for FlowControl {
             FlowControl::Some(n) => write!(f, "some({n})"),
             FlowControl::Latest => write!(f, "latest"),
         }
+    }
+}
+
+/// What a link does when its credits hit zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyMode {
+    /// Stall the producer until a credit returns (never drops).
+    #[default]
+    Block,
+    /// Discard the oldest queued round to admit the new one.
+    DropOldest,
+    /// Discard the incoming round; queued rounds keep their slots.
+    DropNewest,
+    /// Keep only the newest queued round (the paper's *latest*).
+    Latest,
+}
+
+impl PolicyMode {
+    /// Parse the YAML `flow.policy` spelling.
+    pub fn parse(s: &str) -> Result<PolicyMode> {
+        match s {
+            "block" => Ok(PolicyMode::Block),
+            "drop-oldest" => Ok(PolicyMode::DropOldest),
+            "drop-newest" => Ok(PolicyMode::DropNewest),
+            "latest" => Ok(PolicyMode::Latest),
+            other => Err(WilkinsError::Config(format!(
+                "unknown flow policy {other:?} (expected block | drop-oldest | drop-newest | latest)"
+            ))),
+        }
+    }
+
+    /// Does this mode ever discard rounds instead of stalling?
+    pub fn drops(&self) -> bool {
+        !matches!(self, PolicyMode::Block)
+    }
+}
+
+impl std::fmt::Display for PolicyMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PolicyMode::Block => "block",
+            PolicyMode::DropOldest => "drop-oldest",
+            PolicyMode::DropNewest => "drop-newest",
+            PolicyMode::Latest => "latest",
+        })
+    }
+}
+
+/// A channel's full flow-control configuration: overflow mode, credit
+/// window and serve cadence. Built from the YAML `flow:` key or
+/// lowered from `io_freq` ([`FlowControl::lower`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelPolicy {
+    /// What to do at zero credits.
+    pub mode: PolicyMode,
+    /// Credit window: rounds the producer may hold in flight (>= 1).
+    pub depth: usize,
+    /// Serve every Nth eligible file close (>= 1; 1 = every close).
+    pub every: u64,
+}
+
+impl Default for ChannelPolicy {
+    fn default() -> ChannelPolicy {
+        ChannelPolicy::block()
+    }
+}
+
+impl ChannelPolicy {
+    /// Synchronous blocking policy (the paper's *all*; the default).
+    pub fn block() -> ChannelPolicy {
+        ChannelPolicy { mode: PolicyMode::Block, depth: 1, every: 1 }
+    }
+
+    /// Keep-newest policy (the paper's *latest*).
+    pub fn latest() -> ChannelPolicy {
+        ChannelPolicy { mode: PolicyMode::Latest, depth: 1, every: 1 }
+    }
+
+    /// Builder: replace the overflow mode.
+    pub fn with_mode(mut self, mode: PolicyMode) -> ChannelPolicy {
+        self.mode = mode;
+        self
+    }
+
+    /// Builder: replace the credit window.
+    pub fn with_depth(mut self, depth: usize) -> ChannelPolicy {
+        self.depth = depth;
+        self
+    }
+
+    /// Builder: replace the serve cadence.
+    pub fn with_every(mut self, every: u64) -> ChannelPolicy {
+        self.every = every;
+        self
+    }
+
+    /// Reject windows the buffer machinery cannot honor.
+    pub fn validate(&self) -> Result<()> {
+        if self.depth == 0 {
+            return Err(WilkinsError::Config("flow depth must be >= 1".into()));
+        }
+        if self.every == 0 {
+            return Err(WilkinsError::Config("flow every must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for ChannelPolicy {
+    /// Renders `block`, `block depth=3`, `latest every=2`, ...
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.mode)?;
+        if self.depth != 1 {
+            write!(f, " depth={}", self.depth)?;
+        }
+        if self.every != 1 {
+            write!(f, " every={}", self.every)?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-link credit ledger: `depth` credits granted by the consumer,
+/// one held per in-flight round.
+#[derive(Debug, Clone, Copy)]
+pub struct Credits {
+    granted: usize,
+    in_use: usize,
+}
+
+impl Credits {
+    fn new(granted: usize) -> Credits {
+        Credits { granted, in_use: 0 }
+    }
+
+    /// Credits currently available for new rounds.
+    pub fn available(&self) -> usize {
+        self.granted.saturating_sub(self.in_use)
+    }
+
+    fn take(&mut self) {
+        self.in_use += 1;
+    }
+
+    fn put_back(&mut self) {
+        debug_assert!(self.in_use > 0, "credit underflow");
+        self.in_use = self.in_use.saturating_sub(1);
+    }
+}
+
+/// Per-link flow counters, aggregated into `VolStats` / `RunReport`.
+#[derive(Debug, Clone, Default)]
+pub struct LinkStats {
+    /// Closes gated out by `every` (never reached the buffer).
+    pub skipped: u64,
+    /// Rounds admitted to the buffer.
+    pub admitted: u64,
+    /// Rounds discarded by a dropping policy.
+    pub dropped: u64,
+    /// Rounds fully consumed (Done from every consumer rank).
+    pub completed: u64,
+    /// Time the producer stalled waiting for credits.
+    pub stalled: Duration,
+    /// High-water mark of the round buffer.
+    pub max_queue_depth: u64,
+}
+
+/// One buffered serve round: a version plus this rank's snapshot of
+/// the file, with per-consumer-rank delivery/completion flags.
+pub struct Round<S> {
+    /// Channel-monotonic round version (gaps = dropped rounds).
+    pub version: u64,
+    /// This writer rank's slab of the round's file.
+    pub snapshot: S,
+    delivered: Vec<bool>,
+    done: Vec<bool>,
+}
+
+impl<S> Round<S> {
+    fn fully_done(&self) -> bool {
+        self.done.iter().all(|&d| d)
+    }
+}
+
+/// What [`LinkState::admit`] decided for a dropping policy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Admission {
+    /// Versions discarded from the buffer to make room.
+    pub dropped: Vec<u64>,
+    /// The incoming round's version if it was pushed, `None` if the
+    /// incoming round itself was discarded (drop-newest at 0 credits).
+    pub pushed: Option<u64>,
+}
+
+/// The per-channel flow engine: round buffer + credits + policy. `S`
+/// is the rank-local snapshot type (the Vol uses its in-memory file);
+/// keeping it generic keeps this layer below `lowfive`.
+pub struct LinkState<S> {
+    policy: ChannelPolicy,
+    nconsumers: usize,
+    rounds: VecDeque<Round<S>>,
+    credits: Credits,
+    acked: Vec<bool>,
+    attempts: u64,
+    next_version: u64,
+    /// Link counters; the Vol folds them into its `VolStats`.
+    pub stats: LinkStats,
+}
+
+impl<S> LinkState<S> {
+    /// A fresh link: full credit grant, empty buffer.
+    pub fn new(policy: ChannelPolicy, nconsumers: usize) -> LinkState<S> {
+        LinkState {
+            policy,
+            nconsumers,
+            rounds: VecDeque::new(),
+            credits: Credits::new(policy.depth),
+            acked: vec![false; nconsumers],
+            attempts: 0,
+            next_version: 0,
+            stats: LinkStats::default(),
+        }
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> ChannelPolicy {
+        self.policy
+    }
+
+    /// Current credit ledger (copy).
+    pub fn credits(&self) -> Credits {
+        self.credits
+    }
+
+    /// Count a file close against the `every` cadence. Returns whether
+    /// this close is eligible for the buffer; ineligible closes are
+    /// counted as skipped.
+    pub fn note_attempt(&mut self) -> bool {
+        self.attempts += 1;
+        let eligible = self.attempts % self.policy.every == 0;
+        if !eligible {
+            self.stats.skipped += 1;
+        }
+        eligible
+    }
+
+    /// Serve attempts so far (eligible or not).
+    pub fn attempts(&self) -> u64 {
+        self.attempts
+    }
+
+    /// Rounds in the buffer that are not yet fully consumed.
+    pub fn occupancy(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Unconditional push (blocking policies; callers drain after).
+    /// Returns the new round's version.
+    pub fn push(&mut self, snapshot: S) -> u64 {
+        self.next_version += 1;
+        let version = self.next_version;
+        let mut round = Round {
+            version,
+            snapshot,
+            delivered: vec![false; self.nconsumers],
+            done: self.acked.clone(),
+        };
+        // Ranks that already acked EOF never ask again.
+        for (j, &a) in self.acked.iter().enumerate() {
+            if a {
+                round.delivered[j] = true;
+            }
+        }
+        self.credits.take();
+        self.rounds.push_back(round);
+        self.stats.admitted += 1;
+        self.stats.max_queue_depth = self.stats.max_queue_depth.max(self.rounds.len() as u64);
+        self.pop_completed();
+        version
+    }
+
+    /// Dropping-policy admission: discard per mode when credits are
+    /// exhausted, then push (unless drop-newest discarded the incoming
+    /// round). Never blocks. Only I/O rank 0 calls this; other ranks
+    /// replay the resulting [`Plan`].
+    pub fn admit(&mut self, snapshot: S) -> Admission {
+        let mut dropped = Vec::new();
+        match self.policy.mode {
+            PolicyMode::Block => {}
+            PolicyMode::Latest => {
+                // Keep only the newest: discard everything queued and
+                // always admit the incoming round, even while a
+                // delivered round still holds a credit — the consumer
+                // must find the freshest timestep when it next asks.
+                dropped.extend(self.drop_undelivered(usize::MAX));
+                let version = self.push(snapshot);
+                return Admission { dropped, pushed: Some(version) };
+            }
+            PolicyMode::DropOldest => {
+                while self.credits.available() == 0 {
+                    let mut v = self.drop_undelivered(1);
+                    if v.is_empty() {
+                        break; // everything in flight is being read
+                    }
+                    dropped.append(&mut v);
+                }
+            }
+            PolicyMode::DropNewest => {}
+        }
+        if self.credits.available() == 0 && self.policy.mode != PolicyMode::Block {
+            self.stats.dropped += 1;
+            return Admission { dropped, pushed: None };
+        }
+        let version = self.push(snapshot);
+        Admission { dropped, pushed: Some(version) }
+    }
+
+    /// Discard up to `max` oldest undelivered rounds; returns their
+    /// versions (oldest first).
+    fn drop_undelivered(&mut self, max: usize) -> Vec<u64> {
+        let mut dropped = Vec::new();
+        while dropped.len() < max {
+            let pos = {
+                let acked = &self.acked;
+                self.rounds.iter().position(|r| {
+                    r.delivered
+                        .iter()
+                        .zip(acked.iter())
+                        .all(|(&d, &a)| a || !d)
+                })
+            };
+            let Some(pos) = pos else {
+                break;
+            };
+            let r = self.rounds.remove(pos).unwrap();
+            dropped.push(r.version);
+            self.credits.put_back();
+            self.stats.dropped += 1;
+        }
+        dropped
+    }
+
+    /// Replay a drop decided by I/O rank 0 (exact version).
+    pub fn drop_version(&mut self, version: u64) -> Result<()> {
+        let pos = self
+            .rounds
+            .iter()
+            .position(|r| r.version == version)
+            .ok_or_else(|| {
+                WilkinsError::LowFive(format!("flow plan drops unknown round v{version}"))
+            })?;
+        self.rounds.remove(pos);
+        self.credits.put_back();
+        self.stats.dropped += 1;
+        Ok(())
+    }
+
+    /// Count an incoming round discarded by drop-newest (replay side).
+    pub fn note_drop_incoming(&mut self) {
+        self.stats.dropped += 1;
+    }
+
+    /// Record producer stall time (blocked waiting for credits).
+    pub fn note_stall(&mut self, d: Duration) {
+        self.stats.stalled += d;
+    }
+
+    /// The round consumer rank `j`'s next `MetaReq` should receive:
+    /// the oldest round with `version >= min_version` not yet
+    /// delivered to `j`. Deterministic across writer ranks because
+    /// buffers are kept identical.
+    pub fn choose_deliver(&self, j: usize, min_version: u64) -> Option<u64> {
+        self.rounds
+            .iter()
+            .find(|r| r.version >= min_version && !r.delivered[j])
+            .map(|r| r.version)
+    }
+
+    /// Mark round `version` as being read by consumer rank `j`.
+    pub fn mark_delivered(&mut self, version: u64, j: usize) -> Result<()> {
+        let r = self.round_mut(version)?;
+        r.delivered[j] = true;
+        Ok(())
+    }
+
+    /// Absorb a `Done{version}` from consumer rank `j`. Returns `true`
+    /// when the round completed (every rank done) and was retired. A
+    /// Done for an already-retired round (another rank's EofAck can
+    /// complete it first) is stale and ignored.
+    pub fn mark_done(&mut self, version: u64, j: usize) -> Result<bool> {
+        let Some(r) = self.rounds.iter_mut().find(|r| r.version == version) else {
+            return Ok(false); // stale: round already retired
+        };
+        r.done[j] = true;
+        r.delivered[j] = true;
+        Ok(self.pop_completed() > 0)
+    }
+
+    /// Absorb an `EofAck` from consumer rank `j`: it will never
+    /// request again, so it counts as done for every queued round.
+    pub fn mark_eof(&mut self, j: usize) {
+        self.acked[j] = true;
+        for r in &mut self.rounds {
+            r.done[j] = true;
+            r.delivered[j] = true;
+        }
+        self.pop_completed();
+    }
+
+    /// How many consumer ranks have acknowledged EOF.
+    pub fn acked_count(&self) -> usize {
+        self.acked.iter().filter(|&&a| a).count()
+    }
+
+    /// Size of the consumer side of this link.
+    pub fn nconsumers(&self) -> usize {
+        self.nconsumers
+    }
+
+    /// The round consumer rank `j` currently has open (delivered, not
+    /// done) — where its `DataReq`s are answered from.
+    pub fn open_round(&self, j: usize) -> Option<&Round<S>> {
+        self.rounds.iter().find(|r| r.delivered[j] && !r.done[j])
+    }
+
+    /// The buffered round with this version, if still queued.
+    pub fn round(&self, version: u64) -> Option<&Round<S>> {
+        self.rounds.iter().find(|r| r.version == version)
+    }
+
+    fn round_mut(&mut self, version: u64) -> Result<&mut Round<S>> {
+        self.rounds
+            .iter_mut()
+            .find(|r| r.version == version)
+            .ok_or_else(|| WilkinsError::LowFive(format!("flow event for unknown round v{version}")))
+    }
+
+    /// Retire fully-done rounds from the front (completions form a
+    /// prefix: consumer ranks finish rounds in version order). Returns
+    /// how many rounds retired.
+    fn pop_completed(&mut self) -> usize {
+        let mut n = 0;
+        while self.rounds.front().is_some_and(Round::fully_done) {
+            self.rounds.pop_front();
+            self.credits.put_back();
+            self.stats.completed += 1;
+            n += 1;
+        }
+        n
+    }
+}
+
+/// One step of a dropping-policy section, decided by I/O rank 0 and
+/// replayed verbatim by every other writer rank. The per-consumer ops
+/// appear in rank 0's processing order, which matches each consumer
+/// rank's send order (per-pair FIFO), so replay is a sequential read
+/// of each consumer's request stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanOp {
+    /// Answer consumer rank `j`'s next `MetaReq` with round `version`.
+    Deliver { j: u64, version: u64 },
+    /// Absorb `Done{version}` from consumer rank `j`.
+    Done { j: u64, version: u64 },
+    /// Absorb `EofAck` from consumer rank `j`.
+    Eof { j: u64 },
+    /// Discard buffered round `version`.
+    Drop { version: u64 },
+    /// Push the incoming round; its version must come out as given.
+    Push { version: u64 },
+    /// Discard the incoming round (drop-newest at zero credits).
+    DropIncoming,
+}
+
+/// A full section plan: the ops of one producer file close on a
+/// dropping-policy channel.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Plan {
+    /// Section steps in rank 0's processing order.
+    pub ops: Vec<PlanOp>,
+}
+
+impl Plan {
+    /// Wire form for the I/O-communicator broadcast.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u64(self.ops.len() as u64);
+        for op in &self.ops {
+            match op {
+                PlanOp::Deliver { j, version } => {
+                    w.put_u8(0);
+                    w.put_u64(*j);
+                    w.put_u64(*version);
+                }
+                PlanOp::Done { j, version } => {
+                    w.put_u8(1);
+                    w.put_u64(*j);
+                    w.put_u64(*version);
+                }
+                PlanOp::Eof { j } => {
+                    w.put_u8(2);
+                    w.put_u64(*j);
+                }
+                PlanOp::Drop { version } => {
+                    w.put_u8(3);
+                    w.put_u64(*version);
+                }
+                PlanOp::Push { version } => {
+                    w.put_u8(4);
+                    w.put_u64(*version);
+                }
+                PlanOp::DropIncoming => w.put_u8(5),
+            }
+        }
+        w.into_vec()
+    }
+
+    /// Decode a broadcast section plan.
+    pub fn decode(buf: &[u8]) -> Result<Plan> {
+        let mut r = Reader::new(buf);
+        let n = r.get_u64()? as usize;
+        let mut ops = Vec::with_capacity(n);
+        for _ in 0..n {
+            ops.push(match r.get_u8()? {
+                0 => PlanOp::Deliver { j: r.get_u64()?, version: r.get_u64()? },
+                1 => PlanOp::Done { j: r.get_u64()?, version: r.get_u64()? },
+                2 => PlanOp::Eof { j: r.get_u64()? },
+                3 => PlanOp::Drop { version: r.get_u64()? },
+                4 => PlanOp::Push { version: r.get_u64()? },
+                5 => PlanOp::DropIncoming,
+                c => {
+                    return Err(WilkinsError::LowFive(format!("bad flow plan op code {c}")))
+                }
+            });
+        }
+        Ok(Plan { ops })
     }
 }
 
@@ -80,15 +675,151 @@ mod tests {
         assert!(FlowControl::from_io_freq(-3).is_err());
     }
 
+    /// The satellite equivalence: `io_freq` sugar lowers onto exactly
+    /// the policies the docs promise.
     #[test]
-    fn some_serves_every_nth() {
-        let f = FlowControl::Some(3);
-        let served: Vec<u64> = (1..=9).filter(|&a| f.serves_attempt(a)).collect();
-        assert_eq!(served, vec![3, 6, 9]);
+    fn io_freq_lowering_equivalence() {
+        assert_eq!(FlowControl::All.lower(), ChannelPolicy::block());
+        assert_eq!(
+            FlowControl::Some(5).lower(),
+            ChannelPolicy { mode: PolicyMode::Block, depth: 1, every: 5 }
+        );
+        assert_eq!(FlowControl::Latest.lower(), ChannelPolicy::latest());
+        // And the lowered cadence matches the legacy predicate.
+        let legacy = FlowControl::Some(3);
+        let lowered = legacy.lower();
+        let mut link: LinkState<()> = LinkState::new(lowered, 1);
+        let legacy_served: Vec<u64> =
+            (1..=9).filter(|&a| legacy.serves_attempt(a)).collect();
+        let mut lowered_served = Vec::new();
+        for _ in 1..=9 {
+            if link.note_attempt() {
+                lowered_served.push(link.attempts());
+            }
+        }
+        assert_eq!(legacy_served, lowered_served);
     }
 
     #[test]
-    fn all_serves_everything() {
-        assert!((1..=10).all(|a| FlowControl::All.serves_attempt(a)));
+    fn policy_parse_and_validate() {
+        assert_eq!(PolicyMode::parse("block").unwrap(), PolicyMode::Block);
+        assert_eq!(PolicyMode::parse("drop-oldest").unwrap(), PolicyMode::DropOldest);
+        assert_eq!(PolicyMode::parse("drop-newest").unwrap(), PolicyMode::DropNewest);
+        assert_eq!(PolicyMode::parse("latest").unwrap(), PolicyMode::Latest);
+        assert!(PolicyMode::parse("yolo").is_err());
+        assert!(ChannelPolicy::block().with_depth(0).validate().is_err());
+        assert!(ChannelPolicy::block().with_every(0).validate().is_err());
+        assert!(ChannelPolicy::block().with_depth(3).validate().is_ok());
+    }
+
+    #[test]
+    fn policy_display() {
+        assert_eq!(ChannelPolicy::block().to_string(), "block");
+        assert_eq!(ChannelPolicy::block().with_depth(3).to_string(), "block depth=3");
+        assert_eq!(
+            ChannelPolicy::latest().with_every(2).to_string(),
+            "latest every=2"
+        );
+    }
+
+    #[test]
+    fn block_credits_round_trip() {
+        let mut link: LinkState<u64> = LinkState::new(ChannelPolicy::block().with_depth(2), 2);
+        assert_eq!(link.credits().available(), 2);
+        let v1 = link.push(10);
+        assert_eq!(v1, 1);
+        assert_eq!(link.credits().available(), 1);
+        let v2 = link.push(20);
+        assert_eq!(link.credits().available(), 0);
+        assert_eq!(link.occupancy(), 2);
+        // Deliver + complete v1 on both consumer ranks.
+        assert_eq!(link.choose_deliver(0, 1), Some(1));
+        link.mark_delivered(1, 0).unwrap();
+        assert!(!link.mark_done(1, 0).unwrap());
+        assert!(link.mark_done(1, 1).unwrap());
+        assert_eq!(link.credits().available(), 1);
+        assert_eq!(link.occupancy(), 1);
+        assert_eq!(link.stats.completed, 1);
+        // The next deliverable for rank 0 is v2.
+        assert_eq!(link.choose_deliver(0, 2), Some(v2));
+    }
+
+    #[test]
+    fn latest_keeps_only_newest_undelivered() {
+        let mut link: LinkState<u64> = LinkState::new(ChannelPolicy::latest(), 1);
+        let a1 = link.admit(10);
+        assert_eq!(a1, Admission { dropped: vec![], pushed: Some(1) });
+        let a2 = link.admit(20);
+        assert_eq!(a2, Admission { dropped: vec![1], pushed: Some(2) });
+        let a3 = link.admit(30);
+        assert_eq!(a3, Admission { dropped: vec![2], pushed: Some(3) });
+        assert_eq!(link.occupancy(), 1);
+        assert_eq!(link.stats.dropped, 2);
+        // A delivered (in-flight) round is never discarded.
+        link.mark_delivered(3, 0).unwrap();
+        let a4 = link.admit(40);
+        assert_eq!(a4.dropped, Vec::<u64>::new());
+        assert_eq!(a4.pushed, Some(4));
+        assert_eq!(link.occupancy(), 2);
+    }
+
+    #[test]
+    fn drop_newest_discards_incoming() {
+        let mut link: LinkState<u64> = LinkState::new(
+            ChannelPolicy::block().with_mode(PolicyMode::DropNewest).with_depth(1),
+            1,
+        );
+        assert_eq!(link.admit(10).pushed, Some(1));
+        let a = link.admit(20);
+        assert_eq!(a, Admission { dropped: vec![], pushed: None });
+        assert_eq!(link.stats.dropped, 1);
+        assert_eq!(link.occupancy(), 1);
+        assert_eq!(link.round(1).unwrap().snapshot, 10);
+    }
+
+    #[test]
+    fn drop_oldest_frees_a_slot() {
+        let mut link: LinkState<u64> = LinkState::new(
+            ChannelPolicy::block().with_mode(PolicyMode::DropOldest).with_depth(2),
+            1,
+        );
+        link.admit(10);
+        link.admit(20);
+        let a = link.admit(30);
+        assert_eq!(a, Admission { dropped: vec![1], pushed: Some(3) });
+        assert_eq!(link.occupancy(), 2);
+        assert_eq!(link.stats.max_queue_depth, 2);
+    }
+
+    #[test]
+    fn eof_ack_retires_rounds() {
+        let mut link: LinkState<u64> = LinkState::new(ChannelPolicy::block().with_depth(3), 2);
+        link.push(1);
+        link.push(2);
+        link.mark_eof(1);
+        assert_eq!(link.occupancy(), 2); // rank 0 still owes Dones
+        link.mark_delivered(1, 0).unwrap();
+        assert!(link.mark_done(1, 0).unwrap());
+        assert!(link.mark_done(2, 0).unwrap());
+        assert_eq!(link.occupancy(), 0);
+        // Rounds pushed after an ack never wait on the acked rank.
+        let v = link.push(3);
+        assert!(link.mark_done(v, 0).unwrap());
+    }
+
+    #[test]
+    fn plan_roundtrip() {
+        let plan = Plan {
+            ops: vec![
+                PlanOp::Done { j: 1, version: 4 },
+                PlanOp::Deliver { j: 0, version: 5 },
+                PlanOp::Drop { version: 6 },
+                PlanOp::Push { version: 7 },
+                PlanOp::Eof { j: 2 },
+                PlanOp::DropIncoming,
+            ],
+        };
+        assert_eq!(Plan::decode(&plan.encode()).unwrap(), plan);
+        assert_eq!(Plan::decode(&Plan::default().encode()).unwrap(), Plan::default());
     }
 }

@@ -12,7 +12,7 @@ pub use topology::Topology;
 
 use crate::config::{PortConfig, TaskConfig, WorkflowConfig};
 use crate::error::{Result, WilkinsError};
-use crate::flow::FlowControl;
+use crate::flow::ChannelPolicy;
 use crate::lowfive::{pattern_matches, ChannelMode};
 
 /// One runnable task instance (ensemble member).
@@ -54,7 +54,9 @@ pub struct ChannelSpec {
     /// Matched dataset name patterns.
     pub dsets: Vec<String>,
     pub mode: ChannelMode,
-    pub flow: FlowControl,
+    /// Flow-control policy of this link (consumer-side `flow:` key or
+    /// its `io_freq` sugar, lowered).
+    pub flow: ChannelPolicy,
 }
 
 /// The expanded workflow graph.
@@ -200,7 +202,7 @@ struct Link {
     in_pattern: String,
     dsets: Vec<String>,
     mode: ChannelMode,
-    flow: FlowControl,
+    flow: ChannelPolicy,
 }
 
 /// Do an outport and an inport match? Filenames must be compatible and

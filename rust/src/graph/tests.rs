@@ -78,7 +78,7 @@ fn listing6_globs_and_flow() {
     assert_eq!(g.channels.len(), 1);
     let c = &g.channels[0];
     assert_eq!(c.in_pattern, "plt*.h5");
-    assert_eq!(c.flow, FlowControl::Some(2));
+    assert_eq!(c.flow, FlowControl::Some(2).lower());
     assert_eq!(c.dsets, vec!["/level_0/density"]);
     assert_eq!(g.topology(), Topology::Pipeline);
 }

@@ -8,7 +8,9 @@
 //! * [`config`] / [`configyaml`] / [`graph`] — the data-centric YAML
 //!   interface and its expansion into a task/channel graph.
 //! * [`lowfive`] / [`flow`] — the HDF5-like transport with M×N
-//!   redistribution, callbacks and flow control.
+//!   redistribution and callbacks, over the credit-based streaming
+//!   flow-control layer (per-link policies, bounded round buffers,
+//!   coordinated drop plans; see docs/flow-control.md).
 //! * [`comm`] / [`henson`] — the virtual-MPI substrate and the
 //!   Henson-like execution model.
 //! * [`net`] — the multi-process execution substrate: socket-backed
@@ -30,6 +32,10 @@ pub mod configyaml;
 pub mod coordinator;
 pub mod ensemble;
 pub mod error;
+// The flow layer is part of the documented surface (docs/flow-control.md
+// maps paper Sec. 3.6 onto it); the lint feeds the `-D warnings` gates
+// in ci/check.sh so new public items cannot land undocumented.
+#[warn(missing_docs)]
 pub mod flow;
 pub mod graph;
 pub mod henson;

@@ -20,13 +20,15 @@ use super::pattern_matches;
 const MAGIC: &[u8; 4] = b"WLF5";
 
 /// Encode a set of files (used for disk files and broadcast_files).
-pub fn encode_files(files: &HashMap<String, H5File>) -> Vec<u8> {
+/// Generic over the map's value ownership so the producer's shared
+/// `Arc<H5File>` entries encode without a deep copy.
+pub fn encode_files<F: std::borrow::Borrow<H5File>>(files: &HashMap<String, F>) -> Vec<u8> {
     let mut w = Writer::new();
     w.put_u64(files.len() as u64);
     let mut names: Vec<&String> = files.keys().collect();
     names.sort();
     for name in names {
-        let f = &files[name];
+        let f: &H5File = files[name].borrow();
         w.put_str(name);
         w.put_u64(f.attrs.len() as u64);
         for (k, v) in &f.attrs {

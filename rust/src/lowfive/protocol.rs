@@ -26,6 +26,12 @@ use super::model::{AttrValue, DatasetMeta};
 
 /// Tag used by consumer→producer requests on a channel intercomm.
 pub const TAG_REQ: u64 = 1;
+/// Wire discriminant of [`Request::DataReq`] (the first payload
+/// byte). The flow pump's selective receive peeks it to answer data
+/// reads without absorbing plan-owned protocol events, so it is
+/// named here — next to the encoding that owns it — and used by
+/// both `Request::encode` and the drain.
+pub(crate) const REQ_DATA_DISCRIMINANT: u8 = 1;
 /// Tag used by producer→consumer replies.
 pub const TAG_REP: u64 = 2;
 /// Tag used by the consumer-side driver query "more data?" (Sec. 3.5.1).
@@ -55,7 +61,7 @@ impl Request {
                 w.put_u64(*min_version);
             }
             Request::DataReq { file, dset, slab } => {
-                w.put_u8(1);
+                w.put_u8(REQ_DATA_DISCRIMINANT);
                 w.put_str(file);
                 w.put_str(dset);
                 slab.encode(&mut w);
@@ -76,7 +82,7 @@ impl Request {
                 pattern: r.get_str()?,
                 min_version: r.get_u64()?,
             },
-            1 => Request::DataReq {
+            REQ_DATA_DISCRIMINANT => Request::DataReq {
                 file: r.get_str()?,
                 dset: r.get_str()?,
                 slab: Hyperslab::decode(&mut r)?,
@@ -261,6 +267,18 @@ mod tests {
         ] {
             assert_eq!(Reply::decode(&rep.encode()).unwrap(), rep);
         }
+    }
+
+    #[test]
+    fn data_req_discriminant_is_pinned() {
+        // Sanity: the named discriminant really is the first payload
+        // byte the selective receive will peek.
+        let req = Request::DataReq {
+            file: "f".into(),
+            dset: "/d".into(),
+            slab: Hyperslab::range1d(0, 1),
+        };
+        assert_eq!(req.encode()[0], REQ_DATA_DISCRIMINANT);
     }
 
     #[test]

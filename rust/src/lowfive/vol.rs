@@ -16,16 +16,19 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::comm::{Comm, InterComm};
 use crate::error::{Result, WilkinsError};
-use crate::flow::FlowControl;
+use crate::flow::{ChannelPolicy, FlowControl, LinkState, Plan, PlanOp};
 use crate::metrics::{Recorder, SpanKind};
 
 use super::hyperslab::{copy_region, Hyperslab};
 use super::model::{AttrValue, DType, DatasetMeta, H5File};
-use super::protocol::{FileMeta, Reply, Request, TAG_REP, TAG_REQ};
+use super::protocol::{
+    FileMeta, Reply, Request, REQ_DATA_DISCRIMINANT, TAG_REP, TAG_REQ,
+};
 use super::{filemode, pattern_matches};
 
 /// Transport mode of a channel (YAML `memory: 1` vs `file: 1`).
@@ -35,23 +38,23 @@ pub enum ChannelMode {
     File,
 }
 
-/// Producer-side channel to one consumer task.
+/// Producer-side channel to one consumer task. Versions are monotonic
+/// per channel (not per file) so globbed multi-file streams like
+/// plt*.h5 stay ordered; the round buffer, credit window and drop
+/// accounting live in the channel's [`LinkState`] (the flow layer).
 pub struct OutChannel {
     pub intercomm: Option<InterComm>,
     pub pattern: String,
     pub mode: ChannelMode,
-    /// Flow-control strategy for this channel (Sec. 3.6).
-    pub flow: FlowControl,
-    /// Serve attempts on this channel (== producer timesteps seen).
-    attempts: u64,
-    /// Completed serves on this channel; the next serve's version is
-    /// `serves + 1`. Monotonic per channel (not per file) so globbed
-    /// multi-file streams like plt*.h5 stay ordered.
-    serves: u64,
-    /// Remote (consumer) ranks that acknowledged EOF or quit early.
-    acked: Vec<bool>,
-    /// Requests pulled out of the mailbox that belong to a future
-    /// serve round (fast consumer re-opened early).
+    /// Flow engine: bounded round buffer + credits (Sec. 3.6).
+    /// Round snapshots are `Arc`s of the producer's in-memory file:
+    /// admission is O(1), and the producer's next write to the file
+    /// copy-on-writes (`Arc::make_mut`) only while a buffered round
+    /// still references the old bytes.
+    link: LinkState<Arc<H5File>>,
+    /// MetaReqs pulled out of the mailbox that no buffered round can
+    /// answer yet (fast consumer re-opened early, or everything it
+    /// could read was dropped).
     deferred: VecDeque<(usize, Request)>,
 }
 
@@ -62,21 +65,27 @@ impl OutChannel {
             intercomm,
             pattern: pattern.to_string(),
             mode,
-            flow: FlowControl::All,
-            attempts: 0,
-            serves: 0,
-            acked: vec![false; remote],
+            link: LinkState::new(ChannelPolicy::block(), remote),
             deferred: VecDeque::new(),
         }
     }
 
-    pub fn with_flow(mut self, flow: FlowControl) -> OutChannel {
-        self.flow = flow;
+    /// Set the channel's flow policy (resets the link's round buffer;
+    /// call before the first serve).
+    pub fn with_policy(mut self, policy: ChannelPolicy) -> OutChannel {
+        let remote = self.intercomm.as_ref().map_or(0, |ic| ic.remote_size());
+        self.link = LinkState::new(policy, remote);
         self
     }
 
-    fn acked_count(&self) -> usize {
-        self.acked.iter().filter(|&&a| a).count()
+    /// Legacy sugar: lower a three-mode strategy onto its policy.
+    pub fn with_flow(self, flow: FlowControl) -> OutChannel {
+        self.with_policy(flow.lower())
+    }
+
+    /// The channel's flow policy.
+    pub fn policy(&self) -> ChannelPolicy {
+        self.link.policy()
     }
 }
 
@@ -152,9 +161,12 @@ pub struct Callbacks {
 #[derive(Debug, Default, Clone)]
 pub struct VolStats {
     pub files_served: u64,
-    /// Flow-control skips (the Some/Latest strategies dropping a
-    /// timestep on a channel).
+    /// Flow-control cadence skips (`every`-gated closes that never
+    /// reached a channel's round buffer).
     pub serves_skipped: u64,
+    /// Rounds discarded by a dropping flow policy (latest /
+    /// drop-oldest / drop-newest) after admission pressure.
+    pub serves_dropped: u64,
     /// Default serves suppressed by a before-close callback (custom
     /// I/O patterns like Nyx's double close).
     pub serves_suppressed: u64,
@@ -163,6 +175,11 @@ pub struct VolStats {
     pub bytes_read: u64,
     /// Time the producer spent blocked inside serve rounds.
     pub serve_wait: Duration,
+    /// Time the producer stalled waiting for flow credits (subset of
+    /// `serve_wait` under blocking policies).
+    pub stall_wait: Duration,
+    /// High-water mark of any channel's round buffer.
+    pub max_queue_depth: u64,
     /// Time the consumer spent blocked in file_open.
     pub open_wait: Duration,
 }
@@ -176,8 +193,9 @@ pub struct Vol {
     io_comm: Option<Comm>,
     out_channels: Vec<OutChannel>,
     in_channels: Vec<InChannel>,
-    /// Producer-side in-memory files.
-    files: HashMap<String, H5File>,
+    /// Producer-side in-memory files (shared with buffered serve
+    /// rounds; mutation copy-on-writes via [`Arc::make_mut`]).
+    files: HashMap<String, Arc<H5File>>,
     /// Consumer-side opened files.
     consumer_files: HashMap<String, ConsumerFile>,
     /// Per-file close counts and the global counter (Listing 5).
@@ -185,6 +203,9 @@ pub struct Vol {
     pub file_close_counter: u64,
     /// Monotonic version for file-mode disk writes.
     disk_version: u64,
+    /// File-mode serves (disk writes) completed, folded into
+    /// `files_served` alongside the memory channels' completions.
+    disk_serves: u64,
     /// Dataset writes seen (drives Listing-3-style actions).
     dataset_write_counter: u64,
     callbacks: Callbacks,
@@ -219,6 +240,7 @@ impl Vol {
             closes: HashMap::new(),
             file_close_counter: 0,
             disk_version: 0,
+            disk_serves: 0,
             dataset_write_counter: 0,
             callbacks: Callbacks::default(),
             suppress_serve: false,
@@ -394,7 +416,7 @@ impl Vol {
 
     /// Create (or truncate) an in-memory file for writing.
     pub fn file_create(&mut self, name: &str) -> Result<()> {
-        self.files.insert(name.to_string(), H5File::new(name));
+        self.files.insert(name.to_string(), Arc::new(H5File::new(name)));
         Ok(())
     }
 
@@ -448,12 +470,18 @@ impl Vol {
     fn file_mut(&mut self, name: &str) -> Result<&mut H5File> {
         self.files
             .get_mut(name)
+            // Copy-on-write: clones the file only when a buffered
+            // serve round still shares it (pipelining depth > 1 or a
+            // dropping policy); the default synchronous path mutates
+            // in place.
+            .map(Arc::make_mut)
             .ok_or_else(|| WilkinsError::LowFive(format!("file {name} not open for writing")))
     }
 
     pub fn file(&self, name: &str) -> Result<&H5File> {
         self.files
             .get(name)
+            .map(Arc::as_ref)
             .ok_or_else(|| WilkinsError::LowFive(format!("file {name} not open for writing")))
     }
 
@@ -498,6 +526,8 @@ impl Vol {
     /// metadata solo, then every rank needs a consistent view).
     pub fn broadcast_files(&mut self) -> Result<()> {
         let payload = if self.local.rank() == 0 {
+            // `encode_files` borrows through the `Arc`s: no deep copy
+            // of dataset bytes just to serialize them.
             Some(filemode::encode_files(&self.files))
         } else {
             None
@@ -506,14 +536,16 @@ impl Vol {
         if self.local.rank() != 0 {
             let files = filemode::decode_files(&bytes)?;
             for (name, file) in files {
-                self.files.insert(name, file);
+                self.files.insert(name, Arc::new(file));
             }
         }
         Ok(())
     }
 
-    /// Serve one file: run a serve round on each matching out-channel.
-    /// Only I/O ranks participate.
+    /// Serve one file: admit one round per matching out-channel,
+    /// subject to each channel's flow policy (the decision lives in
+    /// [`crate::flow::LinkState`], not here). Only I/O ranks
+    /// participate.
     fn serve_file(&mut self, name: &str) -> Result<()> {
         if !self.files.contains_key(name) {
             return Ok(()); // nothing buffered (non-writer rank)
@@ -530,6 +562,7 @@ impl Vol {
             self.disk_version += 1;
             let v = self.disk_version;
             self.write_disk_file(name, v)?;
+            self.disk_serves += 1;
         }
         let mem_idx: Vec<usize> = (0..self.out_channels.len())
             .filter(|&i| {
@@ -538,179 +571,347 @@ impl Vol {
                     && pattern_matches(&self.out_channels[i].pattern, name)
             })
             .collect();
-        let mut any_served = mode_file;
         for idx in mem_idx {
-            self.out_channels[idx].attempts += 1;
-            if self.channel_should_serve(idx, name)? {
-                let version = self.out_channels[idx].serves + 1;
-                self.serve_channel(idx, name, version)?;
-                self.out_channels[idx].serves = version;
-                any_served = true;
-            } else {
-                self.stats.serves_skipped += 1;
+            if !self.out_channels[idx].link.note_attempt() {
+                continue; // `every`-gated close (counted by the link)
             }
-        }
-        if any_served {
-            self.stats.files_served += 1;
+            let snapshot = Arc::clone(self.files.get(name).unwrap());
+            self.enqueue_round(idx, snapshot)?;
         }
         self.stats.serve_wait += t0.elapsed();
         self.record_span(SpanKind::Transfer, &format!("serve {name}"), t0);
+        self.sync_flow_stats();
         Ok(())
     }
 
-    /// Per-channel flow-control decision for this serve attempt.
-    /// Count-based strategies are deterministic across writer ranks;
-    /// *Latest* is decided by I/O rank 0's pending-request probe and
-    /// broadcast so the writers stay in lockstep.
-    fn channel_should_serve(&mut self, idx: usize, _name: &str) -> Result<bool> {
-        let attempt = self.out_channels[idx].attempts;
-        match self.out_channels[idx].flow {
-            FlowControl::All => Ok(true),
-            FlowControl::Some(n) => Ok(attempt % n == 0),
-            FlowControl::Latest => {
-                let io = self
-                    .io_comm
-                    .as_ref()
-                    .ok_or_else(|| {
-                        WilkinsError::LowFive("latest flow control on non-io rank".into())
-                    })?
-                    .clone();
-                let decision = if io.rank() == 0 {
-                    let ch = &self.out_channels[idx];
-                    let pending = !ch.deferred.is_empty()
-                        || ch.intercomm.as_ref().is_some_and(|ic| ic.iprobe(TAG_REQ));
-                    let byte = [u8::from(pending)];
-                    io.bcast(0, Some(&byte))?[0] == 1
-                } else {
-                    io.bcast(0, None)?[0] == 1
-                };
-                Ok(decision)
-            }
+    /// Fold the per-link flow counters into this rank's `VolStats`
+    /// (the links are the single source of truth).
+    ///
+    /// `files_served` counts rounds actually *consumed*: the busiest
+    /// memory channel's completions (channels at different cadences
+    /// overlap on the same closes, so summing would double-count) plus
+    /// file-mode disk writes. Rounds a dropping policy discarded never
+    /// count — they are `serves_dropped`.
+    fn sync_flow_stats(&mut self) {
+        let mut skipped = 0;
+        let mut dropped = 0;
+        let mut completed = 0;
+        let mut stalled = Duration::ZERO;
+        let mut maxq = 0;
+        for ch in &self.out_channels {
+            skipped += ch.link.stats.skipped;
+            dropped += ch.link.stats.dropped;
+            completed = completed.max(ch.link.stats.completed);
+            stalled += ch.link.stats.stalled;
+            maxq = maxq.max(ch.link.stats.max_queue_depth);
+        }
+        self.stats.files_served = self.disk_serves.max(completed);
+        self.stats.serves_skipped = skipped;
+        self.stats.serves_dropped = dropped;
+        self.stats.stall_wait = stalled;
+        self.stats.max_queue_depth = maxq;
+    }
+
+    /// Admit one round on one channel per its policy.
+    ///
+    /// Blocking policies need no cross-rank coordination (no drops;
+    /// deliveries are a pure function of the buffer, which every
+    /// writer rank mutates through the identical push sequence).
+    /// Dropping policies are coordinated by I/O rank 0's section plan
+    /// (see the [`crate::flow`] module docs).
+    fn enqueue_round(&mut self, idx: usize, snapshot: Arc<H5File>) -> Result<()> {
+        if self.out_channels[idx].link.policy().mode.drops() {
+            self.enqueue_dropping(idx, snapshot)
+        } else {
+            self.enqueue_block(idx, snapshot)
         }
     }
 
-    /// One serve round on one channel: answer requests until every
-    /// remote rank has sent Done{version} (or already acked EOF).
-    fn serve_channel(&mut self, idx: usize, name: &str, version: u64) -> Result<()> {
-        let total = self.out_channels[idx]
-            .intercomm
+    fn enqueue_block(&mut self, idx: usize, snapshot: Arc<H5File>) -> Result<()> {
+        self.pump_available(idx, None)?;
+        self.out_channels[idx].link.push(snapshot);
+        self.answer_deferred(idx, None)?;
+        let target = self.out_channels[idx].link.policy().depth.saturating_sub(1);
+        if self.out_channels[idx].link.occupancy() > target {
+            // Out of credits: stall until enough rounds complete.
+            let t0 = Instant::now();
+            while self.out_channels[idx].link.occupancy() > target {
+                self.pump_one_blocking(idx)?;
+            }
+            self.out_channels[idx].link.note_stall(t0.elapsed());
+            self.record_span(SpanKind::Stall, "flow stall", t0);
+        }
+        Ok(())
+    }
+
+    fn enqueue_dropping(&mut self, idx: usize, snapshot: Arc<H5File>) -> Result<()> {
+        let io = self
+            .io_comm
             .as_ref()
-            .map_or(0, |ic| ic.remote_size());
-        let mut dones = vec![false; total];
-        for (r, acked) in self.out_channels[idx].acked.iter().enumerate() {
-            if *acked {
-                dones[r] = true;
+            .ok_or_else(|| {
+                WilkinsError::LowFive("dropping flow policy on non-io rank".into())
+            })?
+            .clone();
+        if io.rank() == 0 {
+            let mut plan = Plan::default();
+            self.pump_available(idx, Some(&mut plan))?;
+            let admission = self.out_channels[idx].link.admit(snapshot);
+            for v in &admission.dropped {
+                plan.ops.push(PlanOp::Drop { version: *v });
             }
+            match admission.pushed {
+                Some(v) => plan.ops.push(PlanOp::Push { version: v }),
+                None => plan.ops.push(PlanOp::DropIncoming),
+            }
+            self.answer_deferred(idx, Some(&mut plan))?;
+            if io.size() > 1 {
+                io.bcast(0, Some(&plan.encode()))?;
+            }
+        } else {
+            let bytes = io.bcast(0, None)?;
+            let plan = Plan::decode(&bytes)?;
+            self.replay_plan(idx, snapshot, plan)?;
         }
-        // Handle deferred requests from earlier rounds first.
-        let mut pending: VecDeque<(usize, Request)> =
-            std::mem::take(&mut self.out_channels[idx].deferred);
-        while dones.iter().any(|d| !d) {
-            let (src, req) = match pending.pop_front() {
-                Some(x) => x,
-                None => {
-                    let ic = self.out_channels[idx].intercomm.as_ref().unwrap();
-                    let (src, bytes) = ic.recv_any(TAG_REQ)?;
-                    (src, Request::decode(&bytes)?)
-                }
+        Ok(())
+    }
+
+    /// Absorb every request already waiting in the mailbox for channel
+    /// `idx` (non-blocking). With `plan`, record the state-mutating
+    /// events so other writer ranks can replay them.
+    fn pump_available(&mut self, idx: usize, mut plan: Option<&mut Plan>) -> Result<()> {
+        loop {
+            let Some(ic) = self.out_channels[idx].intercomm.clone() else {
+                return Ok(());
             };
-            match req {
-                Request::MetaReq { ref pattern, min_version } => {
-                    if min_version > version {
-                        // Consumer already saw this round; keep for next.
-                        self.out_channels[idx]
-                            .deferred
-                            .push_back((src, req.clone()));
-                        continue;
+            let Some((src, bytes)) = ic.try_recv_any(TAG_REQ) else {
+                return Ok(());
+            };
+            let req = Request::decode(&bytes)?;
+            self.handle_request(idx, src, req, plan.as_deref_mut())?;
+        }
+    }
+
+    /// Block for one request on channel `idx` and process it.
+    fn pump_one_blocking(&mut self, idx: usize) -> Result<()> {
+        let ic = self.out_channels[idx].intercomm.as_ref().unwrap().clone();
+        let (src, bytes) = ic.recv_any(TAG_REQ)?;
+        let req = Request::decode(&bytes)?;
+        self.handle_request(idx, src, req, None)
+    }
+
+    /// Process one consumer request against channel `idx`.
+    fn handle_request(
+        &mut self,
+        idx: usize,
+        src: usize,
+        req: Request,
+        plan: Option<&mut Plan>,
+    ) -> Result<()> {
+        match req {
+            Request::MetaReq { pattern, min_version } => {
+                match self.out_channels[idx].link.choose_deliver(src, min_version) {
+                    Some(v) => {
+                        self.deliver_meta(idx, src, v)?;
+                        if let Some(p) = plan {
+                            p.ops.push(PlanOp::Deliver { j: src as u64, version: v });
+                        }
                     }
-                    let _ = pattern;
-                    let meta = self.local_file_meta(name, version)?;
-                    let rep = Reply::Meta(meta).encode();
-                    let ic = self.out_channels[idx].intercomm.as_ref().unwrap();
-                    ic.send_owned(src, TAG_REP, rep);
+                    // No buffered round can answer yet: defer until a
+                    // later push (or the EOF handshake).
+                    None => self.out_channels[idx]
+                        .deferred
+                        .push_back((src, Request::MetaReq { pattern, min_version })),
                 }
-                Request::DataReq { ref file, ref dset, ref slab } => {
-                    if file != name {
-                        return Err(WilkinsError::LowFive(format!(
-                            "data request for {file} during serve of {name}"
-                        )));
-                    }
-                    let (rep, nbytes) = self.encode_data_reply(name, dset, slab)?;
-                    self.stats.bytes_served += nbytes as u64;
-                    let ic = self.out_channels[idx].intercomm.as_ref().unwrap();
-                    ic.send_owned(src, TAG_REP, rep);
+            }
+            Request::DataReq { ref file, ref dset, ref slab } => {
+                self.answer_data_req(idx, src, file, dset, slab)?;
+            }
+            Request::Done { version } => {
+                self.out_channels[idx].link.mark_done(version, src)?;
+                if let Some(p) = plan {
+                    p.ops.push(PlanOp::Done { j: src as u64, version });
                 }
-                Request::Done { version: v } => {
-                    if v != version {
-                        return Err(WilkinsError::LowFive(format!(
-                            "Done for version {v} during serve of version {version}"
-                        )));
-                    }
-                    dones[src] = true;
-                }
-                Request::EofAck => {
-                    // Consumer quit early: never expect Done from it.
-                    self.out_channels[idx].acked[src] = true;
-                    dones[src] = true;
+            }
+            Request::EofAck => {
+                self.out_channels[idx].link.mark_eof(src);
+                if let Some(p) = plan {
+                    p.ops.push(PlanOp::Eof { j: src as u64 });
                 }
             }
         }
         Ok(())
     }
 
-    fn local_file_meta(&self, name: &str, version: u64) -> Result<FileMeta> {
-        let f = self.file(name)?;
-        Ok(FileMeta {
-            filename: name.to_string(),
-            version,
-            attrs: f.attrs.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
-            datasets: f
-                .datasets
-                .values()
-                .map(|d| {
-                    (
-                        d.meta.clone(),
-                        d.blocks.iter().map(|b| b.slab.clone()).collect(),
-                    )
-                })
-                .collect(),
-        })
+    /// Answer a MetaReq with buffered round `version` and mark it
+    /// delivered to consumer rank `src`.
+    fn deliver_meta(&mut self, idx: usize, src: usize, version: u64) -> Result<()> {
+        let rep = {
+            let round = self.out_channels[idx].link.round(version).ok_or_else(|| {
+                WilkinsError::LowFive(format!("deliver of unknown round v{version}"))
+            })?;
+            Reply::Meta(snapshot_meta(&round.snapshot, version)).encode()
+        };
+        let ic = self.out_channels[idx].intercomm.as_ref().unwrap().clone();
+        ic.send_owned(src, TAG_REP, rep);
+        self.out_channels[idx].link.mark_delivered(version, src)
     }
 
-    /// Encode a Reply::Data wire message for the blocks intersecting
-    /// `want`, extracting each intersection *directly into* the wire
-    /// buffer (§Perf iteration 2: no staging buffer per block).
-    /// Returns (encoded reply, payload bytes).
-    fn encode_data_reply(
-        &self,
+    /// Answer a DataReq from the round consumer rank `src` has open.
+    fn answer_data_req(
+        &mut self,
+        idx: usize,
+        src: usize,
         file: &str,
         dset: &str,
-        want: &Hyperslab,
-    ) -> Result<(Vec<u8>, usize)> {
-        let d = self.file(file)?.dataset(dset)?;
-        let esize = d.meta.dtype.size_bytes();
-        let inters: Vec<(&super::model::OwnedBlock, Hyperslab)> = d
-            .blocks
-            .iter()
-            .filter_map(|b| b.slab.intersect(want).map(|i| (b, i)))
-            .collect();
-        let payload: usize = inters
-            .iter()
-            .map(|(_, i)| i.element_count() as usize * esize + 64)
-            .sum();
-        let mut w = crate::comm::wire::Writer::with_capacity(payload + 16);
-        w.put_u8(1); // Reply::Data discriminant
-        w.put_u64(inters.len() as u64);
-        let mut nbytes = 0;
-        for (b, inter) in inters {
-            inter.encode(&mut w);
-            let n = inter.element_count() as usize * esize;
-            nbytes += n;
-            w.put_bytes_via(n, |dst| {
-                copy_region(&b.slab, &b.data, &inter, dst, &inter, esize);
-            });
+        slab: &Hyperslab,
+    ) -> Result<()> {
+        let (rep, nbytes) = {
+            let round = self.out_channels[idx].link.open_round(src).ok_or_else(|| {
+                WilkinsError::LowFive(format!(
+                    "data request for {file} from rank {src} with no open round"
+                ))
+            })?;
+            if round.snapshot.name != file {
+                return Err(WilkinsError::LowFive(format!(
+                    "data request for {file} against round of {}",
+                    round.snapshot.name
+                )));
+            }
+            encode_data_reply(&round.snapshot, dset, slab)?
+        };
+        self.stats.bytes_served += nbytes as u64;
+        let ic = self.out_channels[idx].intercomm.as_ref().unwrap().clone();
+        ic.send_owned(src, TAG_REP, rep);
+        Ok(())
+    }
+
+    /// Re-examine deferred MetaReqs: a newly pushed round may satisfy
+    /// them. Answered requests are recorded into `plan` when given.
+    fn answer_deferred(&mut self, idx: usize, mut plan: Option<&mut Plan>) -> Result<()> {
+        let mut keep = VecDeque::new();
+        while let Some((src, req)) = self.out_channels[idx].deferred.pop_front() {
+            let min_version = match &req {
+                Request::MetaReq { min_version, .. } => *min_version,
+                _ => {
+                    keep.push_back((src, req));
+                    continue;
+                }
+            };
+            match self.out_channels[idx].link.choose_deliver(src, min_version) {
+                Some(v) => {
+                    self.deliver_meta(idx, src, v)?;
+                    if let Some(p) = plan.as_deref_mut() {
+                        p.ops.push(PlanOp::Deliver { j: src as u64, version: v });
+                    }
+                }
+                None => keep.push_back((src, req)),
+            }
         }
-        Ok((w.into_vec(), nbytes))
+        self.out_channels[idx].deferred = keep;
+        Ok(())
+    }
+
+    /// Replay I/O rank 0's section plan against our own mailbox: apply
+    /// buffer mutations verbatim and consume exactly the planned
+    /// protocol events from each consumer rank's (FIFO) request
+    /// stream, answering our own DataReqs along the way. See the
+    /// [`crate::flow`] module docs for why this keeps writer ranks'
+    /// buffers bit-identical.
+    fn replay_plan(&mut self, idx: usize, snapshot: Arc<H5File>, plan: Plan) -> Result<()> {
+        let mut snapshot = Some(snapshot);
+        self.drain_data_reqs(idx)?;
+        for op in plan.ops {
+            match op {
+                PlanOp::Drop { version } => {
+                    self.out_channels[idx].link.drop_version(version)?;
+                }
+                PlanOp::Push { version } => {
+                    let snap = snapshot.take().ok_or_else(|| {
+                        WilkinsError::LowFive("flow plan pushes twice".into())
+                    })?;
+                    let v = self.out_channels[idx].link.push(snap);
+                    if v != version {
+                        return Err(WilkinsError::LowFive(format!(
+                            "flow plan version skew: local v{v}, plan v{version}"
+                        )));
+                    }
+                }
+                PlanOp::DropIncoming => {
+                    snapshot.take();
+                    self.out_channels[idx].link.note_drop_incoming();
+                }
+                PlanOp::Deliver { j, version } => {
+                    self.replay_expect(idx, j as usize, Expect::Meta(version))?;
+                }
+                PlanOp::Done { j, version } => {
+                    self.replay_expect(idx, j as usize, Expect::Done(version))?;
+                }
+                PlanOp::Eof { j } => {
+                    self.replay_expect(idx, j as usize, Expect::Eof)?;
+                }
+            }
+        }
+        self.drain_data_reqs(idx)?;
+        Ok(())
+    }
+
+    /// Consume consumer rank `j`'s request stream up to (and
+    /// including) the expected protocol event, answering DataReqs
+    /// encountered on the way.
+    fn replay_expect(&mut self, idx: usize, j: usize, expect: Expect) -> Result<()> {
+        loop {
+            let ic = self.out_channels[idx].intercomm.as_ref().unwrap().clone();
+            let (_, bytes) = ic.recv(j, TAG_REQ)?;
+            let req = Request::decode(&bytes)?;
+            match (req, expect) {
+                (Request::DataReq { ref file, ref dset, ref slab }, _) => {
+                    self.answer_data_req(idx, j, file, dset, slab)?;
+                }
+                (Request::MetaReq { .. }, Expect::Meta(v)) => {
+                    return self.deliver_meta(idx, j, v);
+                }
+                (Request::Done { version }, Expect::Done(v)) if version == v => {
+                    self.out_channels[idx].link.mark_done(v, j)?;
+                    return Ok(());
+                }
+                (Request::EofAck, Expect::Eof) => {
+                    self.out_channels[idx].link.mark_eof(j);
+                    return Ok(());
+                }
+                (other, _) => {
+                    return Err(WilkinsError::LowFive(format!(
+                        "flow plan replay: expected {expect:?} from rank {j}, got {other:?}"
+                    )));
+                }
+            }
+        }
+    }
+
+    /// Answer every DataReq already queued for channel `idx` without
+    /// absorbing any plan-owned protocol event (payload-discriminant
+    /// selective receive). Lets non-leader writer ranks keep consumer
+    /// reads flowing between coordinated sections.
+    fn drain_data_reqs(&mut self, idx: usize) -> Result<()> {
+        loop {
+            let Some(ic) = self.out_channels[idx].intercomm.clone() else {
+                return Ok(());
+            };
+            let Some((src, bytes)) =
+                ic.try_recv_where(TAG_REQ, |p| p.first() == Some(&REQ_DATA_DISCRIMINANT))
+            else {
+                return Ok(());
+            };
+            match Request::decode(&bytes)? {
+                Request::DataReq { ref file, ref dset, ref slab } => {
+                    self.answer_data_req(idx, src, file, dset, slab)?;
+                }
+                other => {
+                    return Err(WilkinsError::LowFive(format!(
+                        "selective DataReq receive returned {other:?}"
+                    )));
+                }
+            }
+        }
     }
 
     fn write_disk_file(&mut self, name: &str, version: u64) -> Result<()> {
@@ -739,8 +940,11 @@ impl Vol {
         Ok(())
     }
 
-    /// Producer finalize: signal EOF on all out-channels and wait for
-    /// every consumer rank to acknowledge. Idempotent.
+    /// Producer finalize: flush every channel's round buffer (each
+    /// buffered round is delivered and completed — dropping policies
+    /// stop dropping at shutdown so consumers get the freshest data),
+    /// then signal EOF and wait for every consumer rank to
+    /// acknowledge. Idempotent.
     pub fn finalize_producer(&mut self) -> Result<()> {
         if !self.is_io_rank() {
             return Ok(());
@@ -757,20 +961,34 @@ impl Vol {
                     if self.out_channels[idx].intercomm.is_none() {
                         continue;
                     }
-                    let mut pending =
-                        std::mem::take(&mut self.out_channels[idx].deferred);
-                    while self.out_channels[idx].acked_count()
-                        < self.out_channels[idx].acked.len()
+                    // 1. Flush: every buffered round must complete
+                    //    before EOF. Buffer mutations during flush are
+                    //    completions only, so writer ranks stay
+                    //    consistent without a section plan.
+                    while self.out_channels[idx].link.occupancy() > 0 {
+                        self.answer_deferred(idx, None)?;
+                        if self.out_channels[idx].link.occupancy() == 0 {
+                            break;
+                        }
+                        self.pump_one_blocking(idx)?;
+                    }
+                    // 2. EOF handshake: answer remaining open requests
+                    //    with Eof until every consumer rank acked.
+                    while self.out_channels[idx].link.acked_count()
+                        < self.out_channels[idx].link.nconsumers()
                     {
-                        let (src, req) = match pending.pop_front() {
-                            Some(x) => x,
-                            None => {
-                                let ic =
-                                    self.out_channels[idx].intercomm.as_ref().unwrap();
-                                let (src, bytes) = ic.recv_any(TAG_REQ)?;
-                                (src, Request::decode(&bytes)?)
-                            }
-                        };
+                        let (src, req) =
+                            match self.out_channels[idx].deferred.pop_front() {
+                                Some(x) => x,
+                                None => {
+                                    let ic = self.out_channels[idx]
+                                        .intercomm
+                                        .as_ref()
+                                        .unwrap();
+                                    let (src, bytes) = ic.recv_any(TAG_REQ)?;
+                                    (src, Request::decode(&bytes)?)
+                                }
+                            };
                         match req {
                             Request::MetaReq { .. } => {
                                 let ic =
@@ -778,7 +996,7 @@ impl Vol {
                                 ic.send(src, TAG_REP, &Reply::Eof.encode());
                             }
                             Request::EofAck => {
-                                self.out_channels[idx].acked[src] = true;
+                                self.out_channels[idx].link.mark_eof(src);
                             }
                             Request::Done { .. } => {} // stale, ignore
                             Request::DataReq { .. } => {
@@ -791,6 +1009,7 @@ impl Vol {
                 }
             }
         }
+        self.sync_flow_stats();
         Ok(())
     }
 
@@ -1113,4 +1332,69 @@ impl Vol {
     pub fn has_live_inputs(&self) -> bool {
         self.in_channels.iter().any(|c| !c.exhausted)
     }
+}
+
+/// The protocol event a plan replay is waiting for.
+#[derive(Debug, Clone, Copy)]
+enum Expect {
+    /// A MetaReq, to be answered with this round version.
+    Meta(u64),
+    /// A Done for this round version.
+    Done(u64),
+    /// An EofAck.
+    Eof,
+}
+
+/// One writer rank's metadata view of a buffered round snapshot.
+fn snapshot_meta(f: &H5File, version: u64) -> FileMeta {
+    FileMeta {
+        filename: f.name.clone(),
+        version,
+        attrs: f.attrs.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+        datasets: f
+            .datasets
+            .values()
+            .map(|d| {
+                (
+                    d.meta.clone(),
+                    d.blocks.iter().map(|b| b.slab.clone()).collect(),
+                )
+            })
+            .collect(),
+    }
+}
+
+/// Encode a Reply::Data wire message for the blocks of `snapshot`
+/// intersecting `want`, extracting each intersection *directly into*
+/// the wire buffer (§Perf iteration 2: no staging buffer per block).
+/// Returns (encoded reply, payload bytes).
+fn encode_data_reply(
+    snapshot: &H5File,
+    dset: &str,
+    want: &Hyperslab,
+) -> Result<(Vec<u8>, usize)> {
+    let d = snapshot.dataset(dset)?;
+    let esize = d.meta.dtype.size_bytes();
+    let inters: Vec<(&super::model::OwnedBlock, Hyperslab)> = d
+        .blocks
+        .iter()
+        .filter_map(|b| b.slab.intersect(want).map(|i| (b, i)))
+        .collect();
+    let payload: usize = inters
+        .iter()
+        .map(|(_, i)| i.element_count() as usize * esize + 64)
+        .sum();
+    let mut w = crate::comm::wire::Writer::with_capacity(payload + 16);
+    w.put_u8(1); // Reply::Data discriminant
+    w.put_u64(inters.len() as u64);
+    let mut nbytes = 0;
+    for (b, inter) in inters {
+        inter.encode(&mut w);
+        let n = inter.element_count() as usize * esize;
+        nbytes += n;
+        w.put_bytes_via(n, |dst| {
+            copy_region(&b.slab, &b.data, &inter, dst, &inter, esize);
+        });
+    }
+    Ok((w.into_vec(), nbytes))
 }

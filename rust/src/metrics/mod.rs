@@ -22,6 +22,10 @@ pub enum SpanKind {
     Idle,
     /// Data transfer (orange bars).
     Transfer,
+    /// Producer stalled waiting for flow-control credits (Sec. 3.6);
+    /// a distinguished sub-kind of idle so backpressure is visible in
+    /// the Gantt without reading counters.
+    Stall,
 }
 
 impl SpanKind {
@@ -30,6 +34,7 @@ impl SpanKind {
             SpanKind::Compute => '#',
             SpanKind::Idle => '.',
             SpanKind::Transfer => '=',
+            SpanKind::Stall => 'x',
         }
     }
 
@@ -38,6 +43,7 @@ impl SpanKind {
             SpanKind::Compute => "compute",
             SpanKind::Idle => "idle",
             SpanKind::Transfer => "transfer",
+            SpanKind::Stall => "stall",
         }
     }
 }
@@ -93,21 +99,24 @@ impl Recorder {
         self.spans.lock().unwrap().clone()
     }
 
-    /// Total seconds per kind for one rank.
-    pub fn totals(&self, rank: usize) -> (f64, f64, f64) {
+    /// Total seconds per kind for one rank:
+    /// (compute, idle, transfer, stall).
+    pub fn totals(&self, rank: usize) -> (f64, f64, f64, f64) {
         let spans = self.spans.lock().unwrap();
         let mut c = 0.0;
         let mut i = 0.0;
         let mut t = 0.0;
+        let mut st = 0.0;
         for s in spans.iter().filter(|s| s.rank == rank) {
             let d = s.end - s.start;
             match s.kind {
                 SpanKind::Compute => c += d,
                 SpanKind::Idle => i += d,
                 SpanKind::Transfer => t += d,
+                SpanKind::Stall => st += d,
             }
         }
-        (c, i, t)
+        (c, i, t, st)
     }
 
     /// CSV export: rank,kind,label,start,end.
@@ -158,10 +167,11 @@ impl Recorder {
 /// The shared Gantt header line (legend + scale).
 fn gantt_header(label: &str, width: usize, tmax: f64) -> String {
     format!(
-        "{label}: {width} cols = {tmax:.3}s  [{}=compute {}=idle {}=transfer]\n",
+        "{label}: {width} cols = {tmax:.3}s  [{}=compute {}=idle {}=transfer {}=stall]\n",
         SpanKind::Compute.glyph(),
         SpanKind::Idle.glyph(),
-        SpanKind::Transfer.glyph()
+        SpanKind::Transfer.glyph(),
+        SpanKind::Stall.glyph()
     )
 }
 
@@ -184,6 +194,9 @@ fn paint_gantt_row(
             SpanKind::Compute => 1,
             SpanKind::Idle => 2,
             SpanKind::Transfer => 3,
+            // Stalls paint over everything: backpressure is the
+            // signal these charts exist to show.
+            SpanKind::Stall => 4,
         };
         for x in a..b.max(a + 1).min(width) {
             if p >= prio[x] {
@@ -329,10 +342,11 @@ mod tests {
         rec.record(0, SpanKind::Compute, "a", t0, t0 + Duration::from_millis(10));
         rec.record(0, SpanKind::Idle, "b", t0, t0 + Duration::from_millis(20));
         rec.record(1, SpanKind::Compute, "c", t0, t0 + Duration::from_millis(5));
-        let (c, i, t) = rec.totals(0);
+        let (c, i, t, st) = rec.totals(0);
         assert!((c - 0.010).abs() < 1e-9);
         assert!((i - 0.020).abs() < 1e-9);
         assert_eq!(t, 0.0);
+        assert_eq!(st, 0.0);
     }
 
     #[test]

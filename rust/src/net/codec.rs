@@ -25,6 +25,14 @@ use crate::error::{Result, WilkinsError};
 /// instead of attempting a multi-GiB allocation.
 pub const MAX_FRAME: usize = 1 << 30;
 
+/// Payload bytes per chunk of a chunked data envelope
+/// ([`K_DATA_CHUNK`](super::proto::K_DATA_CHUNK)): payloads above
+/// this stream as bounded pieces instead of one giant frame, so a
+/// multi-GiB serve can cross the mesh (it would otherwise exceed
+/// [`MAX_FRAME`]) and the per-peer write lock is released between
+/// pieces, letting other ranks' frames interleave.
+pub const CHUNK_SIZE: usize = 1 << 20;
+
 /// Bytes of frame header: u32 body length + u8 kind.
 pub const HEADER_LEN: usize = 5;
 

@@ -29,8 +29,9 @@ use crate::metrics::{Span, SpanKind};
 /// stray connection (wrong port, wrong program) fails the handshake
 /// instead of desyncing the stream.
 pub const MAGIC: u32 = 0x574C_4B4E;
-/// Protocol version; bumped on any wire-visible change.
-pub const VERSION: u32 = 1;
+/// Protocol version; bumped on any wire-visible change (v2: flow
+/// counters in stats/reports, chunked data frames, stall spans).
+pub const VERSION: u32 = 2;
 
 // Frame kinds.
 pub const K_HELLO: u8 = 1;
@@ -41,6 +42,8 @@ pub const K_INSTANCE_DONE: u8 = 5;
 pub const K_SHUTDOWN: u8 = 6;
 pub const K_PEER_HELLO: u8 = 7;
 pub const K_DATA: u8 = 8;
+/// One bounded piece of a large data envelope (see [`ChunkAssembler`]).
+pub const K_DATA_CHUNK: u8 = 9;
 
 /// Worker → coordinator handshake.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -336,6 +339,161 @@ pub fn decode_data(body: &[u8]) -> Result<DataMsg> {
     })
 }
 
+/// One bounded piece of a chunked data envelope (`K_DATA_CHUNK`).
+///
+/// Large hyperslab payloads are streamed as a sequence of chunks
+/// instead of one giant frame, so a multi-GiB serve neither trips
+/// [`MAX_FRAME`](super::codec::MAX_FRAME) nor monopolizes a mesh link
+/// for its whole duration (the per-peer write lock is released
+/// between chunks, letting other ranks' frames interleave). `seq` is
+/// a per-transport message id: chunks of one message share it, and
+/// chunks of concurrent messages on the same link interleave safely.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DataChunk {
+    pub dst_global: u64,
+    pub src_global: u64,
+    pub comm_id: u64,
+    pub tag: u64,
+    /// Message id shared by every chunk of one envelope.
+    pub seq: u64,
+    /// Total payload length of the reassembled envelope.
+    pub total_len: u64,
+    /// This chunk's byte offset within the payload.
+    pub offset: u64,
+    pub bytes: Vec<u8>,
+}
+
+pub fn encode_data_chunk(c: &DataChunk) -> Vec<u8> {
+    let mut w = Writer::with_capacity(64 + c.bytes.len());
+    w.put_u64(c.dst_global);
+    w.put_u64(c.src_global);
+    w.put_u64(c.comm_id);
+    w.put_u64(c.tag);
+    w.put_u64(c.seq);
+    w.put_u64(c.total_len);
+    w.put_u64(c.offset);
+    w.put_bytes(&c.bytes);
+    w.into_vec()
+}
+
+pub fn decode_data_chunk(body: &[u8]) -> Result<DataChunk> {
+    let mut r = Reader::new(body);
+    Ok(DataChunk {
+        dst_global: r.get_u64()?,
+        src_global: r.get_u64()?,
+        comm_id: r.get_u64()?,
+        tag: r.get_u64()?,
+        seq: r.get_u64()?,
+        total_len: r.get_u64()?,
+        offset: r.get_u64()?,
+        bytes: r.get_bytes()?.to_vec(),
+    })
+}
+
+/// Split one payload into chunk envelopes of at most `chunk_size`
+/// payload bytes each (at least one chunk, even for empty payloads).
+pub fn chunk_payload(
+    dst_global: u64,
+    src_global: u64,
+    comm_id: u64,
+    tag: u64,
+    seq: u64,
+    payload: &[u8],
+    chunk_size: usize,
+) -> Vec<DataChunk> {
+    assert!(chunk_size > 0, "chunk size must be positive");
+    let total_len = payload.len() as u64;
+    let mut chunks = Vec::with_capacity(payload.len() / chunk_size + 1);
+    let mut offset = 0usize;
+    loop {
+        let end = (offset + chunk_size).min(payload.len());
+        chunks.push(DataChunk {
+            dst_global,
+            src_global,
+            comm_id,
+            tag,
+            seq,
+            total_len,
+            offset: offset as u64,
+            bytes: payload[offset..end].to_vec(),
+        });
+        offset = end;
+        if offset >= payload.len() {
+            return chunks;
+        }
+    }
+}
+
+/// Receiver-side reassembly of chunked data envelopes. One assembler
+/// per pump thread; partial messages are keyed by (sender rank, seq)
+/// so interleaved streams from concurrent rank threads on one mesh
+/// link can never mix. Chunks of one message arrive in offset order
+/// (the sender writes them sequentially onto a FIFO link).
+#[derive(Default)]
+pub struct ChunkAssembler {
+    partial: std::collections::HashMap<(u64, u64), DataMsg>,
+}
+
+impl ChunkAssembler {
+    pub fn new() -> ChunkAssembler {
+        ChunkAssembler::default()
+    }
+
+    /// Messages currently mid-reassembly (observability / tests).
+    pub fn in_flight(&self) -> usize {
+        self.partial.len()
+    }
+
+    /// Upper bound on a reassembled payload (1 TiB): a corrupt
+    /// `total_len` fails the link cleanly instead of attempting an
+    /// absurd allocation — the same loud-failure stance as
+    /// [`MAX_FRAME`](super::codec::MAX_FRAME), one layer up.
+    pub const MAX_PAYLOAD: u64 = 1 << 40;
+    /// Cap the *eager* preallocation (64 MiB); larger payloads grow
+    /// incrementally so the declared length alone can't balloon RSS.
+    const PREALLOC_CAP: u64 = 1 << 26;
+
+    /// Feed one chunk; returns the completed envelope when this was
+    /// the final piece.
+    pub fn feed(&mut self, c: DataChunk) -> Result<Option<DataMsg>> {
+        if c.total_len > Self::MAX_PAYLOAD {
+            return Err(WilkinsError::Comm(format!(
+                "chunk from rank {} declares a {}-byte payload (> MAX_PAYLOAD): stream desync?",
+                c.src_global, c.total_len
+            )));
+        }
+        let key = (c.src_global, c.seq);
+        let entry = self.partial.entry(key).or_insert_with(|| DataMsg {
+            dst_global: c.dst_global,
+            src_global: c.src_global,
+            comm_id: c.comm_id,
+            tag: c.tag,
+            payload: Vec::with_capacity(c.total_len.min(Self::PREALLOC_CAP) as usize),
+        });
+        if entry.payload.len() as u64 != c.offset {
+            let got = entry.payload.len();
+            self.partial.remove(&key);
+            return Err(WilkinsError::Comm(format!(
+                "chunk stream desync from rank {}: offset {} after {got} bytes",
+                c.src_global, c.offset
+            )));
+        }
+        entry.payload.extend_from_slice(&c.bytes);
+        if entry.payload.len() as u64 > c.total_len {
+            let got = entry.payload.len();
+            self.partial.remove(&key);
+            return Err(WilkinsError::Comm(format!(
+                "chunk stream overflow from rank {}: {got} of {} bytes",
+                c.src_global, c.total_len
+            )));
+        }
+        if entry.payload.len() as u64 == c.total_len {
+            return Ok(self.partial.remove(&key));
+        }
+        Ok(None)
+    }
+}
+
 fn put_duration(w: &mut Writer, d: Duration) {
     w.put_f64(d.as_secs_f64());
 }
@@ -351,11 +509,14 @@ fn get_duration(r: &mut Reader) -> Result<Duration> {
 fn put_vol_stats(w: &mut Writer, s: &VolStats) {
     w.put_u64(s.files_served);
     w.put_u64(s.serves_skipped);
+    w.put_u64(s.serves_dropped);
     w.put_u64(s.serves_suppressed);
     w.put_u64(s.bytes_served);
     w.put_u64(s.files_opened);
     w.put_u64(s.bytes_read);
+    w.put_u64(s.max_queue_depth);
     put_duration(w, s.serve_wait);
+    put_duration(w, s.stall_wait);
     put_duration(w, s.open_wait);
 }
 
@@ -363,11 +524,14 @@ fn get_vol_stats(r: &mut Reader) -> Result<VolStats> {
     Ok(VolStats {
         files_served: r.get_u64()?,
         serves_skipped: r.get_u64()?,
+        serves_dropped: r.get_u64()?,
         serves_suppressed: r.get_u64()?,
         bytes_served: r.get_u64()?,
         files_opened: r.get_u64()?,
         bytes_read: r.get_u64()?,
+        max_queue_depth: r.get_u64()?,
         serve_wait: get_duration(r)?,
+        stall_wait: get_duration(r)?,
         open_wait: get_duration(r)?,
     })
 }
@@ -383,11 +547,14 @@ fn put_run_report(w: &mut Writer, rep: &RunReport) {
         w.put_u64(n.nprocs as u64);
         w.put_u64(n.files_served);
         w.put_u64(n.serves_skipped);
+        w.put_u64(n.serves_dropped);
         w.put_u64(n.serves_suppressed);
         w.put_u64(n.bytes_served);
         w.put_u64(n.files_opened);
         w.put_u64(n.bytes_read);
+        w.put_u64(n.max_queue_depth);
         put_duration(w, n.serve_wait);
+        put_duration(w, n.stall_wait);
         put_duration(w, n.open_wait);
     }
 }
@@ -405,11 +572,14 @@ fn get_run_report(r: &mut Reader) -> Result<RunReport> {
             nprocs: r.get_u64()? as usize,
             files_served: r.get_u64()?,
             serves_skipped: r.get_u64()?,
+            serves_dropped: r.get_u64()?,
             serves_suppressed: r.get_u64()?,
             bytes_served: r.get_u64()?,
             files_opened: r.get_u64()?,
             bytes_read: r.get_u64()?,
+            max_queue_depth: r.get_u64()?,
             serve_wait: get_duration(r)?,
+            stall_wait: get_duration(r)?,
             open_wait: get_duration(r)?,
         });
     }
@@ -422,6 +592,7 @@ fn put_span(w: &mut Writer, s: &Span) {
         SpanKind::Compute => 0,
         SpanKind::Idle => 1,
         SpanKind::Transfer => 2,
+        SpanKind::Stall => 3,
     });
     w.put_str(&s.label);
     w.put_f64(s.start);
@@ -434,6 +605,7 @@ fn get_span(r: &mut Reader) -> Result<Span> {
         0 => SpanKind::Compute,
         1 => SpanKind::Idle,
         2 => SpanKind::Transfer,
+        3 => SpanKind::Stall,
         k => return Err(WilkinsError::Comm(format!("bad wire span kind {k}"))),
     };
     Ok(Span {

@@ -161,6 +161,110 @@ fn data_envelope_roundtrip() {
     );
 }
 
+#[test]
+fn chunked_envelope_roundtrip() {
+    let payload: Vec<u8> = (0..1000u32).flat_map(u32::to_le_bytes).collect();
+    let chunks = proto::chunk_payload(3, 1, 42, 7, 99, &payload, 128);
+    assert_eq!(chunks.len(), (payload.len() + 127) / 128);
+    let mut asm = proto::ChunkAssembler::new();
+    let mut out = None;
+    for c in chunks {
+        let c = proto::decode_data_chunk(&proto::encode_data_chunk(&c)).unwrap();
+        if let Some(msg) = asm.feed(c).unwrap() {
+            assert!(out.is_none(), "only the final chunk completes");
+            out = Some(msg);
+        }
+    }
+    let msg = out.expect("reassembled");
+    assert_eq!((msg.dst_global, msg.src_global, msg.comm_id, msg.tag), (3, 1, 42, 7));
+    assert_eq!(msg.payload, payload);
+    assert_eq!(asm.in_flight(), 0);
+}
+
+#[test]
+fn chunk_assembler_rejects_desync() {
+    let payload = vec![7u8; 64];
+    let chunks = proto::chunk_payload(0, 1, 2, 3, 5, &payload, 16);
+    let mut asm = proto::ChunkAssembler::new();
+    asm.feed(chunks[0].clone()).unwrap();
+    // Skipping a chunk (offset gap) must fail loudly, not corrupt.
+    assert!(asm.feed(chunks[2].clone()).is_err());
+}
+
+#[test]
+fn chunk_assembler_rejects_absurd_total_len() {
+    // A corrupt declared length must fail the link cleanly, never
+    // drive the allocation.
+    let mut c = proto::chunk_payload(0, 1, 2, 3, 5, &[1, 2, 3], 16).remove(0);
+    c.total_len = u64::MAX;
+    let mut asm = proto::ChunkAssembler::new();
+    assert!(asm.feed(c).is_err());
+    assert_eq!(asm.in_flight(), 0);
+}
+
+/// Satellite property: chunked data envelopes survive the full
+/// receive path — frames split at arbitrary byte boundaries by the
+/// incremental decoder, chunk streams from different senders
+/// interleaved on one link — and reassemble byte-identically.
+#[test]
+fn prop_chunked_frames_reassemble_under_split_reads() {
+    crate::proptest_lite::run_prop("chunk-reassembly-split-reads", 60, |rng| {
+        // Two concurrent senders on one link, each with one message.
+        let mk = |src: u64, rng: &mut crate::proptest_lite::Rng| -> Vec<u8> {
+            let n = rng.usize(0, 5000);
+            (0..n).map(|i| (i as u64 * 31 + src) as u8).collect()
+        };
+        let pay_a = mk(1, rng);
+        let pay_b = mk(2, rng);
+        let chunk_size = rng.usize(1, 257);
+        let chunks_a = proto::chunk_payload(9, 1, 4, 8, 100, &pay_a, chunk_size);
+        let chunks_b = proto::chunk_payload(9, 2, 4, 8, 101, &pay_b, chunk_size);
+
+        // Interleave the two chunk streams randomly (preserving each
+        // stream's own order, as the per-peer write lock does), then
+        // frame them onto one byte stream.
+        let mut stream: Vec<u8> = Vec::new();
+        let (mut ia, mut ib) = (0usize, 0usize);
+        while ia < chunks_a.len() || ib < chunks_b.len() {
+            let take_a = ib >= chunks_b.len() || (ia < chunks_a.len() && rng.bool());
+            let c = if take_a {
+                ia += 1;
+                &chunks_a[ia - 1]
+            } else {
+                ib += 1;
+                &chunks_b[ib - 1]
+            };
+            codec::write_frame(&mut stream, proto::K_DATA_CHUNK, &proto::encode_data_chunk(c))
+                .unwrap();
+        }
+
+        // Feed the stream through the incremental decoder at random
+        // split points, reassembling as the pump would.
+        let mut dec = FrameDecoder::new();
+        let mut asm = proto::ChunkAssembler::new();
+        let mut done: Vec<proto::DataMsg> = Vec::new();
+        let mut pos = 0usize;
+        while pos < stream.len() {
+            let step = rng.usize(1, 64.min(stream.len() - pos) + 1);
+            dec.feed(&stream[pos..pos + step]);
+            pos += step;
+            while let Some((kind, body)) = dec.next_frame().unwrap() {
+                assert_eq!(kind, proto::K_DATA_CHUNK);
+                if let Some(msg) = asm.feed(proto::decode_data_chunk(&body).unwrap()).unwrap() {
+                    done.push(msg);
+                }
+            }
+        }
+        assert_eq!(done.len(), 2, "both messages complete");
+        assert_eq!(asm.in_flight(), 0);
+        for msg in done {
+            let want = if msg.src_global == 1 { &pay_a } else { &pay_b };
+            assert_eq!(msg.payload, *want, "payload torn for src {}", msg.src_global);
+            assert_eq!((msg.dst_global, msg.comm_id, msg.tag), (9, 4, 8));
+        }
+    });
+}
+
 /// Two mesh sides — two independent worlds, as two worker processes
 /// would hold — joined over loopback. Ranks 0..2 live on side 0,
 /// ranks 2..4 on side 1.
@@ -206,6 +310,31 @@ fn socket_world_p2p_across_the_mesh() {
     // Each side counted exactly its own sends.
     assert_eq!(side0.world.msgs_sent(), 1);
     assert_eq!(side1.world.msgs_sent(), 1);
+    side0.shutdown();
+    side1.shutdown();
+}
+
+#[test]
+fn socket_world_chunks_large_payloads() {
+    // A payload above CHUNK_SIZE must cross the mesh in bounded
+    // pieces and arrive byte-identical through the ordinary recv path.
+    let (side0, side1) = mesh_pair();
+    let w0 = side0.world.clone();
+    let w1 = side1.world.clone();
+    let big: Vec<u8> = (0..(codec::CHUNK_SIZE + codec::CHUNK_SIZE / 2))
+        .map(|i| (i * 131) as u8)
+        .collect();
+    let want = big.clone();
+    let t = thread::spawn(move || {
+        let c = w0.comm_world(0);
+        c.send_owned(2, 5, big);
+    });
+    let c = w1.comm_world(2);
+    let (src, m) = c.recv(0, 5).unwrap();
+    assert_eq!(src, 0);
+    assert_eq!(m.len(), want.len());
+    assert!(m == want, "chunked payload must reassemble byte-identically");
+    t.join().unwrap();
     side0.shutdown();
     side1.shutdown();
 }

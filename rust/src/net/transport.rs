@@ -16,6 +16,7 @@
 
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 
@@ -63,6 +64,8 @@ pub struct SocketTransport {
     peers: Vec<Option<PeerLink>>,
     /// Local inboxes, shared with the pump threads.
     mailboxes: Arc<Mailboxes>,
+    /// Message id for chunked envelopes (shared by all rank threads).
+    next_seq: AtomicU64,
 }
 
 impl SocketTransport {
@@ -72,7 +75,7 @@ impl SocketTransport {
         peers: Vec<Option<PeerLink>>,
         mailboxes: Arc<Mailboxes>,
     ) -> SocketTransport {
-        SocketTransport { my_worker, owner_of, peers, mailboxes }
+        SocketTransport { my_worker, owner_of, peers, mailboxes, next_seq: AtomicU64::new(1) }
     }
 
     /// Is this global rank hosted by this process?
@@ -101,20 +104,42 @@ impl Transport for SocketTransport {
         let link = self.peers[owner]
             .as_ref()
             .unwrap_or_else(|| panic!("no mesh link to worker {owner}"));
-        let body = proto::encode_data(
-            dst_global as u64,
-            src_global as u64,
-            comm_id,
-            tag,
-            &payload,
-        );
         // A dead link mid-run means the peer process crashed; the
         // send contract has no error path (MPI_Send aborts too), so
         // panic this rank thread — the driver reports it as a failed
         // rank rather than hanging the whole workflow on a recv that
         // can never complete.
-        if let Err(e) = link.send_frame(proto::K_DATA, &body) {
-            panic!("mesh link to worker {owner} failed: {e}");
+        if payload.len() <= codec::CHUNK_SIZE {
+            let body = proto::encode_data(
+                dst_global as u64,
+                src_global as u64,
+                comm_id,
+                tag,
+                &payload,
+            );
+            if let Err(e) = link.send_frame(proto::K_DATA, &body) {
+                panic!("mesh link to worker {owner} failed: {e}");
+            }
+            return;
+        }
+        // Large payload: stream bounded chunks. Each chunk takes and
+        // releases the per-peer lock, so concurrent senders interleave
+        // at chunk granularity; the receiving pump reassembles by
+        // (sender, seq).
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        for c in proto::chunk_payload(
+            dst_global as u64,
+            src_global as u64,
+            comm_id,
+            tag,
+            seq,
+            &payload,
+            codec::CHUNK_SIZE,
+        ) {
+            let body = proto::encode_data_chunk(&c);
+            if let Err(e) = link.send_frame(proto::K_DATA_CHUNK, &body) {
+                panic!("mesh link to worker {owner} failed: {e}");
+            }
         }
     }
 
@@ -141,6 +166,7 @@ pub(crate) fn spawn_pump(
         .name(format!("wk-net-pump-{peer_id}"))
         .spawn(move || {
             let mut stream = stream;
+            let mut assembler = proto::ChunkAssembler::new();
             loop {
                 match codec::read_frame(&mut stream) {
                     Ok(Some((proto::K_DATA, body))) => match proto::decode_data(&body) {
@@ -161,6 +187,29 @@ pub(crate) fn spawn_pump(
                             break;
                         }
                     },
+                    Ok(Some((proto::K_DATA_CHUNK, body))) => {
+                        let complete = proto::decode_data_chunk(&body)
+                            .and_then(|c| assembler.feed(c));
+                        match complete {
+                            Ok(Some(msg)) => mailboxes.push(
+                                msg.dst_global as usize,
+                                Envelope {
+                                    src_global: msg.src_global as usize,
+                                    comm_id: msg.comm_id,
+                                    tag: msg.tag,
+                                    payload: msg.payload,
+                                },
+                            ),
+                            Ok(None) => {} // mid-reassembly
+                            Err(e) => {
+                                eprintln!(
+                                    "wilkins net: mesh link from worker {peer_id} died \
+                                     (bad chunk: {e}); ranks waiting on it will time out"
+                                );
+                                break;
+                            }
+                        }
+                    }
                     // Orderly teardown: peer signalled shutdown or
                     // closed cleanly at a frame boundary.
                     Ok(Some((proto::K_SHUTDOWN, _))) | Ok(None) => break,

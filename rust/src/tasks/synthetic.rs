@@ -13,6 +13,10 @@
 //!   grid_per_proc    grid elements per producer rank     (default 10^4)
 //!   particles_per_proc particles per producer rank       (default 10^4)
 //!   sleep_s          emulated compute seconds per step   (default 0)
+//!   hold_s           consumer-only: analysis seconds spent
+//!                    BEFORE closing, holding the serve round
+//!                    open (producer backpressure; flow-control
+//!                    benches)                            (default 0)
 //!   verify           consumer checks data values         (default 1)
 
 use crate::error::{Result, WilkinsError};
@@ -85,6 +89,7 @@ pub fn producer(ctx: &mut TaskContext) -> Result<()> {
 
 pub fn consumer(ctx: &mut TaskContext) -> Result<()> {
     let sleep_s = ctx.param_f64("sleep_s", 0.0);
+    let hold_s = ctx.param_f64("hold_s", 0.0);
     let verify = ctx.param_i64("verify", 1) != 0;
     let nprocs = ctx.size();
     let rank = ctx.rank();
@@ -108,6 +113,12 @@ pub fn consumer(ctx: &mut TaskContext) -> Result<()> {
             if verify {
                 verify_dset(&dset, &want, &bytes, step)?;
             }
+        }
+        // `hold_s` analyzes while the round is still open — the
+        // producer's credit is held for the full analysis, which is
+        // what a bounded credit window exists to overlap.
+        if hold_s > 0.0 {
+            ctx.sleep_compute("analyze-held", hold_s);
         }
         // Close first (releases the producer's serve round), then
         // analyze: the paper's consumers compute after receiving data.

@@ -202,12 +202,111 @@ tasks:
     let report = Wilkins::new(cfg, builtin_registry()).unwrap().run().unwrap();
     let p = report.node("producer").unwrap();
     assert!(
-        p.serves_skipped >= 2,
-        "latest should skip several serves, skipped={}",
-        p.serves_skipped
+        p.serves_dropped >= 2,
+        "latest should drop several rounds, dropped={}",
+        p.serves_dropped
     );
     let c = report.node("consumer").unwrap();
     assert!(c.files_opened >= 1 && c.files_opened < 10);
+}
+
+#[test]
+fn flow_key_latest_drops_and_reports() {
+    // The `flow:` key form of the same scenario, plus the RunReport
+    // surface: dropped rounds show up per node and in the flow
+    // summary line.
+    let report = run_yaml(
+        "\
+tasks:
+  - func: producer
+    nprocs: 1
+    params: { steps: 10, grid_per_proc: 100, particles_per_proc: 100, sleep_s: 0.01 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    nprocs: 1
+    params: { sleep_s: 0.05 }
+    inports:
+      - filename: outfile.h5
+        flow: latest
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+",
+    );
+    let p = report.node("producer").unwrap();
+    assert!(p.serves_dropped >= 2, "dropped={}", p.serves_dropped);
+    assert!(p.max_queue_depth >= 1);
+    let rendered = report.render();
+    assert!(rendered.contains("dropped="), "{rendered}");
+}
+
+#[test]
+fn flow_bounded_block_depth_matches_all_data() {
+    // depth: 3 pipelines the producer ahead of the consumer but must
+    // still deliver every timestep (verify=1 checks the data values).
+    let report = run_yaml(
+        "\
+tasks:
+  - func: producer
+    nprocs: 2
+    params: { steps: 6, grid_per_proc: 100, particles_per_proc: 100 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    nprocs: 2
+    params: { sleep_s: 0.01 }
+    inports:
+      - filename: outfile.h5
+        flow: { policy: block, depth: 3 }
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+",
+    );
+    let p = report.node("producer").unwrap();
+    assert_eq!(p.files_served, 6);
+    assert_eq!(p.serves_dropped, 0);
+    assert!(p.max_queue_depth <= 3, "maxq={}", p.max_queue_depth);
+    assert_eq!(report.node("consumer").unwrap().files_opened, 6);
+}
+
+#[test]
+fn flow_every_matches_io_freq_sugar() {
+    // `io_freq: N` must behave exactly like its lowered `flow:` form.
+    let base = "\
+tasks:
+  - func: producer
+    nprocs: 2
+    params: {{ steps: 10, grid_per_proc: 100, particles_per_proc: 100 }}
+    outports:
+      - filename: outfile.h5
+        dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+  - func: consumer
+    nprocs: 2
+    inports:
+      - filename: outfile.h5
+        {flow}
+        dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+";
+    let sugar = run_yaml(&base.replace("{flow}", "io_freq: 5").replace("{{", "{").replace("}}", "}"));
+    let lowered = run_yaml(
+        &base
+            .replace("{flow}", "flow: { policy: block, every: 5 }")
+            .replace("{{", "{")
+            .replace("}}", "}"),
+    );
+    for (a, b) in [(&sugar, &lowered)] {
+        let pa = a.node("producer").unwrap();
+        let pb = b.node("producer").unwrap();
+        assert_eq!(pa.files_served, pb.files_served);
+        assert_eq!(pa.serves_skipped, pb.serves_skipped);
+        assert_eq!(pa.bytes_served, pb.bytes_served);
+        assert_eq!(
+            a.node("consumer").unwrap().files_opened,
+            b.node("consumer").unwrap().files_opened
+        );
+    }
+    assert_eq!(sugar.node("producer").unwrap().files_served, 2);
+    assert_eq!(sugar.node("producer").unwrap().serves_skipped, 8);
 }
 
 #[test]
@@ -545,7 +644,7 @@ tasks:
         builtin_registry(),
     )
     .unwrap();
-    assert_eq!(w.graph().channels[0].flow, FlowControl::Some(10));
+    assert_eq!(w.graph().channels[0].flow, FlowControl::Some(10).lower());
 }
 
 #[test]
