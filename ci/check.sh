@@ -14,9 +14,10 @@ cd "$(dirname "$0")/.."
 
 docs_check() {
     echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
-    # rust/src/lib.rs turns on missing_docs for the flow module, so an
-    # undocumented public item in the flow-control layer fails here
-    # (and under the clippy -D warnings step below).
+    # rust/src/lib.rs turns on missing_docs for the flow module AND
+    # the whole lowfive module (the routed data plane), so an
+    # undocumented public item in either layer fails here (and under
+    # the clippy -D warnings step below).
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
 }
 
@@ -63,5 +64,21 @@ case "$flow_out" in
         echo "FAIL: no flow summary in the run report:"; echo "$flow_out"; exit 1
         ;;
 esac
+
+echo "== mixed-transport smoke run (routed data plane) =="
+mixdir="${TMPDIR:-/tmp}/wilkins-ci-mixed-$$"
+rm -rf "$mixdir"
+mix_out=$(cargo run --release -- run configs/mixed_transport.yaml \
+    --workdir "$mixdir" --artifacts /nonexistent)
+# The write-through grid is served in situ within one process, so the
+# zero-copy path must have engaged.
+echo "$mix_out" | grep -Eq "bytes_shared=[1-9][0-9]*" || {
+    echo "FAIL: mixed run reported no zero-copy shared bytes:"; echo "$mix_out"; exit 1;
+}
+# And the file-routed datasets must have landed as disk artifacts.
+ls "$mixdir"/*.l5 >/dev/null 2>&1 || {
+    echo "FAIL: no .l5 artifact in $mixdir after the mixed run"; exit 1;
+}
+rm -rf "$mixdir"
 
 echo "OK: all checks passed"

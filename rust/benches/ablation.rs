@@ -17,7 +17,7 @@ use wilkins::bench_util::{mean, time_trials, Table};
 use wilkins::comm::{InterComm, World};
 use wilkins::lowfive::hyperslab::copy_region;
 use wilkins::lowfive::{
-    split_rows, ChannelMode, DType, Hyperslab, InChannel, OutChannel, Vol,
+    split_rows, DType, Hyperslab, InChannel, OutChannel, RouteTable, Vol,
 };
 
 /// M producers serve one dataset to N consumers; consumers read their
@@ -46,7 +46,7 @@ fn mxn_read(m: usize, n: usize, elems_per_proc: u64, lockstep: bool) -> f64 {
                 let mut vol = Vol::new(local.clone(), workdir);
                 vol.set_io_comm(Some(io));
                 let ic = InterComm::new(local, chid, cons.clone());
-                vol.add_out_channel(OutChannel::new(Some(ic), "f.h5", ChannelMode::Memory));
+                vol.add_out_channel(OutChannel::new(Some(ic), "f.h5", RouteTable::memory()));
                 vol.file_create("f.h5").unwrap();
                 vol.dataset_create("f.h5", "/d", DType::U64, &dims).unwrap();
                 let slab = split_rows(&dims, m)[g].clone();
@@ -60,7 +60,7 @@ fn mxn_read(m: usize, n: usize, elems_per_proc: u64, lockstep: bool) -> f64 {
                 let local = world.comm_from_ranks(cid, &cons, g - m);
                 let mut vol = Vol::new(local.clone(), workdir);
                 let ic = InterComm::new(local, chid, prod.clone());
-                vol.add_in_channel(InChannel::new(Some(ic), "f.h5", ChannelMode::Memory));
+                vol.add_in_channel(InChannel::new(Some(ic), "f.h5", RouteTable::memory()));
                 vol.set_lockstep_reads(lockstep);
                 let name = vol.file_open("f.h5").unwrap();
                 let want = split_rows(&dims, n)[g - m].clone();

@@ -1,0 +1,216 @@
+//! Routed data plane bench: what the zero-copy same-process serve
+//! path buys, and what mixed per-dataset routing costs.
+//!
+//! Part 1 — serve throughput, copied vs zero-copy, at 1/4/16 MiB
+//! payloads: a 1→1 coupling serves a u64 grid per step; the copied
+//! arm (`Vol::set_zero_copy(false)`) pays encode → mailbox → decode
+//! (two full payload copies plus an allocation); the zero-copy arm
+//! hands the snapshot `Arc` through the shared registry and copies
+//! once, straight into the reader's buffer.
+//!
+//! Part 2 — workflow wall-clock: the shipped mixed-routing scenario
+//! (write-through grid + file-only particles) against the all-memory
+//! baseline, at identical sizes.
+//!
+//! Asserted shape: zero-copy beats copied at the 16 MiB payload (the
+//! acceptance criterion); the mixed run moves nonzero bytes_shared
+//! and nonzero disk bytes. Emits BENCH_dataplane.json.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::thread;
+use std::time::Instant;
+
+use wilkins::bench_util::{assert_speedup, mean, time_trials, Table};
+use wilkins::comm::{InterComm, World};
+use wilkins::coordinator::RunReport;
+use wilkins::lowfive::{DType, Hyperslab, InChannel, OutChannel, RouteTable, Vol};
+use wilkins::tasks::builtin_registry;
+use wilkins::Wilkins;
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "wilkins-dataplane-{}-{}-{}",
+        tag,
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// One 1→1 coupling serving `steps` files of `payload` bytes each;
+/// returns elapsed seconds.
+fn serve_run(payload: usize, steps: u64, zero_copy: bool) -> f64 {
+    let elems = (payload / 8) as u64;
+    let world = World::new(2);
+    let pid = world.alloc_comm_id();
+    let cid = world.alloc_comm_id();
+    let ioid = world.alloc_comm_id();
+    let chid = world.alloc_comm_id();
+    let workdir = fresh_dir("serve");
+    let t0 = Instant::now();
+    let wp = {
+        let world = world.clone();
+        let workdir = workdir.clone();
+        thread::spawn(move || {
+            let local = world.comm_from_ranks(pid, &[0], 0);
+            let io = world.comm_from_ranks(ioid, &[0], 0);
+            let mut vol = Vol::new(local.clone(), workdir);
+            vol.set_io_comm(Some(io));
+            let ic = InterComm::new(local, chid, vec![1]);
+            vol.add_out_channel(OutChannel::new(Some(ic), "f.h5", RouteTable::memory()));
+            vol.set_zero_copy(zero_copy);
+            let data = vec![7u8; payload];
+            for _ in 0..steps {
+                vol.file_create("f.h5").unwrap();
+                vol.dataset_create("f.h5", "/d", DType::U64, &[elems]).unwrap();
+                vol.dataset_write("f.h5", "/d", Hyperslab::whole(&[elems]), data.clone())
+                    .unwrap();
+                vol.file_close("f.h5").unwrap();
+            }
+            vol.finalize_producer().unwrap();
+            // The asserted split: every byte took exactly one path.
+            let total = payload as u64 * steps;
+            if zero_copy {
+                assert_eq!(vol.stats.bytes_shared, total);
+                assert_eq!(vol.stats.bytes_copied, 0);
+            } else {
+                assert_eq!(vol.stats.bytes_copied, total);
+                assert_eq!(vol.stats.bytes_shared, 0);
+            }
+        })
+    };
+    let wc = {
+        let world = world.clone();
+        thread::spawn(move || {
+            let local = world.comm_from_ranks(cid, &[1], 0);
+            let mut vol = Vol::new(local.clone(), workdir);
+            let ic = InterComm::new(local, chid, vec![0]);
+            vol.add_in_channel(InChannel::new(Some(ic), "f.h5", RouteTable::memory()));
+            for _ in 0..steps {
+                let name = vol.file_open("f.h5").unwrap();
+                let bytes = vol
+                    .dataset_read(&name, "/d", &Hyperslab::whole(&[elems]))
+                    .unwrap();
+                assert_eq!(bytes.len(), payload);
+                vol.file_close(&name).unwrap();
+            }
+            vol.finalize_consumer().unwrap();
+        })
+    };
+    wp.join().unwrap();
+    wc.join().unwrap();
+    t0.elapsed().as_secs_f64()
+}
+
+const SIZES: [(&str, usize); 3] = [
+    ("1MiB", 1 << 20),
+    ("4MiB", 1 << 22),
+    ("16MiB", 1 << 24),
+];
+
+fn workflow_yaml(mixed: bool) -> String {
+    let (grid, particles) = if mixed {
+        (
+            "{ name: /group1/grid, memory: 1, file: 1 }",
+            "{ name: /group1/particles, file: 1, memory: 0 }",
+        )
+    } else {
+        ("{ name: /group1/grid }", "{ name: /group1/particles }")
+    };
+    format!(
+        "\
+tasks:
+  - func: producer
+    nprocs: 2
+    params: {{ steps: 4, grid_per_proc: 50000, particles_per_proc: 50000, verify: 0 }}
+    outports:
+      - filename: outfile.h5
+        dsets: [ {grid}, {particles} ]
+  - func: consumer
+    nprocs: 2
+    params: {{ verify: 0 }}
+    inports:
+      - filename: outfile.h5
+        dsets: [ {grid}, {particles} ]
+",
+    )
+}
+
+fn run_workflow(mixed: bool) -> (f64, RunReport) {
+    let w = Wilkins::from_yaml_str(&workflow_yaml(mixed), builtin_registry())
+        .unwrap()
+        .with_workdir(fresh_dir(if mixed { "mixed" } else { "mem" }));
+    let t0 = Instant::now();
+    let report = w.run().unwrap();
+    (t0.elapsed().as_secs_f64(), report)
+}
+
+fn main() {
+    println!("== routed data plane: copied vs zero-copy serve throughput ==\n");
+    let steps = 8u64;
+    let mut table = Table::new(&["payload", "copied MB/s", "zero-copy MB/s", "speedup"]);
+    let mut rows = Vec::new();
+    for (label, payload) in SIZES {
+        let trials = if payload >= (1 << 24) { 3 } else { 5 };
+        let copied_s = mean(&time_trials(trials, true, || {
+            serve_run(payload, steps, false);
+        }));
+        let shared_s = mean(&time_trials(trials, true, || {
+            serve_run(payload, steps, true);
+        }));
+        let mb = (payload as f64 * steps as f64) / (1024.0 * 1024.0);
+        let copied_mbps = mb / copied_s;
+        let shared_mbps = mb / shared_s;
+        table.row(&[
+            label.to_string(),
+            format!("{copied_mbps:.0}"),
+            format!("{shared_mbps:.0}"),
+            format!("{:.2}x", copied_s / shared_s),
+        ]);
+        rows.push((label, copied_mbps, shared_mbps, copied_s, shared_s));
+    }
+    print!("{}", table.render());
+
+    // The acceptance criterion: at the largest payload, where copy
+    // cost dominates protocol overhead, zero-copy must win.
+    let big = rows.last().unwrap();
+    assert_speedup("zero-copy vs copied @16MiB", big.3, big.4, 1.05);
+
+    println!("\n== mixed routing vs all-memory workflow wall-clock ==\n");
+    let (mem_s, mem_rep) = run_workflow(false);
+    let (mix_s, mix_rep) = run_workflow(true);
+    let mem_p = mem_rep.node("producer").unwrap();
+    let mix_p = mix_rep.node("producer").unwrap();
+    println!(
+        "all-memory: {mem_s:.3}s (shared {} B)   mixed: {mix_s:.3}s (shared {} B, served {} B)",
+        mem_p.bytes_shared, mix_p.bytes_shared, mix_p.bytes_served
+    );
+    assert!(mix_p.bytes_shared > 0, "mixed run must share the write-through grid");
+    assert!(
+        mix_p.bytes_served > mix_p.bytes_shared + mix_p.bytes_copied,
+        "mixed run must also move disk bytes"
+    );
+    assert_eq!(
+        mem_rep.node("consumer").unwrap().files_opened,
+        mix_rep.node("consumer").unwrap().files_opened,
+        "routing must not change how many files the consumer sees"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"dataplane\",\n  \"steps\": {steps},\n  \"serve\": {{\n{}\n  }},\n  \"workflow\": {{ \"all_memory_s\": {mem_s:.3}, \"mixed_s\": {mix_s:.3}, \"mixed_bytes_shared\": {}, \"mixed_bytes_served\": {} }}\n}}\n",
+        rows.iter()
+            .map(|(label, c, z, _, _)| format!(
+                "    \"{label}\": {{ \"copied_mbps\": {c:.1}, \"zero_copy_mbps\": {z:.1} }}"
+            ))
+            .collect::<Vec<_>>()
+            .join(",\n"),
+        mix_p.bytes_shared,
+        mix_p.bytes_served
+    );
+    let out_dir = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    let out_path = std::path::Path::new(&out_dir).join("BENCH_dataplane.json");
+    std::fs::write(&out_path, json).expect("write BENCH_dataplane.json");
+    println!("\nbench record written to {}", out_path.display());
+    println!("OK: zero-copy serve path beats the encode/decode round-trip");
+}

@@ -15,7 +15,7 @@ use std::thread;
 use crate::comm::{InterComm, World};
 use crate::error::Result;
 use crate::lowfive::{
-    split_rows, AttrValue, ChannelMode, DType, InChannel, OutChannel, Vol,
+    split_rows, AttrValue, DType, InChannel, OutChannel, RouteTable, Vol,
 };
 
 
@@ -55,7 +55,7 @@ pub fn run_standalone(m: usize, n: usize, size: SyntheticSize) -> Result<f64> {
                 vol.add_out_channel(OutChannel::new(
                     Some(ic),
                     "outfile.h5",
-                    ChannelMode::Memory,
+                    RouteTable::memory(),
                 ));
                 producer_body(&mut vol, g, m, size)?;
                 vol.finalize_producer()
@@ -66,7 +66,7 @@ pub fn run_standalone(m: usize, n: usize, size: SyntheticSize) -> Result<f64> {
                 vol.add_in_channel(InChannel::new(
                     Some(ic),
                     "outfile.h5",
-                    ChannelMode::Memory,
+                    RouteTable::memory(),
                 ));
                 consumer_body(&mut vol, g - m, n, size)?;
                 vol.finalize_consumer()

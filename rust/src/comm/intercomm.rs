@@ -47,6 +47,13 @@ impl InterComm {
         self.remote.len()
     }
 
+    /// Is remote local rank `dst` hosted in this OS process? Gates the
+    /// zero-copy serve fast path: an `Arc` handed through the shared
+    /// registry only resolves inside one address space.
+    pub fn remote_is_local(&self, dst: usize) -> bool {
+        self.local.global_is_local(self.remote[dst])
+    }
+
     /// Send to remote local rank `dst`.
     pub fn send(&self, dst: usize, tag: u64, data: &[u8]) {
         let dst_global = self.remote[dst];

@@ -99,6 +99,17 @@ pub trait Transport: Send + Sync {
 
     /// Orderly teardown (flush and close sockets); a no-op in-process.
     fn shutdown(&self) {}
+
+    /// Does `dst_global`'s inbox live in this OS process? Decides
+    /// whether a serve may take the zero-copy shared-snapshot path
+    /// (sharing an `Arc` only works inside one address space). The
+    /// in-memory backend hosts every rank; the socket backend answers
+    /// per its rank-ownership map. Defaults to `false` — a backend
+    /// that forgets to override merely loses the optimization, instead
+    /// of shipping un-resolvable registry tokens across processes.
+    fn is_local(&self, _dst_global: usize) -> bool {
+        false
+    }
 }
 
 /// The in-process backend: every rank is a local thread, delivery is a
@@ -123,6 +134,10 @@ impl Transport for MemoryTransport {
         payload: Vec<u8>,
     ) {
         self.mailboxes.push(dst_global, Envelope { src_global, comm_id, tag, payload });
+    }
+
+    fn is_local(&self, _dst_global: usize) -> bool {
+        true // every rank is a thread of this process
     }
 }
 
@@ -388,6 +403,12 @@ impl Comm {
             ranks: Arc::new(ranks),
             my_index: my_pos,
         })
+    }
+
+    /// Is global rank `global`'s mailbox hosted in this process?
+    /// (Zero-copy eligibility; see [`Transport::is_local`].)
+    pub(crate) fn global_is_local(&self, global: usize) -> bool {
+        self.world.transport.is_local(global)
     }
 
     pub(crate) fn world_state(&self) -> &Arc<WorldState> {

@@ -171,6 +171,32 @@ fn memory_is_default_transport() {
 }
 
 #[test]
+fn write_through_flags_parse_together() {
+    // `memory: 1, file: 1` on one dataset is write-through (paper
+    // Sec. 4.2) — both flags land on the DsetSpec; the graph layer
+    // lowers the pair onto Route::Both.
+    let cfg = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f.h5\n        dsets:\n          - name: /wt\n            memory: 1\n            file: 1\n          - name: /disk\n            file: 1\n            memory: 0\n",
+    )
+    .unwrap();
+    let dsets = &cfg.tasks[0].outports[0].dsets;
+    assert!(dsets[0].memory && dsets[0].file, "write-through keeps both");
+    assert!(!dsets[1].memory && dsets[1].file, "file-only");
+}
+
+#[test]
+fn file_flag_alone_disables_memory_default() {
+    // `file: 1` with `memory` unset means file-only (the historical
+    // default `memory = !file`), not write-through.
+    let cfg = WorkflowConfig::from_yaml_str(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n            file: 1\n",
+    )
+    .unwrap();
+    let d = &cfg.tasks[0].outports[0].dsets[0];
+    assert!(d.file && !d.memory);
+}
+
+#[test]
 fn stateless_flag() {
     let cfg = WorkflowConfig::from_yaml_str(
         "tasks:\n  - func: c\n    nprocs: 1\n    stateless: 1\n    inports:\n      - filename: f.h5\n        dsets:\n          - name: /d\n",

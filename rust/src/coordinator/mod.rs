@@ -30,7 +30,7 @@ use crate::config::{ConsumerKind, WorkflowConfig};
 use crate::error::{Result, WilkinsError};
 use crate::graph::WorkflowGraph;
 use crate::henson::{drive_rank, Registry, Role, TaskContext};
-use crate::lowfive::{ChannelMode, InChannel, OutChannel, Vol};
+use crate::lowfive::{InChannel, OutChannel, Vol};
 use crate::metrics::Recorder;
 use crate::runtime::EngineHandle;
 
@@ -192,12 +192,13 @@ impl Wilkins {
                         vol.set_io_comm(Some(io));
                     }
 
-                    // Out-channels: this node as producer.
+                    // Out-channels: this node as producer. The
+                    // intercomm exists when any dataset of the
+                    // channel routes through memory.
                     for ci in graph.out_channels_of(node_idx) {
                         let ch = &graph.channels[ci];
                         let consumer = &graph.nodes[ch.consumer];
-                        let ic = if local_rank < node.nwriters
-                            && ch.mode == ChannelMode::Memory
+                        let ic = if local_rank < node.nwriters && ch.routes.any_memory()
                         {
                             Some(InterComm::new(
                                 local.clone(),
@@ -208,7 +209,7 @@ impl Wilkins {
                             None
                         };
                         vol.add_out_channel(
-                            OutChannel::new(ic, &ch.out_pattern, ch.mode)
+                            OutChannel::new(ic, &ch.out_pattern, ch.routes.clone())
                                 .with_policy(ch.flow),
                         );
                     }
@@ -217,7 +218,7 @@ impl Wilkins {
                     for ci in graph.in_channels_of(node_idx) {
                         let ch = &graph.channels[ci];
                         let producer = &graph.nodes[ch.producer];
-                        let ic = if ch.mode == ChannelMode::Memory {
+                        let ic = if ch.routes.any_memory() {
                             Some(InterComm::new(
                                 local.clone(),
                                 chan_ids[ci],
@@ -226,7 +227,11 @@ impl Wilkins {
                         } else {
                             None
                         };
-                        vol.add_in_channel(InChannel::new(ic, &ch.in_pattern, ch.mode));
+                        vol.add_in_channel(InChannel::new(
+                            ic,
+                            &ch.in_pattern,
+                            ch.routes.clone(),
+                        ));
                     }
 
                     if let Some(action) = action {

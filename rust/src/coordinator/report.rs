@@ -27,6 +27,10 @@ pub struct NodeReport {
     pub serves_dropped: u64,
     pub serves_suppressed: u64,
     pub bytes_served: u64,
+    /// Serve bytes handed over the zero-copy same-process path.
+    pub bytes_shared: u64,
+    /// Serve bytes that took the encode/decode round-trip.
+    pub bytes_copied: u64,
     pub files_opened: u64,
     pub bytes_read: u64,
     /// Max across ranks (the critical-path wait).
@@ -95,6 +99,14 @@ impl RunReport {
                 "flow: dropped={dropped} stalled={stalled:.3}s max_queue_depth={maxq}\n"
             ));
         }
+        // One greppable data-plane summary (ci/check.sh asserts on
+        // it): how many serve bytes took the zero-copy same-process
+        // path vs the encode/decode round-trip.
+        let shared: u64 = self.nodes.iter().map(|n| n.bytes_shared).sum();
+        let copied: u64 = self.nodes.iter().map(|n| n.bytes_copied).sum();
+        if shared > 0 || copied > 0 {
+            s.push_str(&format!("dataplane: bytes_shared={shared} bytes_copied={copied}\n"));
+        }
         s
     }
 }
@@ -132,6 +144,8 @@ pub(crate) fn build(
             serves_dropped: 0,
             serves_suppressed: 0,
             bytes_served: 0,
+            bytes_shared: 0,
+            bytes_copied: 0,
             files_opened: 0,
             bytes_read: 0,
             serve_wait: Duration::ZERO,
@@ -150,6 +164,8 @@ pub(crate) fn build(
         n.serves_suppressed = n.serves_suppressed.max(o.stats.serves_suppressed);
         n.files_opened = n.files_opened.max(o.stats.files_opened);
         n.bytes_served += o.stats.bytes_served;
+        n.bytes_shared += o.stats.bytes_shared;
+        n.bytes_copied += o.stats.bytes_copied;
         n.bytes_read += o.stats.bytes_read;
         n.serve_wait = n.serve_wait.max(o.stats.serve_wait);
         n.open_wait = n.open_wait.max(o.stats.open_wait);

@@ -74,16 +74,20 @@ impl EnsembleReport {
             where_run
         );
         s.push_str(&format!(
-            "{:<20} {:>6} {:>9} {:>9} {:>9} {:>8} {:>8} {:>8} {:>12}\n",
+            "{:<20} {:>6} {:>9} {:>9} {:>9} {:>8} {:>8} {:>8} {:>12} {:>12}\n",
             "instance", "ranks", "start", "finish", "elapsed", "served", "dropped", "opened",
-            "bytes_moved"
+            "bytes_moved", "shared"
         ));
         for i in &self.instances {
             let served: u64 = i.report.nodes.iter().map(|n| n.files_served).sum();
             let dropped: u64 = i.report.nodes.iter().map(|n| n.serves_dropped).sum();
             let opened: u64 = i.report.nodes.iter().map(|n| n.files_opened).sum();
+            // Zero-copy serve bytes (the routed data plane's fast
+            // path); under process placement instances run whole in
+            // one worker, so same-process serves stay shared there.
+            let shared: u64 = i.report.nodes.iter().map(|n| n.bytes_shared).sum();
             s.push_str(&format!(
-                "{:<20} {:>6} {:>8.3}s {:>8.3}s {:>8.3}s {:>8} {:>8} {:>8} {:>12}\n",
+                "{:<20} {:>6} {:>8.3}s {:>8.3}s {:>8.3}s {:>8} {:>8} {:>8} {:>12} {:>12}\n",
                 i.name,
                 i.ranks,
                 i.started_s,
@@ -92,7 +96,8 @@ impl EnsembleReport {
                 served,
                 dropped,
                 opened,
-                i.report.bytes_sent
+                i.report.bytes_sent,
+                shared
             ));
         }
         s

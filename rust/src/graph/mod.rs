@@ -10,10 +10,10 @@ mod topology;
 
 pub use topology::Topology;
 
-use crate::config::{PortConfig, TaskConfig, WorkflowConfig};
+use crate::config::{DsetSpec, PortConfig, TaskConfig, WorkflowConfig};
 use crate::error::{Result, WilkinsError};
 use crate::flow::ChannelPolicy;
-use crate::lowfive::{pattern_matches, ChannelMode};
+use crate::lowfive::{pattern_matches, Route, RouteTable};
 
 /// One runnable task instance (ensemble member).
 #[derive(Debug, Clone)]
@@ -51,12 +51,21 @@ pub struct ChannelSpec {
     pub out_pattern: String,
     /// Consumer-side filename pattern (what opens request).
     pub in_pattern: String,
-    /// Matched dataset name patterns.
-    pub dsets: Vec<String>,
-    pub mode: ChannelMode,
+    /// Per-dataset transport routing: one (pattern, route) entry per
+    /// matched dataset pair. Different datasets of one channel may
+    /// ride different transports (paper Sec. 4.2), including
+    /// write-through to both.
+    pub routes: RouteTable,
     /// Flow-control policy of this link (consumer-side `flow:` key or
     /// its `io_freq` sugar, lowered).
     pub flow: ChannelPolicy,
+}
+
+impl ChannelSpec {
+    /// The matched dataset name patterns, in match order.
+    pub fn dset_patterns(&self) -> Vec<&str> {
+        self.routes.entries().iter().map(|(p, _)| p.as_str()).collect()
+    }
 }
 
 /// The expanded workflow graph.
@@ -110,8 +119,7 @@ impl WorkflowGraph {
                                     consumer: cnode,
                                     out_pattern: link.out_pattern.clone(),
                                     in_pattern: link.in_pattern.clone(),
-                                    dsets: link.dsets.clone(),
-                                    mode: link.mode,
+                                    routes: link.routes.clone(),
                                     flow: link.flow,
                                 });
                             }
@@ -184,12 +192,11 @@ impl WorkflowGraph {
         }
         for c in &self.channels {
             s.push_str(&format!(
-                "  channel {} -> {}  file {}  dsets {:?}  {:?}  flow {}\n",
+                "  channel {} -> {}  file {}  routes {}  flow {}\n",
                 self.nodes[c.producer].name,
                 self.nodes[c.consumer].name,
                 c.in_pattern,
-                c.dsets,
-                c.mode,
+                c.routes,
                 c.flow
             ));
         }
@@ -200,14 +207,16 @@ impl WorkflowGraph {
 struct Link {
     out_pattern: String,
     in_pattern: String,
-    dsets: Vec<String>,
-    mode: ChannelMode,
+    routes: RouteTable,
     flow: ChannelPolicy,
 }
 
 /// Do an outport and an inport match? Filenames must be compatible and
-/// at least one dataset must match. All matched datasets must agree on
-/// the transport mode.
+/// at least one dataset must match. Each matched dataset pair resolves
+/// to its own transport route (memory | file | both) — mixed routing
+/// within one channel is the paper's Sec. 4.2 scenario, not an error;
+/// only genuinely contradictory flags (no common transport) are
+/// rejected.
 fn match_ports(
     pt: &TaskConfig,
     _pi: usize,
@@ -219,48 +228,83 @@ fn match_ports(
     if !patterns_compatible(&op.filename, &ip.filename) {
         return Ok(None);
     }
-    let mut dsets = Vec::new();
-    let mut mode: Option<ChannelMode> = None;
+    let mut entries: Vec<(String, Route)> = Vec::new();
     for od in &op.dsets {
         for id in &ip.dsets {
             if !patterns_compatible(&od.name, &id.name) {
                 continue;
             }
-            // Consumer side selects the transport; both sides must not
-            // contradict (paper sets the flags identically on both).
-            let m = if id.memory {
-                ChannelMode::Memory
+            let route = resolve_route(od, id).ok_or_else(|| {
+                WilkinsError::Graph(format!(
+                    "contradictory routes for dataset {}: producer {} offers {} \
+                     but consumer {} expects {} — the two sides share no transport",
+                    id.name,
+                    pt.func,
+                    flags_desc(od),
+                    ct.func,
+                    flags_desc(id)
+                ))
+            })?;
+            // Key the table by the more concrete side: a consumer glob
+            // (`/particles/*`) matching several producer datasets must
+            // yield one discriminating entry per dataset, not several
+            // entries under one pattern where first-match-wins would
+            // silently misroute all but the first.
+            let key = if pattern_matches(&id.name, &od.name) {
+                od.name.clone()
             } else {
-                ChannelMode::File
+                id.name.clone()
             };
-            let pm = if od.memory { ChannelMode::Memory } else { ChannelMode::File };
-            if pm != m {
-                return Err(WilkinsError::Graph(format!(
-                    "transport mismatch for dset {} between {} and {}",
-                    id.name, pt.func, ct.func
-                )));
-            }
-            if let Some(prev) = mode {
-                if prev != m {
+            match entries.iter().find(|(k, _)| *k == key) {
+                Some((_, prev)) if *prev != route => {
                     return Err(WilkinsError::Graph(format!(
-                        "mixed transports within one channel ({} -> {})",
+                        "ambiguous routes for dataset {key} between {} and {}: \
+                         matched as both {prev} and {route}",
                         pt.func, ct.func
                     )));
                 }
+                Some(_) => {} // identical duplicate match
+                None => entries.push((key, route)),
             }
-            mode = Some(m);
-            dsets.push(id.name.clone());
         }
     }
-    match mode {
-        None => Ok(None),
-        Some(mode) => Ok(Some(Link {
-            out_pattern: op.filename.clone(),
-            in_pattern: ip.filename.clone(),
-            dsets,
-            mode,
-            flow: ip.flow,
-        })),
+    if entries.is_empty() {
+        return Ok(None);
+    }
+    Ok(Some(Link {
+        out_pattern: op.filename.clone(),
+        in_pattern: ip.filename.clone(),
+        routes: RouteTable::new(entries),
+        flow: ip.flow,
+    }))
+}
+
+/// Resolve one matched dataset pair's route from its two flag sets.
+/// `None` means the sides share no transport (producer file-only vs
+/// consumer memory-only, or vice versa).
+///
+/// Memory delivery wins whenever both sides allow it; a producer-side
+/// `file: 1` then upgrades the route to write-through (`Both`) — the
+/// consumer reads in situ while a traditional file also lands on
+/// disk. A pair agreeing only on `file` routes via disk.
+fn resolve_route(od: &DsetSpec, id: &DsetSpec) -> Option<Route> {
+    let mem = od.memory && id.memory;
+    let file = od.file && id.file;
+    match (mem, file) {
+        (true, true) => Some(Route::Both),
+        (true, false) => Some(if od.file { Route::Both } else { Route::Memory }),
+        (false, true) => Some(Route::File),
+        (false, false) => None,
+    }
+}
+
+/// Human form of a dataset's transport flags, for route errors.
+fn flags_desc(d: &DsetSpec) -> &'static str {
+    match (d.memory, d.file) {
+        (true, true) => "memory+file",
+        (true, false) => "memory-only",
+        (false, true) => "file-only",
+        (false, false) => "no transport",
     }
 }
 

@@ -4,7 +4,7 @@
 use crate::config::tests::{LISTING1, LISTING2, LISTING4, LISTING6};
 use crate::config::WorkflowConfig;
 use crate::flow::FlowControl;
-use crate::lowfive::ChannelMode;
+use crate::lowfive::Route;
 
 use super::{patterns_compatible, Topology, WorkflowGraph};
 
@@ -21,11 +21,12 @@ fn listing1_two_channels() {
     let c1 = &g.channels[0];
     assert_eq!(g.nodes[c1.producer].name, "producer");
     assert_eq!(g.nodes[c1.consumer].name, "consumer1");
-    assert_eq!(c1.dsets, vec!["/group1/grid"]);
+    assert_eq!(c1.dset_patterns(), vec!["/group1/grid"]);
     let c2 = &g.channels[1];
     assert_eq!(g.nodes[c2.consumer].name, "consumer2");
-    assert_eq!(c2.dsets, vec!["/group1/particles"]);
-    assert_eq!(c1.mode, ChannelMode::Memory);
+    assert_eq!(c2.dset_patterns(), vec!["/group1/particles"]);
+    assert_eq!(c1.routes.route_of("/group1/grid"), Route::Memory);
+    assert!(c1.routes.any_memory() && !c1.routes.any_file());
     assert_eq!(g.topology(), Topology::FanOut);
     assert_eq!(g.total_ranks, 12);
 }
@@ -79,7 +80,7 @@ fn listing6_globs_and_flow() {
     let c = &g.channels[0];
     assert_eq!(c.in_pattern, "plt*.h5");
     assert_eq!(c.flow, FlowControl::Some(2).lower());
-    assert_eq!(c.dsets, vec!["/level_0/density"]);
+    assert_eq!(c.dset_patterns(), vec!["/level_0/density"]);
     assert_eq!(g.topology(), Topology::Pipeline);
 }
 
@@ -134,14 +135,58 @@ fn dangling_inport_rejected() {
 }
 
 #[test]
-fn transport_mismatch_rejected() {
+fn contradictory_routes_name_dataset_and_tasks() {
+    // Producer memory-only vs consumer file-only: no shared
+    // transport. The error must name the dataset pattern and both
+    // tasks (the satellite diagnosability requirement).
     let res = WorkflowGraph::build(
         &WorkflowConfig::from_yaml_str(
             "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n            memory: 1\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n            file: 1\n            memory: 0\n",
         )
         .unwrap(),
     );
-    assert!(res.is_err());
+    let err = res.unwrap_err().to_string();
+    for needle in ["/d", "p", "c", "memory-only", "file-only"] {
+        assert!(err.contains(needle), "missing {needle:?} in error: {err}");
+    }
+
+    // The mirror image (producer file-only, consumer memory-only) is
+    // just as contradictory.
+    let res = WorkflowGraph::build(
+        &WorkflowConfig::from_yaml_str(
+            "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n            file: 1\n            memory: 0\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n            memory: 1\n",
+        )
+        .unwrap(),
+    );
+    let err = res.unwrap_err().to_string();
+    assert!(err.contains("/d") && err.contains("file-only"), "{err}");
+}
+
+#[test]
+fn mixed_routes_within_one_channel_accepted() {
+    // The paper's Sec. 4.2 scenario: one channel carrying a memory
+    // dataset, a file dataset and a write-through dataset — formerly
+    // rejected as "mixed transports within one channel".
+    let g = build(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: a.h5\n        dsets:\n          - name: /mem\n          - name: /disk\n            file: 1\n            memory: 0\n          - name: /wt\n            file: 1\n            memory: 1\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: a.h5\n        dsets:\n          - name: /mem\n          - name: /disk\n            file: 1\n            memory: 0\n          - name: /wt\n            file: 1\n            memory: 1\n",
+    );
+    assert_eq!(g.channels.len(), 1);
+    let routes = &g.channels[0].routes;
+    assert_eq!(routes.route_of("/mem"), Route::Memory);
+    assert_eq!(routes.route_of("/disk"), Route::File);
+    assert_eq!(routes.route_of("/wt"), Route::Both);
+    assert!(routes.any_memory() && routes.any_file() && routes.any_file_only());
+}
+
+#[test]
+fn producer_write_through_upgrades_memory_consumer() {
+    // Producer flags memory+file, consumer asks memory-only: the
+    // consumer reads in situ while the producer still archives the
+    // dataset (route Both).
+    let g = build(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n            file: 1\n            memory: 1\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n            memory: 1\n",
+    );
+    assert_eq!(g.channels[0].routes.route_of("/d"), Route::Both);
 }
 
 #[test]
@@ -162,7 +207,36 @@ fn glob_dataset_matching() {
         "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: dump.h5\n        dsets:\n          - name: /particles/position\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: dump.h5\n        dsets:\n          - name: /particles/*\n",
     );
     assert_eq!(g.channels.len(), 1);
-    assert_eq!(g.channels[0].dsets, vec!["/particles/*"]);
+    // The table is keyed by the concrete producer name, not the
+    // consumer glob: globs matching several datasets must stay
+    // discriminable per dataset.
+    assert_eq!(g.channels[0].dset_patterns(), vec!["/particles/position"]);
+}
+
+#[test]
+fn glob_consumer_keeps_per_dataset_routes() {
+    // One consumer glob matching two producer datasets with different
+    // transport flags: each dataset keeps its own route.
+    let g = build(
+        "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: dump.h5\n        dsets:\n          - name: /particles/position\n          - name: /particles/velocity\n            memory: 1\n            file: 1\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: dump.h5\n        dsets:\n          - name: /particles/*\n            memory: 1\n            file: 1\n",
+    );
+    let routes = &g.channels[0].routes;
+    assert_eq!(routes.route_of("/particles/position"), Route::Memory);
+    assert_eq!(routes.route_of("/particles/velocity"), Route::Both);
+}
+
+#[test]
+fn duplicate_dataset_with_conflicting_flags_rejected() {
+    // The same concrete dataset matched twice with different resolved
+    // routes is ambiguous — the error names the dataset and tasks.
+    let res = WorkflowGraph::build(
+        &WorkflowConfig::from_yaml_str(
+            "tasks:\n  - func: p\n    nprocs: 1\n    outports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n          - name: /*\n            file: 1\n            memory: 0\n  - func: c\n    nprocs: 1\n    inports:\n      - filename: a.h5\n        dsets:\n          - name: /d\n            memory: 1\n            file: 1\n",
+    )
+        .unwrap(),
+    );
+    let err = res.unwrap_err().to_string();
+    assert!(err.contains("ambiguous") && err.contains("/d"), "{err}");
 }
 
 #[test]

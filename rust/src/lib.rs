@@ -7,10 +7,12 @@
 //! * [`coordinator`] — Wilkins-master: the user-facing workflow driver.
 //! * [`config`] / [`configyaml`] / [`graph`] — the data-centric YAML
 //!   interface and its expansion into a task/channel graph.
-//! * [`lowfive`] / [`flow`] — the HDF5-like transport with M×N
-//!   redistribution and callbacks, over the credit-based streaming
-//!   flow-control layer (per-link policies, bounded round buffers,
-//!   coordinated drop plans; see docs/flow-control.md).
+//! * [`lowfive`] / [`flow`] — the HDF5-like routed data plane:
+//!   producer/consumer engines with per-dataset transport routing
+//!   (memory | file | write-through), M×N redistribution, a zero-copy
+//!   same-process serve path and callbacks, over the credit-based
+//!   streaming flow-control layer (per-link policies, bounded round
+//!   buffers, coordinated drop plans; see docs/flow-control.md).
 //! * [`comm`] / [`henson`] — the virtual-MPI substrate and the
 //!   Henson-like execution model.
 //! * [`net`] — the multi-process execution substrate: socket-backed
@@ -39,6 +41,11 @@ pub mod error;
 pub mod flow;
 pub mod graph;
 pub mod henson;
+// The whole routed data plane is likewise documented surface (DESIGN.md
+// data-plane section, docs/yaml-schema.md routing matrix): every public
+// item in lowfive — engines, routes, model, protocol, disk format —
+// must carry docs or the ci/check.sh doc/clippy gates fail.
+#[warn(missing_docs)]
 pub mod lowfive;
 pub mod metrics;
 pub mod net;

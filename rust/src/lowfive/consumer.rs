@@ -1,0 +1,521 @@
+//! Consumer engine of the routed data plane: opens served files
+//! across in-channels (round-robin fan-in), assembles per-dataset
+//! block tables from memory metadata and/or polled disk files, and
+//! pulls only the intersecting blocks on reads — via the zero-copy
+//! shared-snapshot path when the producer rank shares this process.
+//!
+//! One `ConsumerEngine` lives inside each [`Vol`](super::Vol). A
+//! channel's [`RouteTable`] decides where each dataset's bytes come
+//! from:
+//!
+//! * **memory / both** — the producer's served snapshot, read with
+//!   `DataReq`s over the intercommunicator (remote blocks);
+//! * **file** — the versioned disk file of the same close, polled by
+//!   the disk version the memory round carries
+//!   ([`route::DISK_VERSION_ATTR`](super::route)) — or, on a pure
+//!   file-mode channel, the lowest unconsumed version.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::InterComm;
+use crate::error::{Result, WilkinsError};
+use crate::metrics::SpanKind;
+
+use super::hyperslab::{copy_region, Hyperslab};
+use super::model::{AttrValue, DatasetMeta, H5File};
+use super::protocol::{
+    FileMeta, Reply, Request, REP_SHARED_DISCRIMINANT, TAG_REP, TAG_REQ,
+};
+use super::route::{self, RouteTable, DISK_VERSION_ATTR};
+use super::stats::EngineCx;
+use super::{filemode, pattern_matches};
+
+/// Consumer-side channel from one producer task.
+pub struct InChannel {
+    /// Intercommunicator to the producer task's I/O ranks (None on
+    /// pure file-mode channels).
+    pub intercomm: Option<InterComm>,
+    /// Consumer-side filename pattern (what opens request).
+    pub pattern: String,
+    /// Per-dataset transport routing of this channel.
+    pub routes: RouteTable,
+    /// Version of the last file consumed from this channel.
+    last_version: u64,
+    exhausted: bool,
+    /// Did we already send EofAck to the producers?
+    eof_acked: bool,
+}
+
+impl InChannel {
+    /// A fresh consumer channel.
+    pub fn new(intercomm: Option<InterComm>, pattern: &str, routes: RouteTable) -> InChannel {
+        InChannel {
+            intercomm,
+            pattern: pattern.to_string(),
+            routes,
+            last_version: 0,
+            exhausted: false,
+            eof_acked: false,
+        }
+    }
+}
+
+/// Where one opened dataset's bytes come from.
+enum DsetSource {
+    /// Remote producer blocks: per-producer-rank owned slabs, pulled
+    /// with DataReqs over the channel intercomm.
+    Remote { rank_slabs: Vec<Vec<Hyperslab>> },
+    /// Fully materialised in the file's local (disk-read) half.
+    Local,
+}
+
+/// A consumer-side opened file: merged metadata + block locations,
+/// possibly assembled from both transports (mixed routing).
+pub struct ConsumerFile {
+    /// The actual filename served (glob patterns resolve to this).
+    pub filename: String,
+    /// Serve-round version on the owning channel.
+    pub version: u64,
+    /// File attributes (rank 0's view).
+    pub attrs: Vec<(String, AttrValue)>,
+    /// dataset -> (meta, where its bytes live)
+    datasets: HashMap<String, (DatasetMeta, DsetSource)>,
+    /// Memory channel the file was opened on (None: pure disk file).
+    channel: Option<usize>,
+    /// Locally materialised disk half (file-routed datasets).
+    local: Option<H5File>,
+}
+
+impl ConsumerFile {
+    /// Sorted names of every dataset in the file, whichever transport
+    /// carried it.
+    pub fn dataset_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.datasets.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Look up a file attribute.
+    pub fn attr(&self, key: &str) -> Option<&AttrValue> {
+        self.attrs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+}
+
+/// The consumer half of a [`Vol`](super::Vol): in-channels, opened
+/// files and the fan-in round-robin cursor.
+#[derive(Default)]
+pub(super) struct ConsumerEngine {
+    pub(super) channels: Vec<InChannel>,
+    files: HashMap<String, ConsumerFile>,
+    /// Round-robin cursor over in-channels (fan-in interleaving).
+    cursor: usize,
+}
+
+impl ConsumerEngine {
+    /// Is `name` currently open for reading?
+    pub(super) fn has_file(&self, name: &str) -> bool {
+        self.files.contains_key(name)
+    }
+
+    pub(super) fn file(&self, name: &str) -> Result<&ConsumerFile> {
+        self.files.get(name).ok_or_else(|| {
+            WilkinsError::LowFive(format!("file {name} not open for reading"))
+        })
+    }
+
+    /// Are any in-channels still live (not exhausted)?
+    pub(super) fn has_live_inputs(&self) -> bool {
+        self.channels.iter().any(|c| !c.exhausted)
+    }
+
+    /// Open the next served file from any live in-channel
+    /// (round-robin). Blocks until a producer serves one.
+    pub(super) fn open_any(&mut self, cx: &mut EngineCx<'_>) -> Result<String> {
+        let t0 = Instant::now();
+        let n = self.channels.len();
+        if n == 0 {
+            return Err(WilkinsError::LowFive("no in-channels configured".into()));
+        }
+        loop {
+            let mut all_exhausted = true;
+            for k in 0..n {
+                let idx = (self.cursor + k) % n;
+                if self.channels[idx].exhausted {
+                    continue;
+                }
+                all_exhausted = false;
+                let pat = self.channels[idx].pattern.clone();
+                if let Some(name) = self.open_on_channel(cx, idx, &pat)? {
+                    self.cursor = (idx + 1) % n;
+                    cx.stats.files_opened += 1;
+                    cx.stats.open_wait += t0.elapsed();
+                    cx.record_span(SpanKind::Idle, &format!("open {name}"), t0);
+                    return Ok(name);
+                }
+            }
+            if all_exhausted {
+                return Err(WilkinsError::EndOfStream);
+            }
+        }
+    }
+
+    /// Open the next available file matching `pattern` (the
+    /// `file_open` body). Round-robins across matching in-channels
+    /// (fan-in); Err(EndOfStream) when all matching channels are
+    /// exhausted.
+    pub(super) fn open_matching(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        pattern: &str,
+    ) -> Result<String> {
+        let t0 = Instant::now();
+        let n = self.channels.len();
+        if n == 0 {
+            return Err(WilkinsError::LowFive("no in-channels configured".into()));
+        }
+        let mut tried = 0;
+        let mut matched = false;
+        while tried < n {
+            let idx = (self.cursor + tried) % n;
+            tried += 1;
+            let matches = pattern_matches(&self.channels[idx].pattern, pattern)
+                || pattern_matches(pattern, &self.channels[idx].pattern);
+            if !matches {
+                continue;
+            }
+            matched = true;
+            if self.channels[idx].exhausted {
+                continue;
+            }
+            match self.open_on_channel(cx, idx, pattern)? {
+                Some(name) => {
+                    self.cursor = (idx + 1) % n;
+                    cx.stats.files_opened += 1;
+                    cx.stats.open_wait += t0.elapsed();
+                    cx.record_span(SpanKind::Idle, &format!("open {name}"), t0);
+                    return Ok(name);
+                }
+                None => continue, // hit EOF on this channel; try next
+            }
+        }
+        if !matched {
+            return Err(WilkinsError::LowFive(format!(
+                "no in-channel matches pattern {pattern}"
+            )));
+        }
+        Err(WilkinsError::EndOfStream)
+    }
+
+    /// Try to open on a specific channel. Ok(None) => channel EOF.
+    fn open_on_channel(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        pattern: &str,
+    ) -> Result<Option<String>> {
+        let min_version = self.channels[idx].last_version + 1;
+        if !self.channels[idx].routes.any_memory() {
+            return self.open_disk_only(cx, idx, min_version);
+        }
+        let ic = self.channels[idx]
+            .intercomm
+            .as_ref()
+            .ok_or_else(|| WilkinsError::LowFive("memory channel without intercomm".into()))?
+            .clone();
+        let req = Request::MetaReq {
+            pattern: pattern.to_string(),
+            min_version,
+        }
+        .encode();
+        for r in 0..ic.remote_size() {
+            ic.send(r, TAG_REQ, &req);
+        }
+        let mut metas: Vec<Option<FileMeta>> = (0..ic.remote_size()).map(|_| None).collect();
+        let mut eof = false;
+        for _ in 0..ic.remote_size() {
+            let (src, bytes) = ic.recv_any(TAG_REP)?;
+            match Reply::decode(&bytes)? {
+                Reply::Meta(m) => metas[src] = Some(m),
+                Reply::Eof => eof = true,
+                Reply::Data(_) => {
+                    return Err(WilkinsError::LowFive(
+                        "unexpected data reply during open".into(),
+                    ))
+                }
+            }
+        }
+        if eof {
+            // SPMD producers answer consistently: all Eof.
+            self.channels[idx].exhausted = true;
+            if !self.channels[idx].eof_acked {
+                let ack = Request::EofAck.encode();
+                for r in 0..ic.remote_size() {
+                    ic.send(r, TAG_REQ, &ack);
+                }
+                self.channels[idx].eof_acked = true;
+            }
+            return Ok(None);
+        }
+        let mut filename = String::new();
+        let mut version = 0;
+        let mut attrs = Vec::new();
+        let mut datasets: HashMap<String, (DatasetMeta, DsetSource)> = HashMap::new();
+        let nremote = ic.remote_size();
+        for (src, m) in metas.into_iter().enumerate() {
+            let m =
+                m.ok_or_else(|| WilkinsError::LowFive("missing metadata reply".into()))?;
+            filename = m.filename;
+            version = m.version;
+            if src == 0 {
+                attrs = m.attrs;
+            }
+            for (meta, slabs) in m.datasets {
+                let entry = datasets.entry(meta.name.clone()).or_insert_with(|| {
+                    (meta.clone(), DsetSource::Remote { rank_slabs: vec![Vec::new(); nremote] })
+                });
+                if let DsetSource::Remote { rank_slabs } = &mut entry.1 {
+                    rank_slabs[src] = slabs;
+                }
+            }
+        }
+        // Mixed routing: the round carries the disk version holding
+        // its file-only datasets; fetch and fold them in as local.
+        let disk_version = attrs
+            .iter()
+            .find(|(k, _)| k == DISK_VERSION_ATTR)
+            .and_then(|(_, v)| v.as_i64());
+        attrs.retain(|(k, _)| k != DISK_VERSION_ATTR);
+        let mut local = None;
+        if let Some(v) = disk_version {
+            let deadline = Instant::now() + crate::comm::RECV_TIMEOUT;
+            let file = filemode::poll_file_exact(
+                cx.workdir,
+                &self.channels[idx].pattern,
+                v as u64,
+                deadline,
+            )?;
+            for d in file.datasets.values() {
+                // Memory wins for write-through datasets present on
+                // both transports; disk supplies the file-only rest.
+                datasets
+                    .entry(d.meta.name.clone())
+                    .or_insert_with(|| (d.meta.clone(), DsetSource::Local));
+            }
+            local = Some(file);
+        }
+        self.channels[idx].last_version = version;
+        let cf = ConsumerFile {
+            filename: filename.clone(),
+            version,
+            attrs,
+            datasets,
+            channel: Some(idx),
+            local,
+        };
+        self.files.insert(filename.clone(), cf);
+        Ok(Some(filename))
+    }
+
+    /// Pure file-mode open: poll the workdir for the next unconsumed
+    /// version of the channel's pattern.
+    fn open_disk_only(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        min_version: u64,
+    ) -> Result<Option<String>> {
+        let deadline = Instant::now() + crate::comm::RECV_TIMEOUT;
+        let found = filemode::poll_file(
+            cx.workdir,
+            &self.channels[idx].pattern,
+            min_version,
+            deadline,
+        )?;
+        match found {
+            Some((file, version)) => {
+                self.channels[idx].last_version = version;
+                let name = file.name.clone();
+                let cf = ConsumerFile {
+                    filename: name.clone(),
+                    version,
+                    attrs: file
+                        .attrs
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .collect(),
+                    datasets: file
+                        .datasets
+                        .values()
+                        .map(|d| (d.meta.name.clone(), (d.meta.clone(), DsetSource::Local)))
+                        .collect(),
+                    channel: None,
+                    local: Some(file),
+                };
+                self.files.insert(name.clone(), cf);
+                Ok(Some(name))
+            }
+            None => {
+                self.channels[idx].exhausted = true;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Metadata of one dataset of an opened file.
+    pub(super) fn dataset_meta(&self, file: &str, dset: &str) -> Result<DatasetMeta> {
+        let cf = self.file(file)?;
+        cf.datasets
+            .get(dset)
+            .map(|(m, _)| m.clone())
+            .ok_or_else(|| WilkinsError::LowFive(format!("no dataset {dset} in {file}")))
+    }
+
+    /// Read `want` of `dset` (global coordinates). Remote datasets
+    /// pull only the intersecting blocks from the producer ranks that
+    /// own them; local (disk-routed) datasets copy from the polled
+    /// file.
+    pub(super) fn dataset_read(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        file: &str,
+        dset: &str,
+        want: &Hyperslab,
+    ) -> Result<Vec<u8>> {
+        let (meta, remote_slabs, src_channel) = {
+            let cf = self.file(file)?;
+            let (m, s) = cf
+                .datasets
+                .get(dset)
+                .ok_or_else(|| WilkinsError::LowFive(format!("no dataset {dset} in {file}")))?;
+            let slabs = match s {
+                DsetSource::Remote { rank_slabs } => Some(rank_slabs.clone()),
+                DsetSource::Local => None,
+            };
+            (m.clone(), slabs, cf.channel)
+        };
+        let esize = meta.dtype.size_bytes();
+        let mut out = vec![0u8; want.element_count() as usize * esize];
+        match remote_slabs {
+            None => {
+                // Disk-routed: blocks are local to this process.
+                let cf = self.files.get(file).unwrap();
+                if let Some(f) = &cf.local {
+                    let filled = f.dataset(dset)?.read_into(want, &mut out);
+                    cx.stats.bytes_read += filled * esize as u64;
+                }
+            }
+            Some(rank_slabs) => {
+                let idx = src_channel.ok_or_else(|| {
+                    WilkinsError::LowFive(format!("remote dataset {dset} without a channel"))
+                })?;
+                let ic = self.channels[idx].intercomm.as_ref().unwrap().clone();
+                let req = Request::DataReq {
+                    file: file.to_string(),
+                    dset: dset.to_string(),
+                    slab: want.clone(),
+                }
+                .encode();
+                // Only contact ranks whose owned slabs intersect the
+                // wanted region (O(M+N) block-range intersection).
+                let targets: Vec<usize> = rank_slabs
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, slabs)| slabs.iter().any(|s| s.overlaps(want)))
+                    .map(|(r, _)| r)
+                    .collect();
+                if cx.lockstep_reads {
+                    // Ablation arm: request/await one rank at a time.
+                    for &r in &targets {
+                        ic.send(r, TAG_REQ, &req);
+                        let (_, bytes) = ic.recv(r, TAG_REP)?;
+                        apply_data_reply(cx, dset, &bytes, want, &mut out, esize)?;
+                    }
+                } else {
+                    // Default: pipeline — send every request first,
+                    // then collect, overlapping the producers' work.
+                    for &r in &targets {
+                        ic.send(r, TAG_REQ, &req);
+                    }
+                    for &r in &targets {
+                        let (_, bytes) = ic.recv(r, TAG_REP)?;
+                        apply_data_reply(cx, dset, &bytes, want, &mut out, esize)?;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Close an opened file: release the serve round (Done to every
+    /// producer rank on memory channels).
+    pub(super) fn file_close(&mut self, name: &str) -> Result<()> {
+        if let Some(cf) = self.files.remove(name) {
+            if let Some(channel) = cf.channel {
+                let ic = self.channels[channel].intercomm.as_ref().unwrap();
+                let done = Request::Done { version: cf.version }.encode();
+                for r in 0..ic.remote_size() {
+                    ic.send(r, TAG_REQ, &done);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Consumer finalize: tell producers on every non-exhausted memory
+    /// channel that this rank will not request again. Idempotent.
+    pub(super) fn finalize(&mut self) -> Result<()> {
+        for ch in &mut self.channels {
+            if ch.routes.any_memory() && !ch.eof_acked {
+                if let Some(ic) = &ch.intercomm {
+                    let ack = Request::EofAck.encode();
+                    for r in 0..ic.remote_size() {
+                        ic.send(r, TAG_REQ, &ack);
+                    }
+                }
+                ch.eof_acked = true;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Apply one data reply to the caller's output buffer.
+///
+/// Inline replies (§Perf iteration 3) stream block bytes straight
+/// from the wire buffer; shared replies resolve the token against the
+/// process-local registry and copy regions directly out of the
+/// producer's snapshot — the zero-copy fast path's receiving half.
+fn apply_data_reply(
+    cx: &mut EngineCx<'_>,
+    dset: &str,
+    bytes: &[u8],
+    want: &Hyperslab,
+    out: &mut [u8],
+    esize: usize,
+) -> Result<()> {
+    let mut r = crate::comm::wire::Reader::new(bytes);
+    match r.get_u8()? {
+        1 => {
+            let nblocks = r.get_u64()? as usize;
+            for _ in 0..nblocks {
+                let region = Hyperslab::decode(&mut r)?;
+                let data = r.get_bytes()?; // borrowed, no copy
+                cx.stats.bytes_read += data.len() as u64;
+                copy_region(&region, data, want, out, &region, esize);
+            }
+            Ok(())
+        }
+        REP_SHARED_DISCRIMINANT => {
+            let token = r.get_u64()?;
+            let snap: Arc<H5File> = route::take_snapshot(token).ok_or_else(|| {
+                WilkinsError::LowFive("shared serve token did not resolve".into())
+            })?;
+            let filled = snap.dataset(dset)?.read_into(want, out);
+            cx.stats.bytes_read += filled * esize as u64;
+            Ok(())
+        }
+        c => Err(WilkinsError::LowFive(format!("bad data reply code {c}"))),
+    }
+}

@@ -14,10 +14,15 @@ use crate::comm::wire::{Reader, Writer};
 use crate::error::{Result, WilkinsError};
 
 use super::hyperslab::Hyperslab;
-use super::model::{AttrValue, DatasetMeta, H5File, OwnedBlock};
+use super::model::{AttrValue, Dataset, DatasetMeta, H5File, OwnedBlock};
 use super::pattern_matches;
 
 const MAGIC: &[u8; 4] = b"WLF5";
+
+/// Cap of the consumer poll loop's exponential backoff: waiting
+/// consumers sleep 1 ms, 2 ms, 4 ms ... up to this, instead of
+/// busy-spinning a core at a fixed 1 ms cadence.
+const MAX_POLL_BACKOFF: Duration = Duration::from_millis(20);
 
 /// Encode a set of files (used for disk files and broadcast_files).
 /// Generic over the map's value ownership so the producer's shared
@@ -29,25 +34,45 @@ pub fn encode_files<F: std::borrow::Borrow<H5File>>(files: &HashMap<String, F>) 
     names.sort();
     for name in names {
         let f: &H5File = files[name].borrow();
-        w.put_str(name);
-        w.put_u64(f.attrs.len() as u64);
-        for (k, v) in &f.attrs {
-            w.put_str(k);
-            v.encode(&mut w);
-        }
-        w.put_u64(f.datasets.len() as u64);
-        for d in f.datasets.values() {
-            d.meta.encode(&mut w);
-            w.put_u64(d.blocks.len() as u64);
-            for b in &d.blocks {
-                b.slab.encode(&mut w);
-                w.put_bytes(&b.data);
-            }
-        }
+        encode_one_file(&mut w, name, f, &|_| true);
     }
     w.into_vec()
 }
 
+/// Encode one file keeping only the datasets `keep` accepts — the
+/// disk write-through path filters file-routed datasets during
+/// encoding instead of cloning them into a temporary file. The output
+/// is byte-compatible with [`decode_files`] (a one-entry set).
+pub fn encode_file_filtered(file: &H5File, keep: impl Fn(&str) -> bool) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u64(1);
+    encode_one_file(&mut w, &file.name, file, &keep);
+    w.into_vec()
+}
+
+/// The single per-file encoder behind [`encode_files`] and
+/// [`encode_file_filtered`]: one writer for the on-disk format, so the
+/// filtered and unfiltered paths can never drift apart.
+fn encode_one_file(w: &mut Writer, name: &str, f: &H5File, keep: &dyn Fn(&str) -> bool) {
+    w.put_str(name);
+    w.put_u64(f.attrs.len() as u64);
+    for (k, v) in &f.attrs {
+        w.put_str(k);
+        v.encode(w);
+    }
+    let kept: Vec<&Dataset> = f.datasets.values().filter(|d| keep(&d.meta.name)).collect();
+    w.put_u64(kept.len() as u64);
+    for d in kept {
+        d.meta.encode(w);
+        w.put_u64(d.blocks.len() as u64);
+        for b in &d.blocks {
+            b.slab.encode(w);
+            w.put_bytes(&b.data);
+        }
+    }
+}
+
+/// Decode a set of files encoded by [`encode_files`].
 pub fn decode_files(bytes: &[u8]) -> Result<HashMap<String, H5File>> {
     let mut r = Reader::new(bytes);
     let nfiles = r.get_u64()? as usize;
@@ -112,7 +137,9 @@ pub fn write_file(workdir: &Path, file: &H5File, version: u64) -> Result<()> {
     let mut w = Writer::new();
     w.put_u64(version);
     w.put_str(&file.name);
-    let body = encode_files(&HashMap::from([(file.name.clone(), file.clone())]));
+    // Borrow through the map: no deep copy of the merged blocks just
+    // to serialize them.
+    let body = encode_files(&HashMap::from([(file.name.clone(), file)]));
     w.put_bytes(&body);
     let final_path = disk_path(workdir, &file.name, version);
     let tmp = final_path.with_extension("tmp");
@@ -161,6 +188,59 @@ pub fn poll_file(
     min_version: u64,
     deadline: Instant,
 ) -> Result<Option<(H5File, u64)>> {
+    poll_matching(
+        workdir,
+        pattern,
+        |v| v >= min_version,
+        true,
+        deadline,
+        &format!("version >= {min_version}"),
+    )
+}
+
+/// Poll `workdir` for the disk file of *exactly* `version` — the
+/// mixed-route consumer path: the memory round names the version its
+/// file-routed datasets were archived under
+/// ([`route::DISK_VERSION_ATTR`](super::route)). The producer writes
+/// the disk file before serving the round, so this normally returns
+/// on the first pass; the deadline guards against a producer that
+/// died in between.
+pub fn poll_file_exact(
+    workdir: &Path,
+    pattern: &str,
+    version: u64,
+    deadline: Instant,
+) -> Result<H5File> {
+    poll_matching(
+        workdir,
+        pattern,
+        |v| v == version,
+        false,
+        deadline,
+        &format!("version == {version}"),
+    )?
+    .map(|(file, _)| file)
+    .ok_or_else(|| {
+        WilkinsError::LowFive(format!(
+            "disk stream for {pattern} ended before version {version}"
+        ))
+    })
+}
+
+/// The single polling loop behind both consumer poll paths: scan the
+/// workdir for the lowest `accept`ed version of `pattern`, sleeping
+/// with exponential backoff between passes. `stop_on_eof` returns
+/// `Ok(None)` once the stream's EOF marker exists (the sequential
+/// consumer path); without it only the deadline ends the wait.
+fn poll_matching(
+    workdir: &Path,
+    pattern: &str,
+    accept: impl Fn(u64) -> bool,
+    stop_on_eof: bool,
+    deadline: Instant,
+    what: &str,
+) -> Result<Option<(H5File, u64)>> {
+    let mut backoff = Duration::from_millis(1);
     loop {
         let mut best: Option<(u64, PathBuf)> = None;
         if workdir.is_dir() {
@@ -171,10 +251,11 @@ pub fn poll_file(
                     continue;
                 }
                 if let Ok((name, version, _)) = read_header(&path) {
-                    if version >= min_version && pattern_matches(pattern, &name) {
-                        if best.as_ref().map_or(true, |(v, _)| version < *v) {
-                            best = Some((version, path));
-                        }
+                    if accept(version)
+                        && pattern_matches(pattern, &name)
+                        && best.as_ref().map_or(true, |(v, _)| version < *v)
+                    {
+                        best = Some((version, path));
                     }
                 }
             }
@@ -183,15 +264,17 @@ pub fn poll_file(
             let (_, version, file) = read_disk_file(&path)?;
             return Ok(Some((file, version)));
         }
-        if eof_path(workdir, pattern).exists() {
+        if stop_on_eof && eof_path(workdir, pattern).exists() {
             return Ok(None);
         }
         if Instant::now() >= deadline {
             return Err(WilkinsError::LowFive(format!(
-                "timed out polling for {pattern} (version >= {min_version})"
+                "timed out polling for {pattern} ({what})"
             )));
         }
-        std::thread::sleep(Duration::from_millis(1));
+        // Exponential backoff: waiting must not burn a core.
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(MAX_POLL_BACKOFF);
     }
 }
 

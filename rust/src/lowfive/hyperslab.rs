@@ -13,11 +13,14 @@ use crate::error::Result;
 /// An axis-aligned block selection of an n-dimensional dataset.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Hyperslab {
+    /// Per-dimension start coordinate (global).
     pub offset: Vec<u64>,
+    /// Per-dimension extent.
     pub count: Vec<u64>,
 }
 
 impl Hyperslab {
+    /// A slab from per-dimension offsets and counts (equal rank).
     pub fn new(offset: &[u64], count: &[u64]) -> Hyperslab {
         assert_eq!(offset.len(), count.len(), "offset/count rank mismatch");
         Hyperslab { offset: offset.to_vec(), count: count.to_vec() }
@@ -33,14 +36,17 @@ impl Hyperslab {
         Hyperslab { offset: vec![offset], count: vec![count] }
     }
 
+    /// Dimensionality of the slab.
     pub fn dims(&self) -> usize {
         self.offset.len()
     }
 
+    /// Total selected elements.
     pub fn element_count(&self) -> u64 {
         self.count.iter().product()
     }
 
+    /// Does the slab select nothing (any zero count)?
     pub fn is_empty(&self) -> bool {
         self.count.iter().any(|&c| c == 0)
     }
@@ -100,11 +106,13 @@ impl Hyperslab {
             .sum()
     }
 
+    /// Append the wire form to `w`.
     pub fn encode(&self, w: &mut Writer) {
         w.put_u64_slice(&self.offset);
         w.put_u64_slice(&self.count);
     }
 
+    /// Decode a slab from `r`.
     pub fn decode(r: &mut Reader) -> Result<Hyperslab> {
         let offset = r.get_u64_vec()?;
         let count = r.get_u64_vec()?;

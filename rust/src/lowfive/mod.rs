@@ -1,5 +1,6 @@
 //! LowFive reimplementation (substrate S5): data model, hyperslab
-//! redistribution, memory/file transports, callbacks.
+//! redistribution, the routed data plane (per-dataset memory / file /
+//! write-through transports), callbacks.
 //!
 //! The real LowFive is an HDF5 Virtual Object Layer plugin; task codes
 //! keep calling HDF5 and the plugin intercepts the I/O. Here the
@@ -8,16 +9,30 @@
 //! `dataset_read`): task codes call only this generic API and never see
 //! workflow machinery, preserving the paper's "no task-code changes"
 //! property in spirit.
+//!
+//! Module map: the [`Vol`] facade is the task-facing API; [`producer`] and
+//! [`consumer`] are the two engine halves behind it; [`route`] holds
+//! the per-dataset transport routing; [`model`], [`hyperslab`],
+//! [`protocol`] and [`filemode`] are the shared data model, block
+//! algebra, wire protocol and disk format.
 
+pub mod consumer;
 pub mod filemode;
 pub mod hyperslab;
 pub mod model;
+pub mod producer;
 pub mod protocol;
+pub mod route;
+pub mod stats;
 mod vol;
 
+pub use consumer::{ConsumerFile, InChannel};
 pub use hyperslab::{split_rows, Hyperslab};
 pub use model::{AttrValue, DType, DatasetMeta, H5File};
-pub use vol::{Callbacks, ChannelMode, ConsumerFile, InChannel, OutChannel, Vol, VolStats};
+pub use producer::OutChannel;
+pub use route::{Route, RouteTable};
+pub use stats::VolStats;
+pub use vol::{Callbacks, Vol};
 
 /// Filename/dataset glob matching (`plt*.h5`, `/particles/*`, exact
 /// names). Invalid patterns fall back to string equality.

@@ -16,14 +16,20 @@ use super::hyperslab::Hyperslab;
 /// benchmark uses u64 grids + f32 particles; the science payloads f32).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// Unsigned 8-bit integer.
     U8,
+    /// Signed 32-bit integer.
     I32,
+    /// Unsigned 64-bit integer (the synthetic grid).
     U64,
+    /// 32-bit float (particles, science payloads).
     F32,
+    /// 64-bit float.
     F64,
 }
 
 impl DType {
+    /// Element size in bytes.
     pub fn size_bytes(&self) -> usize {
         match self {
             DType::U8 => 1,
@@ -32,6 +38,7 @@ impl DType {
         }
     }
 
+    /// Wire code of this dtype.
     pub fn code(&self) -> u8 {
         match self {
             DType::U8 => 0,
@@ -42,6 +49,7 @@ impl DType {
         }
     }
 
+    /// Decode a wire dtype code.
     pub fn from_code(c: u8) -> Result<DType> {
         Ok(match c {
             0 => DType::U8,
@@ -57,12 +65,16 @@ impl DType {
 /// Attribute values (HDF5 scalar attributes).
 #[derive(Debug, Clone, PartialEq)]
 pub enum AttrValue {
+    /// Integer scalar.
     Int(i64),
+    /// Floating-point scalar.
     Float(f64),
+    /// String scalar.
     Str(String),
 }
 
 impl AttrValue {
+    /// Append the wire form to `w`.
     pub fn encode(&self, w: &mut Writer) {
         match self {
             AttrValue::Int(v) => {
@@ -80,6 +92,7 @@ impl AttrValue {
         }
     }
 
+    /// Decode one attribute value from `r`.
     pub fn decode(r: &mut Reader) -> Result<AttrValue> {
         Ok(match r.get_u8()? {
             0 => AttrValue::Int(r.get_i64()?),
@@ -89,6 +102,7 @@ impl AttrValue {
         })
     }
 
+    /// The integer value, if this is an `Int`.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             AttrValue::Int(v) => Some(*v),
@@ -100,22 +114,28 @@ impl AttrValue {
 /// Dataset metadata: global shape + dtype.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DatasetMeta {
+    /// Full HDF5-style path, e.g. `/group1/grid`.
     pub name: String,
+    /// Element datatype.
     pub dtype: DType,
+    /// Global shape.
     pub dims: Vec<u64>,
 }
 
 impl DatasetMeta {
+    /// Total elements of the global shape.
     pub fn element_count(&self) -> u64 {
         self.dims.iter().product()
     }
 
+    /// Append the wire form to `w`.
     pub fn encode(&self, w: &mut Writer) {
         w.put_str(&self.name);
         w.put_u8(self.dtype.code());
         w.put_u64_slice(&self.dims);
     }
 
+    /// Decode dataset metadata from `r`.
     pub fn decode(r: &mut Reader) -> Result<DatasetMeta> {
         Ok(DatasetMeta {
             name: r.get_str()?,
@@ -129,18 +149,23 @@ impl DatasetMeta {
 /// plus its bytes (row-major within the slab).
 #[derive(Debug, Clone)]
 pub struct OwnedBlock {
+    /// The region this block covers (global coordinates).
     pub slab: Hyperslab,
+    /// Row-major bytes within the slab.
     pub data: Vec<u8>,
 }
 
 /// A dataset as seen by one rank: global metadata + its local blocks.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Global metadata (shape + dtype).
     pub meta: DatasetMeta,
+    /// This rank's owned blocks.
     pub blocks: Vec<OwnedBlock>,
 }
 
 impl Dataset {
+    /// An empty dataset with the given metadata.
     pub fn new(meta: DatasetMeta) -> Dataset {
         Dataset { meta, blocks: Vec::new() }
     }
@@ -192,16 +217,21 @@ impl Dataset {
 /// An in-memory "HDF5 file": datasets by path + file attributes.
 #[derive(Debug, Clone, Default)]
 pub struct H5File {
+    /// Filename (serves and polls match patterns against it).
     pub name: String,
+    /// Datasets by full path.
     pub datasets: BTreeMap<String, Dataset>,
+    /// File attributes.
     pub attrs: BTreeMap<String, AttrValue>,
 }
 
 impl H5File {
+    /// A fresh, empty file.
     pub fn new(name: &str) -> H5File {
         H5File { name: name.to_string(), ..Default::default() }
     }
 
+    /// Create a dataset; rejects duplicates.
     pub fn create_dataset(&mut self, name: &str, dtype: DType, dims: &[u64]) -> Result<()> {
         if self.datasets.contains_key(name) {
             return Err(WilkinsError::LowFive(format!(
@@ -220,12 +250,14 @@ impl H5File {
         Ok(())
     }
 
+    /// Look up a dataset by path.
     pub fn dataset(&self, name: &str) -> Result<&Dataset> {
         self.datasets.get(name).ok_or_else(|| {
             WilkinsError::LowFive(format!("no dataset {name} in file {}", self.name))
         })
     }
 
+    /// Mutable dataset lookup.
     pub fn dataset_mut(&mut self, name: &str) -> Result<&mut Dataset> {
         let fname = self.name.clone();
         self.datasets.get_mut(name).ok_or_else(|| {

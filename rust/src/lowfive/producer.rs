@@ -1,0 +1,789 @@
+//! Producer engine of the routed data plane: per-channel serve rounds
+//! over the flow layer, per-dataset transport routing, disk
+//! write-through, and the zero-copy fast path for same-process
+//! consumers.
+//!
+//! One `ProducerEngine` lives inside each [`Vol`](super::Vol). A
+//! producer file close becomes, per matching channel:
+//!
+//! * a **disk write** of the file/both-routed dataset union (one
+//!   versioned file per close, shared by every file-mode consumer),
+//! * a **memory round** admitted through the channel's [`LinkState`]
+//!   per its flow policy. The round shares the producer's file `Arc`
+//!   (no bytes move at admission); what a channel *delivers* is
+//!   decided at metadata time — file-only datasets are never
+//!   advertised, so consumers never request them over memory.
+//!
+//! Mixed channels stamp the disk version of the same close into the
+//! round's delivered metadata (see
+//! [`route::DISK_VERSION_ATTR`](super::route)), so the consumer
+//! engine can fetch the file-routed datasets of exactly that round.
+//!
+//! Data requests from consumer ranks hosted in the *same OS process*
+//! skip the encode/deliver/decode copies entirely: the snapshot `Arc`
+//! is parked in the process-local registry and only a token crosses
+//! the mailbox ([`VolStats::bytes_shared`] vs
+//! [`VolStats::bytes_copied`]).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::comm::InterComm;
+use crate::error::{Result, WilkinsError};
+use crate::flow::{ChannelPolicy, FlowControl, LinkState, Plan, PlanOp};
+use crate::metrics::SpanKind;
+
+use super::hyperslab::Hyperslab;
+use super::model::{AttrValue, H5File};
+use super::protocol::{
+    encode_shared_reply, FileMeta, Reply, Request, REQ_DATA_DISCRIMINANT, TAG_REP, TAG_REQ,
+};
+use super::route::{self, RouteTable, DISK_VERSION_ATTR};
+use super::stats::{EngineCx, VolStats};
+use super::{filemode, pattern_matches};
+
+/// Producer-side channel to one consumer task. Versions are monotonic
+/// per channel (not per file) so globbed multi-file streams like
+/// plt*.h5 stay ordered; the round buffer, credit window and drop
+/// accounting live in the channel's [`LinkState`] (the flow layer).
+pub struct OutChannel {
+    /// Intercommunicator to the consumer task's ranks (None on
+    /// non-I/O ranks and on pure file-mode channels).
+    pub intercomm: Option<InterComm>,
+    /// Producer-side filename pattern (what file closes serve on).
+    pub pattern: String,
+    /// Per-dataset transport routing of this channel.
+    pub routes: RouteTable,
+    /// Flow engine: bounded round buffer + credits (Sec. 3.6).
+    /// Round snapshots are `Arc`s of the producer's in-memory file:
+    /// admission is O(1), and the producer's next write to the file
+    /// copy-on-writes (`Arc::make_mut`) only while a buffered round
+    /// still references the old bytes.
+    link: LinkState<Arc<H5File>>,
+    /// MetaReqs pulled out of the mailbox that no buffered round can
+    /// answer yet (fast consumer re-opened early, or everything it
+    /// could read was dropped).
+    deferred: VecDeque<(usize, Request)>,
+    /// Round version → disk version written on the same close, for
+    /// mixed channels (file-only datasets present): delivered
+    /// metadata carries it so the consumer polls exactly the matching
+    /// archive. Pruned as rounds retire.
+    disk_of: HashMap<u64, u64>,
+}
+
+impl OutChannel {
+    /// A fresh channel with the default (synchronous block) policy.
+    pub fn new(intercomm: Option<InterComm>, pattern: &str, routes: RouteTable) -> OutChannel {
+        let remote = intercomm.as_ref().map_or(0, |ic| ic.remote_size());
+        OutChannel {
+            intercomm,
+            pattern: pattern.to_string(),
+            routes,
+            link: LinkState::new(ChannelPolicy::block(), remote),
+            deferred: VecDeque::new(),
+            disk_of: HashMap::new(),
+        }
+    }
+
+    /// Set the channel's flow policy (resets the link's round buffer;
+    /// call before the first serve).
+    pub fn with_policy(mut self, policy: ChannelPolicy) -> OutChannel {
+        let remote = self.intercomm.as_ref().map_or(0, |ic| ic.remote_size());
+        self.link = LinkState::new(policy, remote);
+        self.disk_of.clear();
+        self
+    }
+
+    /// Legacy sugar: lower a three-mode strategy onto its policy.
+    pub fn with_flow(self, flow: FlowControl) -> OutChannel {
+        self.with_policy(flow.lower())
+    }
+
+    /// The channel's flow policy.
+    pub fn policy(&self) -> ChannelPolicy {
+        self.link.policy()
+    }
+}
+
+/// The producer half of a [`Vol`](super::Vol): out-channels plus the
+/// disk-write version counter.
+#[derive(Default)]
+pub(super) struct ProducerEngine {
+    pub(super) channels: Vec<OutChannel>,
+    /// Monotonic version for file-routed disk writes.
+    disk_version: u64,
+    /// File-mode serves (disk writes) completed, folded into
+    /// `files_served` alongside the memory channels' completions.
+    disk_serves: u64,
+}
+
+impl ProducerEngine {
+    /// Are there pending (unanswered) consumer requests for files
+    /// matching this name? Drives the *latest* flow-control strategy.
+    pub(super) fn any_pending_requests(&self, filename: &str) -> bool {
+        self.channels.iter().any(|ch| {
+            ch.routes.any_memory()
+                && pattern_matches(&ch.pattern, filename)
+                && (!ch.deferred.is_empty()
+                    || ch.intercomm.as_ref().is_some_and(|ic| ic.iprobe(TAG_REQ)))
+        })
+    }
+
+    /// Serve one file close: write the file-routed dataset union to
+    /// disk (once), then admit one memory round per matching channel,
+    /// subject to each channel's flow policy (the decision lives in
+    /// [`LinkState`], not here).
+    pub(super) fn serve_file(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        name: &str,
+        file: &Arc<H5File>,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+
+        // Disk side: one versioned file per close carrying the union
+        // of datasets any matching channel archives (file or both).
+        let file_idx: Vec<usize> = (0..self.channels.len())
+            .filter(|&i| {
+                self.channels[i].routes.any_file()
+                    && pattern_matches(&self.channels[i].pattern, name)
+            })
+            .collect();
+        let mut disk_written = None;
+        if !file_idx.is_empty() {
+            let disk_dsets: Vec<String> = file
+                .datasets
+                .keys()
+                .filter(|d| {
+                    file_idx
+                        .iter()
+                        .any(|&i| self.channels[i].routes.archives_to_disk(d))
+                })
+                .cloned()
+                .collect();
+            // Every close of a file-routed channel writes a versioned
+            // file, even when no dataset archives this close — an
+            // attr-only close (the nyx metadata pattern) must still
+            // reach file-mode consumers, exactly as it always did.
+            self.disk_version += 1;
+            let v = self.disk_version;
+            write_disk_file(cx, file, v, &disk_dsets)?;
+            self.disk_serves += 1;
+            disk_written = Some(v);
+        }
+
+        // Memory side: one admission per matching channel. The round
+        // shares the file Arc (zero-copy admission); delivered
+        // metadata is filtered per the channel's routes, so file-only
+        // datasets never travel over memory.
+        let mem_idx: Vec<usize> = (0..self.channels.len())
+            .filter(|&i| {
+                self.channels[i].routes.any_memory()
+                    && self.channels[i].intercomm.is_some()
+                    && pattern_matches(&self.channels[i].pattern, name)
+            })
+            .collect();
+        for idx in mem_idx {
+            if !self.channels[idx].link.note_attempt() {
+                continue; // `every`-gated close (counted by the link)
+            }
+            // Mixed channels must point their consumers at the disk
+            // half of this very close; memory-only channels carry no
+            // disk pointer.
+            let disk = disk_written.filter(|_| self.channels[idx].routes.any_file_only());
+            self.enqueue_round(cx, idx, Arc::clone(file), disk)?;
+        }
+        cx.stats.serve_wait += t0.elapsed();
+        cx.record_span(SpanKind::Transfer, &format!("serve {name}"), t0);
+        self.sync_flow_stats(cx.stats);
+        Ok(())
+    }
+
+    /// Fold the per-link flow counters into the rank's `VolStats`
+    /// (the links are the single source of truth).
+    ///
+    /// `files_served` counts rounds actually *consumed*: the busiest
+    /// memory channel's completions (channels at different cadences
+    /// overlap on the same closes, so summing would double-count) plus
+    /// file-mode disk writes. Rounds a dropping policy discarded never
+    /// count — they are `serves_dropped`.
+    pub(super) fn sync_flow_stats(&self, stats: &mut VolStats) {
+        let mut skipped = 0;
+        let mut dropped = 0;
+        let mut completed = 0;
+        let mut stalled = Duration::ZERO;
+        let mut maxq = 0;
+        for ch in &self.channels {
+            skipped += ch.link.stats.skipped;
+            dropped += ch.link.stats.dropped;
+            completed = completed.max(ch.link.stats.completed);
+            stalled += ch.link.stats.stalled;
+            maxq = maxq.max(ch.link.stats.max_queue_depth);
+        }
+        stats.files_served = self.disk_serves.max(completed);
+        stats.serves_skipped = skipped;
+        stats.serves_dropped = dropped;
+        stats.stall_wait = stalled;
+        stats.max_queue_depth = maxq;
+    }
+
+    /// Admit one round on one channel per its policy.
+    ///
+    /// Blocking policies need no cross-rank coordination (no drops;
+    /// deliveries are a pure function of the buffer, which every
+    /// writer rank mutates through the identical push sequence).
+    /// Dropping policies are coordinated by I/O rank 0's section plan
+    /// (see the [`crate::flow`] module docs).
+    fn enqueue_round(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        snapshot: Arc<H5File>,
+        disk: Option<u64>,
+    ) -> Result<()> {
+        if self.channels[idx].link.policy().mode.drops() {
+            self.enqueue_dropping(cx, idx, snapshot, disk)
+        } else {
+            self.enqueue_block(cx, idx, snapshot, disk)
+        }
+    }
+
+    /// Record the disk version of a freshly pushed round (mixed
+    /// channels) and prune mappings of retired rounds.
+    fn track_disk(&mut self, idx: usize, pushed: Option<u64>, disk: Option<u64>) {
+        let ch = &mut self.channels[idx];
+        let (link, disk_of) = (&ch.link, &mut ch.disk_of);
+        if let (Some(v), Some(dv)) = (pushed, disk) {
+            disk_of.insert(v, dv);
+        }
+        disk_of.retain(|v, _| link.round(*v).is_some());
+    }
+
+    fn enqueue_block(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        snapshot: Arc<H5File>,
+        disk: Option<u64>,
+    ) -> Result<()> {
+        self.pump_available(cx, idx, None)?;
+        let v = self.channels[idx].link.push(snapshot);
+        self.track_disk(idx, Some(v), disk);
+        self.answer_deferred(idx, None)?;
+        let target = self.channels[idx].link.policy().depth.saturating_sub(1);
+        if self.channels[idx].link.occupancy() > target {
+            // Out of credits: stall until enough rounds complete.
+            let t0 = Instant::now();
+            while self.channels[idx].link.occupancy() > target {
+                self.pump_one_blocking(cx, idx)?;
+            }
+            self.channels[idx].link.note_stall(t0.elapsed());
+            cx.record_span(SpanKind::Stall, "flow stall", t0);
+        }
+        Ok(())
+    }
+
+    fn enqueue_dropping(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        snapshot: Arc<H5File>,
+        disk: Option<u64>,
+    ) -> Result<()> {
+        let io = cx
+            .io_comm
+            .ok_or_else(|| WilkinsError::LowFive("dropping flow policy on non-io rank".into()))?;
+        if io.rank() == 0 {
+            let mut plan = Plan::default();
+            self.pump_available(cx, idx, Some(&mut plan))?;
+            let admission = self.channels[idx].link.admit(snapshot);
+            self.track_disk(idx, admission.pushed, disk);
+            for v in &admission.dropped {
+                plan.ops.push(PlanOp::Drop { version: *v });
+            }
+            match admission.pushed {
+                Some(v) => plan.ops.push(PlanOp::Push { version: v }),
+                None => plan.ops.push(PlanOp::DropIncoming),
+            }
+            self.answer_deferred(idx, Some(&mut plan))?;
+            if io.size() > 1 {
+                io.bcast(0, Some(&plan.encode()))?;
+            }
+        } else {
+            let bytes = io.bcast(0, None)?;
+            let plan = Plan::decode(&bytes)?;
+            self.replay_plan(cx, idx, snapshot, plan, disk)?;
+        }
+        Ok(())
+    }
+
+    /// Absorb every request already waiting in the mailbox for channel
+    /// `idx` (non-blocking). With `plan`, record the state-mutating
+    /// events so other writer ranks can replay them.
+    fn pump_available(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        mut plan: Option<&mut Plan>,
+    ) -> Result<()> {
+        loop {
+            let Some(ic) = self.channels[idx].intercomm.clone() else {
+                return Ok(());
+            };
+            let Some((src, bytes)) = ic.try_recv_any(TAG_REQ) else {
+                return Ok(());
+            };
+            let req = Request::decode(&bytes)?;
+            self.handle_request(cx, idx, src, req, plan.as_deref_mut())?;
+        }
+    }
+
+    /// Block for one request on channel `idx` and process it.
+    fn pump_one_blocking(&mut self, cx: &mut EngineCx<'_>, idx: usize) -> Result<()> {
+        let ic = self.channels[idx].intercomm.as_ref().unwrap().clone();
+        let (src, bytes) = ic.recv_any(TAG_REQ)?;
+        let req = Request::decode(&bytes)?;
+        self.handle_request(cx, idx, src, req, None)
+    }
+
+    /// Process one consumer request against channel `idx`.
+    fn handle_request(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        src: usize,
+        req: Request,
+        plan: Option<&mut Plan>,
+    ) -> Result<()> {
+        match req {
+            Request::MetaReq { pattern, min_version } => {
+                match self.channels[idx].link.choose_deliver(src, min_version) {
+                    Some(v) => {
+                        self.deliver_meta(idx, src, v)?;
+                        if let Some(p) = plan {
+                            p.ops.push(PlanOp::Deliver { j: src as u64, version: v });
+                        }
+                    }
+                    // No buffered round can answer yet: defer until a
+                    // later push (or the EOF handshake).
+                    None => self.channels[idx]
+                        .deferred
+                        .push_back((src, Request::MetaReq { pattern, min_version })),
+                }
+            }
+            Request::DataReq { ref file, ref dset, ref slab } => {
+                self.answer_data_req(cx, idx, src, file, dset, slab)?;
+            }
+            Request::Done { version } => {
+                self.channels[idx].link.mark_done(version, src)?;
+                if let Some(p) = plan {
+                    p.ops.push(PlanOp::Done { j: src as u64, version });
+                }
+            }
+            Request::EofAck => {
+                self.channels[idx].link.mark_eof(src);
+                if let Some(p) = plan {
+                    p.ops.push(PlanOp::Eof { j: src as u64 });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Answer a MetaReq with buffered round `version` and mark it
+    /// delivered to consumer rank `src`. The metadata is the
+    /// channel's *routed* view of the round: file-only datasets are
+    /// withheld, and mixed rounds carry the disk version the consumer
+    /// must poll for them.
+    fn deliver_meta(&mut self, idx: usize, src: usize, version: u64) -> Result<()> {
+        let rep = {
+            let ch = &self.channels[idx];
+            let round = ch.link.round(version).ok_or_else(|| {
+                WilkinsError::LowFive(format!("deliver of unknown round v{version}"))
+            })?;
+            let disk = ch.disk_of.get(&version).copied();
+            Reply::Meta(snapshot_meta(&round.snapshot, version, &ch.routes, disk)).encode()
+        };
+        let ic = self.channels[idx].intercomm.as_ref().unwrap().clone();
+        ic.send_owned(src, TAG_REP, rep);
+        self.channels[idx].link.mark_delivered(version, src)
+    }
+
+    /// Answer a DataReq from the round consumer rank `src` has open.
+    ///
+    /// Same-process consumers take the zero-copy path: the snapshot
+    /// `Arc` is parked in the shared registry and only a token crosses
+    /// the mailbox; the consumer copies block regions straight out of
+    /// the shared file. Remote (or fast-path-disabled) consumers get
+    /// the classic encoded reply.
+    fn answer_data_req(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        src: usize,
+        file: &str,
+        dset: &str,
+        slab: &Hyperslab,
+    ) -> Result<()> {
+        let snapshot = {
+            let round = self.channels[idx].link.open_round(src).ok_or_else(|| {
+                WilkinsError::LowFive(format!(
+                    "data request for {file} from rank {src} with no open round"
+                ))
+            })?;
+            if round.snapshot.name != file {
+                return Err(WilkinsError::LowFive(format!(
+                    "data request for {file} against round of {}",
+                    round.snapshot.name
+                )));
+            }
+            Arc::clone(&round.snapshot)
+        };
+        let ic = self.channels[idx].intercomm.as_ref().unwrap();
+        if cx.zero_copy && ic.remote_is_local(src) {
+            let nbytes = shared_reply_bytes(&snapshot, dset, slab)?;
+            let token = route::share_snapshot(snapshot);
+            ic.send_owned(src, TAG_REP, encode_shared_reply(token));
+            cx.stats.bytes_served += nbytes as u64;
+            cx.stats.bytes_shared += nbytes as u64;
+            return Ok(());
+        }
+        let (rep, nbytes) = encode_data_reply(&snapshot, dset, slab)?;
+        cx.stats.bytes_served += nbytes as u64;
+        cx.stats.bytes_copied += nbytes as u64;
+        ic.send_owned(src, TAG_REP, rep);
+        Ok(())
+    }
+
+    /// Re-examine deferred MetaReqs: a newly pushed round may satisfy
+    /// them. Answered requests are recorded into `plan` when given.
+    fn answer_deferred(&mut self, idx: usize, mut plan: Option<&mut Plan>) -> Result<()> {
+        let mut keep = VecDeque::new();
+        while let Some((src, req)) = self.channels[idx].deferred.pop_front() {
+            let min_version = match &req {
+                Request::MetaReq { min_version, .. } => *min_version,
+                _ => {
+                    keep.push_back((src, req));
+                    continue;
+                }
+            };
+            match self.channels[idx].link.choose_deliver(src, min_version) {
+                Some(v) => {
+                    self.deliver_meta(idx, src, v)?;
+                    if let Some(p) = plan.as_deref_mut() {
+                        p.ops.push(PlanOp::Deliver { j: src as u64, version: v });
+                    }
+                }
+                None => keep.push_back((src, req)),
+            }
+        }
+        self.channels[idx].deferred = keep;
+        Ok(())
+    }
+
+    /// Replay I/O rank 0's section plan against our own mailbox: apply
+    /// buffer mutations verbatim and consume exactly the planned
+    /// protocol events from each consumer rank's (FIFO) request
+    /// stream, answering our own DataReqs along the way. See the
+    /// [`crate::flow`] module docs for why this keeps writer ranks'
+    /// buffers bit-identical.
+    fn replay_plan(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        snapshot: Arc<H5File>,
+        plan: Plan,
+        disk: Option<u64>,
+    ) -> Result<()> {
+        let mut snapshot = Some(snapshot);
+        self.drain_data_reqs(cx, idx)?;
+        for op in plan.ops {
+            match op {
+                PlanOp::Drop { version } => {
+                    self.channels[idx].link.drop_version(version)?;
+                }
+                PlanOp::Push { version } => {
+                    let snap = snapshot
+                        .take()
+                        .ok_or_else(|| WilkinsError::LowFive("flow plan pushes twice".into()))?;
+                    let v = self.channels[idx].link.push(snap);
+                    if v != version {
+                        return Err(WilkinsError::LowFive(format!(
+                            "flow plan version skew: local v{v}, plan v{version}"
+                        )));
+                    }
+                    self.track_disk(idx, Some(v), disk);
+                }
+                PlanOp::DropIncoming => {
+                    snapshot.take();
+                    self.channels[idx].link.note_drop_incoming();
+                }
+                PlanOp::Deliver { j, version } => {
+                    self.replay_expect(cx, idx, j as usize, Expect::Meta(version))?;
+                }
+                PlanOp::Done { j, version } => {
+                    self.replay_expect(cx, idx, j as usize, Expect::Done(version))?;
+                }
+                PlanOp::Eof { j } => {
+                    self.replay_expect(cx, idx, j as usize, Expect::Eof)?;
+                }
+            }
+        }
+        self.drain_data_reqs(cx, idx)?;
+        Ok(())
+    }
+
+    /// Consume consumer rank `j`'s request stream up to (and
+    /// including) the expected protocol event, answering DataReqs
+    /// encountered on the way.
+    fn replay_expect(
+        &mut self,
+        cx: &mut EngineCx<'_>,
+        idx: usize,
+        j: usize,
+        expect: Expect,
+    ) -> Result<()> {
+        loop {
+            let ic = self.channels[idx].intercomm.as_ref().unwrap().clone();
+            let (_, bytes) = ic.recv(j, TAG_REQ)?;
+            let req = Request::decode(&bytes)?;
+            match (req, expect) {
+                (Request::DataReq { ref file, ref dset, ref slab }, _) => {
+                    self.answer_data_req(cx, idx, j, file, dset, slab)?;
+                }
+                (Request::MetaReq { .. }, Expect::Meta(v)) => {
+                    return self.deliver_meta(idx, j, v);
+                }
+                (Request::Done { version }, Expect::Done(v)) if version == v => {
+                    self.channels[idx].link.mark_done(v, j)?;
+                    return Ok(());
+                }
+                (Request::EofAck, Expect::Eof) => {
+                    self.channels[idx].link.mark_eof(j);
+                    return Ok(());
+                }
+                (other, _) => {
+                    return Err(WilkinsError::LowFive(format!(
+                        "flow plan replay: expected {expect:?} from rank {j}, got {other:?}"
+                    )));
+                }
+            }
+        }
+    }
+
+    /// Answer every DataReq already queued for channel `idx` without
+    /// absorbing any plan-owned protocol event (payload-discriminant
+    /// selective receive). Lets non-leader writer ranks keep consumer
+    /// reads flowing between coordinated sections.
+    fn drain_data_reqs(&mut self, cx: &mut EngineCx<'_>, idx: usize) -> Result<()> {
+        loop {
+            let Some(ic) = self.channels[idx].intercomm.clone() else {
+                return Ok(());
+            };
+            let Some((src, bytes)) =
+                ic.try_recv_where(TAG_REQ, |p| p.first() == Some(&REQ_DATA_DISCRIMINANT))
+            else {
+                return Ok(());
+            };
+            match Request::decode(&bytes)? {
+                Request::DataReq { ref file, ref dset, ref slab } => {
+                    self.answer_data_req(cx, idx, src, file, dset, slab)?;
+                }
+                other => {
+                    return Err(WilkinsError::LowFive(format!(
+                        "selective DataReq receive returned {other:?}"
+                    )));
+                }
+            }
+        }
+    }
+
+    /// Producer finalize: drop the disk EOF marker for file-routed
+    /// channels, flush every memory channel's round buffer (each
+    /// buffered round is delivered and completed — dropping policies
+    /// stop dropping at shutdown so consumers get the freshest data),
+    /// then signal EOF and wait for every consumer rank to
+    /// acknowledge. Idempotent. Mixed channels do both.
+    pub(super) fn finalize(&mut self, cx: &mut EngineCx<'_>) -> Result<()> {
+        for idx in 0..self.channels.len() {
+            if self.channels[idx].routes.any_file() {
+                let io = cx
+                    .io_comm
+                    .ok_or_else(|| WilkinsError::LowFive("file mode on non-io rank".into()))?;
+                if io.rank() == 0 {
+                    filemode::write_eof(cx.workdir, &self.channels[idx].pattern)?;
+                }
+            }
+            if !self.channels[idx].routes.any_memory()
+                || self.channels[idx].intercomm.is_none()
+            {
+                continue;
+            }
+            // 1. Flush: every buffered round must complete before EOF.
+            //    Buffer mutations during flush are completions only,
+            //    so writer ranks stay consistent without a section
+            //    plan.
+            while self.channels[idx].link.occupancy() > 0 {
+                self.answer_deferred(idx, None)?;
+                if self.channels[idx].link.occupancy() == 0 {
+                    break;
+                }
+                self.pump_one_blocking(cx, idx)?;
+            }
+            // 2. EOF handshake: answer remaining open requests with
+            //    Eof until every consumer rank acked.
+            while self.channels[idx].link.acked_count() < self.channels[idx].link.nconsumers() {
+                let (src, req) = match self.channels[idx].deferred.pop_front() {
+                    Some(x) => x,
+                    None => {
+                        let ic = self.channels[idx].intercomm.as_ref().unwrap();
+                        let (src, bytes) = ic.recv_any(TAG_REQ)?;
+                        (src, Request::decode(&bytes)?)
+                    }
+                };
+                match req {
+                    Request::MetaReq { .. } => {
+                        let ic = self.channels[idx].intercomm.as_ref().unwrap();
+                        ic.send(src, TAG_REP, &Reply::Eof.encode());
+                    }
+                    Request::EofAck => {
+                        self.channels[idx].link.mark_eof(src);
+                    }
+                    Request::Done { .. } => {} // stale, ignore
+                    Request::DataReq { .. } => {
+                        return Err(WilkinsError::LowFive(
+                            "data request after finalize".into(),
+                        ))
+                    }
+                }
+            }
+        }
+        self.sync_flow_stats(cx.stats);
+        Ok(())
+    }
+}
+
+/// The protocol event a plan replay is waiting for.
+#[derive(Debug, Clone, Copy)]
+enum Expect {
+    /// A MetaReq, to be answered with this round version.
+    Meta(u64),
+    /// A Done for this round version.
+    Done(u64),
+    /// An EofAck.
+    Eof,
+}
+
+/// Gather every I/O rank's file/both-routed blocks to I/O rank 0,
+/// which writes one versioned disk file (the "traditional HDF5 file"
+/// path). Encoding filters datasets in place — no intermediate clone
+/// of the block bytes.
+fn write_disk_file(
+    cx: &mut EngineCx<'_>,
+    file: &H5File,
+    version: u64,
+    dsets: &[String],
+) -> Result<()> {
+    let io = cx
+        .io_comm
+        .ok_or_else(|| WilkinsError::LowFive("file mode on non-io rank".into()))?;
+    let mine = filemode::encode_file_filtered(file, |d| dsets.iter().any(|k| k == d));
+    let gathered = io.gather(0, &mine)?;
+    if let Some(parts) = gathered {
+        let mut merged = H5File::new(&file.name);
+        for part in parts {
+            let files = filemode::decode_files(&part)?;
+            for (_, f) in files {
+                filemode::merge_file(&mut merged, f);
+            }
+        }
+        let nbytes = merged.local_bytes();
+        filemode::write_file(cx.workdir, &merged, version)?;
+        cx.stats.bytes_served += nbytes as u64;
+    }
+    Ok(())
+}
+
+/// One writer rank's metadata view of a buffered round snapshot,
+/// filtered to what this channel delivers over memory: file-only
+/// datasets are withheld (consumers fetch them from the disk version
+/// stamped into the attrs), everything else is advertised with this
+/// rank's owned slabs.
+fn snapshot_meta(
+    f: &H5File,
+    version: u64,
+    routes: &RouteTable,
+    disk_version: Option<u64>,
+) -> FileMeta {
+    let mut attrs: Vec<(String, AttrValue)> =
+        f.attrs.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+    if let Some(v) = disk_version {
+        attrs.push((DISK_VERSION_ATTR.to_string(), AttrValue::Int(v as i64)));
+    }
+    FileMeta {
+        filename: f.name.clone(),
+        version,
+        attrs,
+        datasets: f
+            .datasets
+            .values()
+            .filter(|d| routes.delivers_in_memory(&d.meta.name))
+            .map(|d| {
+                (
+                    d.meta.clone(),
+                    d.blocks.iter().map(|b| b.slab.clone()).collect(),
+                )
+            })
+            .collect(),
+    }
+}
+
+/// Payload bytes a shared (zero-copy) reply hands over: the size of
+/// every block intersection with the wanted region. Pure arithmetic —
+/// no bytes move here; the consumer copies straight from the shared
+/// snapshot.
+fn shared_reply_bytes(snapshot: &H5File, dset: &str, want: &Hyperslab) -> Result<usize> {
+    let d = snapshot.dataset(dset)?;
+    let esize = d.meta.dtype.size_bytes();
+    Ok(d.blocks
+        .iter()
+        .filter_map(|b| b.slab.intersect(want))
+        .map(|i| i.element_count() as usize * esize)
+        .sum())
+}
+
+/// Encode a Reply::Data wire message for the blocks of `snapshot`
+/// intersecting `want`, extracting each intersection *directly into*
+/// the wire buffer (§Perf iteration 2: no staging buffer per block).
+/// Returns (encoded reply, payload bytes).
+fn encode_data_reply(
+    snapshot: &H5File,
+    dset: &str,
+    want: &Hyperslab,
+) -> Result<(Vec<u8>, usize)> {
+    let d = snapshot.dataset(dset)?;
+    let esize = d.meta.dtype.size_bytes();
+    let inters: Vec<(&super::model::OwnedBlock, Hyperslab)> = d
+        .blocks
+        .iter()
+        .filter_map(|b| b.slab.intersect(want).map(|i| (b, i)))
+        .collect();
+    let payload: usize = inters
+        .iter()
+        .map(|(_, i)| i.element_count() as usize * esize + 64)
+        .sum();
+    let mut w = crate::comm::wire::Writer::with_capacity(payload + 16);
+    w.put_u8(1); // Reply::Data discriminant
+    w.put_u64(inters.len() as u64);
+    let mut nbytes = 0;
+    for (b, inter) in inters {
+        inter.encode(&mut w);
+        let n = inter.element_count() as usize * esize;
+        nbytes += n;
+        w.put_bytes_via(n, |dst| {
+            super::hyperslab::copy_region(&b.slab, &b.data, &inter, dst, &inter, esize);
+        });
+    }
+    Ok((w.into_vec(), nbytes))
+}

@@ -34,9 +34,24 @@ pub const TAG_REQ: u64 = 1;
 pub(crate) const REQ_DATA_DISCRIMINANT: u8 = 1;
 /// Tag used by producer→consumer replies.
 pub const TAG_REP: u64 = 2;
+/// Wire discriminant of a zero-copy shared-snapshot reply (the first
+/// payload byte, distinct from every [`Reply`] variant): the body is
+/// just the shared-registry token. Shared replies exist only between
+/// ranks of one OS process and are consumed on the data-read path,
+/// never by [`Reply::decode`].
+pub(crate) const REP_SHARED_DISCRIMINANT: u8 = 3;
+
+/// Encode a shared-snapshot reply: discriminant + registry token.
+pub(crate) fn encode_shared_reply(token: u64) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u8(REP_SHARED_DISCRIMINANT);
+    w.put_u64(token);
+    w.into_vec()
+}
 /// Tag used by the consumer-side driver query "more data?" (Sec. 3.5.1).
 pub const TAG_QUERY: u64 = 3;
 
+/// Consumer→producer requests on a channel intercommunicator.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Open request: the consumer wants a file matching `pattern` with
@@ -52,6 +67,7 @@ pub enum Request {
 }
 
 impl Request {
+    /// Wire form of this request.
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
@@ -75,6 +91,7 @@ impl Request {
         w.into_vec()
     }
 
+    /// Decode a request from its wire form.
     pub fn decode(buf: &[u8]) -> Result<Request> {
         let mut r = Reader::new(buf);
         Ok(match r.get_u8()? {
@@ -98,15 +115,20 @@ impl Request {
 /// owns. The consumer merges M of these into a global table.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FileMeta {
+    /// The actual filename (glob requests resolve to this).
     pub filename: String,
+    /// Serve-round version on the channel.
     pub version: u64,
+    /// File attributes (consumers keep rank 0's copy).
     pub attrs: Vec<(String, AttrValue)>,
     /// (dataset meta, slabs owned by the replying rank)
     pub datasets: Vec<(DatasetMeta, Vec<Hyperslab>)>,
 }
 
+/// Producer→consumer replies.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reply {
+    /// Answer to a MetaReq: this rank's view of the served file.
     Meta(FileMeta),
     /// Blocks intersecting a DataReq: (region, bytes) pairs where the
     /// region is in global coordinates and bytes are row-major in it.
@@ -116,6 +138,7 @@ pub enum Reply {
 }
 
 impl Reply {
+    /// Wire form of this reply.
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
@@ -154,6 +177,7 @@ impl Reply {
         w.into_vec()
     }
 
+    /// Decode a reply from its wire form.
     pub fn decode(buf: &[u8]) -> Result<Reply> {
         let mut r = Reader::new(buf);
         Ok(match r.get_u8()? {
@@ -205,6 +229,7 @@ pub enum QueryReply {
 }
 
 impl QueryReply {
+    /// Wire form of this query reply.
     pub fn encode(&self) -> Vec<u8> {
         vec![match self {
             QueryReply::More => 1,
@@ -212,6 +237,7 @@ impl QueryReply {
         }]
     }
 
+    /// Decode a query reply.
     pub fn decode(buf: &[u8]) -> Result<QueryReply> {
         match buf.first() {
             Some(1) => Ok(QueryReply::More),
@@ -267,6 +293,28 @@ mod tests {
         ] {
             assert_eq!(Reply::decode(&rep.encode()).unwrap(), rep);
         }
+    }
+
+    #[test]
+    fn shared_reply_discriminant_is_distinct() {
+        // The shared-snapshot reply must never collide with a Reply
+        // variant's first byte (0 = Meta, 1 = Data, 2 = Eof).
+        for rep in [
+            Reply::Eof,
+            Reply::Data(vec![]),
+            Reply::Meta(FileMeta {
+                filename: "f".into(),
+                version: 1,
+                attrs: vec![],
+                datasets: vec![],
+            }),
+        ] {
+            assert_ne!(rep.encode()[0], REP_SHARED_DISCRIMINANT);
+        }
+        let shared = encode_shared_reply(42);
+        assert_eq!(shared[0], REP_SHARED_DISCRIMINANT);
+        let mut r = Reader::new(&shared[1..]);
+        assert_eq!(r.get_u64().unwrap(), 42);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Per-dataset transport routing (paper Sec. 4.2): the table that
+//! decides, for every (channel, dataset) pair, whether bytes move
+//! through memory, to a traditional file on disk, or both
+//! (write-through), plus the process-local shared-snapshot registry
+//! behind the zero-copy serve fast path.
+//!
+//! The LowFive layer selects the transport *per dataset*: different
+//! datasets of one file can ride different transports, and a dataset
+//! flagged `memory: 1, file: 1` is written through — served in situ
+//! to the coupled consumer *and* archived as a versioned disk file on
+//! the same close. The graph layer builds one [`RouteTable`] per
+//! channel from the matched port flags (see `graph::match_ports`);
+//! uniform tables ([`RouteTable::memory`] / [`RouteTable::file`])
+//! reproduce the old single-mode channels exactly.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+use super::model::H5File;
+use super::pattern_matches;
+
+/// Where a dataset's bytes travel on a producer file close.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// In-memory transport over the channel intercommunicator (the
+    /// default; the paper's in situ path).
+    Memory,
+    /// Traditional file transport: producer I/O ranks write a
+    /// versioned disk file, consumers poll it back.
+    File,
+    /// Write-through: served over memory *and* archived to disk on the
+    /// same close (YAML `memory: 1, file: 1`).
+    Both,
+}
+
+impl Route {
+    /// Is the dataset delivered to consumers over the memory channel?
+    pub fn to_memory(self) -> bool {
+        matches!(self, Route::Memory | Route::Both)
+    }
+
+    /// Is the dataset written to a disk file on close?
+    pub fn to_file(self) -> bool {
+        matches!(self, Route::File | Route::Both)
+    }
+}
+
+impl std::fmt::Display for Route {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Route::Memory => "memory",
+            Route::File => "file",
+            Route::Both => "both",
+        })
+    }
+}
+
+/// A channel's per-dataset routing: ordered (dataset pattern, route)
+/// entries (first match wins) plus a fallback route for datasets no
+/// entry matches.
+///
+/// The fallback keeps the Listing-1 convention intact on *both*
+/// transports: a channel that names only `/group1/grid` still moves
+/// the whole file, so a consumer task may read sibling datasets the
+/// ports never mentioned. On a channel with any memory side the
+/// fallback is `Memory` (siblings ride the served metadata); on a
+/// pure file-only channel it is `File` (siblings land in the disk
+/// archive, exactly like the historical whole-file write).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteTable {
+    entries: Vec<(String, Route)>,
+    fallback: Route,
+}
+
+impl RouteTable {
+    /// Table from matched (dataset pattern, route) pairs; unmatched
+    /// datasets fall back to memory — or to file when every entry is
+    /// file-only (a pure file-mode channel has no memory side to
+    /// carry them).
+    pub fn new(entries: Vec<(String, Route)>) -> RouteTable {
+        let fallback = if !entries.is_empty() && entries.iter().all(|(_, r)| *r == Route::File)
+        {
+            Route::File
+        } else {
+            Route::Memory
+        };
+        RouteTable { entries, fallback }
+    }
+
+    /// Uniform table: every dataset takes `route`.
+    pub fn uniform(route: Route) -> RouteTable {
+        RouteTable { entries: Vec::new(), fallback: route }
+    }
+
+    /// Uniform in-memory table (the old `ChannelMode::Memory`).
+    pub fn memory() -> RouteTable {
+        RouteTable::uniform(Route::Memory)
+    }
+
+    /// Uniform file-mode table (the old `ChannelMode::File`).
+    pub fn file() -> RouteTable {
+        RouteTable::uniform(Route::File)
+    }
+
+    /// The matched (pattern, route) entries, in match order.
+    pub fn entries(&self) -> &[(String, Route)] {
+        &self.entries
+    }
+
+    /// Resolve the route of a concrete dataset name: first matching
+    /// entry wins, else the fallback.
+    pub fn route_of(&self, dset: &str) -> Route {
+        self.entries
+            .iter()
+            .find(|(pat, _)| pattern_matches(pat, dset))
+            .map(|(_, r)| *r)
+            .unwrap_or(self.fallback)
+    }
+
+    fn routes(&self) -> impl Iterator<Item = Route> + '_ {
+        let fb = if self.entries.is_empty() {
+            Some(self.fallback)
+        } else {
+            None
+        };
+        self.entries.iter().map(|(_, r)| *r).chain(fb)
+    }
+
+    /// Does any routed dataset travel over the memory channel?
+    /// (Decides whether the channel needs an intercommunicator.)
+    pub fn any_memory(&self) -> bool {
+        self.routes().any(Route::to_memory)
+    }
+
+    /// Does any routed dataset land on disk? (Decides whether closes
+    /// write a disk file and finalize drops an EOF marker.)
+    pub fn any_file(&self) -> bool {
+        self.routes().any(Route::to_file)
+    }
+
+    /// Does any dataset travel *only* via disk? (Decides whether a
+    /// memory consumer must also poll the disk file of each round.)
+    pub fn any_file_only(&self) -> bool {
+        self.routes().any(|r| r == Route::File)
+    }
+
+    /// Is `dset` part of the memory snapshot served on this channel?
+    /// Everything except explicitly file-only datasets is.
+    pub fn delivers_in_memory(&self, dset: &str) -> bool {
+        self.route_of(dset) != Route::File
+    }
+
+    /// Is `dset` archived to disk on close over this channel?
+    pub fn archives_to_disk(&self, dset: &str) -> bool {
+        self.route_of(dset).to_file()
+    }
+}
+
+impl std::fmt::Display for RouteTable {
+    /// Renders `memory`, `file`, or `[/grid:both, /particles:file]`.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.entries.is_empty() {
+            return write!(f, "{}", self.fallback);
+        }
+        write!(f, "[")?;
+        for (i, (pat, r)) in self.entries.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{pat}:{r}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Attribute smuggled into mixed-route memory snapshots: the disk
+/// version written on the same close, so the consumer can poll the
+/// file-routed datasets of exactly this round. Stripped from the
+/// attrs a consumer task sees.
+pub(super) const DISK_VERSION_ATTR: &str = "__wilkins_disk_version";
+
+// ---- zero-copy shared-snapshot registry --------------------------------
+//
+// When a producer rank answers a DataReq from a consumer rank hosted
+// in the *same OS process* (always, in-memory; for `wilkins up`
+// whenever both ranks landed on one worker), encoding the blocks into
+// a wire reply and decoding them back is pure copy overhead: both
+// sides can see the same address space. The fast path parks an
+// `Arc<H5File>` snapshot here under a process-unique token and sends
+// only the token; the consumer takes the Arc out and copies each
+// intersecting block region straight into its read buffer — one copy
+// end to end instead of three (encode + deliver + decode).
+//
+// Tokens are allocated from one process-wide counter, so concurrent
+// worlds (ensemble instances, benches) never collide. Every entry is
+// taken out by the consumer's very next reply receive; the map is
+// transient by construction. Entries are `Weak` so a consumer rank
+// that dies between request and receive cannot pin the payload for
+// the life of the process: the producer's round buffer holds the
+// strong reference until the round completes (the consumer always
+// reads before sending `Done`, so a live reader's upgrade never
+// fails), and dead entries are pruned on the next share.
+
+static SHARED: OnceLock<Mutex<HashMap<u64, Weak<H5File>>>> = OnceLock::new();
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+fn shared_map() -> &'static Mutex<HashMap<u64, Weak<H5File>>> {
+    SHARED.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Park a snapshot for a same-process consumer; returns its token.
+pub(super) fn share_snapshot(snapshot: Arc<H5File>) -> u64 {
+    let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+    let mut map = shared_map().lock().unwrap();
+    // Opportunistic prune: a token whose round already retired can
+    // never be taken (its consumer is gone) — drop the dead weaks so
+    // failed ranks don't accumulate entries.
+    map.retain(|_, w| w.strong_count() > 0);
+    map.insert(token, Arc::downgrade(&snapshot));
+    token
+}
+
+/// Take a parked snapshot out of the registry (consumer side).
+pub(super) fn take_snapshot(token: u64) -> Option<Arc<H5File>> {
+    shared_map().lock().unwrap().remove(&token).and_then(|w| w.upgrade())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowfive::model::{DType, H5File};
+
+    #[test]
+    fn uniform_tables_match_old_channel_modes() {
+        let m = RouteTable::memory();
+        assert!(m.any_memory() && !m.any_file() && !m.any_file_only());
+        assert_eq!(m.route_of("/anything"), Route::Memory);
+        let f = RouteTable::file();
+        assert!(!f.any_memory() && f.any_file() && f.any_file_only());
+        assert_eq!(f.route_of("/anything"), Route::File);
+        assert_eq!(m.to_string(), "memory");
+        assert_eq!(f.to_string(), "file");
+    }
+
+    #[test]
+    fn mixed_table_routes_per_pattern() {
+        let t = RouteTable::new(vec![
+            ("/group1/grid".into(), Route::Both),
+            ("/particles/*".into(), Route::File),
+        ]);
+        assert_eq!(t.route_of("/group1/grid"), Route::Both);
+        assert_eq!(t.route_of("/particles/position"), Route::File);
+        // Unmatched datasets fall back to memory (Listing-1 behavior).
+        assert_eq!(t.route_of("/other"), Route::Memory);
+        assert!(t.any_memory() && t.any_file() && t.any_file_only());
+        assert!(t.delivers_in_memory("/group1/grid"));
+        assert!(!t.delivers_in_memory("/particles/position"));
+        assert!(t.archives_to_disk("/group1/grid"));
+        assert!(!t.archives_to_disk("/other"));
+    }
+
+    #[test]
+    fn first_matching_entry_wins() {
+        let t = RouteTable::new(vec![
+            ("/a/*".into(), Route::File),
+            ("/a/special".into(), Route::Memory),
+        ]);
+        assert_eq!(t.route_of("/a/special"), Route::File);
+    }
+
+    #[test]
+    fn route_flags() {
+        assert!(Route::Memory.to_memory() && !Route::Memory.to_file());
+        assert!(!Route::File.to_memory() && Route::File.to_file());
+        assert!(Route::Both.to_memory() && Route::Both.to_file());
+    }
+
+    #[test]
+    fn shared_registry_round_trip() {
+        let f = Arc::new({
+            let mut f = H5File::new("x.h5");
+            f.create_dataset("/d", DType::U8, &[4]).unwrap();
+            f
+        });
+        let t = share_snapshot(Arc::clone(&f));
+        let got = take_snapshot(t).expect("token resolves once");
+        assert!(Arc::ptr_eq(&f, &got));
+        assert!(take_snapshot(t).is_none(), "tokens are single-use");
+    }
+
+    #[test]
+    fn shared_registry_does_not_pin_dead_rounds() {
+        // The registry holds weak refs: once the producer's round (the
+        // strong owner) is gone, an orphaned token resolves to None
+        // instead of leaking the payload.
+        let t = share_snapshot(Arc::new(H5File::new("gone.h5")));
+        assert!(take_snapshot(t).is_none(), "no strong owner left");
+    }
+
+    #[test]
+    fn file_only_tables_default_siblings_to_file() {
+        // A pure file-mode channel that names only /grid must still
+        // archive sibling datasets (the historical whole-file write);
+        // any memory side flips the fallback to memory.
+        let t = RouteTable::new(vec![("/grid".into(), Route::File)]);
+        assert_eq!(t.route_of("/sibling"), Route::File);
+        assert!(t.archives_to_disk("/sibling"));
+        let m = RouteTable::new(vec![
+            ("/grid".into(), Route::File),
+            ("/x".into(), Route::Both),
+        ]);
+        assert_eq!(m.route_of("/sibling"), Route::Memory);
+    }
+}

@@ -1,0 +1,76 @@
+//! Per-rank transport counters ([`VolStats`]) and the borrowed engine
+//! context (`EngineCx`) the producer/consumer engines work against.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::comm::Comm;
+use crate::metrics::{Recorder, SpanKind};
+
+/// Transport statistics (observability for the benches).
+#[derive(Debug, Default, Clone)]
+pub struct VolStats {
+    /// Serve rounds actually consumed (memory completions and disk
+    /// writes; see the producer engine's flow-stat folding).
+    pub files_served: u64,
+    /// Flow-control cadence skips (`every`-gated closes that never
+    /// reached a channel's round buffer).
+    pub serves_skipped: u64,
+    /// Rounds discarded by a dropping flow policy (latest /
+    /// drop-oldest / drop-newest) after admission pressure.
+    pub serves_dropped: u64,
+    /// Default serves suppressed by a before-close callback (custom
+    /// I/O patterns like Nyx's double close).
+    pub serves_suppressed: u64,
+    /// Total payload bytes served (data replies + disk writes).
+    pub bytes_served: u64,
+    /// Serve bytes handed to same-process consumers through the
+    /// zero-copy shared-snapshot path (no encode/decode round-trip).
+    pub bytes_shared: u64,
+    /// Serve bytes that took the classic encode → deliver → decode
+    /// path (cross-process consumers, or the fast path disabled).
+    pub bytes_copied: u64,
+    /// Files opened on the consumer side.
+    pub files_opened: u64,
+    /// Payload bytes read on the consumer side (both transports).
+    pub bytes_read: u64,
+    /// Time the producer spent blocked inside serve rounds.
+    pub serve_wait: Duration,
+    /// Time the producer stalled waiting for flow credits (subset of
+    /// `serve_wait` under blocking policies).
+    pub stall_wait: Duration,
+    /// High-water mark of any channel's round buffer.
+    pub max_queue_depth: u64,
+    /// Time the consumer spent blocked in file_open.
+    pub open_wait: Duration,
+}
+
+/// The borrowed slice of a [`Vol`](super::Vol) the engines work
+/// against: stats, the I/O communicator, the workdir and the
+/// recorder, carved out so engine methods can mutate channel state
+/// and counters without fighting the borrow checker over the whole
+/// Vol.
+pub(super) struct EngineCx<'a> {
+    /// I/O-rank sub-communicator (None on non-I/O ranks).
+    pub(super) io_comm: Option<&'a Comm>,
+    /// Directory for file-routed transports.
+    pub(super) workdir: &'a Path,
+    /// The rank's transport counters.
+    pub(super) stats: &'a mut VolStats,
+    /// Gantt recorder + this rank's global label, when attached.
+    pub(super) recorder: Option<&'a (Arc<Recorder>, usize)>,
+    /// Ablation switch: serial DataReqs instead of pipelined.
+    pub(super) lockstep_reads: bool,
+    /// Zero-copy fast path enabled (default; benches ablate it).
+    pub(super) zero_copy: bool,
+}
+
+impl EngineCx<'_> {
+    /// Record a span against this rank's Gantt timeline.
+    pub(super) fn record_span(&self, kind: SpanKind, label: &str, t0: Instant) {
+        if let Some((rec, rank)) = self.recorder {
+            rec.record(*rank, kind, label, t0, Instant::now());
+        }
+    }
+}

@@ -14,12 +14,13 @@ use super::*;
 
 /// Build a 2-task world: M producer ranks + N consumer ranks with a
 /// channel between them, then run the closures on every rank thread.
-fn couple<P, C>(m: usize, n: usize, mode: ChannelMode, producer: P, consumer: C)
+/// `route` is the channel's uniform transport route.
+fn couple<P, C>(m: usize, n: usize, route: Route, producer: P, consumer: C)
 where
     P: Fn(usize, &mut Vol) + Send + Sync + 'static,
     C: Fn(usize, &mut Vol) + Send + Sync + 'static,
 {
-    couple_writers(m, n, m, mode, producer, consumer)
+    couple_routed(m, n, m, RouteTable::uniform(route), producer, consumer)
 }
 
 /// Same but with only the first `nwriters` producer ranks doing I/O.
@@ -27,7 +28,22 @@ fn couple_writers<P, C>(
     m: usize,
     n: usize,
     nwriters: usize,
-    mode: ChannelMode,
+    route: Route,
+    producer: P,
+    consumer: C,
+) where
+    P: Fn(usize, &mut Vol) + Send + Sync + 'static,
+    C: Fn(usize, &mut Vol) + Send + Sync + 'static,
+{
+    couple_routed(m, n, nwriters, RouteTable::uniform(route), producer, consumer)
+}
+
+/// The general harness: any per-dataset route table on the channel.
+fn couple_routed<P, C>(
+    m: usize,
+    n: usize,
+    nwriters: usize,
+    routes: RouteTable,
     producer: P,
     consumer: C,
 ) where
@@ -58,6 +74,7 @@ fn couple_writers<P, C>(
         let cons_ranks = cons_ranks.clone();
         let io_ranks = io_ranks.clone();
         let workdir = workdir.clone();
+        let routes = routes.clone();
         handles.push(thread::spawn(move || {
             if g < m {
                 let local = world.comm_from_ranks(pid, &prod_ranks, g);
@@ -65,22 +82,22 @@ fn couple_writers<P, C>(
                 if g < nwriters {
                     let io = world.comm_from_ranks(ioid, &io_ranks, g);
                     vol.set_io_comm(Some(io));
-                    let ic = InterComm::new(local, chid, cons_ranks.clone());
-                    vol.add_out_channel(OutChannel::new(Some(ic), "outfile.h5", mode));
+                    let ic = routes
+                        .any_memory()
+                        .then(|| InterComm::new(local, chid, cons_ranks.clone()));
+                    vol.add_out_channel(OutChannel::new(ic, "outfile.h5", routes));
                 } else {
-                    vol.add_out_channel(OutChannel::new(None, "outfile.h5", mode));
+                    vol.add_out_channel(OutChannel::new(None, "outfile.h5", routes));
                 }
                 producer(g, &mut vol);
                 vol.finalize_producer().unwrap();
             } else {
                 let local = world.comm_from_ranks(cid, &cons_ranks, g - m);
                 let mut vol = Vol::new(local.clone(), workdir);
-                let ic = if mode == ChannelMode::Memory {
-                    Some(InterComm::new(local, chid, io_ranks.clone()))
-                } else {
-                    None
-                };
-                vol.add_in_channel(InChannel::new(ic, "outfile.h5", mode));
+                let ic = routes
+                    .any_memory()
+                    .then(|| InterComm::new(local, chid, io_ranks.clone()));
+                vol.add_in_channel(InChannel::new(ic, "outfile.h5", routes));
                 consumer(g - m, &mut vol);
                 vol.finalize_consumer().unwrap();
             }
@@ -130,7 +147,7 @@ fn one_to_one_memory() {
     couple(
         1,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| write_grid(vol, r, 1, 100),
         |r, vol| read_grid(vol, r, 1, 100),
     );
@@ -143,7 +160,7 @@ fn m_to_n_redistribution() {
     couple(
         3,
         2,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| write_grid(vol, r, 3, 90),
         |r, vol| read_grid(vol, r, 2, 90),
     );
@@ -154,7 +171,7 @@ fn n_to_one_fan_in_ranks() {
     couple(
         4,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| write_grid(vol, r, 4, 64),
         |r, vol| read_grid(vol, r, 1, 64),
     );
@@ -166,7 +183,7 @@ fn multiple_timesteps_versioned() {
     couple(
         2,
         2,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| {
             for t in 0..STEPS {
                 vol.file_create("outfile.h5").unwrap();
@@ -207,7 +224,7 @@ fn eof_after_last_step() {
     couple(
         1,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| write_grid(vol, r, 1, 8),
         |r, vol| {
             read_grid(vol, r, 1, 8);
@@ -227,7 +244,7 @@ fn consumer_quits_early() {
     couple(
         1,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| {
             for _ in 0..4 {
                 write_grid(vol, r, 1, 8);
@@ -247,7 +264,7 @@ fn subset_writers_single_io_rank() {
         4,
         2,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| {
             if vol.is_io_rank() {
                 assert_eq!(r, 0);
@@ -264,7 +281,7 @@ fn file_mode_roundtrip() {
     couple(
         2,
         2,
-        ChannelMode::File,
+        Route::File,
         |r, vol| write_grid(vol, r, 2, 50),
         |r, vol| read_grid(vol, r, 2, 50),
     );
@@ -275,7 +292,7 @@ fn file_mode_eof() {
     couple(
         1,
         1,
-        ChannelMode::File,
+        Route::File,
         |r, vol| write_grid(vol, r, 1, 10),
         |r, vol| {
             read_grid(vol, r, 1, 10);
@@ -292,7 +309,7 @@ fn two_datasets_two_types() {
     couple(
         1,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |_, vol| {
             vol.file_create("outfile.h5").unwrap();
             vol.dataset_create("outfile.h5", "/group1/grid", DType::U64, &[16])
@@ -339,7 +356,7 @@ fn callback_after_dataset_write_counts() {
     couple(
         1,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         move |r, vol| {
             let c = Arc::clone(&c2);
             vol.set_after_dataset_write(Box::new(move |_vol, _dset| {
@@ -359,7 +376,7 @@ fn skip_serve_some_strategy() {
     couple(
         1,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| {
             vol.set_before_file_close(Box::new(|vol, name| {
                 if (vol.closes_of(name) + 1) % 2 != 0 {
@@ -392,7 +409,7 @@ fn latest_strategy_skips_when_no_request() {
     couple(
         1,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| {
             vol.set_before_file_close(Box::new(|vol, name| {
                 if !vol.any_pending_requests(name) {
@@ -421,7 +438,7 @@ fn broadcast_files_shares_rank0_state() {
     couple(
         3,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| {
             if r == 0 {
                 vol.file_create("outfile.h5").unwrap();
@@ -469,7 +486,7 @@ fn stats_track_bytes() {
     couple(
         1,
         1,
-        ChannelMode::Memory,
+        Route::Memory,
         |r, vol| {
             write_grid(vol, r, 1, 100);
             assert_eq!(vol.stats.files_served, 1);
@@ -502,7 +519,7 @@ fn fan_in_round_robin_channels() {
             let mut vol = Vol::new(local.clone(), workdir);
             vol.set_io_comm(Some(local.clone()));
             let ic = InterComm::new(local, chan_id, vec![2]);
-            vol.add_out_channel(OutChannel::new(Some(ic), "outfile.h5", ChannelMode::Memory));
+            vol.add_out_channel(OutChannel::new(Some(ic), "outfile.h5", RouteTable::memory()));
             vol.file_create("outfile.h5").unwrap();
             vol.attr_write("outfile.h5", "who", AttrValue::Int(tag)).unwrap();
             vol.dataset_create("outfile.h5", "/d", DType::U64, &[4]).unwrap();
@@ -527,8 +544,8 @@ fn fan_in_round_robin_channels() {
             let mut vol = Vol::new(local.clone(), workdir);
             let ica = InterComm::new(local.clone(), cha, vec![0]);
             let icb = InterComm::new(local, chb, vec![1]);
-            vol.add_in_channel(InChannel::new(Some(ica), "outfile.h5", ChannelMode::Memory));
-            vol.add_in_channel(InChannel::new(Some(icb), "outfile.h5", ChannelMode::Memory));
+            vol.add_in_channel(InChannel::new(Some(ica), "outfile.h5", RouteTable::memory()));
+            vol.add_in_channel(InChannel::new(Some(icb), "outfile.h5", RouteTable::memory()));
             let mut whos = Vec::new();
             loop {
                 match vol.file_open("outfile.h5") {
@@ -661,4 +678,172 @@ fn hyperslab_single_element_overlap_at_corner() {
     hyperslab::copy_region(&a, &src, &b, &mut dst, &i, 1);
     assert_eq!(dst[0], 8, "global (2,2) is a's last element, b's first");
     assert!(dst[1..].iter().all(|&v| v == 0));
+}
+
+// ---- Routed data plane: mixed per-dataset transports, write-through
+// ---- and the zero-copy same-process fast path.
+
+#[test]
+fn mixed_routes_deliver_every_dataset() {
+    // One channel, three datasets on three routes: /mem over memory,
+    // /disk file-only, /wt write-through. The consumer must see all
+    // three with correct bytes, and never the internal disk-version
+    // attribute.
+    let routes = RouteTable::new(vec![
+        ("/mem".into(), Route::Memory),
+        ("/disk".into(), Route::File),
+        ("/wt".into(), Route::Both),
+    ]);
+    couple_routed(
+        2,
+        2,
+        2,
+        routes,
+        |r, vol| {
+            for t in 0..2u64 {
+                vol.file_create("outfile.h5").unwrap();
+                vol.attr_write("outfile.h5", "timestep", AttrValue::Int(t as i64))
+                    .unwrap();
+                for (d, base) in [("/mem", 0u64), ("/disk", 1000), ("/wt", 2000)] {
+                    vol.dataset_create("outfile.h5", d, DType::U64, &[16]).unwrap();
+                    let slab = split_rows(&[16], 2)[r].clone();
+                    let vals: Vec<u8> = (slab.offset[0]..slab.offset[0] + slab.count[0])
+                        .flat_map(|i| (base + i + t * 100).to_le_bytes())
+                        .collect();
+                    vol.dataset_write("outfile.h5", d, slab, vals).unwrap();
+                }
+                vol.file_close("outfile.h5").unwrap();
+            }
+        },
+        |r, vol| {
+            for t in 0..2u64 {
+                let name = vol.file_open("outfile.h5").unwrap();
+                let cf = vol.consumer_file(&name).unwrap();
+                assert_eq!(cf.dataset_names(), vec!["/disk", "/mem", "/wt"]);
+                assert_eq!(cf.attr("timestep").unwrap().as_i64(), Some(t as i64));
+                assert!(
+                    cf.attr(super::route::DISK_VERSION_ATTR).is_none(),
+                    "internal routing attr must be stripped"
+                );
+                for (d, base) in [("/mem", 0u64), ("/disk", 1000), ("/wt", 2000)] {
+                    let want = split_rows(&[16], 2)[r].clone();
+                    let bytes = vol.dataset_read(&name, d, &want).unwrap();
+                    for (k, chunk) in bytes.chunks_exact(8).enumerate() {
+                        let v = u64::from_le_bytes(chunk.try_into().unwrap());
+                        assert_eq!(
+                            v,
+                            base + want.offset[0] + k as u64 + t * 100,
+                            "{d} at {k}, step {t}, rank {r}"
+                        );
+                    }
+                }
+                vol.file_close(&name).unwrap();
+            }
+        },
+    );
+}
+
+#[test]
+fn write_through_serves_memory_and_archives_disk() {
+    // Route::Both on every dataset: the consumer reads in situ while
+    // a versioned .l5 artifact also lands in the workdir.
+    couple(
+        1,
+        1,
+        Route::Both,
+        |r, vol| {
+            write_grid(vol, r, 1, 20);
+            assert!(vol.stats.bytes_shared > 0, "in-process serve shares");
+            let archived = std::fs::read_dir(vol.workdir())
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .any(|e| e.file_name().to_string_lossy().ends_with(".l5"));
+            assert!(archived, "write-through must land a .l5 artifact");
+        },
+        |r, vol| read_grid(vol, r, 1, 20),
+    );
+}
+
+#[test]
+fn zero_copy_fast_path_counts_shared_bytes() {
+    // In-memory worlds host every rank in one process, so every data
+    // reply takes the shared-snapshot path.
+    couple(
+        1,
+        1,
+        Route::Memory,
+        |r, vol| {
+            write_grid(vol, r, 1, 100);
+            assert_eq!(vol.stats.bytes_served, 800);
+            assert_eq!(vol.stats.bytes_shared, 800);
+            assert_eq!(vol.stats.bytes_copied, 0);
+        },
+        |r, vol| {
+            read_grid(vol, r, 1, 100);
+            assert_eq!(vol.stats.bytes_read, 800);
+        },
+    );
+}
+
+#[test]
+fn zero_copy_disabled_takes_encoded_path() {
+    // The ablation switch forces the encode/decode round-trip; the
+    // consumer must read identical bytes either way (read_grid
+    // verifies every element).
+    couple(
+        1,
+        1,
+        Route::Memory,
+        |r, vol| {
+            vol.set_zero_copy(false);
+            write_grid(vol, r, 1, 100);
+            assert_eq!(vol.stats.bytes_served, 800);
+            assert_eq!(vol.stats.bytes_shared, 0);
+            assert_eq!(vol.stats.bytes_copied, 800);
+        },
+        |r, vol| read_grid(vol, r, 1, 100),
+    );
+}
+
+#[test]
+fn file_mode_archives_undeclared_sibling_datasets() {
+    // A pure file-mode channel that names only /declared must still
+    // archive the whole file (the historical behavior): the consumer
+    // reads the sibling dataset from the polled disk file.
+    let routes = RouteTable::new(vec![("/declared".into(), Route::File)]);
+    couple_routed(
+        1,
+        1,
+        1,
+        routes,
+        |_, vol| {
+            vol.file_create("outfile.h5").unwrap();
+            for d in ["/declared", "/sibling"] {
+                vol.dataset_create("outfile.h5", d, DType::U64, &[8]).unwrap();
+                vol.dataset_write(
+                    "outfile.h5",
+                    d,
+                    Hyperslab::whole(&[8]),
+                    (0u64..8).flat_map(|i| (i * 3).to_le_bytes()).collect(),
+                )
+                .unwrap();
+            }
+            vol.file_close("outfile.h5").unwrap();
+        },
+        |_, vol| {
+            let name = vol.file_open("outfile.h5").unwrap();
+            assert_eq!(
+                vol.consumer_file(&name).unwrap().dataset_names(),
+                vec!["/declared", "/sibling"],
+                "siblings must survive the disk archive"
+            );
+            let bytes = vol
+                .dataset_read(&name, "/sibling", &Hyperslab::whole(&[8]))
+                .unwrap();
+            for (k, chunk) in bytes.chunks_exact(8).enumerate() {
+                assert_eq!(u64::from_le_bytes(chunk.try_into().unwrap()), k as u64 * 3);
+            }
+            vol.file_close(&name).unwrap();
+        },
+    );
 }

@@ -1,187 +1,74 @@
 //! The Vol object: our reimplementation of the LowFive HDF5 VOL plugin
-//! (substrate S5). One Vol per rank; task codes talk to it through the
-//! HDF5-like file/dataset API and never see the workflow system —
-//! the paper's "no task code changes" property.
+//! (substrate S5), now a thin facade over the routed data plane. One
+//! Vol per rank; task codes talk to it through the HDF5-like
+//! file/dataset API and never see the workflow system — the paper's
+//! "no task code changes" property.
 //!
-//! Producer side: ranks buffer dataset writes in memory; closing a file
-//! *serves* it to every matching channel (consumer task), sequentially,
-//! one serve *round* per close. Versions (serve counters) keep rounds
-//! from mixing when consumers run at different rates.
+//! The transport machinery lives in two engines the Vol owns:
 //!
-//! Consumer side: opening a file sends `MetaReq` to every producer
-//! I/O rank of the next matching channel (round-robin across channels,
-//! which is how fan-in ensembles interleave their producers), then
-//! dataset reads pull only the intersecting blocks (O(M+N) block-range
-//! intersection, never O(M·N) element scans).
+//! * [`ProducerEngine`](super::producer) — buffers dataset writes in
+//!   memory; closing a file *serves* it per the per-dataset
+//!   [`RouteTable`](super::route::RouteTable) of every matching
+//!   channel (memory rounds through the flow layer, file/both routes
+//!   to versioned disk files, zero-copy handoff to same-process
+//!   consumers).
+//! * [`ConsumerEngine`](super::consumer) — opens served files
+//!   (round-robin across channels, which is how fan-in ensembles
+//!   interleave their producers), assembling each file's datasets
+//!   from the memory metadata and/or the polled disk half; reads pull
+//!   only the intersecting blocks (O(M+N) block-range intersection,
+//!   never O(M·N) element scans).
+//!
+//! The Vol itself keeps what both halves and the task code share:
+//! the in-memory files, callbacks, counters and stats.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-use crate::comm::{Comm, InterComm};
+use crate::comm::Comm;
 use crate::error::{Result, WilkinsError};
-use crate::flow::{ChannelPolicy, FlowControl, LinkState, Plan, PlanOp};
-use crate::metrics::{Recorder, SpanKind};
+use crate::metrics::Recorder;
 
-use super::hyperslab::{copy_region, Hyperslab};
+use super::consumer::{ConsumerEngine, ConsumerFile, InChannel};
+use super::hyperslab::Hyperslab;
 use super::model::{AttrValue, DType, DatasetMeta, H5File};
-use super::protocol::{
-    FileMeta, Reply, Request, REQ_DATA_DISCRIMINANT, TAG_REP, TAG_REQ,
-};
+use super::producer::{OutChannel, ProducerEngine};
+use super::stats::{EngineCx, VolStats};
 use super::{filemode, pattern_matches};
-
-/// Transport mode of a channel (YAML `memory: 1` vs `file: 1`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ChannelMode {
-    Memory,
-    File,
-}
-
-/// Producer-side channel to one consumer task. Versions are monotonic
-/// per channel (not per file) so globbed multi-file streams like
-/// plt*.h5 stay ordered; the round buffer, credit window and drop
-/// accounting live in the channel's [`LinkState`] (the flow layer).
-pub struct OutChannel {
-    pub intercomm: Option<InterComm>,
-    pub pattern: String,
-    pub mode: ChannelMode,
-    /// Flow engine: bounded round buffer + credits (Sec. 3.6).
-    /// Round snapshots are `Arc`s of the producer's in-memory file:
-    /// admission is O(1), and the producer's next write to the file
-    /// copy-on-writes (`Arc::make_mut`) only while a buffered round
-    /// still references the old bytes.
-    link: LinkState<Arc<H5File>>,
-    /// MetaReqs pulled out of the mailbox that no buffered round can
-    /// answer yet (fast consumer re-opened early, or everything it
-    /// could read was dropped).
-    deferred: VecDeque<(usize, Request)>,
-}
-
-impl OutChannel {
-    pub fn new(intercomm: Option<InterComm>, pattern: &str, mode: ChannelMode) -> OutChannel {
-        let remote = intercomm.as_ref().map_or(0, |ic| ic.remote_size());
-        OutChannel {
-            intercomm,
-            pattern: pattern.to_string(),
-            mode,
-            link: LinkState::new(ChannelPolicy::block(), remote),
-            deferred: VecDeque::new(),
-        }
-    }
-
-    /// Set the channel's flow policy (resets the link's round buffer;
-    /// call before the first serve).
-    pub fn with_policy(mut self, policy: ChannelPolicy) -> OutChannel {
-        let remote = self.intercomm.as_ref().map_or(0, |ic| ic.remote_size());
-        self.link = LinkState::new(policy, remote);
-        self
-    }
-
-    /// Legacy sugar: lower a three-mode strategy onto its policy.
-    pub fn with_flow(self, flow: FlowControl) -> OutChannel {
-        self.with_policy(flow.lower())
-    }
-
-    /// The channel's flow policy.
-    pub fn policy(&self) -> ChannelPolicy {
-        self.link.policy()
-    }
-}
-
-/// Consumer-side channel from one producer task.
-pub struct InChannel {
-    pub intercomm: Option<InterComm>,
-    pub pattern: String,
-    pub mode: ChannelMode,
-    /// Version of the last file consumed from this channel.
-    last_version: u64,
-    exhausted: bool,
-    /// Did we already send EofAck to the producers?
-    eof_acked: bool,
-}
-
-impl InChannel {
-    pub fn new(intercomm: Option<InterComm>, pattern: &str, mode: ChannelMode) -> InChannel {
-        InChannel {
-            intercomm,
-            pattern: pattern.to_string(),
-            mode,
-            last_version: 0,
-            exhausted: false,
-            eof_acked: false,
-        }
-    }
-}
-
-/// Where an opened (consumer) file's bytes come from.
-enum FileSource {
-    /// Remote producer ranks over the channel intercomm.
-    Memory { channel: usize },
-    /// Fully materialised from a disk file (file mode).
-    Disk { file: H5File },
-}
-
-/// A consumer-side opened file: merged metadata + block locations.
-pub struct ConsumerFile {
-    pub filename: String,
-    pub version: u64,
-    pub attrs: Vec<(String, AttrValue)>,
-    /// dataset -> (meta, per-remote-rank owned slabs)
-    datasets: HashMap<String, (DatasetMeta, Vec<Vec<Hyperslab>>)>,
-    source: FileSource,
-}
-
-impl ConsumerFile {
-    pub fn dataset_names(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.datasets.keys().cloned().collect();
-        names.sort();
-        names
-    }
-
-    pub fn attr(&self, key: &str) -> Option<&AttrValue> {
-        self.attrs.iter().find(|(k, _)| k == key).map(|(_, v)| v)
-    }
-}
 
 /// Callback slots (LowFive's custom-callback extension, Sec. 3.4).
 /// Each receives the Vol and the filename (or dataset name) involved.
 type FileCb = Box<dyn FnMut(&mut Vol, &str) + Send>;
 
+/// The registered custom callbacks of one Vol.
 #[derive(Default)]
 pub struct Callbacks {
+    /// Runs before a consumer-side `file_open` blocks.
     pub before_file_open: Option<FileCb>,
+    /// Runs after any successful `file_open`.
     pub after_file_open: Option<FileCb>,
+    /// Runs before a `file_close` serves (may call `skip_serve`).
     pub before_file_close: Option<FileCb>,
+    /// Runs after a `file_close` completes.
     pub after_file_close: Option<FileCb>,
+    /// Runs after every producer-side `dataset_write`.
     pub after_dataset_write: Option<FileCb>,
 }
 
-/// Transport statistics (observability for the benches).
-#[derive(Debug, Default, Clone)]
-pub struct VolStats {
-    pub files_served: u64,
-    /// Flow-control cadence skips (`every`-gated closes that never
-    /// reached a channel's round buffer).
-    pub serves_skipped: u64,
-    /// Rounds discarded by a dropping flow policy (latest /
-    /// drop-oldest / drop-newest) after admission pressure.
-    pub serves_dropped: u64,
-    /// Default serves suppressed by a before-close callback (custom
-    /// I/O patterns like Nyx's double close).
-    pub serves_suppressed: u64,
-    pub bytes_served: u64,
-    pub files_opened: u64,
-    pub bytes_read: u64,
-    /// Time the producer spent blocked inside serve rounds.
-    pub serve_wait: Duration,
-    /// Time the producer stalled waiting for flow credits (subset of
-    /// `serve_wait` under blocking policies).
-    pub stall_wait: Duration,
-    /// High-water mark of any channel's round buffer.
-    pub max_queue_depth: u64,
-    /// Time the consumer spent blocked in file_open.
-    pub open_wait: Duration,
+/// Build an [`EngineCx`] from disjoint `Vol` fields (keeps the
+/// engines' `&mut self` borrows separate from the context borrows).
+macro_rules! engine_cx {
+    ($self:ident) => {
+        EngineCx {
+            io_comm: $self.io_comm.as_ref(),
+            workdir: &$self.workdir,
+            stats: &mut $self.stats,
+            recorder: $self.recorder.as_ref(),
+            lockstep_reads: $self.lockstep_reads,
+            zero_copy: $self.zero_copy,
+        }
+    };
 }
 
 /// The per-rank LowFive object.
@@ -191,71 +78,74 @@ pub struct Vol {
     /// I/O-rank sub-communicator (subset writers, Sec. 3.2.2). None on
     /// non-I/O ranks.
     io_comm: Option<Comm>,
-    out_channels: Vec<OutChannel>,
-    in_channels: Vec<InChannel>,
+    /// Producer half: out-channels, serve rounds, disk writes.
+    producer: ProducerEngine,
+    /// Consumer half: in-channels, opened files.
+    consumer: ConsumerEngine,
     /// Producer-side in-memory files (shared with buffered serve
     /// rounds; mutation copy-on-writes via [`Arc::make_mut`]).
     files: HashMap<String, Arc<H5File>>,
-    /// Consumer-side opened files.
-    consumer_files: HashMap<String, ConsumerFile>,
     /// Per-file close counts and the global counter (Listing 5).
     closes: HashMap<String, u64>,
+    /// Total file closes seen by this rank.
     pub file_close_counter: u64,
-    /// Monotonic version for file-mode disk writes.
-    disk_version: u64,
-    /// File-mode serves (disk writes) completed, folded into
-    /// `files_served` alongside the memory channels' completions.
-    disk_serves: u64,
     /// Dataset writes seen (drives Listing-3-style actions).
     dataset_write_counter: u64,
     callbacks: Callbacks,
     /// Set by before_file_close callbacks to skip the default serve
     /// (flow control and custom I/O patterns build on this).
     suppress_serve: bool,
-    /// Round-robin cursor over in-channels (fan-in interleaving).
-    in_cursor: usize,
     /// File pre-opened by the driver (stateless-consumer relaunch,
     /// Sec. 3.5.1): the task's next file_open consumes it.
     preopened: Option<String>,
+    /// This rank's transport counters.
     pub stats: VolStats,
     /// Directory for file-mode transports.
     workdir: PathBuf,
     /// Optional Gantt recorder (metrics S11): wait spans are recorded
     /// against this rank's timeline.
-    recorder: Option<(std::sync::Arc<Recorder>, usize)>,
+    recorder: Option<(Arc<Recorder>, usize)>,
     /// Ablation switch (benches/ablation.rs): issue DataReqs one rank
     /// at a time instead of pipelining send-all-then-receive.
     lockstep_reads: bool,
+    /// Zero-copy fast path for same-process serves (default on;
+    /// benches/dataplane.rs ablates it).
+    zero_copy: bool,
 }
 
 impl Vol {
+    /// A fresh Vol over a restricted-world communicator.
     pub fn new(local: Comm, workdir: PathBuf) -> Vol {
         Vol {
             local,
             io_comm: None,
-            out_channels: Vec::new(),
-            in_channels: Vec::new(),
+            producer: ProducerEngine::default(),
+            consumer: ConsumerEngine::default(),
             files: HashMap::new(),
-            consumer_files: HashMap::new(),
             closes: HashMap::new(),
             file_close_counter: 0,
-            disk_version: 0,
-            disk_serves: 0,
             dataset_write_counter: 0,
             callbacks: Callbacks::default(),
             suppress_serve: false,
-            in_cursor: 0,
             preopened: None,
             stats: VolStats::default(),
             workdir,
             recorder: None,
             lockstep_reads: false,
+            zero_copy: true,
         }
     }
 
     /// Ablation only: disable read pipelining (see benches/ablation.rs).
     pub fn set_lockstep_reads(&mut self, v: bool) {
         self.lockstep_reads = v;
+    }
+
+    /// Ablation only: disable the zero-copy same-process serve path
+    /// (see benches/dataplane.rs), forcing every data reply through
+    /// the encode/decode round-trip.
+    pub fn set_zero_copy(&mut self, v: bool) {
+        self.zero_copy = v;
     }
 
     /// Driver-side pre-open (the paper's "query producers whether there
@@ -274,59 +164,36 @@ impl Vol {
 
     /// Open the next served file from any live in-channel (round-robin).
     pub fn open_any(&mut self) -> Result<String> {
-        let t0 = Instant::now();
-        let n = self.in_channels.len();
-        if n == 0 {
-            return Err(WilkinsError::LowFive("no in-channels configured".into()));
-        }
-        loop {
-            let mut all_exhausted = true;
-            for k in 0..n {
-                let idx = (self.in_cursor + k) % n;
-                if self.in_channels[idx].exhausted {
-                    continue;
-                }
-                all_exhausted = false;
-                let pat = self.in_channels[idx].pattern.clone();
-                if let Some(name) = self.open_on_channel(idx, &pat)? {
-                    self.in_cursor = (idx + 1) % n;
-                    self.stats.files_opened += 1;
-                    self.stats.open_wait += t0.elapsed();
-                    self.record_span(SpanKind::Idle, &format!("open {name}"), t0);
-                    self.run_cb(|c| &mut c.after_file_open, &name);
-                    return Ok(name);
-                }
-            }
-            if all_exhausted {
-                return Err(WilkinsError::EndOfStream);
-            }
-        }
+        let name = {
+            let mut cx = engine_cx!(self);
+            self.consumer.open_any(&mut cx)?
+        };
+        self.run_cb(|c| &mut c.after_file_open, &name);
+        Ok(name)
     }
 
     /// Attach a Gantt recorder; `rank` is the global rank label used
     /// for this Vol's wait spans.
-    pub fn set_recorder(&mut self, rec: std::sync::Arc<Recorder>, rank: usize) {
+    pub fn set_recorder(&mut self, rec: Arc<Recorder>, rank: usize) {
         self.recorder = Some((rec, rank));
     }
 
-    fn record_span(&self, kind: SpanKind, label: &str, t0: Instant) {
-        if let Some((rec, rank)) = &self.recorder {
-            rec.record(*rank, kind, label, t0, Instant::now());
-        }
-    }
-
+    /// This rank's index within the task's restricted world.
     pub fn rank(&self) -> usize {
         self.local.rank()
     }
 
+    /// The task's restricted-world communicator.
     pub fn local_comm(&self) -> &Comm {
         &self.local
     }
 
+    /// Install (or clear) the I/O-rank sub-communicator.
     pub fn set_io_comm(&mut self, io: Option<Comm>) {
         self.io_comm = io;
     }
 
+    /// The I/O-rank sub-communicator, if this rank is a writer.
     pub fn io_comm(&self) -> Option<&Comm> {
         self.io_comm.as_ref()
     }
@@ -337,36 +204,44 @@ impl Vol {
         self.io_comm.is_some()
     }
 
+    /// Attach a producer-side channel.
     pub fn add_out_channel(&mut self, ch: OutChannel) {
-        self.out_channels.push(ch);
+        self.producer.channels.push(ch);
     }
 
+    /// Attach a consumer-side channel.
     pub fn add_in_channel(&mut self, ch: InChannel) {
-        self.in_channels.push(ch);
+        self.consumer.channels.push(ch);
     }
 
+    /// Directory file-routed transports read and write.
     pub fn workdir(&self) -> &PathBuf {
         &self.workdir
     }
 
     // ---- callback registration (Listing 5 API) ----------------------------
 
+    /// Register the before-file-open callback.
     pub fn set_before_file_open(&mut self, cb: FileCb) {
         self.callbacks.before_file_open = Some(cb);
     }
 
+    /// Register the after-file-open callback.
     pub fn set_after_file_open(&mut self, cb: FileCb) {
         self.callbacks.after_file_open = Some(cb);
     }
 
+    /// Register the before-file-close callback.
     pub fn set_before_file_close(&mut self, cb: FileCb) {
         self.callbacks.before_file_close = Some(cb);
     }
 
+    /// Register the after-file-close callback.
     pub fn set_after_file_close(&mut self, cb: FileCb) {
         self.callbacks.after_file_close = Some(cb);
     }
 
+    /// Register the after-dataset-write callback.
     pub fn set_after_dataset_write(&mut self, cb: FileCb) {
         self.callbacks.after_dataset_write = Some(cb);
     }
@@ -390,12 +265,7 @@ impl Vol {
     /// Are there pending (unanswered) consumer requests for files
     /// matching this name? Drives the *latest* flow-control strategy.
     pub fn any_pending_requests(&self, filename: &str) -> bool {
-        self.out_channels.iter().any(|ch| {
-            ch.mode == ChannelMode::Memory
-                && pattern_matches(&ch.pattern, filename)
-                && (!ch.deferred.is_empty()
-                    || ch.intercomm.as_ref().is_some_and(|ic| ic.iprobe(TAG_REQ)))
-        })
+        self.producer.any_pending_requests(filename)
     }
 
     /// How many times has `filename` been closed so far?
@@ -408,6 +278,7 @@ impl Vol {
         self.dataset_write_counter += 1;
     }
 
+    /// Dataset writes seen so far.
     pub fn dataset_writes(&self) -> u64 {
         self.dataset_write_counter
     }
@@ -440,11 +311,13 @@ impl Vol {
         Ok(())
     }
 
+    /// Write a file attribute.
     pub fn attr_write(&mut self, file: &str, key: &str, value: AttrValue) -> Result<()> {
         self.file_mut(file)?.attrs.insert(key.to_string(), value);
         Ok(())
     }
 
+    /// Create a dataset with a global shape.
     pub fn dataset_create(
         &mut self,
         file: &str,
@@ -455,6 +328,7 @@ impl Vol {
         self.file_mut(file)?.create_dataset(dset, dtype, dims)
     }
 
+    /// Write this rank's hyperslab of a dataset.
     pub fn dataset_write(
         &mut self,
         file: &str,
@@ -478,6 +352,7 @@ impl Vol {
             .ok_or_else(|| WilkinsError::LowFive(format!("file {name} not open for writing")))
     }
 
+    /// The producer-side in-memory file, if open for writing.
     pub fn file(&self, name: &str) -> Result<&H5File> {
         self.files
             .get(name)
@@ -489,8 +364,11 @@ impl Vol {
     /// happens (unless a callback suppressed it); on the consumer it
     /// sends the Done for the current serve round.
     pub fn file_close(&mut self, name: &str) -> Result<()> {
-        if self.consumer_files.contains_key(name) {
-            return self.consumer_file_close(name);
+        if self.consumer.has_file(name) {
+            self.run_cb(|c| &mut c.before_file_close, name);
+            self.consumer.file_close(name)?;
+            self.run_cb(|c| &mut c.after_file_close, name);
+            return Ok(());
         }
         self.suppress_serve = false;
         self.run_cb(|c| &mut c.before_file_close, name);
@@ -542,475 +420,30 @@ impl Vol {
         Ok(())
     }
 
-    /// Serve one file: admit one round per matching out-channel,
-    /// subject to each channel's flow policy (the decision lives in
-    /// [`crate::flow::LinkState`], not here). Only I/O ranks
+    /// Serve one file through the producer engine (route resolution,
+    /// flow admission, disk write-through). Only I/O ranks
     /// participate.
     fn serve_file(&mut self, name: &str) -> Result<()> {
-        if !self.files.contains_key(name) {
+        let Some(file) = self.files.get(name) else {
             return Ok(()); // nothing buffered (non-writer rank)
-        }
+        };
         if !self.is_io_rank() {
             return Ok(());
         }
-        let t0 = Instant::now();
-        let mode_file = self
-            .out_channels
-            .iter()
-            .any(|ch| ch.mode == ChannelMode::File && pattern_matches(&ch.pattern, name));
-        if mode_file {
-            self.disk_version += 1;
-            let v = self.disk_version;
-            self.write_disk_file(name, v)?;
-            self.disk_serves += 1;
-        }
-        let mem_idx: Vec<usize> = (0..self.out_channels.len())
-            .filter(|&i| {
-                self.out_channels[i].mode == ChannelMode::Memory
-                    && self.out_channels[i].intercomm.is_some()
-                    && pattern_matches(&self.out_channels[i].pattern, name)
-            })
-            .collect();
-        for idx in mem_idx {
-            if !self.out_channels[idx].link.note_attempt() {
-                continue; // `every`-gated close (counted by the link)
-            }
-            let snapshot = Arc::clone(self.files.get(name).unwrap());
-            self.enqueue_round(idx, snapshot)?;
-        }
-        self.stats.serve_wait += t0.elapsed();
-        self.record_span(SpanKind::Transfer, &format!("serve {name}"), t0);
-        self.sync_flow_stats();
-        Ok(())
+        let file = Arc::clone(file);
+        let mut cx = engine_cx!(self);
+        self.producer.serve_file(&mut cx, name, &file)
     }
 
-    /// Fold the per-link flow counters into this rank's `VolStats`
-    /// (the links are the single source of truth).
-    ///
-    /// `files_served` counts rounds actually *consumed*: the busiest
-    /// memory channel's completions (channels at different cadences
-    /// overlap on the same closes, so summing would double-count) plus
-    /// file-mode disk writes. Rounds a dropping policy discarded never
-    /// count — they are `serves_dropped`.
-    fn sync_flow_stats(&mut self) {
-        let mut skipped = 0;
-        let mut dropped = 0;
-        let mut completed = 0;
-        let mut stalled = Duration::ZERO;
-        let mut maxq = 0;
-        for ch in &self.out_channels {
-            skipped += ch.link.stats.skipped;
-            dropped += ch.link.stats.dropped;
-            completed = completed.max(ch.link.stats.completed);
-            stalled += ch.link.stats.stalled;
-            maxq = maxq.max(ch.link.stats.max_queue_depth);
-        }
-        self.stats.files_served = self.disk_serves.max(completed);
-        self.stats.serves_skipped = skipped;
-        self.stats.serves_dropped = dropped;
-        self.stats.stall_wait = stalled;
-        self.stats.max_queue_depth = maxq;
-    }
-
-    /// Admit one round on one channel per its policy.
-    ///
-    /// Blocking policies need no cross-rank coordination (no drops;
-    /// deliveries are a pure function of the buffer, which every
-    /// writer rank mutates through the identical push sequence).
-    /// Dropping policies are coordinated by I/O rank 0's section plan
-    /// (see the [`crate::flow`] module docs).
-    fn enqueue_round(&mut self, idx: usize, snapshot: Arc<H5File>) -> Result<()> {
-        if self.out_channels[idx].link.policy().mode.drops() {
-            self.enqueue_dropping(idx, snapshot)
-        } else {
-            self.enqueue_block(idx, snapshot)
-        }
-    }
-
-    fn enqueue_block(&mut self, idx: usize, snapshot: Arc<H5File>) -> Result<()> {
-        self.pump_available(idx, None)?;
-        self.out_channels[idx].link.push(snapshot);
-        self.answer_deferred(idx, None)?;
-        let target = self.out_channels[idx].link.policy().depth.saturating_sub(1);
-        if self.out_channels[idx].link.occupancy() > target {
-            // Out of credits: stall until enough rounds complete.
-            let t0 = Instant::now();
-            while self.out_channels[idx].link.occupancy() > target {
-                self.pump_one_blocking(idx)?;
-            }
-            self.out_channels[idx].link.note_stall(t0.elapsed());
-            self.record_span(SpanKind::Stall, "flow stall", t0);
-        }
-        Ok(())
-    }
-
-    fn enqueue_dropping(&mut self, idx: usize, snapshot: Arc<H5File>) -> Result<()> {
-        let io = self
-            .io_comm
-            .as_ref()
-            .ok_or_else(|| {
-                WilkinsError::LowFive("dropping flow policy on non-io rank".into())
-            })?
-            .clone();
-        if io.rank() == 0 {
-            let mut plan = Plan::default();
-            self.pump_available(idx, Some(&mut plan))?;
-            let admission = self.out_channels[idx].link.admit(snapshot);
-            for v in &admission.dropped {
-                plan.ops.push(PlanOp::Drop { version: *v });
-            }
-            match admission.pushed {
-                Some(v) => plan.ops.push(PlanOp::Push { version: v }),
-                None => plan.ops.push(PlanOp::DropIncoming),
-            }
-            self.answer_deferred(idx, Some(&mut plan))?;
-            if io.size() > 1 {
-                io.bcast(0, Some(&plan.encode()))?;
-            }
-        } else {
-            let bytes = io.bcast(0, None)?;
-            let plan = Plan::decode(&bytes)?;
-            self.replay_plan(idx, snapshot, plan)?;
-        }
-        Ok(())
-    }
-
-    /// Absorb every request already waiting in the mailbox for channel
-    /// `idx` (non-blocking). With `plan`, record the state-mutating
-    /// events so other writer ranks can replay them.
-    fn pump_available(&mut self, idx: usize, mut plan: Option<&mut Plan>) -> Result<()> {
-        loop {
-            let Some(ic) = self.out_channels[idx].intercomm.clone() else {
-                return Ok(());
-            };
-            let Some((src, bytes)) = ic.try_recv_any(TAG_REQ) else {
-                return Ok(());
-            };
-            let req = Request::decode(&bytes)?;
-            self.handle_request(idx, src, req, plan.as_deref_mut())?;
-        }
-    }
-
-    /// Block for one request on channel `idx` and process it.
-    fn pump_one_blocking(&mut self, idx: usize) -> Result<()> {
-        let ic = self.out_channels[idx].intercomm.as_ref().unwrap().clone();
-        let (src, bytes) = ic.recv_any(TAG_REQ)?;
-        let req = Request::decode(&bytes)?;
-        self.handle_request(idx, src, req, None)
-    }
-
-    /// Process one consumer request against channel `idx`.
-    fn handle_request(
-        &mut self,
-        idx: usize,
-        src: usize,
-        req: Request,
-        plan: Option<&mut Plan>,
-    ) -> Result<()> {
-        match req {
-            Request::MetaReq { pattern, min_version } => {
-                match self.out_channels[idx].link.choose_deliver(src, min_version) {
-                    Some(v) => {
-                        self.deliver_meta(idx, src, v)?;
-                        if let Some(p) = plan {
-                            p.ops.push(PlanOp::Deliver { j: src as u64, version: v });
-                        }
-                    }
-                    // No buffered round can answer yet: defer until a
-                    // later push (or the EOF handshake).
-                    None => self.out_channels[idx]
-                        .deferred
-                        .push_back((src, Request::MetaReq { pattern, min_version })),
-                }
-            }
-            Request::DataReq { ref file, ref dset, ref slab } => {
-                self.answer_data_req(idx, src, file, dset, slab)?;
-            }
-            Request::Done { version } => {
-                self.out_channels[idx].link.mark_done(version, src)?;
-                if let Some(p) = plan {
-                    p.ops.push(PlanOp::Done { j: src as u64, version });
-                }
-            }
-            Request::EofAck => {
-                self.out_channels[idx].link.mark_eof(src);
-                if let Some(p) = plan {
-                    p.ops.push(PlanOp::Eof { j: src as u64 });
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Answer a MetaReq with buffered round `version` and mark it
-    /// delivered to consumer rank `src`.
-    fn deliver_meta(&mut self, idx: usize, src: usize, version: u64) -> Result<()> {
-        let rep = {
-            let round = self.out_channels[idx].link.round(version).ok_or_else(|| {
-                WilkinsError::LowFive(format!("deliver of unknown round v{version}"))
-            })?;
-            Reply::Meta(snapshot_meta(&round.snapshot, version)).encode()
-        };
-        let ic = self.out_channels[idx].intercomm.as_ref().unwrap().clone();
-        ic.send_owned(src, TAG_REP, rep);
-        self.out_channels[idx].link.mark_delivered(version, src)
-    }
-
-    /// Answer a DataReq from the round consumer rank `src` has open.
-    fn answer_data_req(
-        &mut self,
-        idx: usize,
-        src: usize,
-        file: &str,
-        dset: &str,
-        slab: &Hyperslab,
-    ) -> Result<()> {
-        let (rep, nbytes) = {
-            let round = self.out_channels[idx].link.open_round(src).ok_or_else(|| {
-                WilkinsError::LowFive(format!(
-                    "data request for {file} from rank {src} with no open round"
-                ))
-            })?;
-            if round.snapshot.name != file {
-                return Err(WilkinsError::LowFive(format!(
-                    "data request for {file} against round of {}",
-                    round.snapshot.name
-                )));
-            }
-            encode_data_reply(&round.snapshot, dset, slab)?
-        };
-        self.stats.bytes_served += nbytes as u64;
-        let ic = self.out_channels[idx].intercomm.as_ref().unwrap().clone();
-        ic.send_owned(src, TAG_REP, rep);
-        Ok(())
-    }
-
-    /// Re-examine deferred MetaReqs: a newly pushed round may satisfy
-    /// them. Answered requests are recorded into `plan` when given.
-    fn answer_deferred(&mut self, idx: usize, mut plan: Option<&mut Plan>) -> Result<()> {
-        let mut keep = VecDeque::new();
-        while let Some((src, req)) = self.out_channels[idx].deferred.pop_front() {
-            let min_version = match &req {
-                Request::MetaReq { min_version, .. } => *min_version,
-                _ => {
-                    keep.push_back((src, req));
-                    continue;
-                }
-            };
-            match self.out_channels[idx].link.choose_deliver(src, min_version) {
-                Some(v) => {
-                    self.deliver_meta(idx, src, v)?;
-                    if let Some(p) = plan.as_deref_mut() {
-                        p.ops.push(PlanOp::Deliver { j: src as u64, version: v });
-                    }
-                }
-                None => keep.push_back((src, req)),
-            }
-        }
-        self.out_channels[idx].deferred = keep;
-        Ok(())
-    }
-
-    /// Replay I/O rank 0's section plan against our own mailbox: apply
-    /// buffer mutations verbatim and consume exactly the planned
-    /// protocol events from each consumer rank's (FIFO) request
-    /// stream, answering our own DataReqs along the way. See the
-    /// [`crate::flow`] module docs for why this keeps writer ranks'
-    /// buffers bit-identical.
-    fn replay_plan(&mut self, idx: usize, snapshot: Arc<H5File>, plan: Plan) -> Result<()> {
-        let mut snapshot = Some(snapshot);
-        self.drain_data_reqs(idx)?;
-        for op in plan.ops {
-            match op {
-                PlanOp::Drop { version } => {
-                    self.out_channels[idx].link.drop_version(version)?;
-                }
-                PlanOp::Push { version } => {
-                    let snap = snapshot.take().ok_or_else(|| {
-                        WilkinsError::LowFive("flow plan pushes twice".into())
-                    })?;
-                    let v = self.out_channels[idx].link.push(snap);
-                    if v != version {
-                        return Err(WilkinsError::LowFive(format!(
-                            "flow plan version skew: local v{v}, plan v{version}"
-                        )));
-                    }
-                }
-                PlanOp::DropIncoming => {
-                    snapshot.take();
-                    self.out_channels[idx].link.note_drop_incoming();
-                }
-                PlanOp::Deliver { j, version } => {
-                    self.replay_expect(idx, j as usize, Expect::Meta(version))?;
-                }
-                PlanOp::Done { j, version } => {
-                    self.replay_expect(idx, j as usize, Expect::Done(version))?;
-                }
-                PlanOp::Eof { j } => {
-                    self.replay_expect(idx, j as usize, Expect::Eof)?;
-                }
-            }
-        }
-        self.drain_data_reqs(idx)?;
-        Ok(())
-    }
-
-    /// Consume consumer rank `j`'s request stream up to (and
-    /// including) the expected protocol event, answering DataReqs
-    /// encountered on the way.
-    fn replay_expect(&mut self, idx: usize, j: usize, expect: Expect) -> Result<()> {
-        loop {
-            let ic = self.out_channels[idx].intercomm.as_ref().unwrap().clone();
-            let (_, bytes) = ic.recv(j, TAG_REQ)?;
-            let req = Request::decode(&bytes)?;
-            match (req, expect) {
-                (Request::DataReq { ref file, ref dset, ref slab }, _) => {
-                    self.answer_data_req(idx, j, file, dset, slab)?;
-                }
-                (Request::MetaReq { .. }, Expect::Meta(v)) => {
-                    return self.deliver_meta(idx, j, v);
-                }
-                (Request::Done { version }, Expect::Done(v)) if version == v => {
-                    self.out_channels[idx].link.mark_done(v, j)?;
-                    return Ok(());
-                }
-                (Request::EofAck, Expect::Eof) => {
-                    self.out_channels[idx].link.mark_eof(j);
-                    return Ok(());
-                }
-                (other, _) => {
-                    return Err(WilkinsError::LowFive(format!(
-                        "flow plan replay: expected {expect:?} from rank {j}, got {other:?}"
-                    )));
-                }
-            }
-        }
-    }
-
-    /// Answer every DataReq already queued for channel `idx` without
-    /// absorbing any plan-owned protocol event (payload-discriminant
-    /// selective receive). Lets non-leader writer ranks keep consumer
-    /// reads flowing between coordinated sections.
-    fn drain_data_reqs(&mut self, idx: usize) -> Result<()> {
-        loop {
-            let Some(ic) = self.out_channels[idx].intercomm.clone() else {
-                return Ok(());
-            };
-            let Some((src, bytes)) =
-                ic.try_recv_where(TAG_REQ, |p| p.first() == Some(&REQ_DATA_DISCRIMINANT))
-            else {
-                return Ok(());
-            };
-            match Request::decode(&bytes)? {
-                Request::DataReq { ref file, ref dset, ref slab } => {
-                    self.answer_data_req(idx, src, file, dset, slab)?;
-                }
-                other => {
-                    return Err(WilkinsError::LowFive(format!(
-                        "selective DataReq receive returned {other:?}"
-                    )));
-                }
-            }
-        }
-    }
-
-    fn write_disk_file(&mut self, name: &str, version: u64) -> Result<()> {
-        // Gather every I/O rank's blocks to I/O rank 0, which writes
-        // one file (the "traditional HDF5 file" path).
-        let io = self
-            .io_comm
-            .as_ref()
-            .ok_or_else(|| WilkinsError::LowFive("file mode on non-io rank".into()))?
-            .clone();
-        let f = self.file(name)?;
-        let mine = filemode::encode_files(&HashMap::from([(name.to_string(), f.clone())]));
-        let gathered = io.gather(0, &mine)?;
-        if let Some(parts) = gathered {
-            let mut merged = H5File::new(name);
-            for part in parts {
-                let files = filemode::decode_files(&part)?;
-                for (_, file) in files {
-                    filemode::merge_file(&mut merged, file);
-                }
-            }
-            let nbytes = merged.local_bytes();
-            filemode::write_file(&self.workdir, &merged, version)?;
-            self.stats.bytes_served += nbytes as u64;
-        }
-        Ok(())
-    }
-
-    /// Producer finalize: flush every channel's round buffer (each
-    /// buffered round is delivered and completed — dropping policies
-    /// stop dropping at shutdown so consumers get the freshest data),
-    /// then signal EOF and wait for every consumer rank to
-    /// acknowledge. Idempotent.
+    /// Producer finalize: flush every channel's round buffer, write
+    /// disk EOF markers, then run the memory EOF handshake.
+    /// Idempotent.
     pub fn finalize_producer(&mut self) -> Result<()> {
         if !self.is_io_rank() {
             return Ok(());
         }
-        for idx in 0..self.out_channels.len() {
-            match self.out_channels[idx].mode {
-                ChannelMode::File => {
-                    let io = self.io_comm.as_ref().unwrap();
-                    if io.rank() == 0 {
-                        filemode::write_eof(&self.workdir, &self.out_channels[idx].pattern)?;
-                    }
-                }
-                ChannelMode::Memory => {
-                    if self.out_channels[idx].intercomm.is_none() {
-                        continue;
-                    }
-                    // 1. Flush: every buffered round must complete
-                    //    before EOF. Buffer mutations during flush are
-                    //    completions only, so writer ranks stay
-                    //    consistent without a section plan.
-                    while self.out_channels[idx].link.occupancy() > 0 {
-                        self.answer_deferred(idx, None)?;
-                        if self.out_channels[idx].link.occupancy() == 0 {
-                            break;
-                        }
-                        self.pump_one_blocking(idx)?;
-                    }
-                    // 2. EOF handshake: answer remaining open requests
-                    //    with Eof until every consumer rank acked.
-                    while self.out_channels[idx].link.acked_count()
-                        < self.out_channels[idx].link.nconsumers()
-                    {
-                        let (src, req) =
-                            match self.out_channels[idx].deferred.pop_front() {
-                                Some(x) => x,
-                                None => {
-                                    let ic = self.out_channels[idx]
-                                        .intercomm
-                                        .as_ref()
-                                        .unwrap();
-                                    let (src, bytes) = ic.recv_any(TAG_REQ)?;
-                                    (src, Request::decode(&bytes)?)
-                                }
-                            };
-                        match req {
-                            Request::MetaReq { .. } => {
-                                let ic =
-                                    self.out_channels[idx].intercomm.as_ref().unwrap();
-                                ic.send(src, TAG_REP, &Reply::Eof.encode());
-                            }
-                            Request::EofAck => {
-                                self.out_channels[idx].link.mark_eof(src);
-                            }
-                            Request::Done { .. } => {} // stale, ignore
-                            Request::DataReq { .. } => {
-                                return Err(WilkinsError::LowFive(
-                                    "data request after finalize".into(),
-                                ))
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        self.sync_flow_stats();
-        Ok(())
+        let mut cx = engine_cx!(self);
+        self.producer.finalize(&mut cx)
     }
 
     // ---- consumer-side API -------------------------------------------------
@@ -1027,374 +460,40 @@ impl Vol {
             self.preopened = Some(name); // not what the task wants
         }
         self.run_cb(|c| &mut c.before_file_open, pattern);
-        let t0 = Instant::now();
-        let n = self.in_channels.len();
-        if n == 0 {
-            return Err(WilkinsError::LowFive("no in-channels configured".into()));
-        }
-        let mut tried = 0;
-        let mut matched = false;
-        while tried < n {
-            let idx = (self.in_cursor + tried) % n;
-            tried += 1;
-            let matches = pattern_matches(&self.in_channels[idx].pattern, pattern)
-                || pattern_matches(pattern, &self.in_channels[idx].pattern);
-            if !matches {
-                continue;
-            }
-            matched = true;
-            if self.in_channels[idx].exhausted {
-                continue;
-            }
-            match self.open_on_channel(idx, pattern)? {
-                Some(name) => {
-                    self.in_cursor = (idx + 1) % n;
-                    self.stats.files_opened += 1;
-                    self.stats.open_wait += t0.elapsed();
-                    self.record_span(SpanKind::Idle, &format!("open {name}"), t0);
-                    self.run_cb(|c| &mut c.after_file_open, &name);
-                    return Ok(name);
-                }
-                None => continue, // hit EOF on this channel; try next
-            }
-        }
-        if !matched {
-            return Err(WilkinsError::LowFive(format!(
-                "no in-channel matches pattern {pattern}"
-            )));
-        }
-        Err(WilkinsError::EndOfStream)
+        let name = {
+            let mut cx = engine_cx!(self);
+            self.consumer.open_matching(&mut cx, pattern)?
+        };
+        self.run_cb(|c| &mut c.after_file_open, &name);
+        Ok(name)
     }
 
-    /// Try to open on a specific channel. Ok(None) => channel EOF.
-    fn open_on_channel(&mut self, idx: usize, pattern: &str) -> Result<Option<String>> {
-        let min_version = self.in_channels[idx].last_version + 1;
-        match self.in_channels[idx].mode {
-            ChannelMode::File => {
-                let deadline = Instant::now() + crate::comm::RECV_TIMEOUT;
-                let found = filemode::poll_file(
-                    &self.workdir,
-                    &self.in_channels[idx].pattern,
-                    min_version,
-                    deadline,
-                )?;
-                match found {
-                    Some((file, version)) => {
-                        self.in_channels[idx].last_version = version;
-                        let name = file.name.clone();
-                        let cf = ConsumerFile {
-                            filename: name.clone(),
-                            version,
-                            attrs: file
-                                .attrs
-                                .iter()
-                                .map(|(k, v)| (k.clone(), v.clone()))
-                                .collect(),
-                            datasets: file
-                                .datasets
-                                .values()
-                                .map(|d| {
-                                    (
-                                        d.meta.name.clone(),
-                                        (
-                                            d.meta.clone(),
-                                            vec![d
-                                                .blocks
-                                                .iter()
-                                                .map(|b| b.slab.clone())
-                                                .collect()],
-                                        ),
-                                    )
-                                })
-                                .collect(),
-                            source: FileSource::Disk { file },
-                        };
-                        self.consumer_files.insert(name.clone(), cf);
-                        Ok(Some(name))
-                    }
-                    None => {
-                        self.in_channels[idx].exhausted = true;
-                        Ok(None)
-                    }
-                }
-            }
-            ChannelMode::Memory => {
-                let ic = self.in_channels[idx]
-                    .intercomm
-                    .as_ref()
-                    .ok_or_else(|| WilkinsError::LowFive("memory channel without intercomm".into()))?
-                    .clone();
-                let req = Request::MetaReq {
-                    pattern: pattern.to_string(),
-                    min_version,
-                }
-                .encode();
-                for r in 0..ic.remote_size() {
-                    ic.send(r, TAG_REQ, &req);
-                }
-                let mut metas: Vec<Option<FileMeta>> = (0..ic.remote_size()).map(|_| None).collect();
-                let mut eof = false;
-                for _ in 0..ic.remote_size() {
-                    let (src, bytes) = ic.recv_any(TAG_REP)?;
-                    match Reply::decode(&bytes)? {
-                        Reply::Meta(m) => metas[src] = Some(m),
-                        Reply::Eof => eof = true,
-                        Reply::Data(_) => {
-                            return Err(WilkinsError::LowFive(
-                                "unexpected data reply during open".into(),
-                            ))
-                        }
-                    }
-                }
-                if eof {
-                    // SPMD producers answer consistently: all Eof.
-                    self.in_channels[idx].exhausted = true;
-                    if !self.in_channels[idx].eof_acked {
-                        let ack = Request::EofAck.encode();
-                        for r in 0..ic.remote_size() {
-                            ic.send(r, TAG_REQ, &ack);
-                        }
-                        self.in_channels[idx].eof_acked = true;
-                    }
-                    return Ok(None);
-                }
-                let mut filename = String::new();
-                let mut version = 0;
-                let mut attrs = Vec::new();
-                let mut datasets: HashMap<String, (DatasetMeta, Vec<Vec<Hyperslab>>)> =
-                    HashMap::new();
-                let nremote = ic.remote_size();
-                for (src, m) in metas.into_iter().enumerate() {
-                    let m = m.ok_or_else(|| {
-                        WilkinsError::LowFive("missing metadata reply".into())
-                    })?;
-                    filename = m.filename;
-                    version = m.version;
-                    if src == 0 {
-                        attrs = m.attrs;
-                    }
-                    for (meta, slabs) in m.datasets {
-                        let entry = datasets
-                            .entry(meta.name.clone())
-                            .or_insert_with(|| (meta.clone(), vec![Vec::new(); nremote]));
-                        entry.1[src] = slabs;
-                    }
-                }
-                self.in_channels[idx].last_version = version;
-                let cf = ConsumerFile {
-                    filename: filename.clone(),
-                    version,
-                    attrs,
-                    datasets,
-                    source: FileSource::Memory { channel: idx },
-                };
-                self.consumer_files.insert(filename.clone(), cf);
-                Ok(Some(filename))
-            }
-        }
-    }
-
+    /// An opened consumer-side file.
     pub fn consumer_file(&self, name: &str) -> Result<&ConsumerFile> {
-        self.consumer_files.get(name).ok_or_else(|| {
-            WilkinsError::LowFive(format!("file {name} not open for reading"))
-        })
+        self.consumer.file(name)
     }
 
+    /// Metadata of a dataset of an opened file.
     pub fn dataset_meta(&self, file: &str, dset: &str) -> Result<DatasetMeta> {
-        let cf = self.consumer_file(file)?;
-        cf.datasets
-            .get(dset)
-            .map(|(m, _)| m.clone())
-            .ok_or_else(|| WilkinsError::LowFive(format!("no dataset {dset} in {file}")))
+        self.consumer.dataset_meta(file, dset)
     }
 
     /// Read `want` of `dset` (global coordinates). Pulls only the
-    /// intersecting blocks from the producer ranks that own them.
+    /// intersecting blocks from the producer ranks (or the disk half)
+    /// that own them.
     pub fn dataset_read(&mut self, file: &str, dset: &str, want: &Hyperslab) -> Result<Vec<u8>> {
-        let (meta, rank_slabs, src_channel) = {
-            let cf = self.consumer_file(file)?;
-            let (m, rs) = cf
-                .datasets
-                .get(dset)
-                .ok_or_else(|| WilkinsError::LowFive(format!("no dataset {dset} in {file}")))?;
-            let ch = match cf.source {
-                FileSource::Memory { channel } => Some(channel),
-                FileSource::Disk { .. } => None,
-            };
-            (m.clone(), rs.clone(), ch)
-        };
-        let esize = meta.dtype.size_bytes();
-        let mut out = vec![0u8; want.element_count() as usize * esize];
-        match src_channel {
-            None => {
-                // Disk file: blocks are local.
-                let cf = self.consumer_files.get(file).unwrap();
-                if let FileSource::Disk { file: f } = &cf.source {
-                    f.dataset(dset)?.read_into(want, &mut out);
-                }
-            }
-            Some(idx) => {
-                let ic = self.in_channels[idx].intercomm.as_ref().unwrap().clone();
-                let req = Request::DataReq {
-                    file: file.to_string(),
-                    dset: dset.to_string(),
-                    slab: want.clone(),
-                }
-                .encode();
-                // Only contact ranks whose owned slabs intersect the
-                // wanted region (O(M+N) block-range intersection).
-                let targets: Vec<usize> = rank_slabs
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, slabs)| slabs.iter().any(|s| s.overlaps(want)))
-                    .map(|(r, _)| r)
-                    .collect();
-                if self.lockstep_reads {
-                    // Ablation arm: request/await one rank at a time.
-                    for &r in &targets {
-                        ic.send(r, TAG_REQ, &req);
-                        let (_, bytes) = ic.recv(r, TAG_REP)?;
-                        self.apply_data_reply(&bytes, want, &mut out, esize)?;
-                    }
-                } else {
-                    // Default: pipeline — send every request first,
-                    // then collect, overlapping the producers' work.
-                    for &r in &targets {
-                        ic.send(r, TAG_REQ, &req);
-                    }
-                    for &r in &targets {
-                        let (_, bytes) = ic.recv(r, TAG_REP)?;
-                        self.apply_data_reply(&bytes, want, &mut out, esize)?;
-                    }
-                }
-            }
-        }
-        Ok(out)
-    }
-
-    /// Streaming parse of a Reply::Data message: block bytes are
-    /// copied straight from the wire buffer into the caller's output
-    /// (§Perf iteration 3: skips Reply::decode's per-block to_vec).
-    fn apply_data_reply(
-        &mut self,
-        bytes: &[u8],
-        want: &Hyperslab,
-        out: &mut [u8],
-        esize: usize,
-    ) -> Result<()> {
-        let mut r = crate::comm::wire::Reader::new(bytes);
-        if r.get_u8()? != 1 {
-            return Err(WilkinsError::LowFive("expected data reply".into()));
-        }
-        let nblocks = r.get_u64()? as usize;
-        for _ in 0..nblocks {
-            let region = Hyperslab::decode(&mut r)?;
-            let data = r.get_bytes()?; // borrowed, no copy
-            self.stats.bytes_read += data.len() as u64;
-            copy_region(&region, data, want, out, &region, esize);
-        }
-        Ok(())
-    }
-
-    fn consumer_file_close(&mut self, name: &str) -> Result<()> {
-        self.run_cb(|c| &mut c.before_file_close, name);
-        if let Some(cf) = self.consumer_files.remove(name) {
-            if let FileSource::Memory { channel } = cf.source {
-                let ic = self.in_channels[channel].intercomm.as_ref().unwrap();
-                let done = Request::Done { version: cf.version }.encode();
-                for r in 0..ic.remote_size() {
-                    ic.send(r, TAG_REQ, &done);
-                }
-            }
-        }
-        self.run_cb(|c| &mut c.after_file_close, name);
-        Ok(())
+        let mut cx = engine_cx!(self);
+        self.consumer.dataset_read(&mut cx, file, dset, want)
     }
 
     /// Consumer finalize: tell producers on every non-exhausted memory
     /// channel that this rank will not request again. Idempotent.
     pub fn finalize_consumer(&mut self) -> Result<()> {
-        for ch in &mut self.in_channels {
-            if ch.mode == ChannelMode::Memory && !ch.eof_acked {
-                if let Some(ic) = &ch.intercomm {
-                    let ack = Request::EofAck.encode();
-                    for r in 0..ic.remote_size() {
-                        ic.send(r, TAG_REQ, &ack);
-                    }
-                }
-                ch.eof_acked = true;
-            }
-        }
-        Ok(())
+        self.consumer.finalize()
     }
 
     /// Are any in-channels still live (not exhausted)?
     pub fn has_live_inputs(&self) -> bool {
-        self.in_channels.iter().any(|c| !c.exhausted)
+        self.consumer.has_live_inputs()
     }
-}
-
-/// The protocol event a plan replay is waiting for.
-#[derive(Debug, Clone, Copy)]
-enum Expect {
-    /// A MetaReq, to be answered with this round version.
-    Meta(u64),
-    /// A Done for this round version.
-    Done(u64),
-    /// An EofAck.
-    Eof,
-}
-
-/// One writer rank's metadata view of a buffered round snapshot.
-fn snapshot_meta(f: &H5File, version: u64) -> FileMeta {
-    FileMeta {
-        filename: f.name.clone(),
-        version,
-        attrs: f.attrs.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
-        datasets: f
-            .datasets
-            .values()
-            .map(|d| {
-                (
-                    d.meta.clone(),
-                    d.blocks.iter().map(|b| b.slab.clone()).collect(),
-                )
-            })
-            .collect(),
-    }
-}
-
-/// Encode a Reply::Data wire message for the blocks of `snapshot`
-/// intersecting `want`, extracting each intersection *directly into*
-/// the wire buffer (§Perf iteration 2: no staging buffer per block).
-/// Returns (encoded reply, payload bytes).
-fn encode_data_reply(
-    snapshot: &H5File,
-    dset: &str,
-    want: &Hyperslab,
-) -> Result<(Vec<u8>, usize)> {
-    let d = snapshot.dataset(dset)?;
-    let esize = d.meta.dtype.size_bytes();
-    let inters: Vec<(&super::model::OwnedBlock, Hyperslab)> = d
-        .blocks
-        .iter()
-        .filter_map(|b| b.slab.intersect(want).map(|i| (b, i)))
-        .collect();
-    let payload: usize = inters
-        .iter()
-        .map(|(_, i)| i.element_count() as usize * esize + 64)
-        .sum();
-    let mut w = crate::comm::wire::Writer::with_capacity(payload + 16);
-    w.put_u8(1); // Reply::Data discriminant
-    w.put_u64(inters.len() as u64);
-    let mut nbytes = 0;
-    for (b, inter) in inters {
-        inter.encode(&mut w);
-        let n = inter.element_count() as usize * esize;
-        nbytes += n;
-        w.put_bytes_via(n, |dst| {
-            copy_region(&b.slab, &b.data, &inter, dst, &inter, esize);
-        });
-    }
-    Ok((w.into_vec(), nbytes))
 }

@@ -30,8 +30,10 @@ use crate::metrics::{Span, SpanKind};
 /// instead of desyncing the stream.
 pub const MAGIC: u32 = 0x574C_4B4E;
 /// Protocol version; bumped on any wire-visible change (v2: flow
-/// counters in stats/reports, chunked data frames, stall spans).
-pub const VERSION: u32 = 2;
+/// counters in stats/reports, chunked data frames, stall spans; v3:
+/// routed data plane's bytes_shared/bytes_copied counters in stats
+/// and reports).
+pub const VERSION: u32 = 3;
 
 // Frame kinds.
 pub const K_HELLO: u8 = 1;
@@ -512,6 +514,8 @@ fn put_vol_stats(w: &mut Writer, s: &VolStats) {
     w.put_u64(s.serves_dropped);
     w.put_u64(s.serves_suppressed);
     w.put_u64(s.bytes_served);
+    w.put_u64(s.bytes_shared);
+    w.put_u64(s.bytes_copied);
     w.put_u64(s.files_opened);
     w.put_u64(s.bytes_read);
     w.put_u64(s.max_queue_depth);
@@ -527,6 +531,8 @@ fn get_vol_stats(r: &mut Reader) -> Result<VolStats> {
         serves_dropped: r.get_u64()?,
         serves_suppressed: r.get_u64()?,
         bytes_served: r.get_u64()?,
+        bytes_shared: r.get_u64()?,
+        bytes_copied: r.get_u64()?,
         files_opened: r.get_u64()?,
         bytes_read: r.get_u64()?,
         max_queue_depth: r.get_u64()?,
@@ -550,6 +556,8 @@ fn put_run_report(w: &mut Writer, rep: &RunReport) {
         w.put_u64(n.serves_dropped);
         w.put_u64(n.serves_suppressed);
         w.put_u64(n.bytes_served);
+        w.put_u64(n.bytes_shared);
+        w.put_u64(n.bytes_copied);
         w.put_u64(n.files_opened);
         w.put_u64(n.bytes_read);
         w.put_u64(n.max_queue_depth);
@@ -575,6 +583,8 @@ fn get_run_report(r: &mut Reader) -> Result<RunReport> {
             serves_dropped: r.get_u64()?,
             serves_suppressed: r.get_u64()?,
             bytes_served: r.get_u64()?,
+            bytes_shared: r.get_u64()?,
+            bytes_copied: r.get_u64()?,
             files_opened: r.get_u64()?,
             bytes_read: r.get_u64()?,
             max_queue_depth: r.get_u64()?,

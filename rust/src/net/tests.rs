@@ -101,6 +101,8 @@ fn control_messages_roundtrip() {
             stats: crate::lowfive::VolStats {
                 files_served: 3,
                 bytes_served: 999,
+                bytes_shared: 640,
+                bytes_copied: 359,
                 serve_wait: Duration::from_millis(12),
                 ..Default::default()
             },
@@ -113,6 +115,8 @@ fn control_messages_roundtrip() {
     assert_eq!(back.outcomes.len(), 1);
     assert_eq!(back.outcomes[0].node, 2);
     assert_eq!(back.outcomes[0].stats.bytes_served, 999);
+    assert_eq!(back.outcomes[0].stats.bytes_shared, 640);
+    assert_eq!(back.outcomes[0].stats.bytes_copied, 359);
     assert!((back.outcomes[0].stats.serve_wait.as_secs_f64() - 0.012).abs() < 1e-9);
 
     let ri = RunInstance {

@@ -143,6 +143,10 @@ impl Transport for SocketTransport {
         }
     }
 
+    fn is_local(&self, dst_global: usize) -> bool {
+        self.hosts(dst_global)
+    }
+
     fn shutdown(&self) {
         for link in self.peers.iter().flatten() {
             let _ = link.send_frame(proto::K_SHUTDOWN, &[]);

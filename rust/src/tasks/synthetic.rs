@@ -17,6 +17,10 @@
 //!                    BEFORE closing, holding the serve round
 //!                    open (producer backpressure; flow-control
 //!                    benches)                            (default 0)
+//!   extra_dset       producer-only: also write a third dataset
+//!                    (/group1/extra, grid-valued) — lets configs mix
+//!                    three per-dataset routes in one channel
+//!                    (configs/mixed_transport.yaml)      (default 0)
 //!   verify           consumer checks data values         (default 1)
 
 use crate::error::{Result, WilkinsError};
@@ -28,6 +32,9 @@ use super::{bytes_to_f32s, bytes_to_u64s};
 pub const FILE: &str = "outfile.h5";
 pub const GRID: &str = "/group1/grid";
 pub const PARTICLES: &str = "/group1/particles";
+/// Optional third dataset (`extra_dset: 1`), grid-valued; exists so
+/// one channel can mix memory / file / write-through routes.
+pub const EXTRA: &str = "/group1/extra";
 
 fn grid_value(global_idx: u64, step: u64) -> u64 {
     global_idx * 10 + step
@@ -42,6 +49,7 @@ pub fn producer(ctx: &mut TaskContext) -> Result<()> {
     let gpp = ctx.param_i64("grid_per_proc", 10_000) as u64;
     let ppp = ctx.param_i64("particles_per_proc", 10_000) as u64;
     let sleep_s = ctx.param_f64("sleep_s", 0.0);
+    let extra = ctx.param_i64("extra_dset", 0) != 0;
     let nprocs = ctx.size() as u64;
     let rank = ctx.rank();
     let gdims = [gpp * nprocs];
@@ -75,6 +83,12 @@ pub fn producer(ctx: &mut TaskContext) -> Result<()> {
             vol.attr_write(FILE, "timestep", crate::lowfive::AttrValue::Int(step as i64))?;
             vol.dataset_create(FILE, GRID, DType::U64, &gdims)?;
             vol.dataset_create(FILE, PARTICLES, DType::F32, &pdims)?;
+            if extra {
+                vol.dataset_create(FILE, EXTRA, DType::U64, &gdims)?;
+                for (s, b) in &gblocks {
+                    vol.dataset_write(FILE, EXTRA, s.clone(), b.clone())?;
+                }
+            }
             for (s, b) in gblocks {
                 vol.dataset_write(FILE, GRID, s, b)?;
             }
@@ -132,7 +146,8 @@ pub fn consumer(ctx: &mut TaskContext) -> Result<()> {
 fn verify_dset(dset: &str, want: &Hyperslab, bytes: &[u8], step: u64) -> Result<()> {
     let bad = |msg: String| Err(WilkinsError::Task(format!("verify {dset}: {msg}")));
     match dset {
-        GRID => {
+        // The extra dataset carries grid values (see `producer`).
+        GRID | EXTRA => {
             let vals = bytes_to_u64s(bytes);
             for (k, &v) in vals.iter().enumerate() {
                 let expect = grid_value(want.offset[0] + k as u64, step);

@@ -337,3 +337,152 @@ fn prop_yaml_nested_structure() {
         }
     });
 }
+
+// ---- Routed data plane: mixed per-dataset transports must be
+// ---- invisible to the consumer's bytes.
+
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use wilkins::comm::{InterComm, World};
+use wilkins::lowfive::{InChannel, OutChannel, Route, RouteTable, Vol};
+
+static MIXED_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Run one m→n coupling whose three datasets take the given routes;
+/// returns every (consumer rank, open index, dataset) read, sorted.
+fn run_routed_coupling(
+    routes: [Route; 3],
+    m: usize,
+    n: usize,
+    rows: u64,
+    steps: u64,
+) -> Vec<((usize, u64, String), Vec<u8>)> {
+    const DSETS: [&str; 3] = ["/d0", "/d1", "/d2"];
+    let table = RouteTable::new(
+        DSETS
+            .iter()
+            .zip(routes)
+            .map(|(d, r)| (d.to_string(), r))
+            .collect(),
+    );
+    let world = World::new(m + n);
+    let pid = world.alloc_comm_id();
+    let cid = world.alloc_comm_id();
+    let ioid = world.alloc_comm_id();
+    let chid = world.alloc_comm_id();
+    let prod: Vec<usize> = (0..m).collect();
+    let cons: Vec<usize> = (m..m + n).collect();
+    let workdir = std::env::temp_dir().join(format!(
+        "wilkins-prop-mixed-{}-{}",
+        std::process::id(),
+        MIXED_SEQ.fetch_add(1, AtomicOrdering::Relaxed)
+    ));
+    let out: Arc<Mutex<Vec<((usize, u64, String), Vec<u8>)>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let mut hs = Vec::new();
+    for g in 0..m + n {
+        let world = world.clone();
+        let table = table.clone();
+        let prod = prod.clone();
+        let cons = cons.clone();
+        let workdir = workdir.clone();
+        let out = Arc::clone(&out);
+        hs.push(thread::spawn(move || {
+            if g < m {
+                let local = world.comm_from_ranks(pid, &prod, g);
+                let io = world.comm_from_ranks(ioid, &prod, g);
+                let mut vol = Vol::new(local.clone(), workdir);
+                vol.set_io_comm(Some(io));
+                let ic = table
+                    .any_memory()
+                    .then(|| InterComm::new(local, chid, cons.clone()));
+                vol.add_out_channel(OutChannel::new(ic, "f.h5", table));
+                for t in 0..steps {
+                    vol.file_create("f.h5").unwrap();
+                    for (di, d) in DSETS.iter().enumerate() {
+                        vol.dataset_create("f.h5", d, DType::U64, &[rows]).unwrap();
+                        let slab = split_rows(&[rows], m)[g].clone();
+                        let vals: Vec<u8> = (slab.offset[0]..slab.offset[0] + slab.count[0])
+                            .flat_map(|i| {
+                                (i * 7 + t * 1000 + di as u64 * 100_000).to_le_bytes()
+                            })
+                            .collect();
+                        vol.dataset_write("f.h5", d, slab, vals).unwrap();
+                    }
+                    vol.file_close("f.h5").unwrap();
+                }
+                vol.finalize_producer().unwrap();
+            } else {
+                let local = world.comm_from_ranks(cid, &cons, g - m);
+                let mut vol = Vol::new(local.clone(), workdir);
+                let ic = table
+                    .any_memory()
+                    .then(|| InterComm::new(local, chid, prod.clone()));
+                vol.add_in_channel(InChannel::new(ic, "f.h5", table));
+                let mut opened = 0u64;
+                loop {
+                    let name = match vol.file_open("f.h5") {
+                        Ok(name) => name,
+                        Err(wilkins::WilkinsError::EndOfStream) => break,
+                        Err(e) => panic!("open: {e}"),
+                    };
+                    for d in vol.consumer_file(&name).unwrap().dataset_names() {
+                        let meta = vol.dataset_meta(&name, &d).unwrap();
+                        let bytes = vol
+                            .dataset_read(&name, &d, &Hyperslab::whole(&meta.dims))
+                            .unwrap();
+                        out.lock().unwrap().push(((g - m, opened, d), bytes));
+                    }
+                    vol.file_close(&name).unwrap();
+                    opened += 1;
+                }
+                vol.finalize_consumer().unwrap();
+            }
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    let mut reads = Arc::try_unwrap(out).unwrap().into_inner().unwrap();
+    reads.sort_by(|a, b| a.0.cmp(&b.0));
+    reads
+}
+
+#[test]
+fn prop_mixed_routes_match_all_memory_baseline() {
+    // The satellite equivalence: whatever per-dataset routes a channel
+    // uses (memory / file / write-through, in any combination), every
+    // consumer rank must read bit-identical bytes to the all-memory
+    // baseline — transport routing is a placement decision, never a
+    // data decision.
+    run_prop("mixed-routes", 10, |rng| {
+        let m = rng.usize(1, 3);
+        let n = rng.usize(1, 3);
+        let rows = rng.range(4, 24);
+        let steps = rng.usize(1, 3) as u64;
+        let all = [Route::Memory, Route::File, Route::Both];
+        let routes = [
+            *rng.choose(&all),
+            *rng.choose(&all),
+            *rng.choose(&all),
+        ];
+        let mixed = run_routed_coupling(routes, m, n, rows, steps);
+        let baseline =
+            run_routed_coupling([Route::Memory; 3], m, n, rows, steps);
+        assert_eq!(
+            mixed.len(),
+            baseline.len(),
+            "routes {routes:?} changed the number of reads (m={m}, n={n}, steps={steps})"
+        );
+        for (a, b) in mixed.iter().zip(&baseline) {
+            assert_eq!(a.0, b.0, "read order diverged under routes {routes:?}");
+            assert_eq!(
+                a.1, b.1,
+                "bytes diverged for {:?} under routes {routes:?}",
+                a.0
+            );
+        }
+    });
+}

@@ -692,3 +692,66 @@ tasks:
     .unwrap();
     assert_eq!(touched.load(Ordering::SeqCst), 2);
 }
+
+#[test]
+fn mixed_transport_workflow_end_to_end() {
+    // Per-dataset routing in one channel (paper Sec. 4.2): the grid is
+    // written through (in situ + archived), the particles are
+    // file-only. With verify on (the default), the consumer
+    // element-checks both datasets — the disk-routed bytes must be as
+    // exact as the memory-routed ones.
+    let dir = std::env::temp_dir().join(format!(
+        "wilkins-wf-mixed-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let report = Wilkins::from_yaml_str(
+        "\
+tasks:
+  - func: producer
+    nprocs: 2
+    params: { steps: 3, grid_per_proc: 1000, particles_per_proc: 1000 }
+    outports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            memory: 1
+            file: 1
+          - name: /group1/particles
+            file: 1
+            memory: 0
+  - func: consumer
+    nprocs: 2
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - name: /group1/grid
+            memory: 1
+            file: 1
+          - name: /group1/particles
+            file: 1
+            memory: 0
+",
+        builtin_registry(),
+    )
+    .unwrap()
+    .with_workdir(dir.clone())
+    .run()
+    .unwrap();
+    let p = report.node("producer").unwrap();
+    assert_eq!(p.files_served, 3);
+    assert!(p.bytes_shared > 0, "write-through grid must take the zero-copy path");
+    assert!(p.bytes_served > p.bytes_shared + p.bytes_copied, "disk bytes must count");
+    let c = report.node("consumer").unwrap();
+    assert_eq!(c.files_opened, 3);
+    assert!(c.bytes_read > 0);
+    // One versioned .l5 artifact per close landed in the workdir.
+    let l5 = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".l5"))
+        .count();
+    assert_eq!(l5, 3, "write-through must archive every close");
+    let rendered = report.render();
+    assert!(rendered.contains("dataplane: bytes_shared="), "{rendered}");
+}
