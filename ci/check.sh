@@ -75,10 +75,36 @@ mix_out=$(cargo run --release -- run configs/mixed_transport.yaml \
 echo "$mix_out" | grep -Eq "bytes_shared=[1-9][0-9]*" || {
     echo "FAIL: mixed run reported no zero-copy shared bytes:"; echo "$mix_out"; exit 1;
 }
+# Allocation discipline, defense-in-depth: this single-process run
+# serves every memory round over the zero-copy path, so no serve
+# reply may ever report an allocation (the wire bench below is the
+# check with real teeth — it asserts warm-pool alloc_rounds on the
+# encode path itself).
+echo "$mix_out" | grep -Eq "alloc_rounds=[1-9][0-9]*" && {
+    echo "FAIL: mixed run reported nonzero alloc_rounds:"; echo "$mix_out"; exit 1;
+}
+# The disk write-through encodes must be recycling pooled buffers
+# (the wire summary line only prints when the pool engaged).
+echo "$mix_out" | grep -Eq "bytes_pooled=[1-9][0-9]*" || {
+    echo "FAIL: mixed run reported no pooled encode bytes:"; echo "$mix_out"; exit 1;
+}
 # And the file-routed datasets must have landed as disk artifacts.
 ls "$mixdir"/*.l5 >/dev/null 2>&1 || {
     echo "FAIL: no .l5 artifact in $mixdir after the mixed run"; exit 1;
 }
 rm -rf "$mixdir"
+
+echo "== wire bench (pooled data plane: >=2x copy reduction, alloc_rounds) =="
+# The bench asserts the acceptance shape itself (>=2x fewer
+# bytes-copied-per-byte-delivered at 16 MiB vs the Vol::set_pooling
+# ablation, pooled arms within the warm-up allocation budget) and
+# emits BENCH_wire.json; archive the JSON so the trajectory
+# accumulates run over run.
+cargo bench --bench wire
+test -s BENCH_wire.json || {
+    echo "FAIL: wire bench did not emit BENCH_wire.json"; exit 1;
+}
+mkdir -p ci/bench-archive
+cp BENCH_wire.json "ci/bench-archive/BENCH_wire.$(git rev-parse --short HEAD 2>/dev/null || date +%s).json"
 
 echo "OK: all checks passed"

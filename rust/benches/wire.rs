@@ -1,0 +1,347 @@
+//! Wire hot-path bench: what the pooled, scatter-gather data plane
+//! buys over the historical owned-`Vec` path.
+//!
+//! Three harnesses, each run pooled vs ablated
+//! (`Vol::set_pooling(false)`, which also flips the process-wide
+//! transport switch):
+//!
+//! 1. **1-proc serve loop** — a 1→1 coupling over the in-memory
+//!    transport with the zero-copy registry ablated, so every round
+//!    takes the encode → mailbox → decode path. The pooled win here
+//!    is allocation discipline: steady-state rounds must report
+//!    `alloc_rounds == 0` beyond warm-up.
+//! 2. **2-worker socket mesh** — two `World`s joined over loopback
+//!    TCP inside this process (exactly what two worker processes
+//!    hold), so the global copy meter sees both ends of the wire.
+//!    Reported as bytes-copied-per-byte-delivered; the acceptance
+//!    bar is a ≥2x reduction at the 16 MiB payload, where the old
+//!    path pays the chunk-split / frame-concat / decode-copy tax in
+//!    full.
+//! 3. **2-worker `wilkins up`** — real worker processes (this bench
+//!    binary self-hosts its pool), wall-clock + the report's
+//!    alloc_rounds, with the ablation arm exported to the children
+//!    through `WILKINS_POOLING=0`.
+//!
+//! Emits BENCH_wire.json so the trajectory accumulates across PRs.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::thread;
+use std::time::Instant;
+
+use wilkins::comm::{buf, InterComm, World};
+use wilkins::coordinator::RunReport;
+use wilkins::lowfive::{DType, Hyperslab, InChannel, OutChannel, RouteTable, Vol, VolStats};
+use wilkins::net::proto::LaunchWorld;
+use wilkins::net::rendezvous::{build_mesh_world, MeshWorld};
+use wilkins::net::{self, UpOpts};
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "wilkins-wire-{}-{}-{}",
+        tag,
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// What one serve-loop arm measured.
+struct Arm {
+    elapsed_s: f64,
+    /// Wire-path memcpy'd bytes per payload byte delivered.
+    copies_per_byte: f64,
+    /// Serve rounds per second (one file close+open+read per round).
+    frames_per_sec: f64,
+    producer: VolStats,
+}
+
+/// Drive one 1→1 coupling for `steps` rounds of `payload` bytes over
+/// the given pair of worlds/comm-id layout. The two closures build
+/// the producer- and consumer-side (world, workdir) pairs.
+fn drive(
+    payload: usize,
+    steps: u64,
+    producer_world: World,
+    consumer_world: World,
+    zero_copy: bool,
+) -> Arm {
+    let elems = (payload / 8) as u64;
+    let workdir = fresh_dir("serve");
+    let copied0 = buf::bytes_copied_total();
+    let t0 = Instant::now();
+    let wp = {
+        let world = producer_world;
+        let workdir = workdir.clone();
+        thread::spawn(move || {
+            let local = world.comm_from_ranks(90, &[0], 0);
+            let io = world.comm_from_ranks(92, &[0], 0);
+            let mut vol = Vol::new(local.clone(), workdir);
+            vol.set_io_comm(Some(io));
+            let ic = InterComm::new(local, 93, vec![1]);
+            vol.add_out_channel(OutChannel::new(Some(ic), "f.h5", RouteTable::memory()));
+            vol.set_zero_copy(zero_copy);
+            let data = vec![7u8; payload];
+            for _ in 0..steps {
+                vol.file_create("f.h5").unwrap();
+                vol.dataset_create("f.h5", "/d", DType::U64, &[elems]).unwrap();
+                vol.dataset_write("f.h5", "/d", Hyperslab::whole(&[elems]), data.clone())
+                    .unwrap();
+                vol.file_close("f.h5").unwrap();
+            }
+            vol.finalize_producer().unwrap();
+            vol.stats.clone()
+        })
+    };
+    let wc = {
+        let world = consumer_world;
+        thread::spawn(move || {
+            let local = world.comm_from_ranks(91, &[1], 0);
+            let mut vol = Vol::new(local.clone(), fresh_dir("consumer"));
+            let ic = InterComm::new(local, 93, vec![0]);
+            vol.add_in_channel(InChannel::new(Some(ic), "f.h5", RouteTable::memory()));
+            for _ in 0..steps {
+                let name = vol.file_open("f.h5").unwrap();
+                let bytes = vol
+                    .dataset_read(&name, "/d", &Hyperslab::whole(&[elems]))
+                    .unwrap();
+                assert_eq!(bytes.len(), payload);
+                assert_eq!(bytes[payload / 2], 7, "payload must survive the wire");
+                vol.file_close(&name).unwrap();
+            }
+            vol.finalize_consumer().unwrap();
+        })
+    };
+    let producer = wp.join().unwrap();
+    wc.join().unwrap();
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let copied = (buf::bytes_copied_total() - copied0) as f64;
+    let delivered = (payload as u64 * steps) as f64;
+    Arm {
+        elapsed_s,
+        copies_per_byte: copied / delivered,
+        frames_per_sec: steps as f64 / elapsed_s,
+        producer,
+    }
+}
+
+/// One-process arm: both ranks are threads of one in-memory world.
+/// The zero-copy registry is ablated so the serve takes the encode
+/// path this bench measures.
+fn serve_local(payload: usize, steps: u64, pooled: bool) -> Arm {
+    buf::set_pooling(pooled);
+    let world = World::new(2);
+    drive(payload, steps, world.clone(), world, false)
+}
+
+/// Two-worker arm: two independent socket-meshed worlds in this
+/// process (thread-per-rank, loopback TCP between them), so the copy
+/// meter covers sender and receiver.
+fn serve_mesh(payload: usize, steps: u64, pooled: bool) -> Arm {
+    buf::set_pooling(pooled);
+    let (side0, side1) = mesh_pair();
+    let arm = drive(payload, steps, side0.world.clone(), side1.world.clone(), true);
+    side0.shutdown();
+    side1.shutdown();
+    arm
+}
+
+/// Two mesh sides — two worker processes' worth of state — joined
+/// over loopback; rank 0 lives on side 0, rank 1 on side 1.
+fn mesh_pair() -> (MeshWorld, MeshWorld) {
+    let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let endpoints = vec![
+        l0.local_addr().unwrap().to_string(),
+        l1.local_addr().unwrap().to_string(),
+    ];
+    let msg = LaunchWorld {
+        config_src: String::new(),
+        workdir: String::new(),
+        artifacts: String::new(),
+        time_scale: 1.0,
+        total_ranks: 2,
+        endpoints,
+        owner_of: vec![0, 1],
+    };
+    let m0 = msg.clone();
+    let h = thread::spawn(move || build_mesh_world(0, &l0, &m0).unwrap());
+    let side1 = build_mesh_world(1, &l1, &msg).unwrap();
+    let side0 = h.join().unwrap();
+    (side0, side1)
+}
+
+fn up_yaml() -> String {
+    "\
+tasks:
+  - func: producer
+    nprocs: 2
+    params: { steps: 4, grid_per_proc: 50000, particles_per_proc: 50000, verify: 0 }
+    outports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+  - func: consumer
+    nprocs: 2
+    params: { verify: 0 }
+    inports:
+      - filename: outfile.h5
+        dsets: [ { name: /group1/grid }, { name: /group1/particles } ]
+"
+    .to_string()
+}
+
+/// Run the shipped producer/consumer workflow over a real 2-worker
+/// pool; the pooling arm reaches the worker processes via the
+/// `WILKINS_POOLING` environment variable they inherit.
+fn run_up(pooled: bool) -> (f64, RunReport) {
+    std::env::set_var("WILKINS_POOLING", if pooled { "1" } else { "0" });
+    buf::set_pooling(pooled);
+    let opts = UpOpts {
+        workers: 2,
+        time_scale: 1.0,
+        workdir: None,
+        artifacts: None,
+    };
+    let t0 = Instant::now();
+    let report = net::run_workflow_distributed(&up_yaml(), &opts).unwrap();
+    (t0.elapsed().as_secs_f64(), report)
+}
+
+const SIZES: [(&str, usize); 3] = [
+    ("64KiB", 1 << 16),
+    ("1MiB", 1 << 20),
+    ("16MiB", 1 << 24),
+];
+
+fn main() {
+    // `WorkerPool::spawn` re-executes the *current binary* with a
+    // leading `worker` argument; route that to the worker serve loop
+    // so this bench hosts its own process pool.
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.first().map(String::as_str) == Some("worker") {
+        let opt = |name: &str| -> Option<String> {
+            argv.iter()
+                .position(|a| a == name)
+                .and_then(|i| argv.get(i + 1).cloned())
+        };
+        let connect = opt("--connect").expect("worker mode needs --connect");
+        let id: usize = opt("--id")
+            .expect("worker mode needs --id")
+            .parse()
+            .expect("bad --id");
+        wilkins::net::worker_main(&connect, id).expect("worker serve loop");
+        return;
+    }
+
+    let steps = 6u64;
+    println!("== wire hot path: pooled scatter-gather vs owned-Vec ablation ==\n");
+
+    let mut mesh_rows = Vec::new();
+    let mut local_rows = Vec::new();
+    for (label, payload) in SIZES {
+        let old_local = serve_local(payload, steps, false);
+        let new_local = serve_local(payload, steps, true);
+        let old_mesh = serve_mesh(payload, steps, false);
+        let new_mesh = serve_mesh(payload, steps, true);
+        println!(
+            "{label:>6}  1-proc: {:.2} -> {:.2} copies/B ({:.0} -> {:.0} frames/s)   \
+             2-worker mesh: {:.2} -> {:.2} copies/B ({:.0} -> {:.0} frames/s)",
+            old_local.copies_per_byte,
+            new_local.copies_per_byte,
+            old_local.frames_per_sec,
+            new_local.frames_per_sec,
+            old_mesh.copies_per_byte,
+            new_mesh.copies_per_byte,
+            old_mesh.frames_per_sec,
+            new_mesh.frames_per_sec,
+        );
+
+        // Allocation discipline: beyond pool warm-up, every encode on
+        // the pooled arm must be a pool hit; the ablation arm pays an
+        // allocation every round.
+        assert!(
+            new_local.producer.alloc_rounds <= 1,
+            "{label}: pooled 1-proc arm allocated on {} rounds (warm-up budget is 1)",
+            new_local.producer.alloc_rounds
+        );
+        assert!(
+            new_mesh.producer.alloc_rounds <= 1,
+            "{label}: pooled mesh arm allocated on {} rounds (warm-up budget is 1)",
+            new_mesh.producer.alloc_rounds
+        );
+        assert_eq!(
+            old_mesh.producer.alloc_rounds, steps,
+            "{label}: ablation arm must allocate every round"
+        );
+        assert!(
+            new_mesh.producer.bytes_pooled > 0,
+            "{label}: pooled arm must encode into recycled buffers"
+        );
+
+        mesh_rows.push((label, old_mesh, new_mesh));
+        local_rows.push((label, old_local, new_local));
+    }
+
+    // The acceptance criterion: at 16 MiB, where the old path pays
+    // the chunk-split/frame-concat/decode-copy tax in full, the
+    // pooled plane must at least halve bytes-copied-per-byte.
+    let (_, old_big, new_big) = mesh_rows.last().unwrap();
+    let reduction = old_big.copies_per_byte / new_big.copies_per_byte;
+    assert!(
+        reduction >= 2.0,
+        "copies/byte at 16MiB must drop >= 2x over the mesh, got {reduction:.2}x \
+         ({:.2} -> {:.2})",
+        old_big.copies_per_byte,
+        new_big.copies_per_byte
+    );
+
+    println!("\n== 2-worker `up` (real worker processes) ==\n");
+    let (up_old_s, up_old_rep) = run_up(false);
+    let (up_new_s, up_new_rep) = run_up(true);
+    std::env::set_var("WILKINS_POOLING", "1");
+    let up_old_p = up_old_rep.node("producer").unwrap();
+    let up_new_p = up_new_rep.node("producer").unwrap();
+    println!(
+        "ablation: {up_old_s:.3}s (alloc_rounds {})   pooled: {up_new_s:.3}s (alloc_rounds {}, bytes_pooled {})",
+        up_old_p.alloc_rounds, up_new_p.alloc_rounds, up_new_p.bytes_pooled
+    );
+    assert!(
+        up_new_p.alloc_rounds < up_old_p.alloc_rounds,
+        "pooled up run must allocate on fewer rounds than the ablation \
+         ({} vs {})",
+        up_new_p.alloc_rounds,
+        up_old_p.alloc_rounds
+    );
+
+    let arm_json = |a: &Arm| {
+        format!(
+            "{{ \"copies_per_byte\": {:.3}, \"frames_per_sec\": {:.1}, \"elapsed_s\": {:.4}, \"alloc_rounds\": {}, \"bytes_pooled\": {} }}",
+            a.copies_per_byte, a.frames_per_sec, a.elapsed_s, a.producer.alloc_rounds, a.producer.bytes_pooled
+        )
+    };
+    let section = |rows: &[(&str, Arm, Arm)]| {
+        rows.iter()
+            .map(|(label, old, new)| {
+                format!(
+                    "      \"{label}\": {{ \"ablation\": {}, \"pooled\": {} }}",
+                    arm_json(old),
+                    arm_json(new)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n")
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"wire\",\n  \"steps\": {steps},\n  \"copy_reduction_16mib_mesh\": {reduction:.2},\n  \"serve\": {{\n    \"local\": {{\n{}\n    }},\n    \"mesh\": {{\n{}\n    }}\n  }},\n  \"up\": {{ \"ablation_s\": {up_old_s:.3}, \"pooled_s\": {up_new_s:.3}, \"ablation_alloc_rounds\": {}, \"pooled_alloc_rounds\": {} }}\n}}\n",
+        section(&local_rows),
+        section(&mesh_rows),
+        up_old_p.alloc_rounds,
+        up_new_p.alloc_rounds
+    );
+    let out_dir = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    let out_path = std::path::Path::new(&out_dir).join("BENCH_wire.json");
+    std::fs::write(&out_path, json).expect("write BENCH_wire.json");
+    println!("\nbench record written to {}", out_path.display());
+    println!("OK: pooled data plane halves bytes-copied-per-byte-delivered at 16 MiB");
+}

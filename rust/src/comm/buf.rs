@@ -1,0 +1,584 @@
+//! Pooled buffers and refcounted payload views — the allocation
+//! discipline of the wire hot path.
+//!
+//! Every remote serve used to copy its bytes 4–5 times between the
+//! producer's block store and the consumer's hyperslab fill: encode
+//! into a fresh `Vec`, concatenate a frame, split into owned chunks,
+//! reassemble, and `to_vec` once more at decode. This module holds the
+//! two primitives that delete those copies:
+//!
+//! * [`Payload`] — a refcounted byte buffer plus an `(offset, len)`
+//!   view, like `bytes::Bytes` but dependency-free. Slicing is O(1)
+//!   and allocation-free; clones share the backing buffer. A payload
+//!   whose buffer came from a [`BufPool`] returns it to the pool when
+//!   the last view drops, so steady-state serve rounds recycle the
+//!   same allocations round after round.
+//! * [`BufPool`] — a bounded, thread-safe free list of `Vec<u8>`
+//!   buffers. Leases report whether they were pool *hits* (a recycled
+//!   allocation) or *misses* (a fresh one); the producer engine folds
+//!   that into [`VolStats::alloc_rounds`](crate::lowfive::VolStats)
+//!   so "zero allocations at steady state" is a measurable claim, not
+//!   a hope.
+//!
+//! The process-global [`pool()`] serves the transport layer (frame
+//! reads, chunk reassembly) and the lowfive encode paths. The
+//! [`set_pooling`]/[`pooling_enabled`] switch is the benchmark
+//! ablation arm (`Vol::set_pooling(false)` routes through it): with
+//! pooling off, the transport falls back to the historical
+//! owned-`Vec` path so `benches/wire.rs` can measure exactly what the
+//! pooled plane buys. [`note_copied`]/[`bytes_copied_total`] meter
+//! every user-space memcpy of payload bytes on the wire path for the
+//! bench's bytes-copied-per-byte-delivered figure.
+
+use std::ops::{Deref, Range};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+use crate::error::{Result, WilkinsError};
+
+/// Upper bound on buffers parked in the global pool. Enough for every
+/// pump thread and encode path of a many-worker process to hit the
+/// pool concurrently; the byte budget
+/// (`PoolShared::MAX_PARKED_TOTAL`) is what actually bounds idle
+/// memory after a burst of giant rounds passes.
+const GLOBAL_POOL_BUFFERS: usize = 64;
+
+/// Process-wide ablation switch (see [`set_pooling`]). Defaults to on;
+/// the `WILKINS_POOLING=0` environment variable disables it at startup
+/// so spawned worker processes inherit the bench arm.
+static POOLING: OnceLock<AtomicBool> = OnceLock::new();
+
+/// Total payload bytes memcpy'd on the wire path (see [`note_copied`]).
+static BYTES_COPIED: AtomicU64 = AtomicU64::new(0);
+
+fn pooling_flag() -> &'static AtomicBool {
+    POOLING.get_or_init(|| {
+        let on = std::env::var("WILKINS_POOLING").map(|v| v != "0").unwrap_or(true);
+        AtomicBool::new(on)
+    })
+}
+
+/// Is the pooled/zero-copy wire plane enabled in this process?
+pub fn pooling_enabled() -> bool {
+    pooling_flag().load(Ordering::Relaxed)
+}
+
+/// Enable/disable the pooled wire plane process-wide (benchmark
+/// ablation; prefer `Vol::set_pooling`, which routes here). Disabling
+/// makes the transport take the historical owned-`Vec` path: frame
+/// concatenation, owned chunk splits, `to_vec` at decode.
+pub fn set_pooling(on: bool) {
+    pooling_flag().store(on, Ordering::Relaxed);
+}
+
+/// Record `n` payload bytes memcpy'd on the wire path. Call sites are
+/// the copy points themselves (encode fills, chunk splits, frame
+/// concatenation, decode `to_vec`s, reassembly appends, hyperslab
+/// fills) so `benches/wire.rs` can report bytes-copied-per-
+/// byte-delivered without guessing.
+#[inline]
+pub fn note_copied(n: usize) {
+    BYTES_COPIED.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// Running total of [`note_copied`] bytes since process start.
+pub fn bytes_copied_total() -> u64 {
+    BYTES_COPIED.load(Ordering::Relaxed)
+}
+
+/// Shared state behind a [`BufPool`] (and behind the weak back-link
+/// pooled [`Payload`]s carry so dropped payloads return their buffer).
+struct PoolShared {
+    bufs: Mutex<Vec<Vec<u8>>>,
+    max_buffers: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bytes_pooled: AtomicU64,
+}
+
+impl PoolShared {
+    /// Largest single buffer the pool will park (64 MiB). Steady-state
+    /// serve buffers (tens of MiB) recycle; a one-off giant reassembly
+    /// is freed instead of pinning its peak size for the process
+    /// lifetime — the same reclamation stance as the frame decoder's
+    /// staging buffer, one layer down.
+    const MAX_PARKED_CAPACITY: usize = 1 << 26;
+    /// Byte budget across all parked buffers (256 MiB): a burst of
+    /// many large rounds returns most of its memory to the allocator
+    /// once the budget is full, instead of pinning
+    /// buffers × MAX_PARKED_CAPACITY indefinitely.
+    const MAX_PARKED_TOTAL: usize = 1 << 28;
+
+    fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 || buf.capacity() > Self::MAX_PARKED_CAPACITY {
+            return;
+        }
+        buf.clear();
+        let mut bufs = self.bufs.lock().unwrap();
+        let parked: usize = bufs.iter().map(Vec::capacity).sum();
+        if bufs.len() < self.max_buffers
+            && parked + buf.capacity() <= Self::MAX_PARKED_TOTAL
+        {
+            bufs.push(buf);
+        }
+    }
+}
+
+/// A bounded, thread-safe free list of reusable byte buffers.
+///
+/// `lease(cap)` hands back the most recently returned buffer (warm
+/// caches) grown to at least `cap`, or a fresh allocation on a miss.
+/// Buffers flow back either explicitly (`Lease` dropped unfinished)
+/// or when the last [`Payload`] view over a finished lease drops.
+pub struct BufPool {
+    shared: Arc<PoolShared>,
+}
+
+impl BufPool {
+    /// A pool keeping at most `max_buffers` idle buffers.
+    pub fn new(max_buffers: usize) -> BufPool {
+        BufPool {
+            shared: Arc::new(PoolShared {
+                bufs: Mutex::new(Vec::new()),
+                max_buffers,
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                bytes_pooled: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Lease an empty buffer with capacity at least `cap`. Best-fit
+    /// with an oversize guard: the smallest parked buffer that
+    /// satisfies `cap` *without exceeding ~4× of it* is a *hit* (no
+    /// allocation at all); a grossly oversized buffer is left parked
+    /// for the size class it belongs to — a tiny request-frame lease
+    /// must never hollow out the one big reply buffer and force the
+    /// next big encode to allocate. With no fitting buffer, the
+    /// largest under-sized one is grown (or a fresh one allocated)
+    /// and the lease counts as a miss. Check [`Lease::was_hit`] to
+    /// learn whether an allocation happened.
+    pub fn lease(&self, cap: usize) -> Lease {
+        let oversize = cap.saturating_mul(4).max(4096);
+        let recycled = {
+            let mut bufs = self.shared.bufs.lock().unwrap();
+            let best = bufs
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.capacity() >= cap && b.capacity() <= oversize)
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i)
+                .or_else(|| {
+                    bufs.iter()
+                        .enumerate()
+                        .filter(|(_, b)| b.capacity() < cap)
+                        .max_by_key(|(_, b)| b.capacity())
+                        .map(|(i, _)| i)
+                });
+            best.map(|i| bufs.swap_remove(i))
+        };
+        let (mut buf, hit) = match recycled {
+            Some(b) => {
+                let fits = b.capacity() >= cap;
+                (b, fits)
+            }
+            None => (Vec::new(), false),
+        };
+        if buf.capacity() < cap {
+            buf.reserve_exact(cap - buf.len());
+        }
+        if hit {
+            self.shared.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shared.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let leased_cap = buf.capacity();
+        Lease { buf, shared: Some(Arc::clone(&self.shared)), hit, leased_cap }
+    }
+
+    /// Leases served from a recycled buffer since creation.
+    pub fn hits(&self) -> u64 {
+        self.shared.hits.load(Ordering::Relaxed)
+    }
+
+    /// Leases that had to allocate since creation.
+    pub fn misses(&self) -> u64 {
+        self.shared.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes finished into recycled (pool-hit) buffers.
+    pub fn bytes_pooled(&self) -> u64 {
+        self.shared.bytes_pooled.load(Ordering::Relaxed)
+    }
+
+    /// Idle buffers currently parked in the pool (tests/observability).
+    pub fn idle(&self) -> usize {
+        self.shared.bufs.lock().unwrap().len()
+    }
+}
+
+/// The process-global buffer pool: transport pumps, chunk reassembly
+/// and the lowfive encode paths all lease from here, so a handful of
+/// steady-state buffers serve the whole process.
+pub fn pool() -> &'static BufPool {
+    static GLOBAL: OnceLock<BufPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| BufPool::new(GLOBAL_POOL_BUFFERS))
+}
+
+/// An exclusive, growable buffer checked out of a [`BufPool`] (or a
+/// plain unpooled buffer behind the same interface — see
+/// [`Lease::unpooled`]). Dereferences to its `Vec<u8>`; finish it
+/// into a [`Payload`] to share it (a pooled buffer returns to its
+/// pool when the last view drops), or just drop it to hand the
+/// buffer straight back.
+pub struct Lease {
+    buf: Vec<u8>,
+    shared: Option<Arc<PoolShared>>,
+    hit: bool,
+    /// Capacity at lease time: outgrowing it means a reallocation
+    /// happened while encoding, which must not be reported as an
+    /// allocation-free round.
+    leased_cap: usize,
+}
+
+impl Lease {
+    /// A plain `Vec`-backed lease with no pool attached (always a
+    /// miss; the buffer is freed, not parked, when the payload
+    /// drops). The ablation arm of the transport reassembles into
+    /// these so the historical per-message allocation cost is really
+    /// measured.
+    pub fn unpooled(cap: usize) -> Lease {
+        Lease { buf: Vec::with_capacity(cap), shared: None, hit: false, leased_cap: cap }
+    }
+
+    /// Did this lease recycle a pooled buffer (no allocation)?
+    pub fn was_hit(&self) -> bool {
+        self.hit
+    }
+
+    /// Did the buffer outgrow its leased capacity (a reallocation
+    /// since lease time)?
+    pub fn grew(&self) -> bool {
+        self.buf.capacity() > self.leased_cap
+    }
+
+    /// Freeze the buffer into a shared [`Payload`] view of its full
+    /// contents. Leases that were pool hits *and* never reallocated
+    /// credit their final length to the pool's `bytes_pooled` meter —
+    /// a hit that outgrew its buffer paid an allocation after all and
+    /// must not read as allocation-free.
+    pub fn finish(mut self) -> Payload {
+        if self.hit && !self.grew() {
+            if let Some(shared) = &self.shared {
+                shared.bytes_pooled.fetch_add(self.buf.len() as u64, Ordering::Relaxed);
+            }
+        }
+        // Taking the buffer leaves a zero-capacity carcass behind, so
+        // the lease's own Drop returns nothing to the pool.
+        let buf = std::mem::take(&mut self.buf);
+        let len = buf.len();
+        Payload {
+            inner: Arc::new(PayloadInner {
+                buf,
+                pool: self.shared.as_ref().map(Arc::downgrade),
+            }),
+            off: 0,
+            len,
+        }
+    }
+}
+
+impl Deref for Lease {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for Lease {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            shared.put(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+/// The shared backing store of one or more [`Payload`] views.
+struct PayloadInner {
+    buf: Vec<u8>,
+    /// Set for pooled buffers: the last view's drop returns the buffer.
+    pool: Option<Weak<PoolShared>>,
+}
+
+impl Drop for PayloadInner {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.as_ref().and_then(Weak::upgrade) {
+            pool.put(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+/// A refcounted, sliceable view of immutable bytes — the unit of
+/// transfer of the wire hot path. Cloning and [`Payload::slice`]-ing
+/// are O(1) and allocation-free; the backing buffer lives until the
+/// last view drops (and returns to its [`BufPool`] if it came from
+/// one). `Deref`s to `[u8]`, so existing `&[u8]` consumers work
+/// unchanged.
+#[derive(Clone)]
+pub struct Payload {
+    inner: Arc<PayloadInner>,
+    off: usize,
+    len: usize,
+}
+
+impl Payload {
+    /// An empty payload (no backing allocation is shared).
+    pub fn empty() -> Payload {
+        Payload::from(Vec::new())
+    }
+
+    /// Copy `bytes` into a fresh unpooled payload.
+    pub fn copy_from_slice(bytes: &[u8]) -> Payload {
+        Payload::from(bytes.to_vec())
+    }
+
+    /// Length of this view in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Is this view empty?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The viewed bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.inner.buf[self.off..self.off + self.len]
+    }
+
+    /// A sub-view of `range` (relative to this view): O(1), shares the
+    /// backing buffer. Errors on any out-of-bounds or inverted range —
+    /// wire offsets come off the network, so this is a checked seam,
+    /// not a panic.
+    pub fn slice(&self, range: Range<usize>) -> Result<Payload> {
+        if range.start > range.end || range.end > self.len {
+            return Err(WilkinsError::Comm(format!(
+                "payload slice {}..{} out of bounds (len {})",
+                range.start, range.end, self.len
+            )));
+        }
+        Ok(Payload {
+            inner: Arc::clone(&self.inner),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        })
+    }
+
+    /// Extract owned bytes. Zero-copy when this is the only view of a
+    /// whole unpooled buffer; otherwise one copy (a stolen pooled
+    /// buffer would never return to its pool, so pooled payloads
+    /// always copy out).
+    pub fn into_vec(self) -> Vec<u8> {
+        if self.off == 0 && self.len == self.inner.buf.len() && self.inner.pool.is_none() {
+            match Arc::try_unwrap(self.inner) {
+                // Plain Vec backing, sole view: take the buffer out and
+                // skip the copy (`pool` is None, so the Drop that runs
+                // on the emptied inner has nothing to return).
+                Ok(mut inner) => return std::mem::take(&mut inner.buf),
+                Err(shared) => return shared.buf.clone(),
+            }
+        }
+        self.as_slice().to_vec()
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(buf: Vec<u8>) -> Payload {
+        let len = buf.len();
+        Payload { inner: Arc::new(PayloadInner { buf, pool: None }), off: 0, len }
+    }
+}
+
+impl Deref for Payload {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Payload {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Payload({} bytes @ {})", self.len, self.off)
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Payload {}
+
+impl PartialEq<[u8]> for Payload {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Payload {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl<const N: usize> PartialEq<[u8; N]> for Payload {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for Payload {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Payload {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Payload> for Vec<u8> {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_the_same_allocation_across_rounds() {
+        let pool = BufPool::new(4);
+        let mut lease = pool.lease(1024);
+        lease.extend_from_slice(&[7u8; 1024]);
+        let first_ptr = lease.as_ptr();
+        assert!(!lease.was_hit(), "first lease must be a miss");
+        let payload = lease.finish();
+        assert_eq!(payload.len(), 1024);
+        drop(payload); // last view: buffer returns to the pool
+
+        // Steady state: the very same allocation comes back.
+        let lease2 = pool.lease(512);
+        assert!(lease2.was_hit(), "second lease must be a pool hit");
+        assert_eq!(lease2.as_ptr(), first_ptr, "allocation must be recycled");
+        assert_eq!(pool.hits(), 1);
+        assert_eq!(pool.misses(), 1);
+    }
+
+    #[test]
+    fn outgrown_lease_is_not_an_allocation_free_hit() {
+        let pool = BufPool::new(4);
+        drop(pool.lease(1024).finish()); // park a 1 KiB buffer
+        let mut lease = pool.lease(16);
+        assert!(lease.was_hit());
+        assert!(!lease.grew());
+        lease.extend_from_slice(&[1u8; 100_000]); // realloc past the lease
+        assert!(lease.grew(), "outgrowing the leased capacity must be visible");
+        let before = pool.bytes_pooled();
+        drop(lease.finish());
+        assert_eq!(
+            pool.bytes_pooled(),
+            before,
+            "a hit that reallocated must not credit bytes_pooled"
+        );
+    }
+
+    #[test]
+    fn unpooled_lease_never_hits_and_parks_nothing() {
+        let pool = BufPool::new(4);
+        let mut lease = Lease::unpooled(64);
+        assert!(!lease.was_hit());
+        lease.extend_from_slice(b"abc");
+        let p = lease.finish();
+        assert_eq!(p, b"abc");
+        drop(p);
+        assert_eq!(pool.idle(), 0, "unpooled buffers are freed, not parked");
+    }
+
+    #[test]
+    fn oversized_buffers_are_freed_not_parked() {
+        let pool = BufPool::new(4);
+        let lease = pool.lease(PoolShared::MAX_PARKED_CAPACITY + 1);
+        drop(lease);
+        assert_eq!(pool.idle(), 0, "a giant buffer must not pin its peak size");
+    }
+
+    #[test]
+    fn unfinished_lease_returns_straight_to_the_pool() {
+        let pool = BufPool::new(4);
+        let mut lease = pool.lease(64);
+        lease.push(1);
+        drop(lease);
+        assert_eq!(pool.idle(), 1);
+        assert!(pool.lease(8).was_hit());
+    }
+
+    #[test]
+    fn pooled_buffer_outlives_slices_until_last_view() {
+        let pool = BufPool::new(4);
+        let mut lease = pool.lease(16);
+        lease.extend_from_slice(b"0123456789");
+        let whole = lease.finish();
+        let a = whole.slice(0..4).unwrap();
+        let b = whole.slice(4..10).unwrap();
+        drop(whole);
+        assert_eq!(pool.idle(), 0, "buffer still referenced by slices");
+        assert_eq!(&a[..], b"0123");
+        drop(a);
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(&b[..], b"456789");
+        drop(b);
+        assert_eq!(pool.idle(), 1, "last view returns the buffer");
+    }
+
+    #[test]
+    fn slice_bounds_are_checked() {
+        let p = Payload::from(vec![1, 2, 3, 4]);
+        assert!(p.slice(0..5).is_err(), "end past len");
+        assert!(p.slice(5..5).is_err(), "start past len");
+        #[allow(clippy::reversed_empty_ranges)]
+        {
+            assert!(p.slice(3..2).is_err(), "inverted range");
+        }
+        let s = p.slice(1..3).unwrap();
+        assert_eq!(s, vec![2u8, 3]);
+        // Sub-slicing is relative to the view, and re-checked.
+        assert_eq!(s.slice(1..2).unwrap(), vec![3u8]);
+        assert!(s.slice(0..3).is_err());
+    }
+
+    #[test]
+    fn into_vec_roundtrips() {
+        let p = Payload::from(vec![9u8, 8, 7]);
+        assert_eq!(p.clone().into_vec(), vec![9, 8, 7]);
+        assert_eq!(p.slice(1..3).unwrap().into_vec(), vec![8, 7]);
+        assert_eq!(Payload::empty().into_vec(), Vec::<u8>::new());
+    }
+}

@@ -2,7 +2,7 @@
 //! allgather, reductions. All are built from send/recv with reserved
 //! high tags so they never collide with user traffic.
 
-use super::{Comm, Result};
+use super::{Comm, Payload, Result};
 
 /// Tag space reserved for collectives (user tags must stay below).
 pub const COLL_TAG_BASE: u64 = u64::MAX - 16;
@@ -34,19 +34,21 @@ impl Comm {
     }
 
     /// Broadcast `data` from `root`; returns the received bytes on all
-    /// ranks (the root gets its own copy back).
-    pub fn bcast(&self, root: usize, data: Option<&[u8]>) -> Result<Vec<u8>> {
+    /// ranks (the root gets its own copy back). The sends share one
+    /// refcounted payload, so an N-way fan-out copies the bytes once,
+    /// not N times.
+    pub fn bcast(&self, root: usize, data: Option<&[u8]>) -> Result<Payload> {
         if self.size() == 1 {
-            return Ok(data.unwrap_or(&[]).to_vec());
+            return Ok(Payload::copy_from_slice(data.unwrap_or(&[])));
         }
         if self.rank() == root {
-            let payload = data.expect("bcast root must supply data");
+            let payload = Payload::copy_from_slice(data.expect("bcast root must supply data"));
             for r in 0..self.size() {
                 if r != root {
-                    self.send(r, TAG_BCAST, payload);
+                    self.send_owned(r, TAG_BCAST, payload.clone());
                 }
             }
-            Ok(payload.to_vec())
+            Ok(payload)
         } else {
             Ok(self.recv(root, TAG_BCAST)?.1)
         }
@@ -54,10 +56,10 @@ impl Comm {
 
     /// Gather every rank's bytes at `root`; Some(vec indexed by rank)
     /// at the root, None elsewhere.
-    pub fn gather(&self, root: usize, data: &[u8]) -> Result<Option<Vec<Vec<u8>>>> {
+    pub fn gather(&self, root: usize, data: &[u8]) -> Result<Option<Vec<Payload>>> {
         if self.rank() == root {
-            let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.size()];
-            out[root] = data.to_vec();
+            let mut out: Vec<Payload> = vec![Payload::empty(); self.size()];
+            out[root] = Payload::copy_from_slice(data);
             // Per-source receives keep consecutive gathers from mixing
             // (recv_any could consume a racing rank's next-gather msg).
             for r in 0..self.size() {
@@ -74,8 +76,9 @@ impl Comm {
         }
     }
 
-    /// All ranks end up with every rank's contribution.
-    pub fn allgather(&self, data: &[u8]) -> Result<Vec<Vec<u8>>> {
+    /// All ranks end up with every rank's contribution. Each returned
+    /// part is a zero-copy slice of the one broadcast buffer.
+    pub fn allgather(&self, data: &[u8]) -> Result<Vec<Payload>> {
         let gathered = self.gather(0, data)?;
         let packed = match gathered {
             Some(parts) => {
@@ -93,7 +96,7 @@ impl Comm {
         let n = r.get_u64()? as usize;
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
-            out.push(r.get_bytes()?.to_vec());
+            out.push(r.get_bytes_sliced(&bytes)?);
         }
         Ok(out)
     }
@@ -128,16 +131,16 @@ impl Comm {
             .unwrap_or(value))
     }
 
-    fn reduce_parts(&self, mine: Vec<u8>) -> Result<Vec<Vec<u8>>> {
+    fn reduce_parts(&self, mine: Vec<u8>) -> Result<Vec<Payload>> {
         if self.size() == 1 {
-            return Ok(vec![mine]);
+            return Ok(vec![Payload::from(mine)]);
         }
         // Gather to 0, bcast the raw parts back (tag distinct from
         // gather/bcast so concurrent collectives of different kinds on
         // the same comm cannot interleave).
         if self.rank() == 0 {
-            let mut parts: Vec<Vec<u8>> = vec![Vec::new(); self.size()];
-            parts[0] = mine;
+            let mut parts: Vec<Payload> = vec![Payload::empty(); self.size()];
+            parts[0] = Payload::from(mine);
             for r in 1..self.size() {
                 let (_, bytes) = self.recv(r, TAG_REDUCE)?;
                 parts[r] = bytes;
@@ -159,7 +162,7 @@ impl Comm {
             let n = r.get_u64()? as usize;
             let mut out = Vec::with_capacity(n);
             for _ in 0..n {
-                out.push(r.get_bytes()?.to_vec());
+                out.push(r.get_bytes_sliced(&bytes)?);
             }
             Ok(out)
         }

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::{Comm, Envelope, RECV_TIMEOUT};
+use super::{Comm, Envelope, Payload, RECV_TIMEOUT};
 use crate::error::{Result, WilkinsError};
 
 /// An intercommunicator between a local and a remote rank group.
@@ -61,18 +61,19 @@ impl InterComm {
     }
 
     /// Owned-buffer send (no payload copy); see [`Comm::send_owned`].
-    pub fn send_owned(&self, dst: usize, tag: u64, data: Vec<u8>) {
+    /// Accepts a `Vec<u8>` or a pooled/sliced [`Payload`] view.
+    pub fn send_owned(&self, dst: usize, tag: u64, data: impl Into<Payload>) {
         let dst_global = self.remote[dst];
-        self.local.send_global_owned(self.id, dst_global, tag, data);
+        self.local.send_global_owned(self.id, dst_global, tag, data.into());
     }
 
     /// Blocking receive from remote local rank `src` (or ANY_SOURCE).
     /// Returns (remote local rank, payload).
-    pub fn recv(&self, src: usize, tag: u64) -> Result<(usize, Vec<u8>)> {
+    pub fn recv(&self, src: usize, tag: u64) -> Result<(usize, Payload)> {
         self.recv_timeout(src, tag, RECV_TIMEOUT)
     }
 
-    pub fn recv_any(&self, tag: u64) -> Result<(usize, Vec<u8>)> {
+    pub fn recv_any(&self, tag: u64) -> Result<(usize, Payload)> {
         self.recv_timeout(super::ANY_SOURCE, tag, RECV_TIMEOUT)
     }
 
@@ -81,7 +82,7 @@ impl InterComm {
         src: usize,
         tag: u64,
         timeout: Duration,
-    ) -> Result<(usize, Vec<u8>)> {
+    ) -> Result<(usize, Payload)> {
         let remote = Arc::clone(&self.remote);
         let id = self.id;
         let matcher = move |e: &Envelope| {
@@ -103,7 +104,7 @@ impl InterComm {
 
     /// Non-blocking receive from any remote rank: `None` when nothing
     /// is queued right now. Returns (remote local rank, payload).
-    pub fn try_recv_any(&self, tag: u64) -> Option<(usize, Vec<u8>)> {
+    pub fn try_recv_any(&self, tag: u64) -> Option<(usize, Payload)> {
         self.try_recv_where(tag, |_| true)
     }
 
@@ -116,7 +117,7 @@ impl InterComm {
         &self,
         tag: u64,
         pred: impl Fn(&[u8]) -> bool,
-    ) -> Option<(usize, Vec<u8>)> {
+    ) -> Option<(usize, Payload)> {
         let remote = Arc::clone(&self.remote);
         let id = self.id;
         let matcher = move |e: &Envelope| {

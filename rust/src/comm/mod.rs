@@ -18,10 +18,16 @@
 //! position in it; an intercommunicator ([`InterComm`]) adds a remote
 //! group. Message matching is on (communicator id, tag, source).
 
+// The pooled-buffer layer is documented surface (DESIGN.md copy-
+// discipline table): every public item must carry docs or the
+// ci/check.sh doc/clippy gates fail.
+#[warn(missing_docs)]
+pub mod buf;
 mod collectives;
 mod intercomm;
 pub mod wire;
 
+pub use buf::{BufPool, Payload};
 pub use intercomm::InterComm;
 
 use std::collections::VecDeque;
@@ -43,7 +49,9 @@ pub(crate) struct Envelope {
     pub(crate) src_global: usize,
     pub(crate) comm_id: u64,
     pub(crate) tag: u64,
-    pub(crate) payload: Vec<u8>,
+    /// Refcounted view: local deliveries and the socket pump hand the
+    /// same bytes from sender to receiver without an owning copy.
+    pub(crate) payload: Payload,
 }
 
 #[derive(Default)]
@@ -87,14 +95,17 @@ impl Mailboxes {
 /// destination.
 pub trait Transport: Send + Sync {
     /// Deliver `payload` to global rank `dst_global`'s inbox, wherever
-    /// that inbox lives.
+    /// that inbox lives. The payload is a refcounted view: in-process
+    /// backends hand it over as-is (zero copies), socket backends
+    /// write its bytes onto the peer link (vectored, no staging
+    /// concatenation when pooling is enabled).
     fn deliver(
         &self,
         dst_global: usize,
         src_global: usize,
         comm_id: u64,
         tag: u64,
-        payload: Vec<u8>,
+        payload: Payload,
     );
 
     /// Orderly teardown (flush and close sockets); a no-op in-process.
@@ -131,7 +142,7 @@ impl Transport for MemoryTransport {
         src_global: usize,
         comm_id: u64,
         tag: u64,
-        payload: Vec<u8>,
+        payload: Payload,
     ) {
         self.mailboxes.push(dst_global, Envelope { src_global, comm_id, tag, payload });
     }
@@ -283,9 +294,11 @@ impl Comm {
     /// Owned-buffer send: moves the payload into the mailbox without
     /// copying. Preferred on reply paths that just built the buffer
     /// (§Perf iteration 1: removes one full payload copy per serve).
-    pub fn send_owned(&self, dst: usize, tag: u64, data: Vec<u8>) {
+    /// Accepts anything convertible into a [`Payload`] — a `Vec<u8>`,
+    /// or a pooled/sliced payload view (no copy either way).
+    pub fn send_owned(&self, dst: usize, tag: u64, data: impl Into<Payload>) {
         let dst_global = self.ranks[dst];
-        self.send_global_owned(self.id, dst_global, tag, data);
+        self.send_global_owned(self.id, dst_global, tag, data.into());
     }
 
     fn send_on(&self, comm_id: u64, dst: usize, tag: u64, data: &[u8]) {
@@ -294,7 +307,7 @@ impl Comm {
     }
 
     pub(crate) fn send_global(&self, comm_id: u64, dst_global: usize, tag: u64, data: &[u8]) {
-        self.send_global_owned(comm_id, dst_global, tag, data.to_vec());
+        self.send_global_owned(comm_id, dst_global, tag, Payload::copy_from_slice(data));
     }
 
     pub(crate) fn send_global_owned(
@@ -302,7 +315,7 @@ impl Comm {
         comm_id: u64,
         dst_global: usize,
         tag: u64,
-        data: Vec<u8>,
+        data: Payload,
     ) {
         self.world.bytes_sent.fetch_add(data.len() as u64, Ordering::Relaxed);
         self.world.msgs_sent.fetch_add(1, Ordering::Relaxed);
@@ -312,12 +325,15 @@ impl Comm {
     }
 
     /// Blocking receive from local rank `src` (or [`ANY_SOURCE`]).
-    /// Returns (source local rank, payload).
-    pub fn recv(&self, src: usize, tag: u64) -> Result<(usize, Vec<u8>)> {
+    /// Returns (source local rank, payload). The payload is a
+    /// refcounted view of the sender's bytes (or of the pooled
+    /// receive buffer on socket transports) — call
+    /// [`Payload::into_vec`] if owned bytes are really needed.
+    pub fn recv(&self, src: usize, tag: u64) -> Result<(usize, Payload)> {
         self.recv_timeout(src, tag, RECV_TIMEOUT)
     }
 
-    pub fn recv_any(&self, tag: u64) -> Result<(usize, Vec<u8>)> {
+    pub fn recv_any(&self, tag: u64) -> Result<(usize, Payload)> {
         self.recv_timeout(ANY_SOURCE, tag, RECV_TIMEOUT)
     }
 
@@ -326,7 +342,7 @@ impl Comm {
         src: usize,
         tag: u64,
         timeout: Duration,
-    ) -> Result<(usize, Vec<u8>)> {
+    ) -> Result<(usize, Payload)> {
         let matcher = |e: &Envelope| {
             e.comm_id == self.id
                 && e.tag == tag

@@ -7,47 +7,108 @@
 
 use crate::error::{Result, WilkinsError};
 
+use super::buf::{BufPool, Lease, Payload};
+
 #[derive(Default)]
 pub struct Writer {
     buf: Vec<u8>,
+    /// Set when the buffer was leased from a [`BufPool`]:
+    /// [`Writer::finish`] attaches the pool back-link so the
+    /// resulting [`Payload`] returns the buffer on its last drop.
+    lease: Option<Lease>,
 }
 
 impl Writer {
     pub fn new() -> Writer {
-        Writer { buf: Vec::new() }
+        Writer { buf: Vec::new(), lease: None }
     }
 
     pub fn with_capacity(cap: usize) -> Writer {
-        Writer { buf: Vec::with_capacity(cap) }
+        Writer { buf: Vec::with_capacity(cap), lease: None }
+    }
+
+    /// A writer over a buffer leased from `pool` (§Perf: steady-state
+    /// encodes recycle the same allocation round after round). Finish
+    /// with [`Writer::finish`] to keep the buffer pooled.
+    pub fn pooled(pool: &BufPool, cap: usize) -> Writer {
+        let lease = pool.lease(cap);
+        Writer { buf: Vec::new(), lease: Some(lease) }
+    }
+
+    /// Is this encode allocation-free so far: the backing buffer was
+    /// recycled from its pool *and* has not been outgrown (no
+    /// reallocation since lease time)? Always false for unpooled
+    /// writers. Evaluate after encoding — growth can only be seen
+    /// once the bytes are in.
+    pub fn pool_hit(&self) -> bool {
+        self.lease.as_ref().is_some_and(|l| l.was_hit() && !l.grew())
+    }
+
+    fn bytes_mut(&mut self) -> &mut Vec<u8> {
+        match self.lease.as_mut() {
+            Some(l) => l,
+            None => &mut self.buf,
+        }
+    }
+
+    fn bytes(&self) -> &Vec<u8> {
+        match self.lease.as_ref() {
+            Some(l) => l,
+            None => &self.buf,
+        }
+    }
+
+    /// Freeze the encoded bytes into a refcounted [`Payload`]. Pooled
+    /// writers keep their pool link (the buffer is recycled when the
+    /// last payload view drops); plain writers wrap their `Vec`
+    /// without copying.
+    pub fn finish(self) -> Payload {
+        match self.lease {
+            Some(l) => l.finish(),
+            None => Payload::from(self.buf),
+        }
     }
 
     pub fn put_u8(&mut self, v: u8) {
-        self.buf.push(v);
+        self.bytes_mut().push(v);
     }
 
     pub fn put_u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.bytes_mut().extend_from_slice(&v.to_le_bytes());
     }
 
     pub fn put_u64(&mut self, v: u64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.bytes_mut().extend_from_slice(&v.to_le_bytes());
     }
 
     pub fn put_i64(&mut self, v: i64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.bytes_mut().extend_from_slice(&v.to_le_bytes());
     }
 
     pub fn put_f32(&mut self, v: f32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.bytes_mut().extend_from_slice(&v.to_le_bytes());
     }
 
     pub fn put_f64(&mut self, v: f64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.bytes_mut().extend_from_slice(&v.to_le_bytes());
     }
 
     pub fn put_bytes(&mut self, b: &[u8]) {
         self.put_u64(b.len() as u64);
-        self.buf.extend_from_slice(b);
+        self.bytes_mut().extend_from_slice(b);
+    }
+
+    /// Append raw bytes with no length prefix (file magics, preframed
+    /// sub-encodings).
+    pub fn put_raw(&mut self, b: &[u8]) {
+        self.bytes_mut().extend_from_slice(b);
+    }
+
+    /// Overwrite the u64 at byte offset `pos` (little-endian) — the
+    /// backfill half of a reserve-then-encode-in-place length prefix.
+    /// Panics if `pos..pos+8` was not already written.
+    pub fn set_u64_at(&mut self, pos: usize, v: u64) {
+        self.bytes_mut()[pos..pos + 8].copy_from_slice(&v.to_le_bytes());
     }
 
     /// Length-prefixed bytes written in place: reserves `n` zeroed
@@ -55,9 +116,10 @@ impl Writer {
     /// extract data straight into the wire buffer, no staging copy).
     pub fn put_bytes_via(&mut self, n: usize, f: impl FnOnce(&mut [u8])) {
         self.put_u64(n as u64);
-        let start = self.buf.len();
-        self.buf.resize(start + n, 0);
-        f(&mut self.buf[start..]);
+        let buf = self.bytes_mut();
+        let start = buf.len();
+        buf.resize(start + n, 0);
+        f(&mut buf[start..]);
     }
 
     pub fn put_str(&mut self, s: &str) {
@@ -71,16 +133,22 @@ impl Writer {
         }
     }
 
-    pub fn into_vec(self) -> Vec<u8> {
-        self.buf
+    /// Extract the raw encoded bytes. A pooled writer's contents are
+    /// *copied out* here (the leased buffer goes back to its pool) —
+    /// prefer [`Writer::finish`], which shares the buffer instead.
+    pub fn into_vec(mut self) -> Vec<u8> {
+        match self.lease.take() {
+            Some(lease) => lease.finish().into_vec(),
+            None => self.buf,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.buf.len()
+        self.bytes().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.buf.is_empty()
+        self.bytes().is_empty()
     }
 }
 
@@ -134,6 +202,25 @@ impl<'a> Reader<'a> {
     pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
         let n = self.get_u64()? as usize;
         self.take(n)
+    }
+
+    /// Read a length-prefixed byte run and return it as a zero-copy
+    /// slice of `src` — the payload this reader was constructed over
+    /// (`Reader::new(&src)`). The one shared implementation of the
+    /// "decode borrows the receive buffer" pattern: offsets are
+    /// derived from the reader's own position and validated against
+    /// `src`, so the five decode paths that slice instead of copying
+    /// cannot drift apart.
+    pub fn get_bytes_sliced(&mut self, src: &Payload) -> Result<Payload> {
+        if src.len() != self.buf.len() || !std::ptr::eq(src.as_slice().as_ptr(), self.buf.as_ptr())
+        {
+            return Err(WilkinsError::Comm(
+                "get_bytes_sliced: payload is not this reader's backing buffer".into(),
+            ));
+        }
+        let n = self.get_bytes()?.len();
+        let end = src.len() - self.remaining();
+        src.slice(end - n..end)
     }
 
     pub fn get_str(&mut self) -> Result<String> {

@@ -31,6 +31,11 @@ pub struct NodeReport {
     pub bytes_shared: u64,
     /// Serve bytes that took the encode/decode round-trip.
     pub bytes_copied: u64,
+    /// Encoded serve rounds that had to allocate a fresh reply buffer
+    /// (pool misses; zero at steady state).
+    pub alloc_rounds: u64,
+    /// Bytes encoded into recycled pool buffers (allocation-free).
+    pub bytes_pooled: u64,
     pub files_opened: u64,
     pub bytes_read: u64,
     /// Max across ranks (the critical-path wait).
@@ -107,6 +112,15 @@ impl RunReport {
         if shared > 0 || copied > 0 {
             s.push_str(&format!("dataplane: bytes_shared={shared} bytes_copied={copied}\n"));
         }
+        // One greppable wire summary (ci/check.sh asserts on it):
+        // allocation discipline of the encode hot path. alloc_rounds
+        // must read 0 once the buffer pool is warm — every nonzero
+        // value is a serve round that paid an allocation.
+        let alloc_rounds: u64 = self.nodes.iter().map(|n| n.alloc_rounds).sum();
+        let pooled: u64 = self.nodes.iter().map(|n| n.bytes_pooled).sum();
+        if alloc_rounds > 0 || pooled > 0 {
+            s.push_str(&format!("wire: alloc_rounds={alloc_rounds} bytes_pooled={pooled}\n"));
+        }
         s
     }
 }
@@ -146,6 +160,8 @@ pub(crate) fn build(
             bytes_served: 0,
             bytes_shared: 0,
             bytes_copied: 0,
+            alloc_rounds: 0,
+            bytes_pooled: 0,
             files_opened: 0,
             bytes_read: 0,
             serve_wait: Duration::ZERO,
@@ -166,6 +182,8 @@ pub(crate) fn build(
         n.bytes_served += o.stats.bytes_served;
         n.bytes_shared += o.stats.bytes_shared;
         n.bytes_copied += o.stats.bytes_copied;
+        n.alloc_rounds += o.stats.alloc_rounds;
+        n.bytes_pooled += o.stats.bytes_pooled;
         n.bytes_read += o.stats.bytes_read;
         n.serve_wait = n.serve_wait.max(o.stats.serve_wait);
         n.open_wait = n.open_wait.max(o.stats.open_wait);

@@ -34,6 +34,15 @@
 //! `every: N` serves every Nth eligible close (the paper's *some(N)*,
 //! legacy `io_freq: N`); skipped closes never reach the buffer.
 //!
+//! Everything this layer moves — requests, section-plan broadcasts,
+//! and the data replies the pump answers between coordinated
+//! sections — rides the pooled [`Payload`](crate::comm::Payload)
+//! plane: round snapshots are `Arc`s (admission moves no bytes),
+//! reply bodies encode into recycled pool buffers, and on socket
+//! transports the frames travel vectored and are decoded as slices
+//! of one pooled receive buffer (see the copy-discipline table in
+//! DESIGN.md).
+//!
 //! # Credit accounting
 //!
 //! The consumer grants `depth` dataset credits per link (the grant is

@@ -236,7 +236,7 @@ impl ConsumerEngine {
         let mut eof = false;
         for _ in 0..ic.remote_size() {
             let (src, bytes) = ic.recv_any(TAG_REP)?;
-            match Reply::decode(&bytes)? {
+            match Reply::decode_from(&bytes)? {
                 Reply::Meta(m) => metas[src] = Some(m),
                 Reply::Eof => eof = true,
                 Reply::Data(_) => {
@@ -484,13 +484,16 @@ impl ConsumerEngine {
 /// Apply one data reply to the caller's output buffer.
 ///
 /// Inline replies (§Perf iteration 3) stream block bytes straight
-/// from the wire buffer; shared replies resolve the token against the
-/// process-local registry and copy regions directly out of the
-/// producer's snapshot — the zero-copy fast path's receiving half.
+/// from the wire buffer — which on socket transports *is* the pooled
+/// receive buffer, so a remote `DataRep` body reaches this hyperslab
+/// fill with exactly one copy off the wire; shared replies resolve
+/// the token against the process-local registry and copy regions
+/// directly out of the producer's snapshot — the zero-copy fast
+/// path's receiving half.
 fn apply_data_reply(
     cx: &mut EngineCx<'_>,
     dset: &str,
-    bytes: &[u8],
+    bytes: &crate::comm::buf::Payload,
     want: &Hyperslab,
     out: &mut [u8],
     esize: usize,
@@ -504,6 +507,7 @@ fn apply_data_reply(
                 let data = r.get_bytes()?; // borrowed, no copy
                 cx.stats.bytes_read += data.len() as u64;
                 copy_region(&region, data, want, out, &region, esize);
+                crate::comm::buf::note_copied(data.len());
             }
             Ok(())
         }

@@ -24,19 +24,44 @@ const MAGIC: &[u8; 4] = b"WLF5";
 /// busy-spinning a core at a fixed 1 ms cadence.
 const MAX_POLL_BACKOFF: Duration = Duration::from_millis(20);
 
+/// Capacity hint for encoding (a filtered view of) `file`: the data
+/// bytes plus a generous per-item allowance for names, slab headers
+/// and attrs, so pooled encode leases are not outgrown by
+/// metadata-heavy files (an outgrown lease still encodes correctly —
+/// it just pays a reallocation the accounting then reports).
+pub fn encode_cap_hint(file: &H5File) -> usize {
+    let items: usize = file
+        .datasets
+        .values()
+        .map(|d| 1 + d.blocks.len())
+        .sum::<usize>()
+        + file.attrs.len();
+    file.local_bytes() + 4096 + items * 256
+}
+
 /// Encode a set of files (used for disk files and broadcast_files).
 /// Generic over the map's value ownership so the producer's shared
 /// `Arc<H5File>` entries encode without a deep copy.
 pub fn encode_files<F: std::borrow::Borrow<H5File>>(files: &HashMap<String, F>) -> Vec<u8> {
     let mut w = Writer::new();
+    encode_files_to(&mut w, files);
+    w.into_vec()
+}
+
+/// [`encode_files`] into a caller-supplied writer — the disk-write
+/// path encodes straight into its pooled output buffer instead of
+/// staging an owned body `Vec` first.
+pub fn encode_files_to<F: std::borrow::Borrow<H5File>>(
+    w: &mut Writer,
+    files: &HashMap<String, F>,
+) {
     w.put_u64(files.len() as u64);
     let mut names: Vec<&String> = files.keys().collect();
     names.sort();
     for name in names {
         let f: &H5File = files[name].borrow();
-        encode_one_file(&mut w, name, f, &|_| true);
+        encode_one_file(w, name, f, &|_| true);
     }
-    w.into_vec()
 }
 
 /// Encode one file keeping only the datasets `keep` accepts — the
@@ -45,9 +70,16 @@ pub fn encode_files<F: std::borrow::Borrow<H5File>>(files: &HashMap<String, F>) 
 /// is byte-compatible with [`decode_files`] (a one-entry set).
 pub fn encode_file_filtered(file: &H5File, keep: impl Fn(&str) -> bool) -> Vec<u8> {
     let mut w = Writer::new();
-    w.put_u64(1);
-    encode_one_file(&mut w, &file.name, file, &keep);
+    encode_file_filtered_to(&mut w, file, keep);
     w.into_vec()
+}
+
+/// [`encode_file_filtered`] into a caller-supplied writer — the
+/// producer engine hands in a pooled writer so the per-close archive
+/// encode recycles its buffer instead of allocating per round.
+pub fn encode_file_filtered_to(w: &mut Writer, file: &H5File, keep: impl Fn(&str) -> bool) {
+    w.put_u64(1);
+    encode_one_file(w, &file.name, file, &keep);
 }
 
 /// The single per-file encoder behind [`encode_files`] and
@@ -131,21 +163,35 @@ fn eof_path(workdir: &Path, pattern: &str) -> PathBuf {
     workdir.join(format!("{}.eof", sanitize(pattern)))
 }
 
-/// Write one versioned disk file atomically (tmp + rename).
+/// Write one versioned disk file atomically (tmp + rename). The
+/// on-disk image is assembled in one pooled buffer (magic + header +
+/// body encoded in place — no staging `Vec` per close) that recycles
+/// after the write. The body's length prefix is backfilled so the
+/// body really is encoded in place.
 pub fn write_file(workdir: &Path, file: &H5File, version: u64) -> Result<()> {
     fs::create_dir_all(workdir)?;
-    let mut w = Writer::new();
+    // Sized from the file's own bytes plus per-item metadata slack
+    // ([`encode_cap_hint`]) so the encode does not outgrow the lease.
+    let mut w = if crate::comm::buf::pooling_enabled() {
+        Writer::pooled(crate::comm::buf::pool(), encode_cap_hint(file))
+    } else {
+        Writer::new()
+    };
+    w.put_raw(MAGIC);
     w.put_u64(version);
     w.put_str(&file.name);
-    // Borrow through the map: no deep copy of the merged blocks just
-    // to serialize them.
-    let body = encode_files(&HashMap::from([(file.name.clone(), file)]));
-    w.put_bytes(&body);
+    // Body, length-prefixed: reserve the prefix slot, encode the body
+    // in place (borrowing through the map — no deep copy of the
+    // merged blocks, no staging Vec), then backfill the length.
+    let len_at = w.len();
+    w.put_u64(0);
+    let body_start = w.len();
+    encode_files_to(&mut w, &HashMap::from([(file.name.clone(), file)]));
+    let body_len = (w.len() - body_start) as u64;
+    w.set_u64_at(len_at, body_len);
     let final_path = disk_path(workdir, &file.name, version);
     let tmp = final_path.with_extension("tmp");
-    let mut payload = MAGIC.to_vec();
-    payload.extend_from_slice(&w.into_vec());
-    fs::write(&tmp, &payload)?;
+    fs::write(&tmp, &w.finish())?;
     fs::rename(&tmp, &final_path)?;
     Ok(())
 }

@@ -449,9 +449,17 @@ impl ProducerEngine {
             cx.stats.bytes_shared += nbytes as u64;
             return Ok(());
         }
-        let (rep, nbytes) = encode_data_reply(&snapshot, dset, slab)?;
+        let (rep, nbytes, pool_hit) = encode_data_reply(&snapshot, dset, slab, cx.pooling)?;
         cx.stats.bytes_served += nbytes as u64;
         cx.stats.bytes_copied += nbytes as u64;
+        if pool_hit {
+            cx.stats.bytes_pooled += rep.len() as u64;
+        } else {
+            // A fresh allocation on the serve hot path: the warm-up
+            // rounds and the ablation arm land here; steady state
+            // must not (the acceptance bar benches/wire.rs asserts).
+            cx.stats.alloc_rounds += 1;
+        }
         ic.send_owned(src, TAG_REP, rep);
         Ok(())
     }
@@ -688,7 +696,27 @@ fn write_disk_file(
     let io = cx
         .io_comm
         .ok_or_else(|| WilkinsError::LowFive("file mode on non-io rank".into()))?;
-    let mine = filemode::encode_file_filtered(file, |d| dsets.iter().any(|k| k == d));
+    // Disk encodes ride the pool too: the versioned-archive path runs
+    // once per close, so steady state reuses one warm buffer. Sized
+    // from the file's bytes plus per-item metadata slack so the
+    // encode does not outgrow the lease (growth would be a hidden,
+    // uncredited reallocation).
+    let mut w = if cx.pooling {
+        crate::comm::wire::Writer::pooled(
+            crate::comm::buf::pool(),
+            filemode::encode_cap_hint(file),
+        )
+    } else {
+        crate::comm::wire::Writer::new()
+    };
+    filemode::encode_file_filtered_to(&mut w, file, |d| dsets.iter().any(|k| k == d));
+    // Evaluated after encoding: a hit that had to reallocate mid-
+    // encode does not count as pooled.
+    let hit = w.pool_hit();
+    let mine = w.finish();
+    if hit {
+        cx.stats.bytes_pooled += mine.len() as u64;
+    }
     let gathered = io.gather(0, &mine)?;
     if let Some(parts) = gathered {
         let mut merged = H5File::new(&file.name);
@@ -756,12 +784,15 @@ fn shared_reply_bytes(snapshot: &H5File, dset: &str, want: &Hyperslab) -> Result
 /// Encode a Reply::Data wire message for the blocks of `snapshot`
 /// intersecting `want`, extracting each intersection *directly into*
 /// the wire buffer (§Perf iteration 2: no staging buffer per block).
-/// Returns (encoded reply, payload bytes).
+/// With `pooled`, the buffer is leased from the process pool —
+/// steady-state serves recycle the same allocation every round.
+/// Returns (encoded reply, payload bytes, pool hit).
 fn encode_data_reply(
     snapshot: &H5File,
     dset: &str,
     want: &Hyperslab,
-) -> Result<(Vec<u8>, usize)> {
+    pooled: bool,
+) -> Result<(crate::comm::buf::Payload, usize, bool)> {
     let d = snapshot.dataset(dset)?;
     let esize = d.meta.dtype.size_bytes();
     let inters: Vec<(&super::model::OwnedBlock, Hyperslab)> = d
@@ -769,11 +800,18 @@ fn encode_data_reply(
         .iter()
         .filter_map(|b| b.slab.intersect(want).map(|i| (b, i)))
         .collect();
+    // Per-block budget: the intersection bytes plus the slab header
+    // (two length-prefixed u64 slices, 16 + 16·ndims) and the bytes
+    // prefix — an under-estimate would silently realloc mid-encode.
     let payload: usize = inters
         .iter()
-        .map(|(_, i)| i.element_count() as usize * esize + 64)
+        .map(|(_, i)| i.element_count() as usize * esize + 32 + 16 * i.offset.len())
         .sum();
-    let mut w = crate::comm::wire::Writer::with_capacity(payload + 16);
+    let mut w = if pooled {
+        crate::comm::wire::Writer::pooled(crate::comm::buf::pool(), payload + 16)
+    } else {
+        crate::comm::wire::Writer::with_capacity(payload + 16)
+    };
     w.put_u8(1); // Reply::Data discriminant
     w.put_u64(inters.len() as u64);
     let mut nbytes = 0;
@@ -784,6 +822,10 @@ fn encode_data_reply(
         w.put_bytes_via(n, |dst| {
             super::hyperslab::copy_region(&b.slab, &b.data, &inter, dst, &inter, esize);
         });
+        crate::comm::buf::note_copied(n);
     }
-    Ok((w.into_vec(), nbytes))
+    // Evaluated after encoding: a pool hit that reallocated while
+    // filling is not allocation-free and must not read as one.
+    let hit = w.pool_hit();
+    Ok((w.finish(), nbytes, hit))
 }

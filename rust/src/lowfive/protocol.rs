@@ -18,6 +18,7 @@
 //! serve rounds from mixing when a fast consumer re-opens while a slow
 //! consumer rank is still reading (the paper's flow-control scenarios).
 
+use crate::comm::buf::Payload;
 use crate::comm::wire::{Reader, Writer};
 use crate::error::{Result, WilkinsError};
 
@@ -132,7 +133,9 @@ pub enum Reply {
     Meta(FileMeta),
     /// Blocks intersecting a DataReq: (region, bytes) pairs where the
     /// region is in global coordinates and bytes are row-major in it.
-    Data(Vec<(Hyperslab, Vec<u8>)>),
+    /// The bytes are refcounted views — [`Reply::decode_from`] slices
+    /// them out of the received payload without copying.
+    Data(Vec<(Hyperslab, Payload)>),
     /// No more files will be produced.
     Eof,
 }
@@ -177,8 +180,20 @@ impl Reply {
         w.into_vec()
     }
 
-    /// Decode a reply from its wire form.
+    /// Decode a reply from raw bytes. Data-block bytes are copied out
+    /// (there is no shared buffer to slice) — hot paths that hold the
+    /// received [`Payload`] should use [`Reply::decode_from`], which
+    /// borrows instead.
     pub fn decode(buf: &[u8]) -> Result<Reply> {
+        Reply::decode_from(&Payload::copy_from_slice(buf))
+    }
+
+    /// Decode a reply from the received payload. Data blocks are O(1)
+    /// slices of `buf` — the frame layer already copied these bytes
+    /// off the wire once, and decode must not copy them again; the
+    /// blocks keep the receive buffer alive until the hyperslab fill
+    /// consumes them.
+    pub fn decode_from(buf: &Payload) -> Result<Reply> {
         let mut r = Reader::new(buf);
         Ok(match r.get_u8()? {
             0 => {
@@ -208,8 +223,7 @@ impl Reply {
                 let mut blocks = Vec::with_capacity(n);
                 for _ in 0..n {
                     let slab = Hyperslab::decode(&mut r)?;
-                    let bytes = r.get_bytes()?.to_vec();
-                    blocks.push((slab, bytes));
+                    blocks.push((slab, r.get_bytes_sliced(buf)?));
                 }
                 Reply::Data(blocks)
             }
@@ -288,7 +302,10 @@ mod tests {
         };
         for rep in [
             Reply::Meta(meta),
-            Reply::Data(vec![(Hyperslab::range1d(4, 2), vec![1, 2, 3, 4])]),
+            Reply::Data(vec![(
+                Hyperslab::range1d(4, 2),
+                crate::comm::buf::Payload::from(vec![1, 2, 3, 4]),
+            )]),
             Reply::Eof,
         ] {
             assert_eq!(Reply::decode(&rep.encode()).unwrap(), rep);

@@ -31,6 +31,14 @@ pub struct VolStats {
     /// Serve bytes that took the classic encode → deliver → decode
     /// path (cross-process consumers, or the fast path disabled).
     pub bytes_copied: u64,
+    /// Encoded serve rounds whose reply buffer had to be freshly
+    /// allocated (a pool miss, or pooling disabled). Zero at steady
+    /// state: after warm-up every data-reply encode leases a recycled
+    /// buffer from the process pool.
+    pub alloc_rounds: u64,
+    /// Bytes encoded into recycled (pool-hit) buffers — serve replies
+    /// and disk-archive encodes that cost no allocation.
+    pub bytes_pooled: u64,
     /// Files opened on the consumer side.
     pub files_opened: u64,
     /// Payload bytes read on the consumer side (both transports).
@@ -64,6 +72,10 @@ pub(super) struct EngineCx<'a> {
     pub(super) lockstep_reads: bool,
     /// Zero-copy fast path enabled (default; benches ablate it).
     pub(super) zero_copy: bool,
+    /// Pooled encode buffers enabled (default; benches ablate it via
+    /// `Vol::set_pooling`, which also flips the process-wide
+    /// transport pooling switch).
+    pub(super) pooling: bool,
 }
 
 impl EngineCx<'_> {

@@ -806,6 +806,59 @@ fn zero_copy_disabled_takes_encoded_path() {
 }
 
 #[test]
+fn encoded_serve_rounds_account_pool_hits_and_misses() {
+    // Force the encode path (zero-copy ablated) for several rounds:
+    // every data reply must be accounted either as a pool hit
+    // (bytes_pooled) or as an allocation (alloc_rounds). The exact
+    // split depends on global pool contention from concurrently
+    // running tests, so assert the invariant, not the split — the
+    // tight steady-state bound (alloc_rounds == 0) is asserted by
+    // benches/wire.rs and the mixed-transport CI smoke, which own
+    // their process.
+    let rounds = 3u64;
+    couple(
+        1,
+        1,
+        Route::Memory,
+        move |_, vol| {
+            vol.set_zero_copy(false);
+            for _ in 0..rounds {
+                vol.file_create("outfile.h5").unwrap();
+                vol.dataset_create("outfile.h5", "/g", DType::U64, &[64]).unwrap();
+                vol.dataset_write(
+                    "outfile.h5",
+                    "/g",
+                    Hyperslab::whole(&[64]),
+                    vec![9u8; 512],
+                )
+                .unwrap();
+                vol.file_close("outfile.h5").unwrap();
+            }
+            assert_eq!(vol.stats.bytes_copied, 512 * rounds);
+            assert!(
+                vol.stats.alloc_rounds <= rounds,
+                "cannot allocate more often than it encodes"
+            );
+            assert!(
+                vol.stats.bytes_pooled > 0 || vol.stats.alloc_rounds == rounds,
+                "every reply is a pool hit or a counted allocation \
+                 (pooled={} alloc_rounds={})",
+                vol.stats.bytes_pooled,
+                vol.stats.alloc_rounds
+            );
+        },
+        move |_, vol| {
+            for _ in 0..rounds {
+                let name = vol.file_open("outfile.h5").unwrap();
+                let bytes = vol.dataset_read(&name, "/g", &Hyperslab::whole(&[64])).unwrap();
+                assert_eq!(bytes, vec![9u8; 512]);
+                vol.file_close(&name).unwrap();
+            }
+        },
+    );
+}
+
+#[test]
 fn file_mode_archives_undeclared_sibling_datasets() {
     // A pure file-mode channel that names only /declared must still
     // archive the whole file (the historical behavior): the consumer

@@ -67,6 +67,7 @@ macro_rules! engine_cx {
             recorder: $self.recorder.as_ref(),
             lockstep_reads: $self.lockstep_reads,
             zero_copy: $self.zero_copy,
+            pooling: $self.pooling,
         }
     };
 }
@@ -111,6 +112,9 @@ pub struct Vol {
     /// Zero-copy fast path for same-process serves (default on;
     /// benches/dataplane.rs ablates it).
     zero_copy: bool,
+    /// Pooled encode buffers for serve replies and disk archives
+    /// (default on; benches/wire.rs ablates it).
+    pooling: bool,
 }
 
 impl Vol {
@@ -133,6 +137,7 @@ impl Vol {
             recorder: None,
             lockstep_reads: false,
             zero_copy: true,
+            pooling: crate::comm::buf::pooling_enabled(),
         }
     }
 
@@ -146,6 +151,16 @@ impl Vol {
     /// the encode/decode round-trip.
     pub fn set_zero_copy(&mut self, v: bool) {
         self.zero_copy = v;
+    }
+
+    /// Ablation only: disable the pooled wire plane (see
+    /// benches/wire.rs) — serve replies and disk archives encode into
+    /// fresh allocations, and the process-wide transport switch
+    /// ([`crate::comm::buf::set_pooling`]) falls back to the
+    /// historical concatenate/copy-out frame path.
+    pub fn set_pooling(&mut self, v: bool) {
+        self.pooling = v;
+        crate::comm::buf::set_pooling(v);
     }
 
     /// Driver-side pre-open (the paper's "query producers whether there

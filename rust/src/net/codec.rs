@@ -8,15 +8,26 @@
 //! TCP/UDS already give us ordered reliable bytes, and the length
 //! bound catches stream desync early.
 //!
-//! Two decode paths share the same header rules:
-//! * [`read_frame`] — blocking, for the pump and control threads
-//!   (`read_exact` under the hood, clean-EOF aware).
+//! Send side: [`write_frame`] assembles header + body contiguously
+//! (control messages, legacy path); [`write_frame_vectored`] sends
+//! the header and any number of body parts with `write_vectored`
+//! (`IoSlice`), so a data payload goes from the producer's encode
+//! buffer straight to the kernel without a staging concatenation.
+//!
+//! Receive side, sharing the same header rules:
+//! * [`read_frame`] — blocking, owned `Vec` body (control threads).
+//! * [`read_frame_payload`] — blocking, body read into a buffer
+//!   leased from the global [`buf`] pool and returned as a
+//!   refcounted [`Payload`]; the data pump slices envelopes out of
+//!   it with zero further copies, and the buffer recycles when the
+//!   last slice drops.
 //! * [`FrameDecoder`] — incremental, fed arbitrary byte slices; this
 //!   is what the property tests drive with random split points to
 //!   prove partial reads can never tear or reorder a frame.
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 
+use crate::comm::buf::{self, Payload};
 use crate::error::{Result, WilkinsError};
 
 /// Upper bound on one frame body. Large enough for any dataset slab
@@ -41,12 +52,15 @@ pub type Frame = (u8, Vec<u8>);
 
 /// Assemble a frame as contiguous bytes (header + body). Kept separate
 /// from [`write_frame`] so senders can build once and write under a
-/// lock without re-encoding.
+/// lock without re-encoding. This is the *concatenating* path — the
+/// body is copied once here; the pooled data plane uses
+/// [`write_frame_vectored`] instead.
 pub fn encode_frame(kind: u8, body: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_LEN + body.len());
     out.extend_from_slice(&(body.len() as u32).to_le_bytes());
     out.push(kind);
     out.extend_from_slice(body);
+    buf::note_copied(body.len());
     out
 }
 
@@ -63,10 +77,53 @@ pub fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Blocking read of one frame. `Ok(None)` on clean EOF at a frame
-/// boundary (the peer closed after a complete frame); an EOF inside a
-/// frame is an error (the stream died mid-message).
-pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+/// Write one frame whose body is scattered across `parts` without
+/// concatenating: header and parts go down as one `write_vectored`
+/// sequence (gather I/O). Same wire format as [`write_frame`] — only
+/// the user-space copy disappears. The caller's per-peer lock must
+/// cover the whole call, exactly as for `write_frame`.
+pub fn write_frame_vectored<W: Write>(w: &mut W, kind: u8, parts: &[&[u8]]) -> Result<()> {
+    let body_len: usize = parts.iter().map(|p| p.len()).sum();
+    if body_len > MAX_FRAME {
+        return Err(WilkinsError::Comm(format!(
+            "frame body of {body_len} bytes exceeds MAX_FRAME ({MAX_FRAME})"
+        )));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+    header[4] = kind;
+    // write_vectored may accept any prefix of the scattered bytes;
+    // loop, rebuilding the slice list past what the kernel took (one
+    // reused slice buffer — partial writes must not allocate per
+    // retry on a path advertised as allocation-free).
+    let total = HEADER_LEN + body_len;
+    let mut written = 0usize;
+    let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(1 + parts.len());
+    while written < total {
+        slices.clear();
+        let mut skip = written;
+        for part in std::iter::once(&header[..]).chain(parts.iter().copied()) {
+            if skip >= part.len() {
+                skip -= part.len();
+                continue;
+            }
+            slices.push(IoSlice::new(&part[skip..]));
+            skip = 0;
+        }
+        let n = w.write_vectored(&slices)?;
+        if n == 0 {
+            return Err(WilkinsError::Comm(
+                "socket wrote zero bytes mid-frame (peer closed?)".into(),
+            ));
+        }
+        written += n;
+    }
+    Ok(())
+}
+
+/// Read exactly one frame header; `Ok(None)` on clean EOF at the
+/// frame boundary, error on EOF inside the header.
+fn read_header<R: Read>(r: &mut R) -> Result<Option<(usize, u8)>> {
     let mut header = [0u8; HEADER_LEN];
     // Hand-rolled first-byte read so boundary-EOF and mid-frame EOF
     // are distinguishable.
@@ -93,11 +150,49 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
             "frame header claims {len} bytes (> MAX_FRAME): stream desync?"
         )));
     }
+    Ok(Some((len, kind)))
+}
+
+/// Blocking read of one frame. `Ok(None)` on clean EOF at a frame
+/// boundary (the peer closed after a complete frame); an EOF inside a
+/// frame is an error (the stream died mid-message).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let Some((len, kind)) = read_header(r)? else {
+        return Ok(None);
+    };
     let mut body = vec![0u8; len];
     r.read_exact(&mut body).map_err(|e| {
         WilkinsError::Comm(format!("socket closed inside a {len}-byte frame body: {e}"))
     })?;
     Ok(Some((kind, body)))
+}
+
+/// Blocking read of one frame into a buffer leased from the global
+/// pool, returned as a refcounted [`Payload`]. Same EOF/desync rules
+/// as [`read_frame`]. The data pump's steady state reads every frame
+/// into one of a handful of recycled buffers instead of allocating a
+/// `Vec` per frame.
+pub fn read_frame_payload<R: Read>(r: &mut R) -> Result<Option<(u8, Payload)>> {
+    let Some((len, kind)) = read_header(r)? else {
+        return Ok(None);
+    };
+    // `take` + `read_to_end` fills the recycled buffer's spare
+    // capacity directly — no zero-fill of bytes the read is about to
+    // overwrite anyway.
+    let mut lease = buf::pool().lease(len);
+    let got = r
+        .by_ref()
+        .take(len as u64)
+        .read_to_end(&mut lease)
+        .map_err(|e| {
+            WilkinsError::Comm(format!("socket closed inside a {len}-byte frame body: {e}"))
+        })?;
+    if got < len {
+        return Err(WilkinsError::Comm(format!(
+            "socket closed inside a frame body ({got}/{len} bytes)"
+        )));
+    }
+    Ok(Some((kind, lease.finish())))
 }
 
 /// Incremental frame decoder: feed byte chunks of any size (including
@@ -108,6 +203,11 @@ pub struct FrameDecoder {
 }
 
 impl FrameDecoder {
+    /// Once the staging buffer is empty, capacities above this are
+    /// released: one multi-MiB burst must not pin peak-size memory in
+    /// a long-lived pump forever.
+    const RECLAIM_CAP: usize = 64 * 1024;
+
     pub fn new() -> FrameDecoder {
         FrameDecoder::default()
     }
@@ -120,6 +220,11 @@ impl FrameDecoder {
     /// Bytes buffered but not yet consumed by a complete frame.
     pub fn pending(&self) -> usize {
         self.buf.len()
+    }
+
+    /// Staging-buffer capacity (tests assert reclamation).
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
     }
 
     /// Pop the next complete frame, `Ok(None)` if more bytes are
@@ -139,7 +244,14 @@ impl FrameDecoder {
         }
         let kind = self.buf[4];
         let body = self.buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        buf::note_copied(len);
         self.buf.drain(..HEADER_LEN + len);
+        // Reclamation: a drained buffer left over from one giant frame
+        // would otherwise hold its high-water capacity for the life of
+        // the pump.
+        if self.buf.is_empty() && self.buf.capacity() > Self::RECLAIM_CAP {
+            self.buf.shrink_to(Self::RECLAIM_CAP);
+        }
         Ok(Some((kind, body)))
     }
 }

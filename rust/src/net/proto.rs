@@ -19,6 +19,7 @@
 
 use std::time::Duration;
 
+use crate::comm::buf::{self, Payload};
 use crate::comm::wire::{Reader, Writer};
 use crate::coordinator::{NodeReport, RunReport};
 use crate::error::{Result, WilkinsError};
@@ -32,8 +33,9 @@ pub const MAGIC: u32 = 0x574C_4B4E;
 /// Protocol version; bumped on any wire-visible change (v2: flow
 /// counters in stats/reports, chunked data frames, stall spans; v3:
 /// routed data plane's bytes_shared/bytes_copied counters in stats
-/// and reports).
-pub const VERSION: u32 = 3;
+/// and reports; v4: pooled data plane's alloc_rounds/bytes_pooled
+/// counters in stats and reports).
+pub const VERSION: u32 = 4;
 
 // Frame kinds.
 pub const K_HELLO: u8 = 1;
@@ -304,7 +306,10 @@ pub fn decode_peer_hello(body: &[u8]) -> Result<u64> {
     r.get_u64()
 }
 
-/// Data-plane envelope: the socket form of one comm message.
+/// Data-plane envelope: the socket form of one comm message
+/// (concatenating legacy path — the payload is copied into the body;
+/// the pooled plane sends [`encode_data_header`] + payload slices
+/// with vectored writes instead).
 pub fn encode_data(
     dst_global: u64,
     src_global: u64,
@@ -318,26 +323,71 @@ pub fn encode_data(
     w.put_u64(comm_id);
     w.put_u64(tag);
     w.put_bytes(payload);
+    buf::note_copied(payload.len());
     w.into_vec()
 }
 
-/// Decoded data envelope fields (payload copied out of the frame).
+/// The fixed-size head of a data envelope — everything
+/// [`encode_data`] writes *before* the payload bytes, including the
+/// u64 length prefix. A vectored frame write of `[header, payload]`
+/// produces byte-identical wire form with zero payload copies. Built
+/// on the stack: the head is 5 fixed u64s, so no buffer (pooled or
+/// otherwise) is worth its traffic here.
+pub fn encode_data_header(
+    dst_global: u64,
+    src_global: u64,
+    comm_id: u64,
+    tag: u64,
+    payload_len: usize,
+) -> [u8; 40] {
+    let mut head = [0u8; 40];
+    for (i, v) in [dst_global, src_global, comm_id, tag, payload_len as u64]
+        .into_iter()
+        .enumerate()
+    {
+        head[i * 8..i * 8 + 8].copy_from_slice(&v.to_le_bytes());
+    }
+    head
+}
+
+/// Decoded data envelope fields. The payload is a refcounted view —
+/// of the receive buffer (zero-copy pooled decode) or of a copied-out
+/// `Vec` (legacy decode).
 pub struct DataMsg {
     pub dst_global: u64,
     pub src_global: u64,
     pub comm_id: u64,
     pub tag: u64,
-    pub payload: Vec<u8>,
+    pub payload: Payload,
 }
 
+/// Legacy decode: the payload is copied out of the frame body.
 pub fn decode_data(body: &[u8]) -> Result<DataMsg> {
+    let mut r = Reader::new(body);
+    let (dst_global, src_global, comm_id, tag) =
+        (r.get_u64()?, r.get_u64()?, r.get_u64()?, r.get_u64()?);
+    let bytes = r.get_bytes()?;
+    buf::note_copied(bytes.len());
+    Ok(DataMsg {
+        dst_global,
+        src_global,
+        comm_id,
+        tag,
+        payload: Payload::copy_from_slice(bytes),
+    })
+}
+
+/// Pooled decode: the payload is an O(1) slice of the frame body —
+/// the bytes read off the socket reach the consumer's mailbox without
+/// another copy.
+pub fn decode_data_payload(body: &Payload) -> Result<DataMsg> {
     let mut r = Reader::new(body);
     Ok(DataMsg {
         dst_global: r.get_u64()?,
         src_global: r.get_u64()?,
         comm_id: r.get_u64()?,
         tag: r.get_u64()?,
-        payload: r.get_bytes()?.to_vec(),
+        payload: r.get_bytes_sliced(body)?,
     })
 }
 
@@ -362,9 +412,14 @@ pub struct DataChunk {
     pub total_len: u64,
     /// This chunk's byte offset within the payload.
     pub offset: u64,
-    pub bytes: Vec<u8>,
+    /// This chunk's bytes: a zero-copy slice of the whole payload on
+    /// the pooled path, an owned copy on the legacy path.
+    pub bytes: Payload,
 }
 
+/// Concatenating legacy encode (the chunk bytes are copied into the
+/// body; the pooled plane writes [`encode_data_chunk_header`] + the
+/// chunk slice vectored instead).
 pub fn encode_data_chunk(c: &DataChunk) -> Vec<u8> {
     let mut w = Writer::with_capacity(64 + c.bytes.len());
     w.put_u64(c.dst_global);
@@ -375,12 +430,80 @@ pub fn encode_data_chunk(c: &DataChunk) -> Vec<u8> {
     w.put_u64(c.total_len);
     w.put_u64(c.offset);
     w.put_bytes(&c.bytes);
+    buf::note_copied(c.bytes.len());
     w.into_vec()
 }
 
+/// The fixed-size head of one chunk envelope — everything
+/// [`encode_data_chunk`] writes before the chunk bytes, including the
+/// u64 length prefix, so `[header, bytes]` written vectored is
+/// byte-identical wire form with zero payload copies. Stack-built,
+/// like [`encode_data_header`].
+pub fn encode_data_chunk_header(c: &DataChunk) -> [u8; 64] {
+    let mut head = [0u8; 64];
+    for (i, v) in [
+        c.dst_global,
+        c.src_global,
+        c.comm_id,
+        c.tag,
+        c.seq,
+        c.total_len,
+        c.offset,
+        c.bytes.len() as u64,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        head[i * 8..i * 8 + 8].copy_from_slice(&v.to_le_bytes());
+    }
+    head
+}
+
+/// Legacy decode: the chunk bytes are copied out of the frame body.
 pub fn decode_data_chunk(body: &[u8]) -> Result<DataChunk> {
     let mut r = Reader::new(body);
-    Ok(DataChunk {
+    let head = decode_chunk_head(&mut r)?;
+    let bytes = r.get_bytes()?;
+    buf::note_copied(bytes.len());
+    Ok(head.with_bytes(Payload::copy_from_slice(bytes)))
+}
+
+/// Pooled decode: the chunk bytes are an O(1) slice of the frame body.
+pub fn decode_data_chunk_payload(body: &Payload) -> Result<DataChunk> {
+    let mut r = Reader::new(body);
+    let head = decode_chunk_head(&mut r)?;
+    let bytes = r.get_bytes_sliced(body)?;
+    Ok(head.with_bytes(bytes))
+}
+
+/// The seven fixed fields every chunk decode shares.
+struct ChunkHead {
+    dst_global: u64,
+    src_global: u64,
+    comm_id: u64,
+    tag: u64,
+    seq: u64,
+    total_len: u64,
+    offset: u64,
+}
+
+impl ChunkHead {
+    fn with_bytes(self, bytes: Payload) -> DataChunk {
+        DataChunk {
+            dst_global: self.dst_global,
+            src_global: self.src_global,
+            comm_id: self.comm_id,
+            tag: self.tag,
+            seq: self.seq,
+            total_len: self.total_len,
+            offset: self.offset,
+            bytes,
+        }
+    }
+}
+
+fn decode_chunk_head(r: &mut Reader) -> Result<ChunkHead> {
+    Ok(ChunkHead {
         dst_global: r.get_u64()?,
         src_global: r.get_u64()?,
         comm_id: r.get_u64()?,
@@ -388,19 +511,20 @@ pub fn decode_data_chunk(body: &[u8]) -> Result<DataChunk> {
         seq: r.get_u64()?,
         total_len: r.get_u64()?,
         offset: r.get_u64()?,
-        bytes: r.get_bytes()?.to_vec(),
     })
 }
 
 /// Split one payload into chunk envelopes of at most `chunk_size`
 /// payload bytes each (at least one chunk, even for empty payloads).
+/// Each chunk's bytes are an O(1) [`Payload::slice`] view — no bytes
+/// move here.
 pub fn chunk_payload(
     dst_global: u64,
     src_global: u64,
     comm_id: u64,
     tag: u64,
     seq: u64,
-    payload: &[u8],
+    payload: &Payload,
     chunk_size: usize,
 ) -> Vec<DataChunk> {
     assert!(chunk_size > 0, "chunk size must be positive");
@@ -417,7 +541,45 @@ pub fn chunk_payload(
             seq,
             total_len,
             offset: offset as u64,
-            bytes: payload[offset..end].to_vec(),
+            bytes: payload
+                .slice(offset..end)
+                .expect("chunk bounds derive from payload len"),
+        });
+        offset = end;
+        if offset >= payload.len() {
+            return chunks;
+        }
+    }
+}
+
+/// The historical owned-`Vec` split (benchmark ablation arm and
+/// interop reference): every chunk *copies* its bytes out of the
+/// payload, exactly as the pre-pooled data plane did.
+pub fn chunk_payload_owned(
+    dst_global: u64,
+    src_global: u64,
+    comm_id: u64,
+    tag: u64,
+    seq: u64,
+    payload: &[u8],
+    chunk_size: usize,
+) -> Vec<DataChunk> {
+    assert!(chunk_size > 0, "chunk size must be positive");
+    let total_len = payload.len() as u64;
+    let mut chunks = Vec::with_capacity(payload.len() / chunk_size + 1);
+    let mut offset = 0usize;
+    loop {
+        let end = (offset + chunk_size).min(payload.len());
+        buf::note_copied(end - offset);
+        chunks.push(DataChunk {
+            dst_global,
+            src_global,
+            comm_id,
+            tag,
+            seq,
+            total_len,
+            offset: offset as u64,
+            bytes: Payload::copy_from_slice(&payload[offset..end]),
         });
         offset = end;
         if offset >= payload.len() {
@@ -431,9 +593,24 @@ pub fn chunk_payload(
 /// so interleaved streams from concurrent rank threads on one mesh
 /// link can never mix. Chunks of one message arrive in offset order
 /// (the sender writes them sequentially onto a FIFO link).
+///
+/// Reassembly targets a buffer leased from the global pool, sized up
+/// front from the declared total (eager preallocation capped at
+/// 64 MiB): one allocation-free append per chunk at steady state, and
+/// the buffer recycles once the delivered payload's last view drops.
 #[derive(Default)]
 pub struct ChunkAssembler {
-    partial: std::collections::HashMap<(u64, u64), DataMsg>,
+    partial: std::collections::HashMap<(u64, u64), PartialMsg>,
+}
+
+/// One mid-reassembly message: its envelope head + the pooled buffer
+/// its chunks append into.
+struct PartialMsg {
+    dst_global: u64,
+    src_global: u64,
+    comm_id: u64,
+    tag: u64,
+    buf: crate::comm::buf::Lease,
 }
 
 impl ChunkAssembler {
@@ -465,32 +642,49 @@ impl ChunkAssembler {
             )));
         }
         let key = (c.src_global, c.seq);
-        let entry = self.partial.entry(key).or_insert_with(|| DataMsg {
+        let entry = self.partial.entry(key).or_insert_with(|| PartialMsg {
             dst_global: c.dst_global,
             src_global: c.src_global,
             comm_id: c.comm_id,
             tag: c.tag,
-            payload: Vec::with_capacity(c.total_len.min(Self::PREALLOC_CAP) as usize),
+            // The ablation arm must really pay the historical
+            // per-message allocation, so only the pooled plane leases
+            // a recycled buffer.
+            buf: if buf::pooling_enabled() {
+                buf::pool().lease(c.total_len.min(Self::PREALLOC_CAP) as usize)
+            } else {
+                crate::comm::buf::Lease::unpooled(
+                    c.total_len.min(Self::PREALLOC_CAP) as usize,
+                )
+            },
         });
-        if entry.payload.len() as u64 != c.offset {
-            let got = entry.payload.len();
+        if entry.buf.len() as u64 != c.offset {
+            let got = entry.buf.len();
             self.partial.remove(&key);
             return Err(WilkinsError::Comm(format!(
                 "chunk stream desync from rank {}: offset {} after {got} bytes",
                 c.src_global, c.offset
             )));
         }
-        entry.payload.extend_from_slice(&c.bytes);
-        if entry.payload.len() as u64 > c.total_len {
-            let got = entry.payload.len();
+        entry.buf.extend_from_slice(&c.bytes);
+        buf::note_copied(c.bytes.len());
+        if entry.buf.len() as u64 > c.total_len {
+            let got = entry.buf.len();
             self.partial.remove(&key);
             return Err(WilkinsError::Comm(format!(
                 "chunk stream overflow from rank {}: {got} of {} bytes",
                 c.src_global, c.total_len
             )));
         }
-        if entry.payload.len() as u64 == c.total_len {
-            return Ok(self.partial.remove(&key));
+        if entry.buf.len() as u64 == c.total_len {
+            let p = self.partial.remove(&key).expect("entry just touched");
+            return Ok(Some(DataMsg {
+                dst_global: p.dst_global,
+                src_global: p.src_global,
+                comm_id: p.comm_id,
+                tag: p.tag,
+                payload: p.buf.finish(),
+            }));
         }
         Ok(None)
     }
@@ -516,6 +710,8 @@ fn put_vol_stats(w: &mut Writer, s: &VolStats) {
     w.put_u64(s.bytes_served);
     w.put_u64(s.bytes_shared);
     w.put_u64(s.bytes_copied);
+    w.put_u64(s.alloc_rounds);
+    w.put_u64(s.bytes_pooled);
     w.put_u64(s.files_opened);
     w.put_u64(s.bytes_read);
     w.put_u64(s.max_queue_depth);
@@ -533,6 +729,8 @@ fn get_vol_stats(r: &mut Reader) -> Result<VolStats> {
         bytes_served: r.get_u64()?,
         bytes_shared: r.get_u64()?,
         bytes_copied: r.get_u64()?,
+        alloc_rounds: r.get_u64()?,
+        bytes_pooled: r.get_u64()?,
         files_opened: r.get_u64()?,
         bytes_read: r.get_u64()?,
         max_queue_depth: r.get_u64()?,
@@ -558,6 +756,8 @@ fn put_run_report(w: &mut Writer, rep: &RunReport) {
         w.put_u64(n.bytes_served);
         w.put_u64(n.bytes_shared);
         w.put_u64(n.bytes_copied);
+        w.put_u64(n.alloc_rounds);
+        w.put_u64(n.bytes_pooled);
         w.put_u64(n.files_opened);
         w.put_u64(n.bytes_read);
         w.put_u64(n.max_queue_depth);
@@ -585,6 +785,8 @@ fn get_run_report(r: &mut Reader) -> Result<RunReport> {
             bytes_served: r.get_u64()?,
             bytes_shared: r.get_u64()?,
             bytes_copied: r.get_u64()?,
+            alloc_rounds: r.get_u64()?,
+            bytes_pooled: r.get_u64()?,
             files_opened: r.get_u64()?,
             bytes_read: r.get_u64()?,
             max_queue_depth: r.get_u64()?,

@@ -9,7 +9,7 @@ use std::net::TcpListener;
 use std::thread;
 use std::time::Duration;
 
-use crate::comm::InterComm;
+use crate::comm::{InterComm, Payload};
 
 use super::codec::{self, FrameDecoder, HEADER_LEN, MAX_FRAME};
 use super::proto::{
@@ -168,7 +168,7 @@ fn data_envelope_roundtrip() {
 #[test]
 fn chunked_envelope_roundtrip() {
     let payload: Vec<u8> = (0..1000u32).flat_map(u32::to_le_bytes).collect();
-    let chunks = proto::chunk_payload(3, 1, 42, 7, 99, &payload, 128);
+    let chunks = proto::chunk_payload(3, 1, 42, 7, 99, &Payload::from(payload.clone()), 128);
     assert_eq!(chunks.len(), (payload.len() + 127) / 128);
     let mut asm = proto::ChunkAssembler::new();
     let mut out = None;
@@ -187,7 +187,7 @@ fn chunked_envelope_roundtrip() {
 
 #[test]
 fn chunk_assembler_rejects_desync() {
-    let payload = vec![7u8; 64];
+    let payload = Payload::from(vec![7u8; 64]);
     let chunks = proto::chunk_payload(0, 1, 2, 3, 5, &payload, 16);
     let mut asm = proto::ChunkAssembler::new();
     asm.feed(chunks[0].clone()).unwrap();
@@ -199,7 +199,7 @@ fn chunk_assembler_rejects_desync() {
 fn chunk_assembler_rejects_absurd_total_len() {
     // A corrupt declared length must fail the link cleanly, never
     // drive the allocation.
-    let mut c = proto::chunk_payload(0, 1, 2, 3, 5, &[1, 2, 3], 16).remove(0);
+    let mut c = proto::chunk_payload(0, 1, 2, 3, 5, &Payload::from(vec![1, 2, 3]), 16).remove(0);
     c.total_len = u64::MAX;
     let mut asm = proto::ChunkAssembler::new();
     assert!(asm.feed(c).is_err());
@@ -221,8 +221,10 @@ fn prop_chunked_frames_reassemble_under_split_reads() {
         let pay_a = mk(1, rng);
         let pay_b = mk(2, rng);
         let chunk_size = rng.usize(1, 257);
-        let chunks_a = proto::chunk_payload(9, 1, 4, 8, 100, &pay_a, chunk_size);
-        let chunks_b = proto::chunk_payload(9, 2, 4, 8, 101, &pay_b, chunk_size);
+        let chunks_a =
+            proto::chunk_payload(9, 1, 4, 8, 100, &Payload::from(pay_a.clone()), chunk_size);
+        let chunks_b =
+            proto::chunk_payload(9, 2, 4, 8, 101, &Payload::from(pay_b.clone()), chunk_size);
 
         // Interleave the two chunk streams randomly (preserving each
         // stream's own order, as the per-peer write lock does), then
@@ -267,6 +269,113 @@ fn prop_chunked_frames_reassemble_under_split_reads() {
             assert_eq!((msg.dst_global, msg.comm_id, msg.tag), (9, 4, 8));
         }
     });
+}
+
+/// Satellite property: the pooled plane (payload slices + vectored
+/// headers) is bit-identical on the wire to the historical owned-Vec
+/// path, and reassembles identically when the frames are read at
+/// arbitrary split points straddling chunk boundaries.
+#[test]
+fn prop_payload_slicing_matches_owned_chunk_path() {
+    crate::proptest_lite::run_prop("payload-vs-owned-chunks", 60, |rng| {
+        let n = rng.usize(0, 4000);
+        let bytes: Vec<u8> = (0..n).map(|i| (i as u64 * 37 + 11) as u8).collect();
+        let payload = Payload::from(bytes.clone());
+        let chunk_size = rng.usize(1, 513);
+
+        let sliced = proto::chunk_payload(3, 1, 9, 7, 42, &payload, chunk_size);
+        let owned = proto::chunk_payload_owned(3, 1, 9, 7, 42, &bytes, chunk_size);
+        assert_eq!(sliced.len(), owned.len());
+
+        // Frame every chunk both ways: the legacy concatenating body
+        // and the vectored header + raw bytes must be byte-identical
+        // on the wire.
+        let mut stream: Vec<u8> = Vec::new();
+        for (s, o) in sliced.iter().zip(&owned) {
+            assert_eq!(s, o, "slice and copy chunks must agree field-for-field");
+            let legacy_body = proto::encode_data_chunk(o);
+            let head = proto::encode_data_chunk_header(s);
+            let mut vectored_body = head.as_slice().to_vec();
+            vectored_body.extend_from_slice(&s.bytes);
+            assert_eq!(
+                legacy_body, vectored_body,
+                "vectored header + slice must equal the concatenated encode"
+            );
+            codec::write_frame(&mut stream, proto::K_DATA_CHUNK, &legacy_body).unwrap();
+        }
+
+        // Split reads straddling chunk boundaries: both decode paths
+        // (copy-out and payload-slicing) must reassemble the original
+        // bytes exactly.
+        let mut dec = FrameDecoder::new();
+        let mut asm_sliced = proto::ChunkAssembler::new();
+        let mut asm_owned = proto::ChunkAssembler::new();
+        let (mut got_sliced, mut got_owned) = (None, None);
+        let mut pos = 0usize;
+        while pos < stream.len() {
+            let step = rng.usize(1, 97.min(stream.len() - pos) + 1);
+            dec.feed(&stream[pos..pos + step]);
+            pos += step;
+            while let Some((kind, body)) = dec.next_frame().unwrap() {
+                assert_eq!(kind, proto::K_DATA_CHUNK);
+                let body = Payload::from(body);
+                if let Some(m) =
+                    asm_sliced.feed(proto::decode_data_chunk_payload(&body).unwrap()).unwrap()
+                {
+                    got_sliced = Some(m.payload);
+                }
+                if let Some(m) =
+                    asm_owned.feed(proto::decode_data_chunk(&body).unwrap()).unwrap()
+                {
+                    got_owned = Some(m.payload);
+                }
+            }
+        }
+        let got_sliced = got_sliced.expect("sliced path completes");
+        let got_owned = got_owned.expect("owned path completes");
+        assert_eq!(got_sliced, bytes, "sliced path must reproduce the payload");
+        assert_eq!(got_owned, bytes, "owned path must reproduce the payload");
+        assert_eq!(asm_sliced.in_flight(), 0);
+        assert_eq!(asm_owned.in_flight(), 0);
+    });
+}
+
+#[test]
+fn vectored_and_concat_frames_are_wire_identical() {
+    let head = b"header-bytes".to_vec();
+    let tail = vec![5u8; 3000];
+    let mut whole = head.clone();
+    whole.extend_from_slice(&tail);
+
+    let mut concat: Vec<u8> = Vec::new();
+    codec::write_frame(&mut concat, 8, &whole).unwrap();
+    let mut vectored: Vec<u8> = Vec::new();
+    codec::write_frame_vectored(&mut vectored, 8, &[&head, &tail]).unwrap();
+    assert_eq!(concat, vectored);
+
+    // And the pooled blocking reader agrees with the owned one.
+    let mut cur = Cursor::new(concat.clone());
+    let (kind, body) = codec::read_frame(&mut cur).unwrap().unwrap();
+    let mut cur = Cursor::new(vectored);
+    let (pkind, pbody) = codec::read_frame_payload(&mut cur).unwrap().unwrap();
+    assert_eq!((kind, body.as_slice()), (pkind, pbody.as_slice()));
+}
+
+#[test]
+fn decoder_reclaims_staging_capacity_after_drain() {
+    let big = vec![3u8; 2 << 20];
+    let mut stream: Vec<u8> = Vec::new();
+    codec::write_frame(&mut stream, 1, &big).unwrap();
+    let mut dec = FrameDecoder::new();
+    dec.feed(&stream);
+    let (_, body) = dec.next_frame().unwrap().unwrap();
+    assert_eq!(body.len(), big.len());
+    assert_eq!(dec.pending(), 0);
+    assert!(
+        dec.capacity() <= 64 * 1024,
+        "drained decoder must not hold peak-size capacity (got {})",
+        dec.capacity()
+    );
 }
 
 /// Two mesh sides — two independent worlds, as two worker processes

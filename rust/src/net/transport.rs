@@ -3,16 +3,20 @@
 //! process that hosts them.
 //!
 //! Send side: `SocketTransport::deliver` routes on the global
-//! `owner_of` map. Remote sends assemble one frame and `write_all` it
-//! under the per-peer lock, preserving the in-memory backend's
-//! "buffered eager" semantics — the call returns once the bytes are
-//! handed to the kernel, and frames from concurrent rank threads can
-//! never interleave.
+//! `owner_of` map. Remote sends write one frame under the per-peer
+//! lock — vectored (stack-built header + payload slices, no staging
+//! concatenation) on the default pooled plane, the historical
+//! assemble-and-`write_all` on the ablation arm — preserving the
+//! in-memory backend's "buffered eager" semantics: the call returns
+//! once the bytes are handed to the kernel, and frames from
+//! concurrent rank threads can never interleave.
 //!
 //! Receive side: one pump thread per mesh link ([`spawn_pump`]) reads
-//! frames and pushes envelopes into the shared [`Mailboxes`]; blocked
-//! `recv`s wake through the ordinary mailbox condvar, so `Comm`,
-//! `InterComm`, collectives and probes run unmodified on remote ranks.
+//! frames (into recycled pool buffers on the pooled plane, slicing
+//! envelopes out of them with zero further copies) and pushes them
+//! into the shared [`Mailboxes`]; blocked `recv`s wake through the
+//! ordinary mailbox condvar, so `Comm`, `InterComm`, collectives and
+//! probes run unmodified on remote ranks.
 
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
@@ -20,6 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 
+use crate::comm::buf::{self, Payload};
 use crate::comm::{Envelope, Mailboxes, Transport};
 use crate::error::{Result, WilkinsError};
 
@@ -52,6 +57,17 @@ impl PeerLink {
         let mut s = self.stream.lock().unwrap();
         s.write_all(&frame)?;
         Ok(())
+    }
+
+    /// Vectored frame send: header + body parts go to the kernel as
+    /// one gather write under the per-peer lock — no staging
+    /// concatenation of the payload. Wire-identical to `send_frame`
+    /// of the concatenated parts; the MAX_FRAME bound is enforced by
+    /// [`codec::write_frame_vectored`] before any byte is written, so
+    /// an oversized body fails this send without desyncing the link.
+    fn send_frame_vectored(&self, kind: u8, parts: &[&[u8]]) -> Result<()> {
+        let mut s = self.stream.lock().unwrap();
+        codec::write_frame_vectored(&mut *s, kind, parts)
     }
 }
 
@@ -91,7 +107,7 @@ impl Transport for SocketTransport {
         src_global: usize,
         comm_id: u64,
         tag: u64,
-        payload: Vec<u8>,
+        payload: Payload,
     ) {
         let owner = self.owner_of[dst_global];
         if owner == self.my_worker {
@@ -110,14 +126,29 @@ impl Transport for SocketTransport {
         // rank rather than hanging the whole workflow on a recv that
         // can never complete.
         if payload.len() <= codec::CHUNK_SIZE {
-            let body = proto::encode_data(
-                dst_global as u64,
-                src_global as u64,
-                comm_id,
-                tag,
-                &payload,
-            );
-            if let Err(e) = link.send_frame(proto::K_DATA, &body) {
+            let res = if buf::pooling_enabled() {
+                // Pooled plane: stack-built envelope head, payload
+                // bytes gathered straight off the caller's buffer.
+                let head = proto::encode_data_header(
+                    dst_global as u64,
+                    src_global as u64,
+                    comm_id,
+                    tag,
+                    payload.len(),
+                );
+                link.send_frame_vectored(proto::K_DATA, &[head.as_slice(), payload.as_slice()])
+            } else {
+                // Ablation arm: the historical concatenating encode.
+                let body = proto::encode_data(
+                    dst_global as u64,
+                    src_global as u64,
+                    comm_id,
+                    tag,
+                    &payload,
+                );
+                link.send_frame(proto::K_DATA, &body)
+            };
+            if let Err(e) = res {
                 panic!("mesh link to worker {owner} failed: {e}");
             }
             return;
@@ -127,7 +158,31 @@ impl Transport for SocketTransport {
         // at chunk granularity; the receiving pump reassembles by
         // (sender, seq).
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        for c in proto::chunk_payload(
+        if buf::pooling_enabled() {
+            // Pooled plane: each chunk is an O(1) slice of the payload,
+            // written vectored after its stack-built header — the
+            // payload bytes are never copied on the send side.
+            for c in proto::chunk_payload(
+                dst_global as u64,
+                src_global as u64,
+                comm_id,
+                tag,
+                seq,
+                &payload,
+                codec::CHUNK_SIZE,
+            ) {
+                let head = proto::encode_data_chunk_header(&c);
+                if let Err(e) =
+                    link.send_frame_vectored(proto::K_DATA_CHUNK, &[head.as_slice(), c.bytes.as_slice()])
+                {
+                    panic!("mesh link to worker {owner} failed: {e}");
+                }
+            }
+            return;
+        }
+        // Ablation arm: owned chunk splits + concatenating encodes,
+        // the pre-pooled data plane bit for bit.
+        for c in proto::chunk_payload_owned(
             dst_global as u64,
             src_global as u64,
             comm_id,
@@ -172,8 +227,19 @@ pub(crate) fn spawn_pump(
             let mut stream = stream;
             let mut assembler = proto::ChunkAssembler::new();
             loop {
-                match codec::read_frame(&mut stream) {
-                    Ok(Some((proto::K_DATA, body))) => match proto::decode_data(&body) {
+                // Pooled plane: frames land in recycled pool buffers
+                // and envelopes are sliced out of them — the bytes
+                // read off the socket are the bytes the consumer
+                // fills its hyperslab from. The ablation arm keeps
+                // the historical owned-Vec read + copy-out decode.
+                let frame = if buf::pooling_enabled() {
+                    codec::read_frame_payload(&mut stream)
+                } else {
+                    codec::read_frame(&mut stream)
+                        .map(|f| f.map(|(k, body)| (k, Payload::from(body))))
+                };
+                match frame {
+                    Ok(Some((proto::K_DATA, body))) => match decode_data_any(&body) {
                         Ok(msg) => mailboxes.push(
                             msg.dst_global as usize,
                             Envelope {
@@ -192,7 +258,7 @@ pub(crate) fn spawn_pump(
                         }
                     },
                     Ok(Some((proto::K_DATA_CHUNK, body))) => {
-                        let complete = proto::decode_data_chunk(&body)
+                        let complete = decode_chunk_any(&body)
                             .and_then(|c| assembler.feed(c));
                         match complete {
                             Ok(Some(msg)) => mailboxes.push(
@@ -235,6 +301,25 @@ pub(crate) fn spawn_pump(
             }
         })
         .expect("spawn net pump thread")
+}
+
+/// Decode a data envelope per the process's pooling mode: zero-copy
+/// payload slice when pooled, historical copy-out otherwise.
+fn decode_data_any(body: &Payload) -> Result<proto::DataMsg> {
+    if buf::pooling_enabled() {
+        proto::decode_data_payload(body)
+    } else {
+        proto::decode_data(body)
+    }
+}
+
+/// Decode a chunk envelope per the process's pooling mode.
+fn decode_chunk_any(body: &Payload) -> Result<proto::DataChunk> {
+    if buf::pooling_enabled() {
+        proto::decode_data_chunk_payload(body)
+    } else {
+        proto::decode_data_chunk(body)
+    }
 }
 
 /// Connect + handshake helper shared by mesh building and rendezvous:

@@ -192,12 +192,12 @@ fn prop_protocol_roundtrip_random() {
         };
         assert_eq!(Request::decode(&req.encode()).unwrap(), req);
 
-        let blocks: Vec<(Hyperslab, Vec<u8>)> = (0..rng.usize(0, 4))
+        let blocks: Vec<(Hyperslab, wilkins::comm::Payload)> = (0..rng.usize(0, 4))
             .map(|_| {
                 let dims = rng.dims(2, 10);
                 let s = rng.slab_within(&dims);
                 let bytes = vec![rng.next_u64() as u8; rng.usize(0, 32)];
-                (s, bytes)
+                (s, wilkins::comm::Payload::from(bytes))
             })
             .collect();
         let rep = Reply::Data(blocks);
