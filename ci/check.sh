@@ -94,6 +94,31 @@ ls "$mixdir"/*.l5 >/dev/null 2>&1 || {
 }
 rm -rf "$mixdir"
 
+echo "== chaos smoke (worker killed mid-campaign must be survivable) =="
+# Worker 0 hard-exits on its first instance (WILKINS_FAULT_HARD turns
+# the injected kill into a real process death). The campaign must
+# drain on the two survivors: every instance exactly once, the loss
+# and the re-dispatch visible on the faults line.
+chaos_out=$(WILKINS_FAULT="kill@0:after=0" WILKINS_FAULT_HARD=1 \
+    cargo run --release -- ensemble configs/chaos_ensemble.yaml \
+    --artifacts /nonexistent)
+echo "$chaos_out" | grep -q "lost_workers=1" || {
+    echo "FAIL: chaos run did not report exactly one lost worker:"
+    echo "$chaos_out"; exit 1;
+}
+echo "$chaos_out" | grep -Eq "retries=[1-9]" || {
+    echo "FAIL: chaos run reported no re-dispatches:"; echo "$chaos_out"; exit 1;
+}
+# Exactly one report row per instance (rows start at column 0; the
+# admission preamble indents its instance lines).
+for i in 0 1 2 3; do
+    n=$(echo "$chaos_out" | grep -c "^chaos\[$i\]" || true)
+    [ "$n" = "1" ] || {
+        echo "FAIL: instance chaos[$i] has $n report rows (want exactly 1):"
+        echo "$chaos_out"; exit 1;
+    }
+done
+
 echo "== wire bench (pooled data plane: >=2x copy reduction, alloc_rounds) =="
 # The bench asserts the acceptance shape itself (>=2x fewer
 # bytes-copied-per-byte-delivered at 16 MiB vs the Vol::set_pooling

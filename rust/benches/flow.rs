@@ -82,6 +82,7 @@ fn run_distributed(flow: &str) -> Outcome {
         time_scale: TIME_SCALE,
         workdir: None,
         artifacts: None,
+        heartbeat: Default::default(),
     };
     outcome(net::run_workflow_distributed(&workflow_yaml(flow), &opts).unwrap())
 }

@@ -164,6 +164,10 @@ fn mesh_pair() -> (MeshWorld, MeshWorld) {
         total_ranks: 2,
         endpoints,
         owner_of: vec![0, 1],
+        // Liveness off: beats would perturb the wire byte counters
+        // this bench compares.
+        heartbeat_ms: 0,
+        heartbeat_deadline_ms: 0,
     };
     let m0 = msg.clone();
     let h = thread::spawn(move || build_mesh_world(0, &l0, &m0).unwrap());
@@ -202,6 +206,7 @@ fn run_up(pooled: bool) -> (f64, RunReport) {
         time_scale: 1.0,
         workdir: None,
         artifacts: None,
+        heartbeat: Default::default(),
     };
     let t0 = Instant::now();
     let report = net::run_workflow_distributed(&up_yaml(), &opts).unwrap();

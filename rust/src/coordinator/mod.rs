@@ -13,7 +13,7 @@
 
 pub(crate) mod report;
 
-pub use report::{NodeReport, RunReport};
+pub use report::{FaultStats, NodeReport, RunReport};
 
 // The campaign layer above single runs; re-exported here so the two
 // drivers (one instance / many instances) are found side by side.

@@ -47,6 +47,49 @@ pub struct NodeReport {
     pub max_queue_depth: u64,
 }
 
+/// Fault-tolerance counters of one run or campaign. All zero on a
+/// healthy run; any nonzero value surfaces as a greppable `faults:`
+/// line in the rendered report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Workers declared dead (socket closed or heartbeat deadline
+    /// exceeded) while the coordinator depended on them.
+    pub lost_workers: u64,
+    /// Instance dispatches that re-ran work a lost worker had in
+    /// flight.
+    pub retries: u64,
+    /// Heartbeat intervals that elapsed with no traffic from a worker
+    /// that later proved alive (late beats; zero on a healthy link).
+    pub heartbeat_misses: u64,
+    /// Stale or duplicate `InstanceDone` replies dropped by the
+    /// idempotency-key check instead of being double-counted.
+    pub dup_done: u64,
+}
+
+impl FaultStats {
+    /// Did any fault machinery engage?
+    pub fn any(&self) -> bool {
+        *self != FaultStats::default()
+    }
+
+    /// The greppable one-line summary (shared by workflow and
+    /// ensemble reports; ci/check.sh asserts on it).
+    pub fn render_line(&self) -> String {
+        format!(
+            "faults: lost_workers={} retries={} heartbeat_misses={} dup_done={}\n",
+            self.lost_workers, self.retries, self.heartbeat_misses, self.dup_done
+        )
+    }
+
+    /// Accumulate another run's counters into this one.
+    pub fn absorb(&mut self, other: &FaultStats) {
+        self.lost_workers += other.lost_workers;
+        self.retries += other.retries;
+        self.heartbeat_misses += other.heartbeat_misses;
+        self.dup_done += other.dup_done;
+    }
+}
+
 /// The result of a workflow run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -55,6 +98,8 @@ pub struct RunReport {
     pub bytes_sent: u64,
     pub msgs_sent: u64,
     pub nodes: Vec<NodeReport>,
+    /// Fault-tolerance counters; all zero on a healthy run.
+    pub faults: FaultStats,
 }
 
 impl RunReport {
@@ -120,6 +165,11 @@ impl RunReport {
         let pooled: u64 = self.nodes.iter().map(|n| n.bytes_pooled).sum();
         if alloc_rounds > 0 || pooled > 0 {
             s.push_str(&format!("wire: alloc_rounds={alloc_rounds} bytes_pooled={pooled}\n"));
+        }
+        // One greppable fault summary (ci/check.sh chaos smoke asserts
+        // on it) whenever any liveness machinery engaged.
+        if self.faults.any() {
+            s.push_str(&self.faults.render_line());
         }
         s
     }
@@ -196,5 +246,6 @@ pub(crate) fn build(
         bytes_sent,
         msgs_sent,
         nodes,
+        faults: FaultStats::default(),
     })
 }

@@ -290,6 +290,7 @@ impl Ensemble {
             rounds: sched.rounds(),
             instances,
             trace,
+            faults: crate::coordinator::FaultStats::default(),
         })
     }
 
@@ -304,6 +305,15 @@ impl Ensemble {
     /// instances by index, while workdirs and time scales are resolved
     /// *here*, exactly as the in-process path resolves them, and
     /// shipped pre-resolved.
+    ///
+    /// Fault tolerance: a dispatch that fails with
+    /// [`WilkinsError::WorkerLost`] does not fail the campaign. The
+    /// dead worker leaves the pool (the scheduler's slot cap shrinks
+    /// with it) and the instance is requeued onto a survivor under a
+    /// fresh idempotency key, up to the spec's `retries` budget per
+    /// instance. Only zero live workers — or an instance exhausting
+    /// its retries — is fatal. The merged report carries the
+    /// engagement counters ([`crate::coordinator::FaultStats`]).
     pub fn run_on_pool(
         &self,
         pool: Arc<WorkerPool>,
@@ -334,6 +344,16 @@ impl Ensemble {
         let mut peak = 0usize;
         let mut completed = 0usize;
         let mut idle_rounds = 0u32;
+        // Fault accounting + the per-instance re-dispatch budget.
+        let mut faults = crate::coordinator::FaultStats::default();
+        let mut retries_left = vec![self.spec.retries; n];
+        // Defense in depth behind the pool's idempotency-key dedup: an
+        // instance that already completed is never recorded twice.
+        let mut done_once = vec![false; n];
+        // Idempotency keys are unique per *dispatch*, so a stale reply
+        // from a presumed-dead worker can never satisfy a later
+        // dispatch of the same instance.
+        let mut dispatch_seq = 0u64;
 
         while completed < n {
             let admitted = sched.next_round();
@@ -359,6 +379,7 @@ impl Ensemble {
                 })?;
                 assigned[idx] = Some(wid);
                 started[idx] = origin.elapsed().as_secs_f64();
+                dispatch_seq += 1;
                 let inst = &self.spec.instances[idx];
                 match self.launch_remote(
                     Arc::clone(&pool),
@@ -368,6 +389,7 @@ impl Ensemble {
                     base_dir,
                     artifacts,
                     origin,
+                    dispatch_seq,
                     tx.clone(),
                 ) {
                     Ok(handle) => joins[idx] = Some(handle),
@@ -386,14 +408,53 @@ impl Ensemble {
                     WilkinsError::Task("ensemble instance channel closed".into())
                 })?;
                 let idx = done.idx;
+                if let Some(h) = joins[idx].take() {
+                    let _ = h.join();
+                }
+                if matches!(done.result, Err(WilkinsError::WorkerLost(_))) {
+                    // The worker died under this instance. It never
+                    // returns to the free list; the scheduler's slot
+                    // cap shrinks to the surviving pool.
+                    assigned[idx] = None;
+                    faults.lost_workers += 1;
+                    sched.lose_worker_slot();
+                    let why = match &done.result {
+                        Err(e) => e.to_string(),
+                        Ok(_) => unreachable!("matched Err above"),
+                    };
+                    if pool.alive() == 0 {
+                        return Err(WilkinsError::Task(format!(
+                            "ensemble campaign lost every worker (last: {why})"
+                        )));
+                    }
+                    if retries_left[idx] > 0 {
+                        retries_left[idx] -= 1;
+                        faults.retries += 1;
+                        sched.requeue(idx);
+                        continue;
+                    }
+                    errors.push(format!(
+                        "{}: {why} (retry budget exhausted)",
+                        self.spec.instances[idx].name
+                    ));
+                    finished[idx] = done.finished_s;
+                    sched.finish(idx);
+                    completed += 1;
+                    continue;
+                }
+                if done_once[idx] {
+                    // A stale completion slipped past the pool-level
+                    // dedup (should be impossible); count, don't
+                    // double-record.
+                    faults.dup_done += 1;
+                    continue;
+                }
+                done_once[idx] = true;
                 finished[idx] = done.finished_s;
                 spans[idx] = done.spans;
                 match done.result {
                     Ok(r) => reports[idx] = Some(r),
                     Err(e) => errors.push(format!("{}: {e}", self.spec.instances[idx].name)),
-                }
-                if let Some(h) = joins[idx].take() {
-                    let _ = h.join();
                 }
                 if let Some(wid) = assigned[idx].take() {
                     pool.release(wid);
@@ -402,6 +463,8 @@ impl Ensemble {
                 completed += 1;
             }
         }
+        faults.heartbeat_misses = pool.heartbeat_misses();
+        faults.dup_done += pool.dup_done();
 
         if !errors.is_empty() {
             return Err(WilkinsError::Task(format!(
@@ -435,6 +498,7 @@ impl Ensemble {
             rounds: sched.rounds(),
             instances,
             trace,
+            faults,
         })
     }
 
@@ -450,6 +514,7 @@ impl Ensemble {
         base_dir: &Path,
         artifacts: Option<&Path>,
         origin: Instant,
+        idem_key: u64,
         tx: mpsc::Sender<Completion>,
     ) -> Result<thread::JoinHandle<()>> {
         let inst = &self.spec.instances[idx];
@@ -465,6 +530,7 @@ impl Ensemble {
             workdir: parent.join(&inst.name).display().to_string(),
             artifacts: artifacts.map(|p| p.display().to_string()).unwrap_or_default(),
             time_scale: inst.time_scale.unwrap_or(self.time_scale),
+            idem_key,
         };
         thread::Builder::new()
             .name(format!("wk-ens-remote-{}", inst.name))

@@ -3,7 +3,7 @@
 
 use std::time::Duration;
 
-use crate::coordinator::RunReport;
+use crate::coordinator::{FaultStats, RunReport};
 use crate::metrics::MergedTrace;
 
 use super::scheduler::{Placement, Policy};
@@ -50,6 +50,10 @@ pub struct EnsembleReport {
     pub instances: Vec<InstanceReport>,
     /// Merged Gantt trace across all instances, on the ensemble clock.
     pub trace: MergedTrace,
+    /// Fault-tolerance engagement counters: worker losses survived,
+    /// re-dispatches, heartbeat misses, duplicate completions dropped.
+    /// All-zero on a healthy campaign.
+    pub faults: FaultStats,
 }
 
 impl EnsembleReport {
@@ -99,6 +103,9 @@ impl EnsembleReport {
                 i.report.bytes_sent,
                 shared
             ));
+        }
+        if self.faults.any() {
+            s.push_str(&self.faults.render_line());
         }
         s
     }

@@ -300,6 +300,38 @@ impl CoScheduler {
             }
         }
     }
+
+    /// A running instance's worker died under it: put the instance
+    /// back in line (its ranks and worker slot return immediately)
+    /// so a later round re-admits it onto a survivor. Pair with
+    /// [`CoScheduler::lose_worker_slot`] when the pool shrank.
+    pub fn requeue(&mut self, i: usize) {
+        debug_assert_eq!(self.state[i], InstState::Running, "requeue of non-running instance");
+        if self.state[i] == InstState::Running {
+            self.state[i] = InstState::Pending;
+            self.in_use -= self.ranks[i];
+            if self.worker_slots.is_some() {
+                self.workers_in_use -= 1;
+            }
+        }
+    }
+
+    /// A worker process died: the pool is one slot smaller from now
+    /// on (the paper's "worker churn shrinks the budget" stance —
+    /// the campaign degrades instead of failing). Never shrinks below
+    /// one; with zero live workers the *driver* fails the campaign,
+    /// because the scheduler alone cannot know whether survivors
+    /// remain.
+    pub fn lose_worker_slot(&mut self) {
+        if let Some(n) = self.worker_slots {
+            self.worker_slots = Some(n.saturating_sub(1).max(1));
+        }
+    }
+
+    /// Current worker-slot cap (`None` = thread placement).
+    pub fn worker_slots(&self) -> Option<usize> {
+        self.worker_slots
+    }
 }
 
 #[cfg(test)]
@@ -495,6 +527,63 @@ mod tests {
             .unwrap()
             .with_worker_slots(0)
             .is_err());
+    }
+
+    #[test]
+    fn requeue_returns_instance_to_pending() {
+        // Two slots, three instances. Instance 1's worker dies: its
+        // ranks and slot free immediately, the pool shrinks to one
+        // slot, and 1 is re-admitted later — exactly once.
+        let mut s = CoScheduler::new(8, Policy::Fifo, &all(3, 2))
+            .unwrap()
+            .with_worker_slots(2)
+            .unwrap();
+        assert_eq!(s.next_round(), vec![0, 1]);
+        s.requeue(1);
+        s.lose_worker_slot();
+        assert_eq!(s.worker_slots(), Some(1));
+        assert_eq!(s.in_use(), 2, "requeue released instance 1's ranks");
+        assert!(s.next_round().is_empty(), "survivor still busy with 0");
+        s.finish(0);
+        assert_eq!(s.next_round(), vec![1], "lost instance re-admitted first (FIFO)");
+        s.finish(1);
+        assert_eq!(s.next_round(), vec![2]);
+        s.finish(2);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn worker_slots_never_shrink_below_one() {
+        let mut s = CoScheduler::new(4, Policy::Fifo, &all(2, 1))
+            .unwrap()
+            .with_worker_slots(2)
+            .unwrap();
+        s.lose_worker_slot();
+        s.lose_worker_slot();
+        s.lose_worker_slot();
+        assert_eq!(s.worker_slots(), Some(1), "floor of one slot");
+        // And the remaining slot still schedules work.
+        assert_eq!(s.next_round(), vec![0]);
+    }
+
+    #[test]
+    fn requeue_then_rerun_completes_under_round_robin() {
+        let mut s = CoScheduler::new(4, Policy::RoundRobin, &all(4, 1))
+            .unwrap()
+            .with_worker_slots(3)
+            .unwrap();
+        let w1 = s.next_round();
+        assert_eq!(w1, vec![0, 1, 2]);
+        // Worker under instance 2 dies.
+        s.requeue(2);
+        s.lose_worker_slot();
+        s.finish(0);
+        s.finish(1);
+        // Both remaining instances eventually run on the shrunk pool.
+        let rest: Vec<usize> = run_to_completion(&mut s).into_iter().flatten().collect();
+        let mut sorted = rest.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![2, 3], "requeued + tail instance both ran");
     }
 
     #[test]

@@ -30,8 +30,12 @@ use crate::config::{get_usize, WorkflowConfig};
 use crate::configyaml::{self, Yaml};
 use crate::error::{Result, WilkinsError};
 use crate::flow::FlowControl;
+use crate::net::HeartbeatConfig;
 
 use super::scheduler::{Placement, Policy};
+
+/// Default per-instance re-dispatch budget after a worker loss.
+pub const DEFAULT_RETRIES: usize = 2;
 
 /// Upper bound on `admission: N` throttle periods. Scheduling rounds
 /// happen at startup, on every instance completion, and at ~1 kHz
@@ -75,6 +79,12 @@ pub struct EnsembleSpec {
     pub workers: Option<usize>,
     /// Ensemble workdir; every instance runs in `<workdir>/<name>`.
     pub workdir: Option<String>,
+    /// How many times one instance may be re-dispatched after its
+    /// worker dies (`retries:`, process placement only).
+    pub retries: usize,
+    /// Worker liveness cadence for process placement (`heartbeat:`
+    /// mapping; defaults apply when absent).
+    pub heartbeat: HeartbeatConfig,
     pub instances: Vec<InstanceSpec>,
 }
 
@@ -135,6 +145,29 @@ fn from_doc(doc: &Yaml, base_dir: &Path) -> Result<EnsembleSpec> {
         .get("workdir")
         .and_then(Yaml::as_str)
         .map(str::to_string);
+    let retries = get_usize(ens, "retries")?.unwrap_or(DEFAULT_RETRIES);
+    let heartbeat = match ens.get("heartbeat") {
+        None => HeartbeatConfig::default(),
+        Some(hb) => {
+            if hb.as_map().is_none() {
+                return Err(WilkinsError::Config(
+                    "`heartbeat` must be a mapping with `interval_ms` (and optionally `deadline_ms`)"
+                        .into(),
+                ));
+            }
+            let interval = get_usize(hb, "interval_ms")?.ok_or_else(|| {
+                WilkinsError::Config("`heartbeat` mapping needs `interval_ms`".into())
+            })? as u64;
+            let deadline = match get_usize(hb, "deadline_ms")? {
+                Some(d) => d as u64,
+                // Default deadline: the pool's stock multiple of the
+                // chosen interval (20x, matching HeartbeatConfig's
+                // 250ms/5s defaults).
+                None => interval.saturating_mul(20),
+            };
+            HeartbeatConfig::from_millis(interval, deadline)?
+        }
+    };
 
     let insts_y = ens
         .get("instances")
@@ -176,7 +209,7 @@ fn from_doc(doc: &Yaml, base_dir: &Path) -> Result<EnsembleSpec> {
         }
     }
 
-    Ok(EnsembleSpec { max_ranks, policy, placement, workers, workdir, instances })
+    Ok(EnsembleSpec { max_ranks, policy, placement, workers, workdir, retries, heartbeat, instances })
 }
 
 /// The base workflow named by a spec level (`tasks:` inline wins over
@@ -418,6 +451,48 @@ ensemble:
             "  policy: round-robin\n  workers: 0\n",
         );
         assert!(EnsembleSpec::from_yaml_str(&zero_workers, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn parses_retries_and_heartbeat() {
+        let spec = EnsembleSpec::from_yaml_str(&inline_spec(), Path::new(".")).unwrap();
+        assert_eq!(spec.retries, DEFAULT_RETRIES);
+        assert_eq!(spec.heartbeat, HeartbeatConfig::default());
+
+        let tuned = inline_spec().replace(
+            "  policy: round-robin\n",
+            "  policy: round-robin\n  retries: 0\n  heartbeat: { interval_ms: 50, deadline_ms: 400 }\n",
+        );
+        let spec = EnsembleSpec::from_yaml_str(&tuned, Path::new(".")).unwrap();
+        assert_eq!(spec.retries, 0);
+        assert_eq!(spec.heartbeat, HeartbeatConfig::from_millis(50, 400).unwrap());
+
+        // Deadline defaults to 20x the interval; interval 0 disables.
+        let defaulted = inline_spec().replace(
+            "  policy: round-robin\n",
+            "  policy: round-robin\n  heartbeat: { interval_ms: 100 }\n",
+        );
+        let spec = EnsembleSpec::from_yaml_str(&defaulted, Path::new(".")).unwrap();
+        assert_eq!(spec.heartbeat, HeartbeatConfig::from_millis(100, 2000).unwrap());
+        let off = inline_spec().replace(
+            "  policy: round-robin\n",
+            "  policy: round-robin\n  heartbeat: { interval_ms: 0 }\n",
+        );
+        let spec = EnsembleSpec::from_yaml_str(&off, Path::new(".")).unwrap();
+        assert!(spec.heartbeat.interval.is_zero(), "interval 0 disables liveness");
+
+        // A deadline shorter than two intervals is a config error, as
+        // is a bare scalar instead of the mapping.
+        let tight = inline_spec().replace(
+            "  policy: round-robin\n",
+            "  policy: round-robin\n  heartbeat: { interval_ms: 100, deadline_ms: 150 }\n",
+        );
+        assert!(EnsembleSpec::from_yaml_str(&tight, Path::new(".")).is_err());
+        let scalar = inline_spec().replace(
+            "  policy: round-robin\n",
+            "  policy: round-robin\n  heartbeat: 100\n",
+        );
+        assert!(EnsembleSpec::from_yaml_str(&scalar, Path::new(".")).is_err());
     }
 
     #[test]

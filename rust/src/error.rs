@@ -32,6 +32,12 @@ pub enum WilkinsError {
     /// Task-code registry / execution errors.
     Task(String),
 
+    /// A pool worker died or stopped heartbeating while the
+    /// coordinator waited on it. Distinguished from `Comm` so the
+    /// ensemble driver can requeue the lost worker's in-flight
+    /// instance instead of failing the campaign.
+    WorkerLost(String),
+
     /// PJRT runtime errors (artifact missing, shape mismatch, ...).
     Runtime(String),
 
@@ -54,6 +60,7 @@ impl fmt::Display for WilkinsError {
             WilkinsError::LowFive(m) => write!(f, "lowfive error: {m}"),
             WilkinsError::EndOfStream => write!(f, "end of stream"),
             WilkinsError::Task(m) => write!(f, "task error: {m}"),
+            WilkinsError::WorkerLost(m) => write!(f, "worker lost: {m}"),
             WilkinsError::Runtime(m) => write!(f, "runtime error: {m}"),
             // Transparent, like thiserror's #[error(transparent)].
             WilkinsError::Io(e) => e.fmt(f),

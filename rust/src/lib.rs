@@ -54,6 +54,6 @@ pub mod runtime;
 pub mod sim;
 pub mod tasks;
 
-pub use coordinator::{RunReport, Wilkins};
+pub use coordinator::{FaultStats, RunReport, Wilkins};
 pub use ensemble::{Ensemble, EnsembleReport, EnsembleSpec};
 pub use error::{Result, WilkinsError};

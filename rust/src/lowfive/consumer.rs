@@ -289,13 +289,31 @@ impl ConsumerEngine {
         attrs.retain(|(k, _)| k != DISK_VERSION_ATTR);
         let mut local = None;
         if let Some(v) = disk_version {
-            let deadline = Instant::now() + crate::comm::RECV_TIMEOUT;
+            let deadline = Instant::now() + filemode::poll_timeout();
+            // On timeout, name the datasets this wait was for — "which
+            // inport starved" is the first question a stuck-campaign
+            // triage asks.
+            let ch = &self.channels[idx];
+            let file_only: Vec<&str> = ch
+                .routes
+                .entries()
+                .iter()
+                .map(|(name, _)| name.as_str())
+                .filter(|n| ch.routes.archives_to_disk(n) && !ch.routes.delivers_in_memory(n))
+                .collect();
             let file = filemode::poll_file_exact(
                 cx.workdir,
                 &self.channels[idx].pattern,
                 v as u64,
                 deadline,
-            )?;
+            )
+            .map_err(|e| {
+                WilkinsError::LowFive(format!(
+                    "file-routed dataset(s) [{}] of inport {}: {e}",
+                    file_only.join(", "),
+                    self.channels[idx].pattern
+                ))
+            })?;
             for d in file.datasets.values() {
                 // Memory wins for write-through datasets present on
                 // both transports; disk supplies the file-only rest.
@@ -326,13 +344,23 @@ impl ConsumerEngine {
         idx: usize,
         min_version: u64,
     ) -> Result<Option<String>> {
-        let deadline = Instant::now() + crate::comm::RECV_TIMEOUT;
+        let deadline = Instant::now() + filemode::poll_timeout();
         let found = filemode::poll_file(
             cx.workdir,
             &self.channels[idx].pattern,
             min_version,
             deadline,
-        )?;
+        )
+        .map_err(|e| {
+            let ch = &self.channels[idx];
+            let dsets: Vec<&str> =
+                ch.routes.entries().iter().map(|(name, _)| name.as_str()).collect();
+            WilkinsError::LowFive(format!(
+                "file-mode inport {} (dataset(s) [{}]): {e}",
+                ch.pattern,
+                dsets.join(", ")
+            ))
+        })?;
         match found {
             Some((file, version)) => {
                 self.channels[idx].last_version = version;

@@ -24,6 +24,22 @@ const MAGIC: &[u8; 4] = b"WLF5";
 /// busy-spinning a core at a fixed 1 ms cadence.
 const MAX_POLL_BACKOFF: Duration = Duration::from_millis(20);
 
+/// How long consumer polls wait before declaring the producer dead:
+/// `WILKINS_FILE_TIMEOUT_S` seconds when set to a positive integer,
+/// else the comm layer's [`RECV_TIMEOUT`](crate::comm::RECV_TIMEOUT).
+/// An unparsable value falls back to the default rather than erroring
+/// — a consumer deep in a run has no good way to surface a config
+/// error, and an unbounded wait would be worse.
+pub fn poll_timeout() -> Duration {
+    match std::env::var("WILKINS_FILE_TIMEOUT_S") {
+        Ok(v) => match v.trim().parse::<u64>() {
+            Ok(s) if s > 0 => Duration::from_secs(s),
+            _ => crate::comm::RECV_TIMEOUT,
+        },
+        Err(_) => crate::comm::RECV_TIMEOUT,
+    }
+}
+
 /// Capacity hint for encoding (a filtered view of) `file`: the data
 /// bytes plus a generous per-item allowance for names, slab headers
 /// and attrs, so pooled encode leases are not outgrown by

@@ -287,7 +287,7 @@ fn cmd_ensemble(args: &[String]) -> wilkins::Result<()> {
             .filter(|p| !p.as_os_str().is_empty())
             .map(Path::to_path_buf)
             .unwrap_or_else(|| PathBuf::from("."));
-        let pool = Arc::new(WorkerPool::spawn(pool_width)?);
+        let pool = Arc::new(WorkerPool::spawn_with(pool_width, ens.spec().heartbeat)?);
         let art = artifacts.join("manifest.tsv").exists().then_some(artifacts.as_path());
         ens.run_on_pool(pool, &spec_src, &base_dir, art)?
     } else {
@@ -348,7 +348,7 @@ fn cmd_up(args: &[String]) -> wilkins::Result<()> {
             .filter(|p| !p.as_os_str().is_empty())
             .map(Path::to_path_buf)
             .unwrap_or_else(|| PathBuf::from("."));
-        let pool = Arc::new(WorkerPool::spawn(workers)?);
+        let pool = Arc::new(WorkerPool::spawn_with(workers, ens.spec().heartbeat)?);
         let art = artifacts.join("manifest.tsv").exists().then_some(artifacts.as_path());
         let report = ens.run_on_pool(pool, &src, &base_dir, art)?;
         print!("{}", report.render());
@@ -374,6 +374,7 @@ fn cmd_up(args: &[String]) -> wilkins::Result<()> {
         time_scale,
         workdir,
         artifacts: Some(artifacts),
+        heartbeat: wilkins::net::HeartbeatConfig::default(),
     };
     let report = net::run_workflow_distributed(&src, &opts)?;
     print!("{}", report.render());
@@ -393,5 +394,11 @@ fn cmd_worker(args: &[String]) -> wilkins::Result<()> {
     let id = take_usize_opt(&mut args, "--id")?.ok_or_else(|| {
         wilkins::WilkinsError::Config("worker needs --id K".into())
     })?;
-    net::worker_main(&connect, id)
+    let mut opts = net::WorkerOpts::from_env()?;
+    if let Some(ms) = take_usize_opt(&mut args, "--heartbeat-ms")? {
+        // The coordinator prescribes the beat cadence it will listen
+        // for (0 = liveness off).
+        opts.heartbeat = std::time::Duration::from_millis(ms as u64);
+    }
+    net::worker_main_with(&connect, id, opts)
 }

@@ -26,6 +26,7 @@
 //!   prove partial reads can never tear or reorder a frame.
 
 use std::io::{IoSlice, Read, Write};
+use std::time::Instant;
 
 use crate::comm::buf::{self, Payload};
 use crate::error::{Result, WilkinsError};
@@ -193,6 +194,164 @@ pub fn read_frame_payload<R: Read>(r: &mut R) -> Result<Option<(u8, Payload)>> {
         )));
     }
     Ok(Some((kind, lease.finish())))
+}
+
+/// Is this io error a read-timeout tick (the socket had a read
+/// timeout set and nothing arrived)? Unix reports `WouldBlock`,
+/// Windows `TimedOut`; both mean "no bytes yet", not "link broken".
+pub fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// One observation from a timed frame read.
+#[derive(Debug)]
+pub enum TimedRead<T> {
+    /// A complete frame arrived.
+    Frame(T),
+    /// The read timeout elapsed with *zero* bytes of the next frame —
+    /// the link is quiet but not desynced. Callers use these ticks to
+    /// check liveness deadlines, then call again.
+    Idle,
+    /// Clean EOF at a frame boundary.
+    Eof,
+}
+
+/// Timed read of one frame for liveness-aware receivers. The caller
+/// must have armed `set_read_timeout` on the underlying stream; each
+/// timeout with no bytes pending surfaces as [`TimedRead::Idle`].
+///
+/// Desync safety: a timeout *inside* a frame (header or body started
+/// but incomplete) never returns `Idle` — dropping a half-read frame
+/// would desync the stream. Instead the partial read retries in place
+/// until `frame_deadline`, then errors: a peer that starts a frame
+/// and stalls past the liveness deadline is wedged, not slow.
+pub fn read_frame_timed<R: Read>(
+    r: &mut R,
+    frame_deadline: Instant,
+) -> Result<TimedRead<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(TimedRead::Eof);
+                }
+                return Err(WilkinsError::Comm(format!(
+                    "socket closed inside a frame header ({got}/{HEADER_LEN} bytes)"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                if got == 0 {
+                    return Ok(TimedRead::Idle);
+                }
+                if Instant::now() >= frame_deadline {
+                    return Err(WilkinsError::Comm(format!(
+                        "peer wedged mid-frame ({got}/{HEADER_LEN} header bytes, \
+                         no progress before deadline)"
+                    )));
+                }
+            }
+            Err(e) => return Err(WilkinsError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+    let kind = header[4];
+    if len > MAX_FRAME {
+        return Err(WilkinsError::Comm(format!(
+            "frame header claims {len} bytes (> MAX_FRAME): stream desync?"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    read_body_timed(r, &mut body, frame_deadline)?;
+    Ok(TimedRead::Frame((kind, body)))
+}
+
+/// Timed pooled read of one frame — [`read_frame_payload`] with the
+/// [`read_frame_timed`] liveness rules, for the data pump. The body
+/// still lands in a recycled pool buffer (zero-fill, then timed exact
+/// read; the fill is the price of restartable reads).
+pub fn read_frame_payload_timed<R: Read>(
+    r: &mut R,
+    frame_deadline: Instant,
+) -> Result<TimedRead<(u8, Payload)>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(TimedRead::Eof);
+                }
+                return Err(WilkinsError::Comm(format!(
+                    "socket closed inside a frame header ({got}/{HEADER_LEN} bytes)"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                if got == 0 {
+                    return Ok(TimedRead::Idle);
+                }
+                if Instant::now() >= frame_deadline {
+                    return Err(WilkinsError::Comm(format!(
+                        "peer wedged mid-frame ({got}/{HEADER_LEN} header bytes, \
+                         no progress before deadline)"
+                    )));
+                }
+            }
+            Err(e) => return Err(WilkinsError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+    let kind = header[4];
+    if len > MAX_FRAME {
+        return Err(WilkinsError::Comm(format!(
+            "frame header claims {len} bytes (> MAX_FRAME): stream desync?"
+        )));
+    }
+    let mut lease = buf::pool().lease(len);
+    lease.resize(len, 0);
+    read_body_timed(r, &mut lease, frame_deadline)?;
+    Ok(TimedRead::Frame((kind, lease.finish())))
+}
+
+/// Read exactly `buf.len()` body bytes, retrying timeout ticks until
+/// `frame_deadline` (the frame has started, so giving up mid-body
+/// would desync the stream — only a wedge deadline ends the wait).
+fn read_body_timed<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    frame_deadline: Instant,
+) -> Result<()> {
+    let len = buf.len();
+    let mut got = 0usize;
+    while got < len {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(WilkinsError::Comm(format!(
+                    "socket closed inside a frame body ({got}/{len} bytes)"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                if Instant::now() >= frame_deadline {
+                    return Err(WilkinsError::Comm(format!(
+                        "peer wedged mid-frame ({got}/{len} body bytes, \
+                         no progress before deadline)"
+                    )));
+                }
+            }
+            Err(e) => return Err(WilkinsError::Io(e)),
+        }
+    }
+    Ok(())
 }
 
 /// Incremental frame decoder: feed byte chunks of any size (including

@@ -1,0 +1,243 @@
+//! Deterministic fault injection for the multi-process substrate.
+//!
+//! The verification suite (`rust/tests/faults.rs`) and the CI chaos
+//! smoke need to make workers die, wedge, stall, and misbehave *on
+//! cue*. This module is the one seam they drive: a [`FaultPlan`]
+//! parsed from the `WILKINS_FAULT` environment variable (or built
+//! directly in tests) that the worker serve loop consults at its
+//! protocol edges. With the variable unset the plan is empty and
+//! every hook is a no-op — production behavior is untouched.
+//!
+//! Grammar (`;`-separated directives):
+//!
+//! ```text
+//! WILKINS_FAULT="kind@worker[:key=value,...][;...]"
+//! ```
+//!
+//! | kind        | effect at the worker's control seam                    |
+//! |-------------|--------------------------------------------------------|
+//! | `kill`      | drop the control + mesh connections abruptly (or       |
+//! |             | `process::exit(9)` when `WILKINS_FAULT_HARD=1`)        |
+//! | `wedge`     | stop heartbeating and go silent without closing        |
+//! | `delay`     | sleep `ms=N` before serving the command                |
+//! | `dup-done`  | send the `InstanceDone` reply twice                    |
+//! | `drop-done` | run the instance but suppress the reply, then wedge    |
+//!
+//! Every directive takes `after=N` (default 0): fire on the
+//! (N+1)-th `RunInstance` this worker receives. Example: kill worker
+//! 1 on its second instance, delay worker 2's first by 50 ms:
+//!
+//! ```text
+//! WILKINS_FAULT="kill@1:after=1;delay@2:ms=50"
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Result, WilkinsError};
+
+/// What a triggered directive does to the worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Die abruptly: close the control connection (and the process,
+    /// under `WILKINS_FAULT_HARD=1`) without any goodbye.
+    Kill,
+    /// Go silent: stop heartbeating and never answer again, but keep
+    /// the connection open — the "wedged peer" a plain EOF check
+    /// cannot detect.
+    Wedge,
+    /// Sleep this many milliseconds before serving the command.
+    Delay(u64),
+    /// Serve the instance, then send the `InstanceDone` reply twice.
+    DupDone,
+    /// Serve the instance but suppress the reply, then wedge: work
+    /// completed, acknowledgement lost — the case idempotency keys
+    /// exist for.
+    DropDone,
+}
+
+/// One parsed `kind@worker[:k=v,...]` directive.
+#[derive(Debug, Clone, Copy)]
+struct Directive {
+    worker: usize,
+    kind: FaultKind,
+    /// Fire on the (after+1)-th RunInstance.
+    after: u64,
+}
+
+/// A worker's fault schedule: which directives target it and how many
+/// commands it has served. Shared with the worker's heartbeat thread,
+/// so "stop beating" is one atomic flag away.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    directives: Vec<Directive>,
+    /// RunInstance commands this worker has received so far.
+    seen: AtomicU64,
+    /// Set once a Wedge/DropDone fires: the heartbeat thread checks
+    /// it and falls silent.
+    silenced: std::sync::atomic::AtomicBool,
+}
+
+impl FaultPlan {
+    /// The empty plan: every hook is a no-op.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Parse a `WILKINS_FAULT` value. Empty input is the empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut directives = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            directives.push(parse_directive(part)?);
+        }
+        Ok(FaultPlan { directives, ..FaultPlan::default() })
+    }
+
+    /// The plan the environment prescribes for this process (empty
+    /// unless `WILKINS_FAULT` is set). A malformed value is a hard
+    /// error: a chaos test with a typo'd fault spec must fail loudly,
+    /// not run green without injecting anything.
+    pub fn from_env() -> Result<FaultPlan> {
+        match std::env::var("WILKINS_FAULT") {
+            Ok(v) if !v.trim().is_empty() => FaultPlan::parse(&v),
+            _ => Ok(FaultPlan::none()),
+        }
+    }
+
+    /// Does any directive target `worker` at all? (Lets tests assert
+    /// their spec reached the right process.)
+    pub fn targets(&self, worker: usize) -> bool {
+        self.directives.iter().any(|d| d.worker == worker)
+    }
+
+    /// Called by the worker on each `RunInstance` receipt: returns the
+    /// directive that fires now, if any. Counts the command either
+    /// way.
+    pub fn on_run_instance(&self, worker: usize) -> Option<FaultKind> {
+        let n = self.seen.fetch_add(1, Ordering::SeqCst);
+        let kind = self
+            .directives
+            .iter()
+            .find(|d| d.worker == worker && d.after == n)
+            .map(|d| d.kind);
+        if matches!(kind, Some(FaultKind::Wedge) | Some(FaultKind::DropDone)) {
+            self.silenced.store(true, Ordering::SeqCst);
+        }
+        kind
+    }
+
+    /// Has a fired directive silenced this worker (heartbeats must
+    /// stop)?
+    pub fn silenced(&self) -> bool {
+        self.silenced.load(Ordering::SeqCst)
+    }
+
+    /// Silence the worker directly (used by kill emulation in
+    /// threaded tests, where there is no process to exit).
+    pub fn silence(&self) {
+        self.silenced.store(true, Ordering::SeqCst);
+    }
+}
+
+fn parse_directive(part: &str) -> Result<Directive> {
+    let bad = |why: &str| {
+        WilkinsError::Config(format!("bad WILKINS_FAULT directive `{part}`: {why}"))
+    };
+    let (head, opts) = match part.split_once(':') {
+        Some((h, o)) => (h, Some(o)),
+        None => (part, None),
+    };
+    let (kind_s, worker_s) = head
+        .split_once('@')
+        .ok_or_else(|| bad("expected `kind@worker`"))?;
+    let worker: usize = worker_s
+        .trim()
+        .parse()
+        .map_err(|_| bad("worker id must be an integer"))?;
+    let mut after = 0u64;
+    let mut ms: Option<u64> = None;
+    if let Some(opts) = opts {
+        for kv in opts.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv.split_once('=').ok_or_else(|| bad("options are `key=value`"))?;
+            match k.trim() {
+                "after" => {
+                    after = v.trim().parse().map_err(|_| bad("after must be an integer"))?;
+                }
+                "ms" => {
+                    ms = Some(v.trim().parse().map_err(|_| bad("ms must be an integer"))?);
+                }
+                other => return Err(bad(&format!("unknown option `{other}`"))),
+            }
+        }
+    }
+    let kind = match kind_s.trim() {
+        "kill" => FaultKind::Kill,
+        "wedge" => FaultKind::Wedge,
+        "delay" => FaultKind::Delay(ms.ok_or_else(|| bad("delay needs ms=N"))?),
+        "dup-done" => FaultKind::DupDone,
+        "drop-done" => FaultKind::DropDone,
+        other => return Err(bad(&format!("unknown fault kind `{other}`"))),
+    };
+    Ok(Directive { worker, kind, after })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_no_op() {
+        let plan = FaultPlan::parse("").unwrap();
+        assert!(!plan.targets(0));
+        assert_eq!(plan.on_run_instance(0), None);
+        assert!(!plan.silenced());
+    }
+
+    #[test]
+    fn kill_fires_on_scheduled_command() {
+        let plan = FaultPlan::parse("kill@1:after=1").unwrap();
+        assert!(plan.targets(1));
+        assert_eq!(plan.on_run_instance(1), None); // command 0
+        assert_eq!(plan.on_run_instance(1), Some(FaultKind::Kill)); // command 1
+        assert_eq!(plan.on_run_instance(1), None); // command 2
+    }
+
+    #[test]
+    fn directives_only_hit_their_worker() {
+        let plan = FaultPlan::parse("delay@2:ms=50").unwrap();
+        assert_eq!(plan.on_run_instance(0), None);
+        let plan2 = FaultPlan::parse("delay@2:ms=50").unwrap();
+        assert_eq!(plan2.on_run_instance(2), Some(FaultKind::Delay(50)));
+    }
+
+    #[test]
+    fn wedge_and_drop_done_silence_heartbeats() {
+        let plan = FaultPlan::parse("wedge@0").unwrap();
+        assert!(!plan.silenced());
+        assert_eq!(plan.on_run_instance(0), Some(FaultKind::Wedge));
+        assert!(plan.silenced());
+
+        let plan = FaultPlan::parse("drop-done@3").unwrap();
+        assert_eq!(plan.on_run_instance(3), Some(FaultKind::DropDone));
+        assert!(plan.silenced());
+    }
+
+    #[test]
+    fn multiple_directives_parse() {
+        let plan = FaultPlan::parse("kill@1:after=1; dup-done@0 ;delay@2:ms=5,after=3").unwrap();
+        assert!(plan.targets(0) && plan.targets(1) && plan.targets(2));
+    }
+
+    #[test]
+    fn malformed_specs_error() {
+        for bad in [
+            "kill",             // no @worker
+            "kill@x",           // non-numeric worker
+            "explode@1",        // unknown kind
+            "delay@1",          // delay without ms
+            "kill@1:after=abc", // non-numeric after
+            "kill@1:nope=3",    // unknown option
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+}

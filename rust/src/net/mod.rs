@@ -34,8 +34,18 @@
 //!   [`RunReport`](crate::coordinator::RunReport)
 //!   (`process-per-node` placement).
 //!
+//! * [`faults`] — deterministic fault injection (`WILKINS_FAULT=`)
+//!   driven by the verification suite and the CI chaos smoke; a
+//!   no-op unless explicitly armed.
+//!
 //! Ensemble `process-per-instance` placement builds on the same pool
 //! from [`Ensemble::run_on_pool`](crate::ensemble::Ensemble::run_on_pool).
+//!
+//! Liveness: every control and mesh link carries periodic
+//! [`Heartbeat`](proto::Heartbeat) frames, and every liveness-aware
+//! receive uses timed reads ([`codec::read_frame_timed`]) so a dead
+//! or wedged peer is detected within a configurable deadline instead
+//! of parking the coordinator forever (see `docs/fault-tolerance.md`).
 //!
 //! Everything above `comm/` — `henson::drive_rank`, `lowfive::Vol`,
 //! `flow::`, collectives — runs unmodified on remote ranks: the only
@@ -44,6 +54,7 @@
 //! bytes.
 
 pub mod codec;
+pub mod faults;
 pub mod pool;
 pub mod proto;
 pub mod rendezvous;
@@ -51,10 +62,11 @@ pub mod transport;
 pub mod up;
 pub mod worker;
 
-pub use pool::WorkerPool;
+pub use faults::{FaultKind, FaultPlan};
+pub use pool::{HeartbeatConfig, WorkerPool};
 pub use transport::SocketTransport;
 pub use up::{run_workflow_distributed, UpOpts};
-pub use worker::worker_main;
+pub use worker::{worker_main, worker_main_with, WorkerOpts};
 
 #[cfg(test)]
 mod tests;

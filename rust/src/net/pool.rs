@@ -7,14 +7,78 @@
 //! `process-per-instance` placement treats it as a bank of
 //! single-instance executors ([`WorkerPool::run_instance`] behind
 //! [`WorkerPool::acquire`]/[`WorkerPool::release`]).
+//!
+//! Liveness: workers beat on their control sockets
+//! ([`proto::Heartbeat`]) and every pool receive is a timed read, so
+//! a worker that dies or wedges surfaces as
+//! [`WilkinsError::WorkerLost`] within the configured deadline
+//! instead of parking the coordinator forever. A lost worker is
+//! marked dead and never returns to the free list; its in-flight
+//! instance is the ensemble driver's to requeue.
 
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::error::{Result, WilkinsError};
 
+use super::codec::{self, TimedRead};
 use super::proto::{self, InstanceDone, LaunchWorld, RunInstance, WorldDone};
 use super::rendezvous::{Rendezvous, WorkerLink};
+
+/// Heartbeat cadence of one link: how often the sender beats and how
+/// much silence the receiver tolerates before declaring the peer
+/// dead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeartbeatConfig {
+    /// Beat period. Zero disables liveness entirely (blocking reads,
+    /// the pre-v5 behavior).
+    pub interval: Duration,
+    /// Silence longer than this kills the link. Must be at least two
+    /// intervals, or scheduling jitter alone would kill healthy
+    /// links.
+    pub deadline: Duration,
+}
+
+impl Default for HeartbeatConfig {
+    fn default() -> HeartbeatConfig {
+        HeartbeatConfig {
+            interval: Duration::from_millis(250),
+            deadline: Duration::from_secs(5),
+        }
+    }
+}
+
+impl HeartbeatConfig {
+    /// No liveness: every read blocks forever (the pre-v5 contract).
+    pub fn disabled() -> HeartbeatConfig {
+        HeartbeatConfig { interval: Duration::ZERO, deadline: Duration::ZERO }
+    }
+
+    /// Is liveness checking on?
+    pub fn enabled(&self) -> bool {
+        !self.interval.is_zero()
+    }
+
+    /// Build from the YAML/CLI millisecond form, validating the
+    /// deadline ≥ 2·interval invariant.
+    pub fn from_millis(interval_ms: u64, deadline_ms: u64) -> Result<HeartbeatConfig> {
+        if interval_ms == 0 {
+            return Ok(HeartbeatConfig::disabled());
+        }
+        if deadline_ms < interval_ms.saturating_mul(2) {
+            return Err(WilkinsError::Config(format!(
+                "heartbeat deadline_ms ({deadline_ms}) must be at least twice \
+                 interval_ms ({interval_ms}) or jitter alone would kill healthy links"
+            )));
+        }
+        Ok(HeartbeatConfig {
+            interval: Duration::from_millis(interval_ms),
+            deadline: Duration::from_millis(deadline_ms),
+        })
+    }
+}
 
 pub struct WorkerPool {
     links: Vec<Mutex<WorkerLink>>,
@@ -22,6 +86,15 @@ pub struct WorkerPool {
     free: Mutex<Vec<usize>>,
     children: Mutex<Vec<Child>>,
     down: Mutex<bool>,
+    heartbeat: HeartbeatConfig,
+    /// Workers declared dead (closed or past-deadline silent); never
+    /// handed out again.
+    dead: Vec<AtomicBool>,
+    /// Idle ticks where a worker went ≥ 2 intervals without traffic
+    /// yet later proved alive.
+    heartbeat_misses: AtomicU64,
+    /// Stale `InstanceDone` replies dropped by the idempotency check.
+    dup_done: AtomicU64,
 }
 
 impl WorkerPool {
@@ -31,6 +104,12 @@ impl WorkerPool {
     /// leading `worker` argument to [`super::worker_main`] — the
     /// `wilkins` CLI and the ensemble bench both do.
     pub fn spawn(n: usize) -> Result<WorkerPool> {
+        WorkerPool::spawn_with(n, HeartbeatConfig::default())
+    }
+
+    /// [`WorkerPool::spawn`] with an explicit heartbeat cadence
+    /// (propagated to the workers via `--heartbeat-ms`).
+    pub fn spawn_with(n: usize, heartbeat: HeartbeatConfig) -> Result<WorkerPool> {
         if n == 0 {
             return Err(WilkinsError::Config("worker pool needs >= 1 worker".into()));
         }
@@ -45,6 +124,8 @@ impl WorkerPool {
                 .arg(rdv.addr())
                 .arg("--id")
                 .arg(id.to_string())
+                .arg("--heartbeat-ms")
+                .arg(heartbeat.interval.as_millis().to_string())
                 .stdin(Stdio::null())
                 .stdout(Stdio::null())
                 .spawn()
@@ -52,18 +133,86 @@ impl WorkerPool {
             children.push(child);
         }
         let links = rdv.accept_workers(n)?;
+        Ok(WorkerPool::assemble(links, children, heartbeat))
+    }
+
+    /// Host a pool whose workers the *caller* launches — typically
+    /// [`super::worker_main_with`] on threads of this very process,
+    /// which is how the fault-injection tests run emulated workers
+    /// (integration-test binaries cannot re-exec themselves in worker
+    /// mode; their `main` belongs to the test harness). `launch` is
+    /// called once per worker id with the rendezvous address and must
+    /// get a worker connecting to it.
+    pub fn host<F>(n: usize, heartbeat: HeartbeatConfig, mut launch: F) -> Result<WorkerPool>
+    where
+        F: FnMut(&str, usize),
+    {
+        if n == 0 {
+            return Err(WilkinsError::Config("worker pool needs >= 1 worker".into()));
+        }
+        let rdv = Rendezvous::bind()?;
+        for id in 0..n {
+            launch(rdv.addr(), id);
+        }
+        let links = rdv.accept_workers(n)?;
+        Ok(WorkerPool::assemble(links, Vec::new(), heartbeat))
+    }
+
+    fn assemble(
+        links: Vec<WorkerLink>,
+        children: Vec<Child>,
+        heartbeat: HeartbeatConfig,
+    ) -> WorkerPool {
+        let n = links.len();
         let peer_addrs = links.iter().map(|l| l.peer_addr.clone()).collect();
-        Ok(WorkerPool {
+        WorkerPool {
             links: links.into_iter().map(Mutex::new).collect(),
             peer_addrs,
             free: Mutex::new((0..n).rev().collect()),
             children: Mutex::new(children),
             down: Mutex::new(false),
-        })
+            heartbeat,
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            heartbeat_misses: AtomicU64::new(0),
+            dup_done: AtomicU64::new(0),
+        }
     }
 
     pub fn size(&self) -> usize {
         self.links.len()
+    }
+
+    /// Workers not (yet) declared dead.
+    pub fn alive(&self) -> usize {
+        self.dead.iter().filter(|d| !d.load(Ordering::SeqCst)).count()
+    }
+
+    /// Has this worker been declared dead?
+    pub fn is_dead(&self, id: usize) -> bool {
+        self.dead[id].load(Ordering::SeqCst)
+    }
+
+    /// Declare a worker dead: it never returns to the free list and
+    /// every subsequent `run_instance` on it fails fast.
+    pub fn mark_dead(&self, id: usize) {
+        self.dead[id].store(true, Ordering::SeqCst);
+    }
+
+    /// The pool's heartbeat cadence.
+    pub fn heartbeat(&self) -> HeartbeatConfig {
+        self.heartbeat
+    }
+
+    /// Idle ticks where a worker went ≥ 2 beat intervals silent but
+    /// later proved alive (zero on a healthy pool).
+    pub fn heartbeat_misses(&self) -> u64 {
+        self.heartbeat_misses.load(Ordering::SeqCst)
+    }
+
+    /// Stale `InstanceDone` replies dropped by the idempotency-key
+    /// check instead of being double-counted.
+    pub fn dup_done(&self) -> u64 {
+        self.dup_done.load(Ordering::SeqCst)
     }
 
     /// Peer-mesh endpoint per worker id (the `LaunchWorld` endpoint
@@ -72,28 +221,123 @@ impl WorkerPool {
         &self.peer_addrs
     }
 
-    /// Take an idle worker id, if any.
+    /// Take an idle worker id, if any. Dead workers are skimmed off
+    /// rather than handed out (a worker can die while idle).
     pub fn acquire(&self) -> Option<usize> {
-        self.free.lock().unwrap().pop()
+        let mut free = self.free.lock().unwrap();
+        while let Some(id) = free.pop() {
+            if !self.is_dead(id) {
+                return Some(id);
+            }
+        }
+        None
     }
 
-    /// Return a worker id to the idle set.
+    /// Return a worker id to the idle set (dead workers stay out).
     pub fn release(&self, id: usize) {
-        self.free.lock().unwrap().push(id);
+        if !self.is_dead(id) {
+            self.free.lock().unwrap().push(id);
+        }
+    }
+
+    /// Receive the next *command-level* frame on `link`, skimming
+    /// heartbeat frames and enforcing the liveness deadline. With
+    /// heartbeats disabled this is the historical blocking `recv`.
+    fn recv_live(&self, link: &mut WorkerLink) -> Result<(u8, Vec<u8>)> {
+        let hb = self.heartbeat;
+        if !hb.enabled() {
+            return link.recv();
+        }
+        let id = link.id;
+        link.conn
+            .set_read_timeout(Some(hb.interval))
+            .map_err(|e| WilkinsError::Comm(format!("set_read_timeout: {e}")))?;
+        // The liveness clock starts at recv entry: a worker quietly
+        // idle *between* our commands owes us nothing.
+        let mut last_alive = Instant::now();
+        let mut missed_since_alive = 0u32;
+        let out = loop {
+            match codec::read_frame_timed(&mut link.conn, Instant::now() + hb.deadline) {
+                Ok(TimedRead::Frame((kind, body))) => {
+                    if kind == proto::K_HEARTBEAT {
+                        last_alive = Instant::now();
+                        missed_since_alive = 0;
+                        continue;
+                    }
+                    break Ok((kind, body));
+                }
+                Ok(TimedRead::Idle) => {
+                    let silent = last_alive.elapsed();
+                    if silent >= hb.deadline {
+                        self.mark_dead(id);
+                        break Err(WilkinsError::WorkerLost(format!(
+                            "worker {id} missed its heartbeat deadline \
+                             ({:.1}s silent, deadline {:.1}s)",
+                            silent.as_secs_f64(),
+                            hb.deadline.as_secs_f64()
+                        )));
+                    }
+                    // Count each whole beat interval the worker has
+                    // gone dark beyond its first (the first quiet tick
+                    // is scheduling jitter, not a miss).
+                    let owed = (silent.as_nanos() / hb.interval.as_nanos().max(1))
+                        .saturating_sub(1) as u32;
+                    if owed > missed_since_alive {
+                        self.heartbeat_misses
+                            .fetch_add(u64::from(owed - missed_since_alive), Ordering::SeqCst);
+                        missed_since_alive = owed;
+                    }
+                }
+                Ok(TimedRead::Eof) => {
+                    self.mark_dead(id);
+                    break Err(WilkinsError::WorkerLost(format!(
+                        "worker {id} closed its control connection"
+                    )));
+                }
+                Err(e) => {
+                    self.mark_dead(id);
+                    break Err(WilkinsError::WorkerLost(format!(
+                        "worker {id} control link failed: {e}"
+                    )));
+                }
+            }
+        };
+        let _ = link.conn.set_read_timeout(None);
+        out
     }
 
     /// Run one ensemble instance on worker `id` (blocking round-trip;
-    /// the per-link mutex keeps a worker single-tenant).
+    /// the per-link mutex keeps a worker single-tenant). A reply whose
+    /// idempotency key is not `req.idem_key` is a stale completion
+    /// from an earlier dispatch (e.g. a duplicated or delayed
+    /// `InstanceDone`); it is counted and dropped, never returned.
     pub fn run_instance(&self, id: usize, req: &RunInstance) -> Result<InstanceDone> {
-        let mut link = self.links[id].lock().unwrap();
-        link.send(proto::K_RUN_INSTANCE, &req.encode())?;
-        let (kind, body) = link.recv()?;
-        if kind != proto::K_INSTANCE_DONE {
-            return Err(WilkinsError::Comm(format!(
-                "worker {id}: expected InstanceDone, got frame kind {kind}"
+        if self.is_dead(id) {
+            return Err(WilkinsError::WorkerLost(format!(
+                "worker {id} is already marked dead"
             )));
         }
-        InstanceDone::decode(&body)
+        let mut link = self.links[id].lock().unwrap();
+        if let Err(e) = link.send(proto::K_RUN_INSTANCE, &req.encode()) {
+            self.mark_dead(id);
+            return Err(WilkinsError::WorkerLost(format!(
+                "worker {id} control link failed on send: {e}"
+            )));
+        }
+        loop {
+            let (kind, body) = self.recv_live(&mut link)?;
+            if kind != proto::K_INSTANCE_DONE {
+                return Err(WilkinsError::Comm(format!(
+                    "worker {id}: expected InstanceDone, got frame kind {kind}"
+                )));
+            }
+            let done = InstanceDone::decode(&body)?;
+            if done.idem_key != req.idem_key {
+                self.dup_done.fetch_add(1, Ordering::SeqCst);
+                continue;
+            }
+            return Ok(done);
+        }
     }
 
     /// Broadcast one `LaunchWorld` to every worker and collect every
@@ -107,7 +351,7 @@ impl WorkerPool {
         let mut replies = Vec::with_capacity(self.links.len());
         for link in &self.links {
             let mut link = link.lock().unwrap();
-            let (kind, body) = link.recv()?;
+            let (kind, body) = self.recv_live(&mut link)?;
             if kind != proto::K_WORLD_DONE {
                 return Err(WilkinsError::Comm(format!(
                     "worker {}: expected WorldDone, got frame kind {kind}",
@@ -131,7 +375,12 @@ impl WorkerPool {
             let _ = link.lock().unwrap().send(proto::K_SHUTDOWN, &[]);
         }
         let mut children = self.children.lock().unwrap();
-        for child in children.iter_mut() {
+        for (id, child) in children.iter_mut().enumerate() {
+            // A dead worker never reads the Shutdown frame; waiting on
+            // a wedged child would hang the teardown, so put it down.
+            if self.dead.get(id).is_some_and(|d| d.load(Ordering::SeqCst)) {
+                let _ = child.kill();
+            }
             let _ = child.wait();
         }
     }

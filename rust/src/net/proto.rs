@@ -34,8 +34,10 @@ pub const MAGIC: u32 = 0x574C_4B4E;
 /// counters in stats/reports, chunked data frames, stall spans; v3:
 /// routed data plane's bytes_shared/bytes_copied counters in stats
 /// and reports; v4: pooled data plane's alloc_rounds/bytes_pooled
-/// counters in stats and reports).
-pub const VERSION: u32 = 4;
+/// counters in stats and reports; v5: heartbeat frames, idempotency
+/// keys on RunInstance/InstanceDone, heartbeat intervals in
+/// LaunchWorld, fault counters in run reports).
+pub const VERSION: u32 = 5;
 
 // Frame kinds.
 pub const K_HELLO: u8 = 1;
@@ -48,6 +50,36 @@ pub const K_PEER_HELLO: u8 = 7;
 pub const K_DATA: u8 = 8;
 /// One bounded piece of a large data envelope (see [`ChunkAssembler`]).
 pub const K_DATA_CHUNK: u8 = 9;
+/// Liveness beacon ([`Heartbeat`]): carries no command, only proves
+/// the sender is alive. Receivers refresh their liveness clock and
+/// never surface it to callers.
+pub const K_HEARTBEAT: u8 = 10;
+
+/// Periodic liveness beacon. Workers beat on their control socket so
+/// the coordinator can tell "busy for a long time" from "dead or
+/// wedged"; mesh peers beat on every link so idle pumps notice a
+/// vanished worker instead of blocking forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Heartbeat {
+    /// Sender's worker id.
+    pub worker_id: u64,
+    /// Monotonic per-sender beat counter (diagnostics only).
+    pub seq: u64,
+}
+
+impl Heartbeat {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u64(self.worker_id);
+        w.put_u64(self.seq);
+        w.into_vec()
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Heartbeat> {
+        let mut r = Reader::new(body);
+        Ok(Heartbeat { worker_id: r.get_u64()?, seq: r.get_u64()? })
+    }
+}
 
 /// Worker → coordinator handshake.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -106,6 +138,12 @@ pub struct LaunchWorld {
     pub endpoints: Vec<String>,
     /// Owning worker id per global rank.
     pub owner_of: Vec<u64>,
+    /// Mesh heartbeat interval in milliseconds; 0 disables mesh
+    /// liveness (pumps block forever, the pre-v5 behavior).
+    pub heartbeat_ms: u64,
+    /// Silence on a mesh link longer than this (milliseconds) kills
+    /// the link. Ignored when `heartbeat_ms` is 0.
+    pub heartbeat_deadline_ms: u64,
 }
 
 impl LaunchWorld {
@@ -121,6 +159,8 @@ impl LaunchWorld {
             w.put_str(e);
         }
         w.put_u64_slice(&self.owner_of);
+        w.put_u64(self.heartbeat_ms);
+        w.put_u64(self.heartbeat_deadline_ms);
         w.into_vec()
     }
 
@@ -137,6 +177,8 @@ impl LaunchWorld {
             endpoints.push(r.get_str()?);
         }
         let owner_of = r.get_u64_vec()?;
+        let heartbeat_ms = r.get_u64()?;
+        let heartbeat_deadline_ms = r.get_u64()?;
         Ok(LaunchWorld {
             config_src,
             workdir,
@@ -145,6 +187,8 @@ impl LaunchWorld {
             total_ranks,
             endpoints,
             owner_of,
+            heartbeat_ms,
+            heartbeat_deadline_ms,
         })
     }
 }
@@ -215,6 +259,11 @@ pub struct RunInstance {
     pub workdir: String,
     pub artifacts: String,
     pub time_scale: f64,
+    /// Idempotency key, echoed verbatim in the matching
+    /// [`InstanceDone`]. A re-dispatched instance reuses its key, so
+    /// the coordinator can drop a stale completion from a presumed-dead
+    /// worker instead of double-counting the instance.
+    pub idem_key: u64,
 }
 
 impl RunInstance {
@@ -226,6 +275,7 @@ impl RunInstance {
         w.put_str(&self.workdir);
         w.put_str(&self.artifacts);
         w.put_f64(self.time_scale);
+        w.put_u64(self.idem_key);
         w.into_vec()
     }
 
@@ -238,6 +288,7 @@ impl RunInstance {
             workdir: r.get_str()?,
             artifacts: r.get_str()?,
             time_scale: r.get_f64()?,
+            idem_key: r.get_u64()?,
         })
     }
 }
@@ -251,12 +302,15 @@ pub struct InstanceDone {
     /// The instance's spans on its own recorder clock (the driver
     /// shifts them onto the ensemble clock, as in-process runs do).
     pub spans: Vec<Span>,
+    /// Echo of the [`RunInstance::idem_key`] this reply answers.
+    pub idem_key: u64,
 }
 
 impl InstanceDone {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         w.put_str(&self.error);
+        w.put_u64(self.idem_key);
         match &self.report {
             None => w.put_u8(0),
             Some(rep) => {
@@ -274,6 +328,7 @@ impl InstanceDone {
     pub fn decode(body: &[u8]) -> Result<InstanceDone> {
         let mut r = Reader::new(body);
         let error = r.get_str()?;
+        let idem_key = r.get_u64()?;
         let report = match r.get_u8()? {
             0 => None,
             _ => Some(get_run_report(&mut r)?),
@@ -283,7 +338,7 @@ impl InstanceDone {
         for _ in 0..n {
             spans.push(get_span(&mut r)?);
         }
-        Ok(InstanceDone { error, report, spans })
+        Ok(InstanceDone { error, report, spans, idem_key })
     }
 }
 
@@ -745,6 +800,10 @@ fn put_run_report(w: &mut Writer, rep: &RunReport) {
     w.put_u64(rep.total_ranks as u64);
     w.put_u64(rep.bytes_sent);
     w.put_u64(rep.msgs_sent);
+    w.put_u64(rep.faults.lost_workers);
+    w.put_u64(rep.faults.retries);
+    w.put_u64(rep.faults.heartbeat_misses);
+    w.put_u64(rep.faults.dup_done);
     w.put_u64(rep.nodes.len() as u64);
     for n in &rep.nodes {
         w.put_str(&n.name);
@@ -772,6 +831,12 @@ fn get_run_report(r: &mut Reader) -> Result<RunReport> {
     let total_ranks = r.get_u64()? as usize;
     let bytes_sent = r.get_u64()?;
     let msgs_sent = r.get_u64()?;
+    let faults = crate::coordinator::FaultStats {
+        lost_workers: r.get_u64()?,
+        retries: r.get_u64()?,
+        heartbeat_misses: r.get_u64()?,
+        dup_done: r.get_u64()?,
+    };
     let n = r.get_u64()? as usize;
     let mut nodes = Vec::with_capacity(n);
     for _ in 0..n {
@@ -795,7 +860,7 @@ fn get_run_report(r: &mut Reader) -> Result<RunReport> {
             open_wait: get_duration(r)?,
         });
     }
-    Ok(RunReport { elapsed, total_ranks, bytes_sent, msgs_sent, nodes })
+    Ok(RunReport { elapsed, total_ranks, bytes_sent, msgs_sent, nodes, faults })
 }
 
 fn put_span(w: &mut Writer, s: &Span) {

@@ -34,6 +34,31 @@ use super::transport::{connect, spawn_pump, PeerLink, SocketTransport};
 /// surface as a readable error, not an infinite `accept()` hang.
 const JOIN_TIMEOUT: Duration = Duration::from_secs(60);
 
+/// How long a freshly accepted connection gets to complete its
+/// `Hello`/`PeerHello`. A peer that connects and then wedges (or a
+/// stray non-wilkins client) must fail the handshake loudly, not park
+/// `wilkins up` startup in a blocking read forever.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Read one frame with [`HANDSHAKE_TIMEOUT`] armed, translating a
+/// timeout into a named error. The stream's read timeout is cleared
+/// again before returning.
+fn read_handshake_frame(conn: &mut TcpStream, who: &str) -> Result<(u8, Vec<u8>)> {
+    conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .map_err(|e| WilkinsError::Comm(format!("set_read_timeout: {e}")))?;
+    let got = codec::read_frame(conn);
+    let _ = conn.set_read_timeout(None);
+    match got {
+        Ok(Some(frame)) => Ok(frame),
+        Ok(None) => Err(WilkinsError::Comm(format!("{who} closed before handshake"))),
+        Err(WilkinsError::Io(e)) if codec::is_timeout(&e) => Err(WilkinsError::Comm(format!(
+            "{who} connected but sent no handshake within {}s (wedged peer?)",
+            HANDSHAKE_TIMEOUT.as_secs()
+        ))),
+        Err(e) => Err(e),
+    }
+}
+
 /// `accept()` with a deadline (nonblocking poll; the accepted stream
 /// is switched back to blocking before use).
 fn accept_deadline(listener: &TcpListener, who: &str) -> Result<TcpStream> {
@@ -126,9 +151,7 @@ impl Rendezvous {
             let mut conn = accept_deadline(&self.listener, "a worker")?;
             conn.set_nodelay(true)
                 .map_err(|e| WilkinsError::Comm(format!("set_nodelay: {e}")))?;
-            let (kind, body) = codec::read_frame(&mut conn)?.ok_or_else(|| {
-                WilkinsError::Comm("worker closed before handshake".into())
-            })?;
+            let (kind, body) = read_handshake_frame(&mut conn, "a worker")?;
             if kind != proto::K_HELLO {
                 return Err(WilkinsError::Comm(format!(
                     "expected Hello frame, got kind {kind}"
@@ -174,12 +197,15 @@ pub fn assign_nodes(graph: &WorkflowGraph, nworkers: usize) -> Vec<u64> {
 }
 
 /// Everything a worker holds while participating in a distributed
-/// world: the world itself plus the pump threads feeding it. Keep it
-/// alive until the coordinator's final `Shutdown` — peers may still be
-/// draining even after our own ranks finish.
+/// world: the world itself plus the pump threads feeding it (and the
+/// mesh heartbeat thread, when liveness is on). Keep it alive until
+/// the coordinator's final `Shutdown` — peers may still be draining
+/// even after our own ranks finish.
 pub struct MeshWorld {
     pub world: World,
     pumps: Vec<JoinHandle<()>>,
+    /// Tells the mesh beat thread to stop at its next tick.
+    beat_stop: Arc<std::sync::atomic::AtomicBool>,
 }
 
 impl MeshWorld {
@@ -189,8 +215,10 @@ impl MeshWorld {
     /// concurrently, so joining here could deadlock two workers on
     /// each other. Dropping the handles detaches the pumps; they
     /// drain the peer's close and exit on their own (or die with the
-    /// process).
+    /// process). The beat thread likewise stops on its own at its
+    /// next tick.
     pub fn shutdown(self) {
+        self.beat_stop.store(true, std::sync::atomic::Ordering::SeqCst);
         self.world.shutdown_transport();
         drop(self.pumps);
     }
@@ -218,6 +246,16 @@ pub fn build_mesh_world(
     let mailboxes = Arc::new(Mailboxes::new(total_ranks));
     let mut peers: Vec<Option<PeerLink>> = (0..n).map(|_| None).collect();
     let mut pumps = Vec::with_capacity(n.saturating_sub(1));
+    // Mesh liveness cadence from the coordinator (0 = disabled, the
+    // pre-v5 blocking behavior).
+    let liveness = if msg.heartbeat_ms > 0 {
+        Some((
+            Duration::from_millis(msg.heartbeat_ms),
+            Duration::from_millis(msg.heartbeat_deadline_ms.max(msg.heartbeat_ms * 2)),
+        ))
+    } else {
+        None
+    };
 
     // Connect to every lower id.
     for (j, endpoint) in msg.endpoints.iter().enumerate().take(my_id) {
@@ -230,7 +268,7 @@ pub fn build_mesh_world(
         let read_half = stream
             .try_clone()
             .map_err(|e| WilkinsError::Comm(format!("clone mesh stream: {e}")))?;
-        pumps.push(spawn_pump(read_half, Arc::clone(&mailboxes), j));
+        pumps.push(spawn_pump(read_half, Arc::clone(&mailboxes), j, liveness));
         peers[j] = Some(PeerLink::new(stream));
     }
 
@@ -240,9 +278,7 @@ pub fn build_mesh_world(
         stream
             .set_nodelay(true)
             .map_err(|e| WilkinsError::Comm(format!("set_nodelay: {e}")))?;
-        let (kind, body) = codec::read_frame(&mut stream)?.ok_or_else(|| {
-            WilkinsError::Comm("mesh peer closed before PeerHello".into())
-        })?;
+        let (kind, body) = read_handshake_frame(&mut stream, "a mesh peer")?;
         if kind != proto::K_PEER_HELLO {
             return Err(WilkinsError::Comm(format!(
                 "expected PeerHello on mesh link, got kind {kind}"
@@ -260,7 +296,7 @@ pub fn build_mesh_world(
         let read_half = stream
             .try_clone()
             .map_err(|e| WilkinsError::Comm(format!("clone mesh stream: {e}")))?;
-        pumps.push(spawn_pump(read_half, Arc::clone(&mailboxes), peer));
+        pumps.push(spawn_pump(read_half, Arc::clone(&mailboxes), peer, liveness));
         peers[peer] = Some(PeerLink::new(stream));
     }
 
@@ -277,6 +313,27 @@ pub fn build_mesh_world(
         peers,
         Arc::clone(&mailboxes),
     ));
+    // Mesh beat thread: prove this worker alive on every link even
+    // when its ranks send nothing, so idle peers' pump deadlines only
+    // ever fire on real deaths.
+    let beat_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    if let Some((interval, _)) = liveness {
+        let t = Arc::clone(&transport);
+        let stop = Arc::clone(&beat_stop);
+        let _ = std::thread::Builder::new()
+            .name(format!("wk-mesh-beat-{my_id}"))
+            .spawn(move || {
+                let mut seq = 0u64;
+                loop {
+                    std::thread::sleep(interval);
+                    if stop.load(std::sync::atomic::Ordering::SeqCst) {
+                        return;
+                    }
+                    seq += 1;
+                    t.beat_all(seq);
+                }
+            });
+    }
     let world = World::with_transport(total_ranks, mailboxes, transport);
-    Ok(MeshWorld { world, pumps })
+    Ok(MeshWorld { world, pumps, beat_stop })
 }

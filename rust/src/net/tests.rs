@@ -90,6 +90,8 @@ fn control_messages_roundtrip() {
         total_ranks: 12,
         endpoints: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
         owner_of: vec![0, 0, 0, 0, 1, 1, 1, 1, 1, 0, 0, 0],
+        heartbeat_ms: 250,
+        heartbeat_deadline_ms: 5000,
     };
     assert_eq!(LaunchWorld::decode(&lw.encode()).unwrap(), lw);
 
@@ -126,6 +128,7 @@ fn control_messages_roundtrip() {
         workdir: "/tmp/x/pipe[4]".into(),
         artifacts: "artifacts".into(),
         time_scale: 1.0,
+        idem_key: 41,
     };
     assert_eq!(RunInstance::decode(&ri.encode()).unwrap(), ri);
 
@@ -137,6 +140,12 @@ fn control_messages_roundtrip() {
             bytes_sent: 10,
             msgs_sent: 2,
             nodes: vec![],
+            faults: crate::coordinator::FaultStats {
+                lost_workers: 1,
+                retries: 2,
+                heartbeat_misses: 3,
+                dup_done: 4,
+            },
         }),
         spans: vec![crate::metrics::Span {
             rank: 1,
@@ -145,10 +154,14 @@ fn control_messages_roundtrip() {
             start: 0.5,
             end: 0.75,
         }],
+        idem_key: 41,
     };
     let back = InstanceDone::decode(&id.encode()).unwrap();
     assert!(back.error.is_empty());
     assert_eq!(back.report.as_ref().unwrap().total_ranks, 4);
+    let f = back.report.as_ref().unwrap().faults;
+    assert_eq!((f.lost_workers, f.retries, f.heartbeat_misses, f.dup_done), (1, 2, 3, 4));
+    assert_eq!(back.idem_key, 41);
     assert_eq!(back.spans.len(), 1);
     assert_eq!(back.spans[0].kind, crate::metrics::SpanKind::Transfer);
 
@@ -396,6 +409,10 @@ fn mesh_pair() -> (MeshWorld, MeshWorld) {
         total_ranks: 4,
         endpoints,
         owner_of: vec![0, 0, 1, 1],
+        // Liveness off: these tests hold mesh worlds across long
+        // assertion sequences with no beat threads running.
+        heartbeat_ms: 0,
+        heartbeat_deadline_ms: 0,
     };
     let m0 = msg.clone();
     let h = thread::spawn(move || build_mesh_world(0, &l0, &m0).unwrap());

@@ -98,6 +98,19 @@ impl SocketTransport {
     pub fn hosts(&self, global_rank: usize) -> bool {
         self.owner_of[global_rank] == self.my_worker
     }
+
+    /// Send one heartbeat frame on every mesh link (the mesh beat
+    /// thread's tick). Deliberately outside the `World` send counters
+    /// — liveness traffic must not perturb the transfer totals the
+    /// benches and reports assert on. Send errors are ignored: a dead
+    /// link is the receiving pump's diagnosis to make.
+    pub(crate) fn beat_all(&self, seq: u64) {
+        let beat = proto::Heartbeat { worker_id: self.my_worker as u64, seq };
+        let body = beat.encode();
+        for link in self.peers.iter().flatten() {
+            let _ = link.send_frame(proto::K_HEARTBEAT, &body);
+        }
+    }
 }
 
 impl Transport for SocketTransport {
@@ -216,27 +229,86 @@ impl Transport for SocketTransport {
 /// pushes out. Exits on a `Shutdown` frame, clean EOF, or any stream
 /// error (a worker that died mid-run; the sender side panics with the
 /// real diagnosis).
+///
+/// With `liveness: Some((interval, deadline))` the pump uses timed
+/// reads: peers beat every `interval` (see
+/// [`SocketTransport::beat_all`]), and a link silent past `deadline`
+/// is declared dead — a peer that vanished without closing its
+/// socket (SIGKILL mid-syscall, wedged host) no longer parks the
+/// pump forever. Ranks blocked on the dead peer's data still unstick
+/// via the ordinary `RECV_TIMEOUT`, now with the pump's diagnosis on
+/// stderr first.
 pub(crate) fn spawn_pump(
     stream: TcpStream,
     mailboxes: Arc<Mailboxes>,
     peer_id: usize,
+    liveness: Option<(std::time::Duration, std::time::Duration)>,
 ) -> JoinHandle<()> {
     thread::Builder::new()
         .name(format!("wk-net-pump-{peer_id}"))
         .spawn(move || {
             let mut stream = stream;
             let mut assembler = proto::ChunkAssembler::new();
+            if let Some((interval, _)) = liveness {
+                if stream.set_read_timeout(Some(interval)).is_err() {
+                    eprintln!(
+                        "wilkins net: mesh link from worker {peer_id}: cannot arm \
+                         read timeout; liveness checks disabled on this link"
+                    );
+                }
+            }
+            let mut last_rx = std::time::Instant::now();
             loop {
                 // Pooled plane: frames land in recycled pool buffers
                 // and envelopes are sliced out of them — the bytes
                 // read off the socket are the bytes the consumer
                 // fills its hyperslab from. The ablation arm keeps
                 // the historical owned-Vec read + copy-out decode.
-                let frame = if buf::pooling_enabled() {
-                    codec::read_frame_payload(&mut stream)
-                } else {
-                    codec::read_frame(&mut stream)
-                        .map(|f| f.map(|(k, body)| (k, Payload::from(body))))
+                let frame = match liveness {
+                    Some((_, deadline)) => {
+                        let frame_deadline = std::time::Instant::now() + deadline;
+                        let timed = if buf::pooling_enabled() {
+                            codec::read_frame_payload_timed(&mut stream, frame_deadline)
+                        } else {
+                            codec::read_frame_timed(&mut stream, frame_deadline).map(|t| {
+                                match t {
+                                    codec::TimedRead::Frame((k, body)) => {
+                                        codec::TimedRead::Frame((k, Payload::from(body)))
+                                    }
+                                    codec::TimedRead::Idle => codec::TimedRead::Idle,
+                                    codec::TimedRead::Eof => codec::TimedRead::Eof,
+                                }
+                            })
+                        };
+                        match timed {
+                            Ok(codec::TimedRead::Frame(f)) => {
+                                last_rx = std::time::Instant::now();
+                                Ok(Some(f))
+                            }
+                            Ok(codec::TimedRead::Idle) => {
+                                if last_rx.elapsed() >= deadline {
+                                    eprintln!(
+                                        "wilkins net: mesh link from worker {peer_id} died \
+                                         (silent past the {:.1}s heartbeat deadline); \
+                                         ranks waiting on it will time out",
+                                        deadline.as_secs_f64()
+                                    );
+                                    break;
+                                }
+                                continue;
+                            }
+                            Ok(codec::TimedRead::Eof) => Ok(None),
+                            Err(e) => Err(e),
+                        }
+                    }
+                    None => {
+                        if buf::pooling_enabled() {
+                            codec::read_frame_payload(&mut stream)
+                        } else {
+                            codec::read_frame(&mut stream)
+                                .map(|f| f.map(|(k, body)| (k, Payload::from(body))))
+                        }
+                    }
                 };
                 match frame {
                     Ok(Some((proto::K_DATA, body))) => match decode_data_any(&body) {
@@ -280,6 +352,9 @@ pub(crate) fn spawn_pump(
                             }
                         }
                     }
+                    // Liveness beacon: already refreshed `last_rx`
+                    // above; never surfaces to the mailboxes.
+                    Ok(Some((proto::K_HEARTBEAT, _))) => {}
                     // Orderly teardown: peer signalled shutdown or
                     // closed cleanly at a frame boundary.
                     Ok(Some((proto::K_SHUTDOWN, _))) | Ok(None) => break,

@@ -20,7 +20,7 @@ use crate::coordinator::RunReport;
 use crate::error::{Result, WilkinsError};
 use crate::graph::WorkflowGraph;
 
-use super::pool::WorkerPool;
+use super::pool::{HeartbeatConfig, WorkerPool};
 use super::proto::LaunchWorld;
 use super::rendezvous;
 
@@ -34,6 +34,9 @@ pub struct UpOpts {
     /// AOT artifacts dir; workers attach an engine only when it holds
     /// a manifest.
     pub artifacts: Option<PathBuf>,
+    /// Liveness cadence for the pool's control links and the workers'
+    /// peer mesh.
+    pub heartbeat: HeartbeatConfig,
 }
 
 /// Run `config_src` as one distributed world over `opts.workers`
@@ -55,7 +58,8 @@ pub fn run_workflow_distributed(config_src: &str, opts: &UpOpts) -> Result<RunRe
             std::env::temp_dir().join(format!("wilkins-up-{}", std::process::id()))
         });
 
-    let pool = WorkerPool::spawn(nworkers)?;
+    let pool = WorkerPool::spawn_with(nworkers, opts.heartbeat)?;
+    let hb = pool.heartbeat();
     let msg = LaunchWorld {
         config_src: config_src.to_string(),
         workdir: workdir.display().to_string(),
@@ -68,6 +72,8 @@ pub fn run_workflow_distributed(config_src: &str, opts: &UpOpts) -> Result<RunRe
         total_ranks: graph.total_ranks as u64,
         endpoints: pool.peer_addrs().to_vec(),
         owner_of,
+        heartbeat_ms: if hb.enabled() { hb.interval.as_millis() as u64 } else { 0 },
+        heartbeat_deadline_ms: hb.deadline.as_millis() as u64,
     };
 
     let t0 = Instant::now();
@@ -101,7 +107,8 @@ pub fn run_workflow_distributed(config_src: &str, opts: &UpOpts) -> Result<RunRe
             graph.total_ranks
         )));
     }
-    let report = report::build(&graph, outcomes, elapsed, bytes_sent, msgs_sent)?;
+    let mut report = report::build(&graph, outcomes, elapsed, bytes_sent, msgs_sent)?;
+    report.faults.heartbeat_misses = pool.heartbeat_misses();
     pool.shutdown();
     Ok(report)
 }

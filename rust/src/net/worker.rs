@@ -13,12 +13,22 @@
 //!   inside this worker (the `process-per-instance` placement) and
 //!   ship back the `RunReport` plus spans.
 //!
+//! Liveness: a dedicated thread beats [`proto::Heartbeat`] frames on
+//! the control socket every `heartbeat` interval (sharing the write
+//! half under a mutex with command replies), so the coordinator can
+//! tell a busy worker from a dead one. The serve loop also consults
+//! the process's [`FaultPlan`] on every `RunInstance` — a no-op
+//! unless `WILKINS_FAULT` armed it (tests and chaos smokes only).
+//!
 //! Workers deliberately hold their distributed world open until the
 //! coordinator's `Shutdown`: our ranks finishing does not mean our
 //! peers are done reading from us.
 
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::coordinator::Wilkins;
 use crate::ensemble::EnsembleSpec;
@@ -26,23 +36,118 @@ use crate::error::{Result, WilkinsError};
 use crate::tasks::builtin_registry;
 
 use super::codec;
+use super::faults::{FaultKind, FaultPlan};
 use super::proto::{
-    self, InstanceDone, LaunchWorld, RankOutcomeWire, RunInstance, WorldDone,
+    self, Heartbeat, InstanceDone, LaunchWorld, RankOutcomeWire, RunInstance, WorldDone,
 };
 use super::rendezvous;
+
+/// How a worker process conducts itself: beat cadence + fault plan.
+pub struct WorkerOpts {
+    /// Control-socket heartbeat period; zero disables beating.
+    pub heartbeat: Duration,
+    /// Fault-injection schedule (empty in production).
+    pub faults: FaultPlan,
+}
+
+impl WorkerOpts {
+    /// The environment's prescription: `WILKINS_FAULT` for the plan
+    /// (almost always empty), the pool's default cadence for beats.
+    pub fn from_env() -> Result<WorkerOpts> {
+        Ok(WorkerOpts {
+            heartbeat: super::pool::HeartbeatConfig::default().interval,
+            faults: FaultPlan::from_env()?,
+        })
+    }
+}
 
 /// Entry point behind `wilkins worker --connect ADDR --id K`. Also
 /// callable from any other binary built on this crate (the benches
 /// re-enter here so a bench executable can serve as its own pool).
 pub fn worker_main(coordinator_addr: &str, worker_id: usize) -> Result<()> {
+    worker_main_with(coordinator_addr, worker_id, WorkerOpts::from_env()?)
+}
+
+/// [`worker_main`] with explicit options — the CLI passes the
+/// coordinator's `--heartbeat-ms` through here, and the fault tests
+/// run emulated workers on threads with hand-built plans.
+pub fn worker_main_with(
+    coordinator_addr: &str,
+    worker_id: usize,
+    opts: WorkerOpts,
+) -> Result<()> {
     let peer_listener = TcpListener::bind("127.0.0.1:0")
         .map_err(|e| WilkinsError::Comm(format!("bind peer listener: {e}")))?;
     let peer_addr = peer_listener
         .local_addr()
         .map_err(|e| WilkinsError::Comm(format!("peer local_addr: {e}")))?
         .to_string();
-    let mut control = rendezvous::join(coordinator_addr, worker_id, &peer_addr)?;
+    let control = rendezvous::join(coordinator_addr, worker_id, &peer_addr)?;
+    let faults = Arc::new(opts.faults);
 
+    // Replies and heartbeats share the write half under one mutex so
+    // concurrent writers can never interleave mid-frame; the serve
+    // loop keeps the original stream as its read half.
+    let write_half = control
+        .try_clone()
+        .map_err(|e| WilkinsError::Comm(format!("clone control stream: {e}")))?;
+    let writer = Arc::new(Mutex::new(write_half));
+    let stop_beats = Arc::new(AtomicBool::new(false));
+    let _beats = spawn_beat_thread(
+        Arc::clone(&writer),
+        worker_id,
+        opts.heartbeat,
+        Arc::clone(&faults),
+        Arc::clone(&stop_beats),
+    );
+
+    let out = serve_loop(control, &writer, worker_id, &peer_listener, &faults);
+    stop_beats.store(true, Ordering::SeqCst);
+    out
+}
+
+/// Beat every `interval` until stopped, silenced by a fired fault, or
+/// the socket dies (coordinator gone — nothing left to reassure).
+fn spawn_beat_thread(
+    writer: Arc<Mutex<TcpStream>>,
+    worker_id: usize,
+    interval: Duration,
+    faults: Arc<FaultPlan>,
+    stop: Arc<AtomicBool>,
+) -> Option<std::thread::JoinHandle<()>> {
+    if interval.is_zero() {
+        return None;
+    }
+    std::thread::Builder::new()
+        .name(format!("wk-beat-{worker_id}"))
+        .spawn(move || {
+            let mut seq = 0u64;
+            loop {
+                std::thread::sleep(interval);
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if faults.silenced() {
+                    return;
+                }
+                seq += 1;
+                let beat = Heartbeat { worker_id: worker_id as u64, seq };
+                let mut w = writer.lock().unwrap();
+                if codec::write_frame(&mut *w, proto::K_HEARTBEAT, &beat.encode()).is_err() {
+                    return;
+                }
+            }
+        })
+        .ok()
+}
+
+fn serve_loop(
+    mut control: TcpStream,
+    writer: &Arc<Mutex<TcpStream>>,
+    worker_id: usize,
+    peer_listener: &TcpListener,
+    faults: &Arc<FaultPlan>,
+) -> Result<()> {
     // A worker that served a LaunchWorld keeps the mesh world alive
     // until shutdown (peers may still drain our streams).
     let mut held: Option<rendezvous::MeshWorld> = None;
@@ -53,26 +158,67 @@ pub fn worker_main(coordinator_addr: &str, worker_id: usize) -> Result<()> {
             None | Some((proto::K_SHUTDOWN, _)) => break,
             Some((proto::K_LAUNCH_WORLD, body)) => {
                 let msg = LaunchWorld::decode(&body)?;
-                let reply = match serve_world(worker_id, &peer_listener, &msg) {
+                let reply = match serve_world(worker_id, peer_listener, &msg) {
                     Ok((done, mesh)) => {
                         held = Some(mesh);
                         done
                     }
                     Err(e) => WorldDone { error: e.to_string(), ..WorldDone::default() },
                 };
-                send_reply(&mut control, proto::K_WORLD_DONE, &reply.encode())?;
+                send_reply(writer, proto::K_WORLD_DONE, &reply.encode())?;
             }
             Some((proto::K_RUN_INSTANCE, body)) => {
                 let msg = RunInstance::decode(&body)?;
+                let fired = faults.on_run_instance(worker_id);
+                match fired {
+                    Some(FaultKind::Kill) => {
+                        if std::env::var("WILKINS_FAULT_HARD").as_deref() == Ok("1") {
+                            std::process::exit(9);
+                        }
+                        // Emulated kill (threaded workers): vanish
+                        // abruptly — close the control socket with no
+                        // goodbye and stop beating.
+                        faults.silence();
+                        let _ = control.shutdown(Shutdown::Both);
+                        return Ok(());
+                    }
+                    Some(FaultKind::Wedge) => {
+                        // Alive but unresponsive: the case plain EOF
+                        // detection can never catch.
+                        park_forever();
+                    }
+                    Some(FaultKind::Delay(ms)) => {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    Some(FaultKind::DupDone) | Some(FaultKind::DropDone) | None => {}
+                }
                 let reply = match serve_instance(&msg) {
                     Ok(done) => done,
                     Err(e) => InstanceDone {
                         error: e.to_string(),
                         report: None,
                         spans: Vec::new(),
+                        idem_key: msg.idem_key,
                     },
                 };
-                send_reply(&mut control, proto::K_INSTANCE_DONE, &reply.encode())?;
+                match fired {
+                    Some(FaultKind::DropDone) => {
+                        // Work done, acknowledgement lost — then go
+                        // silent so the coordinator re-dispatches.
+                        park_forever();
+                    }
+                    Some(FaultKind::DupDone) => {
+                        let body = reply.encode();
+                        send_reply(writer, proto::K_INSTANCE_DONE, &body)?;
+                        send_reply(writer, proto::K_INSTANCE_DONE, &body)?;
+                    }
+                    _ => send_reply(writer, proto::K_INSTANCE_DONE, &reply.encode())?,
+                }
+            }
+            Some((proto::K_HEARTBEAT, _)) => {
+                // Coordinators don't beat at workers today; tolerate
+                // it anyway (a future bidirectional lease costs us
+                // nothing here).
             }
             Some((kind, _)) => {
                 return Err(WilkinsError::Comm(format!(
@@ -87,8 +233,17 @@ pub fn worker_main(coordinator_addr: &str, worker_id: usize) -> Result<()> {
     Ok(())
 }
 
-fn send_reply(control: &mut TcpStream, kind: u8, body: &[u8]) -> Result<()> {
-    codec::write_frame(control, kind, body)
+/// Never returns: the thread (or process) plays dead without closing
+/// its sockets.
+fn park_forever() -> ! {
+    loop {
+        std::thread::park();
+    }
+}
+
+fn send_reply(writer: &Arc<Mutex<TcpStream>>, kind: u8, body: &[u8]) -> Result<()> {
+    let mut w = writer.lock().unwrap();
+    codec::write_frame(&mut *w, kind, body)
 }
 
 /// Attach the AOT engine when the run names an artifacts dir that
@@ -159,11 +314,13 @@ fn serve_instance(msg: &RunInstance) -> Result<InstanceDone> {
             error: String::new(),
             report: Some(report),
             spans: recorder.spans(),
+            idem_key: msg.idem_key,
         }),
         Err(e) => Ok(InstanceDone {
             error: e.to_string(),
             report: None,
             spans: recorder.spans(),
+            idem_key: msg.idem_key,
         }),
     }
 }

@@ -1,0 +1,330 @@
+//! Fault-tolerance verification suite (docs/fault-tolerance.md).
+//!
+//! Drives the `net::faults` injection seam against real pools of
+//! emulated workers — `worker_main_with` on threads of this process,
+//! hosted by [`WorkerPool::host`] — in three phases:
+//!
+//! * **Phase 1 — liveness**: a wedged worker (alive socket, no
+//!   heartbeats, no replies) is declared dead within the configured
+//!   deadline instead of blocking the coordinator forever.
+//! * **Phase 2 — requeue**: a worker killed mid-campaign loses its
+//!   slot and its in-flight instance completes on a survivor; the
+//!   campaign finishes with every instance exactly once and the
+//!   engagement counters visible in the merged report.
+//! * **Phase 3 — idempotency**: duplicated and dropped `InstanceDone`
+//!   acknowledgements are absorbed by the per-dispatch idempotency
+//!   keys — nothing is double-counted.
+//!
+//! Plus a determinism regression: the same campaign under the same
+//! injected kill, 20 times, must produce bit-identical results (all
+//! timing-dependent fields excluded).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use wilkins::ensemble::{Ensemble, EnsembleReport};
+use wilkins::net::proto::RunInstance;
+use wilkins::net::{worker_main_with, FaultPlan, HeartbeatConfig, WorkerOpts, WorkerPool};
+use wilkins::tasks::builtin_registry;
+use wilkins::WilkinsError;
+
+/// Fast cadence so liveness tests resolve in milliseconds, with a
+/// deadline wide enough (16 intervals) that scheduler jitter on a
+/// loaded CI machine cannot kill a healthy link.
+fn fast_hb() -> HeartbeatConfig {
+    HeartbeatConfig {
+        interval: Duration::from_millis(25),
+        deadline: Duration::from_millis(400),
+    }
+}
+
+/// Host a pool of `n` emulated workers on threads of this process
+/// (integration-test binaries cannot re-exec themselves in worker
+/// mode). `fault_specs[id]` is worker `id`'s `WILKINS_FAULT`-grammar
+/// plan; missing entries mean no faults.
+fn host_pool(n: usize, hb: HeartbeatConfig, fault_specs: &[&str]) -> Arc<WorkerPool> {
+    let plans: Vec<String> = (0..n)
+        .map(|id| fault_specs.get(id).copied().unwrap_or("").to_string())
+        .collect();
+    let pool = WorkerPool::host(n, hb, |addr, id| {
+        let addr = addr.to_string();
+        let plan = FaultPlan::parse(&plans[id]).expect("fault spec parses");
+        let beat = hb.interval;
+        std::thread::Builder::new()
+            .name(format!("faults-wk-{id}"))
+            .spawn(move || {
+                let _ = worker_main_with(
+                    &addr,
+                    id,
+                    WorkerOpts { heartbeat: beat, faults: plan },
+                );
+            })
+            .expect("spawn emulated worker");
+    })
+    .expect("host pool");
+    Arc::new(pool)
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("wilkins-faults-{}-{tag}", std::process::id()))
+}
+
+/// A small producer→consumer campaign: each instance is 2 ranks, the
+/// budget admits two at a time, and the counters are exact (2 serves
+/// and 2 opens per instance) so "completed exactly once" is checkable
+/// per instance.
+fn campaign_spec(count: usize) -> String {
+    format!(
+        "\
+ensemble:
+  max_ranks: 4
+  policy: fifo
+  tasks:
+    - func: producer
+      nprocs: 1
+      params: {{ steps: 2, grid_per_proc: 200, particles_per_proc: 200 }}
+      outports:
+        - filename: outfile.h5
+          dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+    - func: consumer
+      nprocs: 1
+      inports:
+        - filename: outfile.h5
+          dsets: [ {{ name: /group1/grid }}, {{ name: /group1/particles }} ]
+  instances:
+    - name: ins
+      count: {count}
+",
+    )
+}
+
+/// Run `campaign_spec(count)` on `pool` in its own scratch workdir.
+fn run_campaign(
+    pool: &Arc<WorkerPool>,
+    count: usize,
+    tag: &str,
+) -> wilkins::Result<EnsembleReport> {
+    let spec = campaign_spec(count);
+    let ens = Ensemble::from_yaml_str(&spec, builtin_registry())
+        .unwrap()
+        .with_workdir(scratch(tag));
+    ens.run_on_pool(Arc::clone(pool), &spec, Path::new("."), None)
+}
+
+/// Every instance ran to completion exactly once: the per-node
+/// counters are exact, so a skipped or doubled run would show.
+fn assert_each_instance_exactly_once(report: &EnsembleReport, count: usize) {
+    assert_eq!(report.instances.len(), count);
+    for i in 0..count {
+        let inst = report
+            .instance(&format!("ins[{i}]"))
+            .unwrap_or_else(|| panic!("missing instance ins[{i}]"));
+        assert_eq!(
+            inst.report.node("producer").unwrap().files_served,
+            2,
+            "ins[{i}] producer did not serve every step exactly once"
+        );
+        assert_eq!(
+            inst.report.node("consumer").unwrap().files_opened,
+            2,
+            "ins[{i}] consumer did not open every step exactly once"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- phase 1
+
+/// A wedged worker — socket open, heartbeats stopped, no reply coming
+/// — is the failure plain EOF detection can never see. The liveness
+/// deadline must surface it as `WorkerLost` instead of blocking the
+/// dispatch forever.
+#[test]
+fn phase1_wedged_worker_declared_dead_within_deadline() {
+    let hb = fast_hb();
+    let pool = host_pool(1, hb, &["wedge@0"]);
+    let req = RunInstance {
+        spec_src: campaign_spec(1),
+        base_dir: ".".to_string(),
+        instance_idx: 0,
+        workdir: scratch("phase1").display().to_string(),
+        artifacts: String::new(),
+        time_scale: 1.0,
+        idem_key: 1,
+    };
+
+    let t0 = Instant::now();
+    let err = pool.run_instance(0, &req).expect_err("wedged worker must not reply");
+    let waited = t0.elapsed();
+
+    assert!(
+        matches!(err, WilkinsError::WorkerLost(_)),
+        "expected WorkerLost, got: {err}"
+    );
+    assert!(pool.is_dead(0), "the wedged worker must be marked dead");
+    assert_eq!(pool.alive(), 0);
+    assert!(
+        waited >= hb.deadline,
+        "declared dead after {waited:?}, before the {:?} deadline",
+        hb.deadline
+    );
+    assert!(
+        waited < hb.deadline * 20,
+        "detection took {waited:?} — the deadline is not bounding the wait"
+    );
+    assert!(
+        pool.heartbeat_misses() >= 1,
+        "the silent stretch before the deadline must be counted as misses"
+    );
+
+    // A dead worker fails fast forever after — no second deadline wait.
+    let t1 = Instant::now();
+    let err = pool.run_instance(0, &req).expect_err("dead workers stay dead");
+    assert!(matches!(err, WilkinsError::WorkerLost(_)), "got: {err}");
+    assert!(t1.elapsed() < hb.deadline, "fail-fast must not wait out the deadline again");
+}
+
+// ---------------------------------------------------------------- phase 2
+
+/// Kill one of two workers on its first instance: the campaign must
+/// still drain, the lost worker's instance completing on the survivor
+/// under a fresh idempotency key, with the engagement visible in the
+/// report counters and the rendered `faults:` line.
+#[test]
+fn phase2_killed_workers_instances_requeue_onto_survivors() {
+    let hb = fast_hb();
+    let pool = host_pool(2, hb, &["kill@0"]);
+    let report = run_campaign(&pool, 4, "phase2").expect("campaign must survive one kill");
+
+    assert_eq!(report.faults.lost_workers, 1, "exactly one worker died");
+    assert_eq!(report.faults.retries, 1, "exactly one instance was re-dispatched");
+    assert_eq!(pool.alive(), 1, "the survivor keeps serving");
+    assert_each_instance_exactly_once(&report, 4);
+
+    let rendered = report.render();
+    assert!(rendered.contains("faults:"), "no faults line in:\n{rendered}");
+    assert!(rendered.contains("lost_workers=1"), "no lost_workers in:\n{rendered}");
+    assert!(rendered.contains("retries=1"), "no retries in:\n{rendered}");
+}
+
+/// Losing every worker is the one unsurvivable case — it must be a
+/// loud campaign error, not a hang.
+#[test]
+fn phase2_losing_every_worker_fails_the_campaign() {
+    let hb = fast_hb();
+    let pool = host_pool(1, hb, &["kill@0"]);
+    let err = run_campaign(&pool, 2, "phase2-total").expect_err("no survivors, no campaign");
+    let msg = err.to_string();
+    assert!(msg.contains("lost every worker"), "unexpected error: {msg}");
+    assert_eq!(pool.alive(), 0);
+}
+
+// ---------------------------------------------------------------- phase 3
+
+/// A worker that acknowledges twice: the stale duplicate must be
+/// dropped by the idempotency-key check and counted, never recorded
+/// as a second completion.
+#[test]
+fn phase3_duplicate_instance_done_is_deduplicated() {
+    let hb = fast_hb();
+    let pool = host_pool(1, hb, &["dup-done@0"]);
+    let report = run_campaign(&pool, 2, "phase3-dup").expect("duplicates must be harmless");
+
+    assert_eq!(report.faults.lost_workers, 0);
+    assert_eq!(report.faults.retries, 0);
+    assert_eq!(
+        report.faults.dup_done, 1,
+        "the duplicated acknowledgement must be counted exactly once"
+    );
+    assert_eq!(pool.dup_done(), 1);
+    assert_each_instance_exactly_once(&report, 2);
+}
+
+/// A worker that completes the work but loses the acknowledgement
+/// (then wedges): the instance is re-dispatched to a survivor and the
+/// merged report counts it once even though it physically ran twice.
+#[test]
+fn phase3_dropped_reply_requeues_without_double_count() {
+    let hb = fast_hb();
+    let pool = host_pool(2, hb, &["drop-done@0"]);
+    let report = run_campaign(&pool, 3, "phase3-drop").expect("dropped ack must be survivable");
+
+    assert_eq!(report.faults.lost_workers, 1, "the silent worker counts as lost");
+    assert_eq!(report.faults.retries, 1);
+    assert_eq!(pool.alive(), 1);
+    assert_each_instance_exactly_once(&report, 3);
+}
+
+// ------------------------------------------------------------- baseline
+
+/// With no fault plan armed, a heartbeating pool behaves exactly like
+/// the pre-liveness one: no losses, no retries, no duplicates.
+#[test]
+fn healthy_pool_runs_clean_with_heartbeats_on() {
+    let hb = fast_hb();
+    let pool = host_pool(2, hb, &[]);
+    let report = run_campaign(&pool, 3, "healthy").expect("healthy campaign");
+
+    assert_eq!(report.faults.lost_workers, 0);
+    assert_eq!(report.faults.retries, 0);
+    assert_eq!(report.faults.dup_done, 0);
+    assert_eq!(pool.alive(), 2);
+    assert_each_instance_exactly_once(&report, 3);
+}
+
+// ---------------------------------------------------------- determinism
+
+/// Everything about a report that must not depend on timing, worker
+/// fates, or recovery paths: instance identity and every per-node
+/// counter, plus the deterministic fault counters. Wall-clock fields
+/// and `heartbeat_misses` (a jitter observation) are excluded.
+fn fingerprint(report: &EnsembleReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "budget={} lost={} retries={} dup={}",
+        report.budget, report.faults.lost_workers, report.faults.retries, report.faults.dup_done
+    );
+    for inst in &report.instances {
+        let _ = write!(s, "{} ranks={}", inst.name, inst.ranks);
+        for node in &inst.report.nodes {
+            let _ = write!(
+                s,
+                " | {} served={} skipped={} dropped={} bytes_out={} opened={} bytes_in={}",
+                node.name,
+                node.files_served,
+                node.serves_skipped,
+                node.serves_dropped,
+                node.bytes_served,
+                node.files_opened,
+                node.bytes_read
+            );
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// The same campaign under the same mid-campaign kill, 20 times: the
+/// merged results must be bit-identical. Fault recovery is allowed to
+/// cost wall-clock, never to perturb what the workflows computed.
+#[test]
+fn determinism_20_runs_under_injected_worker_kill() {
+    let mut prints = std::collections::BTreeSet::new();
+    for run in 0..20 {
+        let hb = fast_hb();
+        let pool = host_pool(2, hb, &["kill@0"]);
+        let report = run_campaign(&pool, 3, &format!("det-{run}"))
+            .unwrap_or_else(|e| panic!("run {run} failed: {e}"));
+        assert_eq!(report.faults.lost_workers, 1, "run {run}");
+        prints.insert(fingerprint(&report));
+        pool.shutdown();
+    }
+    assert_eq!(
+        prints.len(),
+        1,
+        "fault recovery perturbed the merged results:\n{}",
+        prints.into_iter().collect::<Vec<_>>().join("----\n")
+    );
+}
