@@ -14,10 +14,11 @@ cd "$(dirname "$0")/.."
 
 docs_check() {
     echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
-    # rust/src/lib.rs turns on missing_docs for the flow module AND
-    # the whole lowfive module (the routed data plane), so an
-    # undocumented public item in either layer fails here (and under
-    # the clippy -D warnings step below).
+    # rust/src/lib.rs turns on missing_docs for the flow module, the
+    # whole lowfive module (the routed data plane) AND the obs module
+    # (the observability plane), so an undocumented public item in any
+    # of those layers fails here (and under the clippy -D warnings
+    # step below).
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
 }
 
@@ -54,8 +55,8 @@ flow_out=$(cargo run --release -- run configs/flow_control.yaml \
     --time-scale 0.02 --artifacts /nonexistent)
 case "$flow_out" in
     *"dropped="*)
-        # The summary only prints with dropped > 0 or stalls; require
-        # a real nonzero drop count under `flow: latest`.
+        # The flow summary line is unconditional; require a real
+        # nonzero drop count under `flow: latest`.
         echo "$flow_out" | grep -Eq "dropped=[1-9][0-9]*" || {
             echo "FAIL: flow summary reported zero dropped rounds"; exit 1;
         }
@@ -119,17 +120,64 @@ for i in 0 1 2 3; do
     }
 done
 
-echo "== wire bench (pooled data plane: >=2x copy reduction, alloc_rounds) =="
-# The bench asserts the acceptance shape itself (>=2x fewer
-# bytes-copied-per-byte-delivered at 16 MiB vs the Vol::set_pooling
-# ablation, pooled arms within the warm-up allocation budget) and
-# emits BENCH_wire.json; archive the JSON so the trajectory
-# accumulates run over run.
-cargo bench --bench wire
-test -s BENCH_wire.json || {
-    echo "FAIL: wire bench did not emit BENCH_wire.json"; exit 1;
+echo "== observability smoke (chaos ensemble with --trace/--json) =="
+# Same chaos campaign, exporting the merged Chrome trace and the
+# machine-readable report. The run must surface live telemetry (the
+# 50 ms beats carry K_TELEMETRY counter frames), the trace must paint
+# the WorkerLost marker, and both artifacts must parse as the schemas
+# docs/observability.md documents.
+obsdir="${TMPDIR:-/tmp}/wilkins-ci-obs-$$"
+rm -rf "$obsdir"; mkdir -p "$obsdir"
+obs_out=$(WILKINS_FAULT="kill@0:after=0" WILKINS_FAULT_HARD=1 \
+    cargo run --release -- ensemble configs/chaos_ensemble.yaml \
+    --artifacts /nonexistent \
+    --trace "$obsdir/trace.json" --json "$obsdir/report.json")
+echo "$obs_out" | grep -Eq "telemetry: frames=[1-9][0-9]*" || {
+    echo "FAIL: chaos obs run reported no telemetry frames:"
+    echo "$obs_out"; exit 1;
 }
+grep -q '"WorkerLost"' "$obsdir/trace.json" || {
+    echo "FAIL: WorkerLost marker missing from the chrome trace"; exit 1;
+}
+if grep -q '"dur":-' "$obsdir/trace.json"; then
+    echo "FAIL: negative span duration in the chrome trace"; exit 1
+fi
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$obsdir/trace.json" "$obsdir/report.json" <<'PYEOF'
+import json, sys
+trace = json.load(open(sys.argv[1]))
+events = trace["traceEvents"]
+assert isinstance(events, list) and events, "empty traceEvents"
+assert any(e.get("name") == "WorkerLost" for e in events), "no WorkerLost instant"
+assert all(e.get("dur", 0) >= 0 for e in events), "negative duration"
+report = json.load(open(sys.argv[2]))
+assert report["schema"] == "wilkins.ensemble_report/1", report.get("schema")
+assert report["telemetry"]["frames"] > 0, "no telemetry frames in the json report"
+assert any(e["name"] == "WorkerLost" for e in report["events"]), "no WorkerLost event"
+assert len(report["instances"]) == 4, "expected 4 instance reports"
+for inst in report["instances"]:
+    assert inst["report"]["schema"] == "wilkins.run_report/1", inst["name"]
+print("obs json artifacts validate")
+PYEOF
+else
+    echo "python3 not available; skipping json schema validation"
+fi
+rm -rf "$obsdir"
+
+echo "== paper benches (wire / flow / dataplane / ensembles) =="
+# Each bench asserts its own acceptance shape — the wire bench covers
+# the >=2x copy reduction AND that the disabled wire tap stays off the
+# frame hot path — and emits a BENCH_<name>.json record at the repo
+# root; archive every record so the trajectory accumulates run over
+# run.
+stamp=$(git rev-parse --short HEAD 2>/dev/null || date +%s)
 mkdir -p ci/bench-archive
-cp BENCH_wire.json "ci/bench-archive/BENCH_wire.$(git rev-parse --short HEAD 2>/dev/null || date +%s).json"
+for b in wire flow dataplane ensembles; do
+    cargo bench --bench "$b"
+    test -s "BENCH_$b.json" || {
+        echo "FAIL: $b bench did not emit BENCH_$b.json"; exit 1;
+    }
+    cp "BENCH_$b.json" "ci/bench-archive/BENCH_$b.$stamp.json"
+done
 
 echo "OK: all checks passed"

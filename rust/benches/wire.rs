@@ -242,6 +242,32 @@ fn main() {
     let steps = 6u64;
     println!("== wire hot path: pooled scatter-gather vs owned-Vec ablation ==\n");
 
+    // Observability guard: with WILKINS_TRACE_WIRE unset, the frame
+    // tap hook every codec read/write now calls must cost one atomic
+    // load + branch. The budget is generous (50 ns/call, ~25x the
+    // expected cost) so machine noise can't flake CI, but a lock or
+    // syscall sneaking onto this path blows straight through it.
+    use wilkins::obs::wiretap;
+    assert!(
+        !wiretap::enabled(),
+        "this bench must run with the wire tap off (unset WILKINS_TRACE_WIRE)"
+    );
+    let tap_reps = 10_000_000u64;
+    let t0 = Instant::now();
+    for i in 0..tap_reps {
+        wiretap::frame(
+            wiretap::Dir::Tx,
+            std::hint::black_box((i & 0xff) as u8),
+            std::hint::black_box(64),
+        );
+    }
+    let tap_ns = t0.elapsed().as_nanos() as f64 / tap_reps as f64;
+    println!("disabled wire tap: {tap_ns:.2} ns/frame over {tap_reps} calls\n");
+    assert!(
+        tap_ns < 50.0,
+        "disabled wire tap must stay out of the hot path, got {tap_ns:.2} ns/frame"
+    );
+
     let mut mesh_rows = Vec::new();
     let mut local_rows = Vec::new();
     for (label, payload) in SIZES {
@@ -338,7 +364,7 @@ fn main() {
             .join(",\n")
     };
     let json = format!(
-        "{{\n  \"bench\": \"wire\",\n  \"steps\": {steps},\n  \"copy_reduction_16mib_mesh\": {reduction:.2},\n  \"serve\": {{\n    \"local\": {{\n{}\n    }},\n    \"mesh\": {{\n{}\n    }}\n  }},\n  \"up\": {{ \"ablation_s\": {up_old_s:.3}, \"pooled_s\": {up_new_s:.3}, \"ablation_alloc_rounds\": {}, \"pooled_alloc_rounds\": {} }}\n}}\n",
+        "{{\n  \"bench\": \"wire\",\n  \"steps\": {steps},\n  \"copy_reduction_16mib_mesh\": {reduction:.2},\n  \"tap_disabled_ns_per_frame\": {tap_ns:.2},\n  \"serve\": {{\n    \"local\": {{\n{}\n    }},\n    \"mesh\": {{\n{}\n    }}\n  }},\n  \"up\": {{ \"ablation_s\": {up_old_s:.3}, \"pooled_s\": {up_new_s:.3}, \"ablation_alloc_rounds\": {}, \"pooled_alloc_rounds\": {} }}\n}}\n",
         section(&local_rows),
         section(&mesh_rows),
         up_old_p.alloc_rounds,

@@ -1,11 +1,19 @@
 //! Run reports: per-node transport statistics + workflow totals, the
 //! raw material for every table/figure bench.
+//!
+//! Counter plumbing is registry-driven (see [`crate::obs::counters`]):
+//! a [`NodeReport`] carries one merged [`VolStats`] per task node and
+//! merging/JSON/wire all iterate [`VolStats::DEFS`] instead of naming
+//! fields, so a counter added to the family shows up everywhere at
+//! once.
 
 use std::time::Duration;
 
 use crate::error::{Result, WilkinsError};
 use crate::graph::WorkflowGraph;
 use crate::lowfive::VolStats;
+use crate::obs::json::{Arr, Obj};
+use crate::obs::{merge_values, CounterDef, TelemetrySummary, GLOBAL_DEFS};
 
 /// One rank's raw result: crate-visible so the multi-process substrate
 /// (`net::`) can ship outcomes across the wire and merge them with
@@ -16,40 +24,31 @@ pub(crate) struct RankOutcome {
     pub error: Option<String>,
 }
 
-/// Aggregated statistics of one task instance.
+/// Aggregated statistics of one task instance: the node's identity
+/// plus its rank-merged counter family. Derefs to [`VolStats`], so
+/// counters read as direct fields (`report.nodes[0].bytes_served`).
 #[derive(Debug, Clone)]
 pub struct NodeReport {
+    /// Task name from the workflow graph.
     pub name: String,
+    /// Ranks the task ran on.
     pub nprocs: usize,
-    pub files_served: u64,
-    pub serves_skipped: u64,
-    /// Rounds discarded by a dropping flow policy (Sec. 3.6).
-    pub serves_dropped: u64,
-    pub serves_suppressed: u64,
-    pub bytes_served: u64,
-    /// Serve bytes handed over the zero-copy same-process path.
-    pub bytes_shared: u64,
-    /// Serve bytes that took the encode/decode round-trip.
-    pub bytes_copied: u64,
-    /// Encoded serve rounds that had to allocate a fresh reply buffer
-    /// (pool misses; zero at steady state).
-    pub alloc_rounds: u64,
-    /// Bytes encoded into recycled pool buffers (allocation-free).
-    pub bytes_pooled: u64,
-    pub files_opened: u64,
-    pub bytes_read: u64,
-    /// Max across ranks (the critical-path wait).
-    pub serve_wait: Duration,
-    pub open_wait: Duration,
-    /// Time the producer stalled on flow credits (max across ranks).
-    pub stall_wait: Duration,
-    /// High-water mark of any flow round buffer (max across ranks).
-    pub max_queue_depth: u64,
+    /// Counters merged across the node's ranks per
+    /// [`VolStats::DEFS`] semantics.
+    pub stats: VolStats,
+}
+
+impl std::ops::Deref for NodeReport {
+    type Target = VolStats;
+
+    fn deref(&self) -> &VolStats {
+        &self.stats
+    }
 }
 
 /// Fault-tolerance counters of one run or campaign. All zero on a
-/// healthy run; any nonzero value surfaces as a greppable `faults:`
-/// line in the rendered report.
+/// healthy run; the `faults:` report line is emitted unconditionally
+/// so downstream greps never miss the column.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultStats {
     /// Workers declared dead (socket closed or heartbeat deadline
@@ -67,26 +66,54 @@ pub struct FaultStats {
 }
 
 impl FaultStats {
+    /// The registered counter family, in wire/JSON order (append
+    /// only). Fault counters all sum across runs of a campaign.
+    pub const DEFS: &'static [CounterDef] = &[
+        CounterDef::sum("lost_workers"),
+        CounterDef::sum("retries"),
+        CounterDef::sum("heartbeat_misses"),
+        CounterDef::sum("dup_done"),
+    ];
+
+    /// The family's values in [`FaultStats::DEFS`] order.
+    pub fn counter_values(&self) -> Vec<u64> {
+        vec![self.lost_workers, self.retries, self.heartbeat_misses, self.dup_done]
+    }
+
+    /// Rebuild from [`FaultStats::DEFS`]-ordered values.
+    pub fn from_counter_values(vals: &[u64]) -> FaultStats {
+        assert_eq!(vals.len(), Self::DEFS.len(), "FaultStats counter count mismatch");
+        FaultStats {
+            lost_workers: vals[0],
+            retries: vals[1],
+            heartbeat_misses: vals[2],
+            dup_done: vals[3],
+        }
+    }
+
     /// Did any fault machinery engage?
     pub fn any(&self) -> bool {
         *self != FaultStats::default()
     }
 
     /// The greppable one-line summary (shared by workflow and
-    /// ensemble reports; ci/check.sh asserts on it).
+    /// ensemble reports; ci/check.sh asserts on it). Registry-driven:
+    /// one `name=value` column per registered counter.
     pub fn render_line(&self) -> String {
-        format!(
-            "faults: lost_workers={} retries={} heartbeat_misses={} dup_done={}\n",
-            self.lost_workers, self.retries, self.heartbeat_misses, self.dup_done
-        )
+        let mut s = String::from("faults:");
+        for (d, v) in Self::DEFS.iter().zip(self.counter_values()) {
+            s.push_str(&format!(" {}={v}", d.name));
+        }
+        s.push('\n');
+        s
     }
 
-    /// Accumulate another run's counters into this one.
+    /// Accumulate another run's counters into this one (registered
+    /// semantics: all sums).
     pub fn absorb(&mut self, other: &FaultStats) {
-        self.lost_workers += other.lost_workers;
-        self.retries += other.retries;
-        self.heartbeat_misses += other.heartbeat_misses;
-        self.dup_done += other.dup_done;
+        let mut vals = self.counter_values();
+        merge_values(&mut vals, &other.counter_values(), Self::DEFS);
+        *self = FaultStats::from_counter_values(&vals);
     }
 }
 
@@ -100,6 +127,10 @@ pub struct RunReport {
     pub nodes: Vec<NodeReport>,
     /// Fault-tolerance counters; all zero on a healthy run.
     pub faults: FaultStats,
+    /// Live worker telemetry collected while the run executed (empty
+    /// for single-process runs and on worker-side partial reports —
+    /// only the coordinator that hosts a pool fills it in).
+    pub telemetry: TelemetrySummary,
 }
 
 impl RunReport {
@@ -107,7 +138,24 @@ impl RunReport {
         self.nodes.iter().find(|n| n.name == name)
     }
 
-    /// Pretty table for the CLI.
+    /// Sum one registered [`VolStats`] counter across all nodes
+    /// (`0` for names not in the registry).
+    pub fn sum_counter(&self, name: &str) -> u64 {
+        self.nodes
+            .iter()
+            .filter_map(|n| n.stats.counter(name))
+            .fold(0, |a, v| a.saturating_add(v))
+    }
+
+    /// Max of one registered [`VolStats`] counter across all nodes.
+    pub fn max_counter(&self, name: &str) -> u64 {
+        self.nodes.iter().filter_map(|n| n.stats.counter(name)).max().unwrap_or(0)
+    }
+
+    /// Pretty table for the CLI. The `flow:`/`dataplane:`/`wire:`/
+    /// `faults:` summary lines are emitted *unconditionally* (zeros
+    /// included) so downstream greps and parsers always find every
+    /// column.
     pub fn render(&self) -> String {
         let mut s = format!(
             "workflow completed in {:.3}s  ({} ranks, {} msgs, {:.1} MiB sent)\n",
@@ -137,42 +185,80 @@ impl RunReport {
                 n.stall_wait.as_secs_f64()
             ));
         }
-        // One greppable flow-control summary (ci/check.sh asserts on
-        // it) whenever backpressure actually engaged.
-        let dropped: u64 = self.nodes.iter().map(|n| n.serves_dropped).sum();
+        // Greppable summary lines (ci/check.sh asserts on them).
+        let dropped = self.sum_counter("serves_dropped");
         let stalled: f64 = self.nodes.iter().map(|n| n.stall_wait.as_secs_f64()).sum();
-        let maxq = self.nodes.iter().map(|n| n.max_queue_depth).max().unwrap_or(0);
-        // Only when flow control did something beyond the synchronous
-        // default (depth-1 block stalls on every serve by definition).
-        if dropped > 0 || maxq > 1 {
+        let maxq = self.max_counter("max_queue_depth");
+        s.push_str(&format!(
+            "flow: dropped={dropped} stalled={stalled:.3}s max_queue_depth={maxq}\n"
+        ));
+        s.push_str(&format!(
+            "dataplane: bytes_shared={} bytes_copied={}\n",
+            self.sum_counter("bytes_shared"),
+            self.sum_counter("bytes_copied")
+        ));
+        // alloc_rounds must read 0 once the buffer pool is warm —
+        // every nonzero value is a serve round that paid an allocation.
+        s.push_str(&format!(
+            "wire: alloc_rounds={} bytes_pooled={}\n",
+            self.sum_counter("alloc_rounds"),
+            self.sum_counter("bytes_pooled")
+        ));
+        s.push_str(&self.faults.render_line());
+        if !self.telemetry.is_empty() {
             s.push_str(&format!(
-                "flow: dropped={dropped} stalled={stalled:.3}s max_queue_depth={maxq}\n"
+                "telemetry: frames={} workers={}\n",
+                self.telemetry.frames, self.telemetry.workers
             ));
-        }
-        // One greppable data-plane summary (ci/check.sh asserts on
-        // it): how many serve bytes took the zero-copy same-process
-        // path vs the encode/decode round-trip.
-        let shared: u64 = self.nodes.iter().map(|n| n.bytes_shared).sum();
-        let copied: u64 = self.nodes.iter().map(|n| n.bytes_copied).sum();
-        if shared > 0 || copied > 0 {
-            s.push_str(&format!("dataplane: bytes_shared={shared} bytes_copied={copied}\n"));
-        }
-        // One greppable wire summary (ci/check.sh asserts on it):
-        // allocation discipline of the encode hot path. alloc_rounds
-        // must read 0 once the buffer pool is warm — every nonzero
-        // value is a serve round that paid an allocation.
-        let alloc_rounds: u64 = self.nodes.iter().map(|n| n.alloc_rounds).sum();
-        let pooled: u64 = self.nodes.iter().map(|n| n.bytes_pooled).sum();
-        if alloc_rounds > 0 || pooled > 0 {
-            s.push_str(&format!("wire: alloc_rounds={alloc_rounds} bytes_pooled={pooled}\n"));
-        }
-        // One greppable fault summary (ci/check.sh chaos smoke asserts
-        // on it) whenever any liveness machinery engaged.
-        if self.faults.any() {
-            s.push_str(&self.faults.render_line());
         }
         s
     }
+
+    /// Machine-readable report (schema `wilkins.run_report/1`; see
+    /// docs/observability.md). Replaces grep-the-summary-line parsing:
+    /// every registered counter appears by name under its node.
+    pub fn to_json(&self) -> String {
+        let mut nodes = Arr::new();
+        for n in &self.nodes {
+            let mut counters = Obj::new();
+            for (d, v) in VolStats::DEFS.iter().zip(n.stats.counter_values()) {
+                counters.field_u64(d.name, v);
+            }
+            let mut node = Obj::new();
+            node.field_str("name", &n.name)
+                .field_u64("nprocs", n.nprocs as u64)
+                .field_raw("counters", &counters.finish());
+            nodes.push_raw(&node.finish());
+        }
+        let mut faults = Obj::new();
+        for (d, v) in FaultStats::DEFS.iter().zip(self.faults.counter_values()) {
+            faults.field_u64(d.name, v);
+        }
+        let mut o = Obj::new();
+        o.field_str("schema", "wilkins.run_report/1")
+            .field_f64("elapsed_s", self.elapsed.as_secs_f64())
+            .field_u64("total_ranks", self.total_ranks as u64)
+            .field_u64("bytes_sent", self.bytes_sent)
+            .field_u64("msgs_sent", self.msgs_sent)
+            .field_raw("nodes", &nodes.finish())
+            .field_raw("faults", &faults.finish())
+            .field_raw("telemetry", &telemetry_json(&self.telemetry));
+        o.finish()
+    }
+}
+
+/// Serialize a [`TelemetrySummary`] (shared by run and ensemble
+/// report JSON).
+pub(crate) fn telemetry_json(t: &TelemetrySummary) -> String {
+    let mut counters = Obj::new();
+    for (i, d) in GLOBAL_DEFS.iter().enumerate() {
+        counters.field_u64(d.name, t.counters.get(i).copied().unwrap_or(0));
+    }
+    let mut o = Obj::new();
+    o.field_u64("frames", t.frames)
+        .field_u64("workers", t.workers)
+        .field_raw("counters", &counters.finish());
+    o.finish()
 }
 
 pub(crate) fn build(
@@ -203,42 +289,13 @@ pub(crate) fn build(
         .map(|n| NodeReport {
             name: n.name.clone(),
             nprocs: n.nprocs,
-            files_served: 0,
-            serves_skipped: 0,
-            serves_dropped: 0,
-            serves_suppressed: 0,
-            bytes_served: 0,
-            bytes_shared: 0,
-            bytes_copied: 0,
-            alloc_rounds: 0,
-            bytes_pooled: 0,
-            files_opened: 0,
-            bytes_read: 0,
-            serve_wait: Duration::ZERO,
-            open_wait: Duration::ZERO,
-            stall_wait: Duration::ZERO,
-            max_queue_depth: 0,
+            stats: VolStats::default(),
         })
         .collect();
     for o in outcomes {
-        let n = &mut nodes[o.node];
-        // files_served/opened are per-rank counters of the same events;
-        // report the max (rank counts agree on I/O ranks).
-        n.files_served = n.files_served.max(o.stats.files_served);
-        n.serves_skipped = n.serves_skipped.max(o.stats.serves_skipped);
-        n.serves_dropped = n.serves_dropped.max(o.stats.serves_dropped);
-        n.serves_suppressed = n.serves_suppressed.max(o.stats.serves_suppressed);
-        n.files_opened = n.files_opened.max(o.stats.files_opened);
-        n.bytes_served += o.stats.bytes_served;
-        n.bytes_shared += o.stats.bytes_shared;
-        n.bytes_copied += o.stats.bytes_copied;
-        n.alloc_rounds += o.stats.alloc_rounds;
-        n.bytes_pooled += o.stats.bytes_pooled;
-        n.bytes_read += o.stats.bytes_read;
-        n.serve_wait = n.serve_wait.max(o.stats.serve_wait);
-        n.open_wait = n.open_wait.max(o.stats.open_wait);
-        n.stall_wait = n.stall_wait.max(o.stats.stall_wait);
-        n.max_queue_depth = n.max_queue_depth.max(o.stats.max_queue_depth);
+        // One registry-driven merge instead of sixteen hand-written
+        // field folds: Sum/Max semantics live in VolStats::DEFS.
+        nodes[o.node].stats.merge_from(&o.stats);
     }
     Ok(RunReport {
         elapsed,
@@ -247,5 +304,90 @@ pub(crate) fn build(
         msgs_sent,
         nodes,
         faults: FaultStats::default(),
+        telemetry: TelemetrySummary::default(),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(bytes_served: u64, files_served: u64) -> VolStats {
+        VolStats { bytes_served, files_served, ..VolStats::default() }
+    }
+
+    fn report_two_nodes() -> RunReport {
+        RunReport {
+            elapsed: Duration::from_millis(1500),
+            total_ranks: 3,
+            bytes_sent: 4096,
+            msgs_sent: 7,
+            nodes: vec![
+                NodeReport { name: "prod".into(), nprocs: 2, stats: stats(1024, 4) },
+                NodeReport { name: "cons".into(), nprocs: 1, stats: stats(0, 0) },
+            ],
+            faults: FaultStats::default(),
+            telemetry: TelemetrySummary::default(),
+        }
+    }
+
+    #[test]
+    fn deref_exposes_counters_as_fields() {
+        let r = report_two_nodes();
+        assert_eq!(r.nodes[0].bytes_served, 1024);
+        assert_eq!(r.node("prod").unwrap().files_served, 4);
+    }
+
+    #[test]
+    fn summary_lines_unconditional() {
+        let r = report_two_nodes();
+        let out = r.render();
+        // All four greppable lines appear even when every value is 0.
+        for line in ["flow: dropped=0", "dataplane: bytes_shared=0", "wire: alloc_rounds=0", "faults: lost_workers=0"] {
+            assert!(out.contains(line), "missing `{line}` in:\n{out}");
+        }
+    }
+
+    #[test]
+    fn fault_line_registry_driven() {
+        let f = FaultStats { lost_workers: 1, retries: 2, heartbeat_misses: 3, dup_done: 4 };
+        assert_eq!(
+            f.render_line(),
+            "faults: lost_workers=1 retries=2 heartbeat_misses=3 dup_done=4\n"
+        );
+        let mut acc = FaultStats::default();
+        acc.absorb(&f);
+        acc.absorb(&f);
+        assert_eq!(acc.counter_values(), vec![2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn json_report_has_schema_and_counters() {
+        let mut r = report_two_nodes();
+        r.faults.lost_workers = 1;
+        r.telemetry = TelemetrySummary {
+            frames: 5,
+            workers: 2,
+            counters: vec![0; GLOBAL_DEFS.len()],
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"schema\":\"wilkins.run_report/1\""));
+        assert!(j.contains("\"bytes_served\":1024"));
+        assert!(j.contains("\"lost_workers\":1"));
+        assert!(j.contains("\"frames\":5"));
+        // Every registered VolStats counter is present by name.
+        for d in VolStats::DEFS {
+            assert!(j.contains(&format!("\"{}\":", d.name)), "missing counter {}", d.name);
+        }
+    }
+
+    #[test]
+    fn sum_and_max_counters() {
+        let mut r = report_two_nodes();
+        r.nodes[1].stats.bytes_served = 76;
+        r.nodes[1].stats.max_queue_depth = 9;
+        assert_eq!(r.sum_counter("bytes_served"), 1100);
+        assert_eq!(r.max_counter("max_queue_depth"), 9);
+        assert_eq!(r.sum_counter("no_such_counter"), 0);
+    }
 }

@@ -61,6 +61,7 @@ use crate::henson::Registry;
 use crate::metrics::{MergedTrace, Span};
 use crate::net::proto::RunInstance;
 use crate::net::WorkerPool;
+use crate::obs::InstantEvent;
 use crate::runtime::EngineHandle;
 
 /// What an instance thread sends back when its workflow completes.
@@ -291,6 +292,8 @@ impl Ensemble {
             instances,
             trace,
             faults: crate::coordinator::FaultStats::default(),
+            events: Vec::new(),
+            telemetry: Default::default(),
         })
     }
 
@@ -346,6 +349,9 @@ impl Ensemble {
         let mut idle_rounds = 0u32;
         // Fault accounting + the per-instance re-dispatch budget.
         let mut faults = crate::coordinator::FaultStats::default();
+        // Instant events on the ensemble clock — the `--trace`
+        // exporter paints these onto the merged timeline.
+        let mut events: Vec<InstantEvent> = Vec::new();
         let mut retries_left = vec![self.spec.retries; n];
         // Defense in depth behind the pool's idempotency-key dedup: an
         // instance that already completed is never recorded twice.
@@ -422,6 +428,15 @@ impl Ensemble {
                         Err(e) => e.to_string(),
                         Ok(_) => unreachable!("matched Err above"),
                     };
+                    events.push(InstantEvent {
+                        rank: 0,
+                        name: "WorkerLost".into(),
+                        t: done.finished_s,
+                        attrs: vec![
+                            ("instance".into(), self.spec.instances[idx].name.clone()),
+                            ("error".into(), why.clone()),
+                        ],
+                    });
                     if pool.alive() == 0 {
                         return Err(WilkinsError::Task(format!(
                             "ensemble campaign lost every worker (last: {why})"
@@ -430,6 +445,15 @@ impl Ensemble {
                     if retries_left[idx] > 0 {
                         retries_left[idx] -= 1;
                         faults.retries += 1;
+                        events.push(InstantEvent {
+                            rank: 0,
+                            name: "Requeue".into(),
+                            t: origin.elapsed().as_secs_f64(),
+                            attrs: vec![(
+                                "instance".into(),
+                                self.spec.instances[idx].name.clone(),
+                            )],
+                        });
                         sched.requeue(idx);
                         continue;
                     }
@@ -499,6 +523,8 @@ impl Ensemble {
             instances,
             trace,
             faults,
+            events,
+            telemetry: pool.telemetry_summary(),
         })
     }
 

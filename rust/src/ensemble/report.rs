@@ -1,10 +1,15 @@
 //! Ensemble run reports: per-instance [`RunReport`]s plus scheduling
-//! facts (admission times, packing peak) and the merged Gantt trace.
+//! facts (admission times, packing peak), the merged Gantt trace,
+//! coordinator-side instant events (worker losses, re-dispatches) and
+//! the campaign's live telemetry summary.
 
 use std::time::Duration;
 
+use crate::coordinator::report::telemetry_json;
 use crate::coordinator::{FaultStats, RunReport};
 use crate::metrics::MergedTrace;
+use crate::obs::json::{Arr, Obj};
+use crate::obs::{InstantEvent, TelemetrySummary};
 
 use super::scheduler::{Placement, Policy};
 
@@ -54,6 +59,14 @@ pub struct EnsembleReport {
     /// re-dispatches, heartbeat misses, duplicate completions dropped.
     /// All-zero on a healthy campaign.
     pub faults: FaultStats,
+    /// Coordinator-side instant events on the ensemble clock —
+    /// `WorkerLost` and `Requeue` markers that the `--trace` exporter
+    /// paints onto the merged timeline.
+    pub events: Vec<InstantEvent>,
+    /// Live worker telemetry collected across the campaign (empty
+    /// under thread placement — there are no worker processes to
+    /// sample).
+    pub telemetry: TelemetrySummary,
 }
 
 impl EnsembleReport {
@@ -61,7 +74,9 @@ impl EnsembleReport {
         self.instances.iter().find(|i| i.name == name)
     }
 
-    /// Pretty per-instance table for the CLI.
+    /// Pretty per-instance table for the CLI. The `faults:` line is
+    /// emitted unconditionally (zeros included), matching
+    /// [`RunReport::render`].
     pub fn render(&self) -> String {
         let where_run = match self.workers {
             Some(w) => format!("{} on {w} workers", self.placement),
@@ -83,13 +98,12 @@ impl EnsembleReport {
             "bytes_moved", "shared"
         ));
         for i in &self.instances {
-            let served: u64 = i.report.nodes.iter().map(|n| n.files_served).sum();
-            let dropped: u64 = i.report.nodes.iter().map(|n| n.serves_dropped).sum();
-            let opened: u64 = i.report.nodes.iter().map(|n| n.files_opened).sum();
-            // Zero-copy serve bytes (the routed data plane's fast
-            // path); under process placement instances run whole in
-            // one worker, so same-process serves stay shared there.
-            let shared: u64 = i.report.nodes.iter().map(|n| n.bytes_shared).sum();
+            // Registry-driven sums (the old hand-written per-field
+            // folds now live once, in `RunReport::sum_counter`). The
+            // `shared` column is the zero-copy serve bytes of the
+            // routed data plane's fast path; under process placement
+            // instances run whole in one worker, so same-process
+            // serves stay shared there.
             s.push_str(&format!(
                 "{:<20} {:>6} {:>8.3}s {:>8.3}s {:>8.3}s {:>8} {:>8} {:>8} {:>12} {:>12}\n",
                 i.name,
@@ -97,16 +111,65 @@ impl EnsembleReport {
                 i.started_s,
                 i.finished_s,
                 i.elapsed_s(),
-                served,
-                dropped,
-                opened,
+                i.report.sum_counter("files_served"),
+                i.report.sum_counter("serves_dropped"),
+                i.report.sum_counter("files_opened"),
                 i.report.bytes_sent,
-                shared
+                i.report.sum_counter("bytes_shared")
             ));
         }
-        if self.faults.any() {
-            s.push_str(&self.faults.render_line());
+        s.push_str(&self.faults.render_line());
+        if !self.telemetry.is_empty() {
+            s.push_str(&format!(
+                "telemetry: frames={} workers={}\n",
+                self.telemetry.frames, self.telemetry.workers
+            ));
         }
         s
+    }
+
+    /// Machine-readable report (schema `wilkins.ensemble_report/1`;
+    /// see docs/observability.md). Per-instance workflow reports embed
+    /// their own [`RunReport::to_json`] objects.
+    pub fn to_json(&self) -> String {
+        let mut instances = Arr::new();
+        for i in &self.instances {
+            let mut o = Obj::new();
+            o.field_str("name", &i.name)
+                .field_u64("ranks", i.ranks as u64)
+                .field_f64("started_s", i.started_s)
+                .field_f64("finished_s", i.finished_s)
+                .field_raw("report", &i.report.to_json());
+            instances.push_raw(&o.finish());
+        }
+        let mut events = Arr::new();
+        for e in &self.events {
+            let mut attrs = Obj::new();
+            for (k, v) in &e.attrs {
+                attrs.field_str(k, v);
+            }
+            let mut o = Obj::new();
+            o.field_str("name", &e.name)
+                .field_u64("rank", e.rank as u64)
+                .field_f64("t_s", e.t)
+                .field_raw("attrs", &attrs.finish());
+            events.push_raw(&o.finish());
+        }
+        let mut faults = Obj::new();
+        for (d, v) in FaultStats::DEFS.iter().zip(self.faults.counter_values()) {
+            faults.field_u64(d.name, v);
+        }
+        let mut o = Obj::new();
+        o.field_str("schema", "wilkins.ensemble_report/1")
+            .field_f64("elapsed_s", self.elapsed.as_secs_f64())
+            .field_u64("budget", self.budget as u64)
+            .field_u64("peak_ranks", self.peak_ranks as u64)
+            .field_u64("rounds", self.rounds)
+            .field_str("placement", &self.placement.to_string())
+            .field_raw("instances", &instances.finish())
+            .field_raw("events", &events.finish())
+            .field_raw("faults", &faults.finish())
+            .field_raw("telemetry", &telemetry_json(&self.telemetry));
+        o.finish()
     }
 }

@@ -22,8 +22,12 @@
 //!   payloads (`artifacts/*.hlo.txt`), shared across ensemble
 //!   instances.
 //! * [`tasks`] / [`actions`] — built-in task codes and custom actions.
+//! * [`obs`] — the unified observability plane: the structured
+//!   [`obs::TraceRecorder`], the counter registry, live worker
+//!   telemetry, the `WILKINS_TRACE_WIRE` frame tap, and the
+//!   Chrome-trace / JSON exporters (docs/observability.md).
 //! * [`metrics`] — Gantt tracing and per-run statistics, including
-//!   merged ensemble traces.
+//!   merged ensemble traces — a *view* over the [`obs`] trace.
 
 pub mod actions;
 pub mod baseline;
@@ -49,6 +53,10 @@ pub mod henson;
 pub mod lowfive;
 pub mod metrics;
 pub mod net;
+// The observability plane is documented surface end to end
+// (docs/observability.md: trace model, wire-tap format, JSON schemas).
+#[warn(missing_docs)]
+pub mod obs;
 pub mod proptest_lite;
 pub mod runtime;
 pub mod sim;

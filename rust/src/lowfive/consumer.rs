@@ -151,7 +151,12 @@ impl ConsumerEngine {
                     self.cursor = (idx + 1) % n;
                     cx.stats.files_opened += 1;
                     cx.stats.open_wait += t0.elapsed();
-                    cx.record_span(SpanKind::Idle, &format!("open {name}"), t0);
+                    cx.record_span_with(
+                        SpanKind::Idle,
+                        &format!("open {name}"),
+                        t0,
+                        vec![("file".into(), name.clone())],
+                    );
                     return Ok(name);
                 }
             }
@@ -194,7 +199,12 @@ impl ConsumerEngine {
                     self.cursor = (idx + 1) % n;
                     cx.stats.files_opened += 1;
                     cx.stats.open_wait += t0.elapsed();
-                    cx.record_span(SpanKind::Idle, &format!("open {name}"), t0);
+                    cx.record_span_with(
+                        SpanKind::Idle,
+                        &format!("open {name}"),
+                        t0,
+                        vec![("file".into(), name.clone())],
+                    );
                     return Ok(name);
                 }
                 None => continue, // hit EOF on this channel; try next

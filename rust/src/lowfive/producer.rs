@@ -195,7 +195,15 @@ impl ProducerEngine {
             self.enqueue_round(cx, idx, Arc::clone(file), disk)?;
         }
         cx.stats.serve_wait += t0.elapsed();
-        cx.record_span(SpanKind::Transfer, &format!("serve {name}"), t0);
+        cx.record_span_with(
+            SpanKind::Transfer,
+            &format!("serve {name}"),
+            t0,
+            vec![
+                ("file".into(), name.to_string()),
+                ("bytes_served".into(), cx.stats.bytes_served.to_string()),
+            ],
+        );
         self.sync_flow_stats(cx.stats);
         Ok(())
     }
@@ -279,7 +287,12 @@ impl ProducerEngine {
                 self.pump_one_blocking(cx, idx)?;
             }
             self.channels[idx].link.note_stall(t0.elapsed());
-            cx.record_span(SpanKind::Stall, "flow stall", t0);
+            cx.record_span_with(
+                SpanKind::Stall,
+                "flow stall",
+                t0,
+                vec![("channel".into(), idx.to_string())],
+            );
         }
         Ok(())
     }

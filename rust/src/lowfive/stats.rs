@@ -7,6 +7,7 @@ use std::time::{Duration, Instant};
 
 use crate::comm::Comm;
 use crate::metrics::{Recorder, SpanKind};
+use crate::obs::CounterDef;
 
 /// Transport statistics (observability for the benches).
 #[derive(Debug, Default, Clone)]
@@ -54,6 +55,93 @@ pub struct VolStats {
     pub open_wait: Duration,
 }
 
+impl VolStats {
+    /// The registered counter family, in wire/JSON order (append
+    /// only). Merge semantics across the SPMD ranks of one node:
+    /// byte totals `Sum`; per-rank round counts, waits and high-water
+    /// marks `Max` (each rank of a node sees the whole story, so
+    /// summing would double-count — exactly the old hand-written merge
+    /// in `coordinator::report::build`, now declared once).
+    pub const DEFS: &'static [CounterDef] = &[
+        CounterDef::max("files_served"),
+        CounterDef::max("serves_skipped"),
+        CounterDef::max("serves_dropped"),
+        CounterDef::max("serves_suppressed"),
+        CounterDef::sum("bytes_served"),
+        CounterDef::sum("bytes_shared"),
+        CounterDef::sum("bytes_copied"),
+        CounterDef::sum("alloc_rounds"),
+        CounterDef::sum("bytes_pooled"),
+        CounterDef::max("files_opened"),
+        CounterDef::sum("bytes_read"),
+        CounterDef::max("max_queue_depth"),
+        CounterDef::max("serve_wait_ns"),
+        CounterDef::max("stall_wait_ns"),
+        CounterDef::max("open_wait_ns"),
+    ];
+
+    /// The family's values in [`VolStats::DEFS`] order (durations as
+    /// nanoseconds, the wire/JSON representation).
+    pub fn counter_values(&self) -> Vec<u64> {
+        vec![
+            self.files_served,
+            self.serves_skipped,
+            self.serves_dropped,
+            self.serves_suppressed,
+            self.bytes_served,
+            self.bytes_shared,
+            self.bytes_copied,
+            self.alloc_rounds,
+            self.bytes_pooled,
+            self.files_opened,
+            self.bytes_read,
+            self.max_queue_depth,
+            self.serve_wait.as_nanos() as u64,
+            self.stall_wait.as_nanos() as u64,
+            self.open_wait.as_nanos() as u64,
+        ]
+    }
+
+    /// Rebuild from [`VolStats::DEFS`]-ordered values (inverse of
+    /// [`VolStats::counter_values`]).
+    pub fn from_counter_values(vals: &[u64]) -> VolStats {
+        assert_eq!(vals.len(), Self::DEFS.len(), "VolStats counter count mismatch");
+        VolStats {
+            files_served: vals[0],
+            serves_skipped: vals[1],
+            serves_dropped: vals[2],
+            serves_suppressed: vals[3],
+            bytes_served: vals[4],
+            bytes_shared: vals[5],
+            bytes_copied: vals[6],
+            alloc_rounds: vals[7],
+            bytes_pooled: vals[8],
+            files_opened: vals[9],
+            bytes_read: vals[10],
+            max_queue_depth: vals[11],
+            serve_wait: Duration::from_nanos(vals[12]),
+            stall_wait: Duration::from_nanos(vals[13]),
+            open_wait: Duration::from_nanos(vals[14]),
+        }
+    }
+
+    /// Merge another rank's counters into this one per the family's
+    /// registered semantics.
+    pub fn merge_from(&mut self, other: &VolStats) {
+        let mut vals = self.counter_values();
+        crate::obs::merge_values(&mut vals, &other.counter_values(), Self::DEFS);
+        *self = VolStats::from_counter_values(&vals);
+    }
+
+    /// Look up one counter by its registered name (`None` for unknown
+    /// names). Report renderers and JSON export go through this, so a
+    /// counter added to [`VolStats::DEFS`] is automatically visible.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        let idx = Self::DEFS.iter().position(|d| d.name == name)?;
+        Some(self.counter_values()[idx])
+    }
+}
+
 /// The borrowed slice of a [`Vol`](super::Vol) the engines work
 /// against: stats, the I/O communicator, the workdir and the
 /// recorder, carved out so engine methods can mutate channel state
@@ -79,10 +167,18 @@ pub(super) struct EngineCx<'a> {
 }
 
 impl EngineCx<'_> {
-    /// Record a span against this rank's Gantt timeline.
-    pub(super) fn record_span(&self, kind: SpanKind, label: &str, t0: Instant) {
+    /// Record a span against this rank's timeline, with key=value
+    /// attributes (dataset names, byte counts) for the structured
+    /// trace.
+    pub(super) fn record_span_with(
+        &self,
+        kind: SpanKind,
+        label: &str,
+        t0: Instant,
+        attrs: Vec<(String, String)>,
+    ) {
         if let Some((rec, rank)) = self.recorder {
-            rec.record(*rank, kind, label, t0, Instant::now());
+            rec.record_with(*rank, kind, label, t0, Instant::now(), attrs);
         }
     }
 }

@@ -4,6 +4,7 @@
 //! Usage:
 //!   wilkins run <config.yaml> [--time-scale S] [--workdir DIR]
 //!                             [--artifacts DIR] [--gantt FILE.csv]
+//!                             [--trace FILE.json] [--json FILE.json]
 //!   wilkins up <config-or-spec.yaml> [--workers N] [...]
 //!   wilkins ensemble <spec.yaml> [--budget N] [--policy P] [--dry-run] [...]
 //!   wilkins worker --connect ADDR --id K
@@ -50,11 +51,18 @@ OPTIONS (run):
                        $WILKINS_ARTIFACTS); only workflows using the
                        science payloads need it
     --gantt FILE.csv   write the span trace as CSV after the run
+    --trace FILE.json  write a merged Chrome trace (chrome://tracing /
+                       Perfetto) after the run
+    --json FILE.json   write the machine-readable run report
 
 OPTIONS (up, in addition to the run options):
     --workers N        worker processes in the pool (default: host
                        parallelism, capped at the node/instance count)
     --budget N, --policy P     honored for ensemble specs
+    (--trace merges every worker's spans onto the coordinator clock,
+     one process track per worker, with flow arrows for cross-worker
+     serves; set WILKINS_TRACE_WIRE=1 to also log every wire frame to
+     a per-process .wtap file — see docs/observability.md)
 
 OPTIONS (ensemble, in addition to the run options):
     --budget N         override the spec's max_ranks rank budget
@@ -62,8 +70,9 @@ OPTIONS (ensemble, in addition to the run options):
     --workers N        pool width when the spec asks for
                        placement: process-per-instance
     --dry-run          print the co-scheduler's packing plan and exit
-    (--gantt writes the merged per-instance trace; one shared AOT
-     engine serves every instance)
+    (--gantt writes the merged per-instance trace; --trace additionally
+     paints WorkerLost/Requeue markers; one shared AOT engine serves
+     every instance)
 ";
 
 fn main() -> ExitCode {
@@ -170,6 +179,8 @@ struct RunOpts {
     workdir: Option<PathBuf>,
     artifacts: PathBuf,
     gantt: Option<PathBuf>,
+    trace: Option<PathBuf>,
+    json: Option<PathBuf>,
 }
 
 fn take_run_opts(args: &mut Vec<String>) -> wilkins::Result<RunOpts> {
@@ -184,12 +195,91 @@ fn take_run_opts(args: &mut Vec<String>) -> wilkins::Result<RunOpts> {
             .map(PathBuf::from)
             .unwrap_or_else(Engine::default_dir),
         gantt: take_opt(args, "--gantt").map(PathBuf::from),
+        trace: take_opt(args, "--trace").map(PathBuf::from),
+        json: take_opt(args, "--json").map(PathBuf::from),
     })
+}
+
+/// Write an exporter artifact and tell the user where it landed.
+fn write_artifact(path: &Path, what: &str, content: &str) -> wilkins::Result<()> {
+    std::fs::write(path, content)?;
+    println!("{what} written to {}", path.display());
+    Ok(())
+}
+
+/// Chrome trace for a single-process run: one process track, one
+/// thread per rank, every span on the run clock (no offsets).
+fn chrome_of_run(spans: &[wilkins::metrics::Span]) -> String {
+    let mut t = wilkins::obs::ChromeTrace::new();
+    t.process_name(0, "wilkins run");
+    let mut ranks: Vec<usize> = spans.iter().map(|s| s.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    for r in ranks {
+        t.thread_name(0, r as u64, &format!("rank {r}"));
+    }
+    for s in spans {
+        t.add_span(0, s, 0.0);
+    }
+    t.to_json()
+}
+
+/// Chrome trace for a distributed `up` run: one process track per
+/// worker, each worker's spans shifted by its telemetry clock offset,
+/// plus flow arrows pairing cross-worker serves with their opens.
+fn chrome_of_dist(dist: &net::DistTrace) -> String {
+    let mut t = wilkins::obs::ChromeTrace::new();
+    for tr in &dist.tracks {
+        t.process_name(tr.worker as u64, &format!("worker {}", tr.worker));
+        let mut ranks: Vec<usize> = tr.spans.iter().map(|s| s.rank).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        for r in ranks {
+            t.thread_name(tr.worker as u64, r as u64, &format!("rank {r}"));
+        }
+        for s in &tr.spans {
+            t.add_span(tr.worker as u64, s, tr.offset_s);
+        }
+    }
+    let flat: Vec<(u64, &wilkins::metrics::Span, f64)> = dist
+        .tracks
+        .iter()
+        .flat_map(|tr| tr.spans.iter().map(|s| (tr.worker as u64, s, tr.offset_s)))
+        .collect();
+    wilkins::obs::add_serve_open_flows(&mut t, &flat);
+    t.to_json()
+}
+
+/// Chrome trace for an ensemble: one process track per instance (pid
+/// in first-seen order, coordinator on pid 0), the merged trace's
+/// spans already on the ensemble clock, and the coordinator's
+/// WorkerLost/Requeue markers as instant events.
+fn chrome_of_ensemble(report: &wilkins::ensemble::EnsembleReport) -> String {
+    let mut t = wilkins::obs::ChromeTrace::new();
+    t.process_name(0, "coordinator");
+    let mut instances: Vec<String> = Vec::new();
+    for s in report.trace.spans() {
+        let pid = match instances.iter().position(|n| n == &s.instance) {
+            Some(i) => i as u64 + 1,
+            None => {
+                instances.push(s.instance.clone());
+                let pid = instances.len() as u64;
+                t.process_name(pid, &s.instance);
+                pid
+            }
+        };
+        t.span((pid, s.rank as u64), &s.label, s.kind.name(), s.start, s.end, &[]);
+    }
+    for e in &report.events {
+        t.instant(0, e.rank as u64, &e.name, e.t, &e.attrs);
+    }
+    t.to_json()
 }
 
 fn cmd_run(args: &[String]) -> wilkins::Result<()> {
     let mut args = args.to_vec();
-    let RunOpts { time_scale, workdir, artifacts, gantt } = take_run_opts(&mut args)?;
+    let RunOpts { time_scale, workdir, artifacts, gantt, trace, json } =
+        take_run_opts(&mut args)?;
     let path = config_path(&args)?;
 
     let mut w = Wilkins::from_yaml_file(&path, builtin_registry())?
@@ -214,12 +304,19 @@ fn cmd_run(args: &[String]) -> wilkins::Result<()> {
         std::fs::write(&path, recorder.to_csv())?;
         println!("gantt trace written to {}", path.display());
     }
+    if let Some(path) = trace {
+        write_artifact(&path, "chrome trace", &chrome_of_run(&recorder.spans()))?;
+    }
+    if let Some(path) = json {
+        write_artifact(&path, "json report", &report.to_json())?;
+    }
     Ok(())
 }
 
 fn cmd_ensemble(args: &[String]) -> wilkins::Result<()> {
     let mut args = args.to_vec();
-    let RunOpts { time_scale, workdir, artifacts, gantt } = take_run_opts(&mut args)?;
+    let RunOpts { time_scale, workdir, artifacts, gantt, trace, json } =
+        take_run_opts(&mut args)?;
     let budget = take_usize_opt(&mut args, "--budget")?;
     let policy = take_opt(&mut args, "--policy")
         .map(|s| Policy::parse(&s))
@@ -303,6 +400,12 @@ fn cmd_ensemble(args: &[String]) -> wilkins::Result<()> {
         std::fs::write(&path, report.trace.to_csv())?;
         println!("merged gantt trace written to {}", path.display());
     }
+    if let Some(path) = trace {
+        write_artifact(&path, "chrome trace", &chrome_of_ensemble(&report))?;
+    }
+    if let Some(path) = json {
+        write_artifact(&path, "json report", &report.to_json())?;
+    }
     Ok(())
 }
 
@@ -311,7 +414,8 @@ fn cmd_ensemble(args: &[String]) -> wilkins::Result<()> {
 /// instances out process-per-instance.
 fn cmd_up(args: &[String]) -> wilkins::Result<()> {
     let mut args = args.to_vec();
-    let RunOpts { time_scale, workdir, artifacts, gantt } = take_run_opts(&mut args)?;
+    let RunOpts { time_scale, workdir, artifacts, gantt, trace, json } =
+        take_run_opts(&mut args)?;
     let workers_opt = take_usize_opt(&mut args, "--workers")?;
     let budget = take_usize_opt(&mut args, "--budget")?;
     let policy = take_opt(&mut args, "--policy")
@@ -356,6 +460,12 @@ fn cmd_up(args: &[String]) -> wilkins::Result<()> {
             std::fs::write(&p, report.trace.to_csv())?;
             println!("merged gantt trace written to {}", p.display());
         }
+        if let Some(p) = trace {
+            write_artifact(&p, "chrome trace", &chrome_of_ensemble(&report))?;
+        }
+        if let Some(p) = json {
+            write_artifact(&p, "json report", &report.to_json())?;
+        }
         return Ok(());
     }
 
@@ -376,10 +486,28 @@ fn cmd_up(args: &[String]) -> wilkins::Result<()> {
         artifacts: Some(artifacts),
         heartbeat: wilkins::net::HeartbeatConfig::default(),
     };
-    let report = net::run_workflow_distributed(&src, &opts)?;
+    let (report, dist) = net::run_workflow_distributed_traced(&src, &opts)?;
     print!("{}", report.render());
-    if gantt.is_some() {
-        println!("note: --gantt is unavailable for distributed workflow runs (spans stay in the workers)");
+    if let Some(p) = gantt {
+        // Workers ship their spans home in `WorldDone`; shift each
+        // track by its clock offset so one CSV covers the whole world.
+        let mut all: Vec<wilkins::metrics::Span> = Vec::new();
+        for tr in &dist.tracks {
+            all.extend(tr.spans.iter().map(|s| {
+                let mut s = s.clone();
+                s.start += tr.offset_s;
+                s.end += tr.offset_s;
+                s
+            }));
+        }
+        std::fs::write(&p, wilkins::metrics::csv_of(&all))?;
+        println!("gantt trace written to {}", p.display());
+    }
+    if let Some(p) = trace {
+        write_artifact(&p, "chrome trace", &chrome_of_dist(&dist))?;
+    }
+    if let Some(p) = json {
+        write_artifact(&p, "json report", &report.to_json())?;
     }
     Ok(())
 }

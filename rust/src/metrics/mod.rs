@@ -1,90 +1,65 @@
 //! Metrics + Gantt tracing (substrate S11).
 //!
 //! Every rank records timestamped spans — compute, idle (blocked on a
-//! coupled task) and transfer — against a shared origin. The recorder
-//! renders the paper's Figure-5-style Gantt charts as ASCII and CSV,
-//! and aggregates idle/compute totals for the flow-control tables.
+//! coupled task) and transfer — against a shared origin. As of the
+//! observability plane ([`crate::obs`]) the span store itself lives in
+//! [`obs::TraceRecorder`](crate::obs::TraceRecorder); this module is
+//! the *Gantt/CSV view* over that trace: [`Recorder`] wraps a
+//! `TraceRecorder` and renders the paper's Figure-5-style charts,
+//! [`Span`] and [`SpanKind`] are re-exports of the obs types.
 //!
 //! For ensembles (see [`crate::ensemble`]) every workflow instance has
 //! its own [`Recorder`]; a [`MergedTrace`] stitches the per-instance
 //! traces back onto the shared ensemble clock so co-scheduling can be
 //! inspected in one Gantt chart.
 
-use std::sync::Mutex;
 use std::time::Instant;
 
-/// What a rank was doing during a span (Fig. 5 legend).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SpanKind {
-    /// Task computation (blue bars).
-    Compute,
-    /// Blocked waiting on a coupled task (red bars).
-    Idle,
-    /// Data transfer (orange bars).
-    Transfer,
-    /// Producer stalled waiting for flow-control credits (Sec. 3.6);
-    /// a distinguished sub-kind of idle so backpressure is visible in
-    /// the Gantt without reading counters.
-    Stall,
-}
+use crate::obs::TraceRecorder;
 
-impl SpanKind {
-    pub fn glyph(&self) -> char {
-        match self {
-            SpanKind::Compute => '#',
-            SpanKind::Idle => '.',
-            SpanKind::Transfer => '=',
-            SpanKind::Stall => 'x',
-        }
-    }
+pub use crate::obs::{Span, SpanKind};
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            SpanKind::Compute => "compute",
-            SpanKind::Idle => "idle",
-            SpanKind::Transfer => "transfer",
-            SpanKind::Stall => "stall",
-        }
-    }
-}
-
-#[derive(Debug, Clone)]
-pub struct Span {
-    pub rank: usize,
-    pub kind: SpanKind,
-    pub label: String,
-    /// Seconds since recorder origin.
-    pub start: f64,
-    pub end: f64,
-}
-
-/// Shared, thread-safe span recorder.
+/// Shared, thread-safe span recorder: a Gantt/CSV view over an
+/// [`obs::TraceRecorder`](crate::obs::TraceRecorder).
+#[derive(Default)]
 pub struct Recorder {
-    origin: Instant,
-    spans: Mutex<Vec<Span>>,
-}
-
-impl Default for Recorder {
-    fn default() -> Self {
-        Recorder::new()
-    }
+    inner: TraceRecorder,
 }
 
 impl Recorder {
+    /// A recorder whose clock origin is now.
     pub fn new() -> Recorder {
-        Recorder { origin: Instant::now(), spans: Mutex::new(Vec::new()) }
+        Recorder { inner: TraceRecorder::new() }
     }
 
+    /// The structured trace under this view (for instant events,
+    /// attrs, and the run clock).
+    pub fn trace(&self) -> &TraceRecorder {
+        &self.inner
+    }
+
+    /// The origin instant of the recorder's run-relative clock (for
+    /// rebasing spans onto another clock in the same process).
+    pub fn origin_instant(&self) -> Instant {
+        self.inner.clock().origin()
+    }
+
+    /// Record one span.
     pub fn record(&self, rank: usize, kind: SpanKind, label: &str, t0: Instant, t1: Instant) {
-        let start = t0.duration_since(self.origin).as_secs_f64();
-        let end = t1.duration_since(self.origin).as_secs_f64();
-        self.spans.lock().unwrap().push(Span {
-            rank,
-            kind,
-            label: label.to_string(),
-            start,
-            end,
-        });
+        self.inner.span(rank, kind, label, t0, t1);
+    }
+
+    /// [`Recorder::record`] with key=value attributes.
+    pub fn record_with(
+        &self,
+        rank: usize,
+        kind: SpanKind,
+        label: &str,
+        t0: Instant,
+        t1: Instant,
+        attrs: Vec<(String, String)>,
+    ) {
+        self.inner.span_with(rank, kind, label, t0, t1, attrs);
     }
 
     /// Convenience: time a closure as a Compute span.
@@ -95,19 +70,19 @@ impl Recorder {
         out
     }
 
+    /// Snapshot of all spans recorded so far.
     pub fn spans(&self) -> Vec<Span> {
-        self.spans.lock().unwrap().clone()
+        self.inner.spans()
     }
 
     /// Total seconds per kind for one rank:
     /// (compute, idle, transfer, stall).
     pub fn totals(&self, rank: usize) -> (f64, f64, f64, f64) {
-        let spans = self.spans.lock().unwrap();
         let mut c = 0.0;
         let mut i = 0.0;
         let mut t = 0.0;
         let mut st = 0.0;
-        for s in spans.iter().filter(|s| s.rank == rank) {
+        for s in self.inner.spans().iter().filter(|s| s.rank == rank) {
             let d = s.end - s.start;
             match s.kind {
                 SpanKind::Compute => c += d,
@@ -121,20 +96,7 @@ impl Recorder {
 
     /// CSV export: rank,kind,label,start,end.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("rank,kind,label,start_s,end_s\n");
-        let mut spans = self.spans();
-        spans.sort_by(|a, b| (a.rank, a.start).partial_cmp(&(b.rank, b.start)).unwrap());
-        for s in spans {
-            out.push_str(&format!(
-                "{},{},{},{:.6},{:.6}\n",
-                s.rank,
-                s.kind.name(),
-                s.label.replace(',', ";"),
-                s.start,
-                s.end
-            ));
-        }
-        out
+        csv_of(&self.spans())
     }
 
     /// ASCII Gantt chart over the given ranks (one row per rank),
@@ -162,6 +124,27 @@ impl Recorder {
         }
         out
     }
+}
+
+/// Render spans as `rank,kind,label,start_s,end_s` CSV, sorted by
+/// (rank, start). Shared by [`Recorder::to_csv`] and the distributed
+/// `wilkins up --gantt` path (which merges spans from many workers
+/// before rendering).
+pub fn csv_of(spans: &[Span]) -> String {
+    let mut out = String::from("rank,kind,label,start_s,end_s\n");
+    let mut spans = spans.to_vec();
+    spans.sort_by(|a, b| (a.rank, a.start).partial_cmp(&(b.rank, b.start)).unwrap());
+    for s in spans {
+        out.push_str(&format!(
+            "{},{},{},{:.6},{:.6}\n",
+            s.rank,
+            s.kind.name(),
+            s.label.replace(',', ";"),
+            s.start,
+            s.end
+        ));
+    }
+    out
 }
 
 /// The shared Gantt header line (legend + scale).
@@ -333,7 +316,7 @@ impl MergedTrace {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
+    use std::time::{Duration, Instant};
 
     #[test]
     fn totals_accumulate_per_kind() {
@@ -428,5 +411,21 @@ mod tests {
         let m = MergedTrace::new();
         assert!(m.is_empty());
         assert_eq!(m.gantt_ascii(20), "(no spans)\n");
+    }
+
+    #[test]
+    fn record_with_attrs_lands_in_trace() {
+        let rec = Recorder::new();
+        let t0 = Instant::now();
+        rec.record_with(
+            0,
+            SpanKind::Transfer,
+            "serve d",
+            t0,
+            t0 + Duration::from_millis(1),
+            vec![("bytes".into(), "8".into())],
+        );
+        let spans = rec.trace().spans();
+        assert_eq!(spans[0].attrs.len(), 1);
     }
 }

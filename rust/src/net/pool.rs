@@ -22,6 +22,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::error::{Result, WilkinsError};
+use crate::obs::{Clock, TelemetrySample, TelemetryStore, TelemetrySummary};
 
 use super::codec::{self, TimedRead};
 use super::proto::{self, InstanceDone, LaunchWorld, RunInstance, WorldDone};
@@ -95,6 +96,12 @@ pub struct WorkerPool {
     heartbeat_misses: AtomicU64,
     /// Stale `InstanceDone` replies dropped by the idempotency check.
     dup_done: AtomicU64,
+    /// The coordinator's run-relative clock — the local side of every
+    /// worker clock-offset sample.
+    clock: Clock,
+    /// Accumulated worker telemetry (counter deltas + clock samples),
+    /// fed by `K_TELEMETRY` frames skimmed in [`Self::recv_live`].
+    telemetry: Mutex<TelemetryStore>,
 }
 
 impl WorkerPool {
@@ -175,6 +182,8 @@ impl WorkerPool {
             dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
             heartbeat_misses: AtomicU64::new(0),
             dup_done: AtomicU64::new(0),
+            clock: Clock::new(),
+            telemetry: Mutex::new(TelemetryStore::new()),
         }
     }
 
@@ -215,6 +224,21 @@ impl WorkerPool {
         self.dup_done.load(Ordering::SeqCst)
     }
 
+    /// Condensed worker telemetry collected so far: frames ingested,
+    /// workers heard from, summed counter totals. Telemetry outlives
+    /// the workers that sent it — a worker lost mid-run keeps its
+    /// counts here.
+    pub fn telemetry_summary(&self) -> TelemetrySummary {
+        self.telemetry.lock().unwrap().summary()
+    }
+
+    /// Estimated clock offset for worker `id`: a worker-clock time `t`
+    /// maps onto the pool clock as `t + offset`. `None` before any
+    /// telemetry frame or clock sample from that worker.
+    pub fn clock_offset_s(&self, id: usize) -> Option<f64> {
+        self.telemetry.lock().unwrap().offset_s(id as u64)
+    }
+
     /// Peer-mesh endpoint per worker id (the `LaunchWorld` endpoint
     /// map).
     pub fn peer_addrs(&self) -> &[String] {
@@ -241,7 +265,9 @@ impl WorkerPool {
     }
 
     /// Receive the next *command-level* frame on `link`, skimming
-    /// heartbeat frames and enforcing the liveness deadline. With
+    /// heartbeat and telemetry frames and enforcing the liveness
+    /// deadline (telemetry frames are folded into the pool's
+    /// [`TelemetryStore`] and also count as proof of life). With
     /// heartbeats disabled this is the historical blocking `recv`.
     fn recv_live(&self, link: &mut WorkerLink) -> Result<(u8, Vec<u8>)> {
         let hb = self.heartbeat;
@@ -262,6 +288,14 @@ impl WorkerPool {
                     if kind == proto::K_HEARTBEAT {
                         last_alive = Instant::now();
                         missed_since_alive = 0;
+                        continue;
+                    }
+                    if kind == proto::K_TELEMETRY {
+                        last_alive = Instant::now();
+                        missed_since_alive = 0;
+                        if let Ok(s) = TelemetrySample::decode(&body) {
+                            self.telemetry.lock().unwrap().ingest(&s, self.clock.now_s());
+                        }
                         continue;
                     }
                     break Ok((kind, body));
@@ -358,7 +392,18 @@ impl WorkerPool {
                     link.id
                 )));
             }
-            replies.push(WorldDone::decode(&body)?);
+            let done = WorldDone::decode(&body)?;
+            // Every reply doubles as a clock sample (zero-stamped
+            // error replies excluded), so even a heartbeat-disabled
+            // pool can align worker spans for trace merging.
+            if done.t_mono_s > 0.0 {
+                self.telemetry.lock().unwrap().clock_sample(
+                    link.id as u64,
+                    done.t_mono_s,
+                    self.clock.now_s(),
+                );
+            }
+            replies.push(done);
         }
         Ok(replies)
     }

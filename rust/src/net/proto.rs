@@ -36,8 +36,11 @@ pub const MAGIC: u32 = 0x574C_4B4E;
 /// and reports; v4: pooled data plane's alloc_rounds/bytes_pooled
 /// counters in stats and reports; v5: heartbeat frames, idempotency
 /// keys on RunInstance/InstanceDone, heartbeat intervals in
-/// LaunchWorld, fault counters in run reports).
-pub const VERSION: u32 = 5;
+/// LaunchWorld, fault counters in run reports; v6: telemetry frames,
+/// registry-driven stats encoding with durations as nanoseconds,
+/// spans with key=value attrs, worker spans + clock sample on
+/// WorldDone).
+pub const VERSION: u32 = 6;
 
 // Frame kinds.
 pub const K_HELLO: u8 = 1;
@@ -54,6 +57,12 @@ pub const K_DATA_CHUNK: u8 = 9;
 /// the sender is alive. Receivers refresh their liveness clock and
 /// never surface it to callers.
 pub const K_HEARTBEAT: u8 = 10;
+/// Periodic worker telemetry
+/// ([`TelemetrySample`](crate::obs::TelemetrySample)): cumulative
+/// counter snapshot + clock sample, riding the heartbeat cadence.
+/// Like heartbeats, telemetry frames refresh liveness and are skimmed
+/// by receive loops, never surfaced to callers.
+pub const K_TELEMETRY: u8 = 11;
 
 /// Periodic liveness beacon. Workers beat on their control socket so
 /// the coordinator can tell "busy for a long time" from "dead or
@@ -211,6 +220,14 @@ pub struct WorldDone {
     pub msgs_sent: u64,
     pub outcomes: Vec<RankOutcomeWire>,
     pub error: String,
+    /// Spans the worker's hosted ranks recorded, rebased onto the
+    /// worker's run-relative clock (the coordinator shifts them by the
+    /// telemetry clock offset when merging the distributed trace).
+    pub spans: Vec<Span>,
+    /// Seconds on the worker's run-relative clock at send time — a
+    /// fallback clock sample so traces can be aligned even when the
+    /// heartbeat (and with it telemetry) is disabled.
+    pub t_mono_s: f64,
 }
 
 impl WorldDone {
@@ -219,11 +236,16 @@ impl WorldDone {
         w.put_u64(self.bytes_sent);
         w.put_u64(self.msgs_sent);
         w.put_str(&self.error);
+        w.put_f64(self.t_mono_s);
         w.put_u64(self.outcomes.len() as u64);
         for o in &self.outcomes {
             w.put_u64(o.node);
             put_vol_stats(&mut w, &o.stats);
             w.put_str(&o.error);
+        }
+        w.put_u64(self.spans.len() as u64);
+        for s in &self.spans {
+            put_span(&mut w, s);
         }
         w.into_vec()
     }
@@ -233,6 +255,7 @@ impl WorldDone {
         let bytes_sent = r.get_u64()?;
         let msgs_sent = r.get_u64()?;
         let error = r.get_str()?;
+        let t_mono_s = r.get_f64()?;
         let n = r.get_u64()? as usize;
         let mut outcomes = Vec::with_capacity(n);
         for _ in 0..n {
@@ -241,7 +264,12 @@ impl WorldDone {
             let error = r.get_str()?;
             outcomes.push(RankOutcomeWire { node, stats, error });
         }
-        Ok(WorldDone { bytes_sent, msgs_sent, outcomes, error })
+        let nspans = r.get_u64()? as usize;
+        let mut spans = Vec::with_capacity(nspans);
+        for _ in 0..nspans {
+            spans.push(get_span(&mut r)?);
+        }
+        Ok(WorldDone { bytes_sent, msgs_sent, outcomes, error, spans, t_mono_s })
     }
 }
 
@@ -757,42 +785,39 @@ fn get_duration(r: &mut Reader) -> Result<Duration> {
     Ok(Duration::from_secs_f64(s))
 }
 
+// Stats ride the wire as registry-ordered u64 vectors (durations as
+// nanoseconds): `VolStats::DEFS` *is* the wire layout, so a counter
+// added to the family serializes without touching this file.
 fn put_vol_stats(w: &mut Writer, s: &VolStats) {
-    w.put_u64(s.files_served);
-    w.put_u64(s.serves_skipped);
-    w.put_u64(s.serves_dropped);
-    w.put_u64(s.serves_suppressed);
-    w.put_u64(s.bytes_served);
-    w.put_u64(s.bytes_shared);
-    w.put_u64(s.bytes_copied);
-    w.put_u64(s.alloc_rounds);
-    w.put_u64(s.bytes_pooled);
-    w.put_u64(s.files_opened);
-    w.put_u64(s.bytes_read);
-    w.put_u64(s.max_queue_depth);
-    put_duration(w, s.serve_wait);
-    put_duration(w, s.stall_wait);
-    put_duration(w, s.open_wait);
+    w.put_u64_slice(&s.counter_values());
 }
 
 fn get_vol_stats(r: &mut Reader) -> Result<VolStats> {
-    Ok(VolStats {
-        files_served: r.get_u64()?,
-        serves_skipped: r.get_u64()?,
-        serves_dropped: r.get_u64()?,
-        serves_suppressed: r.get_u64()?,
-        bytes_served: r.get_u64()?,
-        bytes_shared: r.get_u64()?,
-        bytes_copied: r.get_u64()?,
-        alloc_rounds: r.get_u64()?,
-        bytes_pooled: r.get_u64()?,
-        files_opened: r.get_u64()?,
-        bytes_read: r.get_u64()?,
-        max_queue_depth: r.get_u64()?,
-        serve_wait: get_duration(r)?,
-        stall_wait: get_duration(r)?,
-        open_wait: get_duration(r)?,
-    })
+    let vals = r.get_u64_vec()?;
+    if vals.len() != VolStats::DEFS.len() {
+        return Err(WilkinsError::Comm(format!(
+            "stats counter count mismatch: got {}, expected {}",
+            vals.len(),
+            VolStats::DEFS.len()
+        )));
+    }
+    Ok(VolStats::from_counter_values(&vals))
+}
+
+fn put_fault_stats(w: &mut Writer, f: &crate::coordinator::FaultStats) {
+    w.put_u64_slice(&f.counter_values());
+}
+
+fn get_fault_stats(r: &mut Reader) -> Result<crate::coordinator::FaultStats> {
+    let vals = r.get_u64_vec()?;
+    if vals.len() != crate::coordinator::FaultStats::DEFS.len() {
+        return Err(WilkinsError::Comm(format!(
+            "fault counter count mismatch: got {}, expected {}",
+            vals.len(),
+            crate::coordinator::FaultStats::DEFS.len()
+        )));
+    }
+    Ok(crate::coordinator::FaultStats::from_counter_values(&vals))
 }
 
 fn put_run_report(w: &mut Writer, rep: &RunReport) {
@@ -800,30 +825,16 @@ fn put_run_report(w: &mut Writer, rep: &RunReport) {
     w.put_u64(rep.total_ranks as u64);
     w.put_u64(rep.bytes_sent);
     w.put_u64(rep.msgs_sent);
-    w.put_u64(rep.faults.lost_workers);
-    w.put_u64(rep.faults.retries);
-    w.put_u64(rep.faults.heartbeat_misses);
-    w.put_u64(rep.faults.dup_done);
+    put_fault_stats(w, &rep.faults);
     w.put_u64(rep.nodes.len() as u64);
     for n in &rep.nodes {
         w.put_str(&n.name);
         w.put_u64(n.nprocs as u64);
-        w.put_u64(n.files_served);
-        w.put_u64(n.serves_skipped);
-        w.put_u64(n.serves_dropped);
-        w.put_u64(n.serves_suppressed);
-        w.put_u64(n.bytes_served);
-        w.put_u64(n.bytes_shared);
-        w.put_u64(n.bytes_copied);
-        w.put_u64(n.alloc_rounds);
-        w.put_u64(n.bytes_pooled);
-        w.put_u64(n.files_opened);
-        w.put_u64(n.bytes_read);
-        w.put_u64(n.max_queue_depth);
-        put_duration(w, n.serve_wait);
-        put_duration(w, n.stall_wait);
-        put_duration(w, n.open_wait);
+        put_vol_stats(w, &n.stats);
     }
+    // Telemetry is deliberately NOT on the wire: a worker-side partial
+    // report has none (only the coordinator hosting a pool collects
+    // it), so shipping it would only move zeros around.
 }
 
 fn get_run_report(r: &mut Reader) -> Result<RunReport> {
@@ -831,36 +842,25 @@ fn get_run_report(r: &mut Reader) -> Result<RunReport> {
     let total_ranks = r.get_u64()? as usize;
     let bytes_sent = r.get_u64()?;
     let msgs_sent = r.get_u64()?;
-    let faults = crate::coordinator::FaultStats {
-        lost_workers: r.get_u64()?,
-        retries: r.get_u64()?,
-        heartbeat_misses: r.get_u64()?,
-        dup_done: r.get_u64()?,
-    };
+    let faults = get_fault_stats(r)?;
     let n = r.get_u64()? as usize;
     let mut nodes = Vec::with_capacity(n);
     for _ in 0..n {
         nodes.push(NodeReport {
             name: r.get_str()?,
             nprocs: r.get_u64()? as usize,
-            files_served: r.get_u64()?,
-            serves_skipped: r.get_u64()?,
-            serves_dropped: r.get_u64()?,
-            serves_suppressed: r.get_u64()?,
-            bytes_served: r.get_u64()?,
-            bytes_shared: r.get_u64()?,
-            bytes_copied: r.get_u64()?,
-            alloc_rounds: r.get_u64()?,
-            bytes_pooled: r.get_u64()?,
-            files_opened: r.get_u64()?,
-            bytes_read: r.get_u64()?,
-            max_queue_depth: r.get_u64()?,
-            serve_wait: get_duration(r)?,
-            stall_wait: get_duration(r)?,
-            open_wait: get_duration(r)?,
+            stats: get_vol_stats(r)?,
         });
     }
-    Ok(RunReport { elapsed, total_ranks, bytes_sent, msgs_sent, nodes, faults })
+    Ok(RunReport {
+        elapsed,
+        total_ranks,
+        bytes_sent,
+        msgs_sent,
+        nodes,
+        faults,
+        telemetry: Default::default(),
+    })
 }
 
 fn put_span(w: &mut Writer, s: &Span) {
@@ -874,6 +874,11 @@ fn put_span(w: &mut Writer, s: &Span) {
     w.put_str(&s.label);
     w.put_f64(s.start);
     w.put_f64(s.end);
+    w.put_u64(s.attrs.len() as u64);
+    for (k, v) in &s.attrs {
+        w.put_str(k);
+        w.put_str(v);
+    }
 }
 
 fn get_span(r: &mut Reader) -> Result<Span> {
@@ -885,11 +890,18 @@ fn get_span(r: &mut Reader) -> Result<Span> {
         3 => SpanKind::Stall,
         k => return Err(WilkinsError::Comm(format!("bad wire span kind {k}"))),
     };
-    Ok(Span {
-        rank,
-        kind,
-        label: r.get_str()?,
-        start: r.get_f64()?,
-        end: r.get_f64()?,
-    })
+    let label = r.get_str()?;
+    let start = r.get_f64()?;
+    let end = r.get_f64()?;
+    let nattrs = r.get_u64()? as usize;
+    // Bound pathological counts the same way string/byte fields are
+    // bounded: refuse anything the remaining payload cannot hold.
+    if nattrs > r.remaining() {
+        return Err(WilkinsError::Comm(format!("bad wire span attr count {nattrs}")));
+    }
+    let mut attrs = Vec::with_capacity(nattrs);
+    for _ in 0..nattrs {
+        attrs.push((r.get_str()?, r.get_str()?));
+    }
+    Ok(Span { rank, kind, label, start, end, attrs })
 }

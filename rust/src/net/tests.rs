@@ -111,6 +111,15 @@ fn control_messages_roundtrip() {
             error: String::new(),
         }],
         error: String::new(),
+        spans: vec![crate::metrics::Span {
+            rank: 3,
+            kind: crate::metrics::SpanKind::Transfer,
+            label: "serve particles".into(),
+            start: 1.25,
+            end: 1.5,
+            attrs: vec![("file".into(), "particles".into())],
+        }],
+        t_mono_s: 42.5,
     };
     let back = WorldDone::decode(&wd.encode()).unwrap();
     assert_eq!(back.bytes_sent, 1024);
@@ -120,6 +129,10 @@ fn control_messages_roundtrip() {
     assert_eq!(back.outcomes[0].stats.bytes_shared, 640);
     assert_eq!(back.outcomes[0].stats.bytes_copied, 359);
     assert!((back.outcomes[0].stats.serve_wait.as_secs_f64() - 0.012).abs() < 1e-9);
+    assert_eq!(back.spans.len(), 1);
+    assert_eq!(back.spans[0].label, "serve particles");
+    assert_eq!(back.spans[0].attrs, vec![("file".to_string(), "particles".to_string())]);
+    assert!((back.t_mono_s - 42.5).abs() < 1e-9);
 
     let ri = RunInstance {
         spec_src: "ensemble: {}\n".into(),
@@ -146,6 +159,7 @@ fn control_messages_roundtrip() {
                 heartbeat_misses: 3,
                 dup_done: 4,
             },
+            telemetry: Default::default(),
         }),
         spans: vec![crate::metrics::Span {
             rank: 1,
@@ -153,6 +167,7 @@ fn control_messages_roundtrip() {
             label: "serve".into(),
             start: 0.5,
             end: 0.75,
+            attrs: vec![],
         }],
         idem_key: 41,
     };

@@ -18,7 +18,6 @@
 //! ordinary mailbox condvar, so `Comm`, `InterComm`, collectives and
 //! probes run unmodified on remote ranks.
 
-use std::io::Write;
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -27,6 +26,7 @@ use std::thread::{self, JoinHandle};
 use crate::comm::buf::{self, Payload};
 use crate::comm::{Envelope, Mailboxes, Transport};
 use crate::error::{Result, WilkinsError};
+use crate::obs::wiretap;
 
 use super::codec;
 use super::proto;
@@ -43,20 +43,13 @@ impl PeerLink {
     }
 
     fn send_frame(&self, kind: u8, body: &[u8]) -> Result<()> {
-        if body.len() > codec::MAX_FRAME {
-            // Writing an over-bound header would make the receiving
-            // pump treat the stream as desynced and kill the link for
-            // every rank sharing it; fail just this send instead.
-            return Err(WilkinsError::Comm(format!(
-                "frame body of {} bytes exceeds MAX_FRAME ({})",
-                body.len(),
-                codec::MAX_FRAME
-            )));
-        }
-        let frame = codec::encode_frame(kind, body);
+        // The MAX_FRAME bound is checked by `write_frame` before any
+        // byte goes out: writing an over-bound header would make the
+        // receiving pump treat the stream as desynced and kill the
+        // link for every rank sharing it; failing just this send is
+        // the right blast radius.
         let mut s = self.stream.lock().unwrap();
-        s.write_all(&frame)?;
-        Ok(())
+        codec::write_frame(&mut *s, kind, body)
     }
 
     /// Vectored frame send: header + body parts go to the kernel as
@@ -107,7 +100,11 @@ impl SocketTransport {
     pub(crate) fn beat_all(&self, seq: u64) {
         let beat = proto::Heartbeat { worker_id: self.my_worker as u64, seq };
         let body = beat.encode();
-        for link in self.peers.iter().flatten() {
+        for (peer, link) in self.peers.iter().enumerate() {
+            let Some(link) = link else { continue };
+            if wiretap::enabled() {
+                wiretap::set_link(peer as u32);
+            }
             let _ = link.send_frame(proto::K_HEARTBEAT, &body);
         }
     }
@@ -133,6 +130,12 @@ impl Transport for SocketTransport {
         let link = self.peers[owner]
             .as_ref()
             .unwrap_or_else(|| panic!("no mesh link to worker {owner}"));
+        // Tag this rank thread's tap records with the destination link
+        // (only when the tap is armed; the thread-local write is not
+        // free enough for the default hot path).
+        if wiretap::enabled() {
+            wiretap::set_link(owner as u32);
+        }
         // A dead link mid-run means the peer process crashed; the
         // send contract has no error path (MPI_Send aborts too), so
         // panic this rank thread — the driver reports it as a failed
@@ -249,6 +252,8 @@ pub(crate) fn spawn_pump(
         .spawn(move || {
             let mut stream = stream;
             let mut assembler = proto::ChunkAssembler::new();
+            // Every frame this pump reads crossed the one link it owns.
+            wiretap::set_link(peer_id as u32);
             if let Some((interval, _)) = liveness {
                 if stream.set_read_timeout(Some(interval)).is_err() {
                     eprintln!(

@@ -10,6 +10,13 @@
 //! and transfer totals are invariant under placement: each message is
 //! sent by exactly one process, so summing the per-worker counters
 //! reproduces the single-process totals.
+//!
+//! Observability: every `WorldDone` ships back the worker's structured
+//! spans stamped on the worker's run-relative clock, and the pool's
+//! telemetry store holds a clock-offset estimate per worker — so the
+//! traced variant returns a [`DistTrace`] whose per-worker tracks can
+//! be shifted onto the coordinator clock and merged into one
+//! Chrome-trace timeline.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -19,6 +26,7 @@ use crate::coordinator::report::{self, RankOutcome};
 use crate::coordinator::RunReport;
 use crate::error::{Result, WilkinsError};
 use crate::graph::WorkflowGraph;
+use crate::obs::Span;
 
 use super::pool::{HeartbeatConfig, WorkerPool};
 use super::proto::LaunchWorld;
@@ -39,9 +47,38 @@ pub struct UpOpts {
     pub heartbeat: HeartbeatConfig,
 }
 
+/// One worker's slice of a distributed run's trace.
+pub struct WorkerTrack {
+    /// Worker id (the Chrome-trace process id).
+    pub worker: usize,
+    /// Estimated shift from this worker's clock onto the coordinator
+    /// clock (add to every span time when merging). Zero when no
+    /// clock sample arrived.
+    pub offset_s: f64,
+    /// The worker's structured spans, on the *worker's* clock.
+    pub spans: Vec<Span>,
+}
+
+/// The merged-trace raw material from one distributed run: one track
+/// per worker, each with its clock-offset estimate.
+#[derive(Default)]
+pub struct DistTrace {
+    /// Per-worker tracks, in worker-id order.
+    pub tracks: Vec<WorkerTrack>,
+}
+
 /// Run `config_src` as one distributed world over `opts.workers`
 /// processes and return the merged [`RunReport`].
 pub fn run_workflow_distributed(config_src: &str, opts: &UpOpts) -> Result<RunReport> {
+    run_workflow_distributed_traced(config_src, opts).map(|(report, _)| report)
+}
+
+/// [`run_workflow_distributed`], also returning the per-worker span
+/// tracks + clock offsets that the `--trace` exporter merges.
+pub fn run_workflow_distributed_traced(
+    config_src: &str,
+    opts: &UpOpts,
+) -> Result<(RunReport, DistTrace)> {
     let cfg = WorkflowConfig::from_yaml_str(config_src)?;
     let graph = WorkflowGraph::build(&cfg)?;
     let nworkers = opts.workers.clamp(1, graph.nodes.len());
@@ -83,6 +120,7 @@ pub fn run_workflow_distributed(config_src: &str, opts: &UpOpts) -> Result<RunRe
     let mut outcomes: Vec<RankOutcome> = Vec::with_capacity(graph.total_ranks);
     let mut bytes_sent = 0u64;
     let mut msgs_sent = 0u64;
+    let mut trace = DistTrace::default();
     for (wid, reply) in replies.iter().enumerate() {
         if !reply.error.is_empty() {
             return Err(WilkinsError::Task(format!(
@@ -99,6 +137,11 @@ pub fn run_workflow_distributed(config_src: &str, opts: &UpOpts) -> Result<RunRe
                 error: if o.error.is_empty() { None } else { Some(o.error.clone()) },
             });
         }
+        trace.tracks.push(WorkerTrack {
+            worker: wid,
+            offset_s: pool.clock_offset_s(wid).unwrap_or(0.0),
+            spans: reply.spans.clone(),
+        });
     }
     if outcomes.len() != graph.total_ranks {
         return Err(WilkinsError::Task(format!(
@@ -109,6 +152,7 @@ pub fn run_workflow_distributed(config_src: &str, opts: &UpOpts) -> Result<RunRe
     }
     let mut report = report::build(&graph, outcomes, elapsed, bytes_sent, msgs_sent)?;
     report.faults.heartbeat_misses = pool.heartbeat_misses();
+    report.telemetry = pool.telemetry_summary();
     pool.shutdown();
-    Ok(report)
+    Ok((report, trace))
 }

@@ -16,7 +16,10 @@
 //! Liveness: a dedicated thread beats [`proto::Heartbeat`] frames on
 //! the control socket every `heartbeat` interval (sharing the write
 //! half under a mutex with command replies), so the coordinator can
-//! tell a busy worker from a dead one. The serve loop also consults
+//! tell a busy worker from a dead one. Each beat piggybacks a
+//! `K_TELEMETRY` frame — a cumulative snapshot of the process-global
+//! counters plus a clock sample — so the coordinator's live telemetry
+//! survives a worker dying mid-run. The serve loop also consults
 //! the process's [`FaultPlan`] on every `RunInstance` — a no-op
 //! unless `WILKINS_FAULT` armed it (tests and chaos smokes only).
 //!
@@ -33,6 +36,7 @@ use std::time::Duration;
 use crate::coordinator::Wilkins;
 use crate::ensemble::EnsembleSpec;
 use crate::error::{Result, WilkinsError};
+use crate::obs::{global_snapshot, Clock, Ctr, TelemetrySample};
 use crate::tasks::builtin_registry;
 
 use super::codec;
@@ -84,6 +88,10 @@ pub fn worker_main_with(
         .to_string();
     let control = rendezvous::join(coordinator_addr, worker_id, &peer_addr)?;
     let faults = Arc::new(opts.faults);
+    // The worker's run-relative clock: every telemetry sample and
+    // every span shipped back is stamped against this one origin, so
+    // the coordinator can align them with a single offset estimate.
+    let clock = Clock::new();
 
     // Replies and heartbeats share the write half under one mutex so
     // concurrent writers can never interleave mid-frame; the serve
@@ -99,21 +107,26 @@ pub fn worker_main_with(
         opts.heartbeat,
         Arc::clone(&faults),
         Arc::clone(&stop_beats),
+        clock,
     );
 
-    let out = serve_loop(control, &writer, worker_id, &peer_listener, &faults);
+    let out = serve_loop(control, &writer, worker_id, &peer_listener, &faults, clock);
     stop_beats.store(true, Ordering::SeqCst);
     out
 }
 
 /// Beat every `interval` until stopped, silenced by a fired fault, or
 /// the socket dies (coordinator gone — nothing left to reassure).
+/// Every beat carries a heartbeat frame plus a telemetry frame with a
+/// cumulative counter snapshot (so the coordinator's totals survive
+/// this worker dying one interval later).
 fn spawn_beat_thread(
     writer: Arc<Mutex<TcpStream>>,
     worker_id: usize,
     interval: Duration,
     faults: Arc<FaultPlan>,
     stop: Arc<AtomicBool>,
+    clock: Clock,
 ) -> Option<std::thread::JoinHandle<()>> {
     if interval.is_zero() {
         return None;
@@ -132,10 +145,24 @@ fn spawn_beat_thread(
                 }
                 seq += 1;
                 let beat = Heartbeat { worker_id: worker_id as u64, seq };
+                // Snapshot before sending: the snapshot deliberately
+                // excludes this very beat (cumulative frames make the
+                // next one pick it up).
+                let telem = TelemetrySample {
+                    worker_id: worker_id as u64,
+                    seq,
+                    t_mono_s: clock.now_s(),
+                    counters: global_snapshot(),
+                };
                 let mut w = writer.lock().unwrap();
                 if codec::write_frame(&mut *w, proto::K_HEARTBEAT, &beat.encode()).is_err() {
                     return;
                 }
+                Ctr::HeartbeatsSent.bump(1);
+                if codec::write_frame(&mut *w, proto::K_TELEMETRY, &telem.encode()).is_err() {
+                    return;
+                }
+                Ctr::TelemetrySent.bump(1);
             }
         })
         .ok()
@@ -147,6 +174,7 @@ fn serve_loop(
     worker_id: usize,
     peer_listener: &TcpListener,
     faults: &Arc<FaultPlan>,
+    clock: Clock,
 ) -> Result<()> {
     // A worker that served a LaunchWorld keeps the mesh world alive
     // until shutdown (peers may still drain our streams).
@@ -158,7 +186,7 @@ fn serve_loop(
             None | Some((proto::K_SHUTDOWN, _)) => break,
             Some((proto::K_LAUNCH_WORLD, body)) => {
                 let msg = LaunchWorld::decode(&body)?;
-                let reply = match serve_world(worker_id, peer_listener, &msg) {
+                let reply = match serve_world(worker_id, peer_listener, &msg, clock) {
                     Ok((done, mesh)) => {
                         held = Some(mesh);
                         done
@@ -264,6 +292,7 @@ fn serve_world(
     my_id: usize,
     peer_listener: &TcpListener,
     msg: &LaunchWorld,
+    clock: Clock,
 ) -> Result<(WorldDone, rendezvous::MeshWorld)> {
     let mut w = Wilkins::from_yaml_str(&msg.config_src, builtin_registry())?
         .with_workdir(PathBuf::from(&msg.workdir))
@@ -278,7 +307,22 @@ fn serve_world(
         .filter(|(_, &owner)| owner as usize == my_id)
         .map(|(r, _)| r)
         .collect();
+    let recorder = w.recorder();
     let outcomes = w.run_hosted(&mesh.world, &hosted)?;
+    // The recorder's spans are relative to the recorder's own origin
+    // (created with the Wilkins above); rebase them onto the worker
+    // clock so they share a timeline with the telemetry samples the
+    // coordinator aligned clocks from.
+    let base = clock.since_origin(recorder.origin_instant());
+    let spans = recorder
+        .spans()
+        .into_iter()
+        .map(|mut s| {
+            s.start += base;
+            s.end += base;
+            s
+        })
+        .collect();
     let done = WorldDone {
         bytes_sent: mesh.world.bytes_sent(),
         msgs_sent: mesh.world.msgs_sent(),
@@ -291,6 +335,8 @@ fn serve_world(
             })
             .collect(),
         error: String::new(),
+        spans,
+        t_mono_s: clock.now_s(),
     };
     Ok((done, mesh))
 }

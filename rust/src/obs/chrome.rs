@@ -1,0 +1,339 @@
+//! Chrome-trace (Trace Event Format) exporter: the `--trace out.json`
+//! artifact, loadable in `chrome://tracing` or Perfetto.
+//!
+//! The mapping is: one *process* (`pid`) per worker (or per ensemble
+//! instance), one *thread* (`tid`) per global rank, `ph:"X"` complete
+//! events for spans, `ph:"i"` instants for scheduler events such as
+//! `WorkerLost`, and `ph:"s"`/`ph:"f"` flow arrows pairing a
+//! cross-worker `serve <dataset>` with the `open <dataset>` it fed.
+//! Timestamps are microseconds on the coordinator's run-relative
+//! clock; worker spans are shifted by the telemetry clock offset
+//! before they get here.
+
+use super::json::{Arr, Obj};
+use super::recorder::Span;
+
+/// One exported trace event (structural form, so tests can assert on
+/// events without parsing JSON).
+#[derive(Debug, Clone)]
+pub struct ChromeEvent {
+    /// Event phase: `X` span, `i` instant, `s`/`f` flow, `M` metadata.
+    pub ph: char,
+    /// Event name.
+    pub name: String,
+    /// Category (span kind, `flow`, …).
+    pub cat: String,
+    /// Process track (worker / instance).
+    pub pid: u64,
+    /// Thread track (global rank).
+    pub tid: u64,
+    /// Microseconds since the run origin.
+    pub ts_us: i64,
+    /// Duration in microseconds (`X` events only; never negative).
+    pub dur_us: Option<u64>,
+    /// Flow id (`s`/`f` events only).
+    pub flow_id: Option<u64>,
+    /// Key=value args.
+    pub args: Vec<(String, String)>,
+}
+
+fn us(t_s: f64) -> i64 {
+    (t_s * 1e6).round() as i64
+}
+
+/// Builder for one merged Chrome-trace JSON document.
+#[derive(Default)]
+pub struct ChromeTrace {
+    events: Vec<ChromeEvent>,
+    next_flow: u64,
+}
+
+impl ChromeTrace {
+    /// An empty trace.
+    pub fn new() -> ChromeTrace {
+        ChromeTrace::default()
+    }
+
+    /// Name a process track (`ph:"M"` `process_name` metadata).
+    pub fn process_name(&mut self, pid: u64, name: &str) {
+        self.events.push(ChromeEvent {
+            ph: 'M',
+            name: "process_name".into(),
+            cat: String::new(),
+            pid,
+            tid: 0,
+            ts_us: 0,
+            dur_us: None,
+            flow_id: None,
+            args: vec![("name".into(), name.into())],
+        });
+    }
+
+    /// Name a thread track (`ph:"M"` `thread_name` metadata).
+    pub fn thread_name(&mut self, pid: u64, tid: u64, name: &str) {
+        self.events.push(ChromeEvent {
+            ph: 'M',
+            name: "thread_name".into(),
+            cat: String::new(),
+            pid,
+            tid,
+            ts_us: 0,
+            dur_us: None,
+            flow_id: None,
+            args: vec![("name".into(), name.into())],
+        });
+    }
+
+    /// Add a complete (`ph:"X"`) event on the `(pid, tid)` track.
+    /// `t1_s < t0_s` clamps to a zero-duration event — the exporter
+    /// never emits negative `dur`.
+    pub fn span(
+        &mut self,
+        track: (u64, u64),
+        name: &str,
+        cat: &str,
+        t0_s: f64,
+        t1_s: f64,
+        args: &[(String, String)],
+    ) {
+        let t0 = us(t0_s);
+        let t1 = us(t1_s).max(t0);
+        self.events.push(ChromeEvent {
+            ph: 'X',
+            name: name.into(),
+            cat: cat.into(),
+            pid: track.0,
+            tid: track.1,
+            ts_us: t0,
+            dur_us: Some((t1 - t0) as u64),
+            flow_id: None,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Add a [`Span`] on the given process track, shifted by
+    /// `offset_s` (the span's clock → coordinator clock).
+    pub fn add_span(&mut self, pid: u64, span: &Span, offset_s: f64) {
+        self.span(
+            (pid, span.rank as u64),
+            &span.label,
+            span.kind.name(),
+            span.start + offset_s,
+            span.end + offset_s,
+            &span.attrs,
+        );
+    }
+
+    /// Add an instant (`ph:"i"`, global scope) event.
+    pub fn instant(&mut self, pid: u64, tid: u64, name: &str, t_s: f64, args: &[(String, String)]) {
+        self.events.push(ChromeEvent {
+            ph: 'i',
+            name: name.into(),
+            cat: "event".into(),
+            pid,
+            tid,
+            ts_us: us(t_s),
+            dur_us: None,
+            flow_id: None,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Add a flow arrow from `(src_pid, src_tid, src_ts_s)` to
+    /// `(dst_pid, dst_tid, dst_ts_s)` named `name`.
+    pub fn flow(
+        &mut self,
+        name: &str,
+        src: (u64, u64, f64),
+        dst: (u64, u64, f64),
+    ) {
+        let id = self.next_flow;
+        self.next_flow += 1;
+        for (ph, (pid, tid, ts)) in [('s', src), ('f', dst)] {
+            self.events.push(ChromeEvent {
+                ph,
+                name: name.into(),
+                cat: "flow".into(),
+                pid,
+                tid,
+                ts_us: us(ts),
+                dur_us: None,
+                flow_id: Some(id),
+                args: Vec::new(),
+            });
+        }
+    }
+
+    /// The events added so far (tests assert on these instead of
+    /// re-parsing the JSON).
+    pub fn events(&self) -> &[ChromeEvent] {
+        &self.events
+    }
+
+    /// Serialize to Trace Event Format JSON (object form, so Perfetto
+    /// metadata like `displayTimeUnit` can ride along).
+    pub fn to_json(&self) -> String {
+        let mut arr = Arr::new();
+        for e in &self.events {
+            let mut o = Obj::new();
+            o.field_str("ph", &e.ph.to_string()).field_str("name", &e.name);
+            if !e.cat.is_empty() {
+                o.field_str("cat", &e.cat);
+            }
+            o.field_u64("pid", e.pid).field_u64("tid", e.tid);
+            if e.ph != 'M' {
+                o.field_i64("ts", e.ts_us);
+            }
+            if let Some(d) = e.dur_us {
+                o.field_u64("dur", d);
+            }
+            if let Some(id) = e.flow_id {
+                o.field_u64("id", id);
+                if e.ph == 'f' {
+                    // Bind the arrow head to the enclosing slice.
+                    o.field_str("bp", "e");
+                }
+            }
+            if e.ph == 'i' {
+                o.field_str("s", "g");
+            }
+            if !e.args.is_empty() {
+                let mut args = Obj::new();
+                for (k, v) in &e.args {
+                    args.field_str(k, v);
+                }
+                o.field_raw("args", &args.finish());
+            }
+            arr.push_raw(&o.finish());
+        }
+        let mut doc = Obj::new();
+        doc.field_raw("traceEvents", &arr.finish())
+            .field_str("displayTimeUnit", "ms");
+        doc.finish()
+    }
+}
+
+/// Pair `serve <dataset>` transfer spans with the `open <dataset>`
+/// spans they fed and draw a flow arrow for each cross-process pair.
+///
+/// Spans arrive as `(pid, span, offset_s)` across all tracks. For each
+/// dataset name, the k-th serve (by adjusted start time) pairs with
+/// the k-th open — serve rounds and opens are both ordered by timestep
+/// per dataset, so ordinal pairing reconstructs the coupling without
+/// any extra wire state. Same-pid pairs are skipped (arrows are for
+/// *cross-worker* serves; local ones share a track already).
+pub fn add_serve_open_flows(trace: &mut ChromeTrace, spans: &[(u64, &Span, f64)]) {
+    use std::collections::BTreeMap;
+    // dataset -> (serves, opens), each (pid, tid, adjusted t, end t)
+    type Ends = (Vec<(u64, u64, f64, f64)>, Vec<(u64, u64, f64, f64)>);
+    let mut by_ds: BTreeMap<&str, Ends> = BTreeMap::new();
+    for (pid, s, off) in spans {
+        if let Some(name) = s.label.strip_prefix("serve ") {
+            by_ds.entry(name).or_default().0.push((
+                *pid,
+                s.rank as u64,
+                s.start + off,
+                s.end + off,
+            ));
+        } else if let Some(name) = s.label.strip_prefix("open ") {
+            by_ds.entry(name).or_default().1.push((
+                *pid,
+                s.rank as u64,
+                s.start + off,
+                s.end + off,
+            ));
+        }
+    }
+    for (name, (mut serves, mut opens)) in by_ds {
+        serves.sort_by(|a, b| a.2.total_cmp(&b.2));
+        opens.sort_by(|a, b| a.2.total_cmp(&b.2));
+        for (srv, opn) in serves.iter().zip(opens.iter()) {
+            if srv.0 == opn.0 {
+                continue;
+            }
+            // Arrow tail inside the serve span, head at the open's end
+            // (when the data actually landed).
+            trace.flow(name, (srv.0, srv.1, srv.2), (opn.0, opn.1, opn.3));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanKind;
+
+    fn span(rank: usize, label: &str, start: f64, end: f64) -> Span {
+        Span {
+            rank,
+            kind: SpanKind::Transfer,
+            label: label.into(),
+            start,
+            end,
+            attrs: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn spans_never_negative_duration() {
+        let mut t = ChromeTrace::new();
+        t.span((0, 0), "x", "compute", 2.0, 1.0, &[]);
+        let e = &t.events()[0];
+        assert_eq!(e.dur_us, Some(0));
+        assert!(!t.to_json().contains("\"dur\":-"));
+    }
+
+    #[test]
+    fn json_has_tracks_and_metadata() {
+        let mut t = ChromeTrace::new();
+        t.process_name(1, "worker 1");
+        t.thread_name(1, 0, "rank 0");
+        t.span((1, 0), "fwd", "compute", 0.0, 0.5, &[("k".into(), "v".into())]);
+        t.instant(1, 0, "WorkerLost", 0.25, &[]);
+        let j = t.to_json();
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.contains("\"process_name\""));
+        assert!(j.contains("\"worker 1\""));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("\"dur\":500000"));
+        assert!(j.contains("\"WorkerLost\""));
+        assert!(j.contains("\"args\":{\"k\":\"v\"}"));
+    }
+
+    #[test]
+    fn flow_pairs_cross_pid_serve_open() {
+        let s0 = span(0, "serve grid.h5", 1.0, 1.2);
+        let s1 = span(0, "serve grid.h5", 2.0, 2.2);
+        let o0 = span(3, "open grid.h5", 1.1, 1.3);
+        let o1 = span(3, "open grid.h5", 2.1, 2.3);
+        let local = span(1, "serve loc.h5", 0.5, 0.6);
+        let lopen = span(1, "open loc.h5", 0.55, 0.65);
+        let mut t = ChromeTrace::new();
+        let spans: Vec<(u64, &Span, f64)> = vec![
+            (0, &s0, 0.0),
+            (0, &s1, 0.0),
+            (1, &o0, 0.0),
+            (1, &o1, 0.0),
+            (2, &local, 0.0),
+            (2, &lopen, 0.0),
+        ];
+        add_serve_open_flows(&mut t, &spans);
+        let flows: Vec<_> = t.events().iter().filter(|e| e.ph == 's').collect();
+        // Two cross-pid pairs for grid.h5; loc.h5 pair shares pid 2.
+        assert_eq!(flows.len(), 2);
+        let heads: Vec<_> = t.events().iter().filter(|e| e.ph == 'f').collect();
+        assert_eq!(heads.len(), 2);
+        assert_eq!(flows[0].flow_id, heads[0].flow_id);
+        assert!(t.to_json().contains("\"bp\":\"e\""));
+    }
+
+    #[test]
+    fn add_span_applies_offset() {
+        let s = span(2, "serve a", 1.0, 2.0);
+        let mut t = ChromeTrace::new();
+        t.add_span(7, &s, 0.5);
+        let e = &t.events()[0];
+        assert_eq!((e.pid, e.tid, e.ts_us, e.dur_us), (7, 2, 1_500_000, Some(1_000_000)));
+        assert_eq!(e.cat, "transfer");
+    }
+}

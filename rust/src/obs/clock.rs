@@ -1,0 +1,130 @@
+//! Run-relative monotonic time and cross-process clock alignment.
+
+use std::time::Instant;
+
+/// A run-relative monotonic clock: every span, instant event and
+/// telemetry sample in one process is stamped in seconds since this
+/// clock's origin. Monotonic by construction (backed by [`Instant`]),
+/// so spans can never run backwards no matter what the wall clock
+/// does.
+#[derive(Debug, Clone, Copy)]
+pub struct Clock {
+    origin: Instant,
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::new()
+    }
+}
+
+impl Clock {
+    /// A clock whose origin is now.
+    pub fn new() -> Clock {
+        Clock { origin: Instant::now() }
+    }
+
+    /// Seconds since the clock origin.
+    pub fn now_s(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    /// The origin instant (so other timestamp sources — e.g. a
+    /// [`super::TraceRecorder`] created later in the same process —
+    /// can be rebased onto this clock exactly).
+    pub fn origin(&self) -> Instant {
+        self.origin
+    }
+
+    /// Map an [`Instant`] onto this clock (saturating at 0 for
+    /// instants before the origin).
+    pub fn since_origin(&self, t: Instant) -> f64 {
+        t.saturating_duration_since(self.origin).as_secs_f64()
+    }
+}
+
+/// Estimates the offset between a remote process's run-relative clock
+/// and the local one from (local receive time, remote send time)
+/// sample pairs.
+///
+/// Every sample satisfies `local = remote + offset + latency` with
+/// `latency >= 0`, so the *minimum* of `local - remote` over all
+/// samples is the tightest upper bound on the true offset — the
+/// classic min-latency estimator (the sample that crossed the wire
+/// fastest is the most honest one). A remote timestamp `t` maps to
+/// local time as `t + offset_s()`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClockSync {
+    best: Option<f64>,
+    samples: u64,
+}
+
+impl ClockSync {
+    /// An estimator with no samples yet.
+    pub fn new() -> ClockSync {
+        ClockSync::default()
+    }
+
+    /// Fold in one (local receive, remote send) pair, both in seconds
+    /// on their respective run-relative clocks.
+    pub fn add_sample(&mut self, local_s: f64, remote_s: f64) {
+        let d = local_s - remote_s;
+        self.best = Some(match self.best {
+            Some(b) => b.min(d),
+            None => d,
+        });
+        self.samples += 1;
+    }
+
+    /// The current offset estimate (`None` before the first sample).
+    pub fn offset_s(&self) -> Option<f64> {
+        self.best
+    }
+
+    /// Sample pairs folded in so far.
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic() {
+        let c = Clock::new();
+        let a = c.now_s();
+        let b = c.now_s();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn since_origin_saturates() {
+        let before = Instant::now();
+        let c = Clock::new();
+        assert_eq!(c.since_origin(before), 0.0);
+        assert!(c.since_origin(Instant::now()) >= 0.0);
+    }
+
+    #[test]
+    fn min_latency_offset_estimation() {
+        // Remote clock started 2.5 s before ours (offset = -2.5) and
+        // samples arrive with varying latency; the estimator must pick
+        // the lowest-latency sample.
+        let true_offset = -2.5;
+        let mut sync = ClockSync::new();
+        for (remote_s, latency) in [(1.0, 0.050), (2.0, 0.003), (3.0, 0.120)] {
+            let local_s = remote_s + true_offset + latency;
+            sync.add_sample(local_s, remote_s);
+        }
+        let est = sync.offset_s().unwrap();
+        assert!((est - (true_offset + 0.003)).abs() < 1e-12);
+        assert_eq!(sync.samples(), 3);
+    }
+
+    #[test]
+    fn no_samples_no_offset() {
+        assert_eq!(ClockSync::new().offset_s(), None);
+    }
+}

@@ -1,0 +1,152 @@
+//! Declarative counter registry + process-global live counters.
+//!
+//! A counter family (`VolStats`, `FaultStats`, the wire-level globals)
+//! declares its counters **once** as a `&'static [CounterDef]` table.
+//! Everything downstream — cross-rank merging, wire encoding, JSON
+//! export, telemetry snapshots — iterates the table instead of
+//! hand-plumbing each field, so adding a counter is a one-line table
+//! edit plus the field itself.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// How a counter combines across ranks/processes of one node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Merge {
+    /// Values add (byte totals, event counts).
+    Sum,
+    /// The largest value wins (per-rank rounds, wait times, depths —
+    /// families where SPMD ranks each see the whole story and summing
+    /// would double-count).
+    Max,
+}
+
+/// One registered counter: its wire/JSON name and merge semantics.
+/// Table *order* is the wire order — append only.
+#[derive(Debug, Clone, Copy)]
+pub struct CounterDef {
+    /// Stable snake_case name used on the wire, in JSON and in docs.
+    pub name: &'static str,
+    /// How values from different ranks combine.
+    pub merge: Merge,
+}
+
+impl CounterDef {
+    /// A summed counter.
+    pub const fn sum(name: &'static str) -> CounterDef {
+        CounterDef { name, merge: Merge::Sum }
+    }
+
+    /// A max-merged counter.
+    pub const fn max(name: &'static str) -> CounterDef {
+        CounterDef { name, merge: Merge::Max }
+    }
+}
+
+/// Merge `from` into `into` element-wise per the family's defs.
+/// Lengths must equal the table length (callers encode/decode through
+/// the same table, so a mismatch is a bug).
+pub fn merge_values(into: &mut [u64], from: &[u64], defs: &[CounterDef]) {
+    assert_eq!(into.len(), defs.len(), "counter value/def length mismatch");
+    assert_eq!(from.len(), defs.len(), "counter value/def length mismatch");
+    for (i, d) in defs.iter().enumerate() {
+        into[i] = match d.merge {
+            Merge::Sum => into[i].saturating_add(from[i]),
+            Merge::Max => into[i].max(from[i]),
+        };
+    }
+}
+
+/// Process-global live counters: cheap relaxed atomics bumped on the
+/// hot wire path and snapshotted into every telemetry frame. These are
+/// *cumulative* — the coordinator's `TelemetryStore` differences
+/// successive snapshots, so a worker dying between beats loses at most
+/// one interval, never its history.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Ctr {
+    /// Frames written to any socket link.
+    FramesSent,
+    /// Frames read from any socket link.
+    FramesRecv,
+    /// Payload + header bytes written to sockets.
+    BytesSentWire,
+    /// Payload + header bytes read from sockets.
+    BytesRecvWire,
+    /// Heartbeat frames sent by this process's beat threads.
+    HeartbeatsSent,
+    /// Telemetry frames sent by this process's beat threads.
+    TelemetrySent,
+}
+
+/// Registry for the [`Ctr`] family, in `Ctr` discriminant order.
+pub const GLOBAL_DEFS: &[CounterDef] = &[
+    CounterDef::sum("frames_sent"),
+    CounterDef::sum("frames_recv"),
+    CounterDef::sum("bytes_sent_wire"),
+    CounterDef::sum("bytes_recv_wire"),
+    CounterDef::sum("heartbeats_sent"),
+    CounterDef::sum("telemetry_sent"),
+];
+
+const NGLOBAL: usize = GLOBAL_DEFS.len();
+
+static GLOBALS: [AtomicU64; NGLOBAL] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+impl Ctr {
+    /// Add `n` to this counter (relaxed; ordering never matters for
+    /// monotonic telemetry counts).
+    #[inline]
+    pub fn bump(self, n: u64) {
+        GLOBALS[self as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value of this counter.
+    pub fn get(self) -> u64 {
+        GLOBALS[self as usize].load(Ordering::Relaxed)
+    }
+}
+
+/// Snapshot every global counter, aligned with [`GLOBAL_DEFS`].
+pub fn global_snapshot() -> Vec<u64> {
+    GLOBALS.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_respects_semantics() {
+        let defs = &[CounterDef::sum("a"), CounterDef::max("b")];
+        let mut into = vec![3, 7];
+        merge_values(&mut into, &[5, 4], defs);
+        assert_eq!(into, vec![8, 7]);
+        merge_values(&mut into, &[0, 9], defs);
+        assert_eq!(into, vec![8, 9]);
+    }
+
+    #[test]
+    fn sum_saturates() {
+        let defs = &[CounterDef::sum("a")];
+        let mut into = vec![u64::MAX - 1];
+        merge_values(&mut into, &[5], defs);
+        assert_eq!(into, vec![u64::MAX]);
+    }
+
+    #[test]
+    fn globals_bump_and_snapshot() {
+        let before = Ctr::HeartbeatsSent.get();
+        Ctr::HeartbeatsSent.bump(3);
+        assert_eq!(Ctr::HeartbeatsSent.get(), before + 3);
+        let snap = global_snapshot();
+        assert_eq!(snap.len(), GLOBAL_DEFS.len());
+        assert_eq!(snap[Ctr::HeartbeatsSent as usize], before + 3);
+    }
+}

@@ -1,0 +1,184 @@
+//! A tiny JSON writer — just enough for the Chrome-trace exporter and
+//! the machine-readable run reports (this repo is dependency-free by
+//! policy, so no serde).
+//!
+//! The builders are push-based: [`Obj`] and [`Arr`] accumulate into a
+//! `String` and `finish()` returns it. Nesting is by composing the
+//! finished strings with [`Obj::field_raw`] / [`Arr::push_raw`].
+
+/// Escape a string for use inside JSON quotes (the output does *not*
+/// include the surrounding quotes).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format an `f64` as a JSON number. JSON has no Infinity/NaN, so
+/// non-finite values become `0` (they only arise from bugs; a parseable
+/// report beats a crash in the exporter).
+pub fn num_f64(v: f64) -> String {
+    if v.is_finite() {
+        // Rust's Display for f64 is shortest-round-trip and always a
+        // valid JSON number for finite values.
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// A JSON object builder.
+#[derive(Default)]
+pub struct Obj {
+    buf: String,
+}
+
+impl Obj {
+    /// An empty object.
+    pub fn new() -> Obj {
+        Obj::default()
+    }
+
+    fn key(&mut self, name: &str) {
+        if !self.buf.is_empty() {
+            self.buf.push(',');
+        }
+        self.buf.push('"');
+        self.buf.push_str(&escape(name));
+        self.buf.push_str("\":");
+    }
+
+    /// Add a string field.
+    pub fn field_str(&mut self, name: &str, v: &str) -> &mut Obj {
+        self.key(name);
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    /// Add an unsigned integer field.
+    pub fn field_u64(&mut self, name: &str, v: u64) -> &mut Obj {
+        self.key(name);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Add a signed integer field.
+    pub fn field_i64(&mut self, name: &str, v: i64) -> &mut Obj {
+        self.key(name);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Add a floating-point field (non-finite values become `0`).
+    pub fn field_f64(&mut self, name: &str, v: f64) -> &mut Obj {
+        self.key(name);
+        self.buf.push_str(&num_f64(v));
+        self
+    }
+
+    /// Add a pre-serialized JSON value (nested object/array).
+    pub fn field_raw(&mut self, name: &str, json: &str) -> &mut Obj {
+        self.key(name);
+        self.buf.push_str(json);
+        self
+    }
+
+    /// Serialize: `{...}`.
+    pub fn finish(&self) -> String {
+        format!("{{{}}}", self.buf)
+    }
+}
+
+/// A JSON array builder.
+#[derive(Default)]
+pub struct Arr {
+    buf: String,
+}
+
+impl Arr {
+    /// An empty array.
+    pub fn new() -> Arr {
+        Arr::default()
+    }
+
+    fn sep(&mut self) {
+        if !self.buf.is_empty() {
+            self.buf.push(',');
+        }
+    }
+
+    /// Append a pre-serialized JSON value.
+    pub fn push_raw(&mut self, json: &str) -> &mut Arr {
+        self.sep();
+        self.buf.push_str(json);
+        self
+    }
+
+    /// Append a string value.
+    pub fn push_str(&mut self, v: &str) -> &mut Arr {
+        self.sep();
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    /// Append an unsigned integer value.
+    pub fn push_u64(&mut self, v: u64) -> &mut Arr {
+        self.sep();
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Serialize: `[...]`.
+    pub fn finish(&self) -> String {
+        format!("[{}]", self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn builds_nested() {
+        let mut inner = Arr::new();
+        inner.push_u64(1).push_str("x");
+        let mut o = Obj::new();
+        o.field_str("name", "run")
+            .field_f64("t", 1.5)
+            .field_raw("items", &inner.finish());
+        assert_eq!(o.finish(), r#"{"name":"run","t":1.5,"items":[1,"x"]}"#);
+    }
+
+    #[test]
+    fn nonfinite_becomes_zero() {
+        assert_eq!(num_f64(f64::NAN), "0");
+        assert_eq!(num_f64(f64::INFINITY), "0");
+        assert_eq!(num_f64(2.25), "2.25");
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Obj::new().finish(), "{}");
+        assert_eq!(Arr::new().finish(), "[]");
+    }
+}

@@ -1,0 +1,52 @@
+//! Unified observability plane: structured tracing, a counter
+//! registry, live worker telemetry, a wire-frame tap, and exporters.
+//!
+//! Everything in this module is dependency-free and layered *under*
+//! the rest of the system:
+//!
+//! * [`clock`] — the run-relative monotonic [`Clock`] every span and
+//!   telemetry sample is stamped against, plus [`ClockSync`], the
+//!   min-latency offset estimator that aligns worker clocks to the
+//!   coordinator clock when traces from many processes are merged.
+//! * [`recorder`] — [`TraceRecorder`], the lock-light (sharded)
+//!   structured span/instant store. The Gantt machinery in
+//!   [`crate::metrics`] is a *view* over this recorder, not a parallel
+//!   mechanism: [`Span`] and [`SpanKind`] live here and are
+//!   re-exported there.
+//! * [`counters`] — the declarative counter registry ([`CounterDef`]
+//!   with [`Merge`] semantics). The `VolStats`/`FaultStats` families
+//!   register their counters once; wire encoding, report merging and
+//!   JSON export all iterate the registry instead of hand-plumbing
+//!   each field. Also home of the process-global live counters
+//!   ([`Ctr`]) that telemetry frames snapshot.
+//! * [`telemetry`] — the periodic worker → coordinator counter
+//!   samples (wire `K_TELEMETRY`, VERSION 6): cumulative snapshots so
+//!   the coordinator-side [`TelemetryStore`] keeps a worker's counts
+//!   even after the worker dies, plus the clock-offset samples
+//!   [`ClockSync`] feeds on.
+//! * [`wiretap`] — the `WILKINS_TRACE_WIRE=1` frame tap: every frame's
+//!   kind/len/link/direction/timestamp to a per-process binary log
+//!   (the record half of record/replay). Disabled cost is one atomic
+//!   load + branch per frame (asserted in `benches/wire.rs`).
+//! * [`chrome`] — the merged Chrome-trace JSON exporter (`--trace`):
+//!   one track per worker/rank, flow arrows pairing cross-worker
+//!   serves with their opens, loadable in `chrome://tracing`/Perfetto.
+//! * [`json`] — the tiny JSON writer behind `RunReport::to_json` and
+//!   the Chrome exporter (no serde in this repo, by policy).
+//!
+//! See `docs/observability.md` for the trace model, the wire-tap
+//! format, the Chrome-trace workflow and the JSON report schemas.
+
+pub mod chrome;
+pub mod clock;
+pub mod counters;
+pub mod json;
+pub mod recorder;
+pub mod telemetry;
+pub mod wiretap;
+
+pub use chrome::{add_serve_open_flows, ChromeTrace};
+pub use clock::{Clock, ClockSync};
+pub use counters::{global_snapshot, merge_values, CounterDef, Ctr, Merge, GLOBAL_DEFS};
+pub use recorder::{InstantEvent, Span, SpanKind, TraceRecorder};
+pub use telemetry::{TelemetrySample, TelemetryStore, TelemetrySummary};

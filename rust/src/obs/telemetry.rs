@@ -1,0 +1,256 @@
+//! Live worker telemetry: periodic counter snapshots + clock samples.
+//!
+//! Workers piggyback a `K_TELEMETRY` frame on their heartbeat cadence
+//! carrying a *cumulative* snapshot of the process-global counters
+//! ([`super::counters::global_snapshot`]) plus the worker's
+//! run-relative send time. The coordinator-side [`TelemetryStore`]
+//! differences successive snapshots into per-worker totals — so a
+//! worker dying mid-run loses at most one beat interval of counts,
+//! never its history — and feeds every (send time, receive time) pair
+//! into a [`ClockSync`] so worker traces can be shifted onto the
+//! coordinator clock when merging.
+
+use std::collections::HashMap;
+
+use crate::comm::wire::{Reader, Writer};
+use crate::error::Result;
+
+use super::clock::ClockSync;
+use super::counters::{merge_values, GLOBAL_DEFS};
+
+/// One telemetry frame: worker-local cumulative counters + a clock
+/// sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySample {
+    /// Sending worker's id.
+    pub worker_id: u64,
+    /// Monotone per-worker sequence number (stale frames are dropped).
+    pub seq: u64,
+    /// Seconds on the worker's run-relative clock at send time.
+    pub t_mono_s: f64,
+    /// Cumulative counter snapshot, aligned with
+    /// [`super::counters::GLOBAL_DEFS`].
+    pub counters: Vec<u64>,
+}
+
+impl TelemetrySample {
+    /// Encode for the wire (`K_TELEMETRY` payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u64(self.worker_id);
+        w.put_u64(self.seq);
+        w.put_f64(self.t_mono_s);
+        w.put_u64_slice(&self.counters);
+        w.into_vec()
+    }
+
+    /// Decode a `K_TELEMETRY` payload.
+    pub fn decode(buf: &[u8]) -> Result<TelemetrySample> {
+        let mut r = Reader::new(buf);
+        Ok(TelemetrySample {
+            worker_id: r.get_u64()?,
+            seq: r.get_u64()?,
+            t_mono_s: r.get_f64()?,
+            counters: r.get_u64_vec()?,
+        })
+    }
+}
+
+#[derive(Default)]
+struct WorkerState {
+    last: Vec<u64>,
+    totals: Vec<u64>,
+    sync: ClockSync,
+    last_seq: Option<u64>,
+}
+
+/// Coordinator-side accumulator for worker telemetry.
+#[derive(Default)]
+pub struct TelemetryStore {
+    frames: u64,
+    workers: HashMap<u64, WorkerState>,
+}
+
+impl TelemetryStore {
+    /// An empty store.
+    pub fn new() -> TelemetryStore {
+        TelemetryStore::default()
+    }
+
+    /// Fold in one received sample; `local_s` is the coordinator
+    /// clock's receive time (the clock-sample pair). Stale or repeated
+    /// sequence numbers are ignored. Counter totals accumulate
+    /// *saturating deltas* of the cumulative snapshots, so a worker
+    /// process restart (counters reset to near zero) contributes a
+    /// zero delta instead of a huge negative one.
+    pub fn ingest(&mut self, s: &TelemetrySample, local_s: f64) {
+        let w = self.workers.entry(s.worker_id).or_default();
+        if let Some(prev) = w.last_seq {
+            if s.seq <= prev {
+                return;
+            }
+        }
+        w.last_seq = Some(s.seq);
+        self.frames += 1;
+        w.sync.add_sample(local_s, s.t_mono_s);
+        if w.last.len() != s.counters.len() {
+            w.last = vec![0; s.counters.len()];
+            w.totals = vec![0; s.counters.len()];
+        }
+        for i in 0..s.counters.len() {
+            w.totals[i] = w.totals[i].saturating_add(s.counters[i].saturating_sub(w.last[i]));
+            w.last[i] = s.counters[i];
+        }
+    }
+
+    /// Fold in a clock sample that did not arrive as a telemetry frame
+    /// (e.g. the `t_mono_s` stamped on a `WorldDone`); improves the
+    /// offset estimate without counting toward [`Self::frames`].
+    pub fn clock_sample(&mut self, worker_id: u64, remote_s: f64, local_s: f64) {
+        self.workers
+            .entry(worker_id)
+            .or_default()
+            .sync
+            .add_sample(local_s, remote_s);
+    }
+
+    /// Telemetry frames ingested (stale frames excluded).
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// Workers heard from (frames or clock samples).
+    pub fn workers(&self) -> u64 {
+        self.workers.len() as u64
+    }
+
+    /// Estimated clock offset for a worker: remote time `t` maps to
+    /// the local clock as `t + offset`. `None` before any sample.
+    pub fn offset_s(&self, worker_id: u64) -> Option<f64> {
+        self.workers.get(&worker_id).and_then(|w| w.sync.offset_s())
+    }
+
+    /// Counter totals summed across all workers, aligned with
+    /// [`GLOBAL_DEFS`]. Zeros if no telemetry arrived.
+    pub fn totals(&self) -> Vec<u64> {
+        let mut out = vec![0u64; GLOBAL_DEFS.len()];
+        for w in self.workers.values() {
+            if w.totals.len() == out.len() {
+                merge_values(&mut out, &w.totals, GLOBAL_DEFS);
+            }
+        }
+        out
+    }
+
+    /// Condense into the summary that rides reports.
+    pub fn summary(&self) -> TelemetrySummary {
+        TelemetrySummary {
+            frames: self.frames,
+            workers: self.workers(),
+            counters: self.totals(),
+        }
+    }
+}
+
+/// The report-facing condensation of a [`TelemetryStore`]: how many
+/// frames arrived from how many workers, and the summed counter
+/// totals (aligned with [`GLOBAL_DEFS`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TelemetrySummary {
+    /// Telemetry frames ingested.
+    pub frames: u64,
+    /// Distinct workers heard from.
+    pub workers: u64,
+    /// Summed counter totals, aligned with [`GLOBAL_DEFS`]; empty or
+    /// zeros when no telemetry arrived.
+    pub counters: Vec<u64>,
+}
+
+impl TelemetrySummary {
+    /// True when no telemetry was collected at all.
+    pub fn is_empty(&self) -> bool {
+        self.frames == 0 && self.workers == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::counters::Ctr;
+
+    fn sample(worker: u64, seq: u64, t: f64, counters: Vec<u64>) -> TelemetrySample {
+        TelemetrySample { worker_id: worker, seq, t_mono_s: t, counters }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = sample(3, 17, 1.25, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(TelemetrySample::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn deltas_merge_under_clock_skew() {
+        // Two workers whose clocks started at different times relative
+        // to the coordinator: worker 1 is 0.5 s behind (offset +0.5),
+        // worker 2 is 2 s ahead (offset -2.0). Each sends cumulative
+        // snapshots; totals must sum the deltas and offsets must land
+        // within the smallest simulated latency.
+        let n = GLOBAL_DEFS.len();
+        let mut store = TelemetryStore::new();
+        let offsets = [(1u64, 0.5), (2u64, -2.0)];
+        for (w, off) in offsets {
+            let beats = [(1.0, 0.010, 10u64), (2.0, 0.002, 25), (3.0, 0.040, 40)];
+            for (seq, (t_remote, lat, count)) in beats.into_iter().enumerate() {
+                let s = sample(w, seq as u64 + 1, t_remote, vec![count; n]);
+                store.ingest(&s, t_remote + off + lat);
+            }
+        }
+        // Each worker's cumulative snapshots end at 40 ⇒ totals 80.
+        assert_eq!(store.totals(), vec![80; n]);
+        assert_eq!(store.frames(), 6);
+        for (w, off) in offsets {
+            let est = store.offset_s(w).unwrap();
+            assert!(
+                (est - off).abs() <= 0.002 + 1e-9,
+                "worker {w}: estimated {est}, true {off}"
+            );
+        }
+    }
+
+    #[test]
+    fn stale_and_duplicate_frames_dropped() {
+        let n = GLOBAL_DEFS.len();
+        let mut store = TelemetryStore::new();
+        store.ingest(&sample(1, 2, 1.0, vec![10; n]), 1.0);
+        store.ingest(&sample(1, 2, 1.0, vec![10; n]), 1.1); // dup
+        store.ingest(&sample(1, 1, 0.5, vec![4; n]), 1.2); // stale
+        assert_eq!(store.frames(), 1);
+        assert_eq!(store.totals(), vec![10; n]);
+    }
+
+    #[test]
+    fn restart_resets_contribute_zero_delta() {
+        let n = GLOBAL_DEFS.len();
+        let mut store = TelemetryStore::new();
+        store.ingest(&sample(1, 1, 1.0, vec![100; n]), 1.0);
+        // Worker restarted: counters fell back to 3. Saturating delta
+        // is 0, then growth resumes from the restart.
+        store.ingest(&sample(1, 2, 2.0, vec![3; n]), 2.0);
+        store.ingest(&sample(1, 3, 3.0, vec![8; n]), 3.0);
+        assert_eq!(store.totals(), vec![105; n]);
+    }
+
+    #[test]
+    fn summary_and_clock_fallback() {
+        let mut store = TelemetryStore::new();
+        assert!(store.summary().is_empty());
+        store.clock_sample(7, 1.0, 1.5);
+        assert_eq!(store.offset_s(7), Some(0.5));
+        let sum = store.summary();
+        assert_eq!(sum.frames, 0);
+        assert_eq!(sum.workers, 1);
+        assert!(!sum.is_empty());
+        // Sanity: the Ctr indices line up with GLOBAL_DEFS length.
+        assert!((Ctr::TelemetrySent as usize) < GLOBAL_DEFS.len());
+    }
+}

@@ -1,0 +1,160 @@
+//! Observability end-to-end: the merged Chrome trace and JSON report
+//! coming out of a real 2-worker `wilkins up`, and the wire-frame tap
+//! (`WILKINS_TRACE_WIRE=1`) recording real frames in every process of
+//! the pool.
+
+use std::process::Command;
+
+fn wilkins() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_wilkins"))
+}
+
+fn repo(p: &str) -> String {
+    format!("{}/{p}", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Split a Chrome-trace document into per-event chunks. The exporter
+/// always writes `ph` first in each event object, so splitting on that
+/// prefix recovers event boundaries without a JSON parser.
+fn events(doc: &str) -> Vec<String> {
+    doc.split("{\"ph\":\"")
+        .skip(1)
+        .map(|s| format!("{{\"ph\":\"{s}"))
+        .collect()
+}
+
+#[test]
+fn up_two_workers_writes_merged_chrome_trace_and_json_report() {
+    let dir = std::env::temp_dir().join("wilkins-obs-up");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.json");
+    let json = dir.join("report.json");
+    let out = wilkins()
+        .args([
+            "up",
+            "--workers",
+            "2",
+            &repo("configs/listing1_3task.yaml"),
+            "--artifacts",
+            "/nonexistent", // synthetic workflow needs no engine
+            "--workdir",
+            dir.join("work").to_str().unwrap(),
+            "--trace",
+            trace.to_str().unwrap(),
+            "--json",
+            json.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("chrome trace written to"), "{s}");
+    assert!(s.contains("json report written to"), "{s}");
+
+    let doc = std::fs::read_to_string(&trace).unwrap();
+    assert!(doc.starts_with("{\"traceEvents\":["), "bad trace envelope: {doc}");
+    // The exporter clamps reversed spans; a negative duration anywhere
+    // means a clock-offset bug slipped through the merge.
+    assert!(!doc.contains("\"dur\":-"), "negative span duration: {doc}");
+    let evs = events(&doc);
+    for w in 0..2u64 {
+        assert!(
+            evs.iter().any(|e| {
+                e.contains("process_name") && e.contains(&format!("\"worker {w}\""))
+            }),
+            "no process_name track for worker {w}: {doc}"
+        );
+        assert!(
+            evs.iter().any(|e| {
+                e.starts_with("{\"ph\":\"X\"") && e.contains(&format!("\"pid\":{w},"))
+            }),
+            "no complete spans on worker {w}'s track: {doc}"
+        );
+    }
+
+    let rep = std::fs::read_to_string(&json).unwrap();
+    assert!(rep.contains("\"schema\":\"wilkins.run_report/1\""), "{rep}");
+    assert!(rep.contains("\"telemetry\":"), "{rep}");
+    assert!(rep.contains("\"counters\":"), "{rep}");
+    assert!(rep.contains("\"faults\":"), "{rep}");
+}
+
+#[test]
+fn run_single_process_writes_trace_and_json() {
+    let dir = std::env::temp_dir().join("wilkins-obs-run");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.json");
+    let json = dir.join("report.json");
+    let out = wilkins()
+        .args([
+            "run",
+            &repo("configs/listing1_3task.yaml"),
+            "--artifacts",
+            "/nonexistent",
+            "--workdir",
+            dir.join("work").to_str().unwrap(),
+            "--trace",
+            trace.to_str().unwrap(),
+            "--json",
+            json.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = std::fs::read_to_string(&trace).unwrap();
+    assert!(doc.contains("\"wilkins run\""), "{doc}");
+    assert!(events(&doc).iter().any(|e| e.starts_with("{\"ph\":\"X\"")), "{doc}");
+    assert!(!doc.contains("\"dur\":-"), "{doc}");
+    let rep = std::fs::read_to_string(&json).unwrap();
+    assert!(rep.contains("\"schema\":\"wilkins.run_report/1\""), "{rep}");
+}
+
+#[test]
+fn wire_tap_records_frames_in_every_pool_process() {
+    let dir = std::env::temp_dir().join("wilkins-obs-wtap");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = wilkins()
+        .args([
+            "up",
+            "--workers",
+            "2",
+            &repo("configs/listing1_3task.yaml"),
+            "--artifacts",
+            "/nonexistent",
+            "--workdir",
+            dir.join("work").to_str().unwrap(),
+        ])
+        .env("WILKINS_TRACE_WIRE", "1")
+        .env("WILKINS_TRACE_DIR", dir.to_str().unwrap())
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let logs: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "wtap"))
+        .collect();
+    // Coordinator + 2 spawned workers, one per-process log each.
+    assert_eq!(logs.len(), 3, "expected 3 wtap logs, got {logs:?}");
+    let mut total = 0usize;
+    for log in &logs {
+        let recs = wilkins::obs::wiretap::read_log(log).unwrap();
+        let mut last = 0u64;
+        for r in &recs {
+            assert!(r.t_us >= last, "tap timestamps must be monotone in {log:?}");
+            last = r.t_us;
+            assert!(
+                (1..=11).contains(&r.kind),
+                "unknown frame kind {} in {log:?}",
+                r.kind
+            );
+        }
+        total += recs.len();
+    }
+    assert!(total > 0, "no frames tapped across {logs:?}");
+}
