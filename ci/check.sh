@@ -164,6 +164,23 @@ else
 fi
 rm -rf "$obsdir"
 
+echo "== replay smoke (recorded chaos run must replay bit-identically) =="
+# Record the same chaos campaign with full payload capture, then
+# replay the wire logs in one process: the reconstructed report must
+# diff clean against the recorded one (docs/replay.md).
+rpdir="${TMPDIR:-/tmp}/wilkins-ci-replay-$$"
+rm -rf "$rpdir"; mkdir -p "$rpdir"
+WILKINS_FAULT="kill@0:after=0" WILKINS_FAULT_HARD=1 \
+    WILKINS_TRACE_WIRE=full WILKINS_TRACE_DIR="$rpdir" \
+    cargo run --release -- ensemble configs/chaos_ensemble.yaml \
+    --artifacts /nonexistent --json "$rpdir/report.json" >/dev/null
+replay_out=$(cargo run --release -- replay "$rpdir")
+echo "$replay_out" | grep -q "report diff: identical" || {
+    echo "FAIL: replay diverged from the recorded chaos run:"
+    echo "$replay_out"; exit 1;
+}
+rm -rf "$rpdir"
+
 echo "== paper benches (wire / flow / dataplane / ensembles) =="
 # Each bench asserts its own acceptance shape — the wire bench covers
 # the >=2x copy reduction AND that the disabled wire tap stays off the

@@ -25,10 +25,13 @@
 pub mod buf;
 mod collectives;
 mod intercomm;
+#[warn(missing_docs)]
+pub mod replay;
 pub mod wire;
 
 pub use buf::{BufPool, Payload};
 pub use intercomm::InterComm;
+pub use replay::{ReplayTransport, ReplayWorld};
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -8,6 +8,7 @@
 //!   wilkins up <config-or-spec.yaml> [--workers N] [...]
 //!   wilkins ensemble <spec.yaml> [--budget N] [--policy P] [--dry-run] [...]
 //!   wilkins worker --connect ADDR --id K
+//!   wilkins replay <trace-dir> [--against FILE.json] [--json FILE.json]
 //!   wilkins validate <config.yaml>
 //!   wilkins graph <config.yaml>
 //!   wilkins list-tasks
@@ -39,6 +40,10 @@ USAGE:
     wilkins ensemble <spec.yaml> [OPTIONS]
                                           co-schedule N workflow instances
     wilkins worker --connect ADDR --id K  join a pool (spawned by `up`)
+    wilkins replay <trace-dir> [OPTIONS]  re-run a recorded multi-process
+                                          run from its .wtap wire logs,
+                                          deterministically, in one
+                                          process, and diff the report
     wilkins validate <config.yaml>        parse + validate only
     wilkins graph <config.yaml>           print the expanded task graph
     wilkins list-tasks                    list built-in task codes
@@ -73,6 +78,14 @@ OPTIONS (ensemble, in addition to the run options):
     (--gantt writes the merged per-instance trace; --trace additionally
      paints WorkerLost/Requeue markers; one shared AOT engine serves
      every instance)
+
+OPTIONS (replay):
+    --against FILE     recorded report JSON to diff against (default:
+                       <trace-dir>/report.json when present)
+    --json FILE.json   write the replayed report JSON
+    (record the run first: WILKINS_TRACE_WIRE=full
+     WILKINS_TRACE_DIR=<trace-dir> wilkins up ... --json
+     <trace-dir>/report.json — see docs/replay.md)
 ";
 
 fn main() -> ExitCode {
@@ -91,6 +104,7 @@ fn run() -> wilkins::Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("up") => cmd_up(&args[1..]),
         Some("worker") => cmd_worker(&args[1..]),
+        Some("replay") => cmd_replay(&args[1..]),
         Some("ensemble") => cmd_ensemble(&args[1..]),
         Some("validate") => cmd_validate(&args[1..]),
         Some("graph") => cmd_graph(&args[1..]),
@@ -510,6 +524,59 @@ fn cmd_up(args: &[String]) -> wilkins::Result<()> {
         write_artifact(&p, "json report", &report.to_json())?;
     }
     Ok(())
+}
+
+/// `wilkins replay`: load the `.wtap` wire logs a recorded run left
+/// in a trace dir, re-drive the coordinator bookkeeping from them in
+/// this one process, and diff the reassembled report against the
+/// recorded one. Exits non-zero on any deterministic-surface
+/// divergence.
+fn cmd_replay(args: &[String]) -> wilkins::Result<()> {
+    let mut args = args.to_vec();
+    let against_opt = take_opt(&mut args, "--against").map(PathBuf::from);
+    let json = take_opt(&mut args, "--json").map(PathBuf::from);
+    let dir = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .map(PathBuf::from)
+        .ok_or_else(|| wilkins::WilkinsError::Config("missing <trace-dir>".into()))?;
+
+    let run = wilkins::obs::replay::RecordedRun::load(&dir)?;
+    println!(
+        "replaying {}: {} coordinator records, {} worker log(s)",
+        dir.display(),
+        run.coordinator.len(),
+        run.workers.len()
+    );
+    if run.truncated {
+        println!("note: a log ends mid-record (its process died writing); replaying the complete prefix");
+    }
+    let replayed = wilkins::obs::replay::replay(&run)?;
+    print!("{}", replayed.render());
+    if let Some(p) = &json {
+        write_artifact(p, "replayed json report", &replayed.to_json())?;
+    }
+
+    let against = against_opt.unwrap_or_else(|| dir.join("report.json"));
+    if !against.exists() {
+        println!(
+            "no recorded report at {} — skipping diff (record with --json, or pass --against)",
+            against.display()
+        );
+        return Ok(());
+    }
+    let recorded = wilkins::obs::replay::normalize_report_json(&std::fs::read_to_string(&against)?)?;
+    let ours = wilkins::obs::replay::normalize_report_json(&replayed.to_json())?;
+    match wilkins::obs::replay::diff_reports(&recorded, &ours) {
+        None => {
+            println!("report diff: identical (vs {})", against.display());
+            Ok(())
+        }
+        Some(d) => Err(wilkins::WilkinsError::Task(format!(
+            "replay diverged from {}: {d}",
+            against.display()
+        ))),
+    }
 }
 
 /// `wilkins worker`: one member of an `up` pool (never invoked by

@@ -61,20 +61,24 @@ pub const HEADER_LEN: usize = 5;
 pub type Frame = (u8, Vec<u8>);
 
 /// Observability note for one frame handed to the kernel: wire
-/// counters + the (usually disabled) frame tap.
+/// counters + the (usually disabled) frame tap. Takes the body as
+/// scattered `parts` so the tap can capture payload bytes under
+/// `WILKINS_TRACE_WIRE=full` without the codec staging a copy.
 #[inline]
-fn note_tx(kind: u8, body_len: usize) {
+fn note_tx(kind: u8, parts: &[&[u8]]) {
+    let body_len: usize = parts.iter().map(|p| p.len()).sum();
     Ctr::FramesSent.bump(1);
     Ctr::BytesSentWire.bump((HEADER_LEN + body_len) as u64);
-    wiretap::frame(wiretap::Dir::Tx, kind, body_len as u32);
+    wiretap::frame_parts(wiretap::Dir::Tx, kind, parts);
 }
 
 /// Observability note for one complete frame read off a socket.
 #[inline]
-fn note_rx(kind: u8, body_len: usize) {
+fn note_rx(kind: u8, parts: &[&[u8]]) {
+    let body_len: usize = parts.iter().map(|p| p.len()).sum();
     Ctr::FramesRecv.bump(1);
     Ctr::BytesRecvWire.bump((HEADER_LEN + body_len) as u64);
-    wiretap::frame(wiretap::Dir::Rx, kind, body_len as u32);
+    wiretap::frame_parts(wiretap::Dir::Rx, kind, parts);
 }
 
 /// Assemble a frame as contiguous bytes (header + body). Kept separate
@@ -101,7 +105,7 @@ pub fn write_frame<W: Write>(w: &mut W, kind: u8, body: &[u8]) -> Result<()> {
         )));
     }
     w.write_all(&encode_frame(kind, body))?;
-    note_tx(kind, body.len());
+    note_tx(kind, &[body]);
     Ok(())
 }
 
@@ -146,7 +150,7 @@ pub fn write_frame_vectored<W: Write>(w: &mut W, kind: u8, parts: &[&[u8]]) -> R
         }
         written += n;
     }
-    note_tx(kind, body_len);
+    note_tx(kind, parts);
     Ok(())
 }
 
@@ -193,7 +197,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
     r.read_exact(&mut body).map_err(|e| {
         WilkinsError::Comm(format!("socket closed inside a {len}-byte frame body: {e}"))
     })?;
-    note_rx(kind, len);
+    note_rx(kind, &[&body[..]]);
     Ok(Some((kind, body)))
 }
 
@@ -222,7 +226,7 @@ pub fn read_frame_payload<R: Read>(r: &mut R) -> Result<Option<(u8, Payload)>> {
             "socket closed inside a frame body ({got}/{len} bytes)"
         )));
     }
-    note_rx(kind, len);
+    note_rx(kind, &[&lease[..]]);
     Ok(Some((kind, lease.finish())))
 }
 
@@ -299,7 +303,7 @@ pub fn read_frame_timed<R: Read>(
     }
     let mut body = vec![0u8; len];
     read_body_timed(r, &mut body, frame_deadline)?;
-    note_rx(kind, len);
+    note_rx(kind, &[&body[..]]);
     Ok(TimedRead::Frame((kind, body)))
 }
 
@@ -349,7 +353,7 @@ pub fn read_frame_payload_timed<R: Read>(
     let mut lease = buf::pool().lease(len);
     lease.resize(len, 0);
     read_body_timed(r, &mut lease, frame_deadline)?;
-    note_rx(kind, len);
+    note_rx(kind, &[&lease[..]]);
     Ok(TimedRead::Frame((kind, lease.finish())))
 }
 

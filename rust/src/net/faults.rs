@@ -30,6 +30,15 @@
 //! ```text
 //! WILKINS_FAULT="kill@1:after=1;delay@2:ms=50"
 //! ```
+//!
+//! `at=launch` retargets a directive at the `LaunchWorld` seam
+//! instead of `RunInstance` (the default, also spellable
+//! `at=instance`), so `process-per-node` worlds can lose a worker
+//! mid-launch:
+//!
+//! ```text
+//! WILKINS_FAULT="kill@0:at=launch"
+//! ```
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -55,13 +64,23 @@ pub enum FaultKind {
     DropDone,
 }
 
+/// Which protocol seam a directive fires at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultAt {
+    /// On a `RunInstance` receipt (ensemble dispatch; the default).
+    Instance,
+    /// On a `LaunchWorld` receipt (`process-per-node` launch).
+    Launch,
+}
+
 /// One parsed `kind@worker[:k=v,...]` directive.
 #[derive(Debug, Clone, Copy)]
 struct Directive {
     worker: usize,
     kind: FaultKind,
-    /// Fire on the (after+1)-th RunInstance.
+    /// Fire on the (after+1)-th command at the `at` seam.
     after: u64,
+    at: FaultAt,
 }
 
 /// A worker's fault schedule: which directives target it and how many
@@ -72,6 +91,9 @@ pub struct FaultPlan {
     directives: Vec<Directive>,
     /// RunInstance commands this worker has received so far.
     seen: AtomicU64,
+    /// LaunchWorld commands this worker has received so far (the
+    /// `at=launch` seam counts separately).
+    seen_launch: AtomicU64,
     /// Set once a Wedge/DropDone fires: the heartbeat thread checks
     /// it and falls silent.
     silenced: std::sync::atomic::AtomicBool,
@@ -114,10 +136,22 @@ impl FaultPlan {
     /// way.
     pub fn on_run_instance(&self, worker: usize) -> Option<FaultKind> {
         let n = self.seen.fetch_add(1, Ordering::SeqCst);
+        self.fire(worker, FaultAt::Instance, n)
+    }
+
+    /// Called by the worker on each `LaunchWorld` receipt: returns the
+    /// `at=launch` directive that fires now, if any. Counts the
+    /// command either way (independently of the instance counter).
+    pub fn on_launch_world(&self, worker: usize) -> Option<FaultKind> {
+        let n = self.seen_launch.fetch_add(1, Ordering::SeqCst);
+        self.fire(worker, FaultAt::Launch, n)
+    }
+
+    fn fire(&self, worker: usize, at: FaultAt, n: u64) -> Option<FaultKind> {
         let kind = self
             .directives
             .iter()
-            .find(|d| d.worker == worker && d.after == n)
+            .find(|d| d.worker == worker && d.at == at && d.after == n)
             .map(|d| d.kind);
         if matches!(kind, Some(FaultKind::Wedge) | Some(FaultKind::DropDone)) {
             self.silenced.store(true, Ordering::SeqCst);
@@ -155,6 +189,7 @@ fn parse_directive(part: &str) -> Result<Directive> {
         .map_err(|_| bad("worker id must be an integer"))?;
     let mut after = 0u64;
     let mut ms: Option<u64> = None;
+    let mut at = FaultAt::Instance;
     if let Some(opts) = opts {
         for kv in opts.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             let (k, v) = kv.split_once('=').ok_or_else(|| bad("options are `key=value`"))?;
@@ -164,6 +199,13 @@ fn parse_directive(part: &str) -> Result<Directive> {
                 }
                 "ms" => {
                     ms = Some(v.trim().parse().map_err(|_| bad("ms must be an integer"))?);
+                }
+                "at" => {
+                    at = match v.trim() {
+                        "instance" => FaultAt::Instance,
+                        "launch" => FaultAt::Launch,
+                        _ => return Err(bad("at must be `instance` or `launch`")),
+                    };
                 }
                 other => return Err(bad(&format!("unknown option `{other}`"))),
             }
@@ -177,7 +219,7 @@ fn parse_directive(part: &str) -> Result<Directive> {
         "drop-done" => FaultKind::DropDone,
         other => return Err(bad(&format!("unknown fault kind `{other}`"))),
     };
-    Ok(Directive { worker, kind, after })
+    Ok(Directive { worker, kind, after, at })
 }
 
 #[cfg(test)]
@@ -222,6 +264,23 @@ mod tests {
     }
 
     #[test]
+    fn launch_seam_counts_separately_from_instances() {
+        let plan = FaultPlan::parse("kill@0:at=launch").unwrap();
+        // Instance receipts never trip a launch-seam directive...
+        assert_eq!(plan.on_run_instance(0), None);
+        assert_eq!(plan.on_run_instance(0), None);
+        // ...and the first LaunchWorld does, regardless of how many
+        // instances came first.
+        assert_eq!(plan.on_launch_world(0), Some(FaultKind::Kill));
+        assert_eq!(plan.on_launch_world(0), None);
+
+        // The default seam is untouched by launches.
+        let plan = FaultPlan::parse("kill@0").unwrap();
+        assert_eq!(plan.on_launch_world(0), None);
+        assert_eq!(plan.on_run_instance(0), Some(FaultKind::Kill));
+    }
+
+    #[test]
     fn multiple_directives_parse() {
         let plan = FaultPlan::parse("kill@1:after=1; dup-done@0 ;delay@2:ms=5,after=3").unwrap();
         assert!(plan.targets(0) && plan.targets(1) && plan.targets(2));
@@ -236,6 +295,7 @@ mod tests {
             "delay@1",          // delay without ms
             "kill@1:after=abc", // non-numeric after
             "kill@1:nope=3",    // unknown option
+            "kill@1:at=boot",   // unknown seam
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
         }

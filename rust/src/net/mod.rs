@@ -65,7 +65,10 @@ pub mod worker;
 pub use faults::{FaultKind, FaultPlan};
 pub use pool::{HeartbeatConfig, WorkerPool};
 pub use transport::SocketTransport;
-pub use up::{run_workflow_distributed, run_workflow_distributed_traced, DistTrace, UpOpts, WorkerTrack};
+pub use up::{
+    run_workflow_distributed, run_workflow_distributed_on, run_workflow_distributed_traced,
+    DistTrace, UpOpts, WorkerTrack,
+};
 pub use worker::{worker_main, worker_main_with, WorkerOpts};
 
 #[cfg(test)]

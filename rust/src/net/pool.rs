@@ -22,6 +22,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::error::{Result, WilkinsError};
+use crate::obs::wiretap;
 use crate::obs::{Clock, TelemetrySample, TelemetryStore, TelemetrySummary};
 
 use super::codec::{self, TimedRead};
@@ -352,6 +353,7 @@ impl WorkerPool {
             )));
         }
         let mut link = self.links[id].lock().unwrap();
+        wiretap::set_link(id as u32);
         if let Err(e) = link.send(proto::K_RUN_INSTANCE, &req.encode()) {
             self.mark_dead(id);
             return Err(WilkinsError::WorkerLost(format!(
@@ -380,11 +382,16 @@ impl WorkerPool {
     pub fn launch_world(&self, msg: &LaunchWorld) -> Result<Vec<WorldDone>> {
         let body = msg.encode();
         for link in &self.links {
-            link.lock().unwrap().send(proto::K_LAUNCH_WORLD, &body)?;
+            let mut link = link.lock().unwrap();
+            // Tag this thread's wire-tap records with the worker id so
+            // a replay can attribute each frame to its link.
+            wiretap::set_link(link.id as u32);
+            link.send(proto::K_LAUNCH_WORLD, &body)?;
         }
         let mut replies = Vec::with_capacity(self.links.len());
         for link in &self.links {
             let mut link = link.lock().unwrap();
+            wiretap::set_link(link.id as u32);
             let (kind, body) = self.recv_live(&mut link)?;
             if kind != proto::K_WORLD_DONE {
                 return Err(WilkinsError::Comm(format!(

@@ -82,7 +82,24 @@ pub fn run_workflow_distributed_traced(
     let cfg = WorkflowConfig::from_yaml_str(config_src)?;
     let graph = WorkflowGraph::build(&cfg)?;
     let nworkers = opts.workers.clamp(1, graph.nodes.len());
-    let owner_of = rendezvous::assign_nodes(&graph, nworkers);
+    let pool = WorkerPool::spawn_with(nworkers, opts.heartbeat)?;
+    let out = run_workflow_distributed_on(&pool, config_src, opts)?;
+    pool.shutdown();
+    Ok(out)
+}
+
+/// Run `config_src` as one distributed world over an *existing* pool
+/// (spawned by the caller — possibly of emulated in-thread workers, as
+/// the fault tests do) and return the merged report + trace. Does not
+/// shut the pool down; the caller owns its lifecycle.
+pub fn run_workflow_distributed_on(
+    pool: &WorkerPool,
+    config_src: &str,
+    opts: &UpOpts,
+) -> Result<(RunReport, DistTrace)> {
+    let cfg = WorkflowConfig::from_yaml_str(config_src)?;
+    let graph = WorkflowGraph::build(&cfg)?;
+    let owner_of = rendezvous::assign_nodes(&graph, pool.size());
 
     // One shared workdir for every process: same precedence as the
     // single-process driver (explicit > workflow `workdir:` > temp),
@@ -95,7 +112,6 @@ pub fn run_workflow_distributed_traced(
             std::env::temp_dir().join(format!("wilkins-up-{}", std::process::id()))
         });
 
-    let pool = WorkerPool::spawn_with(nworkers, opts.heartbeat)?;
     let hb = pool.heartbeat();
     let msg = LaunchWorld {
         config_src: config_src.to_string(),
@@ -153,6 +169,5 @@ pub fn run_workflow_distributed_traced(
     let mut report = report::build(&graph, outcomes, elapsed, bytes_sent, msgs_sent)?;
     report.faults.heartbeat_misses = pool.heartbeat_misses();
     report.telemetry = pool.telemetry_summary();
-    pool.shutdown();
     Ok((report, trace))
 }

@@ -20,8 +20,9 @@
 //! `K_TELEMETRY` frame — a cumulative snapshot of the process-global
 //! counters plus a clock sample — so the coordinator's live telemetry
 //! survives a worker dying mid-run. The serve loop also consults
-//! the process's [`FaultPlan`] on every `RunInstance` — a no-op
-//! unless `WILKINS_FAULT` armed it (tests and chaos smokes only).
+//! the process's [`FaultPlan`] on every `RunInstance` and
+//! `LaunchWorld` (`at=launch` directives) — a no-op unless
+//! `WILKINS_FAULT` armed it (tests and chaos smokes only).
 //!
 //! Workers deliberately hold their distributed world open until the
 //! coordinator's `Shutdown`: our ranks finishing does not mean our
@@ -186,6 +187,24 @@ fn serve_loop(
             None | Some((proto::K_SHUTDOWN, _)) => break,
             Some((proto::K_LAUNCH_WORLD, body)) => {
                 let msg = LaunchWorld::decode(&body)?;
+                match faults.on_launch_world(worker_id) {
+                    Some(FaultKind::Kill) => {
+                        if std::env::var("WILKINS_FAULT_HARD").as_deref() == Ok("1") {
+                            std::process::exit(9);
+                        }
+                        faults.silence();
+                        let _ = control.shutdown(Shutdown::Both);
+                        return Ok(());
+                    }
+                    Some(FaultKind::Wedge) => park_forever(),
+                    Some(FaultKind::Delay(ms)) => {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                    // The reply-shaped faults have no meaning at this
+                    // seam (a world has exactly one reply): serve
+                    // normally.
+                    Some(FaultKind::DupDone) | Some(FaultKind::DropDone) | None => {}
+                }
                 let reply = match serve_world(worker_id, peer_listener, &msg, clock) {
                     Ok((done, mesh)) => {
                         held = Some(mesh);

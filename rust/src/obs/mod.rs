@@ -26,8 +26,13 @@
 //!   [`ClockSync`] feeds on.
 //! * [`wiretap`] — the `WILKINS_TRACE_WIRE=1` frame tap: every frame's
 //!   kind/len/link/direction/timestamp to a per-process binary log
-//!   (the record half of record/replay). Disabled cost is one atomic
+//!   (the record half of record/replay; `WILKINS_TRACE_WIRE=full`
+//!   additionally captures payloads). Disabled cost is one atomic
 //!   load + branch per frame (asserted in `benches/wire.rs`).
+//! * [`replay`] — the replay half: load a recorded run's per-process
+//!   logs ([`RecordedRun`]), re-drive the coordinator bookkeeping
+//!   deterministically in one process, and diff the reassembled
+//!   report against the recorded one (`wilkins replay <dir>`).
 //! * [`chrome`] — the merged Chrome-trace JSON exporter (`--trace`):
 //!   one track per worker/rank, flow arrows pairing cross-worker
 //!   serves with their opens, loadable in `chrome://tracing`/Perfetto.
@@ -42,6 +47,7 @@ pub mod clock;
 pub mod counters;
 pub mod json;
 pub mod recorder;
+pub mod replay;
 pub mod telemetry;
 pub mod wiretap;
 
@@ -49,4 +55,5 @@ pub use chrome::{add_serve_open_flows, ChromeTrace};
 pub use clock::{Clock, ClockSync};
 pub use counters::{global_snapshot, merge_values, CounterDef, Ctr, Merge, GLOBAL_DEFS};
 pub use recorder::{InstantEvent, Span, SpanKind, TraceRecorder};
+pub use replay::{RecordedRun, ReplayedReport};
 pub use telemetry::{TelemetrySample, TelemetryStore, TelemetrySummary};

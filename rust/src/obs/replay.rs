@@ -1,0 +1,764 @@
+//! Deterministic replay of recorded multi-worker runs — the *replay*
+//! half of ROADMAP item 4a, closing the loop [`wiretap`] opened.
+//!
+//! A run recorded with `WILKINS_TRACE_WIRE=full` leaves one
+//! full-capture `.wtap` log per process (coordinator + every worker).
+//! [`RecordedRun::load`] classifies the logs by the frames they
+//! carry, and [`replay`] re-drives the *coordinator's* bookkeeping —
+//! dispatch accounting, fault counters, telemetry ingestion, report
+//! assembly — from the recorded frame schedule alone, in one process,
+//! with no sockets, no timers and no races. Same input, same log,
+//! same report: bit-for-bit, every time.
+//!
+//! Two replay levels:
+//!
+//! * **Coordinator replay** ([`replay`]) — walk the coordinator log
+//!   in record order and mirror exactly what the live coordinator did
+//!   with each frame: `RunInstance` dispatches (a re-dispatch of an
+//!   instance whose prior dispatch never answered is a worker loss +
+//!   requeue), `InstanceDone` completions matched by idempotency key,
+//!   `LaunchWorld`/`WorldDone` merges for distributed worlds, and
+//!   `Telemetry` ingestion. Per-instance [`RunReport`]s come verbatim
+//!   from the recorded completion payloads, so their counters
+//!   reproduce exactly.
+//! * **Execution replay** ([`replay_worker_ranks`]) — re-*run* one
+//!   recorded worker's ranks against a
+//!   [`ReplayWorld`](crate::comm::ReplayWorld): every inbound data
+//!   and flow-control message from the worker's log is pre-injected
+//!   into the hosted mailboxes, outbound cross-process sends are
+//!   suppressed, and the actual task code (lowfive engines, flow
+//!   control, collectives) executes under the recorded message
+//!   schedule.
+//!
+//! Reports are compared with [`normalize_report_json`], which strips
+//! only wall-clock-derived members (elapsed/start/finish times,
+//! heartbeat misses, scheduler poll rounds, event attributes carrying
+//! error prose); every counter, instance row, event name and
+//! telemetry total must match exactly. See `docs/replay.md`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::coordinator::report::{self, RankOutcome};
+use crate::coordinator::{FaultStats, RunReport};
+use crate::ensemble::{EnsembleReport, EnsembleSpec, InstanceReport, Placement};
+use crate::error::{Result, WilkinsError};
+use crate::graph::WorkflowGraph;
+use crate::metrics::MergedTrace;
+use crate::net::proto::{
+    ChunkAssembler, Hello, InstanceDone, LaunchWorld, RunInstance, WorldDone, K_DATA,
+    K_DATA_CHUNK, K_HELLO, K_INSTANCE_DONE, K_LAUNCH_WORLD, K_RUN_INSTANCE, K_TELEMETRY,
+    K_WORLD_DONE,
+};
+use crate::obs::recorder::InstantEvent;
+use crate::obs::telemetry::{TelemetrySample, TelemetryStore};
+use crate::obs::wiretap::{self, Dir, WireRecord};
+use crate::tasks::builtin_registry;
+use crate::Wilkins;
+
+/// What kind of run a recorded log set captures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunKind {
+    /// An ensemble campaign (`process-per-instance`): the coordinator
+    /// dispatched `RunInstance` frames.
+    Ensemble,
+    /// One distributed workflow world (`process-per-node`): the
+    /// coordinator broadcast a `LaunchWorld`.
+    World,
+}
+
+/// A loaded set of per-process wire logs from one recorded run.
+pub struct RecordedRun {
+    /// What the coordinator log says this run was.
+    pub kind: RunKind,
+    /// The coordinator's records, in write order.
+    pub coordinator: Vec<WireRecord>,
+    /// Per-worker records, sorted by worker id (decoded from each
+    /// worker's `Hello`).
+    pub workers: Vec<(u64, Vec<WireRecord>)>,
+    /// True when any log ended in a torn record (a process was killed
+    /// mid-write; the complete prefix is still replayed).
+    pub truncated: bool,
+}
+
+impl RecordedRun {
+    /// Load every `*.wtap` log in `dir` and classify coordinator vs
+    /// workers. Requires full-capture (version 2) logs; header-only
+    /// v1 logs parse but cannot be replayed, so they are rejected
+    /// with a pointer at `WILKINS_TRACE_WIRE=full`.
+    pub fn load(dir: &Path) -> Result<RecordedRun> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| {
+                WilkinsError::Config(format!("cannot read replay dir {}: {e}", dir.display()))
+            })?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "wtap"))
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(WilkinsError::Config(format!(
+                "no .wtap logs in {} (record a run with WILKINS_TRACE_WIRE=full \
+                 and WILKINS_TRACE_DIR pointing here)",
+                dir.display()
+            )));
+        }
+
+        let mut coordinator: Option<Vec<WireRecord>> = None;
+        let mut workers: Vec<(u64, Vec<WireRecord>)> = Vec::new();
+        let mut truncated = false;
+        for path in &paths {
+            let log = wiretap::read_log(path).map_err(WilkinsError::Io)?;
+            if log.version < 2 {
+                return Err(WilkinsError::Config(format!(
+                    "{}: header-only wiretap log (WILKINS_TRACE_WIRE=1); replay needs \
+                     payload capture — record with WILKINS_TRACE_WIRE=full",
+                    path.display()
+                )));
+            }
+            truncated |= log.truncated;
+            // A worker's first outbound frame is its rendezvous Hello;
+            // the coordinator never sends one.
+            let hello = log
+                .records
+                .iter()
+                .find(|r| r.dir == Dir::Tx && r.kind == K_HELLO);
+            if let Some(h) = hello {
+                let id = Hello::decode(&h.payload)?.worker_id;
+                workers.push((id, log.records));
+            } else if log
+                .records
+                .iter()
+                .any(|r| r.dir == Dir::Tx && matches!(r.kind, K_RUN_INSTANCE | K_LAUNCH_WORLD))
+            {
+                if coordinator.is_some() {
+                    return Err(WilkinsError::Config(format!(
+                        "{}: two coordinator logs in one replay dir (mixed runs?)",
+                        dir.display()
+                    )));
+                }
+                coordinator = Some(log.records);
+            }
+            // Logs with neither (a process that died before doing
+            // anything) are ignored.
+        }
+        let coordinator = coordinator.ok_or_else(|| {
+            WilkinsError::Config(format!(
+                "{}: no coordinator log (no recorded RunInstance/LaunchWorld dispatch)",
+                dir.display()
+            ))
+        })?;
+        let kind = if coordinator
+            .iter()
+            .any(|r| r.dir == Dir::Tx && r.kind == K_RUN_INSTANCE)
+        {
+            RunKind::Ensemble
+        } else {
+            RunKind::World
+        };
+        workers.sort_by_key(|(id, _)| *id);
+        Ok(RecordedRun { kind, coordinator, workers, truncated })
+    }
+}
+
+/// The report a replay reproduces: the same type the recorded run
+/// printed and exported.
+pub enum ReplayedReport {
+    /// An ensemble campaign's merged report.
+    Ensemble(EnsembleReport),
+    /// A distributed workflow world's merged report.
+    World(RunReport),
+}
+
+impl ReplayedReport {
+    /// The machine-readable JSON, same schema as the recorded run's
+    /// `--json` artifact.
+    pub fn to_json(&self) -> String {
+        match self {
+            ReplayedReport::Ensemble(r) => r.to_json(),
+            ReplayedReport::World(r) => r.to_json(),
+        }
+    }
+
+    /// The CLI table, same renderer as the recorded run.
+    pub fn render(&self) -> String {
+        match self {
+            ReplayedReport::Ensemble(r) => r.render(),
+            ReplayedReport::World(r) => r.render(),
+        }
+    }
+}
+
+/// Re-drive the coordinator's bookkeeping from the recorded frame
+/// schedule and reassemble the run's report. Deterministic: the only
+/// input is the log.
+pub fn replay(run: &RecordedRun) -> Result<ReplayedReport> {
+    match run.kind {
+        RunKind::Ensemble => replay_ensemble(run).map(ReplayedReport::Ensemble),
+        RunKind::World => replay_world(run).map(ReplayedReport::World),
+    }
+}
+
+/// Seconds on the coordinator clock of record `r`, relative to the
+/// log's first record.
+fn rel_s(t0: u64, t_us: u64) -> f64 {
+    (t_us.saturating_sub(t0)) as f64 / 1e6
+}
+
+fn replay_ensemble(run: &RecordedRun) -> Result<EnsembleReport> {
+    // The spec ships inside every dispatch; the first one pins down
+    // names, ranks, budget and policy exactly as workers re-parsed it.
+    let first = run
+        .coordinator
+        .iter()
+        .find(|r| r.dir == Dir::Tx && r.kind == K_RUN_INSTANCE)
+        .expect("RunKind::Ensemble implies a RunInstance dispatch");
+    let ri0 = RunInstance::decode(&first.payload)?;
+    let spec = EnsembleSpec::from_yaml_str(&ri0.spec_src, Path::new(&ri0.base_dir))?;
+    let n = spec.instances.len();
+
+    let t0 = run.coordinator.first().map(|r| r.t_us).unwrap_or(0);
+    let mut started = vec![0.0_f64; n];
+    let mut finished = vec![0.0_f64; n];
+    let mut reports: Vec<Option<RunReport>> = (0..n).map(|_| None).collect();
+    let mut spans: Vec<Vec<crate::obs::Span>> = vec![Vec::new(); n];
+    let mut done_once = vec![false; n];
+    let mut faults = FaultStats::default();
+    let mut events: Vec<InstantEvent> = Vec::new();
+    let mut telemetry = TelemetryStore::new();
+    // idem_key -> instance idx, for dispatches still awaiting their
+    // completion. Keys are unique per dispatch, so this mirrors the
+    // pool's per-worker outstanding maps merged into one.
+    let mut outstanding: HashMap<u64, usize> = HashMap::new();
+    let mut peak = 0usize;
+    let mut last_t = 0.0_f64;
+
+    for rec in &run.coordinator {
+        let t_s = rel_s(t0, rec.t_us);
+        last_t = last_t.max(t_s);
+        match (rec.dir, rec.kind) {
+            (Dir::Tx, K_RUN_INSTANCE) => {
+                let ri = RunInstance::decode(&rec.payload)?;
+                let idx = ri.instance_idx as usize;
+                if idx >= n {
+                    return Err(WilkinsError::Config(format!(
+                        "recorded dispatch of instance {idx}, spec has {n}"
+                    )));
+                }
+                // A second dispatch while the first never answered is
+                // the coordinator surviving a worker loss: the live
+                // run recorded WorkerLost, then Requeue, then this
+                // re-dispatch under a fresh idempotency key.
+                if let Some(prev) = outstanding
+                    .iter()
+                    .find_map(|(k, i)| if *i == idx { Some(*k) } else { None })
+                {
+                    outstanding.remove(&prev);
+                    faults.lost_workers += 1;
+                    events.push(InstantEvent {
+                        rank: 0,
+                        name: "WorkerLost".into(),
+                        t: t_s,
+                        attrs: vec![("instance".into(), spec.instances[idx].name.clone())],
+                    });
+                    faults.retries += 1;
+                    events.push(InstantEvent {
+                        rank: 0,
+                        name: "Requeue".into(),
+                        t: t_s,
+                        attrs: vec![("instance".into(), spec.instances[idx].name.clone())],
+                    });
+                }
+                outstanding.insert(ri.idem_key, idx);
+                started[idx] = t_s;
+                let in_use: usize = {
+                    let mut idxs: Vec<usize> = outstanding.values().copied().collect();
+                    idxs.sort_unstable();
+                    idxs.dedup();
+                    idxs.iter().map(|&i| spec.instances[i].ranks()).sum()
+                };
+                peak = peak.max(in_use);
+            }
+            (Dir::Rx, K_INSTANCE_DONE) => {
+                let done = InstanceDone::decode(&rec.payload)?;
+                let Some(idx) = outstanding.remove(&done.idem_key) else {
+                    // Stale reply from a presumed-dead worker; the
+                    // live pool's idempotency check dropped it too.
+                    faults.dup_done += 1;
+                    continue;
+                };
+                if done_once[idx] {
+                    faults.dup_done += 1;
+                    continue;
+                }
+                if !done.error.is_empty() {
+                    return Err(WilkinsError::Task(format!(
+                        "recorded campaign failed: {}: {}",
+                        spec.instances[idx].name, done.error
+                    )));
+                }
+                done_once[idx] = true;
+                finished[idx] = t_s;
+                spans[idx] = done.spans;
+                reports[idx] = done.report;
+            }
+            (Dir::Rx, K_TELEMETRY) => {
+                let s = TelemetrySample::decode(&rec.payload)?;
+                telemetry.ingest(&s, t_s);
+            }
+            _ => {}
+        }
+    }
+
+    if let Some((_, &idx)) = outstanding.iter().next() {
+        return Err(WilkinsError::Task(format!(
+            "recorded campaign never completed instance {} (incomplete log?)",
+            spec.instances[idx].name
+        )));
+    }
+
+    let mut trace = MergedTrace::new();
+    let mut instances = Vec::with_capacity(n);
+    for (idx, inst) in spec.instances.iter().enumerate() {
+        trace.add_instance(&inst.name, started[idx], &spans[idx]);
+        instances.push(InstanceReport {
+            name: inst.name.clone(),
+            ranks: inst.ranks(),
+            started_s: started[idx],
+            finished_s: finished[idx],
+            report: reports[idx].take().ok_or_else(|| {
+                WilkinsError::Task(format!(
+                    "recorded campaign has no completion for instance {}",
+                    inst.name
+                ))
+            })?,
+        });
+    }
+    Ok(EnsembleReport {
+        elapsed: Duration::from_secs_f64(last_t),
+        budget: spec.max_ranks,
+        policy: spec.policy,
+        placement: Placement::ProcessPerInstance,
+        workers: Some(run.workers.len()),
+        peak_ranks: peak,
+        // The live round count includes idle scheduler polls — pure
+        // wall-clock noise, not reconstructable from frames (the
+        // normalizer strips it from comparisons).
+        rounds: 0,
+        instances,
+        trace,
+        faults,
+        events,
+        telemetry: telemetry.summary(),
+    })
+}
+
+fn replay_world(run: &RecordedRun) -> Result<RunReport> {
+    let launch = run
+        .coordinator
+        .iter()
+        .find(|r| r.dir == Dir::Tx && r.kind == K_LAUNCH_WORLD)
+        .expect("RunKind::World implies a LaunchWorld dispatch");
+    let lw = LaunchWorld::decode(&launch.payload)?;
+    let cfg = crate::config::WorkflowConfig::from_yaml_str(&lw.config_src)?;
+    let graph = WorkflowGraph::build(&cfg)?;
+
+    let t0 = run.coordinator.first().map(|r| r.t_us).unwrap_or(0);
+    let mut outcomes: Vec<RankOutcome> = Vec::with_capacity(graph.total_ranks);
+    let mut bytes_sent = 0u64;
+    let mut msgs_sent = 0u64;
+    let mut telemetry = TelemetryStore::new();
+    let mut last_t = 0.0_f64;
+    // launch_world reads replies link by link in worker-id order, so
+    // Rx order is worker order; the link tag (when the recording
+    // binary stamped one) double-checks it.
+    let mut reply_no = 0usize;
+    for rec in &run.coordinator {
+        let t_s = rel_s(t0, rec.t_us);
+        last_t = last_t.max(t_s);
+        match (rec.dir, rec.kind) {
+            (Dir::Rx, K_WORLD_DONE) => {
+                let reply = WorldDone::decode(&rec.payload)?;
+                let wid = if rec.link != wiretap::LINK_UNSET {
+                    rec.link as usize
+                } else {
+                    reply_no
+                };
+                reply_no += 1;
+                if !reply.error.is_empty() {
+                    return Err(WilkinsError::Task(format!(
+                        "worker {wid} failed: {}",
+                        reply.error
+                    )));
+                }
+                bytes_sent += reply.bytes_sent;
+                msgs_sent += reply.msgs_sent;
+                for o in &reply.outcomes {
+                    outcomes.push(RankOutcome {
+                        node: o.node as usize,
+                        stats: o.stats.clone(),
+                        error: if o.error.is_empty() { None } else { Some(o.error.clone()) },
+                    });
+                }
+            }
+            (Dir::Rx, K_TELEMETRY) => {
+                let s = TelemetrySample::decode(&rec.payload)?;
+                telemetry.ingest(&s, t_s);
+            }
+            _ => {}
+        }
+    }
+    if outcomes.len() != graph.total_ranks {
+        return Err(WilkinsError::Task(format!(
+            "recorded workers reported {} rank outcomes, world has {} (incomplete log?)",
+            outcomes.len(),
+            graph.total_ranks
+        )));
+    }
+    let mut report = report::build(
+        &graph,
+        outcomes,
+        Duration::from_secs_f64(last_t),
+        bytes_sent,
+        msgs_sent,
+    )?;
+    // Heartbeat misses are wall-clock noise (normalized away); the
+    // replay has no timers to miss.
+    report.faults.heartbeat_misses = 0;
+    report.telemetry = telemetry.summary();
+    Ok(report)
+}
+
+/// Execution replay: actually *re-run* the ranks worker `worker_id`
+/// hosted in a recorded `process-per-node` world, feeding them the
+/// exact inbound message schedule from the worker's log. Outbound
+/// cross-process sends are suppressed (their effects are already in
+/// the log); hosted-to-hosted traffic runs live, exactly as it did in
+/// the recorded process. Returns the partial [`RunReport`] built from
+/// the re-executed ranks' outcomes (non-hosted nodes report zeros).
+///
+/// `workdir` redirects file-mode transports away from the recorded
+/// run's directory; pass a fresh temp dir.
+pub fn replay_worker_ranks(
+    run: &RecordedRun,
+    worker_id: u64,
+    workdir: &Path,
+) -> Result<RunReport> {
+    if run.kind != RunKind::World {
+        return Err(WilkinsError::Config(
+            "execution replay re-runs `process-per-node` worlds; this recording is an \
+             ensemble campaign (use `wilkins replay` on the coordinator schedule instead)"
+                .into(),
+        ));
+    }
+    let records = run
+        .workers
+        .iter()
+        .find(|(id, _)| *id == worker_id)
+        .map(|(_, recs)| recs)
+        .ok_or_else(|| {
+            WilkinsError::Config(format!("no recorded log for worker {worker_id}"))
+        })?;
+    let launch = records
+        .iter()
+        .find(|r| r.dir == Dir::Rx && r.kind == K_LAUNCH_WORLD)
+        .ok_or_else(|| {
+            WilkinsError::Config(format!(
+                "worker {worker_id} never received a LaunchWorld (log incomplete?)"
+            ))
+        })?;
+    let lw = LaunchWorld::decode(&launch.payload)?;
+    let cfg = crate::config::WorkflowConfig::from_yaml_str(&lw.config_src)?;
+    let graph = WorkflowGraph::build(&cfg)?;
+
+    let hosted: Vec<usize> = lw
+        .owner_of
+        .iter()
+        .enumerate()
+        .filter(|(_, &o)| o == worker_id)
+        .map(|(r, _)| r)
+        .collect();
+    if hosted.is_empty() {
+        return Err(WilkinsError::Config(format!(
+            "worker {worker_id} hosted no ranks in the recorded world"
+        )));
+    }
+    let mut is_hosted = vec![false; graph.total_ranks];
+    for &r in &hosted {
+        is_hosted[r] = true;
+    }
+
+    let rw = crate::comm::ReplayWorld::new(graph.total_ranks, is_hosted.clone());
+    // Pre-inject every recorded inbound data-plane message in log
+    // order. Mailbox matching is (comm, tag, src) FIFO, so receivers
+    // observe exactly the recorded per-key arrival order; messages
+    // they never got to consume in the recorded run just sit unread.
+    let mut assembler = ChunkAssembler::new();
+    for rec in records {
+        if rec.dir != Dir::Rx {
+            continue;
+        }
+        match rec.kind {
+            K_DATA => {
+                let m = crate::net::proto::decode_data(&rec.payload)?;
+                if is_hosted.get(m.dst_global as usize).copied().unwrap_or(false) {
+                    rw.inject(m.dst_global as usize, m.src_global as usize, m.comm_id, m.tag, m.payload);
+                }
+            }
+            K_DATA_CHUNK => {
+                let c = crate::net::proto::decode_data_chunk(&rec.payload)?;
+                if let Some(m) = assembler.feed(c)? {
+                    if is_hosted.get(m.dst_global as usize).copied().unwrap_or(false) {
+                        rw.inject(m.dst_global as usize, m.src_global as usize, m.comm_id, m.tag, m.payload);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let mut w = Wilkins::from_yaml_str(&lw.config_src, builtin_registry())?
+        .with_time_scale(lw.time_scale)
+        .with_workdir(workdir.to_path_buf());
+    // Science payloads need the AOT engine, exactly as the recorded
+    // worker attached it.
+    let _engine;
+    let art = Path::new(&lw.artifacts);
+    if !lw.artifacts.is_empty() && art.join("manifest.tsv").exists() {
+        let engine = crate::runtime::Engine::start(art)?;
+        w = w.with_engine(engine.handle());
+        _engine = Some(engine);
+    } else {
+        _engine = None;
+    }
+
+    let t0 = std::time::Instant::now();
+    let outcomes = w.run_hosted(rw.world(), &hosted)?;
+    report::build(
+        &graph,
+        outcomes,
+        t0.elapsed(),
+        rw.world().bytes_sent(),
+        rw.world().msgs_sent(),
+    )
+}
+
+/// JSON object keys whose values are wall-clock-derived and therefore
+/// legitimately differ between a live run and its replay. Everything
+/// else — every counter, name, event and telemetry total — must
+/// match bit-for-bit.
+pub const VOLATILE_KEYS: &[&str] = &[
+    "elapsed_s",
+    "started_s",
+    "finished_s",
+    "t_s",
+    "heartbeat_misses",
+    "rounds",
+    "attrs",
+];
+
+/// Re-emit a report JSON document with [`VOLATILE_KEYS`] members
+/// removed (recursively) and all insignificant whitespace dropped, so
+/// a recorded report and its replay compare byte-for-byte on exactly
+/// the deterministic surface.
+pub fn normalize_report_json(src: &str) -> Result<String> {
+    let b = src.as_bytes();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0usize;
+    emit_value(b, &mut i, &mut out)?;
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Err(WilkinsError::Config(format!(
+            "trailing bytes at offset {i} in report JSON"
+        )));
+    }
+    Ok(out)
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn json_err(what: &str, i: usize) -> WilkinsError {
+    WilkinsError::Config(format!("bad report JSON: {what} at offset {i}"))
+}
+
+/// Parse one JSON string (cursor at the opening quote), returning the
+/// raw source span including quotes.
+fn raw_string<'a>(b: &'a [u8], i: &mut usize) -> Result<&'a str> {
+    let start = *i;
+    if b.get(*i) != Some(&b'"') {
+        return Err(json_err("expected string", *i));
+    }
+    *i += 1;
+    while *i < b.len() {
+        match b[*i] {
+            b'\\' => *i += 2,
+            b'"' => {
+                *i += 1;
+                return std::str::from_utf8(&b[start..*i])
+                    .map_err(|_| json_err("non-utf8 string", start));
+            }
+            _ => *i += 1,
+        }
+    }
+    Err(json_err("unterminated string", start))
+}
+
+/// Emit one JSON value at the cursor, normalized, into `out`.
+fn emit_value(b: &[u8], i: &mut usize, out: &mut String) -> Result<()> {
+    skip_ws(b, i);
+    match b.get(*i) {
+        Some(b'{') => {
+            *i += 1;
+            out.push('{');
+            let mut first = true;
+            loop {
+                skip_ws(b, i);
+                match b.get(*i) {
+                    Some(b'}') => {
+                        *i += 1;
+                        break;
+                    }
+                    Some(b',') => {
+                        *i += 1;
+                        continue;
+                    }
+                    Some(b'"') => {
+                        let rawkey = raw_string(b, i)?;
+                        let key = &rawkey[1..rawkey.len() - 1];
+                        skip_ws(b, i);
+                        if b.get(*i) != Some(&b':') {
+                            return Err(json_err("expected ':'", *i));
+                        }
+                        *i += 1;
+                        if VOLATILE_KEYS.contains(&key) {
+                            let mut sink = String::new();
+                            emit_value(b, i, &mut sink)?;
+                        } else {
+                            if !first {
+                                out.push(',');
+                            }
+                            first = false;
+                            out.push_str(rawkey);
+                            out.push(':');
+                            emit_value(b, i, out)?;
+                        }
+                    }
+                    _ => return Err(json_err("expected member or '}'", *i)),
+                }
+            }
+            out.push('}');
+            Ok(())
+        }
+        Some(b'[') => {
+            *i += 1;
+            out.push('[');
+            let mut first = true;
+            loop {
+                skip_ws(b, i);
+                match b.get(*i) {
+                    Some(b']') => {
+                        *i += 1;
+                        break;
+                    }
+                    Some(b',') => {
+                        *i += 1;
+                        continue;
+                    }
+                    Some(_) => {
+                        if !first {
+                            out.push(',');
+                        }
+                        first = false;
+                        emit_value(b, i, out)?;
+                    }
+                    None => return Err(json_err("unterminated array", *i)),
+                }
+            }
+            out.push(']');
+            Ok(())
+        }
+        Some(b'"') => {
+            out.push_str(raw_string(b, i)?);
+            Ok(())
+        }
+        Some(_) => {
+            // Number / true / false / null: copy the raw token.
+            let start = *i;
+            while *i < b.len()
+                && !matches!(b[*i], b',' | b'}' | b']' | b' ' | b'\t' | b'\n' | b'\r')
+            {
+                *i += 1;
+            }
+            if start == *i {
+                return Err(json_err("expected value", *i));
+            }
+            out.push_str(
+                std::str::from_utf8(&b[start..*i]).map_err(|_| json_err("non-utf8", start))?,
+            );
+            Ok(())
+        }
+        None => Err(json_err("unexpected end", *i)),
+    }
+}
+
+/// Compare two already-normalized report documents; `None` when they
+/// are byte-identical, otherwise a human-readable first-divergence
+/// excerpt.
+pub fn diff_reports(recorded: &str, replayed: &str) -> Option<String> {
+    if recorded == replayed {
+        return None;
+    }
+    let at = recorded
+        .bytes()
+        .zip(replayed.bytes())
+        .position(|(a, b)| a != b)
+        .unwrap_or_else(|| recorded.len().min(replayed.len()));
+    let ctx = |s: &str| {
+        let lo = at.saturating_sub(40);
+        let hi = (at + 40).min(s.len());
+        s.get(lo..hi).unwrap_or("<out of range>").to_string()
+    };
+    Some(format!(
+        "reports diverge at byte {at}:\n  recorded: …{}…\n  replayed: …{}…",
+        ctx(recorded),
+        ctx(replayed)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizer_strips_volatile_keys_recursively() {
+        let src = r#"{"schema":"x","elapsed_s":1.23,"nested":{"rounds":7,"keep":1},"list":[{"t_s":0.5,"name":"a"}]}"#;
+        let n = normalize_report_json(src).unwrap();
+        assert_eq!(n, r#"{"schema":"x","nested":{"keep":1},"list":[{"name":"a"}]}"#);
+    }
+
+    #[test]
+    fn normalizer_is_whitespace_insensitive() {
+        let a = normalize_report_json(r#"{"a": 1, "b": [1, 2]}"#).unwrap();
+        let b = normalize_report_json(r#"{"a":1,"b":[1,2]}"#).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn normalizer_preserves_escaped_strings() {
+        let src = r#"{"msg":"a \"quoted\" piece","attrs":{"error":"gone"}}"#;
+        let n = normalize_report_json(src).unwrap();
+        assert_eq!(n, r#"{"msg":"a \"quoted\" piece"}"#);
+    }
+
+    #[test]
+    fn diff_names_first_divergence() {
+        assert!(diff_reports("abc", "abc").is_none());
+        let d = diff_reports("aXc", "aYc").unwrap();
+        assert!(d.contains("byte 1"), "{d}");
+    }
+}

@@ -1,13 +1,15 @@
 //! Wire-level frame tap: `WILKINS_TRACE_WIRE=1` logs every frame
 //! crossing the socket substrate — kind, length, link id, direction,
-//! timestamp — to a per-process binary log. This is the *record* half
-//! of ROADMAP item 4a (record/replay): a replay harness can re-feed
-//! the exact frame schedule a run produced.
+//! timestamp — to a per-process binary log, and
+//! `WILKINS_TRACE_WIRE=full` additionally captures the full frame
+//! payload bytes. This is the *record* half of ROADMAP item 4a
+//! (record/replay); [`crate::obs::replay`] re-feeds a captured
+//! schedule deterministically.
 //!
 //! ## Log format (`wilkins-wire-<pid>.wtap`)
 //!
-//! Header: magic `WTAP` (4 bytes) + `u32` LE version (currently 1).
-//! Then fixed 18-byte little-endian records:
+//! Header: magic `WTAP` (4 bytes) + `u32` LE version (1 or 2).
+//! Then little-endian records with an 18-byte fixed head:
 //!
 //! | offset | size | field                                          |
 //! |--------|------|------------------------------------------------|
@@ -17,11 +19,25 @@
 //! | 16     | 1    | `dir` — 0 = Tx, 1 = Rx (u8)                    |
 //! | 17     | 1    | `kind` — wire frame kind (u8, see `net::proto`)|
 //!
+//! Version 1 records end there (header-only capture, the cheap
+//! default). Version 2 records append:
+//!
+//! | offset | size  | field                                         |
+//! |--------|-------|-----------------------------------------------|
+//! | 18     | 4     | `cap` — captured payload byte count (u32)     |
+//! | 22     | `cap` | payload bytes (usually `cap == len`)          |
+//!
+//! [`read_log`] parses both versions and tolerates a *torn tail*: a
+//! process hard-killed mid-write (the CI chaos smoke does exactly
+//! this) leaves a partial final record, which is reported as the
+//! complete-record prefix plus [`WtapLog::truncated`] — never an
+//! error.
+//!
 //! ## Cost when disabled
 //!
-//! The hot-path call [`frame`] is one `OnceLock` load and a `None`
-//! branch — no syscalls, no locks. `benches/wire.rs` measures and
-//! asserts this stays in the nanoseconds.
+//! The hot-path calls [`frame`] / [`frame_parts`] are one `OnceLock`
+//! load and a `None` branch — no syscalls, no locks. `benches/wire.rs`
+//! measures and asserts this stays in the nanoseconds.
 
 use std::fs::File;
 use std::io::{Read, Write};
@@ -44,7 +60,7 @@ pub enum Dir {
 pub const LINK_UNSET: u32 = u32::MAX;
 
 /// One decoded tap record.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireRecord {
     /// Microseconds since the process tap started.
     pub t_us: u64,
@@ -56,33 +72,88 @@ pub struct WireRecord {
     pub dir: Dir,
     /// Wire frame kind (`net::proto::K_*`).
     pub kind: u8,
+    /// Captured payload bytes — empty for version-1 (header-only)
+    /// logs and for records written without capture.
+    pub payload: Vec<u8>,
+}
+
+/// A parsed tap log: format version, torn-tail marker, records.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WtapLog {
+    /// Format version the log header declared (1 or 2).
+    pub version: u32,
+    /// True when the file ended inside a record (the writing process
+    /// died mid-write); `records` holds the complete prefix.
+    pub truncated: bool,
+    /// Every complete record, in write order.
+    pub records: Vec<WireRecord>,
 }
 
 const MAGIC: &[u8; 4] = b"WTAP";
-const VERSION: u32 = 1;
-const RECORD_LEN: usize = 18;
+const VERSION_HEADERS: u32 = 1;
+const VERSION_FULL: u32 = 2;
+const HEAD_LEN: usize = 18;
 
 /// An open tap log (also usable standalone in tests; the process-wide
 /// tap behind [`frame`] wraps one of these).
 pub struct WireLog {
     file: File,
     clock: Clock,
+    version: u32,
 }
 
 impl WireLog {
-    /// Create a log at `path`, writing the header.
+    /// Create a header-only (version 1) log at `path`.
     pub fn create(path: &Path) -> std::io::Result<WireLog> {
-        let mut file = File::create(path)?;
-        file.write_all(MAGIC)?;
-        file.write_all(&VERSION.to_le_bytes())?;
-        Ok(WireLog { file, clock: Clock::new() })
+        WireLog::create_version(path, VERSION_HEADERS)
     }
 
-    /// Append one record stamped "now" and flush it (the process-wide
-    /// tap is never dropped, so buffering would lose the tail).
+    /// Create a full-capture (version 2) log at `path`: every record
+    /// written with [`WireLog::record_parts`] stores the payload
+    /// bytes alongside the fixed head.
+    pub fn create_full(path: &Path) -> std::io::Result<WireLog> {
+        WireLog::create_version(path, VERSION_FULL)
+    }
+
+    fn create_version(path: &Path, version: u32) -> std::io::Result<WireLog> {
+        let mut file = File::create(path)?;
+        file.write_all(MAGIC)?;
+        file.write_all(&version.to_le_bytes())?;
+        Ok(WireLog { file, clock: Clock::new(), version })
+    }
+
+    /// Append one header-only record stamped "now" and flush it (the
+    /// process-wide tap is never dropped, so buffering would lose the
+    /// tail). Under a version-2 log this writes a zero-length capture.
     pub fn record(&mut self, link: u32, dir: Dir, kind: u8, len: u32) -> std::io::Result<()> {
+        self.write_record(link, dir, kind, len, &[])
+    }
+
+    /// Append one record capturing the payload scattered across
+    /// `parts` (the vectored-write shape the codec already has in
+    /// hand). Under a version-1 log the payload bytes are dropped and
+    /// only the head is written.
+    pub fn record_parts(
+        &mut self,
+        link: u32,
+        dir: Dir,
+        kind: u8,
+        parts: &[&[u8]],
+    ) -> std::io::Result<()> {
+        let len: usize = parts.iter().map(|p| p.len()).sum();
+        self.write_record(link, dir, kind, len as u32, parts)
+    }
+
+    fn write_record(
+        &mut self,
+        link: u32,
+        dir: Dir,
+        kind: u8,
+        len: u32,
+        parts: &[&[u8]],
+    ) -> std::io::Result<()> {
         let t_us = (self.clock.now_s() * 1e6) as u64;
-        let mut rec = [0u8; RECORD_LEN];
+        let mut rec = [0u8; HEAD_LEN];
         rec[0..8].copy_from_slice(&t_us.to_le_bytes());
         rec[8..12].copy_from_slice(&link.to_le_bytes());
         rec[12..16].copy_from_slice(&len.to_le_bytes());
@@ -92,13 +163,23 @@ impl WireLog {
         };
         rec[17] = kind;
         self.file.write_all(&rec)?;
+        if self.version >= VERSION_FULL {
+            let cap: usize = parts.iter().map(|p| p.len()).sum();
+            self.file.write_all(&(cap as u32).to_le_bytes())?;
+            for part in parts {
+                self.file.write_all(part)?;
+            }
+        }
         self.file.flush()
     }
 }
 
-/// Read a tap log back into records (the replay half's entry point;
-/// also used by tests and future tooling).
-pub fn read_log(path: &Path) -> std::io::Result<Vec<WireRecord>> {
+/// Read a tap log back (the replay half's entry point; also used by
+/// tests and tooling). Version 1 and 2 logs both parse; a torn final
+/// record — the writer was killed mid-write — yields the complete
+/// prefix with [`WtapLog::truncated`] set instead of an error. Errors
+/// only on a bad magic, a short file header, or an unknown version.
+pub fn read_log(path: &Path) -> std::io::Result<WtapLog> {
     let mut buf = Vec::new();
     File::open(path)?.read_to_end(&mut buf)?;
     if buf.len() < 8 || &buf[0..4] != MAGIC {
@@ -107,45 +188,74 @@ pub fn read_log(path: &Path) -> std::io::Result<Vec<WireRecord>> {
             format!("{}: not a wiretap log (bad magic)", path.display()),
         ));
     }
-    let ver = u32::from_le_bytes(buf[4..8].try_into().unwrap());
-    if ver != VERSION {
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != VERSION_HEADERS && version != VERSION_FULL {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
-            format!("{}: wiretap log version {ver}, expected {VERSION}", path.display()),
+            format!(
+                "{}: wiretap log version {version}, expected {VERSION_HEADERS} or {VERSION_FULL}",
+                path.display()
+            ),
         ));
     }
-    let mut out = Vec::new();
-    let mut at = 8;
-    while at + RECORD_LEN <= buf.len() {
-        let r = &buf[at..at + RECORD_LEN];
-        out.push(WireRecord {
+    let mut records = Vec::new();
+    let mut at = 8usize;
+    let mut truncated = false;
+    while at < buf.len() {
+        if at + HEAD_LEN > buf.len() {
+            truncated = true;
+            break;
+        }
+        let r = &buf[at..at + HEAD_LEN];
+        let mut rec = WireRecord {
             t_us: u64::from_le_bytes(r[0..8].try_into().unwrap()),
             link: u32::from_le_bytes(r[8..12].try_into().unwrap()),
             len: u32::from_le_bytes(r[12..16].try_into().unwrap()),
             dir: if r[16] == 0 { Dir::Tx } else { Dir::Rx },
             kind: r[17],
-        });
-        at += RECORD_LEN;
+            payload: Vec::new(),
+        };
+        let mut next = at + HEAD_LEN;
+        if version >= VERSION_FULL {
+            if next + 4 > buf.len() {
+                truncated = true;
+                break;
+            }
+            let cap = u32::from_le_bytes(buf[next..next + 4].try_into().unwrap()) as usize;
+            next += 4;
+            if next + cap > buf.len() {
+                truncated = true;
+                break;
+            }
+            rec.payload = buf[next..next + cap].to_vec();
+            next += cap;
+        }
+        records.push(rec);
+        at = next;
     }
-    Ok(out)
+    Ok(WtapLog { version, truncated, records })
 }
 
 struct Tap {
     log: Mutex<WireLog>,
     path: PathBuf,
+    full: bool,
 }
 
 static TAP: OnceLock<Option<Tap>> = OnceLock::new();
 
 fn tap() -> Option<&'static Tap> {
     TAP.get_or_init(|| {
-        if std::env::var("WILKINS_TRACE_WIRE").ok().as_deref() != Some("1") {
-            return None;
-        }
+        let full = match std::env::var("WILKINS_TRACE_WIRE").ok().as_deref() {
+            Some("1") => false,
+            Some("full") => true,
+            _ => return None,
+        };
         let dir = std::env::var("WILKINS_TRACE_DIR").unwrap_or_else(|_| ".".to_string());
         let path = Path::new(&dir).join(format!("wilkins-wire-{}.wtap", std::process::id()));
-        match WireLog::create(&path) {
-            Ok(log) => Some(Tap { log: Mutex::new(log), path }),
+        let made = if full { WireLog::create_full(&path) } else { WireLog::create(&path) };
+        match made {
+            Ok(log) => Some(Tap { log: Mutex::new(log), path, full }),
             Err(e) => {
                 eprintln!("wilkins: cannot open wiretap log {}: {e}", path.display());
                 None
@@ -176,8 +286,8 @@ pub fn set_link(link: u32) {
     LINK.with(|l| l.set(link));
 }
 
-/// Record one frame crossing the wire. When the tap is disabled
-/// (the default) this is one atomic load and a branch.
+/// Record one frame crossing the wire, header only. When the tap is
+/// disabled (the default) this is one atomic load and a branch.
 #[inline]
 pub fn frame(dir: Dir, kind: u8, len: u32) {
     if let Some(t) = tap() {
@@ -186,9 +296,29 @@ pub fn frame(dir: Dir, kind: u8, len: u32) {
     }
 }
 
+/// Record one frame whose body is scattered across `parts`, capturing
+/// the payload bytes when the tap is armed in full mode
+/// (`WILKINS_TRACE_WIRE=full`). Header-only mode records just the
+/// head; disabled, this is one atomic load and a branch like
+/// [`frame`].
+#[inline]
+pub fn frame_parts(dir: Dir, kind: u8, parts: &[&[u8]]) {
+    if let Some(t) = tap() {
+        let link = LINK.with(|l| l.get());
+        let mut log = t.log.lock().unwrap();
+        let _ = if t.full {
+            log.record_parts(link, dir, kind, parts)
+        } else {
+            let len: usize = parts.iter().map(|p| p.len()).sum();
+            log.record(link, dir, kind, len as u32)
+        };
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::proptest_lite::{run_prop, Rng};
 
     fn tmp(name: &str) -> PathBuf {
         std::env::temp_dir().join(format!("wilkins-wtap-{}-{name}", std::process::id()))
@@ -200,7 +330,10 @@ mod tests {
         let mut log = WireLog::create(&path).unwrap();
         log.record(0, Dir::Tx, 7, 4096).unwrap();
         log.record(LINK_UNSET, Dir::Rx, 11, 64).unwrap();
-        let recs = read_log(&path).unwrap();
+        let parsed = read_log(&path).unwrap();
+        assert_eq!(parsed.version, 1);
+        assert!(!parsed.truncated);
+        let recs = &parsed.records;
         assert_eq!(recs.len(), 2);
         assert_eq!((recs[0].link, recs[0].dir, recs[0].kind, recs[0].len), (0, Dir::Tx, 7, 4096));
         assert_eq!(
@@ -208,6 +341,24 @@ mod tests {
             (LINK_UNSET, Dir::Rx, 11, 64)
         );
         assert!(recs[1].t_us >= recs[0].t_us, "tap timestamps must be monotone");
+        assert!(recs.iter().all(|r| r.payload.is_empty()), "v1 captures no payload");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn roundtrip_full_capture() {
+        let path = tmp("roundtrip-full");
+        let mut log = WireLog::create_full(&path).unwrap();
+        log.record_parts(3, Dir::Tx, 8, &[b"hello ", b"world"]).unwrap();
+        log.record(7, Dir::Rx, 10, 9).unwrap(); // head-only record in a v2 log
+        let parsed = read_log(&path).unwrap();
+        assert_eq!(parsed.version, 2);
+        assert!(!parsed.truncated);
+        assert_eq!(parsed.records.len(), 2);
+        assert_eq!(parsed.records[0].payload, b"hello world");
+        assert_eq!(parsed.records[0].len, 11);
+        assert_eq!(parsed.records[1].payload, b"");
+        assert_eq!(parsed.records[1].len, 9);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -220,9 +371,104 @@ mod tests {
     }
 
     #[test]
+    fn rejects_unknown_version() {
+        let path = tmp("badver");
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_log(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn disabled_frame_is_noop() {
         // The env var is not set in unit tests, so this exercises the
         // cold branch; it must not panic or create files.
         frame(Dir::Tx, 1, 10);
+        frame_parts(Dir::Rx, 2, &[b"abc"]);
+    }
+
+    /// Property: random v2 frame schedules round-trip bit-identically
+    /// through write + [`read_log`], and truncating the file at any
+    /// byte offset inside the final record yields the complete prefix
+    /// with the truncation flag — never an error.
+    #[test]
+    fn prop_v2_roundtrip_and_torn_tail() {
+        run_prop("wtap-v2-roundtrip", 40, |rng: &mut Rng| {
+            let path = tmp(&format!("prop-{}", rng.next_u64()));
+            let n = rng.range(1, 12) as usize;
+            let mut want = Vec::new();
+            {
+                let mut log = WireLog::create_full(&path).unwrap();
+                for _ in 0..n {
+                    let link = if rng.bool() { rng.range(0, 8) as u32 } else { LINK_UNSET };
+                    let dir = if rng.bool() { Dir::Tx } else { Dir::Rx };
+                    let kind = rng.range(1, 12) as u8;
+                    let payload: Vec<u8> =
+                        (0..rng.range(0, 64)).map(|_| rng.range(0, 256) as u8).collect();
+                    // Split the payload at a random point to exercise
+                    // the scattered-parts write path.
+                    let cut = rng.range(0, payload.len() as u64 + 1) as usize;
+                    log.record_parts(link, dir, kind, &[&payload[..cut], &payload[cut..]])
+                        .unwrap();
+                    want.push((link, dir, kind, payload));
+                }
+            }
+            let parsed = read_log(&path).unwrap();
+            assert_eq!(parsed.version, 2);
+            assert!(!parsed.truncated);
+            assert_eq!(parsed.records.len(), n);
+            for (rec, (link, dir, kind, payload)) in parsed.records.iter().zip(&want) {
+                assert_eq!(rec.link, *link);
+                assert_eq!(rec.dir, *dir);
+                assert_eq!(rec.kind, *kind);
+                assert_eq!(rec.len as usize, payload.len());
+                assert_eq!(&rec.payload, payload);
+            }
+
+            // Torn tail: chop the file anywhere inside the last record.
+            let bytes = std::fs::read(&path).unwrap();
+            let last_len = HEAD_LEN + 4 + want.last().unwrap().3.len();
+            let cut_at = bytes.len() - 1 - rng.range(0, last_len as u64 - 1) as usize;
+            std::fs::write(&path, &bytes[..cut_at]).unwrap();
+            let torn = read_log(&path).unwrap();
+            assert!(torn.truncated, "cut at {cut_at}/{} must set truncated", bytes.len());
+            assert_eq!(torn.records.len(), n - 1);
+            let _ = std::fs::remove_file(&path);
+        });
+    }
+
+    /// Property: v1 header-only logs still parse (backward compat),
+    /// including torn tails.
+    #[test]
+    fn prop_v1_back_compat() {
+        run_prop("wtap-v1-back-compat", 40, |rng: &mut Rng| {
+            let path = tmp(&format!("prop-v1-{}", rng.next_u64()));
+            let n = rng.range(1, 12) as usize;
+            {
+                let mut log = WireLog::create(&path).unwrap();
+                for _ in 0..n {
+                    log.record(
+                        rng.range(0, 8) as u32,
+                        if rng.bool() { Dir::Tx } else { Dir::Rx },
+                        rng.range(1, 12) as u8,
+                        rng.range(0, 1 << 20) as u32,
+                    )
+                    .unwrap();
+                }
+            }
+            let parsed = read_log(&path).unwrap();
+            assert_eq!(parsed.version, 1);
+            assert!(!parsed.truncated);
+            assert_eq!(parsed.records.len(), n);
+
+            let bytes = std::fs::read(&path).unwrap();
+            let cut_at = bytes.len() - 1 - rng.range(0, HEAD_LEN as u64 - 1) as usize;
+            std::fs::write(&path, &bytes[..cut_at]).unwrap();
+            let torn = read_log(&path).unwrap();
+            assert!(torn.truncated);
+            assert_eq!(torn.records.len(), n - 1);
+            let _ = std::fs::remove_file(&path);
+        });
     }
 }

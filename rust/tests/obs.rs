@@ -143,7 +143,10 @@ fn wire_tap_records_frames_in_every_pool_process() {
     assert_eq!(logs.len(), 3, "expected 3 wtap logs, got {logs:?}");
     let mut total = 0usize;
     for log in &logs {
-        let recs = wilkins::obs::wiretap::read_log(log).unwrap();
+        let tap = wilkins::obs::wiretap::read_log(log).unwrap();
+        assert_eq!(tap.version, 1, "WILKINS_TRACE_WIRE=1 writes header-only v1 logs");
+        assert!(!tap.truncated, "clean shutdown must not tear the log tail in {log:?}");
+        let recs = tap.records;
         let mut last = 0u64;
         for r in &recs {
             assert!(r.t_us >= last, "tap timestamps must be monotone in {log:?}");

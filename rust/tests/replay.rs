@@ -1,0 +1,299 @@
+//! Deterministic wire replay verification (docs/replay.md).
+//!
+//! Records real multi-process runs with full payload capture
+//! (`WILKINS_TRACE_WIRE=full`), then re-runs them in this process:
+//!
+//! * a 2-worker chaos ensemble (worker 0 hard-killed mid-campaign)
+//!   replayed 100 consecutive times, every replay bit-identical to
+//!   the first and — on the deterministic surface — to the recorded
+//!   report itself;
+//! * a 2-worker `up` world replayed both ways: the coordinator
+//!   schedule into the merged `RunReport`, and worker 0's actual rank
+//!   code re-executed against its recorded inbound frames;
+//! * the wiretap reader's torn-tail tolerance at every byte offset a
+//!   kill can tear the final record;
+//! * a worker killed at the `LaunchWorld` seam failing the run loudly
+//!   with `WilkinsError::WorkerLost` naming the worker.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Duration;
+
+use wilkins::lowfive::VolStats;
+use wilkins::net::proto::{WorldDone, K_WORLD_DONE};
+use wilkins::net::{
+    run_workflow_distributed_on, worker_main_with, FaultPlan, HeartbeatConfig, UpOpts,
+    WorkerOpts, WorkerPool,
+};
+use wilkins::obs::replay::{self, RecordedRun, RunKind};
+use wilkins::obs::wiretap::{read_log, Dir, WireLog};
+use wilkins::WilkinsError;
+
+fn wilkins() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_wilkins"))
+}
+
+fn repo(p: &str) -> String {
+    format!("{}/{p}", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Fresh scratch dir per test (tests share one process, so the tag
+/// does the disambiguation).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("wilkins-replay-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Fast liveness cadence (same rationale as `tests/faults.rs`): quick
+/// detection, deadline wide enough for CI scheduler jitter.
+fn fast_hb() -> HeartbeatConfig {
+    HeartbeatConfig {
+        interval: Duration::from_millis(25),
+        deadline: Duration::from_millis(400),
+    }
+}
+
+/// Host `n` emulated workers on threads of this process
+/// (integration-test binaries cannot re-exec themselves in worker
+/// mode); `fault_specs[id]` is worker `id`'s injected fault plan.
+fn host_pool(n: usize, hb: HeartbeatConfig, fault_specs: &[&str]) -> Arc<WorkerPool> {
+    let plans: Vec<String> = (0..n)
+        .map(|id| fault_specs.get(id).copied().unwrap_or("").to_string())
+        .collect();
+    let pool = WorkerPool::host(n, hb, |addr, id| {
+        let addr = addr.to_string();
+        let plan = FaultPlan::parse(&plans[id]).expect("fault spec parses");
+        let beat = hb.interval;
+        std::thread::Builder::new()
+            .name(format!("replay-wk-{id}"))
+            .spawn(move || {
+                let _ = worker_main_with(
+                    &addr,
+                    id,
+                    WorkerOpts { heartbeat: beat, faults: plan },
+                );
+            })
+            .expect("spawn emulated worker");
+    })
+    .expect("host pool");
+    Arc::new(pool)
+}
+
+/// The headline acceptance test: record a 2-worker chaos campaign
+/// (worker 0 hard-killed on its first instance, so the recording
+/// contains a real loss + re-dispatch), then replay it 100
+/// consecutive times. Replay #1 must match the recorded report on the
+/// deterministic surface; replays #2..#100 must be bit-identical to
+/// replay #1 — raw JSON, no normalization.
+#[test]
+fn recorded_chaos_ensemble_replays_bit_identically_100_times() {
+    let dir = scratch("chaos");
+    let json = dir.join("report.json");
+    let out = wilkins()
+        .args([
+            "ensemble",
+            &repo("configs/chaos_ensemble.yaml"),
+            "--workers",
+            "2",
+            "--artifacts",
+            "/nonexistent",
+            "--workdir",
+            dir.join("work").to_str().unwrap(),
+            "--json",
+            json.to_str().unwrap(),
+        ])
+        .env("WILKINS_FAULT", "kill@0:after=0")
+        .env("WILKINS_FAULT_HARD", "1")
+        .env("WILKINS_TRACE_WIRE", "full")
+        .env("WILKINS_TRACE_DIR", dir.to_str().unwrap())
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let recorded = std::fs::read_to_string(&json).unwrap();
+    assert!(recorded.contains("\"lost_workers\":1"), "no loss recorded: {recorded}");
+    assert!(recorded.contains("\"dup_done\":0"), "{recorded}");
+
+    let run = RecordedRun::load(&dir).unwrap();
+    assert_eq!(run.kind, RunKind::Ensemble);
+    assert_eq!(run.workers.len(), 2, "expected logs from both pool workers");
+
+    let first = replay::replay(&run).unwrap().to_json();
+    assert!(first.contains("\"lost_workers\":1"), "{first}");
+    assert_eq!(
+        replay::normalize_report_json(&first).unwrap(),
+        replay::normalize_report_json(&recorded).unwrap(),
+        "replay diverged from the recorded report\nreplayed: {first}\nrecorded: {recorded}"
+    );
+
+    for i in 1..100 {
+        let run = RecordedRun::load(&dir).unwrap();
+        let json_i = replay::replay(&run).unwrap().to_json();
+        assert_eq!(json_i, first, "replay {i} not bit-identical to replay 0");
+    }
+
+    // CLI surface: `wilkins replay <dir>` defaults its diff baseline
+    // to <dir>/report.json and must declare the runs identical.
+    let out = wilkins().args(["replay", dir.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("report diff: identical"), "{s}");
+}
+
+/// A clean 2-worker `up` world replays both ways: the coordinator
+/// schedule reproduces the merged report, and execution replay
+/// re-runs worker 0's actual rank code against the recorded inbound
+/// frames, landing on the same stable per-node counters worker 0
+/// shipped back in its `WorldDone`.
+#[test]
+fn recorded_world_up_replays_and_reexecutes_worker_ranks() {
+    let dir = scratch("world");
+    let json = dir.join("report.json");
+    let out = wilkins()
+        .args([
+            "up",
+            "--workers",
+            "2",
+            &repo("configs/listing1_3task.yaml"),
+            "--artifacts",
+            "/nonexistent",
+            "--workdir",
+            dir.join("work").to_str().unwrap(),
+            "--json",
+            json.to_str().unwrap(),
+        ])
+        .env("WILKINS_TRACE_WIRE", "full")
+        .env("WILKINS_TRACE_DIR", dir.to_str().unwrap())
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let recorded = std::fs::read_to_string(&json).unwrap();
+
+    let run = RecordedRun::load(&dir).unwrap();
+    assert_eq!(run.kind, RunKind::World);
+    assert_eq!(run.workers.len(), 2);
+    assert!(!run.truncated, "clean shutdown must not leave torn logs");
+
+    let rep = replay::replay(&run).unwrap();
+    assert_eq!(
+        replay::normalize_report_json(&rep.to_json()).unwrap(),
+        replay::normalize_report_json(&recorded).unwrap(),
+        "world replay diverged from the recorded report"
+    );
+
+    // Worker 0's recorded WorldDone is the ground truth for what its
+    // ranks did; merge its per-rank stats per node the same way the
+    // report builder does.
+    let done0 = run
+        .coordinator
+        .iter()
+        .find(|r| r.dir == Dir::Rx && r.kind == K_WORLD_DONE && r.link == 0)
+        .expect("coordinator log holds worker 0's WorldDone");
+    let done0 = WorldDone::decode(&done0.payload).unwrap();
+    assert!(done0.error.is_empty(), "{}", done0.error);
+    let mut expected: BTreeMap<usize, VolStats> = BTreeMap::new();
+    for o in &done0.outcomes {
+        expected.entry(o.node as usize).or_default().merge_from(&o.stats);
+    }
+    assert!(!expected.is_empty(), "worker 0 hosted no ranks?");
+
+    let partial = replay::replay_worker_ranks(&run, 0, &dir.join("re-exec")).unwrap();
+    // Only the wall-clock-free counters can be compared: the replay
+    // never stalls on flow credits (they are pre-injected), so the
+    // wait/stall/queue-depth gauges legitimately differ.
+    for (node, exp) in &expected {
+        for name in ["files_served", "bytes_served", "files_opened", "bytes_read"] {
+            assert_eq!(
+                partial.nodes[*node].stats.counter(name),
+                exp.counter(name),
+                "node {node} ({}) counter {name} diverged from the recording",
+                partial.nodes[*node].name
+            );
+        }
+    }
+}
+
+/// Torn-tail tolerance, exhaustively: truncate a v2 log at *every*
+/// byte offset of its final record. Exactly at the previous record's
+/// boundary is a clean (shorter) log; one byte further through the
+/// end-minus-one is a torn tail — complete prefix plus the
+/// `truncated` flag, never an error.
+#[test]
+fn read_log_tolerates_truncation_at_every_byte_of_the_last_record() {
+    let dir = scratch("torn");
+    let path = dir.join("t.wtap");
+    {
+        let mut log = WireLog::create_full(&path).unwrap();
+        log.record_parts(7, Dir::Tx, 4, &[b"alpha"]).unwrap();
+        log.record_parts(7, Dir::Rx, 5, &[b"bravo-", b"charlie"]).unwrap();
+        log.record_parts(9, Dir::Tx, 3, &[b"x"]).unwrap();
+    }
+    let full = read_log(&path).unwrap();
+    assert_eq!(full.version, 2);
+    assert!(!full.truncated);
+    assert_eq!(full.records.len(), 3);
+    assert_eq!(full.records[1].payload, b"bravo-charlie".to_vec());
+
+    let bytes = std::fs::read(&path).unwrap();
+    // head (18) + capture-length word (4) + 1 payload byte.
+    let last_len = 18 + 4 + 1;
+    let boundary = bytes.len() - last_len;
+    for cut in boundary..bytes.len() {
+        let torn = dir.join(format!("cut-{cut}.wtap"));
+        std::fs::write(&torn, &bytes[..cut]).unwrap();
+        let log = read_log(&torn).unwrap();
+        assert_eq!(log.records.len(), 2, "cut at byte {cut}");
+        assert_eq!(&log.records[..], &full.records[..2], "cut at byte {cut}");
+        assert_eq!(
+            log.truncated,
+            cut != boundary,
+            "truncated flag wrong for cut at byte {cut}"
+        );
+    }
+}
+
+/// Header-only (v1) recordings cannot be replayed; the loader must
+/// say so and point at the fix. An empty directory gets the
+/// how-to-record hint too.
+#[test]
+fn loader_rejects_v1_logs_and_empty_dirs_with_recording_hints() {
+    let dir = scratch("v1-reject");
+    {
+        let mut log = WireLog::create(&dir.join("w.wtap")).unwrap();
+        log.record(0, Dir::Tx, 4, 32).unwrap();
+    }
+    let msg = RecordedRun::load(&dir).unwrap_err().to_string();
+    assert!(msg.contains("WILKINS_TRACE_WIRE=full"), "unhelpful error: {msg}");
+
+    let empty = scratch("empty");
+    let msg = RecordedRun::load(&empty).unwrap_err().to_string();
+    assert!(msg.contains("no .wtap logs"), "{msg}");
+    assert!(msg.contains("WILKINS_TRACE_WIRE=full"), "unhelpful error: {msg}");
+}
+
+/// `process-per-node` worker loss: a worker killed at the
+/// `LaunchWorld` seam (before its ranks ever run) must fail the run
+/// loudly with `WorkerLost` naming the worker — not hang the
+/// coordinator, not report a partial world.
+#[test]
+fn worker_killed_mid_launch_world_fails_loudly_with_worker_lost() {
+    let src = std::fs::read_to_string(repo("configs/listing1_3task.yaml")).unwrap();
+    let pool = host_pool(2, fast_hb(), &["kill@0:at=launch"]);
+    let opts = UpOpts {
+        workers: 2,
+        time_scale: 1.0,
+        workdir: Some(scratch("launch-loss")),
+        artifacts: None,
+        heartbeat: fast_hb(),
+    };
+    let err = run_workflow_distributed_on(&pool, &src, &opts).unwrap_err();
+    match err {
+        WilkinsError::WorkerLost(m) => {
+            assert!(m.contains("worker 0"), "loss message must name the worker: {m}")
+        }
+        other => panic!("want WorkerLost naming worker 0, got {other:?}"),
+    }
+}
