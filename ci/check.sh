@@ -50,6 +50,30 @@ echo "== multi-process smoke run (2 workers) =="
 cargo run --release -- up --workers 2 configs/listing1_3task.yaml \
     --artifacts /nonexistent >/dev/null
 
+echo "== 8-worker smoke run (O(1) threads per worker) =="
+# Every worker reports its own OS thread count after serving its
+# world (WILKINS_DEBUG_THREADS=1 reads /proc/self/status). The
+# event-loop transport keeps that count flat — the main serve thread
+# plus one I/O thread — no matter how many mesh links the 8-worker
+# full mesh hands each process; the thread-per-link pump model this
+# replaced would sit at ~9 threads per worker here.
+threads_err="${TMPDIR:-/tmp}/wilkins-ci-threads-$$.log"
+WILKINS_DEBUG_THREADS=1 cargo run --release -- up --workers 8 \
+    configs/fanout8.yaml --artifacts /nonexistent \
+    >/dev/null 2>"$threads_err"
+tn=$(grep -c "^wilkins-threads: worker=" "$threads_err" || true)
+[ "$tn" = "8" ] || {
+    echo "FAIL: expected 8 wilkins-threads reports, got $tn:"
+    cat "$threads_err"; exit 1;
+}
+tbad=$(grep "^wilkins-threads: worker=" "$threads_err" \
+    | sed 's/.*threads=//' | awk '$1 > 3 { c++ } END { print c + 0 }')
+[ "$tbad" = "0" ] || {
+    echo "FAIL: $tbad worker(s) exceeded the 3-thread budget:"
+    grep "^wilkins-threads: worker=" "$threads_err"; exit 1;
+}
+rm -f "$threads_err"
+
 echo "== flow-control smoke run (latest policy must shed rounds) =="
 flow_out=$(cargo run --release -- run configs/flow_control.yaml \
     --time-scale 0.02 --artifacts /nonexistent)

@@ -114,6 +114,13 @@ pub trait Transport: Send + Sync {
     /// Orderly teardown (flush and close sockets); a no-op in-process.
     fn shutdown(&self) {}
 
+    /// A rank on this transport is about to block waiting for inbound
+    /// data: backends that stage small outbound frames for coalescing
+    /// should push them to the kernel now (the peer we are about to
+    /// wait on may itself be blocked on one of those tiny frames —
+    /// credit grants, flow `Done`s). A no-op for unbuffered backends.
+    fn flush_hint(&self) {}
+
     /// Does `dst_global`'s inbox live in this OS process? Decides
     /// whether a serve may take the zero-copy shared-snapshot path
     /// (sharing an `Arc` only works inside one address space). The
@@ -367,6 +374,7 @@ impl Comm {
     where
         F: Fn(&Envelope) -> bool,
     {
+        self.world.transport.flush_hint();
         let mb = self.world.mailboxes.at(self.global_rank());
         let mut queue = mb.queue.lock().unwrap();
         let idx = queue.iter().position(matcher)?;
@@ -377,6 +385,9 @@ impl Comm {
     where
         F: Fn(&Envelope) -> bool,
     {
+        // About to block: anything we staged may be exactly what our
+        // counterpart needs before it can send what we wait for.
+        self.world.transport.flush_hint();
         let mb = self.world.mailboxes.at(self.global_rank());
         let deadline = Instant::now() + timeout;
         let mut queue = mb.queue.lock().unwrap();
@@ -400,6 +411,7 @@ impl Comm {
 
     /// Non-blocking probe: is a matching message waiting?
     pub fn iprobe(&self, src: usize, tag: u64) -> bool {
+        self.world.transport.flush_hint();
         let mb = self.world.mailboxes.at(self.global_rank());
         let queue = mb.queue.lock().unwrap();
         queue.iter().any(|e| {

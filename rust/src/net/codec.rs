@@ -65,7 +65,7 @@ pub type Frame = (u8, Vec<u8>);
 /// scattered `parts` so the tap can capture payload bytes under
 /// `WILKINS_TRACE_WIRE=full` without the codec staging a copy.
 #[inline]
-fn note_tx(kind: u8, parts: &[&[u8]]) {
+pub(crate) fn note_tx(kind: u8, parts: &[&[u8]]) {
     let body_len: usize = parts.iter().map(|p| p.len()).sum();
     Ctr::FramesSent.bump(1);
     Ctr::BytesSentWire.bump((HEADER_LEN + body_len) as u64);
@@ -388,6 +388,118 @@ fn read_body_timed<R: Read>(
         }
     }
     Ok(())
+}
+
+/// One observation from a nonblocking frame read
+/// ([`NbFrameReader::read_from`]).
+pub(crate) enum NbRead {
+    /// A complete frame arrived.
+    Frame((u8, Payload)),
+    /// The socket has no more bytes right now; progress (if any) is
+    /// saved — call again when the fd is readable.
+    WouldBlock,
+    /// Clean EOF at a frame boundary.
+    Eof,
+}
+
+/// Restartable frame reader for nonblocking sockets: the event-loop
+/// counterpart of [`read_frame_payload`]. Reads the header and body
+/// directly into a pool-leased buffer (no intermediate staging copy),
+/// suspending at any `WouldBlock` and resuming exactly where it left
+/// off — a frame can be split at every byte boundary across an
+/// arbitrary number of readiness events without tearing.
+pub(crate) struct NbFrameReader {
+    head: [u8; HEADER_LEN],
+    head_got: usize,
+    body: Option<buf::Lease>,
+    body_got: usize,
+    body_len: usize,
+    kind: u8,
+}
+
+impl NbFrameReader {
+    pub(crate) fn new() -> NbFrameReader {
+        NbFrameReader {
+            head: [0u8; HEADER_LEN],
+            head_got: 0,
+            body: None,
+            body_got: 0,
+            body_len: 0,
+            kind: 0,
+        }
+    }
+
+    /// Advance the in-progress frame as far as the socket allows.
+    /// EOF/desync rules match the blocking readers exactly (clean EOF
+    /// only at a header boundary; identical error strings), so the
+    /// event loop surfaces the same diagnostics the pump threads did.
+    pub(crate) fn read_from<R: Read>(&mut self, r: &mut R) -> Result<NbRead> {
+        while self.body.is_none() {
+            match r.read(&mut self.head[self.head_got..]) {
+                Ok(0) => {
+                    let got = self.head_got;
+                    if got == 0 {
+                        return Ok(NbRead::Eof);
+                    }
+                    return Err(WilkinsError::Comm(format!(
+                        "socket closed inside a frame header ({got}/{HEADER_LEN} bytes)"
+                    )));
+                }
+                Ok(n) => self.head_got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(NbRead::WouldBlock);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(WilkinsError::Io(e)),
+            }
+            if self.head_got < HEADER_LEN {
+                continue;
+            }
+            let len = u32::from_le_bytes(self.head[..4].try_into().unwrap()) as usize;
+            if len > MAX_FRAME {
+                return Err(WilkinsError::Comm(format!(
+                    "frame header claims {len} bytes (> MAX_FRAME): stream desync?"
+                )));
+            }
+            self.kind = self.head[4];
+            // Same pooled-vs-plain split as the blocking payload path,
+            // so the `--no-pool` ablation accounts identically.
+            let mut lease = if buf::pooling_enabled() {
+                buf::pool().lease(len)
+            } else {
+                buf::Lease::unpooled(len)
+            };
+            lease.resize(len, 0);
+            self.body = Some(lease);
+            self.body_got = 0;
+            self.body_len = len;
+        }
+
+        // `while` (not `if`): a zero-length body must complete without
+        // a read — `read(&mut [])` returning `Ok(0)` is not an EOF.
+        while self.body_got < self.body_len {
+            let lease = self.body.as_mut().unwrap();
+            match r.read(&mut lease[self.body_got..]) {
+                Ok(0) => {
+                    let (got, len) = (self.body_got, self.body_len);
+                    return Err(WilkinsError::Comm(format!(
+                        "socket closed inside a frame body ({got}/{len} bytes)"
+                    )));
+                }
+                Ok(n) => self.body_got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(NbRead::WouldBlock);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(WilkinsError::Io(e)),
+            }
+        }
+
+        let lease = self.body.take().unwrap();
+        self.head_got = 0;
+        note_rx(self.kind, &[&lease[..]]);
+        Ok(NbRead::Frame((self.kind, lease.finish())))
+    }
 }
 
 /// Incremental frame decoder: feed byte chunks of any size (including

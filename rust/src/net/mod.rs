@@ -12,16 +12,24 @@
 //!
 //! Pieces, bottom-up:
 //!
-//! * [`codec`] — length-prefixed frame codec (blocking and
-//!   incremental decode paths over the same header rules).
+//! * [`codec`] — length-prefixed frame codec (blocking, incremental
+//!   and nonblocking-restartable decode paths over the same header
+//!   rules).
+//! * [`poller`] — dependency-free readiness event loop: raw `epoll`
+//!   on Linux, `poll(2)` elsewhere on unix, plus the wake pipe and
+//!   the timer wheel the I/O thread schedules beats and deadlines on.
 //! * [`proto`] — rendezvous/command/data messages, encoded with the
 //!   same [`wire`](crate::comm::wire) pair as the in-process
 //!   protocol.
+//! * `io` (crate-private) — the per-process transport I/O thread:
+//!   owns every mesh
+//!   and control link's read half as a nonblocking socket on the
+//!   poller, feeds decoded envelopes back into the ordinary
+//!   mailbox/condvar receive path, and coalesces small outbound
+//!   frames through per-link staging writers.
 //! * [`transport`] — [`SocketTransport`], the socket backend of
 //!   [`comm::Transport`](crate::comm::Transport): mailbox pushes for
-//!   locally-hosted ranks, framed envelopes on mesh links otherwise,
-//!   with pump threads feeding remote envelopes back into the
-//!   ordinary mailbox/condvar receive path.
+//!   locally-hosted ranks, framed envelopes on mesh links otherwise.
 //! * [`rendezvous`] — bootstrap: coordinator listener, worker join,
 //!   endpoint-map exchange, deterministic peer-mesh construction, and
 //!   the node → worker rank assignment.
@@ -42,10 +50,13 @@
 //! from [`Ensemble::run_on_pool`](crate::ensemble::Ensemble::run_on_pool).
 //!
 //! Liveness: every control and mesh link carries periodic
-//! [`Heartbeat`](proto::Heartbeat) frames, and every liveness-aware
-//! receive uses timed reads ([`codec::read_frame_timed`]) so a dead
-//! or wedged peer is detected within a configurable deadline instead
-//! of parking the coordinator forever (see `docs/fault-tolerance.md`).
+//! [`Heartbeat`](proto::Heartbeat) frames. On the worker side the
+//! I/O thread's timer wheel both *sends* the beats (staged through
+//! the coalescing writers) and *checks* them (per-link silence
+//! deadlines), so a dead or wedged peer is detected within a
+//! configurable deadline with zero dedicated threads; the
+//! coordinator side keeps timed reads ([`codec::read_frame_timed`])
+//! on its blocking control links (see `docs/fault-tolerance.md`).
 //!
 //! Everything above `comm/` — `henson::drive_rank`, `lowfive::Vol`,
 //! `flow::`, collectives — runs unmodified on remote ranks: the only
@@ -55,6 +66,8 @@
 
 pub mod codec;
 pub mod faults;
+pub(crate) mod io;
+pub mod poller;
 pub mod pool;
 pub mod proto;
 pub mod rendezvous;

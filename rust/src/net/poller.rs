@@ -1,0 +1,677 @@
+//! A dependency-free readiness poller: the event-loop substrate under
+//! [`net`](crate::net)'s single transport I/O thread.
+//!
+//! Three small pieces, all `std`-only:
+//!
+//! - [`Poller`] — register nonblocking fds with a [`Token`] and an
+//!   [`Interest`], then [`Poller::wait`] for readiness [`Event`]s. On
+//!   Linux it is raw `epoll` via direct syscall declarations; on other
+//!   unixes it degrades to `poll(2)` over a registration list; on
+//!   non-unix targets construction returns an error (the socket
+//!   transport itself is unix-only today).
+//! - [`Waker`] — a self-pipe that makes `wait` return from another
+//!   thread (used to deliver commands to the I/O thread and to stop it).
+//! - [`Timers`] — a monotonic one-shot timer wheel (binary heap with
+//!   lazy cancellation) that folds heartbeat intervals, liveness
+//!   deadlines and flush retries into the single `wait` timeout.
+//!
+//! Nothing here knows about frames or mailboxes; `net::io` composes
+//! these into the actual transport loop.
+
+use std::collections::{BinaryHeap, HashMap};
+use std::io;
+use std::time::{Duration, Instant};
+
+/// Identifies a registered fd in the events returned by [`Poller::wait`].
+///
+/// Tokens are caller-chosen; the poller treats them as opaque payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Token(pub u64);
+
+/// What readiness to watch a registration for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest(u8);
+
+impl Interest {
+    /// Wake when the fd has bytes to read (or hit EOF / error).
+    pub const READABLE: Interest = Interest(0b01);
+    /// Wake when the fd can accept writes again.
+    pub const WRITABLE: Interest = Interest(0b10);
+
+    fn readable(self) -> bool {
+        self.0 & 0b01 != 0
+    }
+    fn writable(self) -> bool {
+        self.0 & 0b10 != 0
+    }
+}
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered with.
+    pub token: Token,
+    /// The fd is readable (data, EOF, or a pending error — in every
+    /// case the right response is to go read it).
+    pub readable: bool,
+    /// The peer hung up or the fd errored. Readers should still drain:
+    /// a hangup can arrive with buffered bytes ahead of the EOF.
+    pub hangup: bool,
+}
+
+#[cfg(unix)]
+mod sys {
+    //! Shared unix syscall surface: `poll(2)`, the self-pipe, fcntl.
+    #![allow(non_camel_case_types)]
+
+    use std::os::raw::{c_int, c_ulong};
+
+    pub type RawFd = c_int;
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    // Only the poll(2)-backed poller reads these; on Linux the epoll
+    // constants in `esys` cover error/hangup readiness.
+    #[cfg(not(target_os = "linux"))]
+    pub const POLLERR: i16 = 0x008;
+    #[cfg(not(target_os = "linux"))]
+    pub const POLLHUP: i16 = 0x010;
+
+    pub const F_GETFL: c_int = 3;
+    pub const F_SETFL: c_int = 4;
+    pub const F_SETFD: c_int = 2;
+    pub const FD_CLOEXEC: c_int = 1;
+    #[cfg(target_os = "linux")]
+    pub const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    pub const O_NONBLOCK: c_int = 0x4;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        // Declared non-variadic with the single int arg every call
+        // site here uses; fine on the supported ABIs.
+        pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+    }
+
+    /// Set (or clear) `O_NONBLOCK` on an fd.
+    pub fn set_nonblocking(fd: RawFd, on: bool) -> std::io::Result<()> {
+        unsafe {
+            let flags = fcntl(fd, F_GETFL, 0);
+            if flags < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            let want = if on { flags | O_NONBLOCK } else { flags & !O_NONBLOCK };
+            if fcntl(fd, F_SETFL, want) < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+        }
+        Ok(())
+    }
+
+    /// Mark an fd close-on-exec (spawned workers must not inherit it).
+    pub fn set_cloexec(fd: RawFd) -> std::io::Result<()> {
+        unsafe {
+            if fcntl(fd, F_SETFD, FD_CLOEXEC) < 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod esys {
+    //! Raw `epoll` declarations (Linux only).
+    use std::os::raw::c_int;
+
+    // On x86-64 the kernel's epoll_event is packed; elsewhere it has
+    // natural alignment. Matching the kernel layout exactly matters.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int)
+            -> c_int;
+    }
+}
+
+/// Round a timeout up to whole milliseconds for `epoll_wait`/`poll`.
+///
+/// Rounding *up* matters: rounding a 0.4 ms timer deadline down to 0
+/// would spin the loop hot until the timer fires.
+#[cfg(unix)]
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis();
+            let ms = if d > Duration::from_millis(ms as u64) { ms + 1 } else { ms };
+            ms.min(i32::MAX as u128) as i32
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use linux_impl::Poller;
+
+#[cfg(target_os = "linux")]
+mod linux_impl {
+    use super::esys::*;
+    use super::sys::{self, RawFd};
+    use super::{timeout_ms, Event, Interest, Token};
+    use std::io;
+    use std::time::Duration;
+
+    /// Readiness poller backed by raw `epoll` syscalls.
+    pub struct Poller {
+        epfd: RawFd,
+    }
+
+    impl Poller {
+        /// Create a new epoll instance (close-on-exec).
+        pub fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        /// Watch `fd` for `interest`, reporting readiness as `token`.
+        pub fn register(&self, fd: RawFd, token: Token, interest: Interest) -> io::Result<()> {
+            let mut events = EPOLLERR | EPOLLHUP | EPOLLRDHUP;
+            if interest.readable() {
+                events |= EPOLLIN;
+            }
+            if interest.writable() {
+                events |= EPOLLOUT;
+            }
+            let mut ev = EpollEvent { events, data: token.0 };
+            let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_ADD, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Stop watching `fd`.
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            // Pre-2.6.9 kernels demand a non-null event even for DEL;
+            // passing one costs nothing on modern kernels.
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            let rc = unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Block until a registration is ready or `timeout` elapses,
+        /// appending readiness reports to `events`.
+        pub fn wait(&self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 64];
+            let n = loop {
+                let rc = unsafe {
+                    epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms(timeout))
+                };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+                // EINTR: retry. The loop above re-waits the full
+                // timeout; timer lateness is absorbed by the caller
+                // re-deriving its deadline each pass.
+            };
+            for ev in buf.iter().take(n) {
+                // Copy the (possibly packed) fields by value before use.
+                let bits = ev.events;
+                let data = ev.data;
+                events.push(Event {
+                    token: Token(data),
+                    readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                    hangup: bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                sys::close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+pub use poll_impl::Poller;
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod poll_impl {
+    use super::sys::{self, RawFd};
+    use super::{timeout_ms, Event, Interest, Token};
+    use std::io;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    /// Portable fallback poller over `poll(2)` and a registration list.
+    pub struct Poller {
+        regs: Mutex<Vec<(RawFd, Token, Interest)>>,
+    }
+
+    impl Poller {
+        /// Create an empty registration set.
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { regs: Mutex::new(Vec::new()) })
+        }
+
+        /// Watch `fd` for `interest`, reporting readiness as `token`.
+        pub fn register(&self, fd: RawFd, token: Token, interest: Interest) -> io::Result<()> {
+            self.regs.lock().unwrap().push((fd, token, interest));
+            Ok(())
+        }
+
+        /// Stop watching `fd`.
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.regs.lock().unwrap().retain(|(f, _, _)| *f != fd);
+            Ok(())
+        }
+
+        /// Block until a registration is ready or `timeout` elapses,
+        /// appending readiness reports to `events`.
+        pub fn wait(&self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            let regs = self.regs.lock().unwrap().clone();
+            let mut fds: Vec<sys::PollFd> = regs
+                .iter()
+                .map(|(fd, _, interest)| {
+                    let mut want = 0i16;
+                    if interest.readable() {
+                        want |= sys::POLLIN;
+                    }
+                    if interest.writable() {
+                        want |= sys::POLLOUT;
+                    }
+                    sys::PollFd { fd: *fd, events: want, revents: 0 }
+                })
+                .collect();
+            let n = loop {
+                let rc = unsafe {
+                    sys::poll(fds.as_mut_ptr(), fds.len() as _, timeout_ms(timeout))
+                };
+                if rc >= 0 {
+                    break rc;
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            };
+            if n > 0 {
+                for (pfd, (_, token, _)) in fds.iter().zip(regs.iter()) {
+                    if pfd.revents == 0 {
+                        continue;
+                    }
+                    let hangup = pfd.revents & (sys::POLLERR | sys::POLLHUP) != 0;
+                    events.push(Event {
+                        token: *token,
+                        readable: pfd.revents & sys::POLLIN != 0 || hangup,
+                        hangup,
+                    });
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(not(unix))]
+pub use stub_impl::Poller;
+
+#[cfg(not(unix))]
+mod stub_impl {
+    use super::{Event, Interest, Token};
+    use std::io;
+    use std::time::Duration;
+
+    /// Stub poller for non-unix targets: construction fails, matching
+    /// the socket transport (which is unix-only today).
+    pub struct Poller {}
+
+    impl Poller {
+        /// Always fails on this platform.
+        pub fn new() -> io::Result<Poller> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "wilkins net: readiness poller is unix-only",
+            ))
+        }
+
+        /// Unreachable (construction fails).
+        pub fn register(&self, _fd: i32, _token: Token, _interest: Interest) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        /// Unreachable (construction fails).
+        pub fn deregister(&self, _fd: i32) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+
+        /// Unreachable (construction fails).
+        pub fn wait(&self, _events: &mut Vec<Event>, _timeout: Option<Duration>) -> io::Result<()> {
+            unreachable!("stub poller cannot be constructed")
+        }
+    }
+}
+
+/// Self-pipe waker: lets any thread force [`Poller::wait`] to return.
+///
+/// Register [`Waker::read_fd`] with the poller under a reserved token;
+/// [`Waker::wake`] writes one byte (coalescing with any byte already
+/// buffered), and the poll loop calls [`Waker::drain`] when it sees
+/// that token.
+#[cfg(unix)]
+pub struct Waker {
+    read_fd: sys::RawFd,
+    write_fd: sys::RawFd,
+}
+
+#[cfg(unix)]
+impl Waker {
+    /// Create the pipe pair, both ends nonblocking + close-on-exec.
+    pub fn new() -> io::Result<Waker> {
+        let mut fds = [0i32; 2];
+        if unsafe { sys::pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let (r, w) = (fds[0], fds[1]);
+        for fd in [r, w] {
+            if let Err(e) = sys::set_nonblocking(fd, true).and_then(|()| sys::set_cloexec(fd)) {
+                unsafe {
+                    sys::close(r);
+                    sys::close(w);
+                }
+                return Err(e);
+            }
+        }
+        Ok(Waker { read_fd: r, write_fd: w })
+    }
+
+    /// The readable end, for registration with the poller.
+    pub fn read_fd(&self) -> sys::RawFd {
+        self.read_fd
+    }
+
+    /// Make the poll loop wake. Lossy by design: if the pipe already
+    /// holds an unread byte the write fails with `EAGAIN`, which is
+    /// exactly the coalescing we want.
+    pub fn wake(&self) {
+        let b = [1u8];
+        unsafe {
+            sys::write(self.write_fd, b.as_ptr(), 1);
+        }
+    }
+
+    /// Swallow pending wake bytes (called by the loop on its token).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe { sys::read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.read_fd);
+            sys::close(self.write_fd);
+        }
+    }
+}
+
+/// Non-unix stand-in; construction fails like the stub [`Poller`].
+#[cfg(not(unix))]
+pub struct Waker {}
+
+#[cfg(not(unix))]
+impl Waker {
+    /// Always fails on this platform.
+    pub fn new() -> io::Result<Waker> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "wilkins net: waker is unix-only",
+        ))
+    }
+
+    /// Unreachable (construction fails).
+    pub fn read_fd(&self) -> i32 {
+        unreachable!("stub waker cannot be constructed")
+    }
+
+    /// Unreachable (construction fails).
+    pub fn wake(&self) {}
+
+    /// Unreachable (construction fails).
+    pub fn drain(&self) {}
+}
+
+/// Block the calling thread until `fd` is readable (or writable when
+/// `want_write`), with an optional timeout.
+///
+/// This is the blocking-write escape hatch: once a socket's shared
+/// file description goes nonblocking for the poller, rank threads that
+/// still need blocking semantics retry `WouldBlock` through here.
+/// Returns `Ok(true)` when ready, `Ok(false)` on timeout.
+#[cfg(unix)]
+pub(crate) fn wait_fd(fd: sys::RawFd, want_write: bool, timeout: Option<Duration>) -> io::Result<bool> {
+    let want = if want_write { sys::POLLOUT } else { sys::POLLIN };
+    let mut pfd = sys::PollFd { fd, events: want, revents: 0 };
+    loop {
+        let rc = unsafe { sys::poll(&mut pfd, 1, timeout_ms(timeout)) };
+        if rc > 0 {
+            return Ok(true);
+        }
+        if rc == 0 {
+            return Ok(false);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// Opaque handle to an armed timer, for cancellation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimerId(u64);
+
+/// One-shot timer wheel: a binary heap of deadlines with lazy
+/// cancellation (cancelled entries are skipped when they surface).
+///
+/// `K` is whatever the owner wants fired — the transport loop stores
+/// an enum of heartbeat / liveness / flush-retry actions.
+pub struct Timers<K> {
+    heap: BinaryHeap<std::cmp::Reverse<(Instant, u64)>>,
+    live: HashMap<u64, K>,
+    next_id: u64,
+}
+
+impl<K> Timers<K> {
+    /// An empty wheel.
+    pub fn new() -> Timers<K> {
+        Timers { heap: BinaryHeap::new(), live: HashMap::new(), next_id: 0 }
+    }
+
+    /// Arm a one-shot timer firing `kind` at `deadline`.
+    pub fn arm(&mut self, deadline: Instant, kind: K) -> TimerId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.heap.push(std::cmp::Reverse((deadline, id)));
+        self.live.insert(id, kind);
+        TimerId(id)
+    }
+
+    /// Cancel an armed timer. Harmless if it already fired.
+    pub fn cancel(&mut self, id: TimerId) {
+        self.live.remove(&id.0);
+    }
+
+    /// The earliest live deadline, if any (prunes cancelled heads).
+    pub fn next_deadline(&mut self) -> Option<Instant> {
+        while let Some(std::cmp::Reverse((when, id))) = self.heap.peek().copied() {
+            if self.live.contains_key(&id) {
+                return Some(when);
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Pop every timer due at or before `now`, in deadline order.
+    pub fn pop_expired(&mut self, now: Instant) -> Vec<K> {
+        let mut fired = Vec::new();
+        while let Some(std::cmp::Reverse((when, id))) = self.heap.peek().copied() {
+            if when > now {
+                break;
+            }
+            self.heap.pop();
+            if let Some(kind) = self.live.remove(&id) {
+                fired.push(kind);
+            }
+        }
+        fired
+    }
+
+    /// Number of live (armed, uncancelled) timers.
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    /// True when no timer is armed.
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+}
+
+impl<K> Default for Timers<K> {
+    fn default() -> Timers<K> {
+        Timers::new()
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn timers_fire_in_deadline_order_and_skip_cancelled() {
+        let mut t: Timers<&'static str> = Timers::new();
+        let base = Instant::now();
+        let _a = t.arm(base + Duration::from_millis(30), "third");
+        let b = t.arm(base + Duration::from_millis(10), "cancelled");
+        let _c = t.arm(base + Duration::from_millis(20), "second");
+        let _d = t.arm(base + Duration::from_millis(5), "first");
+        t.cancel(b);
+        assert_eq!(t.len(), 3);
+
+        // Nothing due before the first deadline.
+        assert!(t.pop_expired(base).is_empty());
+        assert_eq!(t.next_deadline(), Some(base + Duration::from_millis(5)));
+
+        // Everything due fires in deadline order, cancelled skipped.
+        let fired = t.pop_expired(base + Duration::from_millis(25));
+        assert_eq!(fired, vec!["first", "second"]);
+
+        let fired = t.pop_expired(base + Duration::from_millis(60));
+        assert_eq!(fired, vec!["third"]);
+        assert!(t.is_empty());
+        assert_eq!(t.next_deadline(), None);
+    }
+
+    #[test]
+    fn waker_wakes_and_drain_clears_spurious_wakeups() {
+        let poller = Poller::new().unwrap();
+        let waker = Waker::new().unwrap();
+        const WAKE: Token = Token(u64::MAX);
+        poller.register(waker.read_fd(), WAKE, Interest::READABLE).unwrap();
+
+        // Double-wake coalesces into (at least) one event.
+        waker.wake();
+        waker.wake();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == WAKE && e.readable));
+
+        // After draining, a wait with a short timeout reports nothing:
+        // the wake byte does not linger as a spurious-ready fd.
+        waker.drain();
+        events.clear();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "spurious wakeup after drain: {events:?}");
+    }
+
+    #[test]
+    fn socket_readable_event_carries_its_token() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut tx = TcpStream::connect(addr).unwrap();
+        let (rx, _) = listener.accept().unwrap();
+        rx.set_nonblocking(true).unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller.register(rx.as_raw_fd(), Token(7), Interest::READABLE).unwrap();
+
+        // Nothing written yet: a short wait must time out quietly.
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty());
+
+        tx.write_all(b"ping").unwrap();
+        tx.flush().unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == Token(7) && e.readable));
+
+        poller.deregister(rx.as_raw_fd()).unwrap();
+    }
+}

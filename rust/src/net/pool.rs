@@ -9,7 +9,9 @@
 //! [`WorkerPool::acquire`]/[`WorkerPool::release`]).
 //!
 //! Liveness: workers beat on their control sockets
-//! ([`proto::Heartbeat`]) and every pool receive is a timed read, so
+//! ([`proto::Heartbeat`], staged by each worker's I/O-thread timer —
+//! the crate-private `net::io` module) and every pool receive is a
+//! timed read, so
 //! a worker that dies or wedges surfaces as
 //! [`WilkinsError::WorkerLost`] within the configured deadline
 //! instead of parking the coordinator forever. A lost worker is

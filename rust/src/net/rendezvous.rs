@@ -7,7 +7,9 @@
 //! what `LaunchWorld` broadcasts; every worker then independently
 //! builds the same mesh ([`build_mesh_world`]): connect to every
 //! lower-id peer, accept from every higher-id peer, one duplex link
-//! per unordered pair, one pump thread per link.
+//! per unordered pair — every link's read half handed to the
+//! process's single transport I/O thread (the crate-private
+//! `net::io` module).
 //!
 //! Rank assignment itself lives here too ([`assign_nodes`]): whole
 //! task instances (graph nodes) are dealt round-robin onto workers,
@@ -18,7 +20,6 @@
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::comm::{Mailboxes, World};
@@ -26,8 +27,9 @@ use crate::error::{Result, WilkinsError};
 use crate::graph::WorkflowGraph;
 
 use super::codec;
+use super::io::{FrameWriter, IoRt, Sink};
 use super::proto::{self, Hello, LaunchWorld};
-use super::transport::{connect, spawn_pump, PeerLink, SocketTransport};
+use super::transport::{connect, SocketTransport};
 
 /// How long rendezvous/mesh accepts wait for a counterpart to show
 /// up. A worker or peer process that died before connecting must
@@ -197,41 +199,61 @@ pub fn assign_nodes(graph: &WorkflowGraph, nworkers: usize) -> Vec<u64> {
 }
 
 /// Everything a worker holds while participating in a distributed
-/// world: the world itself plus the pump threads feeding it (and the
-/// mesh heartbeat thread, when liveness is on). Keep it alive until
-/// the coordinator's final `Shutdown` — peers may still be draining
-/// even after our own ranks finish.
+/// world: the world itself plus a handle on the I/O thread feeding
+/// it. Keep it alive until the coordinator's final `Shutdown` — peers
+/// may still be draining even after our own ranks finish.
+///
+/// Field order is the teardown order: `world` drops first (closing
+/// the transport's write halves), then the `io` handle — when it is
+/// the last handle on the I/O thread, the drop stops, wakes and
+/// *joins* the thread, so mesh shutdown is deterministic and
+/// leak-free. (The old per-link pump threads were detached and simply
+/// abandoned at shutdown.)
 pub struct MeshWorld {
     pub world: World,
-    pumps: Vec<JoinHandle<()>>,
-    /// Tells the mesh beat thread to stop at its next tick.
-    beat_stop: Arc<std::sync::atomic::AtomicBool>,
+    io: IoRt,
 }
 
 impl MeshWorld {
-    /// Orderly teardown: signal every peer (`Shutdown` frame) and
-    /// close our write halves. Pumps are *not* joined — a pump only
-    /// exits once the peer closes its side, and peers tear down
-    /// concurrently, so joining here could deadlock two workers on
-    /// each other. Dropping the handles detaches the pumps; they
-    /// drain the peer's close and exit on their own (or die with the
-    /// process). The beat thread likewise stops on its own at its
-    /// next tick.
+    /// Orderly teardown: flush + `Shutdown`-frame every peer and close
+    /// our write halves. The I/O thread deregisters links as peers
+    /// close their sides; it is joined when the last `IoRt` handle
+    /// drops (here, for a standalone mesh world — the worker serve
+    /// loop holds its own handle until the process winds down).
     pub fn shutdown(self) {
-        self.beat_stop.store(true, std::sync::atomic::Ordering::SeqCst);
         self.world.shutdown_transport();
-        drop(self.pumps);
+    }
+
+    /// The I/O thread's exit flag, for thread-leak assertions.
+    #[cfg(test)]
+    pub(crate) fn io_finished_probe(&self) -> Arc<std::sync::atomic::AtomicBool> {
+        self.io.finished_probe()
     }
 }
 
-/// Build this worker's side of the mesh + the socket-backed world.
+/// Build this worker's side of the mesh + the socket-backed world,
+/// spawning a dedicated I/O thread for it (tests, benches). Workers
+/// already own an I/O thread for their control link and share it
+/// (crate-private `build_mesh_world_on`).
+pub fn build_mesh_world(
+    my_id: usize,
+    peer_listener: &TcpListener,
+    msg: &LaunchWorld,
+) -> Result<MeshWorld> {
+    let io = IoRt::spawn()?;
+    build_mesh_world_on(&io, my_id, peer_listener, msg)
+}
+
+/// Build the mesh on an existing I/O thread.
 ///
 /// Deterministic pairing: for each unordered worker pair (i, j) with
 /// i < j, worker j connects to worker i's peer listener and announces
 /// itself with a `PeerHello`; worker i accepts. Either way both sides
-/// end up with one duplex link per peer, a pump thread reading it,
-/// and a write half registered with the [`SocketTransport`].
-pub fn build_mesh_world(
+/// end up with one duplex link per peer: the read half registered
+/// (nonblocking) with the I/O thread, the write half wrapped in a
+/// staging [`FrameWriter`] held by the [`SocketTransport`].
+pub(crate) fn build_mesh_world_on(
+    io: &IoRt,
     my_id: usize,
     peer_listener: &TcpListener,
     msg: &LaunchWorld,
@@ -244,8 +266,7 @@ pub fn build_mesh_world(
     }
     let total_ranks = msg.total_ranks as usize;
     let mailboxes = Arc::new(Mailboxes::new(total_ranks));
-    let mut peers: Vec<Option<PeerLink>> = (0..n).map(|_| None).collect();
-    let mut pumps = Vec::with_capacity(n.saturating_sub(1));
+    let mut peers: Vec<Option<Arc<FrameWriter>>> = (0..n).map(|_| None).collect();
     // Mesh liveness cadence from the coordinator (0 = disabled, the
     // pre-v5 blocking behavior).
     let liveness = if msg.heartbeat_ms > 0 {
@@ -268,8 +289,19 @@ pub fn build_mesh_world(
         let read_half = stream
             .try_clone()
             .map_err(|e| WilkinsError::Comm(format!("clone mesh stream: {e}")))?;
-        pumps.push(spawn_pump(read_half, Arc::clone(&mailboxes), j, liveness));
-        peers[j] = Some(PeerLink::new(stream));
+        let writer = FrameWriter::new(stream, io.downgrade());
+        io.add_link(
+            read_half,
+            Sink::Mesh {
+                mailboxes: Arc::clone(&mailboxes),
+                peer_id: j,
+                assembler: proto::ChunkAssembler::new(),
+            },
+            j as u32,
+            liveness,
+            Some(Arc::clone(&writer)),
+        );
+        peers[j] = Some(writer);
     }
 
     // Accept from every higher id (they arrive in any order).
@@ -296,8 +328,19 @@ pub fn build_mesh_world(
         let read_half = stream
             .try_clone()
             .map_err(|e| WilkinsError::Comm(format!("clone mesh stream: {e}")))?;
-        pumps.push(spawn_pump(read_half, Arc::clone(&mailboxes), peer, liveness));
-        peers[peer] = Some(PeerLink::new(stream));
+        let writer = FrameWriter::new(stream, io.downgrade());
+        io.add_link(
+            read_half,
+            Sink::Mesh {
+                mailboxes: Arc::clone(&mailboxes),
+                peer_id: peer,
+                assembler: proto::ChunkAssembler::new(),
+            },
+            peer as u32,
+            liveness,
+            Some(Arc::clone(&writer)),
+        );
+        peers[peer] = Some(writer);
     }
 
     let owner_of: Vec<usize> = msg.owner_of.iter().map(|&w| w as usize).collect();
@@ -313,27 +356,14 @@ pub fn build_mesh_world(
         peers,
         Arc::clone(&mailboxes),
     ));
-    // Mesh beat thread: prove this worker alive on every link even
-    // when its ranks send nothing, so idle peers' pump deadlines only
-    // ever fire on real deaths.
-    let beat_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    // Mesh beat timer: prove this worker alive on every link even
+    // when its ranks send nothing, so idle peers' liveness deadlines
+    // only ever fire on real deaths. The weak handle stops the timer
+    // when the world (and its transport) drops — no beat thread, no
+    // stop flag.
     if let Some((interval, _)) = liveness {
-        let t = Arc::clone(&transport);
-        let stop = Arc::clone(&beat_stop);
-        let _ = std::thread::Builder::new()
-            .name(format!("wk-mesh-beat-{my_id}"))
-            .spawn(move || {
-                let mut seq = 0u64;
-                loop {
-                    std::thread::sleep(interval);
-                    if stop.load(std::sync::atomic::Ordering::SeqCst) {
-                        return;
-                    }
-                    seq += 1;
-                    t.beat_all(seq);
-                }
-            });
+        io.add_mesh_beat(Arc::downgrade(&transport), interval);
     }
     let world = World::with_transport(total_ranks, mailboxes, transport);
-    Ok(MeshWorld { world, pumps, beat_stop })
+    Ok(MeshWorld { world, io: io.clone() })
 }

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use crate::comm::{InterComm, Payload};
 
-use super::codec::{self, FrameDecoder, HEADER_LEN, MAX_FRAME};
+use super::codec::{self, FrameDecoder, NbFrameReader, NbRead, HEADER_LEN, MAX_FRAME};
 use super::proto::{
     self, Hello, InstanceDone, LaunchWorld, RankOutcomeWire, RunInstance, WorldDone,
 };
@@ -522,4 +522,185 @@ fn socket_world_collectives_and_intercomm() {
     }
     side0.shutdown();
     side1.shutdown();
+}
+
+/// Satellite 2: mesh teardown joins the I/O thread instead of
+/// detaching it — after `shutdown()` both processes' I/O threads have
+/// provably exited (no thread leak).
+#[test]
+fn mesh_shutdown_joins_io_threads() {
+    let (side0, side1) = mesh_pair();
+    let probe0 = side0.io_finished_probe();
+    let probe1 = side1.io_finished_probe();
+    assert!(!probe0.load(std::sync::atomic::Ordering::SeqCst));
+    assert!(!probe1.load(std::sync::atomic::Ordering::SeqCst));
+    side0.shutdown();
+    side1.shutdown();
+    // shutdown() drops the last IoRt handle, whose guard joins the
+    // thread before returning — so the flags are set by now, no race.
+    assert!(
+        probe0.load(std::sync::atomic::Ordering::SeqCst),
+        "side 0's io thread must be joined by shutdown"
+    );
+    assert!(
+        probe1.load(std::sync::atomic::Ordering::SeqCst),
+        "side 1's io thread must be joined by shutdown"
+    );
+}
+
+/// A reader that returns `WouldBlock` before every slice of the
+/// stream it serves — the worst-case readiness interleaving a
+/// nonblocking socket can produce.
+struct ChoppyReader {
+    data: Vec<u8>,
+    pos: usize,
+    step: usize,
+    /// Alternator: every other call yields `WouldBlock`.
+    ready: bool,
+}
+
+impl ChoppyReader {
+    fn new(data: Vec<u8>, step: usize) -> ChoppyReader {
+        ChoppyReader { data, pos: 0, step, ready: false }
+    }
+}
+
+impl std::io::Read for ChoppyReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if !self.ready {
+            self.ready = true;
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        self.ready = false;
+        let n = self.step.min(buf.len()).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Drive an [`NbFrameReader`] over a choppy stream to exhaustion,
+/// counting the `WouldBlock` suspensions it absorbed.
+fn drain_choppy(reader: &mut ChoppyReader) -> (Vec<(u8, Payload)>, usize) {
+    let mut nb = NbFrameReader::new();
+    let mut frames = Vec::new();
+    let mut suspensions = 0usize;
+    loop {
+        match nb.read_from(reader).unwrap() {
+            NbRead::Frame(f) => frames.push(f),
+            NbRead::WouldBlock => {
+                if reader.pos == reader.data.len() {
+                    // Stream exhausted mid-"wait": treat as done (a
+                    // real socket would eventually EOF; Cursor-style
+                    // test data just runs dry).
+                    break;
+                }
+                suspensions += 1;
+            }
+            NbRead::Eof => break,
+        }
+    }
+    (frames, suspensions)
+}
+
+/// Satellite 3: a chunked 16 MiB payload crosses the nonblocking
+/// reader with a `WouldBlock` before every 4093-byte split — every
+/// header and body boundary gets torn — and reassembles
+/// byte-identically.
+#[test]
+fn nb_reader_reassembles_chunked_16mib_through_wouldblock_storm() {
+    let payload: Vec<u8> = (0..16 * 1024 * 1024usize).map(|i| (i * 131 + 7) as u8).collect();
+    let chunks = proto::chunk_payload(
+        2,
+        1,
+        4,
+        8,
+        77,
+        &Payload::from(payload.clone()),
+        codec::CHUNK_SIZE,
+    );
+    let mut stream: Vec<u8> = Vec::new();
+    for c in &chunks {
+        codec::write_frame(&mut stream, proto::K_DATA_CHUNK, &proto::encode_data_chunk(c))
+            .unwrap();
+    }
+
+    // 4093 is prime, so the read boundaries drift through every
+    // offset of the repeating frame structure.
+    let mut reader = ChoppyReader::new(stream, 4093);
+    let (frames, suspensions) = drain_choppy(&mut reader);
+    assert_eq!(frames.len(), chunks.len(), "every chunk frame must surface");
+    assert!(
+        suspensions >= frames.len(),
+        "the storm must actually have interrupted reads \
+         ({suspensions} suspensions over {} frames)",
+        frames.len()
+    );
+
+    let mut asm = proto::ChunkAssembler::new();
+    let mut out = None;
+    for (kind, body) in frames {
+        assert_eq!(kind, proto::K_DATA_CHUNK);
+        if let Some(msg) = asm.feed(proto::decode_data_chunk(&body).unwrap()).unwrap() {
+            assert!(out.is_none(), "only the final chunk completes");
+            out = Some(msg);
+        }
+    }
+    let msg = out.expect("reassembled");
+    assert_eq!((msg.dst_global, msg.src_global, msg.comm_id, msg.tag), (2, 1, 4, 8));
+    assert!(msg.payload == payload, "payload must survive byte-identically");
+    assert_eq!(asm.in_flight(), 0);
+}
+
+/// Satellite 3, small-frame edge: one byte per read, `WouldBlock`
+/// between every single byte — including a zero-length body, which
+/// must complete without misreading `read(&mut []) == 0` as EOF.
+#[test]
+fn nb_reader_survives_per_byte_wouldblock() {
+    let mut stream: Vec<u8> = Vec::new();
+    codec::write_frame(&mut stream, 7, b"tiny").unwrap();
+    codec::write_frame(&mut stream, 9, &[]).unwrap();
+    codec::write_frame(&mut stream, 8, b"x").unwrap();
+
+    let mut reader = ChoppyReader::new(stream, 1);
+    let (frames, suspensions) = drain_choppy(&mut reader);
+    let got: Vec<(u8, Vec<u8>)> =
+        frames.into_iter().map(|(k, b)| (k, b.as_slice().to_vec())).collect();
+    assert_eq!(
+        got,
+        vec![(7, b"tiny".to_vec()), (9, Vec::new()), (8, b"x".to_vec())],
+        "frames must come out whole and in order"
+    );
+    assert!(suspensions > 10, "per-byte feeding must suspend constantly");
+}
+
+/// The nonblocking reader keeps the blocking readers' desync rules:
+/// EOF inside a header or body is an error, only boundary EOF is
+/// clean.
+#[test]
+fn nb_reader_eof_rules_match_blocking_reader() {
+    // Clean boundary EOF.
+    let mut whole: Vec<u8> = Vec::new();
+    codec::write_frame(&mut whole, 3, b"abc").unwrap();
+    let mut nb = NbFrameReader::new();
+    let mut cur = Cursor::new(whole.clone());
+    assert!(matches!(nb.read_from(&mut cur).unwrap(), NbRead::Frame((3, _))));
+    assert!(matches!(nb.read_from(&mut cur).unwrap(), NbRead::Eof));
+
+    // EOF mid-header errors.
+    let mut nb = NbFrameReader::new();
+    let mut cur = Cursor::new(whole[..3].to_vec());
+    assert!(nb.read_from(&mut cur).is_err());
+
+    // EOF mid-body errors.
+    let mut nb = NbFrameReader::new();
+    let mut cur = Cursor::new(whole[..HEADER_LEN + 1].to_vec());
+    assert!(nb.read_from(&mut cur).is_err());
+
+    // Oversize header rejected before any allocation.
+    let mut bad = ((MAX_FRAME as u32) + 1).to_le_bytes().to_vec();
+    bad.push(0);
+    let mut nb = NbFrameReader::new();
+    let mut cur = Cursor::new(bad);
+    assert!(nb.read_from(&mut cur).is_err());
 }

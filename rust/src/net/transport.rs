@@ -3,25 +3,32 @@
 //! process that hosts them.
 //!
 //! Send side: `SocketTransport::deliver` routes on the global
-//! `owner_of` map. Remote sends write one frame under the per-peer
-//! lock — vectored (stack-built header + payload slices, no staging
-//! concatenation) on the default pooled plane, the historical
-//! assemble-and-`write_all` on the ablation arm — preserving the
+//! `owner_of` map. Remote sends go through the per-peer
+//! `FrameWriter` (crate-private `net::io`): small envelopes (flow
+//! `Done`/credit grants and other control-sized frames) stage into
+//! the writer's coalescing buffer and flush as one write at the I/O
+//! thread's next loop boundary; payload-bearing frames flush the
+//! stage (FIFO order per link) and write vectored — stack-built
+//! header + payload slices, no staging concatenation — preserving the
 //! in-memory backend's "buffered eager" semantics: the call returns
-//! once the bytes are handed to the kernel, and frames from
-//! concurrent rank threads can never interleave.
+//! once the bytes are handed off, and frames from concurrent rank
+//! threads can never interleave (one writer per link serializes
+//! them).
 //!
-//! Receive side: one pump thread per mesh link ([`spawn_pump`]) reads
-//! frames (into recycled pool buffers on the pooled plane, slicing
-//! envelopes out of them with zero further copies) and pushes them
-//! into the shared [`Mailboxes`]; blocked `recv`s wake through the
-//! ordinary mailbox condvar, so `Comm`, `InterComm`, collectives and
-//! probes run unmodified on remote ranks.
+//! Receive side: the process's single transport I/O thread
+//! (the crate-private `net::io` module) owns every mesh link's read
+//! half, decodes frames
+//! incrementally off nonblocking sockets (into recycled pool buffers
+//! on the pooled plane, slicing envelopes out of them with zero
+//! further copies) and pushes them into the shared [`Mailboxes`];
+//! blocked `recv`s wake through the ordinary mailbox condvar, so
+//! `Comm`, `InterComm`, collectives and probes run unmodified on
+//! remote ranks. The thread-per-link pump model this replaces burned
+//! O(workers²) parked threads per process.
 
-use std::net::{Shutdown, TcpStream};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::thread::{self, JoinHandle};
+use std::sync::Arc;
 
 use crate::comm::buf::{self, Payload};
 use crate::comm::{Envelope, Mailboxes, Transport};
@@ -29,49 +36,18 @@ use crate::error::{Result, WilkinsError};
 use crate::obs::wiretap;
 
 use super::codec;
+use super::io::FrameWriter;
 use super::proto;
-
-/// A per-peer write half. The stream is a `try_clone` of the pump's
-/// read half, so dropping the transport closes the link for both.
-pub(crate) struct PeerLink {
-    stream: Mutex<TcpStream>,
-}
-
-impl PeerLink {
-    pub(crate) fn new(stream: TcpStream) -> PeerLink {
-        PeerLink { stream: Mutex::new(stream) }
-    }
-
-    fn send_frame(&self, kind: u8, body: &[u8]) -> Result<()> {
-        // The MAX_FRAME bound is checked by `write_frame` before any
-        // byte goes out: writing an over-bound header would make the
-        // receiving pump treat the stream as desynced and kill the
-        // link for every rank sharing it; failing just this send is
-        // the right blast radius.
-        let mut s = self.stream.lock().unwrap();
-        codec::write_frame(&mut *s, kind, body)
-    }
-
-    /// Vectored frame send: header + body parts go to the kernel as
-    /// one gather write under the per-peer lock — no staging
-    /// concatenation of the payload. Wire-identical to `send_frame`
-    /// of the concatenated parts; the MAX_FRAME bound is enforced by
-    /// [`codec::write_frame_vectored`] before any byte is written, so
-    /// an oversized body fails this send without desyncing the link.
-    fn send_frame_vectored(&self, kind: u8, parts: &[&[u8]]) -> Result<()> {
-        let mut s = self.stream.lock().unwrap();
-        codec::write_frame_vectored(&mut *s, kind, parts)
-    }
-}
 
 /// Socket-backed [`Transport`]: see the module docs.
 pub struct SocketTransport {
     my_worker: usize,
     /// Owning worker id per global rank.
     owner_of: Vec<usize>,
-    /// Mesh link per worker id (`None` at `my_worker`).
-    peers: Vec<Option<PeerLink>>,
-    /// Local inboxes, shared with the pump threads.
+    /// Staging writer per worker id (`None` at `my_worker`). The
+    /// paired read half lives with the I/O thread.
+    peers: Vec<Option<Arc<FrameWriter>>>,
+    /// Local inboxes, shared with the I/O thread.
     mailboxes: Arc<Mailboxes>,
     /// Message id for chunked envelopes (shared by all rank threads).
     next_seq: AtomicU64,
@@ -81,7 +57,7 @@ impl SocketTransport {
     pub(crate) fn new(
         my_worker: usize,
         owner_of: Vec<usize>,
-        peers: Vec<Option<PeerLink>>,
+        peers: Vec<Option<Arc<FrameWriter>>>,
         mailboxes: Arc<Mailboxes>,
     ) -> SocketTransport {
         SocketTransport { my_worker, owner_of, peers, mailboxes, next_seq: AtomicU64::new(1) }
@@ -92,20 +68,22 @@ impl SocketTransport {
         self.owner_of[global_rank] == self.my_worker
     }
 
-    /// Send one heartbeat frame on every mesh link (the mesh beat
-    /// thread's tick). Deliberately outside the `World` send counters
-    /// — liveness traffic must not perturb the transfer totals the
-    /// benches and reports assert on. Send errors are ignored: a dead
-    /// link is the receiving pump's diagnosis to make.
-    pub(crate) fn beat_all(&self, seq: u64) {
+    /// Stage one heartbeat frame on every mesh link (the I/O thread's
+    /// mesh-beat timer tick). Deliberately outside the `World` send
+    /// counters — liveness traffic must not perturb the transfer
+    /// totals the benches and reports assert on. `try_stage` may skip
+    /// a contended link: contention means a rank thread is actively
+    /// writing, which is itself proof of life. A dead link is the
+    /// receiving side's diagnosis to make.
+    pub(crate) fn beat_all_staged(&self, seq: u64) {
         let beat = proto::Heartbeat { worker_id: self.my_worker as u64, seq };
         let body = beat.encode();
-        for (peer, link) in self.peers.iter().enumerate() {
-            let Some(link) = link else { continue };
+        for (peer, w) in self.peers.iter().enumerate() {
+            let Some(w) = w else { continue };
             if wiretap::enabled() {
                 wiretap::set_link(peer as u32);
             }
-            let _ = link.send_frame(proto::K_HEARTBEAT, &body);
+            let _ = w.try_stage(proto::K_HEARTBEAT, &body);
         }
     }
 }
@@ -127,7 +105,7 @@ impl Transport for SocketTransport {
             );
             return;
         }
-        let link = self.peers[owner]
+        let w = self.peers[owner]
             .as_ref()
             .unwrap_or_else(|| panic!("no mesh link to worker {owner}"));
         // Tag this rank thread's tap records with the destination link
@@ -140,11 +118,14 @@ impl Transport for SocketTransport {
         // send contract has no error path (MPI_Send aborts too), so
         // panic this rank thread — the driver reports it as a failed
         // rank rather than hanging the whole workflow on a recv that
-        // can never complete.
+        // can never complete. The MAX_FRAME bound is checked before
+        // any byte goes out, so an oversized body fails just this send
+        // without desyncing the link.
         if payload.len() <= codec::CHUNK_SIZE {
             let res = if buf::pooling_enabled() {
                 // Pooled plane: stack-built envelope head, payload
-                // bytes gathered straight off the caller's buffer.
+                // bytes gathered straight off the caller's buffer
+                // (tiny envelopes stage for coalescing instead).
                 let head = proto::encode_data_header(
                     dst_global as u64,
                     src_global as u64,
@@ -152,7 +133,7 @@ impl Transport for SocketTransport {
                     tag,
                     payload.len(),
                 );
-                link.send_frame_vectored(proto::K_DATA, &[head.as_slice(), payload.as_slice()])
+                w.send_parts(proto::K_DATA, &[head.as_slice(), payload.as_slice()])
             } else {
                 // Ablation arm: the historical concatenating encode.
                 let body = proto::encode_data(
@@ -162,7 +143,7 @@ impl Transport for SocketTransport {
                     tag,
                     &payload,
                 );
-                link.send_frame(proto::K_DATA, &body)
+                w.send(proto::K_DATA, &body)
             };
             if let Err(e) = res {
                 panic!("mesh link to worker {owner} failed: {e}");
@@ -170,8 +151,8 @@ impl Transport for SocketTransport {
             return;
         }
         // Large payload: stream bounded chunks. Each chunk takes and
-        // releases the per-peer lock, so concurrent senders interleave
-        // at chunk granularity; the receiving pump reassembles by
+        // releases the writer's lock, so concurrent senders interleave
+        // at chunk granularity; the receiving side reassembles by
         // (sender, seq).
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         if buf::pooling_enabled() {
@@ -189,7 +170,7 @@ impl Transport for SocketTransport {
             ) {
                 let head = proto::encode_data_chunk_header(&c);
                 if let Err(e) =
-                    link.send_frame_vectored(proto::K_DATA_CHUNK, &[head.as_slice(), c.bytes.as_slice()])
+                    w.send_parts(proto::K_DATA_CHUNK, &[head.as_slice(), c.bytes.as_slice()])
                 {
                     panic!("mesh link to worker {owner} failed: {e}");
                 }
@@ -208,7 +189,7 @@ impl Transport for SocketTransport {
             codec::CHUNK_SIZE,
         ) {
             let body = proto::encode_data_chunk(&c);
-            if let Err(e) = link.send_frame(proto::K_DATA_CHUNK, &body) {
+            if let Err(e) = w.send(proto::K_DATA_CHUNK, &body) {
                 panic!("mesh link to worker {owner} failed: {e}");
             }
         }
@@ -219,173 +200,25 @@ impl Transport for SocketTransport {
     }
 
     fn shutdown(&self) {
-        for link in self.peers.iter().flatten() {
-            let _ = link.send_frame(proto::K_SHUTDOWN, &[]);
-            if let Ok(s) = link.stream.lock() {
-                let _ = s.shutdown(Shutdown::Write);
-            }
+        for w in self.peers.iter().flatten() {
+            w.shutdown_link();
+        }
+    }
+
+    /// A rank is about to block waiting for inbound data: push any
+    /// staged tiny frames (credit grants, `Done`s) to the kernel *now*
+    /// instead of waiting for the I/O thread's loop boundary — the
+    /// peer may be blocked on exactly those frames.
+    fn flush_hint(&self) {
+        for w in self.peers.iter().flatten() {
+            let _ = w.flush_blocking();
         }
     }
 }
 
-/// Spawn the inbound pump for one mesh link: frames in, mailbox
-/// pushes out. Exits on a `Shutdown` frame, clean EOF, or any stream
-/// error (a worker that died mid-run; the sender side panics with the
-/// real diagnosis).
-///
-/// With `liveness: Some((interval, deadline))` the pump uses timed
-/// reads: peers beat every `interval` (see
-/// [`SocketTransport::beat_all`]), and a link silent past `deadline`
-/// is declared dead — a peer that vanished without closing its
-/// socket (SIGKILL mid-syscall, wedged host) no longer parks the
-/// pump forever. Ranks blocked on the dead peer's data still unstick
-/// via the ordinary `RECV_TIMEOUT`, now with the pump's diagnosis on
-/// stderr first.
-pub(crate) fn spawn_pump(
-    stream: TcpStream,
-    mailboxes: Arc<Mailboxes>,
-    peer_id: usize,
-    liveness: Option<(std::time::Duration, std::time::Duration)>,
-) -> JoinHandle<()> {
-    thread::Builder::new()
-        .name(format!("wk-net-pump-{peer_id}"))
-        .spawn(move || {
-            let mut stream = stream;
-            let mut assembler = proto::ChunkAssembler::new();
-            // Every frame this pump reads crossed the one link it owns.
-            wiretap::set_link(peer_id as u32);
-            if let Some((interval, _)) = liveness {
-                if stream.set_read_timeout(Some(interval)).is_err() {
-                    eprintln!(
-                        "wilkins net: mesh link from worker {peer_id}: cannot arm \
-                         read timeout; liveness checks disabled on this link"
-                    );
-                }
-            }
-            let mut last_rx = std::time::Instant::now();
-            loop {
-                // Pooled plane: frames land in recycled pool buffers
-                // and envelopes are sliced out of them — the bytes
-                // read off the socket are the bytes the consumer
-                // fills its hyperslab from. The ablation arm keeps
-                // the historical owned-Vec read + copy-out decode.
-                let frame = match liveness {
-                    Some((_, deadline)) => {
-                        let frame_deadline = std::time::Instant::now() + deadline;
-                        let timed = if buf::pooling_enabled() {
-                            codec::read_frame_payload_timed(&mut stream, frame_deadline)
-                        } else {
-                            codec::read_frame_timed(&mut stream, frame_deadline).map(|t| {
-                                match t {
-                                    codec::TimedRead::Frame((k, body)) => {
-                                        codec::TimedRead::Frame((k, Payload::from(body)))
-                                    }
-                                    codec::TimedRead::Idle => codec::TimedRead::Idle,
-                                    codec::TimedRead::Eof => codec::TimedRead::Eof,
-                                }
-                            })
-                        };
-                        match timed {
-                            Ok(codec::TimedRead::Frame(f)) => {
-                                last_rx = std::time::Instant::now();
-                                Ok(Some(f))
-                            }
-                            Ok(codec::TimedRead::Idle) => {
-                                if last_rx.elapsed() >= deadline {
-                                    eprintln!(
-                                        "wilkins net: mesh link from worker {peer_id} died \
-                                         (silent past the {:.1}s heartbeat deadline); \
-                                         ranks waiting on it will time out",
-                                        deadline.as_secs_f64()
-                                    );
-                                    break;
-                                }
-                                continue;
-                            }
-                            Ok(codec::TimedRead::Eof) => Ok(None),
-                            Err(e) => Err(e),
-                        }
-                    }
-                    None => {
-                        if buf::pooling_enabled() {
-                            codec::read_frame_payload(&mut stream)
-                        } else {
-                            codec::read_frame(&mut stream)
-                                .map(|f| f.map(|(k, body)| (k, Payload::from(body))))
-                        }
-                    }
-                };
-                match frame {
-                    Ok(Some((proto::K_DATA, body))) => match decode_data_any(&body) {
-                        Ok(msg) => mailboxes.push(
-                            msg.dst_global as usize,
-                            Envelope {
-                                src_global: msg.src_global as usize,
-                                comm_id: msg.comm_id,
-                                tag: msg.tag,
-                                payload: msg.payload,
-                            },
-                        ),
-                        Err(e) => {
-                            eprintln!(
-                                "wilkins net: mesh link from worker {peer_id} died \
-                                 (bad data frame: {e}); ranks waiting on it will time out"
-                            );
-                            break;
-                        }
-                    },
-                    Ok(Some((proto::K_DATA_CHUNK, body))) => {
-                        let complete = decode_chunk_any(&body)
-                            .and_then(|c| assembler.feed(c));
-                        match complete {
-                            Ok(Some(msg)) => mailboxes.push(
-                                msg.dst_global as usize,
-                                Envelope {
-                                    src_global: msg.src_global as usize,
-                                    comm_id: msg.comm_id,
-                                    tag: msg.tag,
-                                    payload: msg.payload,
-                                },
-                            ),
-                            Ok(None) => {} // mid-reassembly
-                            Err(e) => {
-                                eprintln!(
-                                    "wilkins net: mesh link from worker {peer_id} died \
-                                     (bad chunk: {e}); ranks waiting on it will time out"
-                                );
-                                break;
-                            }
-                        }
-                    }
-                    // Liveness beacon: already refreshed `last_rx`
-                    // above; never surfaces to the mailboxes.
-                    Ok(Some((proto::K_HEARTBEAT, _))) => {}
-                    // Orderly teardown: peer signalled shutdown or
-                    // closed cleanly at a frame boundary.
-                    Ok(Some((proto::K_SHUTDOWN, _))) | Ok(None) => break,
-                    Ok(Some((kind, _))) => {
-                        eprintln!(
-                            "wilkins net: mesh link from worker {peer_id} died \
-                             (unexpected frame kind {kind}); ranks waiting on it will time out"
-                        );
-                        break;
-                    }
-                    Err(e) => {
-                        eprintln!(
-                            "wilkins net: mesh link from worker {peer_id} died ({e}); \
-                             ranks waiting on it will time out"
-                        );
-                        break;
-                    }
-                }
-            }
-        })
-        .expect("spawn net pump thread")
-}
-
 /// Decode a data envelope per the process's pooling mode: zero-copy
 /// payload slice when pooled, historical copy-out otherwise.
-fn decode_data_any(body: &Payload) -> Result<proto::DataMsg> {
+pub(crate) fn decode_data_any(body: &Payload) -> Result<proto::DataMsg> {
     if buf::pooling_enabled() {
         proto::decode_data_payload(body)
     } else {
@@ -394,7 +227,7 @@ fn decode_data_any(body: &Payload) -> Result<proto::DataMsg> {
 }
 
 /// Decode a chunk envelope per the process's pooling mode.
-fn decode_chunk_any(body: &Payload) -> Result<proto::DataChunk> {
+pub(crate) fn decode_chunk_any(body: &Payload) -> Result<proto::DataChunk> {
     if buf::pooling_enabled() {
         proto::decode_data_chunk_payload(body)
     } else {

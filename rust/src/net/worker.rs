@@ -13,13 +13,18 @@
 //!   inside this worker (the `process-per-instance` placement) and
 //!   ship back the `RunReport` plus spans.
 //!
-//! Liveness: a dedicated thread beats [`proto::Heartbeat`] frames on
-//! the control socket every `heartbeat` interval (sharing the write
-//! half under a mutex with command replies), so the coordinator can
-//! tell a busy worker from a dead one. Each beat piggybacks a
-//! `K_TELEMETRY` frame — a cumulative snapshot of the process-global
-//! counters plus a clock sample — so the coordinator's live telemetry
-//! survives a worker dying mid-run. The serve loop also consults
+//! Liveness: the process's transport I/O thread (the crate-private
+//! `net::io` module) owns
+//! the control link — it reads inbound command frames off the
+//! nonblocking socket and forwards them to the serve loop over a
+//! channel, and a poller timer stages [`proto::Heartbeat`] frames
+//! every `heartbeat` interval (sharing the link's staging
+//! `FrameWriter` with command replies, so writers can never
+//! interleave mid-frame). The coordinator can therefore tell a busy
+//! worker from a dead one. Each beat piggybacks a `K_TELEMETRY`
+//! frame — a cumulative snapshot of the process-global counters plus
+//! a clock sample — so the coordinator's live telemetry survives a
+//! worker dying mid-run. The serve loop also consults
 //! the process's [`FaultPlan`] on every `RunInstance` and
 //! `LaunchWorld` (`at=launch` directives) — a no-op unless
 //! `WILKINS_FAULT` armed it (tests and chaos smokes only).
@@ -28,22 +33,21 @@
 //! coordinator's `Shutdown`: our ranks finishing does not mean our
 //! peers are done reading from us.
 
-use std::net::{Shutdown, TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use crate::coordinator::Wilkins;
 use crate::ensemble::EnsembleSpec;
 use crate::error::{Result, WilkinsError};
-use crate::obs::{global_snapshot, Clock, Ctr, TelemetrySample};
+use crate::obs::{wiretap, Clock};
 use crate::tasks::builtin_registry;
 
-use super::codec;
 use super::faults::{FaultKind, FaultPlan};
+use super::io::{ControlBeat, ControlEvent, FrameWriter, IoRt, Sink};
 use super::proto::{
-    self, Heartbeat, InstanceDone, LaunchWorld, RankOutcomeWire, RunInstance, WorldDone,
+    self, InstanceDone, LaunchWorld, RankOutcomeWire, RunInstance, WorldDone,
 };
 use super::rendezvous;
 
@@ -94,95 +98,64 @@ pub fn worker_main_with(
     // the coordinator can align them with a single offset estimate.
     let clock = Clock::new();
 
-    // Replies and heartbeats share the write half under one mutex so
-    // concurrent writers can never interleave mid-frame; the serve
-    // loop keeps the original stream as its read half.
-    let write_half = control
+    // The I/O thread owns the control link's read half; replies and
+    // heartbeats share the write half through one staging FrameWriter
+    // so concurrent writers can never interleave mid-frame. Command
+    // frames come back to the serve loop over a channel.
+    let io = IoRt::spawn()?;
+    let read_half = control
         .try_clone()
         .map_err(|e| WilkinsError::Comm(format!("clone control stream: {e}")))?;
-    let writer = Arc::new(Mutex::new(write_half));
-    let stop_beats = Arc::new(AtomicBool::new(false));
-    let _beats = spawn_beat_thread(
-        Arc::clone(&writer),
-        worker_id,
-        opts.heartbeat,
-        Arc::clone(&faults),
-        Arc::clone(&stop_beats),
-        clock,
+    let writer = FrameWriter::new(control, io.downgrade());
+    let (tx, rx) = mpsc::channel();
+    io.add_link(
+        read_half,
+        Sink::Control { events: tx },
+        wiretap::LINK_UNSET,
+        None,
+        Some(Arc::clone(&writer)),
     );
-
-    let out = serve_loop(control, &writer, worker_id, &peer_listener, &faults, clock);
-    stop_beats.store(true, Ordering::SeqCst);
-    out
-}
-
-/// Beat every `interval` until stopped, silenced by a fired fault, or
-/// the socket dies (coordinator gone — nothing left to reassure).
-/// Every beat carries a heartbeat frame plus a telemetry frame with a
-/// cumulative counter snapshot (so the coordinator's totals survive
-/// this worker dying one interval later).
-fn spawn_beat_thread(
-    writer: Arc<Mutex<TcpStream>>,
-    worker_id: usize,
-    interval: Duration,
-    faults: Arc<FaultPlan>,
-    stop: Arc<AtomicBool>,
-    clock: Clock,
-) -> Option<std::thread::JoinHandle<()>> {
-    if interval.is_zero() {
-        return None;
+    // The control beat (heartbeat + telemetry every interval) is a
+    // poller timer, not a thread; it stops on its own once a fired
+    // fault silences the worker or the link dies.
+    if !opts.heartbeat.is_zero() {
+        io.add_control_beat(ControlBeat {
+            writer: Arc::clone(&writer),
+            worker_id: worker_id as u64,
+            interval: opts.heartbeat,
+            faults: Arc::clone(&faults),
+            clock,
+        });
     }
-    std::thread::Builder::new()
-        .name(format!("wk-beat-{worker_id}"))
-        .spawn(move || {
-            let mut seq = 0u64;
-            loop {
-                std::thread::sleep(interval);
-                if stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                if faults.silenced() {
-                    return;
-                }
-                seq += 1;
-                let beat = Heartbeat { worker_id: worker_id as u64, seq };
-                // Snapshot before sending: the snapshot deliberately
-                // excludes this very beat (cumulative frames make the
-                // next one pick it up).
-                let telem = TelemetrySample {
-                    worker_id: worker_id as u64,
-                    seq,
-                    t_mono_s: clock.now_s(),
-                    counters: global_snapshot(),
-                };
-                let mut w = writer.lock().unwrap();
-                if codec::write_frame(&mut *w, proto::K_HEARTBEAT, &beat.encode()).is_err() {
-                    return;
-                }
-                Ctr::HeartbeatsSent.bump(1);
-                if codec::write_frame(&mut *w, proto::K_TELEMETRY, &telem.encode()).is_err() {
-                    return;
-                }
-                Ctr::TelemetrySent.bump(1);
-            }
-        })
-        .ok()
+
+    serve_loop(&rx, &writer, worker_id, &peer_listener, &faults, clock, &io)
+    // `io` drops here: the last handle stops, wakes and joins the I/O
+    // thread (flushing any staged reply bytes first).
 }
 
 fn serve_loop(
-    mut control: TcpStream,
-    writer: &Arc<Mutex<TcpStream>>,
+    rx: &mpsc::Receiver<ControlEvent>,
+    writer: &Arc<FrameWriter>,
     worker_id: usize,
     peer_listener: &TcpListener,
     faults: &Arc<FaultPlan>,
     clock: Clock,
+    io: &IoRt,
 ) -> Result<()> {
     // A worker that served a LaunchWorld keeps the mesh world alive
     // until shutdown (peers may still drain our streams).
     let mut held: Option<rendezvous::MeshWorld> = None;
 
     loop {
-        let frame = codec::read_frame(&mut control)?;
+        let frame = match rx.recv() {
+            // Channel gone = the I/O thread exited; treat like EOF.
+            Err(mpsc::RecvError) => break,
+            // Clean EOF at a frame boundary: coordinator went away.
+            Ok(ControlEvent::Closed(None)) => break,
+            // The control stream died mid-frame.
+            Ok(ControlEvent::Closed(Some(e))) => return Err(WilkinsError::Comm(e)),
+            Ok(ControlEvent::Frame((kind, payload))) => Some((kind, payload)),
+        };
         match frame {
             None | Some((proto::K_SHUTDOWN, _)) => break,
             Some((proto::K_LAUNCH_WORLD, body)) => {
@@ -193,7 +166,7 @@ fn serve_loop(
                             std::process::exit(9);
                         }
                         faults.silence();
-                        let _ = control.shutdown(Shutdown::Both);
+                        writer.shutdown_both();
                         return Ok(());
                     }
                     Some(FaultKind::Wedge) => park_forever(),
@@ -205,7 +178,7 @@ fn serve_loop(
                     // normally.
                     Some(FaultKind::DupDone) | Some(FaultKind::DropDone) | None => {}
                 }
-                let reply = match serve_world(worker_id, peer_listener, &msg, clock) {
+                let reply = match serve_world(io, worker_id, peer_listener, &msg, clock) {
                     Ok((done, mesh)) => {
                         held = Some(mesh);
                         done
@@ -226,7 +199,7 @@ fn serve_loop(
                         // abruptly — close the control socket with no
                         // goodbye and stop beating.
                         faults.silence();
-                        let _ = control.shutdown(Shutdown::Both);
+                        writer.shutdown_both();
                         return Ok(());
                     }
                     Some(FaultKind::Wedge) => {
@@ -288,9 +261,13 @@ fn park_forever() -> ! {
     }
 }
 
-fn send_reply(writer: &Arc<Mutex<TcpStream>>, kind: u8, body: &[u8]) -> Result<()> {
-    let mut w = writer.lock().unwrap();
-    codec::write_frame(&mut *w, kind, body)
+/// Send one control reply and push it to the kernel immediately — the
+/// coordinator is blocked on it, so a staged reply must not wait for
+/// the I/O thread's loop boundary. (A DupDone's two replies stage
+/// back-to-back and leave in the one flush.)
+fn send_reply(writer: &Arc<FrameWriter>, kind: u8, body: &[u8]) -> Result<()> {
+    writer.send(kind, body)?;
+    writer.flush_blocking()
 }
 
 /// Attach the AOT engine when the run names an artifacts dir that
@@ -307,7 +284,16 @@ fn with_engine_if_present(w: Wilkins, artifacts: &str) -> Result<Wilkins> {
     Ok(w.with_engine(handle))
 }
 
+/// Threads currently alive in this process, from
+/// `/proc/self/status` (`None` off Linux or on any parse surprise).
+fn proc_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("Threads:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
 fn serve_world(
+    io: &IoRt,
     my_id: usize,
     peer_listener: &TcpListener,
     msg: &LaunchWorld,
@@ -318,7 +304,9 @@ fn serve_world(
         .with_time_scale(msg.time_scale);
     w = with_engine_if_present(w, &msg.artifacts)?;
 
-    let mesh = rendezvous::build_mesh_world(my_id, peer_listener, msg)?;
+    // The mesh shares the worker's one I/O thread: N peers, one
+    // poller, O(1) threads however wide the pool fans out.
+    let mesh = rendezvous::build_mesh_world_on(io, my_id, peer_listener, msg)?;
     let hosted: Vec<usize> = msg
         .owner_of
         .iter()
@@ -328,6 +316,14 @@ fn serve_world(
         .collect();
     let recorder = w.recorder();
     let outcomes = w.run_hosted(&mesh.world, &hosted)?;
+    // Scalability smoke hook: report this process's thread count now
+    // that the world ran and its rank threads have joined — the
+    // steady-state figure CI asserts is O(1) in pool width.
+    if std::env::var("WILKINS_DEBUG_THREADS").as_deref() == Ok("1") {
+        if let Some(n) = proc_thread_count() {
+            eprintln!("wilkins-threads: worker={my_id} threads={n}");
+        }
+    }
     // The recorder's spans are relative to the recorder's own origin
     // (created with the Wilkins above); rebase them onto the worker
     // clock so they share a timeline with the telemetry samples the

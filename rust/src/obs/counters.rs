@@ -76,6 +76,14 @@ pub enum Ctr {
     HeartbeatsSent,
     /// Telemetry frames sent by this process's beat threads.
     TelemetrySent,
+    /// Times the transport I/O thread's poller returned (readiness,
+    /// timer deadline, or wake pipe). The per-frame wakeup tax the
+    /// event-driven core is meant to shrink — watch it against
+    /// `frames_recv`.
+    PollerWakeups,
+    /// Small frames appended to an already-nonempty staging buffer:
+    /// each one is a `write` syscall the coalescing send path avoided.
+    FramesCoalesced,
 }
 
 /// Registry for the [`Ctr`] family, in `Ctr` discriminant order.
@@ -86,11 +94,15 @@ pub const GLOBAL_DEFS: &[CounterDef] = &[
     CounterDef::sum("bytes_recv_wire"),
     CounterDef::sum("heartbeats_sent"),
     CounterDef::sum("telemetry_sent"),
+    CounterDef::sum("poller_wakeups"),
+    CounterDef::sum("frames_coalesced"),
 ];
 
 const NGLOBAL: usize = GLOBAL_DEFS.len();
 
 static GLOBALS: [AtomicU64; NGLOBAL] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
