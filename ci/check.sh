@@ -74,6 +74,50 @@ tbad=$(grep "^wilkins-threads: worker=" "$threads_err" \
 }
 rm -f "$threads_err"
 
+echo "== shared-memory data-plane smoke (16 MiB grid, 2 workers) =="
+# The same 16 MiB/step workflow twice: once on the default shm
+# descriptor plane, once forced inline (WILKINS_SHM=0). The shm run
+# must actually engage (bytes_shm > 0, zero fallbacks) and must move
+# fewer bytes per delivered byte than the inline run — wire tx plus
+# twice wire rx (the nonblocking reader zero-fills its lease before
+# landing bytes in it) plus the segment writes.
+shmdir="${TMPDIR:-/tmp}/wilkins-ci-shm-$$"
+rm -rf "$shmdir"; mkdir -p "$shmdir"
+cargo run --release -- up --workers 2 configs/shm_16mib.yaml \
+    --artifacts /nonexistent --workdir "$shmdir/work-shm" \
+    --json "$shmdir/shm.json" >/dev/null
+WILKINS_SHM=0 cargo run --release -- up --workers 2 configs/shm_16mib.yaml \
+    --artifacts /nonexistent --workdir "$shmdir/work-inline" \
+    --json "$shmdir/inline.json" >/dev/null
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$shmdir/shm.json" "$shmdir/inline.json" <<'PYEOF'
+import json, sys
+shm = json.load(open(sys.argv[1]))
+inline = json.load(open(sys.argv[2]))
+def moved_per_byte(rep):
+    c = rep["telemetry"]["counters"]
+    moved = c["bytes_sent_wire"] + 2 * c["bytes_recv_wire"] + c["bytes_shm"]
+    return moved / rep["bytes_sent"]
+sc = shm["telemetry"]["counters"]
+assert sc["bytes_shm"] > 0, "shm run moved no bytes through segments"
+assert sc["shm_fallbacks"] == 0, f"shm run fell back inline {sc['shm_fallbacks']}x"
+ic = inline["telemetry"]["counters"]
+assert ic["bytes_shm"] == 0, "WILKINS_SHM=0 run still used segments"
+s, i = moved_per_byte(shm), moved_per_byte(inline)
+assert s < i, f"shm plane moved {s:.2f} bytes/byte, inline {i:.2f}"
+print(f"shm smoke: {s:.2f} moved bytes/byte vs {i:.2f} inline")
+PYEOF
+else
+    grep -Eq '"bytes_shm":[1-9][0-9]*' "$shmdir/shm.json" || {
+        echo "FAIL: shm run reported no bytes_shm"; exit 1;
+    }
+    grep -Eq '"shm_fallbacks":0' "$shmdir/shm.json" || {
+        echo "FAIL: shm run reported inline fallbacks"; exit 1;
+    }
+    echo "python3 not available; skipped moved-bytes comparison"
+fi
+rm -rf "$shmdir"
+
 echo "== flow-control smoke run (latest policy must shed rounds) =="
 flow_out=$(cargo run --release -- run configs/flow_control.yaml \
     --time-scale 0.02 --artifacts /nonexistent)

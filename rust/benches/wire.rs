@@ -31,6 +31,17 @@
 //! `ci/bench-archive/` so small-frame throughput cannot silently
 //! regress.
 //!
+//! The shm section measures the shared-memory payload plane against
+//! the inline socket path over a raw 2-worker mesh (direct
+//! `Comm::send_owned` rounds, no lowfive pipeline): bytes *moved* per
+//! byte delivered, where moved = user-space memcpys + wire tx bytes +
+//! 2x wire rx bytes — the rx double honestly counts the nonblocking
+//! reader's lease zero-fill, a real per-byte RAM write the shm path
+//! never pays and `note_copied` never sees. The acceptance bar is
+//! >= 2x fewer moved bytes at 1 MiB and 16 MiB. The legacy
+//! pooled-vs-ablation matrix above runs with the shm plane disabled
+//! so it keeps measuring the inline wire it always did.
+//!
 //! Emits BENCH_wire.json so the trajectory accumulates across PRs.
 
 use std::net::TcpListener;
@@ -185,6 +196,66 @@ fn mesh_pair() -> (MeshWorld, MeshWorld) {
     (side0, side1)
 }
 
+/// One arm of the shm-vs-inline comparison: `steps` rounds of
+/// `payload` bytes sent rank 0 → rank 1 over a fresh 2-worker mesh
+/// via `Comm::send_owned` (the lowfive pipeline's symmetric
+/// encode/fill copies would dilute the transport-layer difference
+/// this row isolates). Returns (moved bytes per delivered byte,
+/// elapsed seconds); see the module docs for the moved-bytes
+/// definition.
+fn mesh_moved_per_byte(payload: usize, steps: u64, shm_on: bool) -> (f64, f64) {
+    use wilkins::net::shm;
+    use wilkins::obs::Ctr;
+    buf::set_pooling(true);
+    shm::set_enabled(shm_on);
+    let (side0, side1) = mesh_pair();
+    let copied0 = buf::bytes_copied_total();
+    let (tx0, rx0) = (Ctr::BytesSentWire.get(), Ctr::BytesRecvWire.get());
+    let (shm0, fb0) = (Ctr::BytesShm.get(), Ctr::ShmFallbacks.get());
+    let t0 = Instant::now();
+    let consumer = {
+        let world = side1.world.clone();
+        thread::spawn(move || {
+            let comm = world.comm_world(1);
+            for step in 0..steps {
+                let (src, bytes) = comm.recv(0, step).unwrap();
+                assert_eq!(src, 0);
+                assert_eq!(bytes.len(), payload);
+                assert_eq!(bytes[payload / 2], 0xa5, "payload must survive the plane");
+                // Dropping `bytes` here releases the last view: on the
+                // shm arm that stages the segment ack.
+            }
+        })
+    };
+    {
+        let comm = side0.world.comm_world(0);
+        let data = vec![0xa5u8; payload];
+        for step in 0..steps {
+            comm.send_owned(1, step, data.clone());
+        }
+    }
+    consumer.join().unwrap();
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let copied = (buf::bytes_copied_total() - copied0) as f64;
+    let tx = (Ctr::BytesSentWire.get() - tx0) as f64;
+    let rx = (Ctr::BytesRecvWire.get() - rx0) as f64;
+    let via_shm = Ctr::BytesShm.get() - shm0;
+    let fallbacks = Ctr::ShmFallbacks.get() - fb0;
+    side0.shutdown();
+    side1.shutdown();
+    let delivered = payload as u64 * steps;
+    if shm_on {
+        assert_eq!(
+            via_shm, delivered,
+            "shm arm must carry every payload byte through the shm plane"
+        );
+        assert_eq!(fallbacks, 0, "shm arm must not fall back to the socket path");
+    } else {
+        assert_eq!(via_shm, 0, "inline arm must not touch the shm plane");
+    }
+    ((copied + tx + 2.0 * rx) / delivered as f64, elapsed_s)
+}
+
 fn up_yaml() -> String {
     "\
 tasks:
@@ -250,8 +321,18 @@ fn archived_mesh_small_fps() -> Option<(std::path::PathBuf, f64)> {
         }
     }
     let (_, path) = newest?;
-    let text = std::fs::read_to_string(&path).ok()?;
-    let fps = extract_pooled_fps(&text, "mesh", "64KiB")?;
+    // A baseline that exists but cannot be read or parsed is a broken
+    // gate, not a missing one — fail loudly instead of silently
+    // skipping the no-regress check.
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("unreadable bench baseline {}: {e}", path.display()));
+    let fps = extract_pooled_fps(&text, "mesh", "64KiB").unwrap_or_else(|| {
+        panic!(
+            "bench baseline {} has no mesh/64KiB pooled frames_per_sec — \
+             the archive format drifted from this gate's parser",
+            path.display()
+        )
+    });
     Some((path, fps))
 }
 
@@ -318,6 +399,11 @@ fn main() {
     );
 
     use wilkins::obs::Ctr;
+    // The pooled-vs-ablation matrix measures the *inline* socket
+    // plane; with the shm plane at its default-on the >= 64 KiB rows
+    // would route around the very path under test. The shm plane gets
+    // its own section below.
+    wilkins::net::shm::set_enabled(false);
     let mut mesh_rows = Vec::new();
     let mut local_rows = Vec::new();
     let mut coalesced_rows = Vec::new();
@@ -419,6 +505,32 @@ fn main() {
         new_big.copies_per_byte
     );
 
+    // The tentpole criterion: over the same mesh, the shm plane must
+    // move >= 2x fewer bytes per delivered byte than the inline
+    // socket path, at 1 MiB (one K_DATA frame inline) and at 16 MiB
+    // (chunked inline — shm never chunks, the segment holds the whole
+    // payload).
+    println!("\n== shm payload plane vs inline socket path (2-worker mesh) ==\n");
+    let mut shm_rows = Vec::new();
+    for (label, payload) in [("1MiB", 1usize << 20), ("16MiB", 1usize << 24)] {
+        let (inline_mpb, inline_s) = mesh_moved_per_byte(payload, steps, false);
+        let (shm_mpb, shm_s) = mesh_moved_per_byte(payload, steps, true);
+        let ratio = inline_mpb / shm_mpb;
+        println!(
+            "{label:>6}  inline: {inline_mpb:.2} moved/B ({inline_s:.3}s)   \
+             shm: {shm_mpb:.2} moved/B ({shm_s:.3}s)   {ratio:.2}x fewer"
+        );
+        assert!(
+            ratio >= 2.0,
+            "{label}: shm plane must move >= 2x fewer bytes/byte than the inline path, \
+             got {ratio:.2}x ({inline_mpb:.2} -> {shm_mpb:.2})"
+        );
+        shm_rows.push((label, inline_mpb, shm_mpb, ratio));
+    }
+    // Back to the process default before the up runs (worker children
+    // read WILKINS_SHM themselves; this is for hygiene in-process).
+    wilkins::net::shm::set_enabled(true);
+
     println!("\n== 2-worker `up` (real worker processes) ==\n");
     let (up_old_s, up_old_rep) = run_up(false);
     let (up_new_s, up_new_rep) = run_up(true);
@@ -462,8 +574,20 @@ fn main() {
         .map(|(label, n)| format!("\"{label}\": {n}"))
         .collect::<Vec<_>>()
         .join(", ");
+    // Moved-bytes-per-byte of the shm plane vs the inline socket path
+    // (see the module docs for the metric).
+    let shm_json = shm_rows
+        .iter()
+        .map(|(label, inline, shm, ratio)| {
+            format!(
+                "\"{label}\": {{ \"inline_moved_per_byte\": {inline:.3}, \
+                 \"shm_moved_per_byte\": {shm:.3}, \"reduction\": {ratio:.2} }}"
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(", ");
     let json = format!(
-        "{{\n  \"bench\": \"wire\",\n  \"steps\": {steps},\n  \"copy_reduction_16mib_mesh\": {reduction:.2},\n  \"tap_disabled_ns_per_frame\": {tap_ns:.2},\n  \"mesh_writes_coalesced\": {{ {coalesced_json} }},\n  \"serve\": {{\n    \"local\": {{\n{}\n    }},\n    \"mesh\": {{\n{}\n    }}\n  }},\n  \"up\": {{ \"ablation_s\": {up_old_s:.3}, \"pooled_s\": {up_new_s:.3}, \"ablation_alloc_rounds\": {}, \"pooled_alloc_rounds\": {} }}\n}}\n",
+        "{{\n  \"bench\": \"wire\",\n  \"steps\": {steps},\n  \"copy_reduction_16mib_mesh\": {reduction:.2},\n  \"tap_disabled_ns_per_frame\": {tap_ns:.2},\n  \"mesh_writes_coalesced\": {{ {coalesced_json} }},\n  \"shm_mesh\": {{ {shm_json} }},\n  \"serve\": {{\n    \"local\": {{\n{}\n    }},\n    \"mesh\": {{\n{}\n    }}\n  }},\n  \"up\": {{ \"ablation_s\": {up_old_s:.3}, \"pooled_s\": {up_new_s:.3}, \"ablation_alloc_rounds\": {}, \"pooled_alloc_rounds\": {} }}\n}}\n",
         section(&local_rows),
         section(&mesh_rows),
         up_old_p.alloc_rounds,

@@ -279,8 +279,10 @@ impl Lease {
         let len = buf.len();
         Payload {
             inner: Arc::new(PayloadInner {
-                buf,
-                pool: self.shared.as_ref().map(Arc::downgrade),
+                backing: Backing::Buf {
+                    buf,
+                    pool: self.shared.as_ref().map(Arc::downgrade),
+                },
             }),
             off: 0,
             len,
@@ -309,17 +311,47 @@ impl Drop for Lease {
     }
 }
 
+/// Borrowed-memory backing for a [`Payload`]: any region of immutable
+/// bytes whose lifetime is managed by its owner rather than by a `Vec`
+/// (a mapped shared-memory segment, for example). Dropping the last
+/// `Payload` view drops the region, which is where owners hook their
+/// reclamation (the shm plane sends its segment ack from that drop).
+pub trait ByteRegion: Send + Sync {
+    /// The full region this payload views.
+    fn as_bytes(&self) -> &[u8];
+}
+
 /// The shared backing store of one or more [`Payload`] views.
+enum Backing {
+    /// An owned `Vec`, optionally on loan from a [`BufPool`].
+    Buf {
+        buf: Vec<u8>,
+        /// Set for pooled buffers: the last view's drop returns the buffer.
+        pool: Option<Weak<PoolShared>>,
+    },
+    /// Externally owned memory (e.g. a shm mapping).
+    Region(Arc<dyn ByteRegion>),
+}
+
 struct PayloadInner {
-    buf: Vec<u8>,
-    /// Set for pooled buffers: the last view's drop returns the buffer.
-    pool: Option<Weak<PoolShared>>,
+    backing: Backing,
+}
+
+impl PayloadInner {
+    fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            Backing::Buf { buf, .. } => buf,
+            Backing::Region(r) => r.as_bytes(),
+        }
+    }
 }
 
 impl Drop for PayloadInner {
     fn drop(&mut self) {
-        if let Some(pool) = self.pool.as_ref().and_then(Weak::upgrade) {
-            pool.put(std::mem::take(&mut self.buf));
+        if let Backing::Buf { buf, pool: Some(pool) } = &mut self.backing {
+            if let Some(pool) = pool.upgrade() {
+                pool.put(std::mem::take(buf));
+            }
         }
     }
 }
@@ -358,9 +390,22 @@ impl Payload {
         self.len == 0
     }
 
+    /// A payload viewing externally owned memory (a shm mapping, a
+    /// static table): O(1), no copy. The view spans the whole region;
+    /// [`Payload::slice`] narrows it as usual. The region drops — and
+    /// runs its owner's reclamation — when the last view drops.
+    pub fn from_region(region: Arc<dyn ByteRegion>) -> Payload {
+        let len = region.as_bytes().len();
+        Payload {
+            inner: Arc::new(PayloadInner { backing: Backing::Region(region) }),
+            off: 0,
+            len,
+        }
+    }
+
     /// The viewed bytes.
     pub fn as_slice(&self) -> &[u8] {
-        &self.inner.buf[self.off..self.off + self.len]
+        &self.inner.bytes()[self.off..self.off + self.len]
     }
 
     /// A sub-view of `range` (relative to this view): O(1), shares the
@@ -386,13 +431,22 @@ impl Payload {
     /// buffer would never return to its pool, so pooled payloads
     /// always copy out).
     pub fn into_vec(self) -> Vec<u8> {
-        if self.off == 0 && self.len == self.inner.buf.len() && self.inner.pool.is_none() {
+        let whole_plain_vec = matches!(
+            &self.inner.backing,
+            Backing::Buf { buf, pool: None } if self.off == 0 && self.len == buf.len()
+        );
+        if whole_plain_vec {
             match Arc::try_unwrap(self.inner) {
                 // Plain Vec backing, sole view: take the buffer out and
                 // skip the copy (`pool` is None, so the Drop that runs
                 // on the emptied inner has nothing to return).
-                Ok(mut inner) => return std::mem::take(&mut inner.buf),
-                Err(shared) => return shared.buf.clone(),
+                Ok(mut inner) => {
+                    if let Backing::Buf { buf, .. } = &mut inner.backing {
+                        return std::mem::take(buf);
+                    }
+                    unreachable!("backing changed under into_vec");
+                }
+                Err(shared) => return shared.bytes().to_vec(),
             }
         }
         self.as_slice().to_vec()
@@ -402,7 +456,11 @@ impl Payload {
 impl From<Vec<u8>> for Payload {
     fn from(buf: Vec<u8>) -> Payload {
         let len = buf.len();
-        Payload { inner: Arc::new(PayloadInner { buf, pool: None }), off: 0, len }
+        Payload {
+            inner: Arc::new(PayloadInner { backing: Backing::Buf { buf, pool: None } }),
+            off: 0,
+            len,
+        }
     }
 }
 

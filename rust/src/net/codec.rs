@@ -54,6 +54,44 @@ pub const MAX_FRAME: usize = 1 << 30;
 /// pieces, letting other ranks' frames interleave.
 pub const CHUNK_SIZE: usize = 1 << 20;
 
+/// Effective chunk size: [`CHUNK_SIZE`] unless `WILKINS_CHUNK_KB`
+/// overrides it (read once; the value is clamped per
+/// [`parse_chunk_kb`], and nonsense values are rejected loudly and
+/// fall back to the default). The tunable exists so benches can sweep
+/// chunking against the shm threshold without recompiling.
+pub fn chunk_size() -> usize {
+    static SIZE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *SIZE.get_or_init(|| match std::env::var("WILKINS_CHUNK_KB") {
+        Ok(s) => match parse_chunk_kb(&s) {
+            Ok(bytes) => bytes,
+            Err(e) => {
+                eprintln!("wilkins: ignoring WILKINS_CHUNK_KB={s:?}: {e}; using {CHUNK_SIZE}");
+                CHUNK_SIZE
+            }
+        },
+        Err(_) => CHUNK_SIZE,
+    })
+}
+
+/// Bounds for `WILKINS_CHUNK_KB`: 4 KiB keeps the chunk head (64 B)
+/// amortized; 256 MiB stays under [`MAX_FRAME`] with room for heads.
+pub const CHUNK_KB_MIN: usize = 4;
+pub const CHUNK_KB_MAX: usize = 256 * 1024;
+
+/// Parse a `WILKINS_CHUNK_KB` value into a byte count, clamped to
+/// `[CHUNK_KB_MIN, CHUNK_KB_MAX]` KiB. Zero and non-numeric input are
+/// rejected (not clamped) so a typo cannot silently reshape the wire.
+pub fn parse_chunk_kb(s: &str) -> Result<usize> {
+    let kb = s
+        .trim()
+        .parse::<u64>()
+        .map_err(|_| WilkinsError::Comm(format!("chunk size {s:?} is not a whole KiB count")))?;
+    if kb == 0 {
+        return Err(WilkinsError::Comm("chunk size 0 would stall every envelope".into()));
+    }
+    Ok((kb as usize).clamp(CHUNK_KB_MIN, CHUNK_KB_MAX) * 1024)
+}
+
 /// Bytes of frame header: u32 body length + u8 kind.
 pub const HEADER_LEN: usize = 5;
 
@@ -69,7 +107,13 @@ pub(crate) fn note_tx(kind: u8, parts: &[&[u8]]) {
     let body_len: usize = parts.iter().map(|p| p.len()).sum();
     Ctr::FramesSent.bump(1);
     Ctr::BytesSentWire.bump((HEADER_LEN + body_len) as u64);
-    wiretap::frame_parts(wiretap::Dir::Tx, kind, parts);
+    // Shm descriptors are tapped at the shm plane itself (descriptor +
+    // segment image, via `wiretap::frame_with_image`) — recording the
+    // bare descriptor here would duplicate the record and strand
+    // replay without the payload bytes. Counters still see the frame.
+    if kind != super::proto::K_DATA_SHM {
+        wiretap::frame_parts(wiretap::Dir::Tx, kind, parts);
+    }
 }
 
 /// Observability note for one complete frame read off a socket.
@@ -78,7 +122,11 @@ fn note_rx(kind: u8, parts: &[&[u8]]) {
     let body_len: usize = parts.iter().map(|p| p.len()).sum();
     Ctr::FramesRecv.bump(1);
     Ctr::BytesRecvWire.bump((HEADER_LEN + body_len) as u64);
-    wiretap::frame_parts(wiretap::Dir::Rx, kind, parts);
+    // See note_tx: shm descriptors are tapped with their segment image
+    // by the receiving sink, not here.
+    if kind != super::proto::K_DATA_SHM {
+        wiretap::frame_parts(wiretap::Dir::Rx, kind, parts);
+    }
 }
 
 /// Assemble a frame as contiguous bytes (header + body). Kept separate

@@ -43,6 +43,7 @@ use super::codec::{self, NbFrameReader, NbRead};
 use super::faults::FaultPlan;
 use super::poller::{Event, Interest, Poller, Timers, Token, Waker};
 use super::proto;
+use super::shm::{self, ShmDelivery, ShmMap, ShmPool};
 use super::transport::{decode_chunk_any, decode_data_any, SocketTransport};
 
 /// Frames with a body at or under this size are staged for coalescing
@@ -311,11 +312,21 @@ fn stage_into(inner: &mut WriterInner, kind: u8, parts: &[&[u8]]) {
 pub(crate) enum Sink {
     /// A worker⇄worker mesh link: data envelopes land in the shared
     /// mailboxes (reassembling chunked ones), exactly as the old
-    /// per-link pump thread delivered them.
+    /// per-link pump thread delivered them. Shm descriptors resolve
+    /// through `shm_maps` (one mapping per segment, cached for the
+    /// link's lifetime — segments never retire mid-run, so the cache
+    /// is bounded by the producer pool's segment cap) and their acks
+    /// ride back on `writer`; inbound `K_SHM_ACK`s credit `shm_pool`.
     Mesh {
         mailboxes: Arc<Mailboxes>,
         peer_id: usize,
         assembler: proto::ChunkAssembler,
+        /// Write half of this link (consumer→producer ack channel).
+        writer: Arc<FrameWriter>,
+        /// This process's producer-side pool (ack target).
+        shm_pool: Arc<ShmPool>,
+        /// Consumer-side mapping cache, keyed by segment name.
+        shm_maps: HashMap<String, Arc<ShmMap>>,
     },
     /// A worker's control link: frames forward to the serve loop.
     Control { events: mpsc::Sender<ControlEvent> },
@@ -496,9 +507,25 @@ enum TimerKind {
     Liveness { token: u64, interval: Duration },
 }
 
+thread_local! {
+    /// True on the `wk-io` thread (set once at `io_main` entry).
+    /// `ShmDelivery::Drop` consults it: the last payload view of a shm
+    /// delivery usually drops on a rank thread, but a sink torn down
+    /// with unread envelopes drops its views on the I/O thread itself,
+    /// where the reclamation ack must take the never-blocking
+    /// `try_stage` path instead of `send_parts`.
+    static ON_IO_THREAD: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Is the calling thread the process's transport I/O thread?
+pub(crate) fn on_io_thread() -> bool {
+    ON_IO_THREAD.with(|f| f.get())
+}
+
 /// The event loop. Runs until the stop flag is raised (last handle
 /// dropped) or the poller itself fails.
 fn io_main(poller: Poller, shared: Arc<IoShared>, finished: Arc<AtomicBool>) {
+    ON_IO_THREAD.with(|f| f.set(true));
     let mut links: HashMap<u64, LinkState> = HashMap::new();
     let mut writers: Vec<Arc<FrameWriter>> = Vec::new();
     let mut timers: Timers<TimerKind> = Timers::new();
@@ -688,6 +715,43 @@ fn close_link(poller: &Poller, links: &mut HashMap<u64, LinkState>, token: u64) 
     }
 }
 
+/// Resolve one inbound `K_DATA_SHM` descriptor into a deliverable
+/// message: map (or re-use the cached mapping of) the named segment
+/// and wrap it as a [`Payload`] region whose last-view drop stages the
+/// `K_SHM_ACK` on `writer`. Also taps the delivery (descriptor +
+/// segment image) — the codec's reader deliberately skipped it so the
+/// trace carries the payload bytes the socket never did.
+fn shm_frame_to_msg(
+    body: &Payload,
+    writer: &Arc<FrameWriter>,
+    shm_maps: &mut HashMap<String, Arc<ShmMap>>,
+) -> Result<proto::DataMsg> {
+    let desc = proto::ShmDesc::decode(body)?;
+    let map = match shm_maps.get(&desc.name) {
+        Some(m) => Arc::clone(m),
+        None => {
+            let m = shm::open_map(&desc.name, desc.cap as usize)?;
+            shm_maps.insert(desc.name.clone(), Arc::clone(&m));
+            m
+        }
+    };
+    let len = desc.len as usize;
+    wiretap::frame_with_image(
+        wiretap::Dir::Rx,
+        proto::K_DATA_SHM,
+        &[body.as_slice()],
+        &map.as_slice()[..len],
+    );
+    let delivery = ShmDelivery { map, len, seg_id: desc.seg_id, writer: Arc::clone(writer) };
+    Ok(proto::DataMsg {
+        dst_global: desc.dst_global,
+        src_global: desc.src_global,
+        comm_id: desc.comm_id,
+        tag: desc.tag,
+        payload: Payload::from_region(Arc::new(delivery)),
+    })
+}
+
 /// Drain one readable link: decode up to [`FRAMES_PER_EVENT`] frames
 /// and dispatch them to the sink. The dispatch table reproduces the
 /// old per-link pump thread's behavior — including its exact stderr
@@ -710,7 +774,7 @@ fn service_link(poller: &Poller, links: &mut HashMap<u64, LinkState>, token: u64
             Ok(NbRead::Frame((kind, payload))) => {
                 *last_rx = Instant::now();
                 match sink {
-                    Sink::Mesh { mailboxes, peer_id, assembler } => {
+                    Sink::Mesh { mailboxes, peer_id, assembler, writer, shm_pool, shm_maps } => {
                         let peer_id = *peer_id;
                         match kind {
                             proto::K_DATA => match decode_data_any(&payload) {
@@ -756,6 +820,47 @@ fn service_link(poller: &Poller, links: &mut HashMap<u64, LinkState>, token: u64
                                     }
                                 }
                             }
+                            // Shm descriptor: the payload sits in a
+                            // mapped segment; deliver a Payload view
+                            // of the mapping (ack staged when its last
+                            // view drops). A segment that cannot be
+                            // resolved is as fatal as a bad data frame
+                            // — the message is unrecoverable.
+                            proto::K_DATA_SHM => {
+                                match shm_frame_to_msg(&payload, writer, shm_maps) {
+                                    Ok(msg) => mailboxes.push(
+                                        msg.dst_global as usize,
+                                        Envelope {
+                                            src_global: msg.src_global as usize,
+                                            comm_id: msg.comm_id,
+                                            tag: msg.tag,
+                                            payload: msg.payload,
+                                        },
+                                    ),
+                                    Err(e) => {
+                                        eprintln!(
+                                            "wilkins net: mesh link from worker {peer_id} died \
+                                             (bad shm frame: {e}); ranks waiting on it will time out"
+                                        );
+                                        close = Some(None);
+                                        break 'frames;
+                                    }
+                                }
+                            }
+                            // Segment reclamation credit from a
+                            // consumer of ours: the segment is free to
+                            // rewrite.
+                            proto::K_SHM_ACK => match proto::decode_shm_ack(&payload) {
+                                Ok(seg_id) => shm_pool.ack(seg_id),
+                                Err(e) => {
+                                    eprintln!(
+                                        "wilkins net: mesh link from worker {peer_id} died \
+                                         (bad shm ack: {e}); ranks waiting on it will time out"
+                                    );
+                                    close = Some(None);
+                                    break 'frames;
+                                }
+                            },
                             // Liveness beacon: `last_rx` already
                             // refreshed; never surfaces further.
                             proto::K_HEARTBEAT => {}

@@ -30,6 +30,10 @@
 //! * [`transport`] — [`SocketTransport`], the socket backend of
 //!   [`comm::Transport`](crate::comm::Transport): mailbox pushes for
 //!   locally-hosted ranks, framed envelopes on mesh links otherwise.
+//! * [`shm`] — the shared-memory payload plane for co-located
+//!   processes: payloads at or above `WILKINS_SHM_MIN` cross through
+//!   pooled tmpfs segments (one memcpy) while the socket carries only
+//!   a descriptor frame; reclamation acks fold into the I/O thread.
 //! * [`rendezvous`] — bootstrap: coordinator listener, worker join,
 //!   endpoint-map exchange, deterministic peer-mesh construction, and
 //!   the node → worker rank assignment.
@@ -71,6 +75,7 @@ pub mod poller;
 pub mod pool;
 pub mod proto;
 pub mod rendezvous;
+pub mod shm;
 pub mod transport;
 pub mod up;
 pub mod worker;

@@ -39,8 +39,9 @@ pub const MAGIC: u32 = 0x574C_4B4E;
 /// LaunchWorld, fault counters in run reports; v6: telemetry frames,
 /// registry-driven stats encoding with durations as nanoseconds,
 /// spans with key=value attrs, worker spans + clock sample on
-/// WorldDone).
-pub const VERSION: u32 = 6;
+/// WorldDone; v7: shared-memory payload plane — `K_DATA_SHM`
+/// descriptor frames and `K_SHM_ACK` segment reclamation credits).
+pub const VERSION: u32 = 7;
 
 // Frame kinds.
 pub const K_HELLO: u8 = 1;
@@ -63,6 +64,14 @@ pub const K_HEARTBEAT: u8 = 10;
 /// Like heartbeats, telemetry frames refresh liveness and are skimmed
 /// by receive loops, never surfaced to callers.
 pub const K_TELEMETRY: u8 = 11;
+/// Shared-memory data envelope ([`ShmDesc`]): the payload bytes sit in
+/// a mapped shm segment; the socket carries only this small
+/// descriptor. Same delivery semantics as `K_DATA`, minus the two
+/// kernel copies (see [`shm`](super::shm)).
+pub const K_DATA_SHM: u8 = 12;
+/// Segment reclamation credit: the consumer dropped its last view of
+/// a shm delivery, so the producer may rewrite that segment.
+pub const K_SHM_ACK: u8 = 13;
 
 /// Periodic liveness beacon. Workers beat on their control socket so
 /// the coordinator can tell "busy for a long time" from "dead or
@@ -472,6 +481,102 @@ pub fn decode_data_payload(body: &Payload) -> Result<DataMsg> {
         tag: r.get_u64()?,
         payload: r.get_bytes_sliced(body)?,
     })
+}
+
+/// Shared-memory data envelope (`K_DATA_SHM`): the same four routing
+/// fields as a `K_DATA` envelope plus the segment coordinates. The
+/// payload bytes never touch the socket — they sit in the named shm
+/// segment, written before this descriptor is sent (the descriptor's
+/// trip through the socket is the cross-process happens-before edge).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShmDesc {
+    pub dst_global: u64,
+    pub src_global: u64,
+    pub comm_id: u64,
+    pub tag: u64,
+    /// Producer-side segment id, echoed back in the `K_SHM_ACK`.
+    pub seg_id: u64,
+    /// Payload length within the segment (bytes `0..len`).
+    pub len: u64,
+    /// Segment capacity — the consumer maps this many bytes.
+    pub cap: u64,
+    /// Segment file name, resolved against the local shm dir.
+    pub name: String,
+}
+
+impl ShmDesc {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u64(self.dst_global);
+        w.put_u64(self.src_global);
+        w.put_u64(self.comm_id);
+        w.put_u64(self.tag);
+        w.put_u64(self.seg_id);
+        w.put_u64(self.len);
+        w.put_u64(self.cap);
+        w.put_str(&self.name);
+        w.into_vec()
+    }
+
+    pub fn decode(body: &[u8]) -> Result<ShmDesc> {
+        let mut r = Reader::new(body);
+        let d = ShmDesc {
+            dst_global: r.get_u64()?,
+            src_global: r.get_u64()?,
+            comm_id: r.get_u64()?,
+            tag: r.get_u64()?,
+            seg_id: r.get_u64()?,
+            len: r.get_u64()?,
+            cap: r.get_u64()?,
+            name: r.get_str()?,
+        };
+        if d.len > d.cap {
+            return Err(WilkinsError::Comm(format!(
+                "shm descriptor corrupt: len {} > cap {}",
+                d.len, d.cap
+            )));
+        }
+        Ok(d)
+    }
+
+    /// Decode a wiretap record of a shm delivery: the descriptor frame
+    /// body followed by the captured payload image (the segment bytes
+    /// the wire never carried — appended by the tap so replay stays
+    /// bit-identical with shm active).
+    pub fn decode_with_image(record: &[u8]) -> Result<(ShmDesc, &[u8])> {
+        let mut r = Reader::new(record);
+        let d = ShmDesc {
+            dst_global: r.get_u64()?,
+            src_global: r.get_u64()?,
+            comm_id: r.get_u64()?,
+            tag: r.get_u64()?,
+            seg_id: r.get_u64()?,
+            len: r.get_u64()?,
+            cap: r.get_u64()?,
+            name: r.get_str()?,
+        };
+        let image = &record[record.len() - r.remaining()..];
+        if (image.len() as u64) < d.len {
+            return Err(WilkinsError::Comm(format!(
+                "shm record: payload image {} B short of descriptor len {} B",
+                image.len(),
+                d.len
+            )));
+        }
+        Ok((d, &image[..d.len as usize]))
+    }
+}
+
+/// `K_SHM_ACK` body: just the segment id being credited back.
+pub fn encode_shm_ack(seg_id: u64) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.put_u64(seg_id);
+    w.into_vec()
+}
+
+/// Decode a `K_SHM_ACK` body.
+pub fn decode_shm_ack(body: &[u8]) -> Result<u64> {
+    Reader::new(body).get_u64()
 }
 
 /// One bounded piece of a chunked data envelope (`K_DATA_CHUNK`).

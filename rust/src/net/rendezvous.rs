@@ -18,6 +18,7 @@
 //! channel traffic between nodes crosses sockets, which is exactly
 //! the paper's node-per-task deployment shape.
 
+use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -29,6 +30,7 @@ use crate::graph::WorkflowGraph;
 use super::codec;
 use super::io::{FrameWriter, IoRt, Sink};
 use super::proto::{self, Hello, LaunchWorld};
+use super::shm::ShmPool;
 use super::transport::{connect, SocketTransport};
 
 /// How long rendezvous/mesh accepts wait for a counterpart to show
@@ -267,6 +269,11 @@ pub(crate) fn build_mesh_world_on(
     let total_ranks = msg.total_ranks as usize;
     let mailboxes = Arc::new(Mailboxes::new(total_ranks));
     let mut peers: Vec<Option<Arc<FrameWriter>>> = (0..n).map(|_| None).collect();
+    // One shm segment pool per mesh world: shared by the transport
+    // (which leases segments for large sends) and every mesh sink
+    // (which credits them back as `K_SHM_ACK`s arrive). Pool drop —
+    // world teardown — unlinks the segment files.
+    let shm_pool = Arc::new(ShmPool::new());
     // Mesh liveness cadence from the coordinator (0 = disabled, the
     // pre-v5 blocking behavior).
     let liveness = if msg.heartbeat_ms > 0 {
@@ -296,6 +303,9 @@ pub(crate) fn build_mesh_world_on(
                 mailboxes: Arc::clone(&mailboxes),
                 peer_id: j,
                 assembler: proto::ChunkAssembler::new(),
+                writer: Arc::clone(&writer),
+                shm_pool: Arc::clone(&shm_pool),
+                shm_maps: HashMap::new(),
             },
             j as u32,
             liveness,
@@ -335,6 +345,9 @@ pub(crate) fn build_mesh_world_on(
                 mailboxes: Arc::clone(&mailboxes),
                 peer_id: peer,
                 assembler: proto::ChunkAssembler::new(),
+                writer: Arc::clone(&writer),
+                shm_pool: Arc::clone(&shm_pool),
+                shm_maps: HashMap::new(),
             },
             peer as u32,
             liveness,
@@ -355,6 +368,7 @@ pub(crate) fn build_mesh_world_on(
         owner_of,
         peers,
         Arc::clone(&mailboxes),
+        shm_pool,
     ));
     // Mesh beat timer: prove this worker alive on every link even
     // when its ranks send nothing, so idle peers' liveness deadlines

@@ -1,0 +1,552 @@
+//! Shared-memory payload plane for co-located workers.
+//!
+//! Every `wilkins up` worker pair on one host pays two kernel copies
+//! per payload byte through loopback sockets. For payloads at or above
+//! [`shm_min`] (default 64 KiB, `WILKINS_SHM_MIN` tunable) the
+//! transport instead writes the bytes once into a pooled shm segment
+//! and sends only a small `K_DATA_SHM` descriptor frame over the
+//! socket; the consumer maps the segment once per link and surfaces it
+//! as a [`Payload`](crate::comm::buf::Payload) backed by the mapping,
+//! so slicing and lowfive's
+//! borrow-decoding work unchanged. Reclamation rides a `K_SHM_ACK`
+//! frame staged from the last payload view's drop and flushed by the
+//! existing `wk-io` thread — no new threads.
+//!
+//! Deviation from the fd-passing sketch: the mesh links are TCP
+//! loopback sockets and stable `std` has no `SCM_RIGHTS` ancillary
+//! plumbing, so segments are *named* tmpfs files (`/dev/shm` on Linux,
+//! the system temp dir elsewhere) created with `memfd`-like semantics
+//! — create, `set_len`, map shared, unlink on pool drop — and the
+//! descriptor ships the file name instead of an fd. A stale-segment
+//! sweep at pool creation reclaims files leaked by crashed processes.
+//!
+//! Everything degrades: if a segment cannot be created (pool
+//! exhausted, unwritable dir, non-unix host) the payload falls back to
+//! the inline socket path and `shm_fallbacks` is bumped — delivery
+//! semantics are identical either way, which `net::tests` sweeps
+//! property-style.
+
+use std::fs::{File, OpenOptions};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::comm::buf::{self, ByteRegion};
+use crate::error::Result;
+use crate::obs::counters::Ctr;
+
+/// Default minimum payload size that takes the shm plane.
+pub const DEFAULT_SHM_MIN: usize = 64 * 1024;
+
+/// Most segments one pool will hold live (mirrors `BufPool`'s parked
+/// bounds): beyond this, large sends fall back to the inline path
+/// until acks return.
+const MAX_SEGMENTS: usize = 16;
+
+/// Byte budget across one pool's segments.
+const MAX_TOTAL_BYTES: usize = 1 << 28; // 256 MiB
+
+/// Segment capacities round up to this grain so slightly-different
+/// payload sizes recycle the same segment.
+const CAP_GRAIN: usize = 64 * 1024;
+
+#[cfg(unix)]
+mod sys {
+    //! Minimal mmap surface (the poller owns the poll/fcntl surface).
+    #![allow(non_camel_case_types)]
+
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const PROT_WRITE: c_int = 0x2;
+    pub const MAP_SHARED: c_int = 0x01;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide knobs
+// ---------------------------------------------------------------------------
+
+fn enabled_flag() -> &'static AtomicBool {
+    static ENABLED: OnceLock<AtomicBool> = OnceLock::new();
+    ENABLED.get_or_init(|| {
+        let on = std::env::var("WILKINS_SHM").map(|v| v != "0").unwrap_or(true);
+        AtomicBool::new(cfg!(unix) && on)
+    })
+}
+
+/// Is the shm plane on for this process? Defaults to on (unix hosts);
+/// `WILKINS_SHM=0` disables it, reproducing the inline-only wire.
+pub fn enabled() -> bool {
+    enabled_flag().load(Ordering::Relaxed)
+}
+
+/// Test/bench hook: flip the shm plane at runtime (the env toggle is
+/// read once). Guard concurrent uses — this is process-global state.
+pub fn set_enabled(on: bool) {
+    enabled_flag().store(cfg!(unix) && on, Ordering::Relaxed);
+}
+
+fn min_cell() -> &'static AtomicU64 {
+    static MIN: OnceLock<AtomicU64> = OnceLock::new();
+    MIN.get_or_init(|| {
+        let v = match std::env::var("WILKINS_SHM_MIN") {
+            Ok(s) => match s.trim().parse::<u64>() {
+                Ok(n) if n > 0 => n,
+                _ => {
+                    eprintln!(
+                        "wilkins: ignoring WILKINS_SHM_MIN={s:?} \
+                         (want a positive byte count); using {DEFAULT_SHM_MIN}"
+                    );
+                    DEFAULT_SHM_MIN as u64
+                }
+            },
+            Err(_) => DEFAULT_SHM_MIN as u64,
+        };
+        AtomicU64::new(v)
+    })
+}
+
+/// Payload size (bytes) at or above which the transport prefers the
+/// shm plane (`WILKINS_SHM_MIN`, default 64 KiB).
+pub fn shm_min() -> usize {
+    min_cell().load(Ordering::Relaxed) as usize
+}
+
+/// Test/bench hook: override the shm threshold at runtime.
+pub fn set_min(bytes: usize) {
+    min_cell().store(bytes.max(1) as u64, Ordering::Relaxed);
+}
+
+/// Directory override used by tests to force segment-creation failure
+/// (point it at a non-writable path) without touching real tmpfs.
+static DIR_OVERRIDE: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+pub(crate) fn set_dir_override(dir: Option<PathBuf>) {
+    *DIR_OVERRIDE.lock().unwrap() = dir;
+}
+
+/// Where segment files live: `/dev/shm` when present (Linux tmpfs —
+/// backing pages never touch disk), else the system temp dir.
+pub(crate) fn shm_dir() -> PathBuf {
+    if let Some(d) = DIR_OVERRIDE.lock().unwrap().clone() {
+        return d;
+    }
+    let dev_shm = Path::new("/dev/shm");
+    if dev_shm.is_dir() {
+        dev_shm.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+/// Process-unique segment sequence (several mesh worlds can co-host in
+/// one process; names must never collide).
+static NEXT_SEG: AtomicU64 = AtomicU64::new(0);
+
+fn segment_name(seg_id: u64) -> String {
+    format!("wk-shm-{}-{}", std::process::id(), seg_id)
+}
+
+// ---------------------------------------------------------------------------
+// Mapping
+// ---------------------------------------------------------------------------
+
+/// A shared, page-aligned mapping of one segment file. Producer maps
+/// read-write, consumers read-only; the mapping unmaps on drop. The
+/// ack protocol guarantees a producer only rewrites a segment after
+/// every consumer view of the previous contents has dropped, so the
+/// `&[u8]` handed out by [`ShmMap::as_slice`] never aliases a
+/// concurrent write.
+pub(crate) struct ShmMap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// Safety: the pointer is a MAP_SHARED mapping private to this struct;
+// cross-thread access is read-only (consumer) or serialized by the
+// pool's InFlight state machine (producer). See module docs.
+unsafe impl Send for ShmMap {}
+unsafe impl Sync for ShmMap {}
+
+impl ShmMap {
+    #[cfg(unix)]
+    fn map(file: &File, len: usize, writable: bool) -> Result<ShmMap> {
+        use std::os::unix::io::AsRawFd;
+        let prot = if writable { sys::PROT_READ | sys::PROT_WRITE } else { sys::PROT_READ };
+        let ptr = unsafe {
+            sys::mmap(std::ptr::null_mut(), len, prot, sys::MAP_SHARED, file.as_raw_fd(), 0)
+        };
+        if ptr == sys::MAP_FAILED {
+            return Err(crate::error::WilkinsError::Comm(format!(
+                "mmap({len} bytes) failed: {}",
+                std::io::Error::last_os_error()
+            )));
+        }
+        Ok(ShmMap { ptr: ptr as *mut u8, len })
+    }
+
+    #[cfg(not(unix))]
+    fn map(_file: &File, _len: usize, _writable: bool) -> Result<ShmMap> {
+        Err(crate::error::WilkinsError::Comm("shm plane requires a unix host".into()))
+    }
+
+    pub(crate) fn as_slice(&self) -> &[u8] {
+        // Safety: the mapping is valid for `len` bytes until Drop, and
+        // the ack protocol serializes writes against reads.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for ShmMap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+/// Open and map an existing segment by name (consumer side). `cap` is
+/// the capacity from the descriptor; the file must be at least that
+/// large or the producer and consumer disagree about the segment.
+pub(crate) fn open_map(name: &str, cap: usize) -> Result<Arc<ShmMap>> {
+    let path = shm_dir().join(name);
+    let file = File::open(&path).map_err(|e| {
+        crate::error::WilkinsError::Comm(format!("shm segment {} missing: {e}", path.display()))
+    })?;
+    let meta_len = file.metadata().map(|m| m.len()).unwrap_or(0);
+    if (meta_len as usize) < cap {
+        return Err(crate::error::WilkinsError::Comm(format!(
+            "shm segment {} truncated: file {meta_len} B < descriptor cap {cap} B",
+            path.display()
+        )));
+    }
+    Ok(Arc::new(ShmMap::map(&file, cap, false)?))
+}
+
+// ---------------------------------------------------------------------------
+// Producer pool
+// ---------------------------------------------------------------------------
+
+struct Segment {
+    id: u64,
+    path: PathBuf,
+    map: Arc<ShmMap>,
+    cap: usize,
+    /// False while a delivery is in flight (descriptor sent, ack not
+    /// yet back): the segment must not be rewritten.
+    free: bool,
+}
+
+struct PoolInner {
+    segs: Vec<Segment>,
+    total_bytes: usize,
+}
+
+/// Bounded pool of producer-side shm segments, one per mesh transport
+/// (mirrors [`crate::comm::buf::BufPool`]'s role on the inline path).
+/// Dropping the pool unlinks every segment file, so a clean shutdown
+/// leaves no tmpfs litter; a sweep at creation reclaims files from
+/// crashed processes. Lost acks (a consumer that died mid-delivery)
+/// strand segments in flight — the pool then falls back to inline
+/// sends rather than growing without bound.
+pub struct ShmPool {
+    inner: Mutex<PoolInner>,
+}
+
+impl ShmPool {
+    /// A fresh pool; sweeps stale segment files once per process.
+    pub fn new() -> ShmPool {
+        sweep_stale_once();
+        ShmPool { inner: Mutex::new(PoolInner { segs: Vec::new(), total_bytes: 0 }) }
+    }
+
+    /// Lease a segment with room for `len` bytes: best-fit recycle of
+    /// a free segment, else create one within the pool bounds. `None`
+    /// means the caller must fall back to the inline path (and bump
+    /// `shm_fallbacks` — done in the transport so the fallback count
+    /// reflects deliveries, not pool internals).
+    pub(crate) fn acquire(&self, len: usize) -> Option<ShmSlot> {
+        if !cfg!(unix) {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        // Best fit: smallest free segment that holds `len`.
+        let mut best: Option<(usize, usize)> = None; // (index, cap)
+        for (i, s) in inner.segs.iter().enumerate() {
+            if s.free && s.cap >= len && best.map(|(_, c)| s.cap < c).unwrap_or(true) {
+                best = Some((i, s.cap));
+            }
+        }
+        let best = best.map(|(i, _)| i);
+        let idx = match best {
+            Some(i) => i,
+            None => {
+                let cap = len.div_ceil(CAP_GRAIN).max(1) * CAP_GRAIN;
+                if inner.segs.len() >= MAX_SEGMENTS || inner.total_bytes + cap > MAX_TOTAL_BYTES {
+                    return None;
+                }
+                let seg = match create_segment(cap) {
+                    Ok(seg) => seg,
+                    Err(e) => {
+                        // One line per pool, not per payload: the
+                        // fallback counter carries the running tally.
+                        static WARNED: AtomicBool = AtomicBool::new(false);
+                        if !WARNED.swap(true, Ordering::Relaxed) {
+                            eprintln!("wilkins: shm segment creation failed ({e}); large payloads fall back to the socket path");
+                        }
+                        return None;
+                    }
+                };
+                Ctr::ShmSegments.bump(1);
+                inner.total_bytes += cap;
+                inner.segs.push(seg);
+                inner.segs.len() - 1
+            }
+        };
+        let seg = &mut inner.segs[idx];
+        seg.free = false;
+        Some(ShmSlot {
+            seg_id: seg.id,
+            name: segment_name(seg.id),
+            cap: seg.cap,
+            map: Arc::clone(&seg.map),
+        })
+    }
+
+    /// Credit an ack: the consumer dropped its last view of `seg_id`,
+    /// so the segment may be rewritten. Unknown ids are ignored (a
+    /// defensive stance — acks ride the same ordered link as data, so
+    /// in practice they always match).
+    pub(crate) fn ack(&self, seg_id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(seg) = inner.segs.iter_mut().find(|s| s.id == seg_id) {
+            seg.free = true;
+        }
+    }
+
+    /// Segments currently leased out (descriptor sent, no ack yet).
+    pub fn in_flight(&self) -> usize {
+        self.inner.lock().unwrap().segs.iter().filter(|s| !s.free).count()
+    }
+
+    /// Segments this pool has created.
+    pub fn segments(&self) -> usize {
+        self.inner.lock().unwrap().segs.len()
+    }
+}
+
+impl Default for ShmPool {
+    fn default() -> ShmPool {
+        ShmPool::new()
+    }
+}
+
+impl Drop for ShmPool {
+    fn drop(&mut self) {
+        let inner = self.inner.lock().unwrap();
+        for seg in &inner.segs {
+            let _ = std::fs::remove_file(&seg.path);
+        }
+    }
+}
+
+fn create_segment(cap: usize) -> Result<Segment> {
+    let id = NEXT_SEG.fetch_add(1, Ordering::Relaxed);
+    let path = shm_dir().join(segment_name(id));
+    let file = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create_new(true)
+        .open(&path)
+        .map_err(|e| {
+            crate::error::WilkinsError::Comm(format!("create {}: {e}", path.display()))
+        })?;
+    if let Err(e) = file.set_len(cap as u64) {
+        let _ = std::fs::remove_file(&path);
+        return Err(crate::error::WilkinsError::Comm(format!(
+            "size {} to {cap} B: {e}",
+            path.display()
+        )));
+    }
+    let map = match ShmMap::map(&file, cap, true) {
+        Ok(m) => Arc::new(m),
+        Err(e) => {
+            let _ = std::fs::remove_file(&path);
+            return Err(e);
+        }
+    };
+    Ok(Segment { id, path, map, cap, free: true })
+}
+
+/// A leased producer segment, ready to carry one payload.
+pub(crate) struct ShmSlot {
+    pub(crate) seg_id: u64,
+    pub(crate) name: String,
+    pub(crate) cap: usize,
+    map: Arc<ShmMap>,
+}
+
+impl ShmSlot {
+    /// Copy `bytes` into the segment — the *one* user-space copy the
+    /// shm delivery pays (metered like every other wire-path memcpy).
+    pub(crate) fn write(&self, bytes: &[u8]) {
+        assert!(bytes.len() <= self.cap, "shm slot overflow");
+        // Safety: the slot owns the segment until its descriptor's ack
+        // returns, so no reader observes this write in progress; the
+        // mapping is valid for `cap` bytes.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), self.map.ptr, bytes.len());
+        }
+        buf::note_copied(bytes.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Consumer-side delivery
+// ---------------------------------------------------------------------------
+
+/// Consumer-side backing for one shm delivery: a view of the mapped
+/// segment plus the ack hook. When the last [`Payload`] view of the
+/// delivery drops, Drop stages a `K_SHM_ACK` on the producer link —
+/// the existing `wk-io` thread flushes it, so reclamation adds no
+/// threads.
+///
+/// [`Payload`]: crate::comm::buf::Payload
+pub(crate) struct ShmDelivery {
+    pub(crate) map: Arc<ShmMap>,
+    pub(crate) len: usize,
+    pub(crate) seg_id: u64,
+    pub(crate) writer: Arc<super::io::FrameWriter>,
+}
+
+impl ByteRegion for ShmDelivery {
+    fn as_bytes(&self) -> &[u8] {
+        &self.map.as_slice()[..self.len]
+    }
+}
+
+impl Drop for ShmDelivery {
+    fn drop(&mut self) {
+        let body = super::proto::encode_shm_ack(self.seg_id);
+        if super::io::on_io_thread() {
+            // Sink teardown drops unread envelopes on the I/O thread
+            // itself, which must never take a blocking lock. A missed
+            // try_lock here forfeits the credit — at teardown the
+            // producer pool is moments from dropping anyway.
+            let _ = self.writer.try_stage(super::proto::K_SHM_ACK, &body);
+        } else {
+            // Rank-thread drop (the normal case): the ack stages and
+            // wakes the I/O thread like any other small frame. A dead
+            // link means the producer is gone and reclamation is moot —
+            // ignore the error.
+            let _ = self.writer.send_parts(super::proto::K_SHM_ACK, &[&body]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stale-segment sweep
+// ---------------------------------------------------------------------------
+
+/// Unlink `wk-shm-<pid>-*` files whose owning process is gone (Linux:
+/// `/proc/<pid>` missing). Runs once per process, from the first pool.
+fn sweep_stale_once() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        if !cfg!(target_os = "linux") {
+            return;
+        }
+        let dir = shm_dir();
+        let Ok(entries) = std::fs::read_dir(&dir) else { return };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(rest) = name.strip_prefix("wk-shm-") else { continue };
+            let Some(pid) = rest.split('-').next().and_then(|p| p.parse::<u32>().ok()) else {
+                continue;
+            };
+            if pid == std::process::id() {
+                continue;
+            }
+            if !Path::new(&format!("/proc/{pid}")).exists() {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_recycles_acked_segments() {
+        let pool = Arc::new(ShmPool::new());
+        let a = pool.acquire(100 * 1024).expect("segment");
+        assert_eq!(pool.in_flight(), 1);
+        let id = a.seg_id;
+        drop(a);
+        // Not acked yet: a second acquire of the same size must not
+        // reuse the in-flight segment.
+        let b = pool.acquire(100 * 1024).expect("segment");
+        assert_ne!(b.seg_id, id);
+        pool.ack(id);
+        let c = pool.acquire(64 * 1024).expect("segment");
+        assert_eq!(c.seg_id, id, "acked segment is recycled best-fit");
+        assert_eq!(pool.segments(), 2);
+    }
+
+    #[test]
+    fn pool_bounds_cap_segment_count() {
+        let pool = Arc::new(ShmPool::new());
+        let mut slots = Vec::new();
+        for _ in 0..MAX_SEGMENTS {
+            slots.push(pool.acquire(4096).expect("segment within bounds"));
+        }
+        assert!(pool.acquire(4096).is_none(), "pool must refuse past MAX_SEGMENTS");
+        assert_eq!(pool.segments(), MAX_SEGMENTS);
+    }
+
+    #[test]
+    fn write_then_open_roundtrips_bytes() {
+        let pool = Arc::new(ShmPool::new());
+        let slot = pool.acquire(80 * 1024).expect("segment");
+        let data: Vec<u8> = (0..80 * 1024).map(|i| (i % 251) as u8).collect();
+        slot.write(&data);
+        let map = open_map(&slot.name, slot.cap).expect("consumer map");
+        assert_eq!(&map.as_slice()[..data.len()], &data[..]);
+    }
+
+    #[test]
+    fn pool_drop_unlinks_segment_files() {
+        let pool = Arc::new(ShmPool::new());
+        let slot = pool.acquire(4096).expect("segment");
+        let path = shm_dir().join(&slot.name);
+        assert!(path.exists());
+        drop(slot);
+        drop(pool);
+        assert!(!path.exists(), "segment file must be unlinked on pool drop");
+    }
+
+    #[test]
+    fn open_map_rejects_truncated_segment() {
+        let pool = Arc::new(ShmPool::new());
+        let slot = pool.acquire(4096).expect("segment");
+        assert!(open_map(&slot.name, slot.cap + 4096).is_err());
+    }
+}

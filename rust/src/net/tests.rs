@@ -9,7 +9,7 @@ use std::net::TcpListener;
 use std::thread;
 use std::time::Duration;
 
-use crate::comm::{InterComm, Payload};
+use crate::comm::{InterComm, Payload, World};
 
 use super::codec::{self, FrameDecoder, NbFrameReader, NbRead, HEADER_LEN, MAX_FRAME};
 use super::proto::{
@@ -459,10 +459,40 @@ fn socket_world_p2p_across_the_mesh() {
     side1.shutdown();
 }
 
+/// Serializes tests that flip the process-global shm knobs
+/// (`set_enabled`, `set_min`, `set_dir_override`) — and the chunk test
+/// below, whose inline-path pin must not race a flip. Poisoning is
+/// recovered: a failed sibling should not cascade.
+static SHM_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn shm_lock() -> std::sync::MutexGuard<'static, ()> {
+    SHM_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One synchronous rank 0 → rank 2 delivery across a mesh pair,
+/// returning the received bytes.
+fn exchange(w0: &World, w1: &World, tag: u64, data: Vec<u8>) -> Vec<u8> {
+    let h = {
+        let w1 = w1.clone();
+        thread::spawn(move || {
+            let c = w1.comm_world(2);
+            let (src, m) = c.recv(0, tag).unwrap();
+            assert_eq!(src, 0);
+            m.as_slice().to_vec()
+        })
+    };
+    w0.comm_world(0).send_owned(2, tag, data);
+    h.join().unwrap()
+}
+
 #[test]
 fn socket_world_chunks_large_payloads() {
     // A payload above CHUNK_SIZE must cross the mesh in bounded
     // pieces and arrive byte-identical through the ordinary recv path.
+    // Pinned to the inline plane: with shm at its default-on, a
+    // payload this size would route around chunking entirely.
+    let _guard = shm_lock();
+    super::shm::set_enabled(false);
     let (side0, side1) = mesh_pair();
     let w0 = side0.world.clone();
     let w1 = side1.world.clone();
@@ -480,6 +510,68 @@ fn socket_world_chunks_large_payloads() {
     assert_eq!(m.len(), want.len());
     assert!(m == want, "chunked payload must reassemble byte-identically");
     t.join().unwrap();
+    side0.shutdown();
+    side1.shutdown();
+    super::shm::set_enabled(true);
+}
+
+/// The shm plane and the inline socket path must deliver bit-identical
+/// payloads at every size — especially the boundary sizes where the
+/// routing flips (the shm threshold, the chunk split) and the
+/// degenerate zero-length body.
+#[test]
+fn shm_and_inline_deliveries_bit_identical_across_boundaries() {
+    let _guard = shm_lock();
+    let min0 = super::shm::shm_min();
+    // A test-sized threshold keeps the straddle set cheap while still
+    // exercising the same routing decision production takes at 64 KiB.
+    super::shm::set_min(16 * 1024);
+    let min = super::shm::shm_min();
+    let chunk = codec::chunk_size();
+    let (side0, side1) = mesh_pair();
+    let check = |size: usize| {
+        let data: Vec<u8> =
+            (0..size).map(|i| (i.wrapping_mul(131) ^ (i >> 8)) as u8).collect();
+        for shm_on in [false, true] {
+            super::shm::set_enabled(shm_on);
+            let got = exchange(&side0.world, &side1.world, 77, data.clone());
+            assert!(
+                got == data,
+                "size {size} shm_on={shm_on}: delivery must be bit-identical"
+            );
+        }
+    };
+    for &size in &[0usize, 1, min - 1, min, min + 1, chunk - 1, chunk, chunk + 1] {
+        check(size);
+    }
+    crate::proptest_lite::run_prop("shm-vs-inline-random-sizes", 6, |rng| {
+        check(rng.usize(0, chunk + 64 * 1024));
+    });
+    super::shm::set_min(min0);
+    super::shm::set_enabled(true);
+    side0.shutdown();
+    side1.shutdown();
+}
+
+/// Fallback: when a segment cannot be created (here: an unwritable
+/// shm dir) a large payload must degrade to the inline path — same
+/// bytes delivered, `shm_fallbacks` bumped, nothing else different.
+#[cfg(unix)]
+#[test]
+fn shm_creation_failure_falls_back_inline() {
+    let _guard = shm_lock();
+    super::shm::set_enabled(true);
+    super::shm::set_dir_override(Some("/proc/wilkins-shm-unwritable/nope".into()));
+    let fb0 = crate::obs::Ctr::ShmFallbacks.get();
+    let (side0, side1) = mesh_pair();
+    let data: Vec<u8> = (0..256 * 1024).map(|i| (i * 67) as u8).collect();
+    let got = exchange(&side0.world, &side1.world, 9, data.clone());
+    super::shm::set_dir_override(None);
+    assert!(got == data, "fallback delivery must be bit-identical");
+    assert!(
+        crate::obs::Ctr::ShmFallbacks.get() > fb0,
+        "a failed segment creation must be counted as a fallback"
+    );
     side0.shutdown();
     side1.shutdown();
 }

@@ -38,6 +38,8 @@ use crate::obs::wiretap;
 use super::codec;
 use super::io::FrameWriter;
 use super::proto;
+use super::shm::{self, ShmPool};
+use crate::obs::Ctr;
 
 /// Socket-backed [`Transport`]: see the module docs.
 pub struct SocketTransport {
@@ -51,6 +53,9 @@ pub struct SocketTransport {
     mailboxes: Arc<Mailboxes>,
     /// Message id for chunked envelopes (shared by all rank threads).
     next_seq: AtomicU64,
+    /// Producer-side shm segments (shared with the I/O thread's sinks,
+    /// which credit segments back as `K_SHM_ACK`s arrive).
+    shm_pool: Arc<ShmPool>,
 }
 
 impl SocketTransport {
@@ -59,8 +64,16 @@ impl SocketTransport {
         owner_of: Vec<usize>,
         peers: Vec<Option<Arc<FrameWriter>>>,
         mailboxes: Arc<Mailboxes>,
+        shm_pool: Arc<ShmPool>,
     ) -> SocketTransport {
-        SocketTransport { my_worker, owner_of, peers, mailboxes, next_seq: AtomicU64::new(1) }
+        SocketTransport {
+            my_worker,
+            owner_of,
+            peers,
+            mailboxes,
+            next_seq: AtomicU64::new(1),
+            shm_pool,
+        }
     }
 
     /// Is this global rank hosted by this process?
@@ -121,7 +134,49 @@ impl Transport for SocketTransport {
         // can never complete. The MAX_FRAME bound is checked before
         // any byte goes out, so an oversized body fails just this send
         // without desyncing the link.
-        if payload.len() <= codec::CHUNK_SIZE {
+        //
+        // Shm fast path: both workers sit on one host (all mesh links
+        // do today, per `up`), so a large payload goes into a pooled
+        // shm segment — one memcpy — and the socket carries only a
+        // ~100-byte descriptor instead of two kernel copies per
+        // payload byte. Chunking never engages here: the segment holds
+        // the whole payload, however large. Any failure to lease a
+        // segment degrades to the inline path below.
+        if shm::enabled() && payload.len() >= shm::shm_min() {
+            match self.shm_pool.acquire(payload.len()) {
+                Some(slot) => {
+                    slot.write(&payload);
+                    let desc = proto::ShmDesc {
+                        dst_global: dst_global as u64,
+                        src_global: src_global as u64,
+                        comm_id,
+                        tag,
+                        seg_id: slot.seg_id,
+                        len: payload.len() as u64,
+                        cap: slot.cap as u64,
+                        name: slot.name.clone(),
+                    };
+                    let body = desc.encode();
+                    // The codec's tap skips shm descriptors; record
+                    // the descriptor *with* the segment image here so
+                    // a full trace can replay the delivery even though
+                    // the payload bytes never crossed the socket.
+                    wiretap::frame_with_image(
+                        wiretap::Dir::Tx,
+                        proto::K_DATA_SHM,
+                        &[&body],
+                        &payload,
+                    );
+                    if let Err(e) = w.send_parts(proto::K_DATA_SHM, &[&body]) {
+                        panic!("mesh link to worker {owner} failed: {e}");
+                    }
+                    Ctr::BytesShm.bump(payload.len() as u64);
+                    return;
+                }
+                None => Ctr::ShmFallbacks.bump(1),
+            }
+        }
+        if payload.len() <= codec::chunk_size() {
             let res = if buf::pooling_enabled() {
                 // Pooled plane: stack-built envelope head, payload
                 // bytes gathered straight off the caller's buffer
@@ -166,7 +221,7 @@ impl Transport for SocketTransport {
                 tag,
                 seq,
                 &payload,
-                codec::CHUNK_SIZE,
+                codec::chunk_size(),
             ) {
                 let head = proto::encode_data_chunk_header(&c);
                 if let Err(e) =
@@ -186,7 +241,7 @@ impl Transport for SocketTransport {
             tag,
             seq,
             &payload,
-            codec::CHUNK_SIZE,
+            codec::chunk_size(),
         ) {
             let body = proto::encode_data_chunk(&c);
             if let Err(e) = w.send(proto::K_DATA_CHUNK, &body) {

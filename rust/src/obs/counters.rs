@@ -84,6 +84,16 @@ pub enum Ctr {
     /// Small frames appended to an already-nonempty staging buffer:
     /// each one is a `write` syscall the coalescing send path avoided.
     FramesCoalesced,
+    /// Payload bytes delivered through the shared-memory plane instead
+    /// of the socket mesh (the bytes the kernel never had to copy).
+    BytesShm,
+    /// Shared-memory segments created by this process's `ShmPool` —
+    /// steady-state runs recycle a handful; a climbing count means acks
+    /// are not coming back.
+    ShmSegments,
+    /// Large payloads that wanted the shm plane but fell back to the
+    /// inline socket path (pool exhausted, segment creation failed).
+    ShmFallbacks,
 }
 
 /// Registry for the [`Ctr`] family, in `Ctr` discriminant order.
@@ -96,11 +106,17 @@ pub const GLOBAL_DEFS: &[CounterDef] = &[
     CounterDef::sum("telemetry_sent"),
     CounterDef::sum("poller_wakeups"),
     CounterDef::sum("frames_coalesced"),
+    CounterDef::sum("bytes_shm"),
+    CounterDef::sum("shm_segments"),
+    CounterDef::sum("shm_fallbacks"),
 ];
 
 const NGLOBAL: usize = GLOBAL_DEFS.len();
 
 static GLOBALS: [AtomicU64; NGLOBAL] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),
     AtomicU64::new(0),

@@ -48,8 +48,8 @@ use crate::graph::WorkflowGraph;
 use crate::metrics::MergedTrace;
 use crate::net::proto::{
     ChunkAssembler, Hello, InstanceDone, LaunchWorld, RunInstance, WorldDone, K_DATA,
-    K_DATA_CHUNK, K_HELLO, K_INSTANCE_DONE, K_LAUNCH_WORLD, K_RUN_INSTANCE, K_TELEMETRY,
-    K_WORLD_DONE,
+    K_DATA_CHUNK, K_DATA_SHM, K_HELLO, K_INSTANCE_DONE, K_LAUNCH_WORLD, K_RUN_INSTANCE,
+    K_TELEMETRY, K_WORLD_DONE,
 };
 use crate::obs::recorder::InstantEvent;
 use crate::obs::telemetry::{TelemetrySample, TelemetryStore};
@@ -514,6 +514,25 @@ pub fn replay_worker_ranks(
                     }
                 }
             }
+            // Shm delivery: the tap stored the descriptor frame plus
+            // the segment image the wire never carried; re-split and
+            // inject a copy of the image (no segment files exist at
+            // replay time).
+            K_DATA_SHM => {
+                let (d, image) =
+                    crate::net::proto::ShmDesc::decode_with_image(&rec.payload)?;
+                if is_hosted.get(d.dst_global as usize).copied().unwrap_or(false) {
+                    rw.inject(
+                        d.dst_global as usize,
+                        d.src_global as usize,
+                        d.comm_id,
+                        d.tag,
+                        crate::comm::buf::Payload::copy_from_slice(image),
+                    );
+                }
+            }
+            // K_SHM_ACK and the rest of the control plane carry no
+            // payload to re-deliver.
             _ => {}
         }
     }

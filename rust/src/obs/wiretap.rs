@@ -144,6 +144,27 @@ impl WireLog {
         self.write_record(link, dir, kind, len as u32, parts)
     }
 
+    /// Append one record whose *frame* is `body` (what actually
+    /// crossed the socket — a shm descriptor, say) but whose capture
+    /// additionally carries `image` bytes the wire never saw (the shm
+    /// segment contents). The head's `len` reflects only the frame;
+    /// the capture is `body ‖ image`, which is exactly the layout
+    /// [`crate::net::proto::ShmDesc::decode_with_image`] re-splits at
+    /// replay time. Under a version-1 log only the head is written.
+    pub fn record_with_image(
+        &mut self,
+        link: u32,
+        dir: Dir,
+        kind: u8,
+        body: &[&[u8]],
+        image: &[u8],
+    ) -> std::io::Result<()> {
+        let len: usize = body.iter().map(|p| p.len()).sum();
+        let mut parts: Vec<&[u8]> = body.to_vec();
+        parts.push(image);
+        self.write_record(link, dir, kind, len as u32, &parts)
+    }
+
     fn write_record(
         &mut self,
         link: u32,
@@ -310,6 +331,25 @@ pub fn frame_parts(dir: Dir, kind: u8, parts: &[&[u8]]) {
             log.record_parts(link, dir, kind, parts)
         } else {
             let len: usize = parts.iter().map(|p| p.len()).sum();
+            log.record(link, dir, kind, len as u32)
+        };
+    }
+}
+
+/// Record one shm delivery: the descriptor frame `body` plus the
+/// segment `image` the wire never carried. In full mode the capture
+/// stores `body ‖ image` so replay can reconstruct the payload; in
+/// header-only mode just the head (with the descriptor's length) is
+/// written; disabled, one atomic load and a branch.
+#[inline]
+pub fn frame_with_image(dir: Dir, kind: u8, body: &[&[u8]], image: &[u8]) {
+    if let Some(t) = tap() {
+        let link = LINK.with(|l| l.get());
+        let mut log = t.log.lock().unwrap();
+        let _ = if t.full {
+            log.record_with_image(link, dir, kind, body, image)
+        } else {
+            let len: usize = body.iter().map(|p| p.len()).sum();
             log.record(link, dir, kind, len as u32)
         };
     }

@@ -151,8 +151,9 @@ fn wire_tap_records_frames_in_every_pool_process() {
         for r in &recs {
             assert!(r.t_us >= last, "tap timestamps must be monotone in {log:?}");
             last = r.t_us;
+            // 1..=13 spans K_HELLO through K_SHM_ACK (net::proto).
             assert!(
-                (1..=11).contains(&r.kind),
+                (1..=13).contains(&r.kind),
                 "unknown frame kind {} in {log:?}",
                 r.kind
             );

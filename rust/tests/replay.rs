@@ -10,6 +10,9 @@
 //! * a 2-worker `up` world replayed both ways: the coordinator
 //!   schedule into the merged `RunReport`, and worker 0's actual rank
 //!   code re-executed against its recorded inbound frames;
+//! * the same double replay for a run whose payloads rode the
+//!   shared-memory descriptor plane (`K_DATA_SHM`), reconstructed
+//!   purely from the segment images the full tap captured;
 //! * the wiretap reader's torn-tail tolerance at every byte offset a
 //!   kill can tear the final record;
 //! * a worker killed at the `LaunchWorld` seam failing the run loudly
@@ -22,7 +25,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use wilkins::lowfive::VolStats;
-use wilkins::net::proto::{WorldDone, K_WORLD_DONE};
+use wilkins::net::proto::{WorldDone, K_DATA_SHM, K_WORLD_DONE};
 use wilkins::net::{
     run_workflow_distributed_on, worker_main_with, FaultPlan, HeartbeatConfig, UpOpts,
     WorkerOpts, WorkerPool,
@@ -204,6 +207,89 @@ fn recorded_world_up_replays_and_reexecutes_worker_ranks() {
     // Only the wall-clock-free counters can be compared: the replay
     // never stalls on flow credits (they are pre-injected), so the
     // wait/stall/queue-depth gauges legitimately differ.
+    for (node, exp) in &expected {
+        for name in ["files_served", "bytes_served", "files_opened", "bytes_read"] {
+            assert_eq!(
+                partial.nodes[*node].stats.counter(name),
+                exp.counter(name),
+                "node {node} ({}) counter {name} diverged from the recording",
+                partial.nodes[*node].name
+            );
+        }
+    }
+}
+
+/// The shm-plane analogue of the world replay above: the fixture's
+/// 256 KiB grid travels as `K_DATA_SHM` descriptor frames whose
+/// payloads live in shared-memory segments the wire never carried
+/// (the tap stores descriptor + segment image). By replay time the
+/// segment files are unlinked, so both the coordinator-schedule
+/// replay and worker 0's re-execution must reproduce the recording
+/// from the captured images alone.
+#[test]
+fn recorded_shm_world_replays_from_captured_segment_images() {
+    let dir = scratch("shm-world");
+    let json = dir.join("report.json");
+    let out = wilkins()
+        .args([
+            "up",
+            "--workers",
+            "2",
+            &repo("configs/shm_replay.yaml"),
+            "--artifacts",
+            "/nonexistent",
+            "--workdir",
+            dir.join("work").to_str().unwrap(),
+            "--json",
+            json.to_str().unwrap(),
+        ])
+        .env("WILKINS_TRACE_WIRE", "full")
+        .env("WILKINS_TRACE_DIR", dir.to_str().unwrap())
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let recorded = std::fs::read_to_string(&json).unwrap();
+
+    let run = RecordedRun::load(&dir).unwrap();
+    assert_eq!(run.kind, RunKind::World);
+    assert_eq!(run.workers.len(), 2);
+    assert!(!run.truncated, "clean shutdown must not leave torn logs");
+    // The fixture is sized so the grid rides the shm plane; a
+    // recording with no descriptor frames would silently demote this
+    // test to a second copy of the inline-path one above.
+    let shm_frames = run
+        .workers
+        .iter()
+        .flat_map(|(_, recs)| recs.iter())
+        .filter(|r| r.kind == K_DATA_SHM)
+        .count();
+    assert!(shm_frames > 0, "recorded run carried no K_DATA_SHM frames");
+
+    let rep = replay::replay(&run).unwrap();
+    assert_eq!(
+        replay::normalize_report_json(&rep.to_json()).unwrap(),
+        replay::normalize_report_json(&recorded).unwrap(),
+        "shm-plane replay diverged from the recorded report"
+    );
+
+    // Re-execute worker 0's ranks (producer or consumer, whichever
+    // placement put there) against the captured images; the consumer
+    // re-verifies every grid value, so a corrupt image fails the run
+    // itself, not just the counter diff.
+    let done0 = run
+        .coordinator
+        .iter()
+        .find(|r| r.dir == Dir::Rx && r.kind == K_WORLD_DONE && r.link == 0)
+        .expect("coordinator log holds worker 0's WorldDone");
+    let done0 = WorldDone::decode(&done0.payload).unwrap();
+    assert!(done0.error.is_empty(), "{}", done0.error);
+    let mut expected: BTreeMap<usize, VolStats> = BTreeMap::new();
+    for o in &done0.outcomes {
+        expected.entry(o.node as usize).or_default().merge_from(&o.stats);
+    }
+    assert!(!expected.is_empty(), "worker 0 hosted no ranks?");
+
+    let partial = replay::replay_worker_ranks(&run, 0, &dir.join("re-exec")).unwrap();
     for (node, exp) in &expected {
         for name in ["files_served", "bytes_served", "files_opened", "bytes_read"] {
             assert_eq!(
